@@ -1,0 +1,85 @@
+//! Custom GNN layer via user-defined functions (paper Listing 2).
+//!
+//! The paper's customization point is the Scatter/Gather/Update UDF
+//! triple.  The aggregate hardware template is value-agnostic
+//! (`msg.val = edge.val * feat[edge.src]`, `v_ft[msg.dst] += msg.val`), so
+//! a *custom Scatter UDF is a custom edge-value function* — it runs on the
+//! stock compiled artifacts with no re-synthesis.  This example defines a
+//! symmetric heat-kernel-style edge weight (neither GCN's norm nor SAGE's
+//! mean), trains with it, and verifies it learns.
+//!
+//! ```text
+//! cargo run --release --offline --example custom_gnn
+//! ```
+
+use std::sync::Arc;
+
+use hp_gnn::coordinator::{train, TrainConfig};
+use hp_gnn::graph::generator;
+use hp_gnn::runtime::Runtime;
+use hp_gnn::sampler::neighbor::NeighborSampler;
+use hp_gnn::sampler::values::GnnModel;
+
+fn main() -> anyhow::Result<()> {
+    let runtime = Runtime::load(std::path::Path::new("artifacts"))?;
+
+    let mut g = generator::with_min_degree(
+        generator::rmat(3_000, 24_000, Default::default(), 5),
+        1,
+        6,
+    );
+    g.feat_dim = 16;
+    g.num_classes = 4;
+
+    // --- the custom Scatter UDF (Listing 2's `Scatter(edge, feat, msg)`).
+    // Heat-kernel-ish weight: exp(-|deg(u) - deg(v)| / 8), self loop 1.0.
+    // Degree-similar neighbors contribute more.
+    let custom_values: hp_gnn::coordinator::trainer::ValueFn = Arc::new(|g, mb| {
+        mb.edges
+            .iter()
+            .map(|layer| {
+                layer
+                    .iter()
+                    .map(|e| {
+                        if e.src == e.dst {
+                            1.0
+                        } else {
+                            let du = g.degree(e.src) as f32;
+                            let dv = g.degree(e.dst) as f32;
+                            (-(du - dv).abs() / 8.0).exp() / (dv + 1.0)
+                        }
+                    })
+                    .collect()
+            })
+            .collect()
+    });
+
+    let sampler = NeighborSampler::new(4, vec![5, 3]);
+    let mut cfg = TrainConfig::quick(GnnModel::Gcn, "tiny", 120);
+    cfg.lr = 0.1;
+    cfg.value_fn = Some(custom_values);
+
+    println!("training custom layer (heat-kernel Scatter UDF, sum Gather, ReLU Update)...");
+    let report = train(&runtime, &g, &sampler, &cfg)?;
+    let m = &report.metrics;
+    let (head, tail) = m
+        .loss_drop()
+        .ok_or_else(|| anyhow::anyhow!("run too short"))?;
+    let stride = (m.losses.len() / 12).max(1);
+    for (i, loss) in m.losses.iter().enumerate() {
+        if i % stride == 0 || i + 1 == m.losses.len() {
+            println!("  step {i:>4}: loss {loss:.4}");
+        }
+    }
+    println!("custom layer loss: {head:.4} -> {tail:.4}");
+    anyhow::ensure!(tail < head, "custom layer failed to learn");
+
+    // Contrast with the stock GCN normalization on the same batches.
+    let mut stock = TrainConfig::quick(GnnModel::Gcn, "tiny", 120);
+    stock.lr = 0.1;
+    let stock_report = train(&runtime, &g, &sampler, &stock)?;
+    let (shead, stail) = stock_report.metrics.loss_drop().unwrap();
+    println!("stock GCN loss:    {shead:.4} -> {stail:.4}");
+    println!("custom_gnn OK — UDF layer trains end to end on stock artifacts");
+    Ok(())
+}

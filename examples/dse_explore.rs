@@ -1,0 +1,90 @@
+//! Design-space exploration walkthrough (paper §5 / Table 5).
+//!
+//! Sweeps the DSE engine over every (sampler × model × dataset) workload
+//! of the paper's evaluation and prints the chosen (m, n), predicted
+//! throughput and per-die resource utilization — plus, for one workload,
+//! the full feasible grid so the throughput landscape is visible.
+//!
+//! ```text
+//! cargo run --release --offline --example dse_explore
+//! ```
+
+use hp_gnn::accel::{AccelConfig, Platform};
+use hp_gnn::dse::{explore, DseProblem};
+use hp_gnn::graph::datasets;
+use hp_gnn::layout::LayoutOptions;
+use hp_gnn::perf::{estimate, BatchGeometry, KappaEstimator, ModelShape, ResourceCoefficients};
+use hp_gnn::util::si;
+
+fn problem(ds: &datasets::DatasetSpec, sampler: &str, sage: bool) -> DseProblem {
+    let geom = match sampler {
+        "NS" => BatchGeometry::neighbor_capped(1024, &[10, 25], ds.nodes),
+        _ => {
+            let kappa = KappaEstimator::from_stats(ds.nodes, ds.edges);
+            BatchGeometry::subgraph(2750, 2, &kappa)
+        }
+    };
+    DseProblem {
+        geom,
+        model: ModelShape { feat: vec![ds.f0, 256, ds.f2], sage_concat: sage },
+        layout: LayoutOptions::all(),
+        coeff: ResourceCoefficients::default(),
+        t_sampling_single: None,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let platform = Platform::alveo_u250();
+
+    println!("== DSE results (paper Table 5 analog) ==");
+    println!(
+        "{:<14} {:>10} {:>8} {:>12} {:>6} {:>6} {:>6} {:>6}",
+        "workload", "(m, n)", "dataset", "NVTPS", "DSP%", "LUT%", "URAM%", "BRAM%"
+    );
+    for (sampler, model, sage) in
+        [("NS", "GCN", false), ("NS", "SAGE", true), ("SS", "GCN", false), ("SS", "SAGE", true)]
+    {
+        for ds in &datasets::ALL {
+            let r = explore(&platform, &problem(ds, sampler, sage));
+            println!(
+                "{:<14} {:>10} {:>8} {:>12} {:>5.0}% {:>5.0}% {:>5.0}% {:>5.0}%",
+                format!("{sampler}-{model}"),
+                format!("({}, {})", r.config.m, r.config.n),
+                ds.key,
+                si(r.nvtps),
+                r.utilization.dsp * 100.0,
+                r.utilization.lut * 100.0,
+                r.utilization.uram * 100.0,
+                r.utilization.bram * 100.0,
+            );
+        }
+    }
+
+    // The landscape for one workload: every feasible grid point.
+    println!("\n== feasible grid, NS-GCN on Reddit (throughput per candidate) ==");
+    let prob = problem(&datasets::REDDIT, "NS", false);
+    let mut n = 1usize;
+    while n <= 32 {
+        let mut row = format!("n={n:<3}");
+        let mut dim = 1usize;
+        while dim * dim <= 4096 {
+            let config = AccelConfig { n, m: dim * dim };
+            let util = hp_gnn::perf::utilization(
+                &platform,
+                &prob.coeff,
+                &config,
+                &prob.geom,
+                &prob.model,
+            );
+            if util.fits() {
+                let e = estimate(&platform, &config, &prob.geom, &prob.model, prob.layout);
+                row.push_str(&format!(" m={}:{:>8}", config.m, si(e.nvtps(&prob.geom, 0.0))));
+            }
+            dim *= 2;
+        }
+        println!("{row}");
+        n *= 2;
+    }
+    println!("\n(paper picks (256, 4) for NS/SS-GCN/NS-SAGE and (256, 8) for SS-SAGE)");
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Multi-FPGA scaling study — the paper's §8 future work ("extend our
+//! framework to multi-FPGA platforms by exploiting model parallelism"),
+//! built on the analytic performance model.
+//!
+//! Prints data-parallel and model-parallel scaling curves for the Reddit
+//! NS-GCN workload over 1–8 U250 boards, annotating what binds each point.
+//!
+//! ```text
+//! cargo run --release --offline --example multi_fpga
+//! ```
+
+use hp_gnn::accel::{AccelConfig, Platform};
+use hp_gnn::layout::LayoutOptions;
+use hp_gnn::perf::{data_parallel, estimate, model_parallel, BatchGeometry, ModelShape, MultiFpga};
+use hp_gnn::util::si;
+
+fn main() {
+    let platform = Platform::alveo_u250();
+    let geom = BatchGeometry::neighbor_capped(1024, &[10, 25], 232_965);
+    let model = ModelShape { feat: vec![602, 256, 41], sage_concat: false };
+    let single = estimate(
+        &platform,
+        &AccelConfig::paper_default(),
+        &geom,
+        &model,
+        LayoutOptions::all(),
+    );
+    // Measured on this host: ~2.2 ms to sample one paper-parameter NS
+    // batch single-threaded (hotpath bench), 16 sampler threads.
+    let t_sampling = 2.2e-3;
+    let threads = 16;
+
+    println!("Reddit NS-GCN, (m, n) = (256, 4) per die, 4 dies per board\n");
+    println!(
+        "{:<8} {:>18} {:>12} {:>18} {:>12}",
+        "boards", "data-parallel", "bound by", "model-parallel", "bound by"
+    );
+    for boards in [1usize, 2, 4, 8] {
+        let dp = data_parallel(
+            &single,
+            &geom,
+            &model,
+            &platform,
+            MultiFpga::pcie(boards),
+            t_sampling,
+            threads,
+        );
+        let mp = model_parallel(&single, &geom, &model, MultiFpga::pcie(boards));
+        println!(
+            "{:<8} {:>14} NVTPS {:>12} {:>14} NVTPS {:>12}",
+            boards,
+            si(dp.nvtps),
+            dp.bottleneck,
+            si(mp.nvtps),
+            mp.bottleneck
+        );
+    }
+    println!(
+        "\nData parallelism scales near-linearly until the host sampler pool \
+         saturates;\nmodel parallelism of a 2-layer GNN caps at the slowest \
+         layer stage — matching\nthe conventional wisdom the paper's future-work \
+         plan implies."
+    );
+}

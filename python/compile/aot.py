@@ -1,0 +1,171 @@
+"""AOT export: lower L2 train/eval functions to HLO text + manifest.
+
+This is the framework's ``GenerateDesign()`` (paper Table 1): it plays the
+role Vitis HLS synthesis plays in HP-GNN — turning the operator templates,
+filled with the selected model's Aggregate/Update computation, into a fixed
+executable per mini-batch geometry.  The rust runtime compiles each HLO
+module once on the PJRT CPU client and runs it on every training iteration;
+Python never executes on the training path.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    cd python && python -m compile.aot --out ../artifacts [--only tiny]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import geometry, model
+
+# (geometry, export train_step?, export forward?)
+EXPORT_GEOMETRIES = ("tiny", "ns_small", "ss_small", "ns_medium")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_str(dt) -> str:
+    return {"float32": "f32", "int32": "i32", "float64": "f64", "int64": "i64"}[
+        str(dt)
+    ]
+
+
+def _spec_list(specs):
+    return [
+        {"name": name, "shape": list(s.shape), "dtype": _dtype_str(s.dtype)}
+        for name, s in specs
+    ]
+
+
+def export_one(mdl: str, geom_name: str, kind: str, out_dir: str) -> dict:
+    """Lower one (model, geometry, kind) and write its .hlo.txt."""
+    geom = geometry.get(geom_name)
+    with_lr = kind in ("train_step", "adam_step")
+    if kind == "train_step":
+        fn = model.make_train_step_fn(mdl, geom)
+    elif kind == "adam_step":
+        fn = model.make_adam_train_step_fn(mdl, geom)
+    elif kind == "forward":
+        fn = model.make_forward_fn(mdl, geom)
+    else:
+        raise ValueError(f"unknown artifact kind {kind!r}")
+
+    specs = model.example_args(mdl, geom, with_lr=with_lr)
+    if kind == "adam_step":
+        # Adam state trails the base ABI: m_i, v_i per weight tensor, then
+        # the step counter.
+        import jax.numpy as jnp
+        import jax as _jax
+
+        extra = []
+        for l, (wshape, bshape) in enumerate(model.weight_shapes(mdl, geom), start=1):
+            extra.append((f"m_w{l}", _jax.ShapeDtypeStruct(tuple(wshape), jnp.float32)))
+            extra.append((f"m_b{l}", _jax.ShapeDtypeStruct(tuple(bshape), jnp.float32)))
+        for l, (wshape, bshape) in enumerate(model.weight_shapes(mdl, geom), start=1):
+            extra.append((f"v_w{l}", _jax.ShapeDtypeStruct(tuple(wshape), jnp.float32)))
+            extra.append((f"v_b{l}", _jax.ShapeDtypeStruct(tuple(bshape), jnp.float32)))
+        extra.append(("step", _jax.ShapeDtypeStruct((), jnp.float32)))
+        specs = specs + extra
+    t0 = time.time()
+    # keep_unused: the rust ABI passes every manifest input positionally;
+    # without it jit prunes e.g. labels/mask from forward-only exports.
+    lowered = jax.jit(fn, keep_unused=True).lower(*[s for _, s in specs])
+    text = to_hlo_text(lowered)
+    name = f"{mdl}_{geom_name}_{kind}"
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+
+    ll = geom.layers
+    if kind == "train_step":
+        outputs = ["loss"]
+        for l in range(1, ll + 1):
+            outputs += [f"w{l}", f"b{l}"]
+    elif kind == "adam_step":
+        outputs = ["loss"]
+        for l in range(1, ll + 1):
+            outputs += [f"w{l}", f"b{l}"]
+        for l in range(1, ll + 1):
+            outputs += [f"m_w{l}", f"m_b{l}"]
+        for l in range(1, ll + 1):
+            outputs += [f"v_w{l}", f"v_b{l}"]
+        outputs += ["step"]
+    else:
+        outputs = ["logits"]
+    entry = {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "model": mdl,
+        "geometry": geom_name,
+        "kind": kind,
+        "inputs": _spec_list(specs),
+        "outputs": outputs,
+        "weight_shapes": [
+            {"w": list(ws), "b": list(bs)} for ws, bs in model.weight_shapes(mdl, geom)
+        ],
+        "geometry_spec": {
+            "b": list(geom.b),
+            "e": list(geom.e),
+            "f": list(geom.f),
+            "layers": ll,
+            "num_classes": geom.num_classes,
+        },
+    }
+    print(
+        f"  {name}: {len(text) / 1024:.0f} KiB HLO, "
+        f"{len(specs)} inputs, {time.time() - t0:.1f}s"
+    )
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated geometry filter (default: all export geometries)",
+    )
+    ap.add_argument(
+        "--models", default="gcn,sage", help="comma-separated model filter"
+    )
+    args = ap.parse_args()
+
+    geoms = args.only.split(",") if args.only else list(EXPORT_GEOMETRIES)
+    models = args.models.split(",")
+    os.makedirs(args.out, exist_ok=True)
+
+    entries = []
+    for g in geoms:
+        for m in models:
+            kinds = ["train_step", "forward"]
+            # Adam variants for the geometries the coordinator trains on.
+            if g in ("tiny", "ns_small", "ss_small"):
+                kinds.append("adam_step")
+            for kind in kinds:
+                entries.append(export_one(m, g, kind, args.out))
+
+    manifest = {"version": 1, "artifacts": entries}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} artifacts + manifest.json to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Static mini-batch geometries for AOT export.
+
+PJRT executables have fixed shapes, so every (sampler, dataset-class) pair
+is compiled against a *geometry*: per-layer padded vertex counts ``b[l]``,
+padded edge counts ``e[l]``, and feature dims ``f[l]``.  This is exactly the
+"mini-batch configuration" the paper's program parser deduces from the
+sampling algorithm (Section 3.2): |B^l| and |E^l| per layer.
+
+The rust coordinator pads real sampled mini-batches up to the geometry
+(padding edges carry ``val = 0``; padding target vertices carry
+``mask = 0``), so functional results are exact.
+
+Paper-scale geometries (e.g. NS with |B^0| = 256000, f0 = 602) are
+*simulator-only* — they never run through the CPU PJRT client; the
+geometries below are the reduced functional-path classes (DESIGN.md §6).
+"""
+
+from dataclasses import dataclass
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class Geometry:
+    """Fixed shapes of one compiled mini-batch class.
+
+    Attributes:
+      name:  registry key, also used in artifact file names.
+      b:     ``(L+1,)`` padded vertex count per layer; ``b[0]`` is the input
+             layer, ``b[L]`` the target vertices.
+      e:     ``(L,)`` padded edge count per layer; ``e[l]`` connects layer
+             ``l`` (1-based) to layer ``l-1``.
+      f:     ``(L+1,)`` feature dims; ``f[0]`` input features, ``f[L]`` the
+             number of classes.
+    """
+
+    name: str
+    b: Tuple[int, ...]
+    e: Tuple[int, ...]
+    f: Tuple[int, ...]
+
+    def __post_init__(self):
+        if len(self.b) != len(self.f):
+            raise ValueError("b and f must both have L+1 entries")
+        if len(self.e) != len(self.b) - 1:
+            raise ValueError("e must have L entries")
+        for l in range(1, len(self.b)):
+            if self.b[l] > self.b[l - 1]:
+                raise ValueError(
+                    f"layer {l}: b[{l}]={self.b[l]} exceeds b[{l-1}]={self.b[l-1]}; "
+                    "samplers keep B^l a subset of B^(l-1) (self loops)"
+                )
+
+    @property
+    def layers(self) -> int:
+        return len(self.e)
+
+    @property
+    def num_classes(self) -> int:
+        return self.f[-1]
+
+    @property
+    def total_vertices(self) -> int:
+        """Numerator of the paper's NVTPS metric (Eq. 4) for one batch."""
+        return sum(self.b)
+
+
+# Registry.  NS = neighbor sampling (GraphSAGE sampler), SS = subgraph
+# sampling (GraphSAINT node sampler).  Edge budgets include self loops:
+# an NS layer needs b[l] * (ns_l + 1) edge slots.
+# Worst-case NS bounds include the self vertex: expanding layer l with
+# fan-out ns gives b[l-1] <= b[l] * (ns + 1) and e[l] = b[l] * (ns + 1).
+GEOMETRIES = {
+    # CI-scale geometry (NS targets=4, budgets=[5, 3]): every pytest /
+    # cargo test integration path uses it.
+    "tiny": Geometry("tiny", b=(96, 16, 4), e=(96, 16), f=(16, 8, 4)),
+    # End-to-end driver: Flickr-class feature dims, NS budgets [5, 10] on 32
+    # targets (reduced from the paper's [10, 25] x 1024 — see DESIGN.md §6).
+    "ns_small": Geometry(
+        "ns_small", b=(2112, 352, 32), e=(2112, 352), f=(500, 256, 7)
+    ),
+    # End-to-end driver for subgraph sampling: one subgraph, all layers share
+    # the vertex set (B^0 = B^1 = B^2, paper §2.3).
+    "ss_small": Geometry(
+        "ss_small", b=(256, 256, 256), e=(2048, 2048), f=(500, 256, 7)
+    ),
+    # Larger NS class used by the perf pass on the functional path
+    # (targets=128, budgets=[5, 10]).
+    "ns_medium": Geometry(
+        "ns_medium", b=(8448, 1408, 128), e=(8448, 1408), f=(500, 256, 7)
+    ),
+}
+
+
+def get(name: str) -> Geometry:
+    try:
+        return GEOMETRIES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown geometry {name!r}; known: {sorted(GEOMETRIES)}"
+        ) from None

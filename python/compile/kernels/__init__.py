@@ -1,0 +1,36 @@
+"""Layer-1 Pallas kernels for HP-GNN.
+
+These kernels are the functional twin of the paper's two HLS hardware
+templates (Section 4.2):
+
+- :mod:`.aggregate` — the Aggregate kernel (Fig. 5): scatter-gather weighted
+  neighbor aggregation over a COO edge stream that the L3 layout engine has
+  prepared with the paper's RMT (sort-by-source) + RRA (vertex renaming)
+  optimizations.
+- :mod:`.update` — the Update kernel (Fig. 6): systolic-array block matmul
+  with the layer weight pinned on-chip, fused bias + activation.
+- :mod:`.edge_dot` — per-edge feature dot products, used for the VJP of the
+  aggregate kernel w.r.t. edge values (supports user-defined layers with
+  learnable edge weights).
+
+Every kernel is lowered with ``interpret=True`` so the emitted HLO runs on
+the CPU PJRT client that the rust runtime drives.  Real-TPU viability (VMEM
+footprint, MXU utilization) is estimated structurally in DESIGN.md §Perf.
+
+The public entry points (:func:`aggregate`, :func:`update`) carry custom
+VJPs that route the backward pass through the same Pallas kernels, mirroring
+the paper's observation that back propagation "performs a similar computation
+as forward propagation but in the reverse direction".
+"""
+
+from .aggregate import aggregate, aggregate_fwd_only
+from .update import update, matmul
+from .edge_dot import edge_dot
+
+__all__ = [
+    "aggregate",
+    "aggregate_fwd_only",
+    "update",
+    "matmul",
+    "edge_dot",
+]

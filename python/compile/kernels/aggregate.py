@@ -1,0 +1,124 @@
+"""Aggregate kernel — Pallas twin of the paper's Fig. 5 HLS template.
+
+The FPGA aggregate kernel streams COO edges (sorted by source — the RMT
+layout) through n Scatter PEs, routes ``val * feature`` updates through a
+butterfly network, and accumulates them in Gather-PE on-chip banks indexed
+by the RRA-renamed (dense, ascending) destination ids.
+
+The TPU/Pallas rethink (DESIGN.md §Hardware-Adaptation): there is no
+inter-PE routing network, so what survives is the *data layout contract* —
+edges arrive renamed and sorted, destination ids are dense in
+``[0, num_out)``, so a bounded VMEM accumulator (the output block) can hold
+the gather state, and sequential in-kernel accumulation removes the RAW
+hazard the FPGA resolves by stalling.  The grid walks feature blocks; each
+grid step owns a ``(num_out, FEATURE_BLOCK)`` accumulator, which is the
+Gather-PE result-bank analog.
+
+Semantics (the paper's Algorithm 3 with Scatter = ``val * feat`` and
+Gather = ``+=``)::
+
+    out[v, :] = sum over edges e with dst[e] == v of  val[e] * x[src[e], :]
+
+Padding contract: callers pad the edge stream with ``val == 0`` edges whose
+``src``/``dst`` point at valid (padded) rows; zero-valued edges contribute
+nothing, so padded results are exact.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .common import FEATURE_BLOCK, INTERPRET, ceil_to, pad_axis
+
+
+def _aggregate_kernel(src_ref, dst_ref, val_ref, x_ref, o_ref):
+    """One feature block: gather the edge stream, accumulate into o_ref.
+
+    The whole edge stream is processed as one vectorized gather +
+    segment-sum into the block's dense accumulator (the Gather-PE
+    result-bank analog).  An earlier revision replayed edges one at a time
+    with dynamic slices — hardware-shaped but ~300x slower through
+    interpret-mode XLA (see EXPERIMENTS.md §Perf); the per-edge schedule
+    lives on in the rust cycle simulator, which is the timing twin.
+    """
+    x = x_ref[...]
+    src = src_ref[...]
+    dst = dst_ref[...]
+    val = val_ref[...]
+    contrib = x[src] * val[:, None].astype(x.dtype)
+    o_ref[...] = jax.ops.segment_sum(
+        contrib, dst, num_segments=o_ref.shape[0]
+    ).astype(o_ref.dtype)
+
+
+def _aggregate_impl(x, src, dst, val, num_out: int):
+    """Raw (non-differentiable) pallas_call wrapper."""
+    num_in, feat = x.shape
+    f_pad = ceil_to(feat, FEATURE_BLOCK)
+    xp = pad_axis(x, 1, f_pad)
+    val = val.astype(x.dtype)
+    grid = (f_pad // FEATURE_BLOCK,)
+
+    out = pl.pallas_call(
+        _aggregate_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(src.shape, lambda j: (0,)),
+            pl.BlockSpec(dst.shape, lambda j: (0,)),
+            pl.BlockSpec(val.shape, lambda j: (0,)),
+            pl.BlockSpec((num_in, FEATURE_BLOCK), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((num_out, FEATURE_BLOCK), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((num_out, f_pad), x.dtype),
+        interpret=INTERPRET,
+    )(src, dst, val, xp)
+    return out[:, :feat]
+
+
+def aggregate_fwd_only(x, src, dst, val, num_out: int):
+    """Aggregate without autodiff plumbing (inference-only exports)."""
+    return _aggregate_impl(x, src, dst, val, num_out)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4,))
+def aggregate(x, src, dst, val, num_out: int):
+    """Differentiable weighted neighbor aggregation over a COO edge stream.
+
+    Args:
+      x:   ``(num_in, f)`` source feature matrix (h^{l-1}).
+      src: ``(E,)`` int32 source indices into ``x`` (RMT-sorted).
+      dst: ``(E,)`` int32 destination indices in ``[0, num_out)``
+           (RRA-renamed, dense).
+      val: ``(E,)`` edge values (GCN normalization, SAGE 1/(deg+1) means,
+           or learnable weights).
+      num_out: static number of output rows (|B^l|).
+
+    Returns:
+      ``(num_out, f)`` aggregated features a^l.
+    """
+    return _aggregate_impl(x, src, dst, val, num_out)
+
+
+def _aggregate_fwd(x, src, dst, val, num_out: int):
+    y = _aggregate_impl(x, src, dst, val, num_out)
+    return y, (x, src, dst, val)
+
+
+def _aggregate_bwd(num_out: int, res, g):
+    x, src, dst, val = res
+    g = g.astype(x.dtype)
+    # The backward aggregation is the forward kernel on the transposed edge
+    # stream — exactly how the paper runs back propagation through the same
+    # accelerator (Section 2.2).
+    dx = _aggregate_impl(g, dst, src, val, x.shape[0])
+    from .edge_dot import edge_dot_impl
+
+    dval = edge_dot_impl(x, g, src, dst).astype(val.dtype)
+    f0 = lambda a: np.zeros(a.shape, dtype=jax.dtypes.float0)
+    return dx, f0(src), f0(dst), dval
+
+
+aggregate.defvjp(_aggregate_fwd, _aggregate_bwd)

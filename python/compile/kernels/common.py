@@ -1,0 +1,48 @@
+"""Shared helpers for the HP-GNN Pallas kernels.
+
+Block sizes mirror the paper's hardware granularity: the HLS aggregate
+kernel routes 16-lane feature chunks through the butterfly network and the
+update kernel is a 16x16-granular MAC array.  On TPU the natural granule is
+the (8, 128) VREG / 128x128 MXU tile, so blocks here are multiples of 128
+(see DESIGN.md §Hardware-Adaptation).
+"""
+
+import os
+
+import jax.numpy as jnp
+
+# Feature-dimension block processed per grid step by the aggregate kernel.
+# One block of source features is a single HBM->VMEM copy; this plays the
+# role of the paper's Feature Duplicator broadcast.
+FEATURE_BLOCK = 128
+
+# Update (matmul) kernel tile sizes — MXU-shaped.
+TILE_M = 128
+TILE_N = 128
+
+# Edge-stream chunk per inner loop step in the aggregate kernel.
+EDGE_BLOCK = 512
+
+# All kernels run in interpret mode: the CPU PJRT client that the rust
+# runtime drives cannot execute Mosaic custom-calls.  Set HP_GNN_NO_INTERPRET
+# only when compiling for a real TPU backend.
+INTERPRET = os.environ.get("HP_GNN_NO_INTERPRET", "") == ""
+
+
+def ceil_to(x: int, m: int) -> int:
+    """Round ``x`` up to a multiple of ``m`` (minimum one block)."""
+    if x <= 0:
+        return m
+    return ((x + m - 1) // m) * m
+
+
+def pad_axis(arr, axis: int, target: int, value=0):
+    """Pad ``arr`` with ``value`` along ``axis`` up to length ``target``."""
+    cur = arr.shape[axis]
+    if cur == target:
+        return arr
+    if cur > target:
+        raise ValueError(f"cannot pad axis {axis} of length {cur} down to {target}")
+    widths = [(0, 0)] * arr.ndim
+    widths[axis] = (0, target - cur)
+    return jnp.pad(arr, widths, constant_values=value)

@@ -1,0 +1,71 @@
+"""Per-edge feature dot products — VJP support kernel.
+
+Computes ``out[e] = <x[src[e], :], g[dst[e], :]>`` for every edge.  This is
+the gradient of the aggregate kernel w.r.t. the edge values and enables
+user-defined layers (the paper's Scatter/Gather UDFs, Listing 2) with
+*learnable* edge weights — something the fixed-normalization GCN/SAGE
+layers never exercise but the framework abstraction allows.
+
+Grid walks feature blocks; each grid step writes one row of a
+``(num_feature_blocks, E)`` partial-dot matrix which the wrapper sums.
+Keeping one output row per grid step (instead of accumulating into a shared
+``(E,)`` buffer) avoids cross-grid-step output aliasing, which keeps the
+kernel valid for both interpret mode and a real sequential-grid TPU
+lowering.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import FEATURE_BLOCK, INTERPRET, ceil_to, pad_axis
+
+
+def _edge_dot_kernel(src_ref, dst_ref, x_ref, g_ref, o_ref):
+    # Vectorized per-edge gather-and-dot over the feature block (the
+    # per-edge dynamic-slice loop was ~2 orders slower through interpret
+    # mode — EXPERIMENTS.md §Perf).
+    xs = x_ref[...][src_ref[...]]
+    gs = g_ref[...][dst_ref[...]]
+    o_ref[...] = jnp.sum(xs * gs, axis=1)[None, :].astype(o_ref.dtype)
+
+
+def edge_dot_impl(x, g, src, dst):
+    """Raw wrapper; see :func:`edge_dot`."""
+    feat = x.shape[1]
+    assert g.shape[1] == feat, f"feature dims disagree: {x.shape} vs {g.shape}"
+    f_pad = ceil_to(feat, FEATURE_BLOCK)
+    xp = pad_axis(x, 1, f_pad)
+    gp = pad_axis(g.astype(x.dtype), 1, f_pad)
+    nblocks = f_pad // FEATURE_BLOCK
+    num_edges = src.shape[0]
+
+    partial_dots = pl.pallas_call(
+        _edge_dot_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec(src.shape, lambda j: (0,)),
+            pl.BlockSpec(dst.shape, lambda j: (0,)),
+            pl.BlockSpec((x.shape[0], FEATURE_BLOCK), lambda j: (0, j)),
+            pl.BlockSpec((g.shape[0], FEATURE_BLOCK), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, num_edges), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, num_edges), x.dtype),
+        interpret=INTERPRET,
+    )(src, dst, xp, gp)
+    return jnp.sum(partial_dots, axis=0)
+
+
+def edge_dot(x, g, src, dst):
+    """``out[e] = <x[src[e]], g[dst[e]]>`` for each edge ``e``.
+
+    Args:
+      x:   ``(num_in, f)`` source-side features.
+      g:   ``(num_out, f)`` destination-side features (usually a cotangent).
+      src: ``(E,)`` int32 indices into ``x``.
+      dst: ``(E,)`` int32 indices into ``g``.
+
+    Returns:
+      ``(E,)`` per-edge dot products in ``x.dtype``.
+    """
+    return edge_dot_impl(x, g, src, dst)

@@ -1,0 +1,55 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Each function here is the mathematical definition of a kernel, written with
+nothing but dense jnp ops (no pallas, no custom VJPs).  The pytest /
+hypothesis suites assert ``assert_allclose(kernel, ref)`` over swept shapes
+and dtypes; these references are also what the L2 model tests differentiate
+through to validate the custom VJPs.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def aggregate_ref(x, src, dst, val, num_out: int):
+    """``out[v] = sum_{e: dst[e]==v} val[e] * x[src[e]]``."""
+    contrib = x[src] * val.astype(x.dtype)[:, None]
+    return jax.ops.segment_sum(contrib, dst, num_segments=num_out)
+
+
+def update_ref(a, w, b, activation: str = "relu"):
+    """``sigma(a @ w + b)`` in float32 accumulation."""
+    out = (
+        jnp.dot(a.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(jnp.float32)
+    )
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return out.astype(a.dtype)
+
+
+def edge_dot_ref(x, g, src, dst):
+    """``out[e] = <x[src[e]], g[dst[e]]>``."""
+    return jnp.sum(x[src] * g.astype(x.dtype)[dst], axis=1)
+
+
+def gcn_layer_ref(x, src, dst, val, w, b, num_out: int, activation: str = "relu"):
+    """Reference GCN layer: normalized aggregate then fused update (Eq. 1)."""
+    agg = aggregate_ref(x, src, dst, val, num_out)
+    return update_ref(agg, w, b, activation)
+
+
+def sage_layer_ref(
+    x, src, dst, val, self_idx, w, b, num_out: int, activation: str = "relu"
+):
+    """Reference GraphSAGE layer (Eq. 2): ``h_v || mean(neigh)`` then update.
+
+    ``val`` carries the 1/(|N_s(v)|+1) mean coefficients (self loop included
+    in the edge stream by the sampler); ``self_idx[v]`` is the row of v
+    itself in ``x`` for the concat branch.
+    """
+    mean_agg = aggregate_ref(x, src, dst, val, num_out)
+    self_feat = x[self_idx]
+    cat = jnp.concatenate([self_feat, mean_agg], axis=1)
+    return update_ref(cat, w, b, activation)

@@ -1,0 +1,229 @@
+"""Layer-2 JAX model: sampling-based mini-batch GNN training step.
+
+Implements the paper's Algorithm 2 compute path — forward propagation
+(Algorithm 1 over the sampled mini-batch), masked softmax cross-entropy
+loss, back propagation, and weight update — as a single jitted function per
+(model, geometry).  Aggregate()/Update() route through the Layer-1 Pallas
+kernels; jax.grad drives the backward pass through their custom VJPs, so
+backprop reuses the same two hardware templates in reverse, exactly as the
+paper schedules it on the accelerator.
+
+Everything here is build-time Python: ``aot.py`` lowers these functions to
+HLO text once, and the rust coordinator executes them via PJRT on every
+training iteration.
+
+Batch argument convention (flat, fixed order — mirrored in the artifact
+manifest consumed by rust):
+
+    x0, labels, mask,
+    [src_l, dst_l, val_l  for l = 1..L],
+    [self_idx_l           for l = 1..L]   (SAGE only),
+    [W_l, b_l             for l = 1..L],
+    lr                                     (train step only)
+
+Shapes come from :mod:`.geometry`; padding edges have ``val == 0`` and
+padding targets ``mask == 0``.
+"""
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .geometry import Geometry
+from .kernels import aggregate, update
+
+MODELS = ("gcn", "sage")
+
+
+def weight_shapes(model: str, geom: Geometry) -> List[Tuple[Tuple[int, int], Tuple[int]]]:
+    """Per-layer ``(W shape, b shape)``; SAGE doubles fan-in for the concat."""
+    if model not in MODELS:
+        raise ValueError(f"unknown model {model!r}; want one of {MODELS}")
+    shapes = []
+    for l in range(geom.layers):
+        fin, fout = geom.f[l], geom.f[l + 1]
+        if model == "sage":
+            fin *= 2
+        shapes.append(((fin, fout), (fout,)))
+    return shapes
+
+
+def init_params(model: str, geom: Geometry, seed: int = 0) -> List[jnp.ndarray]:
+    """Glorot-uniform weights, zero biases — flat [W1, b1, ..., WL, bL]."""
+    key = jax.random.PRNGKey(seed)
+    params: List[jnp.ndarray] = []
+    for (wshape, bshape) in weight_shapes(model, geom):
+        key, sub = jax.random.split(key)
+        limit = (6.0 / (wshape[0] + wshape[1])) ** 0.5
+        params.append(jax.random.uniform(sub, wshape, jnp.float32, -limit, limit))
+        params.append(jnp.zeros(bshape, jnp.float32))
+    return params
+
+
+def _layer(model: str, h, src, dst, val, self_idx, w, b, num_out: int, act: str):
+    """One GNN layer (Algorithm 1 body) on top of the L1 kernels."""
+    a = aggregate(h, src, dst, val, num_out)
+    if model == "sage":
+        # Eq. 2: h_v || mean(neigh ∪ self); the mean lives in `val`, the
+        # concat branch gathers v's own row from the previous layer.
+        a = jnp.concatenate([h[self_idx], a], axis=1)
+    return update(a, w, b, act)
+
+
+def forward(
+    model: str,
+    geom: Geometry,
+    x0,
+    edges: Sequence[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]],
+    self_idx: Sequence[jnp.ndarray],
+    params: Sequence[jnp.ndarray],
+):
+    """Mini-batch forward propagation; returns target-vertex logits."""
+    h = x0
+    ll = geom.layers
+    for l in range(ll):
+        src, dst, val = edges[l]
+        act = "relu" if l < ll - 1 else "none"
+        si = self_idx[l] if model == "sage" else None
+        w, b = params[2 * l], params[2 * l + 1]
+        h = _layer(model, h, src, dst, val, si, w, b, geom.b[l + 1], act)
+    return h
+
+
+def masked_xent(logits, labels, mask):
+    """Mean softmax cross-entropy over unmasked (real) target vertices."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    picked = jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=1)[:, 0]
+    mask = mask.astype(jnp.float32)
+    return -jnp.sum(picked * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _unpack(model: str, geom: Geometry, args: Sequence[jnp.ndarray], with_lr: bool):
+    """Split the flat argument list back into named groups."""
+    ll = geom.layers
+    it = iter(args)
+    x0 = next(it)
+    labels = next(it)
+    mask = next(it)
+    edges = [(next(it), next(it), next(it)) for _ in range(ll)]
+    self_idx = [next(it) for _ in range(ll)] if model == "sage" else [None] * ll
+    params = [next(it) for _ in range(2 * ll)]
+    lr = next(it) if with_lr else None
+    rest = list(it)
+    assert not rest, f"{len(rest)} unconsumed args"
+    return x0, labels, mask, edges, self_idx, params, lr
+
+
+def make_forward_fn(model: str, geom: Geometry):
+    """Flat-arg forward function for AOT export (inference / eval)."""
+
+    def fn(*args):
+        x0, _labels, _mask, edges, self_idx, params, _ = _unpack(
+            model, geom, args, with_lr=False
+        )
+        return (forward(model, geom, x0, edges, self_idx, params),)
+
+    return fn
+
+
+def make_loss_fn(model: str, geom: Geometry):
+    """Flat-arg (loss, logits) function — used for tests and eval export."""
+
+    def fn(*args):
+        x0, labels, mask, edges, self_idx, params, _ = _unpack(
+            model, geom, args, with_lr=False
+        )
+        logits = forward(model, geom, x0, edges, self_idx, params)
+        return masked_xent(logits, labels, mask), logits
+
+    return fn
+
+
+def make_train_step_fn(model: str, geom: Geometry):
+    """Flat-arg SGD train step: returns ``(loss, new_W1, new_b1, ...)``.
+
+    The learning rate is a scalar input so the rust coordinator can run
+    schedules without recompiling; weights are threaded through the
+    executable and live in rust between iterations (the FPGA-local-memory
+    analog of keeping W^l resident).
+    """
+
+    def fn(*args):
+        x0, labels, mask, edges, self_idx, params, lr = _unpack(
+            model, geom, args, with_lr=True
+        )
+
+        def loss_of(params):
+            logits = forward(model, geom, x0, edges, self_idx, params)
+            return masked_xent(logits, labels, mask)
+
+        loss, grads = jax.value_and_grad(loss_of)(list(params))
+        new_params = [p - lr * g for p, g in zip(params, grads)]
+        return tuple([loss] + new_params)
+
+    return fn
+
+
+def make_adam_train_step_fn(model: str, geom: Geometry, b1=0.9, b2=0.999, eps=1e-8):
+    """Adam variant: extra flat inputs ``[m_i, v_i ...], step`` after lr.
+
+    Returns ``(loss, new_params..., new_m..., new_v..., new_step)``.
+    """
+
+    def fn(*args):
+        ll = geom.layers
+        nparams = 2 * ll
+        nstate = nparams
+        base, tail = args[: len(args) - 2 * nstate - 1], args[len(args) - 2 * nstate - 1 :]
+        m_state = list(tail[:nstate])
+        v_state = list(tail[nstate : 2 * nstate])
+        step = tail[-1]
+        x0, labels, mask, edges, self_idx, params, lr = _unpack(
+            model, geom, base, with_lr=True
+        )
+
+        def loss_of(params):
+            logits = forward(model, geom, x0, edges, self_idx, params)
+            return masked_xent(logits, labels, mask)
+
+        loss, grads = jax.value_and_grad(loss_of)(list(params))
+        t = step + 1.0
+        outs_p, outs_m, outs_v = [], [], []
+        for p, g, m, v in zip(params, grads, m_state, v_state):
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / (1 - b1**t)
+            vhat = v / (1 - b2**t)
+            outs_p.append(p - lr * mhat / (jnp.sqrt(vhat) + eps))
+            outs_m.append(m)
+            outs_v.append(v)
+        return tuple([loss] + outs_p + outs_m + outs_v + [t])
+
+    return fn
+
+
+def example_args(model: str, geom: Geometry, with_lr: bool, seed: int = 0):
+    """ShapeDtypeStructs + names for lowering; order defines the ABI."""
+    ll = geom.layers
+    specs = []
+
+    def add(name, shape, dtype):
+        specs.append((name, jax.ShapeDtypeStruct(shape, dtype)))
+
+    add("x0", (geom.b[0], geom.f[0]), jnp.float32)
+    add("labels", (geom.b[ll],), jnp.int32)
+    add("mask", (geom.b[ll],), jnp.float32)
+    for l in range(1, ll + 1):
+        add(f"src{l}", (geom.e[l - 1],), jnp.int32)
+        add(f"dst{l}", (geom.e[l - 1],), jnp.int32)
+        add(f"val{l}", (geom.e[l - 1],), jnp.float32)
+    if model == "sage":
+        for l in range(1, ll + 1):
+            add(f"self_idx{l}", (geom.b[l],), jnp.int32)
+    for l, (wshape, bshape) in enumerate(weight_shapes(model, geom), start=1):
+        add(f"w{l}", wshape, jnp.float32)
+        add(f"b{l}", bshape, jnp.float32)
+    if with_lr:
+        add("lr", (), jnp.float32)
+    return specs

@@ -1,0 +1,120 @@
+"""AOT pipeline tests.
+
+The HLO-text artifact's *numeric* round-trip (text -> HloModuleProto ->
+PJRT compile -> execute) is owned by the rust runtime integration tests
+(`rust/tests/runtime_roundtrip.rs`) — rust is the only runtime consumer.
+Here we validate the python half of the contract:
+
+* the emitted text parses back into an HloModule (catches emission bugs),
+* the entry computation's parameter count matches the manifest ABI,
+* manifest metadata is coherent with the geometry registry, and
+* the *function being exported* computes what the jitted model computes
+  (same tracer, so this pins the lowering input).
+"""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot, geometry, model
+from tests.test_model import _flat, _rand_batch
+
+TINY = geometry.get("tiny")
+
+
+@pytest.fixture(scope="module")
+def tiny_exports(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    entries = {}
+    for mdl in model.MODELS:
+        for kind in ("train_step", "forward"):
+            entries[(mdl, kind)] = aot.export_one(mdl, "tiny", kind, str(out))
+    return out, entries
+
+
+def test_manifest_records_io(tiny_exports):
+    _out, entries = tiny_exports
+    e = entries[("gcn", "train_step")]
+    names = [i["name"] for i in e["inputs"]]
+    assert names[:3] == ["x0", "labels", "mask"]
+    assert names[-1] == "lr"
+    assert e["outputs"][0] == "loss"
+    assert e["geometry_spec"]["b"] == list(TINY.b)
+    f = entries[("gcn", "forward")]
+    assert "lr" not in [i["name"] for i in f["inputs"]]
+    assert f["outputs"] == ["logits"]
+
+
+@pytest.mark.parametrize("mdl", model.MODELS)
+@pytest.mark.parametrize("kind", ["train_step", "forward"])
+def test_hlo_text_parses_and_matches_abi(tiny_exports, mdl, kind):
+    out, entries = tiny_exports
+    entry = entries[(mdl, kind)]
+    with open(os.path.join(out, entry["file"])) as f:
+        text = f.read()
+    xc._xla.hlo_module_from_text(text)  # raises on malformed text
+    # ENTRY signature: one parameter per manifest input.  Parameters in
+    # nested computations (while bodies, fusions) don't count, so scan only
+    # the ENTRY block.
+    start = text.index("ENTRY ")
+    depth = 0
+    end = start
+    for i, ch in enumerate(text[start:], start):
+        if ch == "{":
+            depth += 1
+        elif ch == "}":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    entry_block = text[start:end]
+    import re
+
+    params = set(re.findall(r"= [^=]*parameter\((\d+)\)", entry_block))
+    assert len(params) == len(entry["inputs"])
+
+
+@pytest.mark.parametrize("mdl", model.MODELS)
+def test_exported_fn_equals_jitted_model(mdl):
+    """The function handed to jax.jit(...).lower is the model's train step."""
+    args, edges, self_idx, params = _rand_batch(TINY, mdl, seed=11, real_targets=4)
+    flat = _flat(args, edges, self_idx, params, mdl, lr=0.05)
+    fn = model.make_train_step_fn(mdl, TINY)
+    eager = fn(*flat)
+    jitted = jax.jit(fn)(*flat)
+    for e, j in zip(eager, jitted):
+        np.testing.assert_allclose(np.asarray(e), np.asarray(j), rtol=1e-5, atol=1e-6)
+    # Loss improves over a couple of eager steps (sanity of exported fn).
+    p = list(eager[1:])
+    out2 = fn(*_flat(args, edges, self_idx, p, mdl, lr=0.05))
+    assert float(out2[0]) <= float(eager[0]) + 1e-3
+
+
+def test_repo_manifest_consistent_when_present():
+    """If `make artifacts` has run, the checked manifest must be coherent."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts/ not built")
+    with open(path) as f:
+        manifest = json.load(f)
+    assert manifest["version"] == 1
+    for e in manifest["artifacts"]:
+        hlo = os.path.join(os.path.dirname(path), e["file"])
+        assert os.path.exists(hlo), f"missing {e['file']}"
+        g = geometry.get(e["geometry"])
+        assert e["geometry_spec"]["b"] == list(g.b)
+        with_lr = e["kind"] in ("train_step", "adam_step")
+        want_names = [n for n, _ in model.example_args(e["model"], g, with_lr=with_lr)]
+        if e["kind"] == "adam_step":
+            # Adam state trails the base ABI (see aot.py).
+            ll = g.layers
+            for l in range(1, ll + 1):
+                want_names += [f"m_w{l}", f"m_b{l}"]
+            for l in range(1, ll + 1):
+                want_names += [f"v_w{l}", f"v_b{l}"]
+            want_names.append("step")
+        assert [i["name"] for i in e["inputs"]] == want_names, e["name"]

@@ -1,0 +1,211 @@
+"""Kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes and dtypes of the Pallas kernels and asserts
+allclose against ref.py.  Deadlines are disabled: interpret-mode pallas
+goes through XLA compilation on first touch of each shape.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import aggregate, aggregate_fwd_only, edge_dot, matmul, update
+from compile.kernels import ref
+from compile.kernels.common import FEATURE_BLOCK, ceil_to, pad_axis
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-4, atol=1e-4)
+
+
+def _rand_graph(rng, num_in, num_out, num_edges, feat, dtype):
+    x = jnp.asarray(rng.normal(size=(num_in, feat)).astype(np.float32)).astype(dtype)
+    src = jnp.asarray(rng.integers(0, num_in, num_edges).astype(np.int32))
+    dst = jnp.asarray(rng.integers(0, num_out, num_edges).astype(np.int32))
+    val = jnp.asarray(rng.normal(size=num_edges).astype(np.float32)).astype(dtype)
+    return x, src, dst, val
+
+
+class TestAggregate:
+    @settings(**SETTINGS)
+    @given(
+        num_in=st.integers(1, 70),
+        num_out=st.integers(1, 40),
+        num_edges=st.integers(1, 200),
+        feat=st.integers(1, 300),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_f32(self, num_in, num_out, num_edges, feat, seed):
+        rng = np.random.default_rng(seed)
+        x, src, dst, val = _rand_graph(rng, num_in, num_out, num_edges, feat, jnp.float32)
+        got = aggregate(x, src, dst, val, num_out)
+        want = ref.aggregate_ref(x, src, dst, val, num_out)
+        assert got.shape == (num_out, feat)
+        np.testing.assert_allclose(got, want, **_tol(jnp.float32))
+
+    @settings(**SETTINGS)
+    @given(
+        num_in=st.integers(1, 40),
+        num_out=st.integers(1, 20),
+        num_edges=st.integers(1, 80),
+        feat=st.integers(1, 160),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_bf16(self, num_in, num_out, num_edges, feat, seed):
+        rng = np.random.default_rng(seed)
+        x, src, dst, val = _rand_graph(rng, num_in, num_out, num_edges, feat, jnp.bfloat16)
+        got = aggregate(x, src, dst, val, num_out).astype(jnp.float32)
+        want = ref.aggregate_ref(x, src, dst, val, num_out).astype(jnp.float32)
+        np.testing.assert_allclose(got, want, **_tol(jnp.bfloat16))
+
+    def test_zero_valued_padding_edges_are_noops(self):
+        rng = np.random.default_rng(1)
+        x, src, dst, val = _rand_graph(rng, 10, 6, 20, 33, jnp.float32)
+        base = aggregate(x, src, dst, val, 6)
+        # Append pure-padding edges: val == 0 pointing anywhere valid.
+        srcp = jnp.concatenate([src, jnp.zeros(7, jnp.int32)])
+        dstp = jnp.concatenate([dst, jnp.full((7,), 5, jnp.int32)])
+        valp = jnp.concatenate([val, jnp.zeros(7, jnp.float32)])
+        padded = aggregate(x, srcp, dstp, valp, 6)
+        np.testing.assert_allclose(base, padded, rtol=1e-6, atol=1e-6)
+
+    def test_isolated_destination_stays_zero(self):
+        rng = np.random.default_rng(2)
+        x, src, _dst, val = _rand_graph(rng, 8, 5, 12, 16, jnp.float32)
+        dst = jnp.asarray(rng.integers(0, 4, 12).astype(np.int32))  # never 4
+        out = aggregate(x, src, dst, val, 5)
+        np.testing.assert_allclose(out[4], np.zeros(16), atol=0)
+
+    def test_fwd_only_matches_vjp_version(self):
+        rng = np.random.default_rng(3)
+        x, src, dst, val = _rand_graph(rng, 11, 9, 31, 45, jnp.float32)
+        np.testing.assert_allclose(
+            aggregate_fwd_only(x, src, dst, val, 9),
+            aggregate(x, src, dst, val, 9),
+            rtol=0,
+            atol=0,
+        )
+
+    def test_duplicate_edges_accumulate(self):
+        x = jnp.ones((2, 4), jnp.float32)
+        src = jnp.zeros(3, jnp.int32)
+        dst = jnp.zeros(3, jnp.int32)
+        val = jnp.asarray([1.0, 2.0, 3.0], jnp.float32)
+        out = aggregate(x, src, dst, val, 1)
+        np.testing.assert_allclose(out, np.full((1, 4), 6.0), rtol=1e-6)
+
+    def test_jit_compatible(self):
+        rng = np.random.default_rng(4)
+        x, src, dst, val = _rand_graph(rng, 10, 5, 15, 20, jnp.float32)
+        f = jax.jit(lambda *a: aggregate(*a, 5))
+        np.testing.assert_allclose(
+            f(x, src, dst, val), ref.aggregate_ref(x, src, dst, val, 5), rtol=1e-5, atol=1e-5
+        )
+
+
+class TestUpdate:
+    @settings(**SETTINGS)
+    @given(
+        m=st.integers(1, 200),
+        k=st.integers(1, 130),
+        n=st.integers(1, 150),
+        act=st.sampled_from(["relu", "none"]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_f32(self, m, k, n, act, seed):
+        rng = np.random.default_rng(seed)
+        a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+        b = jnp.asarray(rng.normal(size=n).astype(np.float32))
+        got = update(a, w, b, act)
+        want = ref.update_ref(a, w, b, act)
+        assert got.shape == (m, n)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @settings(**SETTINGS)
+    @given(
+        m=st.integers(1, 64),
+        k=st.integers(1, 64),
+        n=st.integers(1, 64),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_bf16(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32)).astype(jnp.bfloat16)
+        w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32)).astype(jnp.bfloat16)
+        b = jnp.asarray(rng.normal(size=n).astype(np.float32)).astype(jnp.bfloat16)
+        got = update(a, w, b, "relu").astype(jnp.float32)
+        want = ref.update_ref(a, w, b, "relu").astype(jnp.float32)
+        np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-2)
+
+    def test_relu_clamps(self):
+        a = jnp.asarray([[-1.0, 2.0]], jnp.float32)
+        w = jnp.eye(2, dtype=jnp.float32)
+        b = jnp.zeros(2, jnp.float32)
+        np.testing.assert_allclose(update(a, w, b, "relu"), [[0.0, 2.0]])
+        np.testing.assert_allclose(update(a, w, b, "none"), [[-1.0, 2.0]])
+
+    def test_bad_activation_raises(self):
+        a = jnp.ones((2, 2), jnp.float32)
+        with pytest.raises(ValueError, match="activation"):
+            update(a, a, jnp.zeros(2), "gelu")
+
+    def test_matmul_helper(self):
+        rng = np.random.default_rng(5)
+        a = jnp.asarray(rng.normal(size=(33, 17)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(17, 29)).astype(np.float32))
+        np.testing.assert_allclose(matmul(a, w), a @ w, rtol=1e-4, atol=1e-4)
+
+
+class TestEdgeDot:
+    @settings(**SETTINGS)
+    @given(
+        num_in=st.integers(1, 50),
+        num_out=st.integers(1, 30),
+        num_edges=st.integers(1, 120),
+        feat=st.integers(1, 260),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, num_in, num_out, num_edges, feat, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(num_in, feat)).astype(np.float32))
+        g = jnp.asarray(rng.normal(size=(num_out, feat)).astype(np.float32))
+        src = jnp.asarray(rng.integers(0, num_in, num_edges).astype(np.int32))
+        dst = jnp.asarray(rng.integers(0, num_out, num_edges).astype(np.int32))
+        got = edge_dot(x, g, src, dst)
+        want = ref.edge_dot_ref(x, g, src, dst)
+        assert got.shape == (num_edges,)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_multi_feature_block_sums_partials(self):
+        # feat > FEATURE_BLOCK exercises the partial-dot reduction.
+        feat = FEATURE_BLOCK * 2 + 13
+        rng = np.random.default_rng(6)
+        x = jnp.asarray(rng.normal(size=(4, feat)).astype(np.float32))
+        g = jnp.asarray(rng.normal(size=(3, feat)).astype(np.float32))
+        src = jnp.asarray([0, 1, 2, 3], np.int32)
+        dst = jnp.asarray([0, 1, 2, 0], np.int32)
+        np.testing.assert_allclose(
+            edge_dot(x, g, src, dst), ref.edge_dot_ref(x, g, src, dst), rtol=1e-3, atol=1e-3
+        )
+
+
+class TestCommonHelpers:
+    @settings(**SETTINGS)
+    @given(x=st.integers(-5, 2000), m=st.sampled_from([8, 128, 512]))
+    def test_ceil_to(self, x, m):
+        out = ceil_to(x, m)
+        assert out % m == 0 and out >= max(x, 1)
+        assert out - m < max(x, m)
+
+    def test_pad_axis_rejects_shrink(self):
+        with pytest.raises(ValueError):
+            pad_axis(jnp.ones((4, 4)), 0, 2)
+
+    def test_pad_axis_value(self):
+        out = pad_axis(jnp.ones((2, 2)), 1, 4, value=7)
+        np.testing.assert_allclose(out[:, 2:], np.full((2, 2), 7.0))

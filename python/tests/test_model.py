@@ -1,0 +1,182 @@
+"""L2 model tests: layer semantics vs reference, masked loss, train step
+convergence, Adam state threading, ABI (example_args) consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import geometry, model
+from compile.kernels import ref
+
+TINY = geometry.get("tiny")
+
+
+def _rand_batch(geom, mdl, seed=0, real_targets=None):
+    """Random (valid) padded mini-batch honoring the geometry contract."""
+    rng = np.random.default_rng(seed)
+    ll = geom.layers
+    args = {}
+    args["x0"] = jnp.asarray(rng.normal(size=(geom.b[0], geom.f[0])).astype(np.float32))
+    nt = geom.b[ll] if real_targets is None else real_targets
+    labels = rng.integers(0, geom.num_classes, geom.b[ll]).astype(np.int32)
+    mask = np.zeros(geom.b[ll], np.float32)
+    mask[:nt] = 1.0
+    args["labels"] = jnp.asarray(labels)
+    args["mask"] = jnp.asarray(mask)
+    edges = []
+    for l in range(1, ll + 1):
+        e = geom.e[l - 1]
+        src = rng.integers(0, geom.b[l - 1], e).astype(np.int32)
+        dst = rng.integers(0, geom.b[l], e).astype(np.int32)
+        val = rng.normal(size=e).astype(np.float32)
+        edges.append((jnp.asarray(src), jnp.asarray(dst), jnp.asarray(val)))
+    self_idx = [
+        jnp.asarray(rng.integers(0, geom.b[l - 1], geom.b[l]).astype(np.int32))
+        for l in range(1, ll + 1)
+    ]
+    params = model.init_params(mdl, geom, seed=seed)
+    return args, edges, self_idx, params
+
+
+def _flat(args, edges, self_idx, params, mdl, lr=None):
+    flat = [args["x0"], args["labels"], args["mask"]]
+    for (s, d, v) in edges:
+        flat += [s, d, v]
+    if mdl == "sage":
+        flat += list(self_idx)
+    flat += list(params)
+    if lr is not None:
+        flat.append(jnp.asarray(lr, jnp.float32))
+    return flat
+
+
+class TestForward:
+    @pytest.mark.parametrize("mdl", model.MODELS)
+    def test_forward_matches_ref_layers(self, mdl):
+        args, edges, self_idx, params = _rand_batch(TINY, mdl, seed=1)
+        got = model.forward(mdl, TINY, args["x0"], edges, self_idx, params)
+
+        h = args["x0"]
+        ll = TINY.layers
+        for l in range(ll):
+            src, dst, val = edges[l]
+            act = "relu" if l < ll - 1 else "none"
+            w, b = params[2 * l], params[2 * l + 1]
+            if mdl == "gcn":
+                h = ref.gcn_layer_ref(h, src, dst, val, w, b, TINY.b[l + 1], act)
+            else:
+                h = ref.sage_layer_ref(
+                    h, src, dst, val, self_idx[l], w, b, TINY.b[l + 1], act
+                )
+        np.testing.assert_allclose(got, h, rtol=1e-3, atol=1e-3)
+
+    @pytest.mark.parametrize("mdl", model.MODELS)
+    def test_forward_fn_flat_abi(self, mdl):
+        args, edges, self_idx, params = _rand_batch(TINY, mdl, seed=2)
+        fn = model.make_forward_fn(mdl, TINY)
+        (logits,) = fn(*_flat(args, edges, self_idx, params, mdl))
+        direct = model.forward(mdl, TINY, args["x0"], edges, self_idx, params)
+        np.testing.assert_array_equal(logits, direct)
+        assert logits.shape == (TINY.b[-1], TINY.num_classes)
+
+
+class TestLoss:
+    def test_masked_xent_ignores_padding(self):
+        logits = jnp.asarray(np.random.default_rng(0).normal(size=(6, 4)), jnp.float32)
+        labels = jnp.asarray([0, 1, 2, 3, 0, 1], jnp.int32)
+        mask_all = jnp.ones(6, jnp.float32)
+        mask_half = jnp.asarray([1, 1, 1, 0, 0, 0], jnp.float32)
+        full = model.masked_xent(logits, labels, mask_all)
+        # Corrupt the masked rows: loss over the unmasked prefix must not move.
+        corrupted = logits.at[3:].set(1e3)
+        half = model.masked_xent(corrupted, labels, mask_half)
+        want = model.masked_xent(logits[:3], labels[:3], jnp.ones(3, jnp.float32))
+        np.testing.assert_allclose(half, want, rtol=1e-6)
+        assert not np.allclose(full, half)
+
+    def test_all_masked_is_finite(self):
+        logits = jnp.ones((4, 3), jnp.float32)
+        labels = jnp.zeros(4, jnp.int32)
+        loss = model.masked_xent(logits, labels, jnp.zeros(4, jnp.float32))
+        assert float(loss) == 0.0
+
+
+class TestTrainStep:
+    @pytest.mark.parametrize("mdl", model.MODELS)
+    def test_loss_decreases(self, mdl):
+        args, edges, self_idx, params = _rand_batch(TINY, mdl, seed=3, real_targets=4)
+        step = jax.jit(model.make_train_step_fn(mdl, TINY))
+        losses = []
+        for _ in range(30):
+            out = step(*_flat(args, edges, self_idx, params, mdl, lr=0.05))
+            losses.append(float(out[0]))
+            params = list(out[1:])
+        assert losses[-1] < losses[0] * 0.8, losses
+
+    def test_zero_lr_keeps_weights(self):
+        args, edges, self_idx, params = _rand_batch(TINY, "gcn", seed=4)
+        step = model.make_train_step_fn("gcn", TINY)
+        out = step(*_flat(args, edges, self_idx, params, "gcn", lr=0.0))
+        for p, q in zip(params, out[1:]):
+            np.testing.assert_array_equal(p, q)
+
+    def test_adam_state_threading(self):
+        args, edges, self_idx, params = _rand_batch(TINY, "gcn", seed=5, real_targets=4)
+        step = jax.jit(model.make_adam_train_step_fn("gcn", TINY))
+        m = [jnp.zeros_like(p) for p in params]
+        v = [jnp.zeros_like(p) for p in params]
+        t = jnp.asarray(0.0, jnp.float32)
+        n = len(params)
+        losses = []
+        for i in range(25):
+            out = step(*_flat(args, edges, self_idx, params, "gcn", lr=0.01), *m, *v, t)
+            losses.append(float(out[0]))
+            params = list(out[1 : 1 + n])
+            m = list(out[1 + n : 1 + 2 * n])
+            v = list(out[1 + 2 * n : 1 + 3 * n])
+            t = out[-1]
+        assert float(t) == 25.0
+        assert losses[-1] < losses[0]
+
+
+class TestABI:
+    @pytest.mark.parametrize("mdl", model.MODELS)
+    @pytest.mark.parametrize("with_lr", [True, False])
+    def test_example_args_cover_signature(self, mdl, with_lr):
+        specs = model.example_args(mdl, TINY, with_lr=with_lr)
+        names = [n for n, _ in specs]
+        assert names[0:3] == ["x0", "labels", "mask"]
+        assert len(names) == len(set(names)), "duplicate arg names"
+        fn = (
+            model.make_train_step_fn(mdl, TINY)
+            if with_lr
+            else model.make_forward_fn(mdl, TINY)
+        )
+        # Must trace cleanly with exactly these specs.
+        jax.eval_shape(fn, *[s for _, s in specs])
+
+    def test_weight_shapes_sage_doubles_fanin(self):
+        gcn = model.weight_shapes("gcn", TINY)
+        sage = model.weight_shapes("sage", TINY)
+        for (gw, _), (sw, _) in zip(gcn, sage):
+            assert sw[0] == 2 * gw[0] and sw[1] == gw[1]
+
+    def test_unknown_model_rejected(self):
+        with pytest.raises(ValueError, match="unknown model"):
+            model.weight_shapes("gat", TINY)
+
+
+class TestGeometry:
+    def test_registry_entries_valid(self):
+        for name in geometry.GEOMETRIES:
+            g = geometry.get(name)
+            assert g.layers >= 1 and g.total_vertices == sum(g.b)
+
+    def test_monotone_b_enforced(self):
+        with pytest.raises(ValueError, match="exceeds"):
+            geometry.Geometry("bad", b=(4, 16, 4), e=(8, 8), f=(4, 4, 4))
+
+    def test_unknown_geometry(self):
+        with pytest.raises(KeyError, match="unknown geometry"):
+            geometry.get("nope")

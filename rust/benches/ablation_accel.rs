@@ -1,0 +1,97 @@
+//! Ablation of the simulator's microarchitectural design choices —
+//! the knobs DESIGN.md calls out that are *not* part of the paper's DSE
+//! space (which sweeps only m and n).  Each row isolates one knob on the
+//! same FL NS-GCN batch.
+//!
+//! Run: `cargo bench --offline --bench ablation_accel`
+
+use hp_gnn::accel::device::FeaturePlacement;
+use hp_gnn::accel::{simulate_batch, AccelConfig, Platform, SimOptions};
+use hp_gnn::graph::datasets;
+use hp_gnn::layout::{index_batch, IndexedBatch, LayoutOptions};
+use hp_gnn::repro;
+use hp_gnn::sampler::values::{attach_values, GnnModel};
+use hp_gnn::sampler::{neighbor::NeighborSampler, Sampler};
+use hp_gnn::util::bench::BenchSet;
+use hp_gnn::util::rng::Pcg64;
+use hp_gnn::util::si;
+
+fn batch(g: &hp_gnn::graph::Graph) -> IndexedBatch {
+    let mb = NeighborSampler::paper_default().sample(g, &mut Pcg64::seed_from_u64(5));
+    let vals = attach_values(g, &mb, GnnModel::Gcn);
+    index_batch(&mb, &vals, LayoutOptions::all())
+}
+
+fn main() {
+    let mut set = BenchSet::new("accelerator design-choice ablations (FL, NS-GCN)");
+    let ds = datasets::FLICKR;
+    let g = repro::scaled_instance(&ds, 77);
+    let ib = batch(&g);
+    let verts = ib.vertices_traversed();
+    let feat = [ds.f0, 256, ds.f2];
+    let cfg = AccelConfig::paper_default();
+
+    let nvtps = |platform: &Platform, opts: SimOptions| {
+        let t = simulate_batch(platform, &cfg, &ib, &feat, opts);
+        t.nvtps(verts, 0.0)
+    };
+    let base_platform = Platform::alveo_u250();
+    let base = nvtps(&base_platform, SimOptions::default());
+    set.row("baseline (raw=4, lanes=16, dies=4, local)", base, "NVTPS");
+
+    // RAW-resolver pipeline depth: deeper accumulators stall more on
+    // repeated destinations.
+    for depth in [0u64, 16, 64] {
+        let v = nvtps(&base_platform, SimOptions { raw_depth: depth, ..Default::default() });
+        set.row(&format!("raw_depth={depth}"), v, "NVTPS");
+        if depth > 4 {
+            assert!(v <= base * 1.001, "deeper RAW pipeline cannot be faster");
+        }
+    }
+
+    // Scatter-PE lane width (the paper's 16): wider lanes shorten flits.
+    for lanes in [8usize, 32, 64] {
+        let v = nvtps(&base_platform, SimOptions { lanes, ..Default::default() });
+        set.row(&format!("lanes={lanes}"), v, "NVTPS");
+    }
+    let narrow = nvtps(&base_platform, SimOptions { lanes: 8, ..Default::default() });
+    let wide = nvtps(&base_platform, SimOptions { lanes: 64, ..Default::default() });
+    assert!(wide >= narrow, "wider lanes must not slow aggregation");
+
+    // Die count (Fig. 7 replication) at fixed per-die config.
+    for dies in [1usize, 2, 8] {
+        let mut p = Platform::alveo_u250();
+        p.dies = dies;
+        let v = nvtps(&p, SimOptions::default());
+        set.row(&format!("dies={dies}"), v, "NVTPS");
+    }
+    let mut one_die = Platform::alveo_u250();
+    one_die.dies = 1;
+    assert!(
+        base > nvtps(&one_die, SimOptions::default()) * 1.5,
+        "4-die replication must clearly beat 1 die"
+    );
+
+    // Cross-channel interconnect efficiency (vendor all-to-all quality).
+    for eff in [0.5f64, 1.0] {
+        let mut p = Platform::alveo_u250();
+        p.cross_channel_efficiency = eff;
+        let v = nvtps(&p, SimOptions::default());
+        set.row(&format!("xchannel_eff={eff}"), v, "NVTPS");
+    }
+
+    // Feature placement (DistributeData): PCIe streaming for huge graphs.
+    let streamed = nvtps(
+        &base_platform,
+        SimOptions { placement: FeaturePlacement::HostStreamed, ..Default::default() },
+    );
+    set.row("placement=host-streamed", streamed, "NVTPS");
+    assert!(streamed < base, "PCIe streaming must cost throughput");
+
+    println!(
+        "\nbaseline {} NVTPS; knobs move throughput as annotated above",
+        si(base)
+    );
+    set.persist();
+    println!("ablation_accel OK");
+}

@@ -1,0 +1,94 @@
+//! Hot-path micro-benchmarks for the §Perf optimization pass.
+//!
+//! Times every host-side stage of the training pipeline in isolation
+//! (sampling, edge values, layout, padding, feature synthesis, simulator,
+//! executed CPU baseline) so the perf pass can attack the top bottleneck
+//! and record before/after in EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo bench --offline --bench hotpath`
+
+use hp_gnn::accel::{simulate_batch, AccelConfig, Platform, SimOptions};
+use hp_gnn::graph::datasets;
+use hp_gnn::layout::pad::{pad, EdgeOverflow};
+use hp_gnn::layout::{index_batch, Geometry, LayoutOptions};
+use hp_gnn::repro;
+use hp_gnn::sampler::values::{attach_values, GnnModel};
+use hp_gnn::sampler::{neighbor::NeighborSampler, Sampler};
+use hp_gnn::util::bench::{black_box, Bench, BenchSet};
+use hp_gnn::util::rng::Pcg64;
+
+fn main() {
+    let mut set = BenchSet::new("hotpath — host pipeline stages");
+    let b = Bench::default();
+    let ds = datasets::FLICKR;
+    let g = repro::scaled_instance(&ds, 17);
+    println!("instance: {} vertices, {} edges\n", g.num_vertices(), g.num_edges());
+
+    // Paper-parameter NS batch (the heavy case).
+    let sampler = NeighborSampler::paper_default();
+    let mut rng = Pcg64::seed_from_u64(1);
+    let m = b.run("sample (NS 1024x[25,10])", || black_box(sampler.sample(&g, &mut rng)));
+    set.push(m, None);
+
+    let mb = sampler.sample(&g, &mut Pcg64::seed_from_u64(2));
+    println!(
+        "batch: layers {:?}, edges {:?}",
+        mb.layers.iter().map(|l| l.len()).collect::<Vec<_>>(),
+        mb.edges.iter().map(|e| e.len()).collect::<Vec<_>>()
+    );
+    let m = b.run("attach_values gcn", || black_box(attach_values(&g, &mb, GnnModel::Gcn)));
+    set.push(m, None);
+    let m = b.run("attach_values sage", || black_box(attach_values(&g, &mb, GnnModel::Sage)));
+    set.push(m, None);
+
+    let vals = attach_values(&g, &mb, GnnModel::Gcn);
+    let m = b.run("index_batch (RMT+RRA)", || {
+        black_box(index_batch(&mb, &vals, LayoutOptions::all()))
+    });
+    set.push(m, None);
+    let m = b.run("index_batch (baseline)", || {
+        black_box(index_batch(&mb, &vals, LayoutOptions::none()))
+    });
+    set.push(m, None);
+
+    let ib = index_batch(&mb, &vals, LayoutOptions::all());
+    // Geometry big enough for this batch.
+    let geom = Geometry {
+        name: "bench".into(),
+        b: mb.layers.iter().map(|l| l.len().next_multiple_of(64)).rev().collect::<Vec<_>>()
+            .into_iter()
+            .rev()
+            .collect(),
+        e: mb.edges.iter().map(|e| e.len().next_multiple_of(64)).collect(),
+        f: vec![ds.f0, 256, ds.f2],
+    };
+    let labels = vec![0u8; mb.layers[2].len()];
+    let m = b.run("pad to geometry", || {
+        black_box(pad(&ib, &labels, &geom, EdgeOverflow::TruncateKeepSelf).unwrap())
+    });
+    set.push(m, None);
+
+    let l0_labels = datasets::synth_labels(&mb.layers[0], ds.f2, 3, g.num_vertices());
+    let m = b.run("synth_features (B^0 x 500)", || {
+        black_box(datasets::synth_features(&mb.layers[0], &l0_labels, ds.f0, ds.f2, 3))
+    });
+    set.push(m, None);
+
+    let platform = Platform::alveo_u250();
+    let config = AccelConfig::paper_default();
+    let m = b.run("simulate_batch (cycle-level)", || {
+        black_box(simulate_batch(&platform, &config, &ib, &[ds.f0, 256, ds.f2], SimOptions::default()))
+    });
+    set.push(m, None);
+
+    // Executed CPU training step (the Table 7 anchor) at reduced dims.
+    let feats = vec![0.1f32; ib.layers[0].len() * 64];
+    let quick = Bench::quick();
+    let m = quick.run("executed CPU step (f=64)", || {
+        black_box(hp_gnn::baselines::cpu::execute_batch(&ib, &[64, 32, 8], &feats, 4))
+    });
+    set.push(m, None);
+
+    set.persist();
+    println!("\nhotpath OK");
+}

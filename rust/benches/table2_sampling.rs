@@ -1,0 +1,104 @@
+//! Table 2 — mini-batch size models per sampling method.
+//!
+//! Validates the closed forms (|B^l|, |E^l|) that drive the DSE engine
+//! against *empirical* batches drawn by the real samplers, and times the
+//! samplers themselves (the t_sampling input of Eq. 5).
+//!
+//! Run: `cargo bench --offline --bench table2_sampling`
+
+use hp_gnn::graph::datasets;
+use hp_gnn::perf::{BatchGeometry, KappaEstimator};
+use hp_gnn::repro;
+use hp_gnn::sampler::{neighbor::NeighborSampler, subgraph::SubgraphSampler, Sampler};
+use hp_gnn::util::bench::{Bench, BenchSet};
+use hp_gnn::util::rng::Pcg64;
+
+fn main() {
+    let mut set = BenchSet::new("Table 2 — batch geometry closed forms vs sampled batches");
+    let ds = datasets::FLICKR;
+    let g = repro::scaled_instance(&ds, 42);
+    println!(
+        "instance: {} ({} vertices, {} edges, scale {})\n",
+        g.name,
+        g.num_vertices(),
+        g.num_edges(),
+        repro::sim_scale(&ds)
+    );
+
+    // ---- neighbor sampling: closed form is exact worst case; empirical
+    // batches must stay within it and near the dedup-capped estimate.
+    let ns = NeighborSampler::paper_default();
+    let worst = BatchGeometry::neighbor(1024, &[10, 25]);
+    let capped = BatchGeometry::neighbor_capped(1024, &[10, 25], g.num_vertices());
+    let mut rng = Pcg64::seed_from_u64(1);
+    let mut obs = vec![0usize; 3];
+    let mut obs_e = vec![0usize; 2];
+    const RUNS: usize = 5;
+    for _ in 0..RUNS {
+        let mb = ns.sample(&g, &mut rng);
+        for l in 0..3 {
+            obs[l] += mb.layers[l].len();
+        }
+        for l in 0..2 {
+            obs_e[l] += mb.edges[l].len();
+        }
+    }
+    println!("NS (|V^t|=1024, NS=[25,10]):");
+    for l in 0..3 {
+        let mean = obs[l] / RUNS;
+        println!(
+            "  |B^{l}|: worst-case {} | dedup-capped model {} | sampled mean {}",
+            worst.b[l], capped.b[l], mean
+        );
+        assert!(mean <= worst.b[l], "closed form violated at layer {l}");
+        set.row(&format!("NS |B^{l}| sampled/model"), mean as f64 / capped.b[l] as f64, "x");
+    }
+    for l in 0..2 {
+        let mean = obs_e[l] / RUNS;
+        println!(
+            "  |E^{}|: worst-case {} | sampled mean {}",
+            l + 1,
+            worst.e[l],
+            mean
+        );
+        assert!(mean <= worst.e[l]);
+    }
+
+    // ---- subgraph sampling: κ fitted from probes predicts edge counts.
+    let kappa_fit = KappaEstimator::fit(&g, &[500, 1000, 2000, 2750], 7);
+    let kappa_stats = KappaEstimator::from_stats(g.num_vertices(), g.num_edges());
+    // Measure with the same degree-capped sampler the κ fit probes with
+    // (the evaluation workloads' R-MAT hub correction — see
+    // sampler::subgraph::NodeProbability::DegreeCapped).
+    let mut ss = SubgraphSampler::paper_default();
+    ss.probability = hp_gnn::sampler::subgraph::NodeProbability::DegreeCapped(3.0);
+    let mut rng = Pcg64::seed_from_u64(2);
+    let mut edges = 0usize;
+    for _ in 0..RUNS {
+        edges += ss.sample(&g, &mut rng).edges[0].len();
+    }
+    let measured = edges as f64 / RUNS as f64;
+    let pred_fit = BatchGeometry::subgraph(2750, 2, &kappa_fit).e[0] as f64;
+    let pred_stats = BatchGeometry::subgraph(2750, 2, &kappa_stats).e[0] as f64;
+    println!("\nSS (SB=2750): |E^l| measured {measured:.0} | κ-fit {pred_fit:.0} | κ-stats {pred_stats:.0}");
+    set.row("SS |E| kappa-fit / measured", pred_fit / measured, "x");
+    set.row("SS |E| kappa-stats / measured", pred_stats / measured, "x");
+    assert!(
+        pred_fit / measured < 2.5 && measured / pred_fit < 2.5,
+        "fitted kappa off by >2.5x"
+    );
+
+    // ---- sampler wall-clock (the t_sampling the DSE engine sizes
+    // threads against).
+    let b = Bench::default();
+    let mut rng = Pcg64::seed_from_u64(3);
+    let m = b.run("NS sample one batch", || ns.sample(&g, &mut rng));
+    let v = BatchGeometry::neighbor_capped(1024, &[10, 25], g.num_vertices()).vertices_traversed();
+    set.push(m, Some((v as f64, "verts/batch")));
+    let mut rng = Pcg64::seed_from_u64(4);
+    let m = b.run("SS sample one batch", || ss.sample(&g, &mut rng));
+    set.push(m, Some((2750.0 * 3.0, "verts/batch")));
+
+    set.persist();
+    println!("\ntable2_sampling OK");
+}

@@ -1,0 +1,71 @@
+//! Table 6 — throughput improvement from the data-layout optimizations
+//! (RMT, RRA) on a two-layer NS-GCN, per dataset.
+//!
+//! Real sampled edge streams at the paper's sampler parameters are
+//! replayed through the cycle-level accelerator simulator under the three
+//! layout settings; the paper's measured NVTPS is printed alongside.
+//!
+//! Run: `cargo bench --offline --bench table6_ablation`
+
+use hp_gnn::graph::datasets;
+use hp_gnn::layout::LayoutOptions;
+use hp_gnn::repro::{self, paper, EvalSampler};
+use hp_gnn::sampler::values::GnnModel;
+use hp_gnn::util::bench::BenchSet;
+use hp_gnn::util::si;
+
+fn main() {
+    let mut set = BenchSet::new("Table 6 — RMT/RRA ablation (NS-GCN)");
+    let config = repro::table5_config(EvalSampler::Ns, GnnModel::Gcn);
+    const BATCHES: usize = 3;
+
+    println!(
+        "{:<4} {:>24} {:>24} {:>24} {:>12}",
+        "ds", "baseline (paper|ours)", "+RMT (paper|ours)", "+RMT+RRA (paper|ours)", "improv ours"
+    );
+    for (i, ds) in datasets::ALL.iter().enumerate() {
+        let g = repro::scaled_instance(ds, 100 + i as u64);
+        let run = |layout| {
+            repro::simulate_workload(
+                &g,
+                ds,
+                GnnModel::Gcn,
+                EvalSampler::Ns,
+                layout,
+                &config,
+                BATCHES,
+                7,
+            )
+            .nvtps
+        };
+        let base = run(LayoutOptions::none());
+        let rmt = run(LayoutOptions { rmt: true, rra: false });
+        let all = run(LayoutOptions::all());
+        let (key, pbase, prmt, pall) = paper::TABLE6[i];
+        assert_eq!(key, ds.key);
+        println!(
+            "{:<4} {:>24} {:>24} {:>24} {:>11.0}%",
+            ds.key,
+            format!("{} | {}", si(pbase), si(base)),
+            format!("{} | {}", si(prmt), si(rmt)),
+            format!("{} | {}", si(pall), si(all)),
+            (all / base - 1.0) * 100.0,
+        );
+        set.row(&format!("{} baseline", ds.key), base, "NVTPS");
+        set.row(&format!("{} +RMT", ds.key), rmt, "NVTPS");
+        set.row(&format!("{} +RMT+RRA", ds.key), all, "NVTPS");
+
+        // Shape assertions: each optimization helps, like the paper.
+        assert!(rmt > base, "{}: RMT did not help ({rmt:.3e} vs {base:.3e})", ds.key);
+        assert!(all >= rmt, "{}: RRA regressed ({all:.3e} vs {rmt:.3e})", ds.key);
+        let improv = all / base - 1.0;
+        assert!(
+            (0.03..3.0).contains(&improv),
+            "{}: combined improvement {improv:.2} out of plausible band (paper: 25-57%)",
+            ds.key
+        );
+    }
+    println!("\n(paper improvements: FL 57%, RD 43%, YP 25%, AP 26%)");
+    set.persist();
+    println!("table6_ablation OK");
+}

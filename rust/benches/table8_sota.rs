@@ -1,0 +1,85 @@
+//! Table 8 — comparison with state-of-the-art GNN training accelerators
+//! (GraphACT on a U250, Rubik ASIC) on SS-SAGE workloads.
+//!
+//! GraphACT and Rubik are modeled from the specs Table 8 publishes (see
+//! `baselines::sota` for the formulas and the §7 architectural arguments
+//! they encode); our number is the cycle-level simulation on real streams.
+//!
+//! Run: `cargo bench --offline --bench table8_sota`
+
+use hp_gnn::accel::Platform;
+use hp_gnn::baselines::sota;
+use hp_gnn::graph::datasets;
+use hp_gnn::layout::LayoutOptions;
+use hp_gnn::perf::{BatchGeometry, ModelShape};
+use hp_gnn::repro::{self, paper, EvalSampler};
+use hp_gnn::sampler::values::GnnModel;
+use hp_gnn::util::bench::BenchSet;
+use hp_gnn::util::si;
+
+fn main() {
+    let mut set = BenchSet::new("Table 8 — vs GraphACT and Rubik (SS-SAGE)");
+    let platform = Platform::alveo_u250();
+
+    println!(
+        "{:<4} {:>22} {:>22} {:>22} {:>10}",
+        "ds", "GraphACT (paper|ours)", "Rubik (paper|ours)", "this work (paper|ours)", "speedup"
+    );
+    for (i, &(key, p_ga, p_ru, p_ours)) in paper::TABLE8.iter().enumerate() {
+        let ds = datasets::by_key(key).unwrap();
+        let g = repro::scaled_instance(&ds, 300 + i as u64);
+        let kappa = repro::fitted_kappa_fullscale(&g, &ds);
+        let geom = BatchGeometry::subgraph(2750, 2, &kappa);
+        let shape = ModelShape { feat: vec![ds.f0, 256, ds.f2], sage_concat: true };
+
+        let ga = sota::graphact_nvtps(&platform, &geom, &shape);
+        let ru = sota::rubik_nvtps(&geom, &shape);
+        let ours = repro::simulate_workload(
+            &g,
+            &ds,
+            GnnModel::Sage,
+            EvalSampler::Ss,
+            LayoutOptions::all(),
+            &repro::table5_config(EvalSampler::Ss, GnnModel::Sage),
+            3,
+            13,
+        )
+        .nvtps;
+
+        println!(
+            "{:<4} {:>22} {:>22} {:>22} {:>9.2}x",
+            key,
+            format!("{} | {}", si(p_ga), si(ga)),
+            match p_ru {
+                Some(p) => format!("{} | {}", si(p), si(ru)),
+                None => format!("N/A | {}", si(ru)),
+            },
+            format!("{} | {}", si(p_ours), si(ours)),
+            ours / ga,
+        );
+        set.row(&format!("{key} graphact"), ga, "NVTPS");
+        set.row(&format!("{key} rubik"), ru, "NVTPS");
+        set.row(&format!("{key} ours"), ours, "NVTPS");
+
+        // Shape: ours > rubik > graphact (paper's ordering on RD),
+        // and the speedup over GraphACT is the headline comparison.
+        assert!(ours > ga, "{key}: must beat GraphACT ({ours:.3e} vs {ga:.3e})");
+        assert!(ours > ru, "{key}: must beat Rubik ({ours:.3e} vs {ru:.3e})");
+        if p_ru.is_some() {
+            assert!(ru > ga, "{key}: Rubik should beat GraphACT like the paper");
+        }
+        let speedup = ours / ga;
+        // RD (dense, the paper's headline row) must land near the paper's
+        // 4.45x; YP's synthetic instance under-densifies (avg degree 9.7 at
+        // 0.38% sampling fraction), compressing the gap, so only the
+        // ordering is asserted there.
+        let band = if key == "RD" { 2.0..12.0 } else { 1.02..12.0 };
+        assert!(
+            band.contains(&speedup),
+            "{key}: speedup {speedup:.2} outside band {band:?}"
+        );
+    }
+    println!("\n(paper: 4.45x over GraphACT on RD, 3.61x on YP; 3.4x over Rubik)");
+    set.persist();
+    println!("table8_sota OK");
+}

@@ -1,0 +1,470 @@
+//! Whole-accelerator composition: multi-die sharding (Fig. 7), per-layer
+//! aggregate/update pipeline (Eq. 6–9), and the full training-iteration
+//! timing `t_GNN = t_FP + t_LC + t_BP + t_WU` (Eq. 5).
+//!
+//! This is the *timing twin* of the AOT-compiled HLO executable: it replays
+//! the exact edge streams of a sampled (and layout-processed) mini-batch
+//! through the kernel simulators and reports where the cycles go.  The
+//! functional results come from PJRT; nothing here touches feature values.
+
+use super::aggregate::{AggregateReport, AggregateSim};
+use super::memory::{MemoryLedger, Pattern, Traffic};
+use super::platform::Platform;
+use super::update::{UpdateReport, UpdateSim};
+use crate::layout::IndexedBatch;
+
+/// Accelerator configuration chosen by the DSE engine (per die).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AccelConfig {
+    /// Scatter/Gather PE pairs per die (power of two).
+    pub n: usize,
+    /// MAC units per die (square of a power of two).
+    pub m: usize,
+}
+
+impl AccelConfig {
+    /// The configuration the paper's DSE selects for most workloads
+    /// (Table 5).
+    pub fn paper_default() -> Self {
+        AccelConfig { n: 4, m: 256 }
+    }
+}
+
+/// Timing of one GNN layer on the accelerator.
+#[derive(Debug, Clone, Default)]
+pub struct LayerTiming {
+    /// Feature/gradient load time (slowest die), seconds.
+    pub t_load: f64,
+    /// Aggregate compute time (slowest die), seconds.
+    pub t_compute: f64,
+    /// max(t_load, t_compute) — Eq. 7.
+    pub t_aggregate: f64,
+    /// Update kernel time incl. result write-back (slowest die), seconds.
+    pub t_update: f64,
+    /// Per-die kernel reports (diagnostics for the perf pass).
+    pub agg_reports: Vec<AggregateReport>,
+    pub upd_reports: Vec<UpdateReport>,
+    /// Total DDR bytes moved for this layer.
+    pub ddr_bytes: f64,
+}
+
+impl LayerTiming {
+    /// Pipelined layer time: aggregation and update overlap (Eq. 6).
+    pub fn time(&self) -> f64 {
+        self.t_aggregate.max(self.t_update)
+    }
+}
+
+/// Full training-iteration timing (Eq. 5/6).
+#[derive(Debug, Clone, Default)]
+pub struct GnnTiming {
+    pub fp_layers: Vec<LayerTiming>,
+    pub bp_layers: Vec<LayerTiming>,
+    pub t_fp: f64,
+    pub t_bp: f64,
+    /// Host-side loss calculation / weight update.
+    pub t_lc: f64,
+    pub t_wu: f64,
+    pub t_gnn: f64,
+}
+
+impl GnnTiming {
+    /// Paper Eq. 4 with sampling overlapped (Eq. 5).
+    pub fn nvtps(&self, vertices_traversed: usize, t_sampling: f64) -> f64 {
+        vertices_traversed as f64 / self.t_gnn.max(t_sampling)
+    }
+
+    pub fn total_ddr_bytes(&self) -> f64 {
+        self.fp_layers.iter().chain(&self.bp_layers).map(|l| l.ddr_bytes).sum()
+    }
+}
+
+/// Where the input feature matrix X lives (paper §3.1 / Table 1
+/// `DistributeData()`): in FPGA-local DDR for graphs that fit, or in host
+/// memory with per-batch streaming for very large graphs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FeaturePlacement {
+    #[default]
+    FpgaLocal,
+    /// "we store the vertex features in host memory and transfer the
+    /// vertex features of the mini-batch to the FPGA accelerator after
+    /// sampling" — layer-1 loads cross PCIe.
+    HostStreamed,
+}
+
+/// Simulation knobs beyond the DSE variables.
+#[derive(Debug, Clone, Copy)]
+pub struct SimOptions {
+    /// Feature lanes per scatter PE per cycle (paper's 16).
+    pub lanes: usize,
+    /// Gather accumulator pipeline depth (RAW window).
+    pub raw_depth: u64,
+    /// GraphSAGE concat doubles the update kernel's fan-in.
+    pub sage_concat: bool,
+    /// Input feature placement (DistributeData outcome).
+    pub placement: FeaturePlacement,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions {
+            lanes: 16,
+            raw_depth: 4,
+            sage_concat: false,
+            placement: FeaturePlacement::FpgaLocal,
+        }
+    }
+}
+
+/// Simulate one mini-batch iteration.  `feat[l]` are the layer feature
+/// dims (`feat[0]` input, `feat[L]` classes), matching the geometry.
+pub fn simulate_batch(
+    platform: &Platform,
+    config: &AccelConfig,
+    batch: &IndexedBatch,
+    feat: &[usize],
+    opts: SimOptions,
+) -> GnnTiming {
+    let ll = batch.num_layers();
+    assert_eq!(feat.len(), ll + 1, "need L+1 feature dims");
+
+    let mut timing = GnnTiming::default();
+    for l in 1..=ll {
+        timing.fp_layers.push(simulate_layer(platform, config, batch, feat, l, false, opts));
+        timing.bp_layers.push(simulate_layer(platform, config, batch, feat, l, true, opts));
+    }
+
+    // Eq. 6: FP sums pipelined layers; BP's first layer needs only the
+    // weight-gradient update (no gradient aggregation below layer 1).
+    timing.t_fp = timing.fp_layers.iter().map(|t| t.time()).sum();
+    timing.t_bp = timing.bp_layers[0].t_update
+        + timing.bp_layers[1..].iter().map(|t| t.time()).sum::<f64>();
+
+    // Host-side stages: loss on |B^L| logits, SGD on the weights.
+    let host = &platform.host;
+    let targets = batch.layers[ll].len() as f64;
+    let classes = feat[ll] as f64;
+    let lc_flops = targets * classes * 8.0; // softmax + CE + grad seed
+    timing.t_lc = lc_flops / (0.1 * host.peak_gflops * 1e9)
+        + targets * classes * 4.0 / (host.mem_bw_gbps * 1e9);
+    let weight_params: f64 = (1..=ll)
+        .map(|l| {
+            let fin = if opts.sage_concat { 2 * feat[l - 1] } else { feat[l - 1] };
+            (fin * feat[l] + feat[l]) as f64
+        })
+        .sum();
+    timing.t_wu = weight_params * 2.0 / (0.1 * host.peak_gflops * 1e9)
+        + weight_params * 12.0 / (host.mem_bw_gbps * 1e9); // read w,g; write w
+    timing.t_gnn = timing.t_fp + timing.t_lc + timing.t_bp + timing.t_wu;
+    timing
+}
+
+/// Simulate one layer over all dies; `backward` transposes the edge
+/// streams (gradients flow dst -> src), reusing the same kernels exactly
+/// as the paper's reverse-direction schedule.
+fn simulate_layer(
+    platform: &Platform,
+    config: &AccelConfig,
+    batch: &IndexedBatch,
+    feat: &[usize],
+    l: usize,
+    backward: bool,
+    opts: SimOptions,
+) -> LayerTiming {
+    let layer = &batch.layer_edges[l - 1];
+    let dies = platform.dies.max(1);
+    let agg_sim = AggregateSim { n: config.n, lanes: opts.lanes, raw_depth: opts.raw_depth };
+    let upd_sim = UpdateSim { m: config.m };
+
+    // Feature width moved by aggregation: h^{l-1} forward, dL/dh^l backward.
+    let f_agg = if backward { feat[l] } else { feat[l - 1] };
+    // Update kernel dims (SAGE concat doubles forward fan-in).
+    let (rows_layer, f_in_upd, f_out_upd) = if backward {
+        (batch.layers[l].len(), feat[l], feat[l - 1])
+    } else {
+        let fin = if opts.sage_concat { 2 * feat[l - 1] } else { feat[l - 1] };
+        (batch.layers[l].len(), fin, feat[l])
+    };
+
+    // Which side of the stream is "destination" for sharding: forward
+    // shards by layer-l vertices, backward by layer-(l-1) vertices.
+    let (route_key, addr_stream): (Vec<u32>, Vec<u32>) = if backward {
+        // Gradient aggregation: sources are layer-l rows (accelerator-
+        // written, positional addresses), destinations layer-(l-1) rows.
+        // The host program prepares a *transposed* layout for the backward
+        // direction when RMT is on (re-sorted by the gradient source, the
+        // backward analog of sort-by-source); replaying the forward-sorted
+        // stream backward would serialize the gather banks.
+        if batch.opts.rmt {
+            let mut order: Vec<usize> = (0..layer.src.len()).collect();
+            order.sort_by_key(|&i| (layer.dst[i], layer.src[i]));
+            (
+                order.iter().map(|&i| layer.src[i]).collect(),
+                order.iter().map(|&i| layer.dst[i]).collect(),
+            )
+        } else {
+            (layer.src.clone(), layer.dst.clone())
+        }
+    } else {
+        let addrs: Vec<u32> = if batch.opts.rra {
+            layer.src.clone() // renamed: storage-order addresses
+        } else {
+            // Un-renamed: the duplicator chases global vertex ids.
+            layer.src.iter().map(|&p| batch.layers[l - 1][p as usize]).collect()
+        };
+        (layer.dst.clone(), addrs)
+    };
+    let out_count = if backward { batch.layers[l - 1].len() } else { batch.layers[l].len() };
+
+    // Fig. 7 task partitioning: output vertices evenly over dies; each
+    // die's kernels consume the sub-stream routed to its vertex range.
+    let part = crate::graph::partition::ChannelPartition::even(out_count.max(1), dies);
+    let mut t_load: f64 = 0.0;
+    let mut t_compute: f64 = 0.0;
+    let mut t_update: f64 = 0.0;
+    let mut ddr_bytes = 0.0;
+    let mut agg_reports = Vec::with_capacity(dies);
+    let mut upd_reports = Vec::with_capacity(dies);
+
+    for die in 0..dies {
+        let lo = part.bounds[die] as u32;
+        let hi = part.bounds[die + 1] as u32;
+        // Sub-stream for this die (order preserved — RMT/RRA sortedness
+        // survives filtering).
+        let mut src_d = Vec::new();
+        let mut dst_d = Vec::new();
+        for i in 0..route_key.len() {
+            let key = route_key[i];
+            if key >= lo && key < hi {
+                src_d.push(addr_stream[i]);
+                dst_d.push(key - lo); // bank-local row
+            }
+        }
+        let rep = agg_sim.run(&src_d, &dst_d, f_agg);
+
+        // Memory pattern: layer-1 forward loads hit the input feature
+        // matrix X (DDR rows in global-id order -> random regardless of
+        // sort, paper §5.1); hidden layers / gradients read accelerator-
+        // written buffers, sequential iff RMT+RRA put the stream in
+        // storage order.
+        let sequential = if !backward && l == 1 {
+            false
+        } else {
+            batch.opts.rmt && batch.opts.rra
+        };
+        let load_t = if !backward && l == 1 && opts.placement == FeaturePlacement::HostStreamed {
+            // Host-streamed features: the host gathers the mini-batch's
+            // rows and streams them over PCIe (sequential on the link,
+            // one transfer per batch — paper §3.1's very-large-graph
+            // mode).  The link is shared by all dies.
+            rep.load_bytes * dies as f64 / (platform.pcie_gbps * 1e9)
+        } else {
+            let mut ledger = MemoryLedger::new();
+            ledger.record(Traffic {
+                label: "agg-load",
+                bytes: rep.load_bytes,
+                pattern: if sequential { Pattern::Sequential } else { Pattern::Random },
+                access_bytes: f_agg as f64 * 4.0,
+                remote_fraction: 1.0 - 1.0 / dies as f64,
+            });
+            ledger.transfer_time(platform)
+        };
+
+        // Update kernel on this die's row share.
+        let rows_d = (hi - lo) as usize * rows_layer / out_count.max(1);
+        let urep = upd_sim.run(rows_d, f_in_upd, f_out_upd);
+        let mut wledger = MemoryLedger::new();
+        wledger.record(Traffic {
+            label: "upd-writeback",
+            bytes: urep.result_bytes,
+            pattern: Pattern::Sequential,
+            access_bytes: f_out_upd as f64 * 4.0,
+            remote_fraction: 0.0,
+        });
+        let write_t = wledger.transfer_time(platform);
+
+        t_load = t_load.max(load_t);
+        t_compute = t_compute.max(rep.cycles as f64 / platform.freq_hz);
+        t_update = t_update.max((urep.cycles as f64 / platform.freq_hz).max(write_t));
+        ddr_bytes += rep.load_bytes + urep.result_bytes;
+        agg_reports.push(rep);
+        upd_reports.push(urep);
+    }
+
+    LayerTiming {
+        t_load,
+        t_compute,
+        t_aggregate: t_load.max(t_compute),
+        t_update,
+        agg_reports,
+        upd_reports,
+        ddr_bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::layout::{index_batch, LayoutOptions};
+    use crate::sampler::neighbor::NeighborSampler;
+    use crate::sampler::values::{attach_values, GnnModel};
+    use crate::sampler::Sampler;
+    use crate::util::rng::Pcg64;
+
+    fn batch(opts: LayoutOptions) -> IndexedBatch {
+        let g = generator::with_min_degree(
+            generator::rmat(2000, 30_000, Default::default(), 21),
+            2,
+            22,
+        );
+        let s = NeighborSampler::new(64, vec![10, 25]);
+        let mb = s.sample(&g, &mut Pcg64::seed_from_u64(23));
+        let vals = attach_values(&g, &mb, GnnModel::Gcn);
+        index_batch(&mb, &vals, opts)
+    }
+
+    fn sim(opts: LayoutOptions) -> (GnnTiming, usize) {
+        let b = batch(opts);
+        let verts = b.vertices_traversed();
+        let t = simulate_batch(
+            &Platform::alveo_u250(),
+            &AccelConfig::paper_default(),
+            &b,
+            &[500, 256, 7],
+            SimOptions::default(),
+        );
+        (t, verts)
+    }
+
+    #[test]
+    fn timing_components_positive_and_composed() {
+        let (t, _) = sim(LayoutOptions::all());
+        assert_eq!(t.fp_layers.len(), 2);
+        assert!(t.t_fp > 0.0 && t.t_bp > 0.0 && t.t_lc > 0.0 && t.t_wu > 0.0);
+        let want = t.t_fp + t.t_lc + t.t_bp + t.t_wu;
+        assert!((t.t_gnn - want).abs() < 1e-12);
+        // FP layer time is the max of its two pipelined stages.
+        for l in &t.fp_layers {
+            assert!((l.time() - l.t_aggregate.max(l.t_update)).abs() < 1e-15);
+            assert!((l.t_aggregate - l.t_load.max(l.t_compute)).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn rmt_reduces_ddr_traffic() {
+        let (base, _) = sim(LayoutOptions::none());
+        let (rmt, _) = sim(LayoutOptions { rmt: true, rra: false });
+        assert!(
+            rmt.total_ddr_bytes() < base.total_ddr_bytes(),
+            "rmt {} vs base {}",
+            rmt.total_ddr_bytes(),
+            base.total_ddr_bytes()
+        );
+    }
+
+    #[test]
+    fn rra_improves_or_preserves_throughput_over_rmt() {
+        let (rmt, v) = sim(LayoutOptions { rmt: true, rra: false });
+        let (all, _) = sim(LayoutOptions::all());
+        let n_rmt = rmt.nvtps(v, 0.0);
+        let n_all = all.nvtps(v, 0.0);
+        assert!(n_all >= n_rmt * 0.99, "rmt+rra {n_all} vs rmt {n_rmt}");
+    }
+
+    #[test]
+    fn optimizations_increase_nvtps_monotonically() {
+        let (base, v) = sim(LayoutOptions::none());
+        let (all, _) = sim(LayoutOptions::all());
+        assert!(all.nvtps(v, 0.0) > base.nvtps(v, 0.0));
+    }
+
+    #[test]
+    fn sampling_bottleneck_caps_throughput() {
+        let (t, v) = sim(LayoutOptions::all());
+        let free = t.nvtps(v, 0.0);
+        let capped = t.nvtps(v, t.t_gnn * 10.0);
+        assert!((capped - free / 10.0).abs() / free < 1e-9);
+    }
+
+    #[test]
+    fn sage_concat_slows_update() {
+        let b = batch(LayoutOptions::all());
+        let p = Platform::alveo_u250();
+        let c = AccelConfig::paper_default();
+        let gcn = simulate_batch(&p, &c, &b, &[500, 256, 7], SimOptions::default());
+        let sage = simulate_batch(
+            &p,
+            &c,
+            &b,
+            &[500, 256, 7],
+            SimOptions { sage_concat: true, ..Default::default() },
+        );
+        let gu: f64 = gcn.fp_layers.iter().map(|l| l.t_update).sum();
+        let su: f64 = sage.fp_layers.iter().map(|l| l.t_update).sum();
+        assert!(su > gu * 1.5, "sage {su} vs gcn {gu}");
+    }
+
+    #[test]
+    fn bigger_config_is_not_slower() {
+        let b = batch(LayoutOptions::all());
+        let p = Platform::alveo_u250();
+        let small = simulate_batch(
+            &p,
+            &AccelConfig { n: 2, m: 64 },
+            &b,
+            &[500, 256, 7],
+            SimOptions::default(),
+        );
+        let big = simulate_batch(
+            &p,
+            &AccelConfig { n: 16, m: 1024 },
+            &b,
+            &[500, 256, 7],
+            SimOptions::default(),
+        );
+        assert!(big.t_gnn <= small.t_gnn);
+    }
+}
+
+#[cfg(test)]
+mod placement_tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::layout::{index_batch, LayoutOptions};
+    use crate::sampler::values::{attach_values, GnnModel};
+    use crate::sampler::{neighbor::NeighborSampler, Sampler};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn host_streamed_layer1_is_slower() {
+        let g = generator::with_min_degree(
+            generator::rmat(2000, 24_000, Default::default(), 61),
+            1,
+            62,
+        );
+        let mb = NeighborSampler::new(64, vec![10, 25]).sample(&g, &mut Pcg64::seed_from_u64(63));
+        let vals = attach_values(&g, &mb, GnnModel::Gcn);
+        let ib = index_batch(&mb, &vals, LayoutOptions::all());
+        let p = Platform::alveo_u250();
+        let c = AccelConfig::paper_default();
+        let local = simulate_batch(&p, &c, &ib, &[500, 256, 7], SimOptions::default());
+        let streamed = simulate_batch(
+            &p,
+            &c,
+            &ib,
+            &[500, 256, 7],
+            SimOptions { placement: FeaturePlacement::HostStreamed, ..Default::default() },
+        );
+        // Layer-1 forward load crosses 12 GB/s PCIe instead of 77 GB/s DDR.
+        assert!(
+            streamed.fp_layers[0].t_load > local.fp_layers[0].t_load * 2.0,
+            "streamed {} vs local {}",
+            streamed.fp_layers[0].t_load,
+            local.fp_layers[0].t_load
+        );
+        // Hidden layers unaffected (accelerator-produced buffers).
+        assert!((streamed.fp_layers[1].t_load - local.fp_layers[1].t_load).abs() < 1e-12);
+        assert!(streamed.t_gnn >= local.t_gnn);
+    }
+}

@@ -1,0 +1,134 @@
+//! DDR memory-system model: traffic accounting and transfer-time
+//! estimation under the burst/row-activation behaviour profiled by
+//! Lu et al. [21] (the paper's source for α, Eq. 8).
+
+use super::platform::Platform;
+
+/// Access pattern of a traffic stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pattern {
+    /// Streaming reads/writes — bursts amortize row activation (α ≈ 1).
+    Sequential,
+    /// Scattered row-granular accesses — α from access size vs penalty.
+    Random,
+}
+
+/// One accounted traffic stream.
+#[derive(Debug, Clone)]
+pub struct Traffic {
+    pub label: &'static str,
+    pub bytes: f64,
+    pub pattern: Pattern,
+    /// Granularity of each access (feature-vector bytes for loads).
+    pub access_bytes: f64,
+    /// Fraction served by a remote DDR channel through the inter-die
+    /// interconnect (Fig. 7), paying `cross_channel_efficiency`.
+    pub remote_fraction: f64,
+}
+
+/// Per-channel memory model: accumulates streams, reports transfer time.
+#[derive(Debug, Clone, Default)]
+pub struct MemoryLedger {
+    pub streams: Vec<Traffic>,
+}
+
+impl MemoryLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, t: Traffic) {
+        self.streams.push(t);
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.streams.iter().map(|s| s.bytes).sum()
+    }
+
+    /// Transfer time over one DDR channel of `platform` (seconds).
+    pub fn transfer_time(&self, platform: &Platform) -> f64 {
+        let bw = platform.bw_per_channel_gbps * 1e9;
+        self.streams
+            .iter()
+            .map(|s| {
+                let alpha = platform.alpha(s.access_bytes, s.pattern == Pattern::Sequential);
+                let local = s.bytes * (1.0 - s.remote_fraction);
+                let remote = s.bytes * s.remote_fraction;
+                (local + remote / platform.cross_channel_efficiency) / (bw * alpha)
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> Platform {
+        Platform::alveo_u250()
+    }
+
+    #[test]
+    fn sequential_beats_random_for_same_bytes() {
+        let mk = |pattern| {
+            let mut m = MemoryLedger::new();
+            m.record(Traffic {
+                label: "x",
+                bytes: 1e9,
+                pattern,
+                access_bytes: 256.0,
+                remote_fraction: 0.0,
+            });
+            m.transfer_time(&p())
+        };
+        assert!(mk(Pattern::Sequential) < mk(Pattern::Random) * 0.5);
+    }
+
+    #[test]
+    fn sequential_time_matches_bandwidth() {
+        let mut m = MemoryLedger::new();
+        m.record(Traffic {
+            label: "stream",
+            bytes: 19.25e9,
+            pattern: Pattern::Sequential,
+            access_bytes: 4096.0,
+            remote_fraction: 0.0,
+        });
+        let t = m.transfer_time(&p());
+        // One channel: 19.25 GB at 19.25 GB/s * 0.95 α ≈ 1.053 s.
+        assert!((t - 1.0 / 0.95).abs() < 0.01, "{t}");
+    }
+
+    #[test]
+    fn remote_traffic_costs_more() {
+        let mk = |remote| {
+            let mut m = MemoryLedger::new();
+            m.record(Traffic {
+                label: "x",
+                bytes: 1e9,
+                pattern: Pattern::Sequential,
+                access_bytes: 2048.0,
+                remote_fraction: remote,
+            });
+            m.transfer_time(&p())
+        };
+        assert!(mk(1.0) > mk(0.0) * 1.2);
+        assert!(mk(0.5) > mk(0.0) && mk(0.5) < mk(1.0));
+    }
+
+    #[test]
+    fn streams_accumulate() {
+        let mut m = MemoryLedger::new();
+        for _ in 0..3 {
+            m.record(Traffic {
+                label: "x",
+                bytes: 100.0,
+                pattern: Pattern::Random,
+                access_bytes: 100.0,
+                remote_fraction: 0.0,
+            });
+        }
+        assert_eq!(m.total_bytes(), 300.0);
+        assert_eq!(m.streams.len(), 3);
+    }
+}

@@ -1,0 +1,23 @@
+//! Cycle-approximate simulator of the paper's FPGA accelerator.
+//!
+//! We have no Alveo U250, so the timing side of every experiment runs
+//! through this simulator (the substitution is documented in DESIGN.md §2;
+//! functional results run through the PJRT executable instead).  The
+//! microarchitecture follows Section 4 of the paper:
+//!
+//! * [`aggregate`] — Fig. 5: scatter PEs, butterfly routing, RAW resolver,
+//!   gather banks, feature-duplicator run-length reuse.
+//! * [`update`] — Fig. 6: systolic MAC array with on-chip Weight Buffer.
+//! * [`memory`] — DDR4 burst/row-activation model behind Eq. 8's α.
+//! * [`device`] — Fig. 7: multi-die replication, per-layer pipelining
+//!   (Eq. 6/7), host-side loss + weight-update stages (Eq. 5).
+//! * [`platform`] — Table 3 / Listing 2 board descriptions.
+
+pub mod aggregate;
+pub mod device;
+pub mod memory;
+pub mod platform;
+pub mod update;
+
+pub use device::{simulate_batch, AccelConfig, GnnTiming, LayerTiming, SimOptions};
+pub use platform::Platform;

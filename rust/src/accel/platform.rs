@@ -1,0 +1,150 @@
+//! Target platform descriptions (paper Table 3 and Listing 2).
+//!
+//! `PlatformParameters(board='xilinx-U250')` in the paper's API resolves to
+//! [`ALVEO_U250`]; custom boards are constructed field-by-field exactly as
+//! Listing 2 shows (`SLR=4, DSP=3072, LUT=423000, URAM=320, BW=19.25`).
+
+/// A CPU-FPGA platform: per-die FPGA resources + DDR memory system + the
+/// host CPU the sampler and loss/weight-update stages run on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Platform {
+    pub name: String,
+    /// Super-logic regions (dies); kernels are replicated per die (Fig. 7).
+    pub dies: usize,
+    /// Resources *per die*.
+    pub dsp_per_die: usize,
+    pub lut_per_die: usize,
+    pub uram_per_die: usize,
+    pub bram_per_die: usize,
+    /// One DDR channel per die (paper §5.3 assumption), GB/s each.
+    pub bw_per_channel_gbps: f64,
+    /// FPGA-local DDR capacity in bytes (U250: 64 GB; the paper cites
+    /// boards up to 260 GB).  `DistributeData()` compares the feature
+    /// matrix against this to choose placement.
+    pub ddr_bytes: usize,
+    /// Host link for host-streamed features (PCIe 3.0 x16 effective).
+    pub pcie_gbps: f64,
+    /// Kernel clock.
+    pub freq_hz: f64,
+    /// DDR4 burst transaction length in bytes (Lu et al. [21]).
+    pub burst_bytes: usize,
+    /// Extra bytes-equivalent cost of a random row activation ([21]'s
+    /// profiled effective-bandwidth ratios reduce to this overhead).
+    pub random_penalty_bytes: f64,
+    /// Efficiency of the inter-die / cross-channel interconnect (Fig. 7's
+    /// vendor-generated all-to-all network).
+    pub cross_channel_efficiency: f64,
+    /// Host CPU for sampling, loss calculation and weight update.
+    pub host: HostCpu,
+}
+
+/// Host processor description (paper Table 3, AMD Ryzen 3990x column).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HostCpu {
+    pub cores: usize,
+    pub freq_hz: f64,
+    pub peak_gflops: f64,
+    pub mem_bw_gbps: f64,
+}
+
+impl Platform {
+    /// Xilinx Alveo U250 hosted by a 64-core AMD Ryzen 3990x — the paper's
+    /// evaluation platform.
+    pub fn alveo_u250() -> Platform {
+        Platform {
+            name: "xilinx-U250".into(),
+            dies: 4,
+            // Listing 2: per-SLR budget exposed to the DSE engine.
+            dsp_per_die: 3072,
+            lut_per_die: 423_000,
+            uram_per_die: 320,
+            bram_per_die: 672,
+            bw_per_channel_gbps: 19.25, // 77 GB/s over 4 channels
+            ddr_bytes: 64 * (1usize << 30),
+            pcie_gbps: 12.0,
+            freq_hz: 300e6,
+            burst_bytes: 64,
+            // DDR4 tRC ≈ 45 ns at 19.25 GB/s ≈ 866 bytes of lost transfer
+            // per random row activation.
+            random_penalty_bytes: 866.0,
+            cross_channel_efficiency: 0.8,
+            host: HostCpu {
+                cores: 64,
+                freq_hz: 2.9e9,
+                peak_gflops: 3700.0,
+                mem_bw_gbps: 107.0,
+            },
+        }
+    }
+
+    /// Aggregate DDR bandwidth (GB/s).
+    pub fn total_bw_gbps(&self) -> f64 {
+        self.bw_per_channel_gbps * self.dies as f64
+    }
+
+    /// Effective-bandwidth ratio α for accesses of `bytes` at a time
+    /// (paper Eq. 8's α, derived from [21]'s burst profiling).
+    pub fn alpha(&self, bytes: f64, sequential: bool) -> f64 {
+        if sequential {
+            0.95 // near-1 for streaming reads (paper §5.1)
+        } else {
+            (bytes / (bytes + self.random_penalty_bytes)).max(0.01)
+        }
+    }
+
+    /// On-chip memory per die in bytes (URAM 288Kb + BRAM 36Kb blocks).
+    pub fn onchip_bytes_per_die(&self) -> usize {
+        self.uram_per_die * (288 * 1024 / 8) + self.bram_per_die * (36 * 1024 / 8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u250_matches_paper_listing2() {
+        let p = Platform::alveo_u250();
+        assert_eq!(p.dies, 4);
+        assert_eq!(p.dsp_per_die, 3072);
+        assert_eq!(p.lut_per_die, 423_000);
+        assert_eq!(p.uram_per_die, 320);
+        assert!((p.bw_per_channel_gbps - 19.25).abs() < 1e-9);
+        assert!((p.total_bw_gbps() - 77.0).abs() < 1e-9);
+        assert_eq!(p.freq_hz, 300e6);
+    }
+
+    #[test]
+    fn alpha_sequential_near_one() {
+        let p = Platform::alveo_u250();
+        assert!(p.alpha(2048.0, true) > 0.9);
+    }
+
+    #[test]
+    fn alpha_random_grows_with_access_size() {
+        let p = Platform::alveo_u250();
+        let small = p.alpha(64.0, false);
+        let mid = p.alpha(1024.0, false);
+        let big = p.alpha(8192.0, false);
+        assert!(small < mid && mid < big);
+        assert!(small > 0.0 && big < 1.0);
+        // 500-float Flickr feature: ~2000 B -> α ≈ 0.7 (order of [21]).
+        let fl = p.alpha(2000.0, false);
+        assert!((0.5..0.85).contains(&fl), "{fl}");
+    }
+
+    #[test]
+    fn onchip_memory_is_tens_of_mb() {
+        // Paper Table 3 lists 54 MB on-chip for the U250 (whole board).
+        let p = Platform::alveo_u250();
+        let total = p.onchip_bytes_per_die() * p.dies;
+        assert!((40_000_000..70_000_000).contains(&total), "{total}");
+    }
+
+    #[test]
+    fn host_is_3990x_class() {
+        let h = Platform::alveo_u250().host;
+        assert_eq!(h.cores, 64);
+        assert!((h.peak_gflops - 3700.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Cycle-approximate simulation of the update kernel (paper Fig. 6).
+//!
+//! A systolic MAC array of `m` multiply-accumulate units (the paper
+//! restricts `m` to squares of powers of two, i.e. a `sqrt(m) × sqrt(m)`
+//! array) performs the blocked matmul `h = σ(a W + b)`:
+//!
+//! * W^l stays pinned in the on-chip Weight Buffer (loaded once per layer,
+//!   no DDR traffic during the batch);
+//! * `a^l` rows stream through the array; each (row-block, col-block) tile
+//!   needs `fill + rows` cycles — fill/drain is the systolic skew;
+//! * the elementwise σ is fused behind the array (no extra cycles);
+//! * results go to the Result Buffer and then back to DDR (accounted by
+//!   the caller's memory ledger as a sequential write).
+
+/// Update kernel configuration (per die).
+#[derive(Debug, Clone, Copy)]
+pub struct UpdateSim {
+    /// Total MAC units (DSE variable `m`, square of a power of two).
+    pub m: usize,
+}
+
+/// DSP double-pumping factor: the DSP48 column runs at twice the 300 MHz
+/// kernel clock (standard Vitis technique), so each MAC retires two
+/// multiply-accumulates per kernel cycle.  Reported `cycles` are kernel
+/// cycles.
+pub const DSP_PUMP: u64 = 2;
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct UpdateReport {
+    /// Total kernel-clock cycles including systolic fill/drain.
+    pub cycles: u64,
+    /// Ideal cycles = rows · f_in · f_out / m.
+    pub ideal_cycles: u64,
+    /// Bytes of weights held in the on-chip Weight Buffer.
+    pub weight_bytes: usize,
+    /// Result bytes written back to DDR.
+    pub result_bytes: f64,
+}
+
+impl UpdateSim {
+    /// Side length of the MAC array.
+    pub fn array_dim(&self) -> usize {
+        let dim = (self.m as f64).sqrt().round() as usize;
+        assert_eq!(dim * dim, self.m, "m={} must be a perfect square", self.m);
+        dim
+    }
+
+    /// Simulate `rows × f_in @ f_in × f_out`.
+    pub fn run(&self, rows: usize, f_in: usize, f_out: usize) -> UpdateReport {
+        let dim = self.array_dim();
+        let ops = rows as u64 * f_in as u64 * f_out as u64;
+        let ideal = ops.div_ceil(self.m as u64 * DSP_PUMP);
+        if rows == 0 || f_in == 0 || f_out == 0 {
+            return UpdateReport {
+                cycles: 0,
+                ideal_cycles: 0,
+                weight_bytes: f_in * f_out * 4,
+                result_bytes: 0.0,
+            };
+        }
+        // Tile the weight over the array: each tile covers `dim` of f_in
+        // and `dim` of f_out; rows stream through each tile pair.
+        let k_tiles = f_in.div_ceil(dim) as u64;
+        let n_tiles = f_out.div_ceil(dim) as u64;
+        let fill = 2 * dim as u64; // systolic fill + drain skew per tile
+        let cycles = n_tiles * k_tiles * (rows as u64 + fill) / DSP_PUMP;
+        UpdateReport {
+            cycles,
+            ideal_cycles: ideal,
+            weight_bytes: f_in * f_out * 4,
+            result_bytes: rows as f64 * f_out as f64 * 4.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_matches_paper_formula() {
+        // Paper Eq. 9: t_update = B f^l f^{l+1} / (m freq).
+        let sim = UpdateSim { m: 256 };
+        let r = sim.run(1024, 256, 256);
+        assert_eq!(r.ideal_cycles, 1024 * 256 * 256 / 256 / DSP_PUMP);
+        // Fill/drain overhead stays small for tall inputs (< 15%).
+        assert!((r.cycles as f64) < r.ideal_cycles as f64 * 1.15);
+    }
+
+    #[test]
+    fn array_dim_requires_square() {
+        assert_eq!(UpdateSim { m: 256 }.array_dim(), 16);
+        assert_eq!(UpdateSim { m: 1024 }.array_dim(), 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "perfect square")]
+    fn non_square_m_rejected() {
+        UpdateSim { m: 200 }.run(1, 1, 1);
+    }
+
+    #[test]
+    fn weight_buffer_accounted() {
+        let r = UpdateSim { m: 256 }.run(64, 500, 256);
+        assert_eq!(r.weight_bytes, 500 * 256 * 4);
+        assert_eq!(r.result_bytes, 64.0 * 256.0 * 4.0);
+    }
+
+    #[test]
+    fn more_macs_fewer_cycles() {
+        let small = UpdateSim { m: 64 }.run(2048, 256, 256).cycles;
+        let big = UpdateSim { m: 1024 }.run(2048, 256, 256).cycles;
+        assert!(big * 8 <= small, "m=1024 {big} vs m=64 {small}");
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        let r = UpdateSim { m: 16 }.run(0, 8, 8);
+        assert_eq!(r.cycles, 0);
+        let r = UpdateSim { m: 16 }.run(5, 3, 2);
+        assert!(r.cycles > 0);
+    }
+
+    #[test]
+    fn ragged_tiles_cost_extra() {
+        let sim = UpdateSim { m: 256 };
+        let exact = sim.run(1000, 256, 256); // 16 | 256
+        let ragged = sim.run(1000, 257, 257); // one extra sliver tile pair
+        assert!(ragged.cycles > exact.cycles);
+    }
+}

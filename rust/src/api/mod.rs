@@ -1,0 +1,444 @@
+//! High-level programming interface — the paper's Table 1 API.
+//!
+//! The paper's user program (Listing 1) is a dozen lines: specify
+//! platform, GNN parameters, computation, sampler, input graph; call
+//! `GenerateDesign()`; call `Start_training()`.  [`HpGnn`] is that flow as
+//! a rust builder; [`program`] parses the same thing from a JSON "user
+//! program" file.
+//!
+//! `GenerateDesign()` here performs what the paper's software + hardware
+//! generators do: runs the DSE engine to pick the accelerator
+//! configuration, selects the AOT artifact geometry (the "bitstream"), and
+//! sizes the sampler thread pool — returning a [`GeneratedDesign`] that
+//! can start training immediately.
+
+pub mod program;
+
+use crate::accel::device::FeaturePlacement;
+use crate::accel::platform::Platform;
+use crate::coordinator::{train, TrainConfig, TrainReport};
+use crate::dse::{explore, DseProblem, DseResult};
+use crate::graph::{datasets, Graph};
+use crate::layout::pad::EdgeOverflow;
+use crate::layout::LayoutOptions;
+use crate::perf::{BatchGeometry, KappaEstimator, ModelShape, ResourceCoefficients};
+use crate::runtime::{Kind, Runtime};
+use crate::sampler::{
+    layerwise::LayerwiseSampler, neighbor::NeighborSampler, subgraph::SubgraphSampler, Sampler,
+};
+use crate::sampler::values::GnnModel;
+use crate::util::json::Json;
+
+/// Sampling algorithm + parameters (`Sampler('NeighborSampler', L=2,
+/// budgets=[10, 25])` in Listing 2).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SamplerSpec {
+    Neighbor { targets: usize, budgets: Vec<usize> },
+    Subgraph { budget: usize, layers: usize },
+    Layerwise { targets: usize, sizes: Vec<usize> },
+}
+
+impl SamplerSpec {
+    pub fn layers(&self) -> usize {
+        match self {
+            SamplerSpec::Neighbor { budgets, .. } => budgets.len(),
+            SamplerSpec::Subgraph { layers, .. } => *layers,
+            SamplerSpec::Layerwise { sizes, .. } => sizes.len(),
+        }
+    }
+
+    pub fn build(&self) -> Box<dyn Sampler> {
+        match self {
+            SamplerSpec::Neighbor { targets, budgets } => {
+                Box::new(NeighborSampler::new(*targets, budgets.clone()))
+            }
+            SamplerSpec::Subgraph { budget, layers } => {
+                Box::new(SubgraphSampler::new(*budget, *layers))
+            }
+            SamplerSpec::Layerwise { targets, sizes } => {
+                Box::new(LayerwiseSampler::new(*targets, sizes.clone()))
+            }
+        }
+    }
+
+    /// Table 2 batch shape for the DSE engine.
+    pub fn batch_geometry(&self, g: &Graph) -> BatchGeometry {
+        match self {
+            SamplerSpec::Neighbor { targets, budgets } => {
+                BatchGeometry::neighbor_capped(*targets, budgets, g.num_vertices())
+            }
+            SamplerSpec::Subgraph { budget, layers } => {
+                let kappa = KappaEstimator::from_stats(g.num_vertices(), g.num_edges());
+                BatchGeometry::subgraph(*budget, *layers, &kappa)
+            }
+            SamplerSpec::Layerwise { targets, sizes } => {
+                let kappa = KappaEstimator::from_stats(g.num_vertices(), g.num_edges());
+                let mut s = sizes.clone();
+                s.push(*targets);
+                BatchGeometry::layerwise(&s, &kappa)
+            }
+        }
+    }
+}
+
+/// The GNN abstraction the program parser extracts (paper Fig. 2): model
+/// configuration + mini-batch configuration.
+#[derive(Debug, Clone)]
+pub struct GnnAbstraction {
+    pub model: GnnModel,
+    pub feat: Vec<usize>,
+    pub sampler: SamplerSpec,
+    pub batch: BatchGeometry,
+}
+
+/// Builder implementing the Table 1 call sequence.
+#[derive(Default, Debug)]
+pub struct HpGnn {
+    platform: Option<Platform>,
+    model: Option<GnnModel>,
+    hidden: Vec<usize>,
+    sampler: Option<SamplerSpec>,
+    graph: Option<Graph>,
+    layout: LayoutOptions,
+    seed: u64,
+    placement_override: Option<FeaturePlacement>,
+    /// Full-dataset statistics behind a scaled instance, if known
+    /// (placement must be decided against the *real* feature matrix).
+    full_nodes: Option<usize>,
+}
+
+impl HpGnn {
+    /// `Init()` — start a program.
+    pub fn init() -> HpGnn {
+        HpGnn { layout: LayoutOptions::all(), seed: 7, ..Default::default() }
+    }
+
+    /// `PlatformParameters(board='xilinx-U250')` or a custom board.
+    pub fn platform_board(mut self, board: &str) -> anyhow::Result<HpGnn> {
+        anyhow::ensure!(
+            board.eq_ignore_ascii_case("xilinx-u250"),
+            "unknown board {board:?} (known: xilinx-U250; use .platform() for custom)"
+        );
+        self.platform = Some(Platform::alveo_u250());
+        Ok(self)
+    }
+
+    pub fn platform(mut self, p: Platform) -> HpGnn {
+        self.platform = Some(p);
+        self
+    }
+
+    /// `GNN_Computation('SAGE' | 'GCN')`.
+    pub fn gnn_computation(mut self, model: &str) -> anyhow::Result<HpGnn> {
+        self.model = Some(GnnModel::parse(model)?);
+        Ok(self)
+    }
+
+    /// `GNN_Parameters(L, hidden)` — hidden dims between f0 and classes.
+    pub fn gnn_parameters(mut self, hidden: Vec<usize>) -> HpGnn {
+        self.hidden = hidden;
+        self
+    }
+
+    /// `Sampler(...)`.
+    pub fn sampler(mut self, spec: SamplerSpec) -> HpGnn {
+        self.sampler = Some(spec);
+        self
+    }
+
+    /// `LoadInputGraph()` — a materialized graph (use
+    /// `datasets::DatasetSpec::scale(..).instantiate(..)` or graph::io).
+    pub fn load_input_graph(mut self, g: Graph) -> HpGnn {
+        self.graph = Some(g);
+        self
+    }
+
+    /// Convenience: a Table 4 dataset at a scale factor.
+    pub fn load_dataset(mut self, key: &str, scale: f64, seed: u64) -> anyhow::Result<HpGnn> {
+        let spec = datasets::by_key(key)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset {key:?}"))?;
+        self.full_nodes = Some(spec.nodes);
+        Ok(self.load_input_graph(spec.scale(scale).instantiate(seed)))
+    }
+
+    /// `DistributeData()` — explicitly place the feature matrix (default:
+    /// decided automatically against the board's DDR capacity).
+    pub fn distribute_data(mut self, placement: FeaturePlacement) -> HpGnn {
+        self.placement_override = Some(placement);
+        self
+    }
+
+    /// Layout optimization switches (Table 6 ablation; default: all on).
+    pub fn layout(mut self, layout: LayoutOptions) -> HpGnn {
+        self.layout = layout;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> HpGnn {
+        self.seed = seed;
+        self
+    }
+
+    /// `GenerateDesign()` — DSE + artifact-geometry selection + sampler
+    /// thread sizing.  `runtime` provides the artifact registry (the
+    /// "bitstream library").
+    pub fn generate_design(self, runtime: &Runtime) -> anyhow::Result<GeneratedDesign> {
+        let platform = self.platform.ok_or_else(|| anyhow::anyhow!("PlatformParameters() missing"))?;
+        let model = self.model.ok_or_else(|| anyhow::anyhow!("GNN_Computation() missing"))?;
+        let sampler = self.sampler.ok_or_else(|| anyhow::anyhow!("Sampler() missing"))?;
+        let graph = self.graph.ok_or_else(|| anyhow::anyhow!("LoadInputGraph() missing"))?;
+        anyhow::ensure!(graph.feat_dim > 0, "graph has no feature dimension");
+        anyhow::ensure!(graph.num_classes > 0, "graph has no class count");
+        anyhow::ensure!(
+            self.hidden.len() + 1 == sampler.layers(),
+            "GNN_Parameters: {} hidden dims for {} layers (need L-1)",
+            self.hidden.len(),
+            sampler.layers()
+        );
+
+        let mut feat = vec![graph.feat_dim];
+        feat.extend(&self.hidden);
+        feat.push(graph.num_classes);
+
+        let batch = sampler.batch_geometry(&graph);
+        let abstraction = GnnAbstraction { model, feat: feat.clone(), sampler, batch };
+
+        // Hardware generator: Algorithm 4 on the target platform.
+        let dse = explore(
+            &platform,
+            &DseProblem {
+                geom: abstraction.batch.clone(),
+                model: ModelShape {
+                    feat: feat.clone(),
+                    sage_concat: model == GnnModel::Sage,
+                },
+                layout: self.layout,
+                coeff: ResourceCoefficients::default(),
+                t_sampling_single: None,
+            },
+        );
+
+        // Software generator: pick the smallest artifact geometry whose
+        // bounds cover the sampler's worst case.
+        let geometry = select_geometry(runtime, model, &abstraction)?;
+
+        // DistributeData(): features go to FPGA DDR when the *full-scale*
+        // matrix fits (paper §3.1), else stay in host memory and stream.
+        let feature_rows = self.full_nodes.unwrap_or(graph.num_vertices());
+        let feature_bytes = feature_rows * graph.feat_dim * 4;
+        let placement = self.placement_override.unwrap_or(if feature_bytes <= platform.ddr_bytes {
+            FeaturePlacement::FpgaLocal
+        } else {
+            FeaturePlacement::HostStreamed
+        });
+
+        Ok(GeneratedDesign {
+            platform,
+            accel: dse,
+            geometry,
+            layout: self.layout,
+            placement,
+            graph,
+            abstraction,
+            seed: self.seed,
+        })
+    }
+}
+
+/// Pick an artifact geometry for the abstraction (smallest that fits).
+fn select_geometry(
+    runtime: &Runtime,
+    model: GnnModel,
+    abs: &GnnAbstraction,
+) -> anyhow::Result<String> {
+    let sampler = abs.sampler.build();
+    let mut candidates: Vec<&crate::runtime::ArtifactSpec> = Vec::new();
+    for name in runtime.manifest.names() {
+        let spec = runtime.manifest.get(name)?;
+        if spec.model.as_str() != model.artifact_key() || spec.kind != Kind::TrainStep {
+            continue;
+        }
+        let geom = &spec.geometry;
+        if geom.layers() != sampler.num_layers() || geom.f != abs.feat {
+            continue;
+        }
+        // Vertex bounds must hold; edge overflow is tolerable only for
+        // subgraph batches (truncation policy).
+        let fits_b = abs.batch.b.iter().zip(&geom.b).all(|(need, have)| need <= have);
+        let fits_e = match abs.sampler {
+            SamplerSpec::Neighbor { .. } => {
+                abs.batch.e.iter().zip(&geom.e).all(|(need, have)| need <= have)
+            }
+            _ => true,
+        };
+        if fits_b && fits_e {
+            candidates.push(spec);
+        }
+    }
+    // Prefer geometries whose shape class matches the sampler (NS batches
+    // shrink per layer; SS batches keep b constant), then the smallest.
+    let want_equal = !matches!(abs.sampler, SamplerSpec::Neighbor { .. });
+    candidates.sort_by_key(|s| {
+        let b = &s.geometry.b;
+        let is_equal = b.windows(2).all(|w| w[0] == w[1]);
+        (usize::from(is_equal != want_equal), s.geometry.total_vertices())
+    });
+    candidates
+        .first()
+        .map(|s| s.geometry.name.clone())
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "no artifact geometry fits model={} layers={} feat={:?} batch b={:?} — \
+                 add a geometry to python/compile/geometry.py and `make artifacts`",
+                model.as_str(),
+                sampler.num_layers(),
+                abs.feat,
+                abs.batch.b,
+            )
+        })
+}
+
+/// Output of `GenerateDesign()`: everything needed to run training.
+#[derive(Debug)]
+pub struct GeneratedDesign {
+    pub platform: Platform,
+    pub accel: DseResult,
+    pub geometry: String,
+    pub layout: LayoutOptions,
+    pub placement: FeaturePlacement,
+    pub graph: Graph,
+    pub abstraction: GnnAbstraction,
+    pub seed: u64,
+}
+
+impl GeneratedDesign {
+    /// `Start_training()` — run Algorithm 2 for `steps` iterations.
+    pub fn start_training(
+        &self,
+        runtime: &Runtime,
+        steps: usize,
+        lr: f32,
+        simulate: bool,
+    ) -> anyhow::Result<TrainReport> {
+        let sampler = self.abstraction.sampler.build();
+        let cfg = TrainConfig {
+            model: self.abstraction.model,
+            optimizer: Default::default(),
+            geometry: self.geometry.clone(),
+            steps,
+            lr,
+            seed: self.seed,
+            layout: self.layout,
+            sampler_threads: self.accel.sampler_threads.unwrap_or(2),
+            overflow: match self.abstraction.sampler {
+                SamplerSpec::Neighbor { .. } => EdgeOverflow::Error,
+                _ => EdgeOverflow::TruncateKeepSelf,
+            },
+            simulate: simulate.then(|| (self.platform.clone(), self.accel.config)),
+            log_every: 0,
+            value_fn: None,
+        };
+        train(runtime, &self.graph, sampler.as_ref(), &cfg)
+    }
+
+    /// The generated-design summary (the analog of Listing 3's generated
+    /// host program + accelerator configuration).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("board", Json::str(self.platform.name.clone())),
+            ("model", Json::str(self.abstraction.model.as_str())),
+            (
+                "feat_dims",
+                Json::arr(self.abstraction.feat.iter().map(|&f| Json::num(f as f64)).collect()),
+            ),
+            ("artifact_geometry", Json::str(self.geometry.clone())),
+            (
+                "feature_placement",
+                Json::str(match self.placement {
+                    FeaturePlacement::FpgaLocal => "fpga-local",
+                    FeaturePlacement::HostStreamed => "host-streamed",
+                }),
+            ),
+            ("accel_n_scatter_pes", Json::num(self.accel.config.n as f64)),
+            ("accel_m_macs", Json::num(self.accel.config.m as f64)),
+            ("predicted_nvtps", Json::num(self.accel.nvtps)),
+            ("dsp_utilization", Json::num(self.accel.utilization.dsp)),
+            ("lut_utilization", Json::num(self.accel.utilization.lut)),
+            ("uram_utilization", Json::num(self.accel.utilization.uram)),
+            ("bram_utilization", Json::num(self.accel.utilization.bram)),
+            (
+                "batch_b",
+                Json::arr(self.abstraction.batch.b.iter().map(|&b| Json::num(b as f64)).collect()),
+            ),
+            (
+                "batch_e",
+                Json::arr(self.abstraction.batch.e.iter().map(|&e| Json::num(e as f64)).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampler_spec_builds_and_sizes() {
+        let g = crate::graph::generator::uniform(1000, 8000, true, 1);
+        let ns = SamplerSpec::Neighbor { targets: 16, budgets: vec![5, 3] };
+        assert_eq!(ns.layers(), 2);
+        let geom = ns.batch_geometry(&g);
+        assert_eq!(geom.b[2], 16);
+        assert!(geom.b[0] > geom.b[1]);
+        let ss = SamplerSpec::Subgraph { budget: 100, layers: 2 };
+        let geom = ss.batch_geometry(&g);
+        assert_eq!(geom.b, vec![100, 100, 100]);
+        let s = ns.build();
+        assert_eq!(s.num_layers(), 2);
+    }
+
+    #[test]
+    fn builder_validates_missing_pieces() {
+        // No runtime needed to hit the validation errors.
+        let dir = std::env::temp_dir().join(format!("hpgnn-api-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"version": 1, "artifacts": []}"#).unwrap();
+        let rt = Runtime::load(&dir).unwrap();
+        let err = HpGnn::init().generate_design(&rt).unwrap_err().to_string();
+        assert!(err.contains("PlatformParameters"), "{err}");
+        let err = HpGnn::init()
+            .platform(Platform::alveo_u250())
+            .generate_design(&rt)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("GNN_Computation"), "{err}");
+    }
+
+    #[test]
+    fn unknown_board_rejected() {
+        assert!(HpGnn::init().platform_board("stratix-10").is_err());
+        assert!(HpGnn::init().platform_board("Xilinx-U250").is_ok());
+    }
+
+    #[test]
+    fn hidden_dims_must_match_depth() {
+        let dir = std::env::temp_dir().join(format!("hpgnn-api2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"version": 1, "artifacts": []}"#).unwrap();
+        let rt = Runtime::load(&dir).unwrap();
+        let mut g = crate::graph::generator::uniform(100, 500, true, 2);
+        g.feat_dim = 16;
+        g.num_classes = 4;
+        let err = HpGnn::init()
+            .platform(Platform::alveo_u250())
+            .gnn_computation("gcn")
+            .unwrap()
+            .gnn_parameters(vec![8, 8]) // 2 hidden for 2 layers: wrong
+            .sampler(SamplerSpec::Neighbor { targets: 4, budgets: vec![3, 3] })
+            .load_input_graph(g)
+            .generate_design(&rt)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("GNN_Parameters"), "{err}");
+    }
+}

@@ -1,0 +1,140 @@
+//! User-program parser: the JSON analog of the paper's Listing 1.
+//!
+//! A user program is a small JSON document:
+//!
+//! ```json
+//! {
+//!   "platform": "xilinx-U250",
+//!   "model": {"computation": "SAGE", "hidden": [256]},
+//!   "sampler": {"type": "NeighborSampler", "budgets": [10, 25], "targets": 1024},
+//!   "graph": {"dataset": "FL", "scale": 0.05, "seed": 1},
+//!   "training": {"steps": 100, "lr": 0.05}
+//! }
+//! ```
+//!
+//! `parse_program` turns it into an [`HpGnn`] builder plus training
+//! parameters; the `hp-gnn run` CLI subcommand executes it end to end.
+
+use super::{HpGnn, SamplerSpec};
+use crate::util::json::Json;
+
+/// Training-phase parameters of a user program.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainingParams {
+    pub steps: usize,
+    pub lr: f32,
+    pub simulate: bool,
+}
+
+/// Parse a user program into a ready builder + training params.
+pub fn parse_program(text: &str) -> anyhow::Result<(HpGnn, TrainingParams)> {
+    let doc = Json::parse(text)?;
+
+    let mut builder = HpGnn::init();
+
+    // Platform.
+    match doc.get("platform")? {
+        Json::Str(board) => builder = builder.platform_board(board)?,
+        other => anyhow::bail!("platform must be a board name string, got {other:?}"),
+    }
+
+    // Model.
+    let model = doc.get("model")?;
+    builder = builder.gnn_computation(model.get("computation")?.as_str()?)?;
+    builder = builder.gnn_parameters(model.get("hidden")?.usize_list()?);
+
+    // Sampler.
+    let sampler = doc.get("sampler")?;
+    let spec = match sampler.get("type")?.as_str()? {
+        "NeighborSampler" => SamplerSpec::Neighbor {
+            targets: sampler.get("targets")?.as_usize()?,
+            budgets: sampler.get("budgets")?.usize_list()?,
+        },
+        "SubgraphSampler" => SamplerSpec::Subgraph {
+            budget: sampler.get("budget")?.as_usize()?,
+            layers: sampler.get("layers")?.as_usize()?,
+        },
+        "LayerwiseSampler" => SamplerSpec::Layerwise {
+            targets: sampler.get("targets")?.as_usize()?,
+            sizes: sampler.get("sizes")?.usize_list()?,
+        },
+        other => anyhow::bail!(
+            "unknown sampler {other:?} (NeighborSampler|SubgraphSampler|LayerwiseSampler)"
+        ),
+    };
+    builder = builder.sampler(spec);
+
+    // Graph.
+    let graph = doc.get("graph")?;
+    let seed = graph.opt("seed").map(|j| j.as_usize()).transpose()?.unwrap_or(1) as u64;
+    if let Some(ds) = graph.opt("dataset") {
+        let scale = graph.opt("scale").map(|j| j.as_f64()).transpose()?.unwrap_or(1.0);
+        builder = builder.load_dataset(ds.as_str()?, scale, seed)?;
+    } else if let Some(path) = graph.opt("edge_list") {
+        let mut g = crate::graph::io::load_edge_list(std::path::Path::new(path.as_str()?))?;
+        g.feat_dim = graph.get("feat_dim")?.as_usize()?;
+        g.num_classes = graph.get("num_classes")?.as_usize()?;
+        builder = builder.load_input_graph(g);
+    } else {
+        anyhow::bail!("graph needs either \"dataset\" or \"edge_list\"");
+    }
+    builder = builder.seed(seed);
+
+    // Training.
+    let training = doc.get("training")?;
+    let params = TrainingParams {
+        steps: training.get("steps")?.as_usize()?,
+        lr: training.get("lr")?.as_f64()? as f32,
+        simulate: training
+            .opt("simulate")
+            .map(|j| j.as_bool())
+            .transpose()?
+            .unwrap_or(false),
+    };
+
+    Ok((builder, params))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PROGRAM: &str = r#"{
+      "platform": "xilinx-U250",
+      "model": {"computation": "GCN", "hidden": [8]},
+      "sampler": {"type": "NeighborSampler", "budgets": [5, 3], "targets": 4},
+      "graph": {"dataset": "FL", "scale": 0.005, "seed": 3},
+      "training": {"steps": 5, "lr": 0.1, "simulate": true}
+    }"#;
+
+    #[test]
+    fn parses_full_program() {
+        let (_builder, params) = parse_program(PROGRAM).unwrap();
+        assert_eq!(params.steps, 5);
+        assert!((params.lr - 0.1).abs() < 1e-6);
+        assert!(params.simulate);
+    }
+
+    #[test]
+    fn rejects_unknown_sampler() {
+        let bad = PROGRAM.replace("NeighborSampler", "MagicSampler");
+        let err = parse_program(&bad).unwrap_err().to_string();
+        assert!(err.contains("MagicSampler"), "{err}");
+    }
+
+    #[test]
+    fn rejects_graphless_program() {
+        let bad = PROGRAM.replace("\"dataset\": \"FL\", \"scale\": 0.005, ", "");
+        assert!(parse_program(&bad).is_err());
+    }
+
+    #[test]
+    fn subgraph_sampler_variant() {
+        let prog = PROGRAM.replace(
+            r#"{"type": "NeighborSampler", "budgets": [5, 3], "targets": 4}"#,
+            r#"{"type": "SubgraphSampler", "budget": 64, "layers": 2}"#,
+        );
+        let (_b, p) = parse_program(&prog).unwrap();
+        assert_eq!(p.steps, 5);
+    }
+}

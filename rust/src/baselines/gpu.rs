@@ -1,0 +1,171 @@
+//! CPU-GPU baseline model (Table 7's middle column; A100 from Table 3).
+//!
+//! No GPU exists in this environment, so this row is analytic (DESIGN.md
+//! §2).  The model captures the three effects the paper attributes the
+//! CPU-GPU numbers to:
+//!
+//! 1. host-side mini-batch sampling (PyG dataloader workers) that the GPU
+//!    cannot overlap away — dominates the NS rows;
+//! 2. per-iteration framework/launch overhead — dominates the SS rows
+//!    (small batches, Table 7 shows only 3.5–5.6x over CPU);
+//! 3. aggregation's irregular memory access paying a small fraction of
+//!    HBM bandwidth, exactly the overhead HP-GNN's data layout removes.
+//!
+//! The A100 40 GB memory capacity check reproduces Table 7's OoM entries
+//! (GraphSAINT keeps the full graph + features resident for its
+//! normalization/evaluation passes; AmazonProducts does not fit).
+
+use super::Calibration;
+use crate::graph::datasets::DatasetSpec;
+use crate::perf::{BatchGeometry, ModelShape};
+
+/// A100 card description (paper Table 3).
+#[derive(Debug, Clone, Copy)]
+pub struct GpuSpec {
+    pub peak_gflops: f64,
+    pub mem_bw_gbps: f64,
+    pub mem_bytes: usize,
+}
+
+impl GpuSpec {
+    pub fn a100() -> GpuSpec {
+        GpuSpec { peak_gflops: 19_500.0, mem_bw_gbps: 1555.0, mem_bytes: 40 * (1 << 30) }
+    }
+}
+
+/// Outcome of the model: throughput or the OoM marker Table 7 prints.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum GpuOutcome {
+    Nvtps(f64),
+    OutOfMemory,
+}
+
+/// Resident bytes GraphSAINT-style training keeps on the GPU: features,
+/// CSR structure, plus per-epoch full-graph intermediate activations for
+/// its evaluation / normalization passes.
+pub fn resident_bytes(ds: &DatasetSpec, model: &ModelShape, subgraph_sampling: bool) -> usize {
+    let features = ds.nodes * ds.f0 * 4;
+    let structure = ds.edges * 8 + ds.nodes * 8;
+    let full_graph_eval = if subgraph_sampling {
+        // Full-graph forward for eval: one activation per layer plus the
+        // edge-message buffer PyG materializes for weighted aggregation.
+        let acts: usize = model.feat.iter().map(|&f| ds.nodes * f * 4).sum();
+        // PyG materializes one message per edge for weighted aggregation.
+        let messages = ds.edges * model.feat[1] * 4;
+        acts + messages
+    } else {
+        0
+    };
+    features + structure + full_graph_eval
+}
+
+/// Model one (dataset, sampler, model) cell of Table 7's CPU-GPU column.
+pub fn model_nvtps(
+    gpu: &GpuSpec,
+    ds: &DatasetSpec,
+    geom: &BatchGeometry,
+    model: &ModelShape,
+    subgraph_sampling: bool,
+    cal: &Calibration,
+) -> GpuOutcome {
+    if resident_bytes(ds, model, subgraph_sampling) > gpu.mem_bytes {
+        return GpuOutcome::OutOfMemory;
+    }
+
+    // (1) host sampling on the dataloader workers.
+    let edges_total: f64 = geom.e.iter().map(|&e| e as f64).sum();
+    let t_sampling = edges_total * cal.host_sampling_per_edge / cal.host_sampling_workers;
+
+    // (2) + (3) device time.
+    let mut t_dev = cal.gpu_iteration_overhead;
+    for l in 1..=geom.layers() {
+        let f_prev = model.feat[l - 1] as f64;
+        let f_cur = model.feat[l] as f64;
+        let fin = if model.sage_concat { 2.0 * f_prev } else { f_prev };
+        let traffic = geom.e[l - 1] as f64 * f_prev * 4.0 * 2.0;
+        t_dev += traffic / (gpu.mem_bw_gbps * 1e9 * cal.gpu_gather_bw_eff);
+        let flops = geom.b[l] as f64 * fin * f_cur * 2.0;
+        t_dev += flops / (gpu.peak_gflops * 1e9 * cal.gpu_dense_eff);
+    }
+    t_dev = cal.gpu_iteration_overhead + (t_dev - cal.gpu_iteration_overhead) * 2.0; // + backward
+
+    // Sampling pipelines with device execution (PyG prefetching), so the
+    // iteration takes the max of the two — same structure as Eq. 5.
+    let t_iter = t_sampling.max(t_dev);
+    GpuOutcome::Nvtps(geom.vertices_traversed() as f64 / t_iter)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+    use crate::perf::KappaEstimator;
+
+    fn ns_geom(ds: &DatasetSpec) -> BatchGeometry {
+        BatchGeometry::neighbor_capped(1024, &[10, 25], ds.nodes)
+    }
+
+    fn shape(ds: &DatasetSpec, sage: bool) -> ModelShape {
+        ModelShape { feat: vec![ds.f0, 256, ds.f2], sage_concat: sage }
+    }
+
+    #[test]
+    fn ns_gcn_flickr_in_table7_ballpark() {
+        // Table 7 FL/NS-GCN CPU-GPU: 2.69M NVTPS.
+        let out = model_nvtps(
+            &GpuSpec::a100(),
+            &datasets::FLICKR,
+            &ns_geom(&datasets::FLICKR),
+            &shape(&datasets::FLICKR, false),
+            false,
+            &Calibration::default(),
+        );
+        match out {
+            GpuOutcome::Nvtps(n) => {
+                assert!((1.0e6..12.0e6).contains(&n), "GPU NVTPS {n:.3e}");
+            }
+            GpuOutcome::OutOfMemory => panic!("FL must fit"),
+        }
+    }
+
+    #[test]
+    fn amazon_subgraph_goes_oom() {
+        // Table 7: SS rows on AmazonProducts are OoM on the A100.
+        let ds = datasets::AMAZON_PRODUCTS;
+        let kappa = KappaEstimator::from_stats(ds.nodes, ds.edges);
+        let geom = BatchGeometry::subgraph(2750, 2, &kappa);
+        let out = model_nvtps(
+            &GpuSpec::a100(),
+            &ds,
+            &geom,
+            &shape(&ds, false),
+            true,
+            &Calibration::default(),
+        );
+        assert_eq!(out, GpuOutcome::OutOfMemory);
+        // ... but neighbor sampling (no full-graph eval) fits.
+        let out_ns =
+            model_nvtps(&GpuSpec::a100(), &ds, &ns_geom(&ds), &shape(&ds, false), false, &Calibration::default());
+        assert!(matches!(out_ns, GpuOutcome::Nvtps(_)));
+    }
+
+    #[test]
+    fn subgraph_batches_are_launch_bound() {
+        // Table 7 shape: SS speedups over CPU are far below NS speedups.
+        let ds = datasets::REDDIT;
+        let cal = Calibration::default();
+        let kappa = KappaEstimator::from_stats(ds.nodes, ds.edges);
+        let ss = BatchGeometry::subgraph(2750, 2, &kappa);
+        let GpuOutcome::Nvtps(ss_n) =
+            model_nvtps(&GpuSpec::a100(), &ds, &ss, &shape(&ds, false), true, &cal)
+        else {
+            panic!("RD SS must fit")
+        };
+        let GpuOutcome::Nvtps(ns_n) =
+            model_nvtps(&GpuSpec::a100(), &ds, &ns_geom(&ds), &shape(&ds, false), false, &cal)
+        else {
+            panic!("RD NS must fit")
+        };
+        assert!(ns_n > ss_n * 2.0, "NS {ns_n:.3e} vs SS {ss_n:.3e}");
+    }
+}

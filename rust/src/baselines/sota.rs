@@ -1,0 +1,139 @@
+//! State-of-the-art accelerator models for Table 8 (SS-SAGE workloads).
+//!
+//! Both rows are modeled from the specs Table 8 itself publishes, plus the
+//! two architectural differences §7 credits for HP-GNN's speedup:
+//!
+//! * **GraphACT** (CPU-FPGA, U250-scaled): vertex features live in *host*
+//!   memory and cross PCIe every batch; its Feature Aggregation Module has
+//!   feature-level parallelism only (one edge at a time, vector-wide), so
+//!   aggregation runs at an n=1 equivalent.  Redundancy reduction cuts the
+//!   on-chip aggregation work ~35% (its reported benefit) but requires
+//!   uniform edge weights (why it cannot run GCN).
+//! * **Rubik** (ASIC): 1 TFLOPS / 432 GB/s but only 2 MB on-chip — the
+//!   per-layer intermediates of an SS batch spill to DRAM, and without
+//!   HP-GNN's layout optimizations those accesses are random.
+
+use crate::accel::platform::Platform;
+use crate::perf::{BatchGeometry, ModelShape};
+
+/// GraphACT iteration time (s) for a subgraph-sampling batch.
+///
+/// GraphACT's split differs from HP-GNN's in the two ways §7 highlights:
+/// the redundancy-reduced *aggregation runs on the host CPU* (its FPGA
+/// holds only the dense pipeline), and vertex features live in host
+/// memory, crossing PCIe each batch.
+pub fn graphact_iteration_time(
+    platform: &Platform,
+    geom: &BatchGeometry,
+    model: &ModelShape,
+) -> f64 {
+    let freq = platform.freq_hz;
+    let host = &platform.host;
+    // PCIe 3.0 x16 effective ~12 GB/s: batch features cross per iteration.
+    let pcie_bw = 12e9;
+    let t_pcie = geom.b[0] as f64 * model.feat[0] as f64 * 4.0 / pcie_bw;
+    let mut t_layers = 0.0;
+    for l in 1..=geom.layers() {
+        let f_prev = model.feat[l - 1] as f64;
+        let f_cur = model.feat[l] as f64;
+        let fin = if model.sage_concat { 2.0 * f_prev } else { f_prev };
+        // Host-side aggregation with redundancy reduction (~35% fewer
+        // vector adds).  GraphACT's aggregation is hand-blocked C++ (not
+        // PyG), so it sustains a much higher bandwidth fraction than the
+        // Table 7 CPU baseline: 0.2 of peak, pinned against Table 8's
+        // published 546.8K NVTPS.
+        let effective_edges = geom.e[l - 1] as f64 * 0.65;
+        let traffic = effective_edges * f_prev * 4.0 * 2.0;
+        t_layers += traffic / (host.mem_bw_gbps * 1e9 * 0.2);
+        // Systolic update on the FPGA (single kernel instance — GraphACT
+        // does not replicate across dies).
+        let macs = 1024.0;
+        t_layers += geom.b[l] as f64 * fin * f_cur / (macs * freq);
+    }
+    t_pcie + 2.0 * t_layers // forward + backward
+}
+
+/// Rubik iteration time (s) for a subgraph-sampling batch.
+pub fn rubik_iteration_time(geom: &BatchGeometry, model: &ModelShape) -> f64 {
+    let peak_flops = 1.0e12;
+    let bw = 432e9;
+    let onchip = 2.0 * 1024.0 * 1024.0;
+    let mut t = 0.0;
+    for l in 1..=geom.layers() {
+        let f_prev = model.feat[l - 1] as f64;
+        let f_cur = model.feat[l] as f64;
+        let fin = if model.sage_concat { 2.0 * f_prev } else { f_prev };
+        // Aggregation traffic: per-edge gathers; intermediates spill when
+        // the layer slab exceeds the 2 MB scratchpad.
+        let slab = geom.b[l] as f64 * f_cur * 4.0;
+        let spill_factor = if slab > onchip { 2.0 } else { 1.0 };
+        let traffic = geom.e[l - 1] as f64 * f_prev * 4.0 * spill_factor;
+        // Random row access without HP-GNN's layout: short effective bursts.
+        let alpha = 0.25;
+        t += traffic / (bw * alpha);
+        let flops = (geom.e[l - 1] as f64 * f_prev + geom.b[l] as f64 * fin * f_cur) * 2.0;
+        t += flops / (peak_flops * 0.5);
+    }
+    2.0 * t
+}
+
+pub fn graphact_nvtps(platform: &Platform, geom: &BatchGeometry, model: &ModelShape) -> f64 {
+    geom.vertices_traversed() as f64 / graphact_iteration_time(platform, geom, model)
+}
+
+pub fn rubik_nvtps(geom: &BatchGeometry, model: &ModelShape) -> f64 {
+    geom.vertices_traversed() as f64 / rubik_iteration_time(geom, model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::AccelConfig;
+    use crate::graph::datasets;
+    use crate::layout::LayoutOptions;
+    use crate::perf::{estimate, KappaEstimator};
+
+    fn ss_sage_reddit() -> (BatchGeometry, ModelShape) {
+        let ds = datasets::REDDIT;
+        let kappa = KappaEstimator::from_stats(ds.nodes, ds.edges);
+        (
+            BatchGeometry::subgraph(2750, 2, &kappa),
+            ModelShape { feat: vec![ds.f0, 256, ds.f2], sage_concat: true },
+        )
+    }
+
+    #[test]
+    fn table8_ordering_holds() {
+        // Table 8 (RD, SS-SAGE): GraphACT 546.8K < Rubik 717.0K < ours 2.43M.
+        let p = Platform::alveo_u250();
+        let (geom, model) = ss_sage_reddit();
+        let ga = graphact_nvtps(&p, &geom, &model);
+        let ru = rubik_nvtps(&geom, &model);
+        let ours = estimate(&p, &AccelConfig { n: 8, m: 256 }, &geom, &model, LayoutOptions::all())
+            .nvtps(&geom, 0.0);
+        assert!(ga < ru, "GraphACT {ga:.3e} must trail Rubik {ru:.3e}");
+        assert!(ru < ours, "Rubik {ru:.3e} must trail ours {ours:.3e}");
+        // Speedup over GraphACT lands in the paper's 2–8x window (4.45x).
+        let speedup = ours / ga;
+        assert!((1.5..12.0).contains(&speedup), "speedup {speedup:.2}");
+    }
+
+    #[test]
+    fn graphact_nvtps_order_of_magnitude() {
+        // Table 8 reports 546.8K on Reddit.
+        let p = Platform::alveo_u250();
+        let (geom, model) = ss_sage_reddit();
+        let n = graphact_nvtps(&p, &geom, &model);
+        assert!((1.5e5..2.5e6).contains(&n), "GraphACT NVTPS {n:.3e}");
+    }
+
+    #[test]
+    fn rubik_spills_make_it_slower_on_big_hidden_layers() {
+        let (geom, _) = ss_sage_reddit();
+        let small = ModelShape { feat: vec![602, 64, 41], sage_concat: true };
+        let big = ModelShape { feat: vec![602, 512, 41], sage_concat: true };
+        let t_small = rubik_iteration_time(&geom, &small);
+        let t_big = rubik_iteration_time(&geom, &big);
+        assert!(t_big > t_small);
+    }
+}

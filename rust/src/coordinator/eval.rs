@@ -1,0 +1,89 @@
+//! Model evaluation through the forward (inference) artifact.
+//!
+//! Samples held-out mini-batches, runs the AOT forward executable with the
+//! trained weights, and scores argmax accuracy over the real (unmasked)
+//! target vertices — the paper's accuracy claims ("same result and
+//! accuracy as training in serial fashion", §2.2) are checked this way.
+
+use crate::graph::{datasets, Graph};
+use crate::layout::pad::pad;
+use crate::layout::index_batch;
+use crate::runtime::{inputs, Kind, Runtime, WeightState};
+use crate::sampler::values::attach_values;
+use crate::sampler::Sampler;
+use crate::util::rng::Pcg64;
+
+use super::trainer::TrainConfig;
+
+/// Accuracy report over `batches` sampled evaluation batches.
+#[derive(Debug, Clone)]
+pub struct EvalReport {
+    pub correct: usize,
+    pub total: usize,
+    pub batches: usize,
+}
+
+impl EvalReport {
+    pub fn accuracy(&self) -> f64 {
+        self.correct as f64 / self.total.max(1) as f64
+    }
+}
+
+/// Evaluate `weights` on freshly sampled batches (seeded independently of
+/// training via `eval_seed`).
+pub fn evaluate(
+    runtime: &Runtime,
+    graph: &Graph,
+    sampler: &dyn Sampler,
+    cfg: &TrainConfig,
+    weights: &WeightState,
+    batches: usize,
+    eval_seed: u64,
+) -> anyhow::Result<EvalReport> {
+    let exe = runtime.compile_role(cfg.model, &cfg.geometry, Kind::Forward)?;
+    let spec = &exe.spec;
+    let geom = spec.geometry.clone();
+    let num_classes = geom.num_classes();
+    let feat_dim = geom.f[0];
+
+    let mut rng = Pcg64::seed_from_u64(eval_seed);
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for _ in 0..batches {
+        let mb = sampler.sample(graph, &mut rng);
+        let values = match &cfg.value_fn {
+            Some(f) => f(graph, &mb),
+            None => attach_values(graph, &mb, cfg.model),
+        };
+        let ib = index_batch(&mb, &values, cfg.layout);
+        let ll = mb.num_layers();
+        let labels =
+            datasets::synth_labels(&mb.layers[ll], num_classes, cfg.seed, graph.num_vertices());
+        let padded = pad(&ib, &labels, &geom, cfg.overflow)?;
+        let l0_labels =
+            datasets::synth_labels(&mb.layers[0], num_classes, cfg.seed, graph.num_vertices());
+        let real =
+            datasets::synth_features(&mb.layers[0], &l0_labels, feat_dim, num_classes, cfg.seed);
+        let features = inputs::pad_features(&real, mb.layers[0].len(), geom.b[0], feat_dim);
+
+        let lits = inputs::build_inputs(spec, &padded, &features, weights, 0.0)?;
+        let outs = exe.run(&lits)?;
+        let logits = outs[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("logits readback: {e:?}"))?;
+
+        let real_targets = padded.real_b[ll];
+        for i in 0..real_targets {
+            let row = &logits[i * num_classes..(i + 1) * num_classes];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap();
+            correct += usize::from(pred as i32 == padded.labels[i]);
+            total += 1;
+        }
+    }
+    Ok(EvalReport { correct, total, batches })
+}

@@ -1,0 +1,128 @@
+//! Training metrics: loss curve, stage timings, NVTPS accounting.
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Accumulated over a training run by the coordinator.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    pub losses: Vec<f32>,
+    /// Per-batch host sampling+layout+padding time (producer side).
+    pub t_sampling: Summary,
+    /// Per-batch PJRT execution time (consumer side).
+    pub t_execute: Summary,
+    /// Per-iteration wall time of the pipelined loop.
+    pub t_iteration: Summary,
+    /// Simulated accelerator t_GNN per batch (if simulation enabled).
+    pub t_gnn_sim: Summary,
+    /// Σ |B^l| per batch.
+    pub vertices: Vec<usize>,
+}
+
+impl Metrics {
+    /// Functional throughput of this host (vertices / wall second).
+    pub fn functional_nvtps(&self) -> f64 {
+        let total_v: usize = self.vertices.iter().sum();
+        let total_t = self.t_iteration.mean() * self.t_iteration.count() as f64;
+        if total_t <= 0.0 {
+            return 0.0;
+        }
+        total_v as f64 / total_t
+    }
+
+    /// Simulated CPU-FPGA throughput (Eq. 4/5): vertices over
+    /// max(simulated t_GNN, effective per-batch sampling time).
+    pub fn simulated_nvtps(&self, sampler_threads: usize) -> Option<f64> {
+        if self.t_gnn_sim.count() == 0 {
+            return None;
+        }
+        let mean_v =
+            self.vertices.iter().sum::<usize>() as f64 / self.vertices.len().max(1) as f64;
+        let t_sampling_eff = self.t_sampling.mean() / sampler_threads.max(1) as f64;
+        Some(mean_v / self.t_gnn_sim.mean().max(t_sampling_eff))
+    }
+
+    /// First/last smoothed loss — the e2e driver's convergence check.
+    pub fn loss_drop(&self) -> Option<(f32, f32)> {
+        if self.losses.len() < 8 {
+            return None;
+        }
+        let k = (self.losses.len() / 5).max(1);
+        let head: f32 = self.losses[..k].iter().sum::<f32>() / k as f32;
+        let tail: f32 = self.losses[self.losses.len() - k..].iter().sum::<f32>() / k as f32;
+        Some((head, tail))
+    }
+
+    /// JSON dump for EXPERIMENTS.md and the metrics endpoint.
+    pub fn to_json(&self, sampler_threads: usize) -> Json {
+        let mut pairs = vec![
+            ("steps", Json::num(self.losses.len() as f64)),
+            ("functional_nvtps", Json::num(self.functional_nvtps())),
+            ("t_sampling_mean_s", Json::num(self.t_sampling.mean())),
+            ("t_execute_mean_s", Json::num(self.t_execute.mean())),
+            ("t_iteration_mean_s", Json::num(self.t_iteration.mean())),
+            (
+                "loss_first",
+                self.losses.first().map(|&l| Json::num(l as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "loss_last",
+                self.losses.last().map(|&l| Json::num(l as f64)).unwrap_or(Json::Null),
+            ),
+        ];
+        if let Some(nvtps) = self.simulated_nvtps(sampler_threads) {
+            pairs.push(("simulated_nvtps", Json::num(nvtps)));
+            pairs.push(("t_gnn_sim_mean_s", Json::num(self.t_gnn_sim.mean())));
+        }
+        Json::obj(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn functional_nvtps_counts_all_vertices() {
+        let mut m = Metrics::default();
+        for _ in 0..4 {
+            m.vertices.push(100);
+            m.t_iteration.add(0.5);
+        }
+        assert!((m.functional_nvtps() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn simulated_nvtps_uses_thread_scaled_sampling() {
+        let mut m = Metrics::default();
+        m.vertices.push(1000);
+        m.t_gnn_sim.add(0.001);
+        m.t_sampling.add(0.008);
+        // 1 thread: sampling bound (0.008) -> 125K; 8 threads: t_gnn bound
+        // (0.001) -> 1M.
+        assert!((m.simulated_nvtps(1).unwrap() - 125_000.0).abs() < 1.0);
+        assert!((m.simulated_nvtps(8).unwrap() - 1_000_000.0).abs() < 1.0);
+        assert!(Metrics::default().simulated_nvtps(1).is_none());
+    }
+
+    #[test]
+    fn loss_drop_smooths_ends() {
+        let mut m = Metrics::default();
+        m.losses = (0..20).map(|i| 2.0 - 0.05 * i as f32).collect();
+        let (head, tail) = m.loss_drop().unwrap();
+        assert!(head > tail);
+        assert!(Metrics { losses: vec![1.0; 3], ..Default::default() }.loss_drop().is_none());
+    }
+
+    #[test]
+    fn json_dump_has_core_fields() {
+        let mut m = Metrics::default();
+        m.losses = vec![2.0, 1.0];
+        m.vertices = vec![10, 10];
+        m.t_iteration.add(0.1);
+        m.t_iteration.add(0.1);
+        let j = m.to_json(2);
+        assert!(j.get("functional_nvtps").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("steps").unwrap().as_usize().unwrap(), 2);
+    }
+}

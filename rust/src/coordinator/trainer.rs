@@ -1,0 +1,274 @@
+//! The training loop (paper Algorithm 2) with sampling/execution overlap.
+//!
+//! Producer threads sample mini-batches, attach edge values, run the
+//! layout engine (RMT/RRA), pad to the artifact geometry and synthesize
+//! the feature rows; a bounded channel feeds the consumer, which executes
+//! the AOT train step via PJRT and threads the weights through.  The
+//! bounded channel is the backpressure mechanism: when the accelerator is
+//! the bottleneck the producers idle (sampling fully hidden, Eq. 5), when
+//! sampling is the bottleneck the consumer starves and the measured
+//! iteration time shows it.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use super::metrics::Metrics;
+use crate::accel::{self, AccelConfig, Platform, SimOptions};
+use crate::graph::{datasets, Graph};
+use crate::layout::pad::{pad, EdgeOverflow, PaddedBatch};
+use crate::layout::{index_batch, IndexedBatch, LayoutOptions};
+use crate::runtime::weights::AdamState;
+use crate::runtime::{inputs, Kind, Runtime, WeightState};
+use crate::sampler::values::{attach_values, GnnModel};
+use crate::sampler::Sampler;
+use crate::util::rng::Pcg64;
+use crate::util::stats::Timer;
+
+/// Custom Scatter-UDF hook (paper Listing 2): computes per-edge values,
+/// replacing the built-in GCN/SAGE `PrepareEdges()`.  The aggregate
+/// hardware template is value-agnostic (`msg.val = edge.val * feat[src]`),
+/// so custom layers run on the stock artifacts.
+pub type ValueFn =
+    Arc<dyn Fn(&Graph, &crate::sampler::MiniBatch) -> crate::sampler::values::EdgeValues + Send + Sync>;
+
+/// Weight-update rule (paper Algorithm 2's WeightUpdate stage).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Optimizer {
+    #[default]
+    Sgd,
+    /// Adam with state threaded through the `adam_step` artifact.
+    Adam,
+}
+
+/// Training-run configuration (the generated host program's knobs).
+#[derive(Clone)]
+pub struct TrainConfig {
+    pub model: GnnModel,
+    pub optimizer: Optimizer,
+    /// Geometry name — selects the artifact (e.g. "tiny", "ns_small").
+    pub geometry: String,
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub layout: LayoutOptions,
+    pub sampler_threads: usize,
+    pub overflow: EdgeOverflow,
+    /// Simulate each batch on the accelerator model (Table 7's CPU-FPGA
+    /// timing path); None disables.
+    pub simulate: Option<(Platform, AccelConfig)>,
+    pub log_every: usize,
+    /// Custom Scatter UDF; None uses the model's standard edge values.
+    pub value_fn: Option<ValueFn>,
+}
+
+impl std::fmt::Debug for TrainConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TrainConfig")
+            .field("model", &self.model)
+            .field("geometry", &self.geometry)
+            .field("steps", &self.steps)
+            .field("lr", &self.lr)
+            .field("layout", &self.layout)
+            .field("custom_values", &self.value_fn.is_some())
+            .finish()
+    }
+}
+
+impl TrainConfig {
+    pub fn quick(model: GnnModel, geometry: &str, steps: usize) -> TrainConfig {
+        TrainConfig {
+            model,
+            optimizer: Optimizer::Sgd,
+            geometry: geometry.to_string(),
+            steps,
+            lr: 0.05,
+            seed: 7,
+            layout: LayoutOptions::all(),
+            sampler_threads: 2,
+            overflow: EdgeOverflow::TruncateKeepSelf,
+            simulate: None,
+            log_every: 0,
+            value_fn: None,
+        }
+    }
+}
+
+/// Result of a training run.
+#[derive(Debug)]
+pub struct TrainReport {
+    pub metrics: Metrics,
+    pub final_weights: WeightState,
+    /// Compile time of the artifact (once per process).
+    pub compile_s: f64,
+}
+
+/// One prepared batch traveling producer -> consumer.
+struct Prepared {
+    padded: PaddedBatch,
+    features: Vec<f32>,
+    indexed: IndexedBatch,
+    prep_s: f64,
+}
+
+/// Run Algorithm 2 for `cfg.steps` iterations.
+pub fn train(
+    runtime: &Runtime,
+    graph: &Graph,
+    sampler: &dyn Sampler,
+    cfg: &TrainConfig,
+) -> anyhow::Result<TrainReport> {
+    let compile_t = Timer::start();
+    let kind = match cfg.optimizer {
+        Optimizer::Sgd => Kind::TrainStep,
+        Optimizer::Adam => Kind::AdamStep,
+    };
+    let exe = runtime.compile_role(cfg.model, &cfg.geometry, kind)?;
+    let compile_s = compile_t.secs();
+    let spec = &exe.spec;
+    let geom = spec.geometry.clone();
+    anyhow::ensure!(
+        geom.layers() == sampler.num_layers(),
+        "sampler has {} layers, artifact geometry {} has {}",
+        sampler.num_layers(),
+        geom.name,
+        geom.layers()
+    );
+    let num_classes = geom.num_classes();
+    let feat_dim = geom.f[0];
+
+    let mut weights = WeightState::init_glorot(&spec.weight_shapes, cfg.seed);
+    let mut adam = (cfg.optimizer == Optimizer::Adam)
+        .then(|| AdamState::zeros(&spec.weight_shapes));
+    let mut metrics = Metrics::default();
+
+    let produced = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::sync_channel::<anyhow::Result<Prepared>>(2 * cfg.sampler_threads.max(1));
+
+    std::thread::scope(|scope| -> anyhow::Result<()> {
+        // ---- producers: sample -> values -> layout -> pad -> features.
+        for tid in 0..cfg.sampler_threads.max(1) {
+            let tx = tx.clone();
+            let produced = &produced;
+            let geom = &geom;
+            scope.spawn(move || {
+                let mut rng = Pcg64::seed_from_u64(cfg.seed ^ ((0xba7c4 ^ tid as u64) << 8));
+                loop {
+                    let k = produced.fetch_add(1, Ordering::Relaxed);
+                    if k >= cfg.steps {
+                        break;
+                    }
+                    let t = Timer::start();
+                    let item = prepare_batch(
+                        graph,
+                        sampler,
+                        cfg,
+                        geom,
+                        feat_dim,
+                        num_classes,
+                        &mut rng,
+                    )
+                    .map(|(padded, features, indexed)| Prepared {
+                        padded,
+                        features,
+                        indexed,
+                        prep_s: t.secs(),
+                    });
+                    if tx.send(item).is_err() {
+                        break; // consumer bailed
+                    }
+                }
+            });
+        }
+        drop(tx);
+
+        // ---- consumer: execute + weight threading.
+        let mut step = 0usize;
+        while let Ok(item) = rx.recv() {
+            let iter_t = Timer::start();
+            let prepared = item?;
+            let exec_t = Timer::start();
+            let lits = inputs::build_inputs_opt(
+                spec,
+                &prepared.padded,
+                &prepared.features,
+                &weights,
+                cfg.lr,
+                adam.as_ref(),
+            )?;
+            let outs = exe.run(&lits)?;
+            let loss = outs[0]
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("loss readback: {e:?}"))?[0];
+            anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}: {loss}");
+            let nparams = weights.tensors.len();
+            weights.update_from(&outs[1..1 + nparams])?;
+            if let Some(st) = adam.as_mut() {
+                st.update_from(&outs[1 + nparams..])?;
+            }
+            let exec_s = exec_t.secs();
+
+            metrics.losses.push(loss);
+            metrics.t_sampling.add(prepared.prep_s);
+            metrics.t_execute.add(exec_s);
+            metrics.vertices.push(prepared.padded.vertices_traversed);
+
+            if let Some((platform, accel_cfg)) = &cfg.simulate {
+                let sim = accel::simulate_batch(
+                    platform,
+                    accel_cfg,
+                    &prepared.indexed,
+                    &geom.f,
+                    SimOptions {
+                        sage_concat: cfg.model == GnnModel::Sage,
+                        ..Default::default()
+                    },
+                );
+                metrics.t_gnn_sim.add(sim.t_gnn);
+            }
+
+            metrics.t_iteration.add(iter_t.secs());
+            if cfg.log_every > 0 && step % cfg.log_every == 0 {
+                log::info!(
+                    "step {step}: loss {loss:.4}, exec {:.1} ms, prep {:.1} ms",
+                    exec_s * 1e3,
+                    prepared.prep_s * 1e3
+                );
+            }
+            step += 1;
+        }
+        Ok(())
+    })?;
+
+    Ok(TrainReport { metrics, final_weights: weights, compile_s })
+}
+
+/// Producer-side batch preparation (everything the paper's host program
+/// does between the sampler and the accelerator).
+fn prepare_batch(
+    graph: &Graph,
+    sampler: &dyn Sampler,
+    cfg: &TrainConfig,
+    geom: &crate::layout::Geometry,
+    feat_dim: usize,
+    num_classes: usize,
+    rng: &mut Pcg64,
+) -> anyhow::Result<(PaddedBatch, Vec<f32>, IndexedBatch)> {
+    let mb = sampler.sample(graph, rng);
+    let values = match &cfg.value_fn {
+        Some(f) => f(graph, &mb),
+        None => attach_values(graph, &mb, cfg.model),
+    };
+    let indexed = index_batch(&mb, &values, cfg.layout);
+    let ll = mb.num_layers();
+    let target_labels =
+        datasets::synth_labels(&mb.layers[ll], num_classes, cfg.seed, graph.num_vertices());
+    let padded = pad(&indexed, &target_labels, geom, cfg.overflow)?;
+    // Feature rows for B^0, labels drawn from the same per-vertex stream
+    // so the task is learnable.
+    let l0_labels =
+        datasets::synth_labels(&mb.layers[0], num_classes, cfg.seed, graph.num_vertices());
+    let real = datasets::synth_features(&mb.layers[0], &l0_labels, feat_dim, num_classes, cfg.seed);
+    let features = inputs::pad_features(&real, mb.layers[0].len(), geom.b[0], feat_dim);
+    Ok((padded, features, indexed))
+}

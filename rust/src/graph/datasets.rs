@@ -1,0 +1,269 @@
+//! Dataset registry — Table 4 of the paper, plus reduced variants.
+//!
+//! Each entry records the *published* statistics (|V|, |E|, f0/f1/f2) and
+//! can instantiate a statistic-matched synthetic graph (R-MAT at the same
+//! size and an equivalent degree skew).  `scale` produces proportionally
+//! reduced instances for the functional training path, keeping average
+//! degree constant so sampled mini-batch shapes stay representative.
+
+use super::generator::{self, RmatParams};
+use super::Graph;
+
+/// Published statistics of one evaluation dataset (paper Table 4).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DatasetSpec {
+    pub key: &'static str,
+    pub name: &'static str,
+    pub nodes: usize,
+    pub edges: usize,
+    /// GNN-layer dims from Table 4: input features, hidden, classes.
+    pub f0: usize,
+    pub f1: usize,
+    pub f2: usize,
+}
+
+pub const FLICKR: DatasetSpec = DatasetSpec {
+    key: "FL",
+    name: "Flickr",
+    nodes: 89_250,
+    edges: 899_756,
+    f0: 500,
+    f1: 256,
+    f2: 7,
+};
+
+pub const REDDIT: DatasetSpec = DatasetSpec {
+    key: "RD",
+    name: "Reddit",
+    nodes: 232_965,
+    edges: 11_606_919,
+    f0: 602,
+    f1: 256,
+    f2: 41,
+};
+
+pub const YELP: DatasetSpec = DatasetSpec {
+    key: "YP",
+    name: "Yelp",
+    nodes: 716_847,
+    edges: 6_977_410,
+    f0: 300,
+    f1: 256,
+    f2: 100,
+};
+
+pub const AMAZON_PRODUCTS: DatasetSpec = DatasetSpec {
+    key: "AP",
+    name: "AmazonProducts",
+    nodes: 1_598_960,
+    edges: 132_169_734,
+    f0: 200,
+    f1: 256,
+    f2: 107,
+};
+
+/// The paper's four evaluation datasets in Table 4 / 6 / 7 order.
+pub const ALL: [DatasetSpec; 4] = [FLICKR, REDDIT, YELP, AMAZON_PRODUCTS];
+
+pub fn by_key(key: &str) -> Option<DatasetSpec> {
+    ALL.iter().find(|d| d.key.eq_ignore_ascii_case(key) || d.name.eq_ignore_ascii_case(key)).copied()
+}
+
+impl DatasetSpec {
+    pub fn avg_degree(&self) -> f64 {
+        self.edges as f64 / self.nodes as f64
+    }
+
+    /// Feature matrix bytes (f32) — what the paper stores in FPGA DDR.
+    pub fn feature_bytes(&self) -> usize {
+        self.nodes * self.f0 * 4
+    }
+
+    /// Proportionally scaled spec (same average degree and dims).
+    pub fn scale(&self, factor: f64) -> ScaledDataset {
+        assert!(factor > 0.0 && factor <= 1.0, "scale factor in (0, 1]");
+        let nodes = ((self.nodes as f64 * factor) as usize).max(64);
+        let edges = ((nodes as f64 * self.avg_degree()) as usize).max(nodes);
+        ScaledDataset { spec: *self, nodes, edges }
+    }
+
+    /// Full-size synthetic instantiation (statistics of Table 4).
+    pub fn instantiate(&self, seed: u64) -> Graph {
+        self.scale(1.0).instantiate(seed)
+    }
+}
+
+/// A (possibly reduced) concrete instantiation target.
+#[derive(Debug, Clone, Copy)]
+pub struct ScaledDataset {
+    pub spec: DatasetSpec,
+    pub nodes: usize,
+    pub edges: usize,
+}
+
+impl ScaledDataset {
+    /// Materialize the synthetic graph: R-MAT at (nodes, edges) with a
+    /// degree floor of 1 so neighbor sampling never dead-ends.
+    pub fn instantiate(&self, seed: u64) -> Graph {
+        let g = generator::rmat(self.nodes, self.edges, RmatParams::default(), seed);
+        let mut g = generator::with_min_degree(g, 1, seed ^ 0x5ca1e);
+        g.feat_dim = self.spec.f0;
+        g.num_classes = self.spec.f2;
+        g.name = format!("{}@{}", self.spec.key, self.nodes);
+        g
+    }
+}
+
+/// Synthesize input features for a vertex set: class-conditioned Gaussians
+/// so that GNN training on the synthetic graph has learnable signal (the
+/// e2e example's loss curve must be able to descend).
+pub fn synth_features(
+    vertices: &[super::Vid],
+    labels: &[u8],
+    feat_dim: usize,
+    num_classes: usize,
+    seed: u64,
+) -> Vec<f32> {
+    assert_eq!(vertices.len(), labels.len());
+    let mut out = Vec::with_capacity(vertices.len() * feat_dim);
+    let nc = num_classes.max(1);
+    for (&v, &label) in vertices.iter().zip(labels) {
+        // Per-vertex deterministic stream: features don't depend on batch
+        // composition (the FPGA reads the same X rows each time).
+        // SplitMix64 + uniform noise of matched std (0.5): the Box-Muller
+        // normals cost 10x (ln/cos per element) for no training-signal
+        // benefit — EXPERIMENTS.md §Perf.
+        let mut sm = crate::util::rng::SplitMix64 {
+            state: seed ^ ((v as u64) << 20) ^ label as u64,
+        };
+        let c = label as usize % nc;
+        for j in 0..feat_dim {
+            // Class centroid: +1 on dimensions congruent to the class.
+            let centroid = if j % nc == c { 1.0f32 } else { 0.0 };
+            // Uniform noise, std 0.35 (signal-to-noise tuned so the tiny
+            // CI tasks train within a few dozen steps).
+            let u = (sm.next() >> 40) as f32 * (1.0 / (1u64 << 24) as f32);
+            out.push(centroid + (u - 0.5) * 1.2124356);
+        }
+    }
+    out
+}
+
+/// Deterministic per-vertex labels: contiguous id blocks mapped through a
+/// seeded class permutation.  Block structure aligns with R-MAT's
+/// hierarchical quadrants (vertices sharing id prefixes are preferentially
+/// connected), giving the *homophily* real GNN benchmarks have — without
+/// it, neighbor aggregation carries no label signal and GCN cannot learn
+/// on the synthetic data.
+pub fn synth_labels(
+    vertices: &[super::Vid],
+    num_classes: usize,
+    seed: u64,
+    num_vertices: usize,
+) -> Vec<u8> {
+    let nc = num_classes.max(1);
+    // Seeded permutation of class ids (labels differ across seeds).
+    let mut perm: Vec<u8> = (0..nc as u8).collect();
+    let mut rng = crate::util::rng::Pcg64::seed_from_u64(seed ^ 0x1abe15);
+    rng.shuffle(&mut perm);
+    let n = num_vertices.max(1) as u64;
+    vertices
+        .iter()
+        .map(|&v| {
+            let block = ((v as u64) * nc as u64 / n).min(nc as u64 - 1) as usize;
+            perm[block]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_matches_table4() {
+        assert_eq!(ALL.len(), 4);
+        assert_eq!(REDDIT.nodes, 232_965);
+        assert_eq!(REDDIT.edges, 11_606_919);
+        assert_eq!(REDDIT.f0, 602);
+        assert_eq!(AMAZON_PRODUCTS.f2, 107);
+        assert!(by_key("rd").unwrap() == REDDIT);
+        assert!(by_key("Flickr").unwrap() == FLICKR);
+        assert!(by_key("nope").is_none());
+    }
+
+    #[test]
+    fn scaled_instantiation_matches_stats() {
+        let ds = FLICKR.scale(0.02);
+        let g = ds.instantiate(1);
+        assert_eq!(g.num_vertices(), ds.nodes);
+        // Degree floor may add a few edges; stay within 25% of target.
+        let target = ds.edges as f64;
+        assert!(
+            (g.num_edges() as f64) > 0.75 * target && (g.num_edges() as f64) < 1.6 * target,
+            "edges {} vs target {target}",
+            g.num_edges()
+        );
+        assert_eq!(g.feat_dim, 500);
+        assert_eq!(g.num_classes, 7);
+    }
+
+    #[test]
+    fn labels_deterministic_and_in_range() {
+        let verts: Vec<u32> = (0..1000).collect();
+        let a = synth_labels(&verts, 7, 9, 1000);
+        let b = synth_labels(&verts, 7, 9, 1000);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&l| l < 7));
+        // Roughly uniform.
+        let mut counts = [0usize; 7];
+        for &l in &a {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 80), "{counts:?}");
+    }
+
+    #[test]
+    fn features_class_conditioned() {
+        let verts: Vec<u32> = (0..200).collect();
+        let labels = synth_labels(&verts, 4, 3, 200);
+        let feats = synth_features(&verts, &labels, 32, 4, 3);
+        assert_eq!(feats.len(), 200 * 32);
+        // Mean of class-c dimensions exceeds off-class dimensions.
+        let mut on = 0.0;
+        let mut off = 0.0;
+        let (mut n_on, mut n_off) = (0usize, 0usize);
+        for (i, &l) in labels.iter().enumerate() {
+            for j in 0..32 {
+                let x = feats[i * 32 + j] as f64;
+                if j % 4 == l as usize {
+                    on += x;
+                    n_on += 1;
+                } else {
+                    off += x;
+                    n_off += 1;
+                }
+            }
+        }
+        assert!(on / n_on as f64 > 0.7 && off / n_off as f64 - 0.0 < 0.3);
+    }
+
+    #[test]
+    fn features_stable_across_batches() {
+        let a = synth_features(&[5, 9], &[1, 2], 8, 4, 7);
+        let b = synth_features(&[9], &[2], 8, 4, 7);
+        assert_eq!(&a[8..], &b[..], "vertex 9 features depend on batch");
+    }
+
+    #[test]
+    fn labels_are_homophilous_blocks() {
+        let verts: Vec<u32> = (0..1000).collect();
+        let labels = synth_labels(&verts, 4, 11, 1000);
+        // Adjacent ids share labels except at ~nc block boundaries.
+        let changes = labels.windows(2).filter(|w| w[0] != w[1]).count();
+        assert!(changes <= 4, "{changes} label changes — not block structured");
+        // Different seeds permute the classes.
+        let other = synth_labels(&verts, 4, 12, 1000);
+        assert_ne!(labels, other);
+    }
+}

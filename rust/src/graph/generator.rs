@@ -1,0 +1,160 @@
+//! Synthetic graph generators.
+//!
+//! The paper's datasets (Flickr, Reddit, Yelp, AmazonProducts) are not
+//! shipped with this repo; [`rmat`] produces R-MAT/Kronecker-style
+//! power-law graphs whose degree skew matches social/e-commerce graphs,
+//! and `datasets.rs` instantiates them at the exact |V|, |E| of Table 4.
+//! Sampling throughput depends only on (|V|, |E|, degree structure), so
+//! this preserves the behaviour the experiments measure (DESIGN.md §2).
+
+use super::{Graph, Vid};
+use crate::util::rng::Pcg64;
+
+/// R-MAT parameters. (a, b, c) are the quadrant probabilities; d = 1-a-b-c.
+/// Defaults are the Graph500 constants, a well-studied social-graph skew.
+#[derive(Debug, Clone, Copy)]
+pub struct RmatParams {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    /// Add the reverse of every generated edge (undirected datasets).
+    pub symmetric: bool,
+}
+
+impl Default for RmatParams {
+    fn default() -> Self {
+        RmatParams { a: 0.57, b: 0.19, c: 0.19, symmetric: true }
+    }
+}
+
+/// Generate an R-MAT graph with ~`num_edges` directed edges over
+/// `num_vertices` vertices (rounded up to a power of two internally, ids
+/// taken modulo `num_vertices`).
+pub fn rmat(num_vertices: usize, num_edges: usize, params: RmatParams, seed: u64) -> Graph {
+    assert!(num_vertices > 1, "rmat needs at least 2 vertices");
+    let scale = (num_vertices as f64).log2().ceil() as u32;
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut edges = Vec::with_capacity(if params.symmetric { num_edges * 2 } else { num_edges });
+    let gen_count = if params.symmetric { num_edges / 2 } else { num_edges };
+    for _ in 0..gen_count.max(1) {
+        let (mut u, mut v) = (0usize, 0usize);
+        for _ in 0..scale {
+            let r = rng.f64();
+            let (du, dv) = if r < params.a {
+                (0, 0)
+            } else if r < params.a + params.b {
+                (0, 1)
+            } else if r < params.a + params.b + params.c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            u = (u << 1) | du;
+            v = (v << 1) | dv;
+        }
+        let u = (u % num_vertices) as Vid;
+        let v = (v % num_vertices) as Vid;
+        edges.push((u, v));
+        if params.symmetric {
+            edges.push((v, u));
+        }
+    }
+    Graph::from_edges(num_vertices, &edges)
+}
+
+/// Erdős–Rényi-style uniform random graph (baseline generator; used by
+/// property tests to exercise samplers on non-skewed structure).
+pub fn uniform(num_vertices: usize, num_edges: usize, symmetric: bool, seed: u64) -> Graph {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let gen_count = if symmetric { num_edges / 2 } else { num_edges };
+    let mut edges = Vec::with_capacity(num_edges);
+    for _ in 0..gen_count.max(1) {
+        let u = rng.index(num_vertices) as Vid;
+        let v = rng.index(num_vertices) as Vid;
+        edges.push((u, v));
+        if symmetric {
+            edges.push((v, u));
+        }
+    }
+    Graph::from_edges(num_vertices, &edges)
+}
+
+/// Ensure a minimum out-degree by wiring a ring through low-degree
+/// vertices (prevents dead ends in neighbor sampling on small graphs).
+pub fn with_min_degree(g: Graph, min_degree: usize, seed: u64) -> Graph {
+    let n = g.num_vertices();
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut edges: Vec<(Vid, Vid)> = Vec::with_capacity(g.num_edges() + n);
+    for v in 0..n {
+        for &w in g.neighbors(v as Vid) {
+            edges.push((v as Vid, w));
+        }
+        let mut need = min_degree.saturating_sub(g.degree(v as Vid));
+        while need > 0 {
+            let w = rng.index(n) as Vid;
+            if w as usize != v {
+                edges.push((v as Vid, w));
+                need -= 1;
+            }
+        }
+    }
+    let mut out = Graph::from_edges(n, &edges);
+    out.feat_dim = g.feat_dim;
+    out.num_classes = g.num_classes;
+    out.name = g.name;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmat_has_requested_size() {
+        let g = rmat(1000, 8000, RmatParams::default(), 7);
+        assert_eq!(g.num_vertices(), 1000);
+        // Symmetric generation rounds to even, stays close to target.
+        assert!((g.num_edges() as i64 - 8000).abs() <= 2, "{}", g.num_edges());
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        let g = rmat(4096, 60_000, RmatParams::default(), 11);
+        let mut degs: Vec<usize> = (0..g.num_vertices()).map(|v| g.degree(v as Vid)).collect();
+        degs.sort_unstable_by(|a, b| b.cmp(a));
+        let top1pct: usize = degs[..g.num_vertices() / 100].iter().sum();
+        // Power-law: top 1% of vertices hold far more than 1% of edges.
+        assert!(
+            top1pct as f64 > 0.08 * g.num_edges() as f64,
+            "top1% holds {top1pct} of {}",
+            g.num_edges()
+        );
+    }
+
+    #[test]
+    fn rmat_deterministic() {
+        let a = rmat(512, 4096, RmatParams::default(), 3);
+        let b = rmat(512, 4096, RmatParams::default(), 3);
+        assert_eq!(a.adj, b.adj);
+        let c = rmat(512, 4096, RmatParams::default(), 4);
+        assert_ne!(a.adj, c.adj);
+    }
+
+    #[test]
+    fn uniform_is_flat() {
+        let g = uniform(2048, 40_000, true, 5);
+        let max_deg = (0..g.num_vertices()).map(|v| g.degree(v as Vid)).max().unwrap();
+        // Poisson(≈20): max degree stays moderate, unlike R-MAT.
+        assert!(max_deg < 60, "max degree {max_deg}");
+    }
+
+    #[test]
+    fn with_min_degree_enforces_floor() {
+        let g = uniform(256, 300, false, 9);
+        let g = with_min_degree(g, 3, 10);
+        for v in 0..g.num_vertices() {
+            assert!(g.degree(v as Vid) >= 3, "vertex {v}");
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! Edge-list I/O: text (one `src dst` pair per line, `#` comments) and a
+//! compact binary format for larger graphs.  `LoadInputGraph()` in the
+//! paper's API (Table 1) maps here.
+
+use std::io::{BufRead, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::{Graph, Vid};
+
+const BIN_MAGIC: &[u8; 8] = b"HPGNNG01";
+
+/// Load a whitespace-separated edge list. Vertex count is
+/// `max id + 1` unless a `# vertices: N` header is present.
+pub fn load_edge_list(path: &Path) -> anyhow::Result<Graph> {
+    let file = std::fs::File::open(path)?;
+    let reader = std::io::BufReader::new(file);
+    let mut edges: Vec<(Vid, Vid)> = Vec::new();
+    let mut declared_vertices: Option<usize> = None;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        if let Some(rest) = trimmed.strip_prefix('#') {
+            if let Some(v) = rest.trim().strip_prefix("vertices:") {
+                declared_vertices = Some(v.trim().parse()?);
+            }
+            continue;
+        }
+        let mut it = trimmed.split_whitespace();
+        let u: Vid = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {}: missing src", lineno + 1))?
+            .parse()?;
+        let v: Vid = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {}: missing dst", lineno + 1))?
+            .parse()?;
+        edges.push((u, v));
+    }
+    let max_id = edges.iter().map(|&(u, v)| u.max(v)).max().unwrap_or(0) as usize;
+    let n = declared_vertices.unwrap_or(max_id + 1).max(max_id + 1);
+    let g = Graph::from_edges(n, &edges);
+    g.validate()?;
+    Ok(g)
+}
+
+/// Save as text edge list with a vertex-count header.
+pub fn save_edge_list(g: &Graph, path: &Path) -> anyhow::Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "# vertices: {}", g.num_vertices())?;
+    for v in 0..g.num_vertices() {
+        for &u in g.neighbors(v as Vid) {
+            writeln!(w, "{v} {u}")?;
+        }
+    }
+    Ok(())
+}
+
+/// Save in the compact binary format (u64 counts, u32 ids, little endian).
+pub fn save_binary(g: &Graph, path: &Path) -> anyhow::Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    w.write_all(BIN_MAGIC)?;
+    w.write_all(&(g.num_vertices() as u64).to_le_bytes())?;
+    w.write_all(&(g.num_edges() as u64).to_le_bytes())?;
+    w.write_all(&(g.feat_dim as u64).to_le_bytes())?;
+    w.write_all(&(g.num_classes as u64).to_le_bytes())?;
+    for &p in &g.row_ptr {
+        w.write_all(&(p as u64).to_le_bytes())?;
+    }
+    for &v in &g.adj {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Load the binary format written by [`save_binary`].
+pub fn load_binary(path: &Path) -> anyhow::Result<Graph> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+    anyhow::ensure!(bytes.len() >= 40, "file too short");
+    anyhow::ensure!(&bytes[..8] == BIN_MAGIC, "bad magic (not an hp-gnn graph)");
+    let mut off = 8usize;
+    let mut read_u64 = |bytes: &[u8]| -> anyhow::Result<u64> {
+        anyhow::ensure!(off + 8 <= bytes.len(), "truncated header");
+        let v = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
+        off += 8;
+        Ok(v)
+    };
+    let n = read_u64(&bytes)? as usize;
+    let e = read_u64(&bytes)? as usize;
+    let feat_dim = read_u64(&bytes)? as usize;
+    let num_classes = read_u64(&bytes)? as usize;
+    let need = off + (n + 1) * 8 + e * 4;
+    anyhow::ensure!(bytes.len() == need, "size mismatch: have {}, want {need}", bytes.len());
+    let mut row_ptr = Vec::with_capacity(n + 1);
+    for i in 0..=n {
+        let start = off + i * 8;
+        row_ptr.push(u64::from_le_bytes(bytes[start..start + 8].try_into().unwrap()) as usize);
+    }
+    let adj_off = off + (n + 1) * 8;
+    let mut adj = Vec::with_capacity(e);
+    for i in 0..e {
+        let start = adj_off + i * 4;
+        adj.push(u32::from_le_bytes(bytes[start..start + 4].try_into().unwrap()));
+    }
+    let g = Graph { row_ptr, adj, feat_dim, num_classes, name: String::new() };
+    g.validate()?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("hpgnn-io-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn text_round_trip() {
+        let g = generator::uniform(64, 300, false, 1);
+        let path = tmpdir().join("g.txt");
+        save_edge_list(&g, &path).unwrap();
+        let g2 = load_edge_list(&path).unwrap();
+        assert_eq!(g.num_vertices(), g2.num_vertices());
+        assert_eq!(g.adj, g2.adj);
+        assert_eq!(g.row_ptr, g2.row_ptr);
+    }
+
+    #[test]
+    fn binary_round_trip_preserves_metadata() {
+        let mut g = generator::rmat(128, 1000, Default::default(), 2);
+        g.feat_dim = 500;
+        g.num_classes = 7;
+        let path = tmpdir().join("g.bin");
+        save_binary(&g, &path).unwrap();
+        let g2 = load_binary(&path).unwrap();
+        assert_eq!(g.adj, g2.adj);
+        assert_eq!(g2.feat_dim, 500);
+        assert_eq!(g2.num_classes, 7);
+    }
+
+    #[test]
+    fn text_parses_comments_and_header() {
+        let path = tmpdir().join("c.txt");
+        std::fs::write(&path, "# vertices: 10\n# comment\n0 1\n\n2 3\n").unwrap();
+        let g = load_edge_list(&path).unwrap();
+        assert_eq!(g.num_vertices(), 10);
+        assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    fn binary_rejects_corruption() {
+        let g = generator::uniform(32, 100, false, 3);
+        let path = tmpdir().join("bad.bin");
+        save_binary(&g, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(bytes.len() - 3);
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_binary(&path).is_err());
+        std::fs::write(&path, b"NOTMAGIC plus").unwrap();
+        assert!(load_binary(&path).is_err());
+    }
+
+    #[test]
+    fn text_rejects_garbage() {
+        let path = tmpdir().join("garb.txt");
+        std::fs::write(&path, "0 x\n").unwrap();
+        assert!(load_edge_list(&path).is_err());
+    }
+}

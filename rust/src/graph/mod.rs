@@ -1,0 +1,196 @@
+//! Graph substrate: CSR storage, synthetic generators, dataset registry.
+//!
+//! The paper stores the structural information (V, E) in host memory for
+//! the CPU sampler and the feature matrix X in FPGA local DDR (Fig. 3).
+//! [`Graph`] is the host-side structure; feature placement across DDR
+//! channels is modeled by [`partition`].
+
+pub mod datasets;
+pub mod generator;
+pub mod io;
+pub mod partition;
+
+use crate::util::rng::Pcg64;
+
+/// Vertex id. 32 bits covers the paper's largest dataset (AmazonProducts,
+/// 1.6M vertices) with room to spare and halves sampler memory traffic.
+pub type Vid = u32;
+
+/// Compressed-sparse-row graph with out-neighbor adjacency.
+///
+/// Edges are directed; undirected datasets store both directions.
+/// `adj[row_ptr[v]..row_ptr[v+1]]` are the neighbors of `v`.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub row_ptr: Vec<usize>,
+    pub adj: Vec<Vid>,
+    /// Input feature dimension (features themselves are synthesized on
+    /// demand — see `datasets::synth_features`).
+    pub feat_dim: usize,
+    pub num_classes: usize,
+    pub name: String,
+}
+
+impl Graph {
+    /// Build CSR from an edge list (duplicates kept, self loops kept —
+    /// samplers and normalization decide policy).
+    pub fn from_edges(num_vertices: usize, edges: &[(Vid, Vid)]) -> Graph {
+        let mut deg = vec![0usize; num_vertices];
+        for &(u, _) in edges {
+            assert!((u as usize) < num_vertices, "edge source {u} out of range");
+            deg[u as usize] += 1;
+        }
+        let mut row_ptr = vec![0usize; num_vertices + 1];
+        for v in 0..num_vertices {
+            row_ptr[v + 1] = row_ptr[v] + deg[v];
+        }
+        let mut adj = vec![0 as Vid; edges.len()];
+        let mut cursor = row_ptr.clone();
+        for &(u, v) in edges {
+            assert!((v as usize) < num_vertices, "edge target {v} out of range");
+            adj[cursor[u as usize]] = v;
+            cursor[u as usize] += 1;
+        }
+        // Sorted adjacency gives deterministic sampling + faster locality.
+        for v in 0..num_vertices {
+            adj[row_ptr[v]..row_ptr[v + 1]].sort_unstable();
+        }
+        Graph { row_ptr, adj, feat_dim: 0, num_classes: 0, name: String::new() }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.row_ptr.len() - 1
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.adj.len()
+    }
+
+    pub fn degree(&self, v: Vid) -> usize {
+        self.row_ptr[v as usize + 1] - self.row_ptr[v as usize]
+    }
+
+    pub fn neighbors(&self, v: Vid) -> &[Vid] {
+        &self.adj[self.row_ptr[v as usize]..self.row_ptr[v as usize + 1]]
+    }
+
+    /// Uniformly sample one neighbor of `v`; None if isolated.
+    pub fn sample_neighbor(&self, v: Vid, rng: &mut Pcg64) -> Option<Vid> {
+        let n = self.neighbors(v);
+        if n.is_empty() {
+            None
+        } else {
+            Some(n[rng.index(n.len())])
+        }
+    }
+
+    /// Average degree.
+    pub fn avg_degree(&self) -> f64 {
+        self.num_edges() as f64 / self.num_vertices().max(1) as f64
+    }
+
+    /// GCN symmetric normalization 1/sqrt(D(u) D(v)) for an edge (u, v),
+    /// degrees counted with the self loop (A + I convention, Eq. 1).
+    pub fn gcn_norm(&self, u: Vid, v: Vid) -> f32 {
+        let du = (self.degree(u) + 1) as f64;
+        let dv = (self.degree(v) + 1) as f64;
+        (1.0 / (du * dv).sqrt()) as f32
+    }
+
+    /// Structural validation (used by tests and after deserialization).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let n = self.num_vertices();
+        anyhow::ensure!(self.row_ptr[0] == 0, "row_ptr must start at 0");
+        for v in 0..n {
+            anyhow::ensure!(
+                self.row_ptr[v] <= self.row_ptr[v + 1],
+                "row_ptr not monotone at {v}"
+            );
+        }
+        anyhow::ensure!(
+            *self.row_ptr.last().unwrap() == self.adj.len(),
+            "row_ptr tail {} != adj len {}",
+            self.row_ptr.last().unwrap(),
+            self.adj.len()
+        );
+        anyhow::ensure!(
+            self.adj.iter().all(|&v| (v as usize) < n),
+            "adjacency id out of range"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Graph {
+        // 0 -> {1, 2}, 1 -> {3}, 2 -> {3}, 3 -> {0}
+        Graph::from_edges(4, &[(0, 1), (0, 2), (1, 3), (2, 3), (3, 0)])
+    }
+
+    #[test]
+    fn csr_construction() {
+        let g = diamond();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 5);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[3]);
+        assert_eq!(g.neighbors(3), &[0]);
+        assert_eq!(g.degree(2), 1);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn unsorted_input_sorted_adjacency() {
+        let g = Graph::from_edges(3, &[(0, 2), (0, 1), (0, 0)]);
+        assert_eq!(g.neighbors(0), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn isolated_vertex() {
+        let g = Graph::from_edges(3, &[(0, 1)]);
+        assert_eq!(g.degree(2), 0);
+        assert!(g.neighbors(2).is_empty());
+        let mut rng = Pcg64::seed_from_u64(0);
+        assert_eq!(g.sample_neighbor(2, &mut rng), None);
+    }
+
+    #[test]
+    fn sample_neighbor_uniform() {
+        let g = diamond();
+        let mut rng = Pcg64::seed_from_u64(1);
+        let mut counts = [0usize; 2];
+        for _ in 0..10_000 {
+            match g.sample_neighbor(0, &mut rng) {
+                Some(1) => counts[0] += 1,
+                Some(2) => counts[1] += 1,
+                other => panic!("unexpected neighbor {other:?}"),
+            }
+        }
+        assert!(counts[0] > 4_500 && counts[1] > 4_500, "{counts:?}");
+    }
+
+    #[test]
+    fn gcn_norm_symmetric_formula() {
+        let g = diamond();
+        // deg(0)=2, deg(1)=1; with self loops 3 and 2.
+        let want = 1.0 / (3.0f32 * 2.0).sqrt();
+        assert!((g.gcn_norm(0, 1) - want).abs() < 1e-6);
+        assert_eq!(g.gcn_norm(0, 1), g.gcn_norm(1, 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_out_of_range_edges() {
+        Graph::from_edges(2, &[(0, 5)]);
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let mut g = diamond();
+        g.adj[0] = 99;
+        assert!(g.validate().is_err());
+    }
+}

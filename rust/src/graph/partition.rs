@@ -1,0 +1,106 @@
+//! Feature-matrix partitioning across DDR channels (paper Fig. 7).
+//!
+//! "The input feature matrix X is equally partitioned into DDR channels";
+//! each die's kernels read mostly from their own channel through the
+//! all-to-all interconnect.  The accelerator simulator charges cross-channel
+//! reads the interconnect penalty, so the partition map matters for timing.
+
+use super::Vid;
+
+/// Block partition of `num_vertices` rows over `channels` DDR channels.
+#[derive(Debug, Clone)]
+pub struct ChannelPartition {
+    pub num_vertices: usize,
+    pub channels: usize,
+    /// `bounds[c]..bounds[c+1]` is the vertex range of channel c.
+    pub bounds: Vec<usize>,
+}
+
+impl ChannelPartition {
+    pub fn even(num_vertices: usize, channels: usize) -> Self {
+        assert!(channels > 0, "at least one DDR channel");
+        let base = num_vertices / channels;
+        let rem = num_vertices % channels;
+        let mut bounds = Vec::with_capacity(channels + 1);
+        bounds.push(0);
+        for c in 0..channels {
+            let size = base + usize::from(c < rem);
+            bounds.push(bounds[c] + size);
+        }
+        ChannelPartition { num_vertices, channels, bounds }
+    }
+
+    /// Which channel holds vertex `v`'s feature row.
+    pub fn channel_of(&self, v: Vid) -> usize {
+        let v = v as usize;
+        assert!(v < self.num_vertices, "vertex {v} out of partition");
+        // Channels are near-equal blocks; direct computation beats binary
+        // search on the hot path.
+        let base = self.num_vertices / self.channels;
+        let rem = self.num_vertices % self.channels;
+        let big = (base + 1) * rem; // first `rem` channels have base+1 rows
+        if base == 0 {
+            // More channels than vertices: vertex v lives in channel v.
+            return v;
+        }
+        if v < big {
+            v / (base + 1)
+        } else {
+            rem + (v - big) / base
+        }
+    }
+
+    pub fn size_of(&self, channel: usize) -> usize {
+        self.bounds[channel + 1] - self.bounds[channel]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Runner;
+
+    #[test]
+    fn even_partition_covers_all() {
+        let p = ChannelPartition::even(103, 4);
+        assert_eq!(p.bounds, vec![0, 26, 52, 78, 103]);
+        let total: usize = (0..4).map(|c| p.size_of(c)).sum();
+        assert_eq!(total, 103);
+        // Sizes differ by at most one.
+        let sizes: Vec<_> = (0..4).map(|c| p.size_of(c)).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn channel_of_matches_bounds() {
+        let p = ChannelPartition::even(1000, 7);
+        for v in 0..1000u32 {
+            let c = p.channel_of(v);
+            assert!(p.bounds[c] <= v as usize && (v as usize) < p.bounds[c + 1], "v={v} c={c}");
+        }
+    }
+
+    #[test]
+    fn property_channel_of_consistent() {
+        Runner::new(32, 1).run(
+            |rng| (2 + rng.index(5000), 1 + rng.index(8)),
+            |&(n, ch)| {
+                let p = ChannelPartition::even(n, ch);
+                for v in (0..n).step_by((n / 97).max(1)) {
+                    let c = p.channel_of(v as Vid);
+                    if !(p.bounds[c] <= v && v < p.bounds[c + 1]) {
+                        return Err(format!("v={v} mapped to wrong channel {c}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn more_channels_than_vertices() {
+        let p = ChannelPartition::even(3, 8);
+        assert_eq!(p.channel_of(0), 0);
+        assert_eq!(p.channel_of(2), 2);
+    }
+}

@@ -1,0 +1,378 @@
+//! Data layout & internal representation (paper §4.1) and geometry padding.
+//!
+//! The two optimizations evaluated in Table 6:
+//!
+//! * **RMT** (Reduce Memory Traffic): edges in COO sorted by *source*
+//!   vertex so consecutive edges reuse the loaded feature vector — feature
+//!   traffic drops from O(|E^1| f^0) to O(|B^0| f^0).
+//! * **RRA** (Reduce Random Access): *vertex renaming* labels vertices by
+//!   storage order, then edges are re-sorted by the renamed sources, so
+//!   hidden-feature reads become sequential.
+//!
+//! [`index_batch`] turns a global-id [`MiniBatch`] into positional COO
+//! (every executable needs positions), recording which optimizations were
+//! applied; the accelerator simulator consults those flags to decide
+//! whether feature reads are sequential or random (the functional result
+//! never changes — the paper's optimizations are timing-only).
+//!
+//! [`pad`] then pads the indexed batch to a fixed [`Geometry`] for the AOT
+//! executable.
+
+pub mod pad;
+
+use crate::graph::Vid;
+use crate::sampler::values::EdgeValues;
+use crate::sampler::MiniBatch;
+
+/// Fixed shapes of one compiled mini-batch class (mirror of
+/// `python/compile/geometry.py`; parsed from the artifact manifest).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Geometry {
+    pub name: String,
+    /// Padded vertex count per layer, `b[0]` input ... `b[L]` targets.
+    pub b: Vec<usize>,
+    /// Padded edge count per layer (`e[l-1]` connects layers l-1 and l).
+    pub e: Vec<usize>,
+    /// Feature dims; `f[L]` is the class count.
+    pub f: Vec<usize>,
+}
+
+impl Geometry {
+    pub fn layers(&self) -> usize {
+        self.e.len()
+    }
+
+    pub fn num_classes(&self) -> usize {
+        *self.f.last().unwrap()
+    }
+
+    /// Σ_l b[l] — padded NVTPS numerator (real batches report their own).
+    pub fn total_vertices(&self) -> usize {
+        self.b.iter().sum()
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.b.len() == self.f.len(), "b/f length mismatch");
+        anyhow::ensure!(self.e.len() + 1 == self.b.len(), "e length mismatch");
+        anyhow::ensure!(self.layers() >= 1, "at least one layer");
+        for l in 1..self.b.len() {
+            anyhow::ensure!(self.b[l] <= self.b[l - 1], "b must be non-increasing");
+        }
+        Ok(())
+    }
+}
+
+/// Layout optimization switches (Table 6 ablation axes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LayoutOptions {
+    /// Sort each layer's COO stream by source index (RMT).
+    pub rmt: bool,
+    /// Rename vertices to storage order before sorting (RRA).  Renaming is
+    /// what makes sorted sources *sequential addresses*; without it sorting
+    /// still enables register reuse but reads remain scattered.
+    pub rra: bool,
+}
+
+impl LayoutOptions {
+    pub fn all() -> Self {
+        LayoutOptions { rmt: true, rra: true }
+    }
+
+    pub fn none() -> Self {
+        LayoutOptions { rmt: false, rra: false }
+    }
+}
+
+/// One layer of positional COO: indices into the adjacent layers' vertex
+/// lists, plus the SAGE self-index gather.
+#[derive(Debug, Clone)]
+pub struct IndexedLayer {
+    /// Position of the edge source in layer l-1's vertex list.
+    pub src: Vec<u32>,
+    /// Position of the edge destination in layer l's vertex list.
+    pub dst: Vec<u32>,
+    pub val: Vec<f32>,
+    /// For each layer-l vertex, its position in layer l-1's list.
+    pub self_idx: Vec<u32>,
+}
+
+/// A mini-batch in positional form, ready for padding/execution and for
+/// the accelerator simulator.
+#[derive(Debug, Clone)]
+pub struct IndexedBatch {
+    /// Global ids per layer, in storage order (drives feature fetch).
+    pub layers: Vec<Vec<Vid>>,
+    pub layer_edges: Vec<IndexedLayer>,
+    pub opts: LayoutOptions,
+}
+
+impl IndexedBatch {
+    pub fn num_layers(&self) -> usize {
+        self.layer_edges.len()
+    }
+
+    pub fn vertices_traversed(&self) -> usize {
+        self.layers.iter().map(|l| l.len()).sum()
+    }
+}
+
+/// Build the positional representation of `batch` under `opts`.
+///
+/// Functional semantics are identical for every `opts` value — only the
+/// edge *order* (RMT) and the recorded flags (consumed by the timing
+/// simulator) change.
+pub fn index_batch(
+    batch: &MiniBatch,
+    values: &EdgeValues,
+    opts: LayoutOptions,
+) -> IndexedBatch {
+    let ll = batch.num_layers();
+    assert_eq!(values.len(), ll, "values per layer");
+
+    // Position maps: global id -> storage position per layer.
+    let pos_maps: Vec<std::collections::HashMap<Vid, u32>> = batch
+        .layers
+        .iter()
+        .map(|layer| {
+            layer
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| (v, i as u32))
+                .collect()
+        })
+        .collect();
+
+    let mut layer_edges = Vec::with_capacity(ll);
+    for l in 0..ll {
+        let edges = &batch.edges[l];
+        let vals = &values[l];
+        assert_eq!(edges.len(), vals.len(), "layer {l} edge/value mismatch");
+
+        // Resolve positions once (one hash lookup per endpoint); the sort
+        // then runs on cached u64 keys.  Hash lookups inside the sort
+        // comparator made this 25x slower (EXPERIMENTS.md §Perf).
+        let src_pos: Vec<u32> = edges.iter().map(|e| pos_maps[l][&e.src]).collect();
+        let dst_pos: Vec<u32> = edges.iter().map(|e| pos_maps[l + 1][&e.dst]).collect();
+
+        let mut order: Vec<u32> = (0..edges.len() as u32).collect();
+        if opts.rmt {
+            let keys: Vec<u64> = if opts.rra {
+                // RRA: sort by renamed (positional) source — sequential
+                // storage-order reads.
+                edges
+                    .iter()
+                    .enumerate()
+                    .map(|(i, _)| ((src_pos[i] as u64) << 32) | dst_pos[i] as u64)
+                    .collect()
+            } else {
+                // RMT only: sort by *global* source id — register reuse,
+                // but addresses stay in graph-id order.
+                edges
+                    .iter()
+                    .map(|e| ((e.src as u64) << 32) | e.dst as u64)
+                    .collect()
+            };
+            order.sort_unstable_by_key(|&i| keys[i as usize]);
+        }
+
+        let src = order.iter().map(|&i| src_pos[i as usize]).collect();
+        let dst = order.iter().map(|&i| dst_pos[i as usize]).collect();
+        let val = order.iter().map(|&i| vals[i as usize]).collect();
+        let self_idx = batch.layers[l + 1]
+            .iter()
+            .map(|v| pos_maps[l][v])
+            .collect();
+
+        layer_edges.push(IndexedLayer { src, dst, val, self_idx });
+    }
+
+    IndexedBatch { layers: batch.layers.clone(), layer_edges, opts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::sampler::neighbor::NeighborSampler;
+    use crate::sampler::values::{attach_values, GnnModel};
+    use crate::sampler::Sampler;
+    use crate::util::rng::Pcg64;
+
+    fn setup() -> (crate::graph::Graph, MiniBatch, EdgeValues) {
+        let g = generator::with_min_degree(
+            generator::rmat(300, 2500, Default::default(), 8),
+            1,
+            9,
+        );
+        let s = NeighborSampler::new(8, vec![4, 3]);
+        let mb = s.sample(&g, &mut Pcg64::seed_from_u64(10));
+        let vals = attach_values(&g, &mb, GnnModel::Gcn);
+        (g, mb, vals)
+    }
+
+    /// Dense aggregation over an indexed layer — reference semantics.
+    fn aggregate_positions(layer: &IndexedLayer, num_in: usize, num_out: usize) -> Vec<f64> {
+        // Feature = one-hot of source position; output row v collects
+        // weighted source positions — enough to detect any wiring change.
+        let mut out = vec![0.0f64; num_out];
+        for ((&s, &d), &v) in layer.src.iter().zip(&layer.dst).zip(&layer.val) {
+            assert!((s as usize) < num_in && (d as usize) < num_out);
+            out[d as usize] += v as f64 * (s as f64 + 1.0);
+        }
+        out
+    }
+
+    #[test]
+    fn layout_options_do_not_change_semantics() {
+        let (_g, mb, vals) = setup();
+        let base = index_batch(&mb, &vals, LayoutOptions::none());
+        let rmt = index_batch(&mb, &vals, LayoutOptions { rmt: true, rra: false });
+        let all = index_batch(&mb, &vals, LayoutOptions::all());
+        for l in 0..mb.num_layers() {
+            let n_in = mb.layers[l].len();
+            let n_out = mb.layers[l + 1].len();
+            let a = aggregate_positions(&base.layer_edges[l], n_in, n_out);
+            let b = aggregate_positions(&rmt.layer_edges[l], n_in, n_out);
+            let c = aggregate_positions(&all.layer_edges[l], n_in, n_out);
+            for i in 0..n_out {
+                assert!((a[i] - b[i]).abs() < 1e-9, "layer {l} row {i}");
+                assert!((a[i] - c[i]).abs() < 1e-9, "layer {l} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn rra_sorts_by_position_rmt_by_global_id() {
+        let (_g, mb, vals) = setup();
+        let rmt = index_batch(&mb, &vals, LayoutOptions { rmt: true, rra: false });
+        let all = index_batch(&mb, &vals, LayoutOptions::all());
+        for l in 0..mb.num_layers() {
+            // RRA: positional sources non-decreasing.
+            let src = &all.layer_edges[l].src;
+            assert!(src.windows(2).all(|w| w[0] <= w[1]), "rra layer {l} not sorted");
+            // RMT without RRA: *global* source ids non-decreasing.
+            let global: Vec<Vid> = rmt.layer_edges[l]
+                .src
+                .iter()
+                .map(|&i| mb.layers[l][i as usize])
+                .collect();
+            assert!(global.windows(2).all(|w| w[0] <= w[1]), "rmt layer {l} not sorted");
+        }
+    }
+
+    #[test]
+    fn self_idx_points_to_same_vertex() {
+        let (_g, mb, vals) = setup();
+        let ib = index_batch(&mb, &vals, LayoutOptions::all());
+        for l in 0..mb.num_layers() {
+            for (i, &p) in ib.layer_edges[l].self_idx.iter().enumerate() {
+                assert_eq!(mb.layers[l][p as usize], mb.layers[l + 1][i]);
+            }
+        }
+    }
+
+    #[test]
+    fn unsorted_baseline_preserves_sampler_order() {
+        let (_g, mb, vals) = setup();
+        let base = index_batch(&mb, &vals, LayoutOptions::none());
+        // First edge must be the sampler's first edge (self loop of the
+        // first frontier vertex).
+        let first = mb.edges[0][0];
+        let l0 = &base.layer_edges[0];
+        assert_eq!(mb.layers[0][l0.src[0] as usize], first.src);
+        assert_eq!(mb.layers[1][l0.dst[0] as usize], first.dst);
+    }
+
+    #[test]
+    fn geometry_validation() {
+        let good = Geometry {
+            name: "t".into(),
+            b: vec![96, 16, 4],
+            e: vec![96, 16],
+            f: vec![16, 8, 4],
+        };
+        good.validate().unwrap();
+        assert_eq!(good.layers(), 2);
+        assert_eq!(good.num_classes(), 4);
+        assert_eq!(good.total_vertices(), 116);
+        let bad = Geometry { b: vec![4, 16], ..good.clone() };
+        assert!(bad.validate().is_err());
+    }
+}
+
+#[cfg(test)]
+mod figure4_tests {
+    //! The paper's Fig. 4 worked example: the data layout pipeline on a
+    //! concrete hand-checkable batch.
+
+    use super::*;
+    use crate::sampler::{Edge, MiniBatch};
+
+    /// Layer-1 style batch: 4 destinations pulling from 6 sources with
+    /// deliberately shuffled sampler order and non-contiguous global ids.
+    fn fig4_batch() -> (MiniBatch, crate::sampler::values::EdgeValues) {
+        // Global ids chosen so storage order != id order.
+        let b0 = vec![7u32, 1, 9, 3, 12, 5];
+        let b1 = vec![9u32, 3, 7, 1];
+        let edges = vec![
+            // (src, dst) in "arrival" order — scattered on purpose.
+            Edge { src: 12, dst: 9 },
+            Edge { src: 7, dst: 3 },
+            Edge { src: 9, dst: 9 },   // self loop
+            Edge { src: 3, dst: 3 },   // self loop
+            Edge { src: 1, dst: 7 },
+            Edge { src: 7, dst: 7 },   // self loop
+            Edge { src: 5, dst: 1 },
+            Edge { src: 1, dst: 1 },   // self loop
+            Edge { src: 12, dst: 1 },
+        ];
+        let vals = vec![vec![1.0f32; edges.len()]];
+        (MiniBatch { layers: vec![b0, b1], edges: vec![edges] }, vals)
+    }
+
+    #[test]
+    fn renaming_labels_vertices_by_storage_order() {
+        let (mb, vals) = fig4_batch();
+        let ib = index_batch(&mb, &vals, LayoutOptions::all());
+        let l = &ib.layer_edges[0];
+        // RRA: sources sorted by *position* (storage order), i.e. the
+        // renamed stream reads hidden features sequentially.
+        assert!(l.src.windows(2).all(|w| w[0] <= w[1]), "{:?}", l.src);
+        // First edges come from position 0 = global vertex 7.
+        assert_eq!(mb.layers[0][l.src[0] as usize], 7);
+        // Self-loop wiring survives the rename: for each dst position i,
+        // the self edge (self_idx[i] -> i) is in the stream.
+        for (i, &p) in l.self_idx.iter().enumerate() {
+            assert!(
+                l.src.iter().zip(&l.dst).any(|(&s, &d)| s == p && d == i as u32),
+                "self loop of dst {i} lost"
+            );
+        }
+    }
+
+    #[test]
+    fn rmt_only_sorts_by_global_id_like_fig4_layer1() {
+        let (mb, vals) = fig4_batch();
+        let ib = index_batch(&mb, &vals, LayoutOptions { rmt: true, rra: false });
+        let l = &ib.layer_edges[0];
+        let globals: Vec<u32> = l.src.iter().map(|&p| mb.layers[0][p as usize]).collect();
+        // Fig. 4's layer-1 order: edges grouped by source *id* (1,1,3,5,
+        // 7,7,9,12,12) so a loaded feature vector is reused by the
+        // following edges with the same source.
+        assert_eq!(globals, vec![1, 1, 3, 5, 7, 7, 9, 12, 12]);
+        // Positions are NOT monotone (ids 1,3,5 live at positions 1,3,5
+        // while id 7 is position 0) — which is exactly the random hidden-
+        // feature access RRA then removes.
+        assert!(!l.src.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn unsorted_baseline_keeps_arrival_order() {
+        let (mb, vals) = fig4_batch();
+        let ib = index_batch(&mb, &vals, LayoutOptions::none());
+        let l = &ib.layer_edges[0];
+        let first_globals: Vec<u32> =
+            l.src.iter().take(3).map(|&p| mb.layers[0][p as usize]).collect();
+        assert_eq!(first_globals, vec![12, 7, 9]);
+    }
+}

@@ -1,0 +1,322 @@
+//! Padding an [`IndexedBatch`] to a fixed [`Geometry`] for the AOT
+//! executable.
+//!
+//! Contract (shared with `python/compile/geometry.py`):
+//! * padding edges carry `val == 0` and point at row 0 of both layers —
+//!   zero-valued edges contribute nothing;
+//! * padding target vertices carry `mask == 0` and label 0;
+//! * padding self-gathers point at row 0 (their update output is masked).
+//!
+//! Subgraph batches can overflow the edge budget (induced density varies);
+//! [`EdgeOverflow::TruncateKeepSelf`] drops excess *neighbor* edges while
+//! keeping every self loop, preserving aggregation well-definedness — this
+//! is the same edge-budget clipping GraphSAINT implementations apply.
+
+use super::{Geometry, IndexedBatch, IndexedLayer};
+
+/// Policy when a layer has more edges than the geometry allows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeOverflow {
+    /// Fail — neighbor sampling geometries are sized for the worst case.
+    Error,
+    /// Keep all self loops, then as many neighbor edges as fit.
+    TruncateKeepSelf,
+}
+
+/// Execution-ready padded batch; array lengths match the geometry exactly.
+#[derive(Debug, Clone)]
+pub struct PaddedBatch {
+    pub geom: Geometry,
+    /// Per layer: src/dst/val of length `geom.e[l]`.
+    pub src: Vec<Vec<i32>>,
+    pub dst: Vec<Vec<i32>>,
+    pub val: Vec<Vec<f32>>,
+    /// Per layer: self-gather of length `geom.b[l+1]`.
+    pub self_idx: Vec<Vec<i32>>,
+    /// Targets: length `geom.b[L]`.
+    pub labels: Vec<i32>,
+    pub mask: Vec<f32>,
+    /// Real (unpadded) per-layer vertex counts.
+    pub real_b: Vec<usize>,
+    /// Real (possibly truncated) per-layer edge counts.
+    pub real_e: Vec<usize>,
+    /// Σ real |B^l| — NVTPS numerator for this batch.
+    pub vertices_traversed: usize,
+}
+
+/// Pad `batch` (with target labels) to `geom`.
+pub fn pad(
+    batch: &IndexedBatch,
+    labels: &[u8],
+    geom: &Geometry,
+    overflow: EdgeOverflow,
+) -> anyhow::Result<PaddedBatch> {
+    geom.validate()?;
+    let ll = batch.num_layers();
+    anyhow::ensure!(
+        ll == geom.layers(),
+        "batch has {ll} layers, geometry {} expects {}",
+        geom.name,
+        geom.layers()
+    );
+    for l in 0..=ll {
+        anyhow::ensure!(
+            batch.layers[l].len() <= geom.b[l],
+            "layer {l}: {} vertices exceed geometry bound {}",
+            batch.layers[l].len(),
+            geom.b[l]
+        );
+    }
+    anyhow::ensure!(
+        labels.len() == batch.layers[ll].len(),
+        "need one label per target vertex"
+    );
+
+    let mut src = Vec::with_capacity(ll);
+    let mut dst = Vec::with_capacity(ll);
+    let mut val = Vec::with_capacity(ll);
+    let mut self_idx = Vec::with_capacity(ll);
+    let mut real_e = Vec::with_capacity(ll);
+
+    for l in 0..ll {
+        let layer = &batch.layer_edges[l];
+        let cap = geom.e[l];
+        let (s, d, v) = if layer.src.len() <= cap {
+            (layer.src.clone(), layer.dst.clone(), layer.val.clone())
+        } else {
+            match overflow {
+                EdgeOverflow::Error => anyhow::bail!(
+                    "layer {}: {} edges exceed geometry bound {cap} \
+                     (use TruncateKeepSelf for subgraph batches)",
+                    l + 1,
+                    layer.src.len()
+                ),
+                EdgeOverflow::TruncateKeepSelf => truncate_keep_self(layer, cap)?,
+            }
+        };
+        real_e.push(s.len());
+        let mut s: Vec<i32> = s.into_iter().map(|x| x as i32).collect();
+        let mut d: Vec<i32> = d.into_iter().map(|x| x as i32).collect();
+        let mut v = v;
+        s.resize(cap, 0);
+        d.resize(cap, 0);
+        v.resize(cap, 0.0);
+        src.push(s);
+        dst.push(d);
+        val.push(v);
+
+        let mut si: Vec<i32> = layer.self_idx.iter().map(|&x| x as i32).collect();
+        si.resize(geom.b[l + 1], 0);
+        self_idx.push(si);
+    }
+
+    let nt = geom.b[ll];
+    let mut lab: Vec<i32> = labels.iter().map(|&x| x as i32).collect();
+    let real_targets = lab.len();
+    lab.resize(nt, 0);
+    let mut mask = vec![1.0f32; real_targets];
+    mask.resize(nt, 0.0);
+
+    Ok(PaddedBatch {
+        geom: geom.clone(),
+        src,
+        dst,
+        val,
+        self_idx,
+        labels: lab,
+        mask,
+        real_b: batch.layers.iter().map(|l| l.len()).collect(),
+        real_e,
+        vertices_traversed: batch.vertices_traversed(),
+    })
+}
+
+/// Keep all self loops (src position == the dst vertex's self position),
+/// then fill with neighbor edges in stream order.
+fn truncate_keep_self(
+    layer: &IndexedLayer,
+    cap: usize,
+) -> anyhow::Result<(Vec<u32>, Vec<u32>, Vec<f32>)> {
+    let is_self: Vec<bool> = layer
+        .src
+        .iter()
+        .zip(&layer.dst)
+        .map(|(&s, &d)| layer.self_idx.get(d as usize) == Some(&s))
+        .collect();
+    let self_count = is_self.iter().filter(|&&b| b).count();
+    anyhow::ensure!(
+        self_count <= cap,
+        "geometry edge budget {cap} cannot hold {self_count} self loops"
+    );
+    let mut s = Vec::with_capacity(cap);
+    let mut d = Vec::with_capacity(cap);
+    let mut v = Vec::with_capacity(cap);
+    // Self loops first ...
+    for i in 0..layer.src.len() {
+        if is_self[i] {
+            s.push(layer.src[i]);
+            d.push(layer.dst[i]);
+            v.push(layer.val[i]);
+        }
+    }
+    // ... then neighbor edges until the budget is full.
+    for i in 0..layer.src.len() {
+        if s.len() == cap {
+            break;
+        }
+        if !is_self[i] {
+            s.push(layer.src[i]);
+            d.push(layer.dst[i]);
+            v.push(layer.val[i]);
+        }
+    }
+    Ok((s, d, v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::layout::{index_batch, LayoutOptions};
+    use crate::sampler::subgraph::SubgraphSampler;
+    use crate::sampler::values::{attach_values, GnnModel};
+    use crate::sampler::{neighbor::NeighborSampler, Sampler};
+    use crate::util::rng::Pcg64;
+
+    fn tiny_geom() -> Geometry {
+        Geometry {
+            name: "tiny".into(),
+            b: vec![96, 16, 4],
+            e: vec![96, 16],
+            f: vec![16, 8, 4],
+        }
+    }
+
+    fn ns_batch(seed: u64) -> (IndexedBatch, Vec<u8>) {
+        let g = generator::with_min_degree(
+            generator::rmat(300, 2500, Default::default(), seed),
+            1,
+            seed ^ 1,
+        );
+        let s = NeighborSampler::new(4, vec![5, 3]);
+        let mb = s.sample(&g, &mut Pcg64::seed_from_u64(seed));
+        let vals = attach_values(&g, &mb, GnnModel::Gcn);
+        let ib = index_batch(&mb, &vals, LayoutOptions::all());
+        let labels = vec![1u8; mb.layers[2].len()];
+        (ib, labels)
+    }
+
+    #[test]
+    fn pad_produces_exact_geometry_lengths() {
+        let (ib, labels) = ns_batch(1);
+        let geom = tiny_geom();
+        let pb = pad(&ib, &labels, &geom, EdgeOverflow::Error).unwrap();
+        for l in 0..2 {
+            assert_eq!(pb.src[l].len(), geom.e[l]);
+            assert_eq!(pb.dst[l].len(), geom.e[l]);
+            assert_eq!(pb.val[l].len(), geom.e[l]);
+            assert_eq!(pb.self_idx[l].len(), geom.b[l + 1]);
+        }
+        assert_eq!(pb.labels.len(), 4);
+        assert_eq!(pb.mask.len(), 4);
+        assert_eq!(pb.mask, vec![1.0; 4]); // all 4 targets real
+        assert_eq!(pb.vertices_traversed, ib.vertices_traversed());
+    }
+
+    #[test]
+    fn padding_edges_are_zero_valued(){
+        let (ib, labels) = ns_batch(2);
+        let geom = tiny_geom();
+        let pb = pad(&ib, &labels, &geom, EdgeOverflow::Error).unwrap();
+        for l in 0..2 {
+            for i in pb.real_e[l]..geom.e[l] {
+                assert_eq!(pb.val[l][i], 0.0);
+                assert_eq!(pb.src[l][i], 0);
+                assert_eq!(pb.dst[l][i], 0);
+            }
+        }
+    }
+
+    #[test]
+    fn mask_zero_on_padded_targets() {
+        let (ib, mut labels) = ns_batch(3);
+        labels.truncate(ib.layers[2].len());
+        let geom = tiny_geom();
+        let pb = pad(&ib, &labels, &geom, EdgeOverflow::Error).unwrap();
+        let real = pb.real_b[2];
+        for i in real..geom.b[2] {
+            assert_eq!(pb.mask[i], 0.0);
+            assert_eq!(pb.labels[i], 0);
+        }
+    }
+
+    #[test]
+    fn oversize_batch_rejected() {
+        let (ib, labels) = ns_batch(4);
+        let mut geom = tiny_geom();
+        geom.b = vec![8, 6, 4]; // too small for b0
+        geom.e = vec![96, 16];
+        assert!(pad(&ib, &labels, &geom, EdgeOverflow::Error).is_err());
+    }
+
+    #[test]
+    fn label_count_must_match_targets() {
+        let (ib, _) = ns_batch(5);
+        let bad = vec![0u8; 1];
+        assert!(pad(&ib, &bad, &tiny_geom(), EdgeOverflow::Error).is_err());
+    }
+
+    #[test]
+    fn subgraph_truncation_keeps_self_loops() {
+        let g = generator::rmat(400, 12_000, Default::default(), 6);
+        let s = SubgraphSampler::new(64, 2);
+        let mb = s.sample(&g, &mut Pcg64::seed_from_u64(7));
+        let vals = attach_values(&g, &mb, GnnModel::Sage);
+        let ib = index_batch(&mb, &vals, LayoutOptions::all());
+        let n = mb.layers[0].len();
+        let raw_edges = ib.layer_edges[0].src.len();
+        let cap = n + (raw_edges - n) / 4; // force a real truncation
+        let geom = Geometry {
+            name: "ss".into(),
+            b: vec![64, 64, 64],
+            e: vec![cap, cap],
+            f: vec![16, 8, 4],
+        };
+        let labels = vec![0u8; n];
+        let err = pad(&ib, &labels, &geom, EdgeOverflow::Error);
+        assert!(err.is_err(), "should overflow");
+        let pb = pad(&ib, &labels, &geom, EdgeOverflow::TruncateKeepSelf).unwrap();
+        assert_eq!(pb.real_e[0], cap);
+        // Every vertex's self loop survives: position i gathers from
+        // self_idx[i]; check edge (self_idx[i], i) present.
+        let l = &ib.layer_edges[0];
+        for i in 0..n {
+            let want_src = l.self_idx[i] as i32;
+            let found = pb.src[0]
+                .iter()
+                .zip(&pb.dst[0])
+                .take(pb.real_e[0])
+                .any(|(&s, &d)| s == want_src && d == i as i32);
+            assert!(found, "self loop of vertex {i} dropped");
+        }
+    }
+
+    #[test]
+    fn truncation_respects_cap_exactly() {
+        let g = generator::rmat(300, 9_000, Default::default(), 8);
+        let s = SubgraphSampler::new(48, 1);
+        let mb = s.sample(&g, &mut Pcg64::seed_from_u64(9));
+        let vals = attach_values(&g, &mb, GnnModel::Gcn);
+        let ib = index_batch(&mb, &vals, LayoutOptions::all());
+        let cap = mb.layers[0].len() + 10;
+        let geom = Geometry {
+            name: "ss1".into(),
+            b: vec![48, 48],
+            e: vec![cap],
+            f: vec![8, 4],
+        };
+        let pb = pad(&ib, &vec![0u8; 48], &geom, EdgeOverflow::TruncateKeepSelf).unwrap();
+        assert_eq!(pb.real_e[0], cap.min(ib.layer_edges[0].src.len()));
+        assert_eq!(pb.src[0].len(), cap);
+    }
+}

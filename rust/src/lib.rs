@@ -1,0 +1,32 @@
+//! # HP-GNN — high-throughput GNN training on a CPU-"FPGA" platform
+//!
+//! Reproduction of *HP-GNN: Generating High Throughput GNN Training
+//! Implementation on CPU-FPGA Heterogeneous Platform* (Lin, Zhang,
+//! Prasanna — FPGA '22) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the host program: samplers, data layout
+//!   (RMT/RRA), DSE engine, training coordinator, plus a cycle-level
+//!   simulator of the paper's FPGA accelerator (we have no Alveo U250).
+//! * **Layer 2 (python/compile, build time)** — the GNN fwd/bwd compute
+//!   graph in JAX, AOT-lowered to HLO text (`make artifacts`).
+//! * **Layer 1 (python/compile/kernels, build time)** — the aggregate /
+//!   update hardware templates as Pallas kernels.
+//!
+//! At runtime the rust binary is self-contained: it loads the HLO
+//! artifacts once via the PJRT CPU client ([`runtime`]) and drives
+//! training (Algorithm 2) with sampling overlapped against execution
+//! ([`coordinator`]).  See DESIGN.md for the paper-to-module map and
+//! EXPERIMENTS.md for reproduced tables.
+
+pub mod accel;
+pub mod api;
+pub mod baselines;
+pub mod coordinator;
+pub mod dse;
+pub mod graph;
+pub mod layout;
+pub mod perf;
+pub mod repro;
+pub mod runtime;
+pub mod sampler;
+pub mod util;

@@ -1,0 +1,317 @@
+//! `hp-gnn` — the leader binary.
+//!
+//! Subcommands:
+//!
+//! * `run <program.json>` — execute a user program (paper Listing 1).
+//! * `train` — train a model on a synthetic Table 4 dataset.
+//! * `dse` — run the design space exploration engine (Table 5 rows).
+//! * `simulate` — simulate one mini-batch on the accelerator model.
+//! * `info` — list artifacts and platform description.
+//!
+//! Run `hp-gnn <subcommand> --help` for flags.
+
+use hp_gnn::accel::{AccelConfig, Platform, SimOptions};
+use hp_gnn::api::{program, HpGnn, SamplerSpec};
+use hp_gnn::dse::{explore, DseProblem};
+use hp_gnn::graph::datasets;
+use hp_gnn::layout::{index_batch, LayoutOptions};
+use hp_gnn::perf::{ModelShape, ResourceCoefficients};
+use hp_gnn::runtime::Runtime;
+use hp_gnn::sampler::values::{attach_values, GnnModel};
+use hp_gnn::util::cli::Args;
+use hp_gnn::util::rng::Pcg64;
+use hp_gnn::util::si;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let sub = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
+    let result = match sub.as_str() {
+        "run" => cmd_run(argv),
+        "train" => cmd_train(argv),
+        "dse" => cmd_dse(argv),
+        "simulate" => cmd_simulate(argv),
+        "info" => cmd_info(argv),
+        _ => {
+            eprintln!(
+                "hp-gnn — HP-GNN training framework (FPGA '22 reproduction)\n\n\
+                 SUBCOMMANDS:\n  run <program.json>   execute a user program\n  \
+                 train                train on a synthetic dataset\n  \
+                 dse                  design space exploration (Table 5)\n  \
+                 simulate             accelerator simulation of one batch\n  \
+                 info                 artifacts + platform info\n"
+            );
+            return;
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_flag(args: Args) -> Args {
+    args.flag("artifacts", "artifacts", "artifact directory (make artifacts)")
+}
+
+fn cmd_run(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = artifacts_flag(Args::new("hp-gnn run", "execute a user program"))
+        .parse_from(argv)?;
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: hp-gnn run <program.json>"))?;
+    let text = std::fs::read_to_string(path)?;
+    let (builder, params) = program::parse_program(&text)?;
+    let runtime = Runtime::load(std::path::Path::new(args.get("artifacts")))?;
+    let design = builder.generate_design(&runtime)?;
+    println!("generated design:\n{}", design.to_json().pretty());
+    let report = design.start_training(&runtime, params.steps, params.lr, params.simulate)?;
+    println!("training report:\n{}", report.metrics.to_json(2).pretty());
+    Ok(())
+}
+
+fn cmd_train(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = artifacts_flag(
+        Args::new("hp-gnn train", "train a GNN on a synthetic Table 4 dataset")
+            .flag("model", "gcn", "gcn | sage")
+            .flag("dataset", "FL", "FL | RD | YP | AP")
+            .flag("scale", "0.01", "dataset scale factor (0, 1]")
+            .flag("sampler", "ns", "ns | ss")
+            .flag("targets", "32", "NS target vertices per batch")
+            .flag("budgets", "5,10", "NS fan-outs per layer (comma separated)")
+            .flag("budget", "256", "SS subgraph budget")
+            .flag("steps", "50", "training iterations")
+            .flag("lr", "0.05", "learning rate")
+            .flag("seed", "7", "PRNG seed")
+            .flag("threads", "2", "sampler threads")
+            .flag("optimizer", "sgd", "sgd | adam")
+            .flag("save", "", "Save_model(): checkpoint path (empty = no save)")
+            .flag("eval-batches", "0", "held-out eval batches after training")
+            .switch("simulate", "attach accelerator-simulator timing")
+            .switch("no-rmt", "disable the RMT layout optimization")
+            .switch("no-rra", "disable the RRA layout optimization"),
+    )
+    .parse_from(argv)?;
+
+    let runtime = Runtime::load(std::path::Path::new(args.get("artifacts")))?;
+    let sampler = match args.get("sampler") {
+        "ns" => SamplerSpec::Neighbor {
+            targets: args.usize("targets"),
+            budgets: args
+                .get("budgets")
+                .split(',')
+                .map(|b| b.trim().parse())
+                .collect::<Result<Vec<usize>, _>>()?,
+        },
+        "ss" => SamplerSpec::Subgraph { budget: args.usize("budget"), layers: 2 },
+        other => anyhow::bail!("unknown sampler {other:?} (ns|ss)"),
+    };
+    let layout = LayoutOptions { rmt: !args.on("no-rmt"), rra: !args.on("no-rra") };
+    let design = HpGnn::init()
+        .platform_board("xilinx-U250")?
+        .gnn_computation(args.get("model"))?
+        .gnn_parameters(vec![256])
+        .sampler(sampler)
+        .layout(layout)
+        .seed(args.usize("seed") as u64)
+        .load_dataset(args.get("dataset"), args.f64("scale"), args.usize("seed") as u64)?
+        .generate_design(&runtime)?;
+    println!("generated design:\n{}", design.to_json().pretty());
+    // The builder path uses SGD; Adam goes through TrainConfig directly.
+    let report = if args.get("optimizer") == "adam" {
+        let sampler = design.abstraction.sampler.build();
+        let mut cfg = hp_gnn::coordinator::TrainConfig::quick(
+            design.abstraction.model,
+            &design.geometry,
+            args.usize("steps"),
+        );
+        cfg.optimizer = hp_gnn::coordinator::trainer::Optimizer::Adam;
+        cfg.lr = args.f32("lr");
+        cfg.layout = layout;
+        cfg.seed = args.usize("seed") as u64;
+        cfg.sampler_threads = args.usize("threads");
+        hp_gnn::coordinator::train(&runtime, &design.graph, sampler.as_ref(), &cfg)?
+    } else {
+        design.start_training(&runtime, args.usize("steps"), args.f32("lr"), args.on("simulate"))?
+    };
+    let m = &report.metrics;
+    println!("training report:\n{}", m.to_json(args.usize("threads")).pretty());
+    if let Some((head, tail)) = m.loss_drop() {
+        println!("loss: {head:.4} -> {tail:.4}");
+    }
+    if !args.get("save").is_empty() {
+        let path = std::path::PathBuf::from(args.get("save"));
+        report.final_weights.save(&path)?;
+        println!("Save_model(): wrote checkpoint to {path:?}");
+    }
+    if args.usize("eval-batches") > 0 {
+        let sampler = design.abstraction.sampler.build();
+        let cfg = hp_gnn::coordinator::TrainConfig::quick(
+            design.abstraction.model,
+            &design.geometry,
+            0,
+        );
+        let eval = hp_gnn::coordinator::evaluate(
+            &runtime,
+            &design.graph,
+            sampler.as_ref(),
+            &cfg,
+            &report.final_weights,
+            args.usize("eval-batches"),
+            0xe5a1,
+        )?;
+        println!(
+            "eval: {:.1}% accuracy over {} targets",
+            eval.accuracy() * 100.0,
+            eval.total
+        );
+    }
+    Ok(())
+}
+
+fn cmd_dse(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = Args::new("hp-gnn dse", "design space exploration (paper Table 5)")
+        .flag("model", "gcn", "gcn | sage")
+        .flag("dataset", "FL", "FL | RD | YP | AP")
+        .flag("sampler", "ns", "ns | ss")
+        .parse_from(argv)?;
+    let ds = datasets::by_key(args.get("dataset"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+    let model = GnnModel::parse(args.get("model"))?;
+    let geom = match args.get("sampler") {
+        "ns" => hp_gnn::perf::BatchGeometry::neighbor_capped(1024, &[10, 25], ds.nodes),
+        "ss" => {
+            let kappa = hp_gnn::perf::KappaEstimator::from_stats(ds.nodes, ds.edges);
+            hp_gnn::perf::BatchGeometry::subgraph(2750, 2, &kappa)
+        }
+        other => anyhow::bail!("unknown sampler {other:?}"),
+    };
+    let platform = Platform::alveo_u250();
+    let r = explore(
+        &platform,
+        &DseProblem {
+            geom: geom.clone(),
+            model: ModelShape {
+                feat: vec![ds.f0, 256, ds.f2],
+                sage_concat: model == GnnModel::Sage,
+            },
+            layout: LayoutOptions::all(),
+            coeff: ResourceCoefficients::default(),
+            t_sampling_single: None,
+        },
+    );
+    println!(
+        "{}-{} on {}: (m, n) = ({}, {}), predicted {} NVTPS, \
+         DSP {:.0}% LUT {:.0}% URAM {:.0}% BRAM {:.0}% ({} candidates)",
+        args.get("sampler").to_uppercase(),
+        model.as_str().to_uppercase(),
+        ds.key,
+        r.config.m,
+        r.config.n,
+        si(r.nvtps),
+        r.utilization.dsp * 100.0,
+        r.utilization.lut * 100.0,
+        r.utilization.uram * 100.0,
+        r.utilization.bram * 100.0,
+        r.evaluated,
+    );
+    Ok(())
+}
+
+fn cmd_simulate(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = Args::new("hp-gnn simulate", "simulate one mini-batch on the accelerator")
+        .flag("model", "gcn", "gcn | sage")
+        .flag("dataset", "FL", "FL | RD | YP | AP")
+        .flag("scale", "0.05", "dataset scale factor")
+        .flag("targets", "1024", "NS targets")
+        .flag("budgets", "10,25", "NS budgets")
+        .flag("n", "4", "scatter/gather PE pairs per die")
+        .flag("m", "256", "MACs per die")
+        .flag("seed", "7", "seed")
+        .switch("no-rmt", "disable RMT")
+        .switch("no-rra", "disable RRA")
+        .parse_from(argv)?;
+    let ds = datasets::by_key(args.get("dataset"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+    let g = ds.scale(args.f64("scale")).instantiate(args.usize("seed") as u64);
+    let model = GnnModel::parse(args.get("model"))?;
+    let budgets: Vec<usize> = args
+        .get("budgets")
+        .split(',')
+        .map(|b| b.trim().parse())
+        .collect::<Result<_, _>>()?;
+    let sampler =
+        hp_gnn::sampler::neighbor::NeighborSampler::new(args.usize("targets"), budgets);
+    use hp_gnn::sampler::Sampler;
+    let mb = sampler.sample(&g, &mut Pcg64::seed_from_u64(args.usize("seed") as u64));
+    let vals = attach_values(&g, &mb, model);
+    let layout = LayoutOptions { rmt: !args.on("no-rmt"), rra: !args.on("no-rra") };
+    let ib = index_batch(&mb, &vals, layout);
+    let platform = Platform::alveo_u250();
+    let config = AccelConfig { n: args.usize("n"), m: args.usize("m") };
+    let timing = hp_gnn::accel::simulate_batch(
+        &platform,
+        &config,
+        &ib,
+        &[ds.f0, 256, ds.f2],
+        SimOptions { sage_concat: model == GnnModel::Sage, ..Default::default() },
+    );
+    println!(
+        "batch: {} vertices, layers {:?}",
+        ib.vertices_traversed(),
+        mb.layers.iter().map(|l| l.len()).collect::<Vec<_>>()
+    );
+    for (l, t) in timing.fp_layers.iter().enumerate() {
+        println!(
+            "  layer {}: load {:.3} ms, compute {:.3} ms, update {:.3} ms",
+            l + 1,
+            t.t_load * 1e3,
+            t.t_compute * 1e3,
+            t.t_update * 1e3
+        );
+    }
+    println!(
+        "t_FP {:.3} ms, t_BP {:.3} ms, t_GNN {:.3} ms -> {} NVTPS",
+        timing.t_fp * 1e3,
+        timing.t_bp * 1e3,
+        timing.t_gnn * 1e3,
+        si(timing.nvtps(ib.vertices_traversed(), 0.0)),
+    );
+    Ok(())
+}
+
+fn cmd_info(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = artifacts_flag(Args::new("hp-gnn info", "artifacts + platform info"))
+        .parse_from(argv)?;
+    let platform = Platform::alveo_u250();
+    println!(
+        "platform: {} — {} dies, {} DSP/die, {} LUT/die, {:.2} GB/s/channel, {} MHz",
+        platform.name,
+        platform.dies,
+        platform.dsp_per_die,
+        platform.lut_per_die,
+        platform.bw_per_channel_gbps,
+        platform.freq_hz / 1e6
+    );
+    match Runtime::load(std::path::Path::new(args.get("artifacts"))) {
+        Ok(rt) => {
+            println!("artifacts:");
+            for name in rt.manifest.names() {
+                let spec = rt.manifest.get(name)?;
+                println!(
+                    "  {name}: geometry b={:?} e={:?} f={:?}",
+                    spec.geometry.b, spec.geometry.e, spec.geometry.f
+                );
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    println!("datasets (Table 4):");
+    for ds in datasets::ALL {
+        println!(
+            "  {} ({}): |V|={} |E|={} f=[{}, 256, {}]",
+            ds.key, ds.name, ds.nodes, ds.edges, ds.f0, ds.f2
+        );
+    }
+    Ok(())
+}

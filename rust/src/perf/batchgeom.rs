@@ -1,0 +1,202 @@
+//! Mini-batch configuration closed forms — paper Table 2.
+//!
+//! The DSE engine never samples: it works from the *expected* per-layer
+//! vertex and edge counts a sampling algorithm implies.  Neighbor sampling
+//! has exact products; layer-wise and subgraph sampling need the graph
+//! sparsity estimator κ(·), which the paper describes as "a pre-trained
+//! function that estimates the graph sparsity based on sample size" —
+//! [`KappaEstimator`] fits it per input graph from a handful of probe
+//! subgraphs.
+
+use crate::graph::Graph;
+use crate::util::rng::Pcg64;
+
+/// Expected per-layer batch shape (|B^l| for 0..=L, |E^l| for 1..=L).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchGeometry {
+    pub b: Vec<usize>,
+    pub e: Vec<usize>,
+}
+
+impl BatchGeometry {
+    pub fn layers(&self) -> usize {
+        self.e.len()
+    }
+
+    /// NVTPS numerator (Eq. 4).
+    pub fn vertices_traversed(&self) -> usize {
+        self.b.iter().sum()
+    }
+
+    /// Table 2 row 1 — neighbor sampling with target count `t` and
+    /// fan-outs `ns[l-1] = NS^l` (self loops included, matching the
+    /// samplers).
+    pub fn neighbor(t: usize, ns: &[usize]) -> BatchGeometry {
+        let ll = ns.len();
+        let mut b = vec![0usize; ll + 1];
+        b[ll] = t;
+        for l in (0..ll).rev() {
+            b[l] = b[l + 1] * (ns[l] + 1);
+        }
+        let e = (1..=ll).map(|l| b[l] * (ns[l - 1] + 1)).collect();
+        BatchGeometry { b, e }
+    }
+
+    /// Neighbor sampling with *dedup capping*: `|B^l|` is the expected
+    /// number of **unique** vertices among the `b[l+1]·(ns+1)` draws from a
+    /// graph of `num_vertices` (birthday estimate `V(1 − e^{−k/V})`).
+    /// Edges are not deduped — this gap between |E^l| and |B^{l-1}| is
+    /// precisely what the RMT optimization exploits (paper §4.1: "|E_1| is
+    /// usually larger than |B_0|").
+    pub fn neighbor_capped(t: usize, ns: &[usize], num_vertices: usize) -> BatchGeometry {
+        let raw = Self::neighbor(t, ns);
+        let v = num_vertices as f64;
+        let unique = |k: usize| -> usize {
+            let k = k as f64;
+            (v * (1.0 - (-k / v).exp())).round().max(1.0) as usize
+        };
+        let ll = ns.len();
+        let mut b = vec![0usize; ll + 1];
+        b[ll] = t.min(num_vertices);
+        for l in (0..ll).rev() {
+            b[l] = unique(b[l + 1] * (ns[l] + 1)).min(raw.b[l]);
+        }
+        let e = (1..=ll).map(|l| b[l] * (ns[l - 1] + 1)).collect();
+        BatchGeometry { b, e }
+    }
+
+    /// Table 2 row 3 — subgraph sampling with budget `sb`:
+    /// every layer `sb` vertices, `sb · κ(sb)` edges.
+    pub fn subgraph(sb: usize, layers: usize, kappa: &KappaEstimator) -> BatchGeometry {
+        let e_per_layer = (sb as f64 * kappa.kappa(sb)) as usize + sb;
+        BatchGeometry { b: vec![sb; layers + 1], e: vec![e_per_layer; layers] }
+    }
+
+    /// Table 2 row 2 — layer-wise sampling with per-layer sizes `s`
+    /// (`s[l]` for layer l, targets `s[L]`): |E^l| = S^l S^{l-1} κ(S^l)/SB.
+    pub fn layerwise(s: &[usize], kappa: &KappaEstimator) -> BatchGeometry {
+        assert!(s.len() >= 2);
+        let b = s.to_vec();
+        let e = (1..s.len())
+            .map(|l| {
+                let dens = kappa.kappa(s[l]) / s[l] as f64; // pairwise density
+                (s[l] as f64 * s[l - 1] as f64 * dens) as usize + s[l]
+            })
+            .collect();
+        BatchGeometry { b, e }
+    }
+}
+
+/// κ(s): expected *edges per sampled vertex* in an induced subgraph of
+/// size s.  Fitted as κ(s) = c · s (induced-subgraph density grows
+/// linearly in s for uniform-ish sampling: each of the s vertices keeps a
+/// fraction ~s/|V| of its degree) with a degree-weighted correction
+/// measured from probe subgraphs.
+#[derive(Debug, Clone, Copy)]
+pub struct KappaEstimator {
+    /// κ(s) ≈ slope · s  (+ intercept, usually ~0).
+    pub slope: f64,
+    pub intercept: f64,
+}
+
+impl KappaEstimator {
+    /// Fit from `probes` induced subgraphs of varying size, degree-weighted
+    /// like the GraphSAINT node sampler.
+    pub fn fit(g: &Graph, probe_sizes: &[usize], seed: u64) -> KappaEstimator {
+        use crate::sampler::subgraph::SubgraphSampler;
+        use crate::sampler::Sampler;
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for (i, &s) in probe_sizes.iter().enumerate() {
+            let mut sampler = SubgraphSampler::new(s.min(g.num_vertices()), 1);
+            sampler.probability = crate::sampler::subgraph::NodeProbability::DegreeCapped(3.0);
+            let mb = sampler.sample(g, &mut Pcg64::seed_from_u64(seed ^ i as u64));
+            let edges = mb.edges[0].len().saturating_sub(mb.layers[0].len()); // minus self loops
+            let sv = mb.layers[0].len() as f64;
+            xs.push(sv);
+            ys.push(edges as f64 / sv.max(1.0)); // κ at this size
+        }
+        // Least-squares line through (s, κ(s)).
+        let n = xs.len() as f64;
+        let mx = xs.iter().sum::<f64>() / n;
+        let my = ys.iter().sum::<f64>() / n;
+        let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+        let sxy: f64 = xs.iter().zip(&ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+        let slope = if sxx > 0.0 { sxy / sxx } else { 0.0 };
+        let intercept = my - slope * mx;
+        KappaEstimator { slope: slope.max(0.0), intercept: intercept.max(0.0) }
+    }
+
+    /// From a dataset's global statistics when no instance is materialized
+    /// (paper-scale DSE): degree-weighted survival ≈ 2.5 · d̄ · s / |V|.
+    pub fn from_stats(nodes: usize, edges: usize) -> KappaEstimator {
+        let avg_deg = edges as f64 / nodes as f64;
+        KappaEstimator { slope: 2.5 * avg_deg / nodes as f64, intercept: 0.0 }
+    }
+
+    pub fn kappa(&self, s: usize) -> f64 {
+        self.intercept + self.slope * s as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+
+    #[test]
+    fn neighbor_matches_paper_products() {
+        // Paper config: t=1024, NS=[25 (1-hop), 10 (2-hop)] -> budgets
+        // ordered [NS^1, NS^2] = [10, 25].
+        let g = BatchGeometry::neighbor(1024, &[10, 25]);
+        assert_eq!(g.b[2], 1024);
+        assert_eq!(g.b[1], 1024 * 26);
+        assert_eq!(g.b[0], 1024 * 26 * 11);
+        assert_eq!(g.e[1], 1024 * 26);
+        assert_eq!(g.e[0], 1024 * 26 * 11);
+        assert_eq!(g.vertices_traversed(), 1024 + 26624 + 292864);
+    }
+
+    #[test]
+    fn subgraph_all_layers_equal() {
+        let kappa = KappaEstimator { slope: 0.01, intercept: 0.0 };
+        let g = BatchGeometry::subgraph(2750, 2, &kappa);
+        assert_eq!(g.b, vec![2750; 3]);
+        let want = (2750.0 * 0.01 * 2750.0) as usize + 2750;
+        assert_eq!(g.e, vec![want; 2]);
+    }
+
+    #[test]
+    fn kappa_fit_recovers_linear_density() {
+        // On a uniform graph, induced edges/vertex grows ~linearly in s.
+        let g = generator::uniform(3000, 60_000, true, 31);
+        let est = KappaEstimator::fit(&g, &[200, 400, 800, 1600], 7);
+        assert!(est.slope > 0.0, "slope {}", est.slope);
+        // Predicted κ at s=1000 within 3x of a fresh measurement.
+        use crate::sampler::subgraph::SubgraphSampler;
+        use crate::sampler::Sampler;
+        let mb = SubgraphSampler::new(1000, 1).sample(&g, &mut Pcg64::seed_from_u64(99));
+        let measured = (mb.edges[0].len() - 1000) as f64 / 1000.0;
+        let predicted = est.kappa(1000);
+        assert!(
+            predicted / measured < 3.0 && measured / predicted < 3.0,
+            "predicted {predicted}, measured {measured}"
+        );
+    }
+
+    #[test]
+    fn kappa_from_stats_scales_with_density() {
+        let sparse = KappaEstimator::from_stats(100_000, 1_000_000);
+        let dense = KappaEstimator::from_stats(100_000, 10_000_000);
+        assert!(dense.kappa(2750) > sparse.kappa(2750) * 5.0);
+    }
+
+    #[test]
+    fn layerwise_edges_between_layers() {
+        let kappa = KappaEstimator { slope: 0.02, intercept: 0.0 };
+        let g = BatchGeometry::layerwise(&[400, 200, 100], &kappa);
+        assert_eq!(g.b, vec![400, 200, 100]);
+        assert_eq!(g.layers(), 2);
+        assert!(g.e[0] > 200 && g.e[1] > 100);
+    }
+}

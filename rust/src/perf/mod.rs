@@ -1,0 +1,17 @@
+//! Performance & resource models (paper §5.1–5.2).
+//!
+//! * [`batchgeom`] — Table 2 closed forms for |B^l| / |E^l| per sampler,
+//!   with the κ(·) sparsity estimator.
+//! * [`model`] — Eq. 4–9 analytic throughput model (what the DSE sweeps).
+//! * [`resource`] — Eq. 10–11 DSP/LUT constraints + URAM/BRAM accounting
+//!   (Table 5's utilization rows).
+
+pub mod batchgeom;
+pub mod model;
+pub mod multi;
+pub mod resource;
+
+pub use batchgeom::{BatchGeometry, KappaEstimator};
+pub use model::{estimate, Estimate, ModelShape};
+pub use multi::{data_parallel, model_parallel, MultiFpga, ScalingPoint};
+pub use resource::{utilization, ResourceCoefficients, Utilization};

@@ -1,0 +1,219 @@
+//! Analytic performance model — paper §5.1, Eq. 4–9.
+//!
+//! Closed-form timing used by the DSE engine's exhaustive sweep (the
+//! cycle-level simulator in [`crate::accel`] replays real edge streams and
+//! is used to *validate* these formulas — see `rust/tests/model_vs_sim.rs`).
+
+use crate::accel::platform::Platform;
+use crate::accel::AccelConfig;
+use crate::layout::LayoutOptions;
+
+use super::batchgeom::BatchGeometry;
+
+/// GNN-model-dependent knobs of the analytic model.
+#[derive(Debug, Clone)]
+pub struct ModelShape {
+    /// Feature dims f^0..f^L.
+    pub feat: Vec<usize>,
+    /// GraphSAGE concat doubles the update fan-in.
+    pub sage_concat: bool,
+}
+
+/// Analytic per-layer timing (seconds).
+#[derive(Debug, Clone, Default)]
+pub struct LayerEstimate {
+    pub t_load: f64,
+    pub t_compute: f64,
+    pub t_aggregate: f64,
+    pub t_update: f64,
+}
+
+impl LayerEstimate {
+    pub fn time(&self) -> f64 {
+        self.t_aggregate.max(self.t_update)
+    }
+}
+
+/// Analytic iteration timing (Eq. 5 components).
+#[derive(Debug, Clone, Default)]
+pub struct Estimate {
+    pub layers: Vec<LayerEstimate>,
+    pub t_fp: f64,
+    pub t_bp: f64,
+    pub t_lc: f64,
+    pub t_wu: f64,
+    pub t_gnn: f64,
+}
+
+impl Estimate {
+    /// Eq. 4 + Eq. 5: NVTPS with sampling overlapped.
+    pub fn nvtps(&self, geom: &BatchGeometry, t_sampling: f64) -> f64 {
+        geom.vertices_traversed() as f64 / self.t_gnn.max(t_sampling)
+    }
+}
+
+/// Evaluate Eq. 4–9 for one (platform, config, batch-shape, model) tuple.
+///
+/// The per-die split follows Fig. 7: vertices and edges are divided evenly
+/// over `platform.dies` kernel copies and the layer completes when the
+/// slowest die finishes — even division makes that the per-die time.
+pub fn estimate(
+    platform: &Platform,
+    config: &AccelConfig,
+    geom: &BatchGeometry,
+    model: &ModelShape,
+    layout: LayoutOptions,
+) -> Estimate {
+    let ll = geom.layers();
+    assert_eq!(model.feat.len(), ll + 1, "need L+1 feature dims");
+    let dies = platform.dies.max(1) as f64;
+    let freq = platform.freq_hz;
+    let bw = platform.bw_per_channel_gbps * 1e9;
+    let lanes = 16.0;
+
+    let mut est = Estimate::default();
+    for l in 1..=ll {
+        let f_prev = model.feat[l - 1] as f64;
+        let f_cur = model.feat[l] as f64;
+        let b_prev = geom.b[l - 1] as f64 / dies;
+        let b_cur = geom.b[l] as f64 / dies;
+        let e_l = geom.e[l - 1] as f64 / dies;
+
+        // Eq. 8 load: RMT dedups per-edge loads into per-vertex loads;
+        // without it every edge fetches its source row.
+        let rows_loaded = if layout.rmt { b_prev } else { e_l };
+        // α: layer-1 reads X (random row order regardless of sort);
+        // hidden layers are sequential only with renaming (RRA).
+        let sequential = l > 1 && layout.rmt && layout.rra;
+        let alpha = platform.alpha(f_prev * 4.0, sequential);
+        // Remote-channel share through the all-to-all interconnect.
+        let remote = 1.0 - 1.0 / dies;
+        let eff = (1.0 - remote) + remote / platform.cross_channel_efficiency;
+        let t_load = rows_loaded * f_prev * 4.0 * eff / (bw * alpha);
+
+        // Eq. 8 compute: n scatter PEs × 16 lanes per cycle.
+        let t_compute = e_l * f_prev / (config.n as f64 * lanes * freq);
+
+        // Eq. 9 update: m MACs, DSP-double-pumped (2 MACs per kernel
+        // cycle — see accel::update::DSP_PUMP).
+        let f_in_upd = if model.sage_concat { 2.0 * f_prev } else { f_prev };
+        let pump = crate::accel::update::DSP_PUMP as f64;
+        let t_update = b_cur * f_in_upd * f_cur / (config.m as f64 * pump * freq);
+
+        est.layers.push(LayerEstimate {
+            t_load,
+            t_compute,
+            t_aggregate: t_load.max(t_compute),
+            t_update,
+        });
+    }
+
+    // Eq. 6.
+    est.t_fp = est.layers.iter().map(|e| e.time()).sum();
+    est.t_bp = est.layers[0].t_update
+        + est.layers[1..].iter().map(|e| e.time()).sum::<f64>();
+
+    // Host-side stages (same model as the simulator — loss over targets,
+    // SGD over the weights).
+    let host = &platform.host;
+    let targets = geom.b[ll] as f64;
+    let classes = model.feat[ll] as f64;
+    est.t_lc = targets * classes * 8.0 / (0.1 * host.peak_gflops * 1e9)
+        + targets * classes * 4.0 / (host.mem_bw_gbps * 1e9);
+    let params: f64 = (1..=ll)
+        .map(|l| {
+            let fin = if model.sage_concat { 2 * model.feat[l - 1] } else { model.feat[l - 1] };
+            (fin * model.feat[l] + model.feat[l]) as f64
+        })
+        .sum();
+    est.t_wu = params * 2.0 / (0.1 * host.peak_gflops * 1e9)
+        + params * 12.0 / (host.mem_bw_gbps * 1e9);
+
+    est.t_gnn = est.t_fp + est.t_lc + est.t_bp + est.t_wu;
+    est
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Platform, AccelConfig, BatchGeometry, ModelShape) {
+        (
+            Platform::alveo_u250(),
+            AccelConfig::paper_default(),
+            BatchGeometry::neighbor_capped(1024, &[10, 25], 89_250),
+            ModelShape { feat: vec![500, 256, 7], sage_concat: false },
+        )
+    }
+
+    #[test]
+    fn estimate_composes_eq5() {
+        let (p, c, g, m) = setup();
+        let e = estimate(&p, &c, &g, &m, LayoutOptions::all());
+        assert!((e.t_gnn - (e.t_fp + e.t_lc + e.t_bp + e.t_wu)).abs() < 1e-15);
+        assert_eq!(e.layers.len(), 2);
+        for l in &e.layers {
+            assert!(l.t_load > 0.0 && l.t_compute > 0.0 && l.t_update > 0.0);
+        }
+    }
+
+    #[test]
+    fn rmt_reduces_load_time() {
+        let (p, c, g, m) = setup();
+        let base = estimate(&p, &c, &g, &m, LayoutOptions::none());
+        let rmt = estimate(&p, &c, &g, &m, LayoutOptions { rmt: true, rra: false });
+        assert!(rmt.layers[0].t_load < base.layers[0].t_load);
+    }
+
+    #[test]
+    fn rra_speeds_hidden_layer_loads() {
+        let (p, c, g, m) = setup();
+        let rmt = estimate(&p, &c, &g, &m, LayoutOptions { rmt: true, rra: false });
+        let all = estimate(&p, &c, &g, &m, LayoutOptions::all());
+        // Layer 1 (input X) unchanged; layer 2 load faster with RRA.
+        assert!((all.layers[0].t_load - rmt.layers[0].t_load).abs() < 1e-12);
+        assert!(all.layers[1].t_load < rmt.layers[1].t_load);
+    }
+
+    #[test]
+    fn nvtps_in_paper_ballpark() {
+        // NS-GCN on Flickr-like dims: paper reports 16.38M NVTPS.  The
+        // analytic model should land within ~3x (shape, not absolutes).
+        let (p, c, g, m) = setup();
+        let e = estimate(&p, &c, &g, &m, LayoutOptions::all());
+        let nvtps = e.nvtps(&g, 0.0);
+        assert!(
+            (5.0e6..60.0e6).contains(&nvtps),
+            "NVTPS {nvtps:.3e} out of plausible range"
+        );
+    }
+
+    #[test]
+    fn more_parallelism_helps_until_memory_bound() {
+        let (p, _c, g, m) = setup();
+        let lo = estimate(&p, &AccelConfig { n: 1, m: 16 }, &g, &m, LayoutOptions::all());
+        let hi = estimate(&p, &AccelConfig { n: 16, m: 1024 }, &g, &m, LayoutOptions::all());
+        assert!(hi.t_gnn < lo.t_gnn);
+        // But load time is config-independent (memory bound floor).
+        assert!((hi.layers[0].t_load - lo.layers[0].t_load).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sage_update_twice_gcn() {
+        let (p, c, g, _) = setup();
+        let gcn = ModelShape { feat: vec![500, 256, 7], sage_concat: false };
+        let sage = ModelShape { feat: vec![500, 256, 7], sage_concat: true };
+        let eg = estimate(&p, &c, &g, &gcn, LayoutOptions::all());
+        let es = estimate(&p, &c, &g, &sage, LayoutOptions::all());
+        assert!((es.layers[0].t_update / eg.layers[0].t_update - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sampling_bottleneck_caps_nvtps() {
+        let (p, c, g, m) = setup();
+        let e = estimate(&p, &c, &g, &m, LayoutOptions::all());
+        let free = e.nvtps(&g, 0.0);
+        let capped = e.nvtps(&g, e.t_gnn * 4.0);
+        assert!((capped - free / 4.0).abs() / free < 1e-9);
+    }
+}

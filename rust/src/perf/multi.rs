@@ -1,0 +1,185 @@
+//! Multi-FPGA scaling — the paper's stated future work (§8: "we plan to
+//! extend our framework to multi-FPGA platforms by exploiting model
+//! parallelism").
+//!
+//! Two strategies over `boards` identical U250-class cards attached to one
+//! host:
+//!
+//! * **Data parallel**: each board trains a distinct mini-batch; the host
+//!   all-reduces weight gradients each iteration.  Throughput scales with
+//!   board count until host sampling or the all-reduce binds.
+//! * **Model parallel** (the paper's §8 proposal): consecutive GNN layers
+//!   are placed on consecutive boards; activations cross the inter-board
+//!   link between stages.  With mini-batches pipelined, steady-state
+//!   throughput is set by the slowest stage (layer time + transfer).
+
+use crate::accel::platform::Platform;
+
+use super::batchgeom::BatchGeometry;
+use super::model::{Estimate, ModelShape};
+
+/// Inter-board interconnect (PCIe peer-to-peer or direct serial links).
+#[derive(Debug, Clone, Copy)]
+pub struct MultiFpga {
+    pub boards: usize,
+    /// Effective board-to-board bandwidth (GB/s).
+    pub link_gbps: f64,
+}
+
+impl MultiFpga {
+    pub fn pcie(boards: usize) -> MultiFpga {
+        MultiFpga { boards, link_gbps: 12.0 }
+    }
+}
+
+/// Scaling outcome for one strategy.
+#[derive(Debug, Clone)]
+pub struct ScalingPoint {
+    pub boards: usize,
+    pub nvtps: f64,
+    /// What binds at this point: "compute", "sampling" or "allreduce" /
+    /// "link".
+    pub bottleneck: &'static str,
+}
+
+/// Data-parallel scaling: `single` is the one-board Eq. 4–9 estimate,
+/// `t_sampling_single` the single-thread host sampling time per batch and
+/// `sampler_threads` the host pool size (shared by all boards).
+pub fn data_parallel(
+    single: &Estimate,
+    geom: &BatchGeometry,
+    model: &ModelShape,
+    platform: &Platform,
+    fabric: MultiFpga,
+    t_sampling_single: f64,
+    sampler_threads: usize,
+) -> ScalingPoint {
+    let boards = fabric.boards.max(1) as f64;
+    // All-reduce over PCIe through the host: each board ships its gradient
+    // and receives averaged weights (2 transfers, tree through host RAM).
+    let params: f64 = (1..model.feat.len())
+        .map(|l| {
+            let fin = if model.sage_concat { 2 * model.feat[l - 1] } else { model.feat[l - 1] };
+            (fin * model.feat[l] + model.feat[l]) as f64
+        })
+        .sum();
+    let t_allreduce = 2.0 * params * 4.0 * boards / (fabric.link_gbps * 1e9);
+    // Host sampling must now feed `boards` batches per iteration.
+    let t_sampling = t_sampling_single * boards / sampler_threads.max(1) as f64;
+    let t_board = single.t_gnn + t_allreduce;
+    let t_iter = t_board.max(t_sampling);
+    let host_mem_bound = params * 12.0 * boards / (platform.host.mem_bw_gbps * 1e9);
+    let t_iter = t_iter.max(host_mem_bound);
+    let bottleneck = if t_iter <= t_board + 1e-15 {
+        if t_allreduce > single.t_gnn { "allreduce" } else { "compute" }
+    } else if t_sampling >= host_mem_bound {
+        "sampling"
+    } else {
+        "allreduce"
+    };
+    ScalingPoint {
+        boards: fabric.boards,
+        nvtps: boards * geom.vertices_traversed() as f64 / t_iter,
+        bottleneck,
+    }
+}
+
+/// Model-parallel scaling: layer `l` lives on board `l % boards`; with
+/// pipelined mini-batches the iteration rate is set by the slowest stage
+/// (its forward+backward layer time plus the activation transfer).
+pub fn model_parallel(
+    single: &Estimate,
+    geom: &BatchGeometry,
+    model: &ModelShape,
+    fabric: MultiFpga,
+) -> ScalingPoint {
+    let boards = fabric.boards.max(1).min(single.layers.len());
+    // Assign layers round-robin to boards; a stage's time is the sum of
+    // its layers' (fwd + bwd) pipelined times.
+    let mut stage_time = vec![0.0f64; boards];
+    for (l, est) in single.layers.iter().enumerate() {
+        stage_time[l % boards] += 2.0 * est.time(); // fwd + bwd
+    }
+    // Activation transfer between consecutive layers on different boards:
+    // b[l] x f[l] activations forward + the same gradient backward.
+    let mut link_time = 0.0f64;
+    for l in 1..single.layers.len() {
+        if boards > 1 && (l % boards) != ((l - 1) % boards) {
+            let bytes = geom.b[l] as f64 * model.feat[l] as f64 * 4.0;
+            link_time = link_time.max(2.0 * bytes / (fabric.link_gbps * 1e9));
+        }
+    }
+    let slowest = stage_time.iter().cloned().fold(0.0, f64::max);
+    let t_stage = slowest.max(link_time) + single.t_lc + single.t_wu;
+    let bottleneck = if link_time > slowest { "link" } else { "compute" };
+    ScalingPoint {
+        boards: fabric.boards,
+        nvtps: geom.vertices_traversed() as f64 / t_stage,
+        bottleneck,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::AccelConfig;
+    use crate::layout::LayoutOptions;
+    use crate::perf::estimate;
+
+    fn setup() -> (Platform, Estimate, BatchGeometry, ModelShape) {
+        let p = Platform::alveo_u250();
+        let geom = BatchGeometry::neighbor_capped(1024, &[10, 25], 232_965);
+        let model = ModelShape { feat: vec![602, 256, 41], sage_concat: false };
+        let est = estimate(&p, &AccelConfig::paper_default(), &geom, &model, LayoutOptions::all());
+        (p, est, geom, model)
+    }
+
+    #[test]
+    fn data_parallel_scales_until_sampling_binds() {
+        let (p, est, geom, model) = setup();
+        // Generous sampler pool: near-linear scaling.
+        let one = data_parallel(&est, &geom, &model, &p, MultiFpga::pcie(1), 5e-3, 64);
+        let four = data_parallel(&est, &geom, &model, &p, MultiFpga::pcie(4), 5e-3, 64);
+        assert!(four.nvtps > one.nvtps * 3.0, "{} vs {}", four.nvtps, one.nvtps);
+        // Starved sampler pool: scaling saturates and sampling is named.
+        let starved = data_parallel(&est, &geom, &model, &p, MultiFpga::pcie(8), 50e-3, 1);
+        assert_eq!(starved.bottleneck, "sampling");
+        let starved4 = data_parallel(&est, &geom, &model, &p, MultiFpga::pcie(4), 50e-3, 1);
+        assert!(
+            (starved.nvtps / starved4.nvtps - 1.0).abs() < 0.05,
+            "sampling-bound scaling should flatline: {} vs {}",
+            starved.nvtps,
+            starved4.nvtps
+        );
+    }
+
+    #[test]
+    fn model_parallel_bounded_by_slowest_stage() {
+        let (_p, est, geom, model) = setup();
+        let one = model_parallel(&est, &geom, &model, MultiFpga::pcie(1));
+        let two = model_parallel(&est, &geom, &model, MultiFpga::pcie(2));
+        // Two stages can't beat the slowest layer: speedup <= 2 and >= 1.
+        assert!(two.nvtps >= one.nvtps * 0.99);
+        assert!(two.nvtps <= one.nvtps * 2.01);
+        // A starved link flips the bottleneck.
+        let slow_link = model_parallel(
+            &est,
+            &geom,
+            &model,
+            MultiFpga { boards: 2, link_gbps: 0.05 },
+        );
+        assert_eq!(slow_link.bottleneck, "link");
+        assert!(slow_link.nvtps < two.nvtps);
+    }
+
+    #[test]
+    fn data_parallel_beats_model_parallel_for_balanced_small_models() {
+        // The standard result the paper's future-work section implies: for
+        // a 2-layer GNN, data parallelism wins unless memory forces the
+        // model split.
+        let (p, est, geom, model) = setup();
+        let dp = data_parallel(&est, &geom, &model, &p, MultiFpga::pcie(2), 5e-3, 64);
+        let mp = model_parallel(&est, &geom, &model, MultiFpga::pcie(2));
+        assert!(dp.nvtps > mp.nvtps);
+    }
+}

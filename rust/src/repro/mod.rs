@@ -1,0 +1,223 @@
+//! Experiment-reproduction harness: shared machinery for the `table*`
+//! benches and the CLI so every exhibit of the paper's evaluation section
+//! is regenerated the same way.
+//!
+//! We have no U250 (and no A100): timing rows come from the cycle-level
+//! accelerator simulator fed with *real sampled edge streams* at the
+//! paper's sampler parameters, on statistic-matched synthetic datasets
+//! instantiated at reduced |V| (per-dataset scale factors below, chosen so
+//! the biggest instance still generates in seconds).  Functional training
+//! runs separately through PJRT (see `examples/train_e2e.rs`).
+//! [`paper`] holds the published numbers for side-by-side printing.
+
+pub mod paper;
+
+use crate::accel::{simulate_batch, AccelConfig, Platform, SimOptions};
+use crate::graph::{datasets::DatasetSpec, Graph};
+use crate::layout::{index_batch, LayoutOptions};
+use crate::sampler::values::{attach_values, GnnModel};
+use crate::sampler::{neighbor::NeighborSampler, subgraph::SubgraphSampler, Sampler};
+use crate::util::rng::Pcg64;
+use crate::util::stats::{Summary, Timer};
+
+/// Sampler used in the paper's evaluation (§6.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvalSampler {
+    /// GraphSAGE neighbor sampler: |V^t| = 1024, NS = [25, 10].
+    Ns,
+    /// GraphSAINT node sampler: SB = 2750.
+    Ss,
+}
+
+impl EvalSampler {
+    pub fn build(&self) -> Box<dyn Sampler> {
+        match self {
+            EvalSampler::Ns => Box::new(NeighborSampler::paper_default()),
+            EvalSampler::Ss => Box::new(SubgraphSampler::paper_default()),
+        }
+    }
+
+    /// Sampler with parameters adjusted to a *scaled instance* of `ds`.
+    /// NS parameters are fraction-free (fixed fan-outs) and stay as-is;
+    /// the SS budget scales with the instance so the sampled *fraction*
+    /// matches the paper (SB/|V|), keeping induced-subgraph density
+    /// realistic.  Since subgraph cost is ~linear in SB at fixed fraction,
+    /// NVTPS measured this way is an intensive metric directly comparable
+    /// to the full-scale number.
+    pub fn build_for(&self, g: &Graph, ds: &DatasetSpec) -> Box<dyn Sampler> {
+        match self {
+            EvalSampler::Ns => Box::new(NeighborSampler::paper_default()),
+            EvalSampler::Ss => {
+                let scale = g.num_vertices() as f64 / ds.nodes as f64;
+                let budget = ((2750.0 * scale) as usize).max(64);
+                let mut s = SubgraphSampler::new(budget, 2);
+                // R-MAT hub correction — see NodeProbability::DegreeCapped.
+                s.probability = crate::sampler::subgraph::NodeProbability::DegreeCapped(3.0);
+                Box::new(s)
+            }
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            EvalSampler::Ns => "NS",
+            EvalSampler::Ss => "SS",
+        }
+    }
+}
+
+/// Per-dataset instantiation scale for simulation workloads (big enough
+/// that the paper's sampler parameters behave normally, small enough to
+/// generate in seconds).
+pub fn sim_scale(ds: &DatasetSpec) -> f64 {
+    match ds.key {
+        "FL" => 0.5,
+        "RD" => 0.2,
+        "YP" => 0.1,
+        _ => 0.03, // AP
+    }
+}
+
+/// Cached scaled instance (generation is seconds for AP; reuse per bench).
+pub fn scaled_instance(ds: &DatasetSpec, seed: u64) -> Graph {
+    ds.scale(sim_scale(ds)).instantiate(seed)
+}
+
+/// One simulated workload measurement.
+#[derive(Debug, Clone)]
+pub struct WorkloadSim {
+    pub nvtps: f64,
+    pub t_gnn: Summary,
+    /// Measured single-thread host time to sample+layout one batch.
+    pub t_sampling_single: Summary,
+    /// Threads needed so sampling stays hidden (Eq. 5).
+    pub sampler_threads: usize,
+    pub vertices_per_batch: f64,
+}
+
+/// Simulate `batches` mini-batches of (dataset instance, model, sampler)
+/// through the accelerator model under `layout`.
+pub fn simulate_workload(
+    g: &Graph,
+    ds: &DatasetSpec,
+    model: GnnModel,
+    sampler: EvalSampler,
+    layout: LayoutOptions,
+    config: &AccelConfig,
+    batches: usize,
+    seed: u64,
+) -> WorkloadSim {
+    let platform = Platform::alveo_u250();
+    let s = sampler.build_for(g, ds);
+    let feat = [ds.f0, 256, ds.f2];
+    let mut t_gnn = Summary::new();
+    let mut t_sampling = Summary::new();
+    let mut verts = 0usize;
+    let mut rng = Pcg64::seed_from_u64(seed);
+    for _ in 0..batches.max(1) {
+        let st = Timer::start();
+        let mb = s.sample(g, &mut rng);
+        let vals = attach_values(g, &mb, model);
+        let ib = index_batch(&mb, &vals, layout);
+        t_sampling.add(st.secs());
+        let timing = simulate_batch(
+            &platform,
+            config,
+            &ib,
+            &feat,
+            SimOptions { sage_concat: model == GnnModel::Sage, ..Default::default() },
+        );
+        t_gnn.add(timing.t_gnn);
+        verts += ib.vertices_traversed();
+    }
+    let vertices_per_batch = verts as f64 / batches.max(1) as f64;
+    let threads = (t_sampling.mean() / t_gnn.mean()).ceil().max(1.0) as usize;
+    WorkloadSim {
+        // Eq. 5 with the thread pool sized so sampling is hidden.
+        nvtps: vertices_per_batch / t_gnn.mean(),
+        t_gnn,
+        t_sampling_single: t_sampling,
+        sampler_threads: threads,
+        vertices_per_batch,
+    }
+}
+
+/// Fit κ on a scaled instance and rescale the slope to the full dataset
+/// (κ(s) ≈ c·d̄·s/|V|, so slope scales with 1/|V| at constant average
+/// degree).  `from_stats` underestimates heavy-tail induced density by
+/// >10x; the fitted version tracks measurements within ~2x (see the
+/// table2 bench).
+pub fn fitted_kappa_fullscale(g: &Graph, ds: &DatasetSpec) -> crate::perf::KappaEstimator {
+    // Probe at the *fraction-matched* sizes s_inst = s_full * scale, then
+    // evaluate at scaled coordinates: kappa_full(s) = kappa_inst(s*scale),
+    // i.e. slope_full = slope_inst * scale.  Evaluating the instance fit
+    // directly at s_full would extrapolate 1/scale beyond the probe range.
+    let scale = g.num_vertices() as f64 / ds.nodes as f64;
+    let probes: Vec<usize> = [500usize, 1000, 2000, 2750]
+        .iter()
+        .map(|&s| ((s as f64 * scale) as usize).max(32))
+        .collect();
+    let fit = crate::perf::KappaEstimator::fit(g, &probes, 0xfade);
+    crate::perf::KappaEstimator { slope: fit.slope * scale, intercept: fit.intercept }
+}
+
+/// The DSE configuration used for simulation rows (paper Table 5 pick).
+pub fn table5_config(sampler: EvalSampler, model: GnnModel) -> AccelConfig {
+    match (sampler, model) {
+        (EvalSampler::Ss, GnnModel::Sage) => AccelConfig { n: 8, m: 256 },
+        _ => AccelConfig { n: 4, m: 256 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+
+    #[test]
+    fn workload_sim_produces_sane_numbers() {
+        let ds = datasets::FLICKR;
+        let g = ds.scale(0.05).instantiate(1);
+        let sim = simulate_workload(
+            &g,
+            &ds,
+            GnnModel::Gcn,
+            EvalSampler::Ns,
+            LayoutOptions::all(),
+            &AccelConfig::paper_default(),
+            2,
+            1,
+        );
+        assert!(sim.nvtps > 1e5, "NVTPS {:.3e}", sim.nvtps);
+        assert!(sim.t_gnn.mean() > 0.0);
+        assert!(sim.sampler_threads >= 1);
+        assert!(sim.vertices_per_batch > 1000.0);
+    }
+
+    #[test]
+    fn layout_ablation_ordering_on_real_streams() {
+        // Table 6's property on an actual sampled stream: baseline <
+        // RMT <= RMT+RRA (throughput).
+        let ds = datasets::FLICKR;
+        let g = ds.scale(0.05).instantiate(2);
+        let cfg = AccelConfig::paper_default();
+        let run = |layout| {
+            simulate_workload(&g, &ds, GnnModel::Gcn, EvalSampler::Ns, layout, &cfg, 2, 3).nvtps
+        };
+        let base = run(LayoutOptions::none());
+        let rmt = run(LayoutOptions { rmt: true, rra: false });
+        let all = run(LayoutOptions::all());
+        assert!(rmt > base, "RMT {rmt:.3e} <= baseline {base:.3e}");
+        assert!(all >= rmt * 0.99, "RMT+RRA {all:.3e} < RMT {rmt:.3e}");
+    }
+
+    #[test]
+    fn sim_scales_defined_for_all_datasets() {
+        for ds in &datasets::ALL {
+            let s = sim_scale(ds);
+            assert!(s > 0.0 && s <= 1.0);
+            // Scaled instance stays under ~5M edges (generation budget).
+            assert!(((ds.edges as f64) * s) < 5.5e6, "{} too big", ds.key);
+        }
+    }
+}

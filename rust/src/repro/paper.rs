@@ -1,0 +1,81 @@
+//! Published numbers from the paper's evaluation section, for
+//! side-by-side "paper vs ours" rows in the bench output and
+//! EXPERIMENTS.md.  All throughput in NVTPS.
+
+/// Table 6: NS-GCN layout-optimization ablation (baseline / +RMT /
+/// +RMT+RRA) per dataset.
+pub const TABLE6: [(&str, f64, f64, f64); 4] = [
+    ("FL", 10.45e6, 11.98e6, 16.38e6),
+    ("RD", 12.98e6, 16.48e6, 18.50e6),
+    ("YP", 19.71e6, 22.39e6, 24.60e6),
+    ("AP", 23.17e6, 27.22e6, 29.27e6),
+];
+
+/// Table 7: (workload, dataset, CPU, CPU-GPU, CPU-FPGA); CPU-GPU None =
+/// out of memory.
+pub const TABLE7: [(&str, &str, f64, Option<f64>, f64); 16] = [
+    ("NS-GCN", "FL", 265.5e3, Some(2.69e6), 16.38e6),
+    ("NS-GCN", "RD", 85.65e3, Some(7.15e6), 18.50e6),
+    ("NS-GCN", "YP", 275.6e3, Some(9.36e6), 24.61e6),
+    ("NS-GCN", "AP", 480.6e3, Some(13.0e6), 29.26e6),
+    ("NS-SAGE", "FL", 225.2e3, Some(2.74e6), 11.84e6),
+    ("NS-SAGE", "RD", 78.50e3, Some(6.90e6), 13.10e6),
+    ("NS-SAGE", "YP", 266.0e3, Some(9.19e6), 18.12e6),
+    ("NS-SAGE", "AP", 479.3e3, Some(13.57e6), 21.15e6),
+    ("SS-GCN", "FL", 215.2e3, Some(768.3e3), 2.81e6),
+    ("SS-GCN", "RD", 118.9e3, Some(536.4e3), 2.56e6),
+    ("SS-GCN", "YP", 159.1e3, Some(751.0e3), 3.08e6),
+    ("SS-GCN", "AP", 25.55e3, None, 1.47e6),
+    ("SS-SAGE", "FL", 179.9e3, Some(626.7e3), 2.71e6),
+    ("SS-SAGE", "RD", 94.72e3, Some(505.2e3), 2.43e6),
+    ("SS-SAGE", "YP", 126.7e3, Some(709.7e3), 2.78e6),
+    ("SS-SAGE", "AP", 17.40e3, None, 1.45e6),
+];
+
+/// Table 8: SS-SAGE comparison (dataset, GraphACT, Rubik, this work).
+/// Rubik's Yelp cell is N/A in the paper.
+pub const TABLE8: [(&str, f64, Option<f64>, f64); 2] = [
+    ("RD", 546.8e3, Some(717.0e3), 2.43e6),
+    ("YP", 769.8e3, None, 2.78e6),
+];
+
+/// Table 5: chosen (m, n) per workload.
+pub const TABLE5_CONFIG: [(&str, usize, usize); 4] = [
+    ("NS-GCN", 256, 4),
+    ("NS-SAGE", 256, 4),
+    ("SS-GCN", 256, 4),
+    ("SS-SAGE", 256, 8),
+];
+
+/// Table 5: utilization percentages (LUT, DSP, URAM, BRAM) per workload.
+pub const TABLE5_UTIL: [(&str, f64, f64, f64, f64); 4] = [
+    ("NS-GCN", 0.50, 0.70, 0.34, 0.28),
+    ("NS-SAGE", 0.54, 0.54, 0.34, 0.28),
+    ("SS-GCN", 0.44, 0.70, 0.14, 0.30),
+    ("SS-SAGE", 0.76, 0.82, 0.20, 0.34),
+];
+
+/// Headline averages (§6.4): speedup of CPU-FPGA over CPU and CPU-GPU.
+pub const AVG_SPEEDUP_OVER_CPU: f64 = 55.67;
+pub const AVG_SPEEDUP_OVER_GPU: f64 = 2.17;
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tables_are_complete() {
+        assert_eq!(super::TABLE7.len(), 16);
+        assert_eq!(super::TABLE6.len(), 4);
+        // Per-row FPGA > GPU > CPU in the published data.
+        for (_, _, cpu, gpu, fpga) in super::TABLE7 {
+            if let Some(gpu) = gpu {
+                assert!(fpga > gpu && gpu > cpu);
+            } else {
+                assert!(fpga > cpu);
+            }
+        }
+        // Table 6 improvements are monotone.
+        for (_, base, rmt, all) in super::TABLE6 {
+            assert!(base < rmt && rmt < all);
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! PJRT execution: load HLO-text artifacts, compile once, run per batch.
+//!
+//! Follows the reference wiring in /opt/xla-example/load_hlo: HLO *text*
+//! (not serialized protos — jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects) is parsed into an `HloModuleProto`,
+//! compiled on the CPU PJRT client, and executed with `Literal` inputs.
+//! Python never runs on this path.
+
+use std::path::Path;
+
+use super::manifest::{ArtifactSpec, DType, Manifest};
+
+/// Process-wide PJRT client + artifact registry.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Load the manifest in `artifacts_dir` and bring up the CPU client.
+    pub fn load(artifacts_dir: &Path) -> anyhow::Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        log::info!(
+            "PJRT up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime { client, manifest })
+    }
+
+    /// Compile one artifact (slow — once per process per artifact).
+    pub fn compile(&self, name: &str) -> anyhow::Result<Executable> {
+        let spec = self.manifest.get(name)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let t = crate::util::stats::Timer::start();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        log::info!("compiled {name} in {:.2}s", t.secs());
+        Ok(Executable { exe, spec })
+    }
+
+    /// Compile the artifact for a (model, geometry, kind) role.
+    pub fn compile_role(
+        &self,
+        model: crate::sampler::values::GnnModel,
+        geometry: &str,
+        kind: super::manifest::Kind,
+    ) -> anyhow::Result<Executable> {
+        let name = self.manifest.find(model, geometry, kind)?.name.clone();
+        self.compile(&name)
+    }
+}
+
+/// A compiled artifact, ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactSpec,
+}
+
+impl Executable {
+    /// Execute with positional inputs; returns the decomposed output tuple.
+    ///
+    /// Validates input count and per-input element counts against the
+    /// manifest ABI before touching PJRT (shape bugs surface as rust
+    /// errors, not XLA crashes).
+    pub fn run(&self, inputs: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "{}: got {} inputs, ABI wants {}",
+            self.spec.name,
+            inputs.len(),
+            self.spec.inputs.len()
+        );
+        for (lit, spec) in inputs.iter().zip(&self.spec.inputs) {
+            anyhow::ensure!(
+                lit.element_count() == spec.elements(),
+                "{}: input {} has {} elements, ABI wants {} {:?}",
+                self.spec.name,
+                spec.name,
+                lit.element_count(),
+                spec.elements(),
+                spec.shape,
+            );
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", self.spec.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result of {}: {e:?}", self.spec.name))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("decomposing result of {}: {e:?}", self.spec.name))?;
+        anyhow::ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "{}: got {} outputs, manifest says {}",
+            self.spec.name,
+            parts.len(),
+            self.spec.outputs.len()
+        );
+        Ok(parts)
+    }
+}
+
+/// Build a `Literal` for one ABI slot from raw data.
+pub fn literal_f32(spec: &TensorSpecRef, data: &[f32]) -> anyhow::Result<xla::Literal> {
+    anyhow::ensure!(spec.dtype == DType::F32, "{} is not f32", spec.name);
+    shape_literal(spec, xla::Literal::vec1(data))
+}
+
+pub fn literal_i32(spec: &TensorSpecRef, data: &[i32]) -> anyhow::Result<xla::Literal> {
+    anyhow::ensure!(spec.dtype == DType::I32, "{} is not i32", spec.name);
+    shape_literal(spec, xla::Literal::vec1(data))
+}
+
+pub fn literal_scalar_f32(value: f32) -> xla::Literal {
+    xla::Literal::scalar(value)
+}
+
+type TensorSpecRef = super::manifest::TensorSpec;
+
+fn shape_literal(spec: &TensorSpecRef, flat: xla::Literal) -> anyhow::Result<xla::Literal> {
+    anyhow::ensure!(
+        flat.element_count() == spec.elements(),
+        "{}: {} elements for shape {:?}",
+        spec.name,
+        flat.element_count(),
+        spec.shape
+    );
+    if spec.shape.len() <= 1 {
+        return Ok(flat);
+    }
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    flat.reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshaping {}: {e:?}", spec.name))
+}

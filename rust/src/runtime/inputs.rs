@@ -1,0 +1,139 @@
+//! Assembling the positional input list for an artifact from a padded
+//! mini-batch, features, weights and the learning rate.
+//!
+//! The ABI order is defined by `python/compile/model.example_args` and
+//! recorded in the manifest:
+//!
+//! ```text
+//! x0, labels, mask, [src_l dst_l val_l]*, [self_idx_l]* (SAGE),
+//! [w_l b_l]*, lr (train only), [m_* v_* step] (adam only)
+//! ```
+
+use super::executor::{literal_f32, literal_i32, literal_scalar_f32};
+use super::manifest::{ArtifactSpec, Kind};
+use super::weights::{AdamState, WeightState};
+use crate::layout::pad::PaddedBatch;
+use crate::sampler::values::GnnModel;
+
+/// Build the full positional input list.  `features` is the padded
+/// `b[0] × f[0]` row-major input feature matrix.
+pub fn build_inputs(
+    spec: &ArtifactSpec,
+    batch: &PaddedBatch,
+    features: &[f32],
+    weights: &WeightState,
+    lr: f32,
+) -> anyhow::Result<Vec<xla::Literal>> {
+    build_inputs_opt(spec, batch, features, weights, lr, None)
+}
+
+/// `build_inputs` plus the trailing Adam state for `adam_step` artifacts.
+pub fn build_inputs_opt(
+    spec: &ArtifactSpec,
+    batch: &PaddedBatch,
+    features: &[f32],
+    weights: &WeightState,
+    lr: f32,
+    adam: Option<&AdamState>,
+) -> anyhow::Result<Vec<xla::Literal>> {
+    let geom = &spec.geometry;
+    anyhow::ensure!(
+        batch.geom == *geom,
+        "batch geometry {:?} != artifact geometry {:?}",
+        batch.geom.name,
+        geom.name
+    );
+    anyhow::ensure!(
+        features.len() == geom.b[0] * geom.f[0],
+        "features: {} elements, want {}x{}",
+        features.len(),
+        geom.b[0],
+        geom.f[0]
+    );
+    let ll = geom.layers();
+    anyhow::ensure!(
+        weights.tensors.len() == 2 * ll,
+        "weights: {} tensors for {ll} layers",
+        weights.tensors.len()
+    );
+
+    let mut out = Vec::with_capacity(spec.inputs.len());
+    let mut it = spec.inputs.iter();
+    let mut next = |name: &str| {
+        it.next()
+            .filter(|s| s.name == name)
+            .ok_or_else(|| anyhow::anyhow!("ABI mismatch at {name}"))
+    };
+
+    out.push(literal_f32(next("x0")?, features)?);
+    out.push(literal_i32(next("labels")?, &batch.labels)?);
+    out.push(literal_f32(next("mask")?, &batch.mask)?);
+    for l in 1..=ll {
+        out.push(literal_i32(next(&format!("src{l}"))?, &batch.src[l - 1])?);
+        out.push(literal_i32(next(&format!("dst{l}"))?, &batch.dst[l - 1])?);
+        out.push(literal_f32(next(&format!("val{l}"))?, &batch.val[l - 1])?);
+    }
+    if spec.model == GnnModel::Sage {
+        for l in 1..=ll {
+            out.push(literal_i32(next(&format!("self_idx{l}"))?, &batch.self_idx[l - 1])?);
+        }
+    }
+    for l in 1..=ll {
+        let (wshape, wdata) = &weights.tensors[2 * (l - 1)];
+        let wspec = next(&format!("w{l}"))?;
+        anyhow::ensure!(wspec.shape == *wshape, "w{l} shape mismatch");
+        out.push(literal_f32(wspec, wdata)?);
+        let (_bshape, bdata) = &weights.tensors[2 * (l - 1) + 1];
+        out.push(literal_f32(next(&format!("b{l}"))?, bdata)?);
+    }
+    if matches!(spec.kind, Kind::TrainStep | Kind::AdamStep) {
+        let _ = next("lr")?;
+        out.push(literal_scalar_f32(lr));
+    }
+    if spec.kind == Kind::AdamStep {
+        let st = adam.ok_or_else(|| anyhow::anyhow!("adam_step needs AdamState"))?;
+        for l in 1..=ll {
+            out.push(literal_f32(next(&format!("m_w{l}"))?, &st.m[2 * (l - 1)].1)?);
+            out.push(literal_f32(next(&format!("m_b{l}"))?, &st.m[2 * (l - 1) + 1].1)?);
+        }
+        for l in 1..=ll {
+            out.push(literal_f32(next(&format!("v_w{l}"))?, &st.v[2 * (l - 1)].1)?);
+            out.push(literal_f32(next(&format!("v_b{l}"))?, &st.v[2 * (l - 1) + 1].1)?);
+        }
+        let _ = next("step")?;
+        out.push(literal_scalar_f32(st.step));
+    }
+    anyhow::ensure!(it.next().is_none(), "unconsumed ABI inputs");
+    Ok(out)
+}
+
+/// Pad a real feature matrix (per-vertex rows for `real_rows`) up to the
+/// geometry's `b[0]` rows with zeros.
+pub fn pad_features(real: &[f32], real_rows: usize, geom_rows: usize, feat: usize) -> Vec<f32> {
+    assert_eq!(real.len(), real_rows * feat, "feature matrix shape");
+    assert!(real_rows <= geom_rows, "more rows than geometry allows");
+    let mut out = Vec::with_capacity(geom_rows * feat);
+    out.extend_from_slice(real);
+    out.resize(geom_rows * feat, 0.0);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_features_zero_fills() {
+        let real = vec![1.0f32; 2 * 3];
+        let padded = pad_features(&real, 2, 5, 3);
+        assert_eq!(padded.len(), 15);
+        assert_eq!(&padded[..6], &real[..]);
+        assert!(padded[6..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "feature matrix shape")]
+    fn pad_features_validates_shape() {
+        pad_features(&[1.0; 5], 2, 4, 3);
+    }
+}

@@ -1,0 +1,253 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime.
+//!
+//! `make artifacts` writes `artifacts/manifest.json` describing every
+//! compiled HLO module: its input ABI (ordered names/shapes/dtypes),
+//! output names, weight shapes and mini-batch geometry.  The runtime
+//! refuses to feed an executable anything that disagrees with this file.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::layout::Geometry;
+use crate::sampler::values::GnnModel;
+use crate::util::json::Json;
+
+/// Element type of a tensor input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> anyhow::Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => anyhow::bail!("unsupported dtype {other:?}"),
+        }
+    }
+}
+
+/// One input tensor of an artifact's ABI.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Artifact kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    TrainStep,
+    /// Train step with Adam state threaded through (extra m/v/step I/O).
+    AdamStep,
+    Forward,
+}
+
+/// One compiled HLO module's metadata.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub model: GnnModel,
+    pub kind: Kind,
+    pub geometry: Geometry,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<String>,
+    /// Per-layer (W shape, b shape).
+    pub weight_shapes: Vec<(Vec<usize>, Vec<usize>)>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    by_name: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e}; run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> anyhow::Result<Manifest> {
+        let doc = Json::parse(text)?;
+        anyhow::ensure!(
+            doc.get("version")?.as_usize()? == 1,
+            "unsupported manifest version"
+        );
+        let mut by_name = BTreeMap::new();
+        for entry in doc.get("artifacts")?.as_arr()? {
+            let spec = Self::parse_entry(entry)?;
+            anyhow::ensure!(
+                by_name.insert(spec.name.clone(), spec).is_none(),
+                "duplicate artifact name"
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), by_name })
+    }
+
+    fn parse_entry(entry: &Json) -> anyhow::Result<ArtifactSpec> {
+        let name = entry.get("name")?.as_str()?.to_string();
+        let kind = match entry.get("kind")?.as_str()? {
+            "train_step" => Kind::TrainStep,
+            "adam_step" => Kind::AdamStep,
+            "forward" => Kind::Forward,
+            other => anyhow::bail!("artifact {name}: unknown kind {other:?}"),
+        };
+        let gs = entry.get("geometry_spec")?;
+        let geometry = Geometry {
+            name: entry.get("geometry")?.as_str()?.to_string(),
+            b: gs.get("b")?.usize_list()?,
+            e: gs.get("e")?.usize_list()?,
+            f: gs.get("f")?.usize_list()?,
+        };
+        geometry.validate()?;
+        let inputs = entry
+            .get("inputs")?
+            .as_arr()?
+            .iter()
+            .map(|i| {
+                Ok(TensorSpec {
+                    name: i.get("name")?.as_str()?.to_string(),
+                    shape: i.get("shape")?.usize_list()?,
+                    dtype: DType::parse(i.get("dtype")?.as_str()?)?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let outputs = entry
+            .get("outputs")?
+            .as_arr()?
+            .iter()
+            .map(|o| Ok(o.as_str()?.to_string()))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let weight_shapes = entry
+            .get("weight_shapes")?
+            .as_arr()?
+            .iter()
+            .map(|w| Ok((w.get("w")?.usize_list()?, w.get("b")?.usize_list()?)))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(ArtifactSpec {
+            name,
+            file: entry.get("file")?.as_str()?.to_string(),
+            model: GnnModel::parse(entry.get("model")?.as_str()?)?,
+            kind,
+            geometry,
+            inputs,
+            outputs,
+            weight_shapes,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<&ArtifactSpec> {
+        self.by_name
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not in manifest; have: {:?}", self.names()))
+    }
+
+    /// Find by (model, geometry, kind) — the lookup the coordinator uses.
+    /// Models resolve through `artifact_key()` (GIN shares the GCN
+    /// template; its edge values are runtime inputs).
+    pub fn find(&self, model: GnnModel, geometry: &str, kind: Kind) -> anyhow::Result<&ArtifactSpec> {
+        let key = model.artifact_key();
+        self.by_name
+            .values()
+            .find(|a| a.model.as_str() == key && a.geometry.name == geometry && a.kind == kind)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no artifact for ({}, {geometry}, {kind:?}); run `make artifacts`",
+                    model.as_str()
+                )
+            })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.by_name.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "gcn_tiny_train_step", "file": "gcn_tiny_train_step.hlo.txt",
+         "model": "gcn", "geometry": "tiny", "kind": "train_step",
+         "inputs": [
+            {"name": "x0", "shape": [96, 16], "dtype": "f32"},
+            {"name": "labels", "shape": [4], "dtype": "i32"},
+            {"name": "lr", "shape": [], "dtype": "f32"}
+         ],
+         "outputs": ["loss", "w1", "b1"],
+         "weight_shapes": [{"w": [16, 8], "b": [8]}, {"w": [8, 4], "b": [4]}],
+         "geometry_spec": {"b": [96, 16, 4], "e": [96, 16], "f": [16, 8, 4],
+                           "layers": 2, "num_classes": 4}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let a = m.get("gcn_tiny_train_step").unwrap();
+        assert_eq!(a.kind, Kind::TrainStep);
+        assert_eq!(a.model, GnnModel::Gcn);
+        assert_eq!(a.geometry.b, vec![96, 16, 4]);
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+        assert_eq!(a.inputs[2].shape, Vec::<usize>::new());
+        assert_eq!(a.inputs[2].elements(), 1);
+        assert_eq!(a.weight_shapes[0].0, vec![16, 8]);
+        assert_eq!(m.hlo_path(a), Path::new("/tmp/a/gcn_tiny_train_step.hlo.txt"));
+    }
+
+    #[test]
+    fn find_by_role() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert!(m.find(GnnModel::Gcn, "tiny", Kind::TrainStep).is_ok());
+        assert!(m.find(GnnModel::Sage, "tiny", Kind::TrainStep).is_err());
+        assert!(m.find(GnnModel::Gcn, "tiny", Kind::Forward).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_dtype() {
+        let bad = SAMPLE.replace("\"f32\"", "\"f16\"");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn loads_repo_manifest_when_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this checkout
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.find(GnnModel::Gcn, "tiny", Kind::TrainStep).unwrap();
+        assert_eq!(a.inputs.first().unwrap().name, "x0");
+        assert_eq!(a.outputs.first().unwrap(), "loss");
+    }
+}

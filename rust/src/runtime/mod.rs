@@ -1,0 +1,16 @@
+//! Runtime: PJRT-backed execution of the AOT artifacts.
+//!
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`, exactly the /opt/xla-example/load_hlo
+//! wiring.  One compiled executable per (model × geometry × kind); the
+//! coordinator drives it every iteration with inputs assembled by
+//! [`inputs::build_inputs`].
+
+pub mod executor;
+pub mod inputs;
+pub mod manifest;
+pub mod weights;
+
+pub use executor::{Executable, Runtime};
+pub use manifest::{ArtifactSpec, Kind, Manifest};
+pub use weights::WeightState;

@@ -1,0 +1,251 @@
+//! Model weight state, resident in rust between iterations.
+//!
+//! The paper keeps W^l in FPGA on-chip buffers across the batch; here the
+//! weights live as host `Vec<f32>` tensors that are threaded through the
+//! train-step executable (inputs `w1, b1, ...` -> outputs `w1, b1, ...`).
+
+use crate::util::rng::Pcg64;
+
+/// Flat [W1, b1, W2, b2, ...] parameter list.
+#[derive(Debug, Clone)]
+pub struct WeightState {
+    /// (shape, row-major data) per tensor, ordered per the manifest ABI.
+    pub tensors: Vec<(Vec<usize>, Vec<f32>)>,
+}
+
+impl WeightState {
+    /// Glorot-uniform init matching `python/compile/model.init_params`
+    /// semantics (exact values differ — jax PRNG vs PCG — but tests pin
+    /// the distributional properties).
+    pub fn init_glorot(weight_shapes: &[(Vec<usize>, Vec<usize>)], seed: u64) -> WeightState {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let mut tensors = Vec::with_capacity(weight_shapes.len() * 2);
+        for (wshape, bshape) in weight_shapes {
+            let fan_in = wshape[0] as f32;
+            let fan_out = wshape[1] as f32;
+            let limit = (6.0 / (fan_in + fan_out)).sqrt();
+            let count: usize = wshape.iter().product();
+            let w: Vec<f32> = (0..count).map(|_| rng.f32_range(-limit, limit)).collect();
+            tensors.push((wshape.clone(), w));
+            let bcount: usize = bshape.iter().product();
+            tensors.push((bshape.clone(), vec![0.0; bcount]));
+        }
+        WeightState { tensors }
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.tensors.iter().map(|(_, d)| d.len()).sum()
+    }
+
+    /// Replace all tensors from the train-step outputs (post-`loss` slots).
+    pub fn update_from(&mut self, outputs: &[xla::Literal]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            outputs.len() == self.tensors.len(),
+            "weight update: {} outputs for {} tensors",
+            outputs.len(),
+            self.tensors.len()
+        );
+        for (lit, (shape, data)) in outputs.iter().zip(self.tensors.iter_mut()) {
+            let got = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("weight readback: {e:?}"))?;
+            anyhow::ensure!(
+                got.len() == data.len(),
+                "weight tensor {shape:?}: got {} elements",
+                got.len()
+            );
+            *data = got;
+        }
+        Ok(())
+    }
+
+    /// `Save_model()` (paper Table 1): write the weights to a binary
+    /// checkpoint (magic, tensor count, per-tensor dims + f32 LE data).
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        use std::io::Write;
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(b"HPGNNW01")?;
+        w.write_all(&(self.tensors.len() as u64).to_le_bytes())?;
+        for (shape, data) in &self.tensors {
+            w.write_all(&(shape.len() as u64).to_le_bytes())?;
+            for &d in shape {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            for &x in data {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load a checkpoint written by [`save`]; validates magic and shapes.
+    pub fn load(path: &std::path::Path) -> anyhow::Result<WeightState> {
+        let bytes = std::fs::read(path)?;
+        anyhow::ensure!(bytes.len() >= 16, "checkpoint too short");
+        anyhow::ensure!(&bytes[..8] == b"HPGNNW01", "bad checkpoint magic");
+        let mut off = 8usize;
+        let u64_at = |bytes: &[u8], off: &mut usize| -> anyhow::Result<u64> {
+            anyhow::ensure!(*off + 8 <= bytes.len(), "truncated checkpoint");
+            let v = u64::from_le_bytes(bytes[*off..*off + 8].try_into().unwrap());
+            *off += 8;
+            Ok(v)
+        };
+        let count = u64_at(&bytes, &mut off)? as usize;
+        anyhow::ensure!(count <= 1024, "implausible tensor count {count}");
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let ndims = u64_at(&bytes, &mut off)? as usize;
+            anyhow::ensure!(ndims <= 8, "implausible rank {ndims}");
+            let mut shape = Vec::with_capacity(ndims);
+            for _ in 0..ndims {
+                shape.push(u64_at(&bytes, &mut off)? as usize);
+            }
+            let elems: usize = shape.iter().product();
+            anyhow::ensure!(off + elems * 4 <= bytes.len(), "truncated tensor data");
+            let mut data = Vec::with_capacity(elems);
+            for i in 0..elems {
+                let s = off + i * 4;
+                data.push(f32::from_le_bytes(bytes[s..s + 4].try_into().unwrap()));
+            }
+            off += elems * 4;
+            tensors.push((shape, data));
+        }
+        anyhow::ensure!(off == bytes.len(), "trailing bytes in checkpoint");
+        Ok(WeightState { tensors })
+    }
+
+    /// L2 norm over all parameters (training-progress diagnostic).
+    pub fn l2_norm(&self) -> f64 {
+        self.tensors
+            .iter()
+            .flat_map(|(_, d)| d.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+/// Adam optimizer state (first/second moments + step), threaded through
+/// the `adam_step` artifact exactly like the weights.
+#[derive(Debug, Clone)]
+pub struct AdamState {
+    /// m then v, each ordered like `WeightState::tensors`.
+    pub m: Vec<(Vec<usize>, Vec<f32>)>,
+    pub v: Vec<(Vec<usize>, Vec<f32>)>,
+    pub step: f32,
+}
+
+impl AdamState {
+    pub fn zeros(weight_shapes: &[(Vec<usize>, Vec<usize>)]) -> AdamState {
+        let mut tensors = Vec::with_capacity(weight_shapes.len() * 2);
+        for (wshape, bshape) in weight_shapes {
+            tensors.push((wshape.clone(), vec![0.0; wshape.iter().product()]));
+            tensors.push((bshape.clone(), vec![0.0; bshape.iter().product()]));
+        }
+        AdamState { m: tensors.clone(), v: tensors, step: 0.0 }
+    }
+
+    /// Consume the trailing outputs of an adam_step execution:
+    /// `[m..., v..., step]`.
+    pub fn update_from(&mut self, outputs: &[xla::Literal]) -> anyhow::Result<()> {
+        let n = self.m.len();
+        anyhow::ensure!(
+            outputs.len() == 2 * n + 1,
+            "adam state update: {} outputs for {} tensors",
+            outputs.len(),
+            n
+        );
+        for (lit, (_, data)) in outputs[..n].iter().zip(self.m.iter_mut()) {
+            *data = lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("m readback: {e:?}"))?;
+        }
+        for (lit, (_, data)) in outputs[n..2 * n].iter().zip(self.v.iter_mut()) {
+            *data = lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("v readback: {e:?}"))?;
+        }
+        self.step = outputs[2 * n]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("step readback: {e:?}"))?[0];
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shapes() -> Vec<(Vec<usize>, Vec<usize>)> {
+        vec![(vec![16, 8], vec![8]), (vec![8, 4], vec![4])]
+    }
+
+    #[test]
+    fn init_sizes_and_order() {
+        let w = WeightState::init_glorot(&shapes(), 1);
+        assert_eq!(w.tensors.len(), 4);
+        assert_eq!(w.tensors[0].0, vec![16, 8]);
+        assert_eq!(w.tensors[0].1.len(), 128);
+        assert_eq!(w.tensors[1].1, vec![0.0; 8]);
+        assert_eq!(w.num_params(), 128 + 8 + 32 + 4);
+    }
+
+    #[test]
+    fn glorot_bounds_and_spread() {
+        let w = WeightState::init_glorot(&shapes(), 2);
+        let limit = (6.0f32 / 24.0).sqrt();
+        let data = &w.tensors[0].1;
+        assert!(data.iter().all(|x| x.abs() <= limit));
+        let spread = data.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        assert!(spread > limit * 0.8, "init suspiciously narrow: {spread}");
+        // Non-degenerate: mean near zero.
+        let mean: f32 = data.iter().sum::<f32>() / data.len() as f32;
+        assert!(mean.abs() < limit * 0.2);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = WeightState::init_glorot(&shapes(), 3);
+        let b = WeightState::init_glorot(&shapes(), 3);
+        let c = WeightState::init_glorot(&shapes(), 4);
+        assert_eq!(a.tensors[0].1, b.tensors[0].1);
+        assert_ne!(a.tensors[0].1, c.tensors[0].1);
+    }
+
+    #[test]
+    fn adam_state_zeros_match_weight_layout() {
+        let st = AdamState::zeros(&shapes());
+        assert_eq!(st.m.len(), 4);
+        assert_eq!(st.m[0].1.len(), 128);
+        assert!(st.m.iter().all(|(_, d)| d.iter().all(|&x| x == 0.0)));
+        assert_eq!(st.step, 0.0);
+    }
+
+    #[test]
+    fn l2_norm_positive() {
+        let w = WeightState::init_glorot(&shapes(), 5);
+        assert!(w.l2_norm() > 0.0);
+    }
+
+    #[test]
+    fn checkpoint_round_trip() {
+        let w = WeightState::init_glorot(&shapes(), 6);
+        let dir = std::env::temp_dir().join(format!("hpgnn-ckpt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        w.save(&path).unwrap();
+        let w2 = WeightState::load(&path).unwrap();
+        assert_eq!(w.tensors, w2.tensors);
+    }
+
+    #[test]
+    fn checkpoint_rejects_corruption() {
+        let w = WeightState::init_glorot(&shapes(), 7);
+        let dir = std::env::temp_dir().join(format!("hpgnn-ckpt2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        w.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(bytes.len() - 2);
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(WeightState::load(&path).is_err());
+        std::fs::write(&path, b"WRONGMAG rest").unwrap();
+        assert!(WeightState::load(&path).is_err());
+    }
+}

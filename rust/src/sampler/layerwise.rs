@@ -1,0 +1,159 @@
+//! Layer-wise (FastGCN-style) importance sampler.
+//!
+//! The paper (Table 2) models layer-wise sampling alongside subgraph
+//! sampling: per layer an independent vertex set `S^l` is drawn (importance
+//! ∝ degree), and `A_s^l` is the bipartite adjacency induced between
+//! consecutive layers.  Self loops are added so `B^l ⊆ B^{l-1}` holds like
+//! the other samplers (the union keeps aggregation well-defined).
+
+use super::{dedup_preserve_order, Edge, MiniBatch, Sampler};
+use crate::graph::{Graph, Vid};
+use crate::util::rng::Pcg64;
+
+#[derive(Debug, Clone)]
+pub struct LayerwiseSampler {
+    pub num_targets: usize,
+    /// `layer_sizes[l-1] = |S^l|` for layers 1..=L-1... sizes for layers
+    /// 0..L-1 (the target layer L uses `num_targets`).
+    pub layer_sizes: Vec<usize>,
+}
+
+impl LayerwiseSampler {
+    pub fn new(num_targets: usize, layer_sizes: Vec<usize>) -> Self {
+        assert!(!layer_sizes.is_empty());
+        assert!(layer_sizes.iter().all(|&s| s > 0));
+        LayerwiseSampler { num_targets, layer_sizes }
+    }
+}
+
+impl Sampler for LayerwiseSampler {
+    fn num_layers(&self) -> usize {
+        self.layer_sizes.len()
+    }
+
+    fn name(&self) -> String {
+        format!("LW(t={}, sizes={:?})", self.num_targets, self.layer_sizes)
+    }
+
+    fn sample(&self, g: &Graph, rng: &mut Pcg64) -> MiniBatch {
+        let ll = self.num_layers();
+        let n = g.num_vertices();
+        let mut layers: Vec<Vec<Vid>> = vec![Vec::new(); ll + 1];
+        layers[ll] = rng
+            .sample_distinct(n, self.num_targets.min(n))
+            .into_iter()
+            .map(|v| v as Vid)
+            .collect();
+
+        for l in (0..ll).rev() {
+            // Degree-weighted independent draw for S^l ...
+            let budget = self.layer_sizes[l].min(n);
+            let mut drawn: Vec<Vid> = Vec::with_capacity(budget);
+            let mut seen = std::collections::HashSet::new();
+            while drawn.len() < budget && seen.len() < n {
+                let v = rng.index(n) as Vid;
+                // Degree-biased acceptance: accept with prob ∝ deg+1.
+                let max_deg = 64usize;
+                let p = ((g.degree(v) + 1).min(max_deg)) as f64 / max_deg as f64;
+                if rng.f64() < p && seen.insert(v) {
+                    drawn.push(v);
+                }
+                if seen.len() + drawn.len() > 4 * n {
+                    break;
+                }
+            }
+            // ... plus the upper layer itself (self-loop support).
+            let mut combined = layers[l + 1].clone();
+            combined.extend(drawn);
+            layers[l] = dedup_preserve_order(combined);
+        }
+
+        // Induce bipartite adjacency between consecutive layers.
+        let mut edges = Vec::with_capacity(ll);
+        for l in 1..=ll {
+            let prev: std::collections::HashSet<Vid> = layers[l - 1].iter().copied().collect();
+            let mut edge_set = Vec::new();
+            for &v in &layers[l] {
+                edge_set.push(Edge { src: v, dst: v });
+                for &u in g.neighbors(v) {
+                    // Skip graph self-loops; the explicit one is enough.
+                    if u != v && prev.contains(&u) {
+                        edge_set.push(Edge { src: u, dst: v });
+                    }
+                }
+            }
+            edges.push(edge_set);
+        }
+
+        MiniBatch { layers, edges }
+    }
+
+    fn expected_layer_sizes(&self, g: &Graph) -> Vec<usize> {
+        let ll = self.num_layers();
+        let mut sizes = vec![0usize; ll + 1];
+        sizes[ll] = self.num_targets.min(g.num_vertices());
+        for l in (0..ll).rev() {
+            sizes[l] = (self.layer_sizes[l] + sizes[l + 1]).min(g.num_vertices());
+        }
+        sizes
+    }
+
+    /// Paper Table 2: |E^l| = S^l * S^{l-1} * κ(S^l).
+    fn expected_edge_counts(&self, g: &Graph) -> Vec<usize> {
+        let sizes = self.expected_layer_sizes(g);
+        let n = g.num_vertices() as f64;
+        (1..=self.num_layers())
+            .map(|l| {
+                let kappa = 2.5 * g.avg_degree() / n; // degree-weighted density
+                (sizes[l] as f64 * sizes[l - 1] as f64 * kappa) as usize + sizes[l]
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+
+    fn graph() -> Graph {
+        generator::rmat(600, 6000, Default::default(), 20)
+    }
+
+    #[test]
+    fn batch_valid_and_sized() {
+        let g = graph();
+        let s = LayerwiseSampler::new(32, vec![200, 100]);
+        let mb = s.sample(&g, &mut Pcg64::seed_from_u64(1));
+        mb.validate(&g).unwrap();
+        assert_eq!(mb.layers[2].len(), 32);
+        // Layer sizes within expected bounds.
+        let bounds = s.expected_layer_sizes(&g);
+        for l in 0..3 {
+            assert!(mb.layers[l].len() <= bounds[l], "layer {l}");
+        }
+    }
+
+    #[test]
+    fn upper_layers_subset_of_lower() {
+        let g = graph();
+        let s = LayerwiseSampler::new(16, vec![80, 40]);
+        let mb = s.sample(&g, &mut Pcg64::seed_from_u64(2));
+        for l in 0..2 {
+            let lower: std::collections::HashSet<Vid> = mb.layers[l].iter().copied().collect();
+            for &v in &mb.layers[l + 1] {
+                assert!(lower.contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = graph();
+        let s = LayerwiseSampler::new(16, vec![50]);
+        let a = s.sample(&g, &mut Pcg64::seed_from_u64(3));
+        let b = s.sample(&g, &mut Pcg64::seed_from_u64(3));
+        assert_eq!(a.layers, b.layers);
+        assert_eq!(a.edges, b.edges);
+    }
+}

@@ -1,0 +1,162 @@
+//! Mini-batch samplers (paper §2.3) and the mini-batch IR.
+//!
+//! A sampling algorithm produces, per training iteration, the vertex sets
+//! `B^l` (0 <= l <= L) and sampled adjacency `A_s^l` (1 <= l <= L).  The
+//! host CPU runs these (flexibility is why the paper keeps sampling on the
+//! CPU); the layout engine then applies RMT/RRA and padding before the
+//! batch is handed to the accelerator.
+//!
+//! Implemented samplers:
+//! * [`neighbor::NeighborSampler`] — GraphSAGE recursive neighbor sampling.
+//! * [`subgraph::SubgraphSampler`] — GraphSAINT node sampler.
+//! * [`layerwise::LayerwiseSampler`] — FastGCN-style importance sampling
+//!   (the paper groups its computation pattern with subgraph sampling).
+
+pub mod layerwise;
+pub mod neighbor;
+pub mod subgraph;
+pub mod values;
+
+use crate::graph::{Graph, Vid};
+use crate::util::rng::Pcg64;
+
+/// One inter-layer edge of the sampled adjacency `A_s^l`, in global vertex
+/// ids.  `src` lives in `B^{l-1}` and feeds `dst` in `B^l` (the aggregation
+/// direction of Algorithm 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Edge {
+    pub src: Vid,
+    pub dst: Vid,
+}
+
+/// A sampled mini-batch in global ids, before layout/renaming.
+///
+/// `layers[l]` is `B^l` in storage order (`layers[L]` are the targets);
+/// `edges[l-1]` is `A_s^l`.  Self loops `(v, v)` are included explicitly —
+/// both GCN (Eq. 1) and GraphSAGE (Eq. 2) aggregate over `N(v) ∪ {v}` — so
+/// every `B^l` vertex also appears in `B^{l-1}`.
+#[derive(Debug, Clone)]
+pub struct MiniBatch {
+    pub layers: Vec<Vec<Vid>>,
+    pub edges: Vec<Vec<Edge>>,
+}
+
+impl MiniBatch {
+    pub fn num_layers(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Σ_l |B^l| — numerator of the paper's NVTPS throughput metric.
+    pub fn vertices_traversed(&self) -> usize {
+        self.layers.iter().map(|l| l.len()).sum()
+    }
+
+    pub fn num_edges(&self, layer: usize) -> usize {
+        self.edges[layer - 1].len()
+    }
+
+    /// Check the structural invariants every sampler must uphold.
+    pub fn validate(&self, g: &Graph) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.layers.len() == self.edges.len() + 1,
+            "need L+1 vertex sets for L edge sets"
+        );
+        for (l, edge_set) in self.edges.iter().enumerate() {
+            let prev: std::collections::HashSet<Vid> = self.layers[l].iter().copied().collect();
+            let cur: std::collections::HashSet<Vid> = self.layers[l + 1].iter().copied().collect();
+            anyhow::ensure!(
+                prev.len() == self.layers[l].len(),
+                "duplicate vertex in B^{l}"
+            );
+            for e in edge_set {
+                anyhow::ensure!(prev.contains(&e.src), "edge src {} not in B^{}", e.src, l);
+                anyhow::ensure!(cur.contains(&e.dst), "edge dst {} not in B^{}", e.dst, l + 1);
+                anyhow::ensure!(
+                    e.src == e.dst || g.neighbors(e.dst).contains(&e.src),
+                    "edge ({}, {}) not in input graph",
+                    e.src,
+                    e.dst
+                );
+            }
+            // Aggregation needs v's own feature: self loop support.
+            for &v in &self.layers[l + 1] {
+                anyhow::ensure!(prev.contains(&v), "B^{} vertex {v} missing from B^{l}", l + 1);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Common sampler interface: draw one mini-batch.
+pub trait Sampler: Send + Sync {
+    /// Number of GNN layers the batches serve.
+    fn num_layers(&self) -> usize;
+
+    /// Draw a mini-batch from `g` with the caller's RNG.
+    fn sample(&self, g: &Graph, rng: &mut Pcg64) -> MiniBatch;
+
+    /// Human-readable name for logs and tables.
+    fn name(&self) -> String;
+
+    /// Expected |B^l| per layer (paper Table 2) — drives geometry choice
+    /// and the analytic performance model.
+    fn expected_layer_sizes(&self, g: &Graph) -> Vec<usize>;
+
+    /// Expected |E^l| per layer (paper Table 2).
+    fn expected_edge_counts(&self, g: &Graph) -> Vec<usize>;
+}
+
+/// Dedup while preserving first-seen order (samplers use this to build
+/// `B^{l-1}` so vertex order, and thus the data layout, is deterministic).
+pub fn dedup_preserve_order(items: impl IntoIterator<Item = Vid>) -> Vec<Vid> {
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::new();
+    for v in items {
+        if seen.insert(v) {
+            out.push(v);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+
+    #[test]
+    fn dedup_keeps_first_occurrence_order() {
+        assert_eq!(dedup_preserve_order([3, 1, 3, 2, 1]), vec![3, 1, 2]);
+        assert_eq!(dedup_preserve_order([] as [Vid; 0]), Vec::<Vid>::new());
+    }
+
+    #[test]
+    fn vertices_traversed_sums_layers() {
+        let mb = MiniBatch {
+            layers: vec![vec![0, 1, 2], vec![0, 1], vec![0]],
+            edges: vec![vec![], vec![]],
+        };
+        assert_eq!(mb.vertices_traversed(), 6);
+        assert_eq!(mb.num_layers(), 2);
+    }
+
+    #[test]
+    fn validate_flags_foreign_edges() {
+        let g = generator::uniform(16, 60, true, 1);
+        let mb = MiniBatch {
+            layers: vec![vec![0, 1], vec![0]],
+            edges: vec![vec![Edge { src: 9, dst: 0 }]], // 9 not in B^0
+        };
+        assert!(mb.validate(&g).is_err());
+    }
+
+    #[test]
+    fn validate_requires_self_support() {
+        let g = generator::uniform(16, 60, true, 1);
+        let mb = MiniBatch {
+            layers: vec![vec![1], vec![0]], // 0 not in B^0
+            edges: vec![vec![]],
+        };
+        assert!(mb.validate(&g).is_err());
+    }
+}

@@ -1,0 +1,232 @@
+//! GraphSAGE neighbor sampler (paper §2.3 "Neighbor Sampling").
+//!
+//! Starting from `|V^t|` uniformly chosen target vertices, recursively
+//! samples up to `NS^l` neighbors per vertex per layer (uniform, without
+//! replacement, capped by degree), producing
+//! `|B^{l-1}| <= |B^l| * NS^l (+ self vertices)` and the sampled adjacency
+//! `A_s^l` including self loops.
+
+use super::{dedup_preserve_order, Edge, MiniBatch, Sampler};
+use crate::graph::{Graph, Vid};
+use crate::util::rng::Pcg64;
+
+/// Configuration mirroring the paper's
+/// `Sampler('NeighborSampler', L=2, budgets=[10, 25])`: `budgets[l-1]` is
+/// `NS^l`, the fan-out when expanding layer `l` vertices into layer `l-1`
+/// (so `budgets.last()` applies to the targets first).
+#[derive(Debug, Clone)]
+pub struct NeighborSampler {
+    pub num_targets: usize,
+    /// `budgets[l-1] = NS^l`; length L.
+    pub budgets: Vec<usize>,
+}
+
+impl NeighborSampler {
+    pub fn new(num_targets: usize, budgets: Vec<usize>) -> Self {
+        assert!(!budgets.is_empty(), "at least one layer");
+        assert!(budgets.iter().all(|&b| b > 0), "budgets must be positive");
+        NeighborSampler { num_targets, budgets }
+    }
+
+    /// The paper's evaluation configuration: |V^t|=1024, NS=[25, 10]
+    /// (25 one-hop, 10 two-hop) for a 2-layer model.
+    pub fn paper_default() -> Self {
+        NeighborSampler::new(1024, vec![10, 25])
+    }
+}
+
+impl Sampler for NeighborSampler {
+    fn num_layers(&self) -> usize {
+        self.budgets.len()
+    }
+
+    fn name(&self) -> String {
+        format!("NS(t={}, budgets={:?})", self.num_targets, self.budgets)
+    }
+
+    fn sample(&self, g: &Graph, rng: &mut Pcg64) -> MiniBatch {
+        let ll = self.num_layers();
+        let n = g.num_vertices();
+        let targets: Vec<Vid> = rng
+            .sample_distinct(n, self.num_targets.min(n))
+            .into_iter()
+            .map(|v| v as Vid)
+            .collect();
+
+        let mut layers = vec![Vec::new(); ll + 1];
+        let mut edges = vec![Vec::new(); ll];
+        layers[ll] = targets;
+
+        // Expand top-down: layer l vertices pull from layer l-1.
+        for l in (1..=ll).rev() {
+            let budget = self.budgets[l - 1];
+            let mut frontier: Vec<Vid> = Vec::new();
+            let mut edge_set: Vec<Edge> = Vec::new();
+            for &v in &layers[l] {
+                // Self loop first: keeps v at a deterministic place in the
+                // frontier and satisfies the B^l ⊆ B^{l-1} invariant.
+                frontier.push(v);
+                edge_set.push(Edge { src: v, dst: v });
+                let neigh = g.neighbors(v);
+                if neigh.is_empty() {
+                    continue;
+                }
+                if neigh.len() <= budget {
+                    for &u in neigh {
+                        // Graph self-loops would duplicate the explicit one.
+                        if u != v {
+                            frontier.push(u);
+                            edge_set.push(Edge { src: u, dst: v });
+                        }
+                    }
+                } else {
+                    for i in rng.sample_distinct(neigh.len(), budget) {
+                        let u = neigh[i];
+                        if u != v {
+                            frontier.push(u);
+                            edge_set.push(Edge { src: u, dst: v });
+                        }
+                    }
+                }
+            }
+            layers[l - 1] = dedup_preserve_order(frontier);
+            edges[l - 1] = edge_set;
+        }
+
+        MiniBatch { layers, edges }
+    }
+
+    /// Paper Table 2: |B^l| = |V^t| * Π_{i=l+1}^{L} NS^i  (plus the
+    /// self-inclusion, which the paper folds into the budget).
+    fn expected_layer_sizes(&self, g: &Graph) -> Vec<usize> {
+        let ll = self.num_layers();
+        let t = self.num_targets.min(g.num_vertices());
+        let mut sizes = vec![0usize; ll + 1];
+        sizes[ll] = t;
+        for l in (0..ll).rev() {
+            // NS^{l+1} = budgets[l]; +1 accounts for the self vertex.
+            sizes[l] = sizes[l + 1] * (self.budgets[l] + 1);
+        }
+        sizes
+    }
+
+    /// Paper Table 2: |E^l| = |V^t| * Π_{i=l}^{L} NS^i, with self loops.
+    fn expected_edge_counts(&self, g: &Graph) -> Vec<usize> {
+        let sizes = self.expected_layer_sizes(g);
+        (1..=self.num_layers())
+            .map(|l| sizes[l] * (self.budgets[l - 1] + 1))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::util::prop::Runner;
+
+    fn graph() -> Graph {
+        generator::with_min_degree(generator::rmat(500, 4000, Default::default(), 1), 1, 2)
+    }
+
+    #[test]
+    fn batch_satisfies_invariants() {
+        let g = graph();
+        let s = NeighborSampler::new(32, vec![5, 10]);
+        let mut rng = Pcg64::seed_from_u64(3);
+        let mb = s.sample(&g, &mut rng);
+        mb.validate(&g).unwrap();
+        assert_eq!(mb.layers[2].len(), 32);
+        assert_eq!(mb.num_layers(), 2);
+    }
+
+    #[test]
+    fn fanout_respects_budget() {
+        let g = graph();
+        let s = NeighborSampler::new(16, vec![3, 4]);
+        let mut rng = Pcg64::seed_from_u64(4);
+        let mb = s.sample(&g, &mut rng);
+        // Per-target edges in top layer: self + at most 4 neighbors.
+        let mut per_dst = std::collections::HashMap::new();
+        for e in &mb.edges[1] {
+            *per_dst.entry(e.dst).or_insert(0usize) += 1;
+        }
+        for (&dst, &count) in &per_dst {
+            assert!(count <= 5, "target {dst} has {count} edges");
+            assert!(count >= 1);
+        }
+        // Layer sizes bounded by the Table 2 closed form.
+        let bound = s.expected_layer_sizes(&g);
+        for l in 0..=2 {
+            assert!(mb.layers[l].len() <= bound[l], "layer {l}");
+        }
+    }
+
+    #[test]
+    fn includes_self_loops() {
+        let g = graph();
+        let s = NeighborSampler::new(8, vec![2]);
+        let mut rng = Pcg64::seed_from_u64(5);
+        let mb = s.sample(&g, &mut rng);
+        for &v in &mb.layers[1] {
+            assert!(
+                mb.edges[0].contains(&Edge { src: v, dst: v }),
+                "missing self loop for {v}"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let g = graph();
+        let s = NeighborSampler::new(16, vec![4, 4]);
+        let a = s.sample(&g, &mut Pcg64::seed_from_u64(9));
+        let b = s.sample(&g, &mut Pcg64::seed_from_u64(9));
+        assert_eq!(a.layers, b.layers);
+        assert_eq!(a.edges, b.edges);
+    }
+
+    #[test]
+    fn targets_larger_than_graph_are_clamped() {
+        let g = generator::uniform(10, 40, true, 6);
+        let s = NeighborSampler::new(100, vec![2]);
+        let mb = s.sample(&g, &mut Pcg64::seed_from_u64(7));
+        assert_eq!(mb.layers[1].len(), 10);
+        mb.validate(&g).unwrap();
+    }
+
+    #[test]
+    fn property_invariants_across_seeds_and_shapes() {
+        Runner::new(24, 0xdead).run(
+            |rng| {
+                let n = 50 + rng.index(400);
+                let e = n * (2 + rng.index(8));
+                let targets = 1 + rng.index(20);
+                let depth = 1 + rng.index(3);
+                let budgets: Vec<usize> = (0..depth).map(|_| 1 + rng.index(6)).collect();
+                (n, e, targets, budgets, rng.next_u64())
+            },
+            |&(n, e, targets, ref budgets, seed)| {
+                let g = generator::with_min_degree(
+                    generator::uniform(n, e, true, seed),
+                    1,
+                    seed ^ 1,
+                );
+                let s = NeighborSampler::new(targets, budgets.clone());
+                let mb = s.sample(&g, &mut Pcg64::seed_from_u64(seed ^ 2));
+                mb.validate(&g).map_err(|e| e.to_string())?;
+                let bounds = s.expected_layer_sizes(&g);
+                for l in 0..mb.layers.len() {
+                    if mb.layers[l].len() > bounds[l] {
+                        return Err(format!(
+                            "layer {l} size {} exceeds Table-2 bound {}",
+                            mb.layers[l].len(),
+                            bounds[l]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,178 @@
+//! Measurement harness for `cargo bench` targets (criterion is not in the
+//! offline image).
+//!
+//! Each bench target (`rust/benches/table*.rs`, `harness = false`) builds a
+//! [`BenchSet`], times closures with warmup + repeated samples, and prints
+//! paper-style rows.  Results are also appended as JSON lines to
+//! `target/bench-results.jsonl` so the perf pass can diff before/after.
+
+use std::io::Write;
+use std::time::Instant;
+
+use super::json::Json;
+use super::stats::Summary;
+
+/// One timed measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub median_s: f64,
+    pub samples: usize,
+    /// Optional derived metric (e.g. NVTPS) with its unit.
+    pub metric: Option<(f64, String)>,
+}
+
+/// Bench runner: warms up, then samples until both `min_samples` and
+/// `min_time_s` are met.
+pub struct Bench {
+    pub warmup: usize,
+    pub min_samples: usize,
+    pub max_samples: usize,
+    pub min_time_s: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 2, min_samples: 5, max_samples: 50, min_time_s: 0.5 }
+    }
+}
+
+impl Bench {
+    /// Quick profile for slow end-to-end cases.
+    pub fn quick() -> Self {
+        Bench { warmup: 1, min_samples: 3, max_samples: 10, min_time_s: 0.1 }
+    }
+
+    /// Time `f`, which returns a value that is black-boxed to prevent DCE.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut summary = Summary::new();
+        let start = Instant::now();
+        while summary.count() < self.max_samples
+            && (summary.count() < self.min_samples
+                || start.elapsed().as_secs_f64() < self.min_time_s)
+        {
+            let t = Instant::now();
+            black_box(f());
+            summary.add(t.elapsed().as_secs_f64());
+        }
+        Measurement {
+            name: name.to_string(),
+            mean_s: summary.mean(),
+            std_s: summary.std(),
+            median_s: summary.median(),
+            samples: summary.count(),
+            metric: None,
+        }
+    }
+}
+
+/// Opaque value sink (stable `std::hint::black_box`).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// A named collection of measurements with table-style printing.
+pub struct BenchSet {
+    pub title: String,
+    pub rows: Vec<Measurement>,
+}
+
+impl BenchSet {
+    pub fn new(title: &str) -> Self {
+        println!("\n=== {title} ===");
+        BenchSet { title: title.to_string(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, mut m: Measurement, metric: Option<(f64, &str)>) {
+        m.metric = metric.map(|(v, u)| (v, u.to_string()));
+        let metric_str = m
+            .metric
+            .as_ref()
+            .map(|(v, u)| format!("  {} {u}", super::si(*v)))
+            .unwrap_or_default();
+        println!(
+            "{:<44} {:>10.4} ms ±{:>7.4} ({} samples){}",
+            m.name,
+            m.mean_s * 1e3,
+            m.std_s * 1e3,
+            m.samples,
+            metric_str
+        );
+        self.rows.push(m);
+    }
+
+    /// Print a free-form table row (for analytic/simulated values that are
+    /// not wall-clock measurements).
+    pub fn row(&mut self, name: &str, value: f64, unit: &str) {
+        println!("{:<44} {:>14} {unit}", name, super::si(value));
+        self.rows.push(Measurement {
+            name: name.to_string(),
+            mean_s: 0.0,
+            std_s: 0.0,
+            median_s: 0.0,
+            samples: 0,
+            metric: Some((value, unit.to_string())),
+        });
+    }
+
+    /// Append results to `target/bench-results.jsonl` (best effort).
+    pub fn persist(&self) {
+        let path = std::path::Path::new("target").join("bench-results.jsonl");
+        if let Some(parent) = path.parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) else {
+            return;
+        };
+        for m in &self.rows {
+            let mut pairs = vec![
+                ("bench", Json::str(self.title.clone())),
+                ("name", Json::str(m.name.clone())),
+                ("mean_s", Json::num(m.mean_s)),
+                ("median_s", Json::num(m.median_s)),
+                ("std_s", Json::num(m.std_s)),
+                ("samples", Json::num(m.samples as f64)),
+            ];
+            if let Some((v, u)) = &m.metric {
+                pairs.push(("metric", Json::num(*v)));
+                pairs.push(("metric_unit", Json::str(u.clone())));
+            }
+            let _ = writeln!(f, "{}", Json::obj(pairs).compact());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_collects_min_samples() {
+        let b = Bench { warmup: 0, min_samples: 4, max_samples: 8, min_time_s: 0.0 };
+        let m = b.run("noop", || 1 + 1);
+        assert!(m.samples >= 4 && m.samples <= 8);
+        assert!(m.mean_s >= 0.0);
+    }
+
+    #[test]
+    fn run_measures_sleep_roughly() {
+        let b = Bench { warmup: 0, min_samples: 3, max_samples: 3, min_time_s: 0.0 };
+        let m = b.run("sleep", || std::thread::sleep(std::time::Duration::from_millis(3)));
+        assert!(m.mean_s >= 0.003, "{}", m.mean_s);
+    }
+
+    #[test]
+    fn benchset_accumulates() {
+        let mut set = BenchSet::new("test-set");
+        set.row("analytic", 1.5e6, "NVTPS");
+        let b = Bench { warmup: 0, min_samples: 2, max_samples: 2, min_time_s: 0.0 };
+        set.push(b.run("timed", || 42), Some((2.0e6, "NVTPS")));
+        assert_eq!(set.rows.len(), 2);
+        assert_eq!(set.rows[1].metric.as_ref().unwrap().1, "NVTPS");
+    }
+}

@@ -1,0 +1,220 @@
+//! Declarative command-line flag parser (offline stand-in for `clap`).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, per-flag help text and an auto-generated `--help` screen.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    takes_value: bool,
+}
+
+/// Builder + result of a parse.  Typical use (`no_run`: doctest binaries
+/// miss the libxla rpath in this offline image; the same flow is covered
+/// by the unit tests below):
+///
+/// ```no_run
+/// # use hp_gnn::util::cli::Args;
+/// let args = Args::new("demo", "demo tool")
+///     .flag("model", "gcn", "GNN model (gcn|sage)")
+///     .flag("steps", "100", "training steps")
+///     .switch("verbose", "log every batch")
+///     .parse_from(vec!["--model".into(), "sage".into()])
+///     .unwrap();
+/// assert_eq!(args.get("model"), "sage");
+/// assert_eq!(args.usize("steps"), 100);
+/// assert!(!args.on("verbose"));
+/// ```
+#[derive(Debug, Clone)]
+pub struct Args {
+    program: String,
+    about: String,
+    specs: Vec<FlagSpec>,
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Args {
+            program: program.to_string(),
+            about: about.to_string(),
+            specs: Vec::new(),
+            values: BTreeMap::new(),
+            switches: BTreeMap::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    /// Register a value flag with a default.
+    pub fn flag(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            takes_value: true,
+        });
+        self.values.insert(name.to_string(), default.to_string());
+        self
+    }
+
+    /// Register a boolean switch (default off).
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            takes_value: false,
+        });
+        self.switches.insert(name.to_string(), false);
+        self
+    }
+
+    /// Parse `std::env::args()` (skipping argv[0]); prints help and exits
+    /// on `--help`.
+    pub fn parse(self) -> anyhow::Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        if argv.iter().any(|a| a == "--help" || a == "-h") {
+            eprintln!("{}", self.help_text());
+            std::process::exit(0);
+        }
+        self.parse_from(argv)
+    }
+
+    /// Parse an explicit argv (no exit-on-help; used by tests).
+    pub fn parse_from(mut self, argv: Vec<String>) -> anyhow::Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                if self.switches.contains_key(&name) {
+                    if inline.is_some() {
+                        anyhow::bail!("switch --{name} takes no value");
+                    }
+                    self.switches.insert(name, true);
+                } else if self.values.contains_key(&name) {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?,
+                    };
+                    self.values.insert(name, value);
+                } else {
+                    anyhow::bail!("unknown flag --{name}\n{}", self.help_text());
+                }
+            } else {
+                self.positional.push(arg);
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag {name:?} was never registered"))
+    }
+
+    pub fn on(&self, name: &str) -> bool {
+        *self
+            .switches
+            .get(name)
+            .unwrap_or_else(|| panic!("switch {name:?} was never registered"))
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|e| panic!("--{name} wants an unsigned integer: {e}"))
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|e| panic!("--{name} wants a number: {e}"))
+    }
+
+    pub fn f32(&self, name: &str) -> f32 {
+        self.f64(name) as f32
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nFLAGS:\n", self.program, self.about);
+        for spec in &self.specs {
+            let default = spec
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let value = if spec.takes_value { " <value>" } else { "" };
+            s.push_str(&format!("  --{}{value}\n      {}{default}\n", spec.name, spec.help));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> Args {
+        Args::new("t", "test")
+            .flag("model", "gcn", "model")
+            .flag("steps", "10", "steps")
+            .switch("fast", "go fast")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = demo().parse_from(vec![]).unwrap();
+        assert_eq!(a.get("model"), "gcn");
+        assert_eq!(a.usize("steps"), 10);
+        assert!(!a.on("fast"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = demo()
+            .parse_from(vec!["--model".into(), "sage".into(), "--steps=25".into(), "--fast".into()])
+            .unwrap();
+        assert_eq!(a.get("model"), "sage");
+        assert_eq!(a.usize("steps"), 25);
+        assert!(a.on("fast"));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = demo().parse_from(vec!["train".into(), "--fast".into()]).unwrap();
+        assert_eq!(a.positional, vec!["train"]);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(demo().parse_from(vec!["--nope".into()]).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(demo().parse_from(vec!["--model".into()]).is_err());
+    }
+
+    #[test]
+    fn switch_with_value_rejected() {
+        assert!(demo().parse_from(vec!["--fast=yes".into()]).is_err());
+    }
+
+    #[test]
+    fn help_mentions_flags() {
+        let h = demo().help_text();
+        assert!(h.contains("--model") && h.contains("--fast") && h.contains("default: gcn"));
+    }
+}

@@ -1,0 +1,73 @@
+//! Utility substrate.
+//!
+//! The build image has no network and only a minimal vendored crate set
+//! (`xla`, `anyhow`, `thiserror`, `log`), so the conveniences a production
+//! service would pull from crates.io are implemented here from scratch:
+//!
+//! * [`json`] — a small, strict JSON parser/writer (manifest + user
+//!   programs + metrics dumps).
+//! * [`rng`] — PCG64-family deterministic PRNG (samplers, generators).
+//! * [`cli`] — declarative flag parser for the `hp-gnn` binary and examples.
+//! * [`threadpool`] — scoped worker pool (multi-threaded sampling, §5.1
+//!   "Modeling t_sampling").
+//! * [`stats`] — timers, running stats, percentiles for the metrics path.
+//! * [`bench`] — the measurement harness used by `cargo bench` targets.
+//! * [`prop`] — a miniature property-testing harness (proptest analog).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+/// Round `x` up to the next multiple of `m` (minimum one block).
+pub fn ceil_to(x: usize, m: usize) -> usize {
+    assert!(m > 0, "ceil_to with zero block");
+    if x == 0 {
+        return m;
+    }
+    x.div_ceil(m) * m
+}
+
+/// Human-readable SI formatting for throughput counters (`12.3M`, `456K`).
+pub fn si(x: f64) -> String {
+    let ax = x.abs();
+    if ax >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if ax >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if ax >= 1e3 {
+        format!("{:.1}K", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_to_rounds_up() {
+        assert_eq!(ceil_to(0, 8), 8);
+        assert_eq!(ceil_to(1, 8), 8);
+        assert_eq!(ceil_to(8, 8), 8);
+        assert_eq!(ceil_to(9, 8), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero block")]
+    fn ceil_to_zero_block_panics() {
+        ceil_to(4, 0);
+    }
+
+    #[test]
+    fn si_formats() {
+        assert_eq!(si(123.0), "123.0");
+        assert_eq!(si(29_270_000.0), "29.27M");
+        assert_eq!(si(1_500.0), "1.5K");
+        assert_eq!(si(2.5e9), "2.50G");
+    }
+}

@@ -1,0 +1,131 @@
+//! Scoped worker pool for multi-threaded mini-batch sampling.
+//!
+//! The paper sizes the host sampler pool so `t_sampling < t_GNN` (§5.1);
+//! this pool is what the coordinator uses to run that many samplers
+//! concurrently.  `std::thread::scope` keeps borrows simple — workers may
+//! reference stack data of the caller.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `jobs` closures on up to `threads` workers; returns results in job
+/// order.  Panics in jobs propagate to the caller (fail fast, like rayon).
+pub fn run_jobs<T, F>(threads: usize, jobs: Vec<F>) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    let threads = threads.max(1).min(jobs.len().max(1));
+    let n = jobs.len();
+    let next = AtomicUsize::new(0);
+    // Job storage: each slot is taken exactly once by whichever worker
+    // claims its index.
+    let jobs: Vec<Mutex<Option<F>>> = jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let job = jobs[i].lock().unwrap().take().expect("job taken twice");
+                let out = job();
+                *results[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker dropped a result"))
+        .collect()
+}
+
+/// Map `f` over `items` in parallel, preserving order.
+pub fn par_map<I, T, F>(threads: usize, items: Vec<I>, f: F) -> Vec<T>
+where
+    I: Send,
+    T: Send,
+    F: Fn(I) -> T + Send + Sync,
+{
+    let fref = &f;
+    run_jobs(
+        threads,
+        items
+            .into_iter()
+            .map(|item| move || fref(item))
+            .collect::<Vec<_>>(),
+    )
+}
+
+/// Available hardware parallelism (1 if unknown).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn results_in_job_order() {
+        let out = par_map(4, (0..100).collect(), |i: usize| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn runs_every_job_exactly_once() {
+        let count = AtomicUsize::new(0);
+        let jobs: Vec<_> = (0..57)
+            .map(|_| {
+                let c = &count;
+                move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+            .collect();
+        run_jobs(8, jobs);
+        assert_eq!(count.load(Ordering::Relaxed), 57);
+    }
+
+    #[test]
+    fn single_thread_degenerate() {
+        let out = par_map(1, vec![1, 2, 3], |x: i32| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_jobs() {
+        let out: Vec<i32> = run_jobs(4, Vec::<fn() -> i32>::new());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn can_borrow_caller_stack() {
+        let data = vec![10usize, 20, 30];
+        let slice = &data[..];
+        let out = par_map(2, vec![0usize, 1, 2], |i| slice[i]);
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn uses_multiple_threads_when_asked() {
+        // Not a strict guarantee, but with blocking jobs all workers engage.
+        use std::sync::Barrier;
+        let barrier = Barrier::new(4);
+        let jobs: Vec<_> = (0..4)
+            .map(|_| {
+                let b = &barrier;
+                move || {
+                    b.wait(); // deadlocks unless 4 workers run concurrently
+                    1usize
+                }
+            })
+            .collect();
+        let out = run_jobs(4, jobs);
+        assert_eq!(out.iter().sum::<usize>(), 4);
+    }
+}

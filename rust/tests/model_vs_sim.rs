@@ -1,0 +1,108 @@
+//! Cross-validation: the analytic performance model (Eq. 4–9, what the
+//! DSE engine sweeps) against the cycle-level simulator (what the
+//! experiment benches run) on the same sampled batches.
+//!
+//! The two implementations share no timing code; agreement within a small
+//! factor is evidence both encode the paper's microarchitecture.
+
+use hp_gnn::accel::{simulate_batch, AccelConfig, Platform, SimOptions};
+use hp_gnn::graph::datasets;
+use hp_gnn::layout::{index_batch, LayoutOptions};
+use hp_gnn::perf::{estimate, BatchGeometry, ModelShape};
+use hp_gnn::sampler::values::{attach_values, GnnModel};
+use hp_gnn::sampler::{neighbor::NeighborSampler, Sampler};
+use hp_gnn::util::rng::Pcg64;
+
+fn setup(seed: u64) -> (hp_gnn::graph::Graph, datasets::DatasetSpec) {
+    let ds = datasets::FLICKR;
+    (ds.scale(0.2).instantiate(seed), ds)
+}
+
+/// Run both paths on the same batch; return (analytic t_gnn, simulated
+/// t_gnn).
+fn both(
+    g: &hp_gnn::graph::Graph,
+    ds: &datasets::DatasetSpec,
+    config: &AccelConfig,
+    layout: LayoutOptions,
+    sage: bool,
+    seed: u64,
+) -> (f64, f64) {
+    let platform = Platform::alveo_u250();
+    let sampler = NeighborSampler::new(256, vec![10, 25]);
+    let mb = sampler.sample(g, &mut Pcg64::seed_from_u64(seed));
+    let model = if sage { GnnModel::Sage } else { GnnModel::Gcn };
+    let vals = attach_values(g, &mb, model);
+    let ib = index_batch(&mb, &vals, layout);
+    let feat = vec![ds.f0, 256, ds.f2];
+
+    let sim = simulate_batch(
+        &platform,
+        config,
+        &ib,
+        &feat,
+        SimOptions { sage_concat: sage, ..Default::default() },
+    );
+
+    // Analytic model fed the *actual* batch shape (so the comparison
+    // isolates the timing formulas, not the geometry estimators).
+    let geom = BatchGeometry {
+        b: mb.layers.iter().map(|l| l.len()).collect(),
+        e: mb.edges.iter().map(|e| e.len()).collect(),
+    };
+    let est = estimate(
+        &platform,
+        config,
+        &geom,
+        &ModelShape { feat, sage_concat: sage },
+        layout,
+    );
+    (est.t_gnn, sim.t_gnn)
+}
+
+#[test]
+fn analytic_tracks_simulator_within_2x_optimized_layout() {
+    let (g, ds) = setup(1);
+    for (sage, seed) in [(false, 10), (true, 11)] {
+        let (analytic, simulated) =
+            both(&g, &ds, &AccelConfig::paper_default(), LayoutOptions::all(), sage, seed);
+        let ratio = analytic / simulated;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "sage={sage}: analytic {analytic:.6} vs simulated {simulated:.6} (ratio {ratio:.2})"
+        );
+    }
+}
+
+#[test]
+fn both_models_agree_rmt_helps() {
+    let (g, ds) = setup(2);
+    let cfg = AccelConfig::paper_default();
+    let (a_base, s_base) = both(&g, &ds, &cfg, LayoutOptions::none(), false, 20);
+    let (a_all, s_all) = both(&g, &ds, &cfg, LayoutOptions::all(), false, 20);
+    assert!(a_all < a_base, "analytic: layout opts should reduce t_gnn");
+    assert!(s_all < s_base, "simulator: layout opts should reduce t_gnn");
+}
+
+#[test]
+fn both_models_agree_on_config_scaling() {
+    // Quadrupling the MAC array must not slow either model, and the two
+    // must move in the same direction.
+    let (g, ds) = setup(3);
+    let small = AccelConfig { n: 4, m: 64 };
+    let big = AccelConfig { n: 4, m: 1024 };
+    let (a_small, s_small) = both(&g, &ds, &small, LayoutOptions::all(), false, 30);
+    let (a_big, s_big) = both(&g, &ds, &big, LayoutOptions::all(), false, 30);
+    assert!(a_big <= a_small);
+    assert!(s_big <= s_small);
+}
+
+#[test]
+fn sage_costs_more_than_gcn_in_both() {
+    let (g, ds) = setup(4);
+    let cfg = AccelConfig::paper_default();
+    let (a_gcn, s_gcn) = both(&g, &ds, &cfg, LayoutOptions::all(), false, 40);
+    let (a_sage, s_sage) = both(&g, &ds, &cfg, LayoutOptions::all(), true, 40);
+    assert!(a_sage > a_gcn);
+    assert!(s_sage > s_gcn);
+}

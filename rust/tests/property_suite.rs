@@ -1,0 +1,215 @@
+//! Cross-module property tests (no artifacts needed): randomized
+//! invariants that the per-module unit tests don't cover.
+
+use hp_gnn::accel::aggregate::AggregateSim;
+use hp_gnn::graph::generator;
+use hp_gnn::layout::pad::{pad, EdgeOverflow};
+use hp_gnn::layout::{index_batch, Geometry, LayoutOptions};
+use hp_gnn::sampler::values::{attach_values, GnnModel};
+use hp_gnn::sampler::{neighbor::NeighborSampler, subgraph::SubgraphSampler, Sampler};
+use hp_gnn::util::json::Json;
+use hp_gnn::util::prop::Runner;
+use hp_gnn::util::rng::Pcg64;
+
+#[test]
+fn property_padding_preserves_real_prefix() {
+    Runner::new(24, 0xa11).run(
+        |rng| {
+            let n = 100 + rng.index(400);
+            let seed = rng.next_u64();
+            let targets = 1 + rng.index(6);
+            (n, seed, targets)
+        },
+        |&(n, seed, targets)| {
+            let g = generator::with_min_degree(
+                generator::uniform(n, n * 6, true, seed),
+                1,
+                seed ^ 1,
+            );
+            let s = NeighborSampler::new(targets, vec![4, 3]);
+            let mb = s.sample(&g, &mut Pcg64::seed_from_u64(seed ^ 2));
+            let vals = attach_values(&g, &mb, GnnModel::Gcn);
+            let ib = index_batch(&mb, &vals, LayoutOptions::all());
+            let geom = Geometry {
+                name: "p".into(),
+                b: vec![
+                    mb.layers[0].len() + 7,
+                    mb.layers[1].len() + 5,
+                    mb.layers[2].len() + 3,
+                ],
+                e: vec![ib.layer_edges[0].src.len() + 9, ib.layer_edges[1].src.len() + 2],
+                f: vec![8, 4, 2],
+            };
+            let labels = vec![1u8; mb.layers[2].len()];
+            let pb = pad(&ib, &labels, &geom, EdgeOverflow::Error).map_err(|e| e.to_string())?;
+            // Real prefix intact, padding zeroed.
+            for l in 0..2 {
+                for i in 0..pb.real_e[l] {
+                    if pb.src[l][i] as u32 != ib.layer_edges[l].src[i]
+                        || pb.dst[l][i] as u32 != ib.layer_edges[l].dst[i]
+                        || pb.val[l][i] != ib.layer_edges[l].val[i]
+                    {
+                        return Err(format!("layer {l} edge {i} mutated by padding"));
+                    }
+                }
+                for i in pb.real_e[l]..geom.e[l] {
+                    if pb.val[l][i] != 0.0 {
+                        return Err(format!("layer {l} pad slot {i} has nonzero value"));
+                    }
+                }
+            }
+            let real_t = pb.real_b[2];
+            if pb.mask[..real_t].iter().any(|&m| m != 1.0)
+                || pb.mask[real_t..].iter().any(|&m| m != 0.0)
+            {
+                return Err("mask does not split real/pad targets".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_aggregate_sim_monotone_in_edges() {
+    // Appending edges to a stream never reduces simulated cycles.
+    Runner::new(32, 0xa22).run(
+        |rng| {
+            let e = 8 + rng.index(256);
+            let extra = 1 + rng.index(64);
+            let n_out = 4 + rng.index(60);
+            let n_pe = 1usize << rng.index(4);
+            let seed = rng.next_u64();
+            (e, extra, n_out, n_pe, seed)
+        },
+        |&(e, extra, n_out, n_pe, seed)| {
+            let mut rng = Pcg64::seed_from_u64(seed);
+            let mk = |rng: &mut Pcg64, count: usize| {
+                (0..count)
+                    .map(|_| (rng.index(200) as u32, rng.index(n_out) as u32))
+                    .unzip::<u32, u32, Vec<u32>, Vec<u32>>()
+            };
+            let (mut src, mut dst) = mk(&mut rng, e);
+            let sim = AggregateSim { n: n_pe, lanes: 16, raw_depth: 4 };
+            let short = sim.run(&src, &dst, 64);
+            let (s2, d2) = mk(&mut rng, extra);
+            src.extend(s2);
+            dst.extend(d2);
+            let long = sim.run(&src, &dst, 64);
+            if long.cycles < short.cycles {
+                return Err(format!(
+                    "cycles decreased with more edges: {} -> {}",
+                    short.cycles, long.cycles
+                ));
+            }
+            if long.loads < short.loads {
+                return Err("loads decreased with more edges".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_json_round_trip_fuzz() {
+    // parse(pretty(v)) == v for randomly generated documents.
+    fn gen_value(rng: &mut Pcg64, depth: usize) -> Json {
+        match if depth == 0 { rng.index(4) } else { rng.index(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.index(2) == 0),
+            2 => {
+                // Exact-in-f64 numbers (round-trip must be identity).
+                Json::num((rng.index(2_000_001) as f64 - 1e6) / 4.0)
+            }
+            3 => {
+                let len = rng.index(12);
+                let s: String = (0..len)
+                    .map(|_| {
+                        let c = rng.index(96) as u8 + 32;
+                        c as char
+                    })
+                    .collect();
+                Json::str(s)
+            }
+            4 => Json::arr((0..rng.index(5)).map(|_| gen_value(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.index(5))
+                    .map(|i| (format!("k{i}"), gen_value(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    Runner::new(200, 0xa33).run(
+        |rng| gen_value(rng, 3),
+        |v| {
+            let pretty = Json::parse(&v.pretty()).map_err(|e| e.to_string())?;
+            let compact = Json::parse(&v.compact()).map_err(|e| e.to_string())?;
+            if &pretty != v || &compact != v {
+                return Err(format!("round trip changed value: {v}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_subgraph_edges_scale_with_budget() {
+    // Bigger budgets induce at least as many edges (same graph, same seed).
+    Runner::new(16, 0xa44).run(
+        |rng| (400 + rng.index(800), rng.next_u64(), 16 + rng.index(64)),
+        |&(n, seed, sb)| {
+            let g = generator::rmat(n, n * 8, Default::default(), seed);
+            let small = SubgraphSampler::new(sb, 1).sample(&g, &mut Pcg64::seed_from_u64(3));
+            let big = SubgraphSampler::new(sb * 2, 1).sample(&g, &mut Pcg64::seed_from_u64(3));
+            if big.edges[0].len() < small.edges[0].len() {
+                return Err(format!(
+                    "edges shrank with bigger budget: {} -> {}",
+                    small.edges[0].len(),
+                    big.edges[0].len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_layout_semantics_invariant_under_options() {
+    // For random batches, positional aggregation results are identical
+    // across all four layout-option combinations.
+    Runner::new(16, 0xa55).run(
+        |rng| (200 + rng.index(300), rng.next_u64()),
+        |&(n, seed)| {
+            let g = generator::with_min_degree(
+                generator::rmat(n, n * 8, Default::default(), seed),
+                1,
+                seed ^ 1,
+            );
+            let s = NeighborSampler::new(6, vec![4, 3]);
+            let mb = s.sample(&g, &mut Pcg64::seed_from_u64(seed ^ 2));
+            let vals = attach_values(&g, &mb, GnnModel::Sage);
+            let aggregate = |opts| {
+                let ib = index_batch(&mb, &vals, opts);
+                let mut acc = vec![0.0f64; mb.layers[1].len()];
+                let l = &ib.layer_edges[0];
+                for ((&s, &d), &v) in l.src.iter().zip(&l.dst).zip(&l.val) {
+                    acc[d as usize] += v as f64 * (s as f64 + 1.0);
+                }
+                acc
+            };
+            let reference = aggregate(LayoutOptions::none());
+            for opts in [
+                LayoutOptions { rmt: true, rra: false },
+                LayoutOptions { rmt: false, rra: true },
+                LayoutOptions::all(),
+            ] {
+                let got = aggregate(opts);
+                for (a, b) in reference.iter().zip(&got) {
+                    if (a - b).abs() > 1e-9 {
+                        return Err(format!("layout {opts:?} changed semantics"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,279 @@
+//! Integration: the full AOT→PJRT round-trip and the training coordinator
+//! on the tiny geometry.  This is the rust-side owner of the HLO-text
+//! interchange contract (python only checks parseability).
+//!
+//! Requires `make artifacts` (skips cleanly when artifacts are absent so
+//! `cargo test` works on a fresh checkout).
+
+use std::path::PathBuf;
+
+use hp_gnn::coordinator::{train, TrainConfig};
+use hp_gnn::graph::generator;
+use hp_gnn::layout::pad::{pad, EdgeOverflow};
+use hp_gnn::layout::{index_batch, LayoutOptions};
+use hp_gnn::runtime::{inputs, Kind, Runtime, WeightState};
+use hp_gnn::sampler::neighbor::NeighborSampler;
+use hp_gnn::sampler::values::{attach_values, GnnModel};
+use hp_gnn::sampler::Sampler;
+use hp_gnn::util::rng::Pcg64;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+/// Fresh runtime per test — the xla client is single-threaded (Rc-based),
+/// so it cannot live in a shared static.  Tiny-geometry compiles are fast.
+fn runtime() -> Option<Runtime> {
+    artifacts_dir().map(|d| Runtime::load(&d).expect("runtime"))
+}
+
+fn tiny_graph() -> hp_gnn::graph::Graph {
+    let mut g = generator::with_min_degree(
+        generator::rmat(400, 3200, Default::default(), 91),
+        1,
+        92,
+    );
+    g.feat_dim = 16;
+    g.num_classes = 4;
+    g
+}
+
+#[test]
+fn forward_artifact_executes_with_correct_shapes() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    let exe = rt.compile_role(GnnModel::Gcn, "tiny", Kind::Forward).unwrap();
+    let geom = exe.spec.geometry.clone();
+
+    let g = tiny_graph();
+    let sampler = NeighborSampler::new(4, vec![5, 3]);
+    let mut rng = Pcg64::seed_from_u64(1);
+    let mb = sampler.sample(&g, &mut rng);
+    let vals = attach_values(&g, &mb, GnnModel::Gcn);
+    let ib = index_batch(&mb, &vals, LayoutOptions::all());
+    let labels = vec![0u8; mb.layers[2].len()];
+    let padded = pad(&ib, &labels, &geom, EdgeOverflow::Error).unwrap();
+
+    let weights = WeightState::init_glorot(&exe.spec.weight_shapes, 3);
+    let feats = vec![0.25f32; geom.b[0] * geom.f[0]];
+    let lits = inputs::build_inputs(&exe.spec, &padded, &feats, &weights, 0.0).unwrap();
+    let outs = exe.run(&lits).unwrap();
+    assert_eq!(outs.len(), 1, "forward returns logits only");
+    let logits = outs[0].to_vec::<f32>().unwrap();
+    assert_eq!(logits.len(), geom.b[2] * geom.num_classes());
+    assert!(logits.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn train_step_loss_decreases_gcn() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    let g = tiny_graph();
+    let sampler = NeighborSampler::new(4, vec![5, 3]);
+    let mut cfg = TrainConfig::quick(GnnModel::Gcn, "tiny", 40);
+    cfg.lr = 0.1;
+    let report = train(rt, &g, &sampler, &cfg).unwrap();
+    assert_eq!(report.metrics.losses.len(), 40);
+    let (head, tail) = report.metrics.loss_drop().unwrap();
+    assert!(
+        tail < head,
+        "loss did not descend: head {head:.4} tail {tail:.4} ({:?})",
+        &report.metrics.losses
+    );
+    assert!(report.metrics.functional_nvtps() > 0.0);
+}
+
+#[test]
+fn train_step_loss_decreases_sage() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    let g = tiny_graph();
+    let sampler = NeighborSampler::new(4, vec![5, 3]);
+    let mut cfg = TrainConfig::quick(GnnModel::Sage, "tiny", 40);
+    cfg.lr = 0.1;
+    cfg.seed = 11;
+    let report = train(rt, &g, &sampler, &cfg).unwrap();
+    let (head, tail) = report.metrics.loss_drop().unwrap();
+    assert!(tail < head, "sage loss did not descend: {head:.4} -> {tail:.4}");
+}
+
+#[test]
+fn training_is_deterministic_per_seed() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    let g = tiny_graph();
+    let sampler = NeighborSampler::new(4, vec![5, 3]);
+    let mut cfg = TrainConfig::quick(GnnModel::Gcn, "tiny", 6);
+    cfg.sampler_threads = 1; // multi-producer interleave is seed-stable only per thread
+    let a = train(rt, &g, &sampler, &cfg).unwrap();
+    let b = train(rt, &g, &sampler, &cfg).unwrap();
+    assert_eq!(a.metrics.losses, b.metrics.losses);
+}
+
+#[test]
+fn layout_options_do_not_change_training_numerics() {
+    // The paper's central claim about RMT/RRA: timing-only.  Same seed,
+    // same batches — the executed losses must be bit-identical across
+    // layout settings (aggregation is order-invariant in f32 here because
+    // the kernel accumulates in a fixed dst-major replay... in practice
+    // XLA's reduction order is fixed by the HLO, so losses match to f32
+    // round-off; we assert tight closeness).
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    let g = tiny_graph();
+    let sampler = NeighborSampler::new(4, vec![5, 3]);
+    let mut base_cfg = TrainConfig::quick(GnnModel::Gcn, "tiny", 5);
+    base_cfg.sampler_threads = 1;
+    base_cfg.layout = LayoutOptions::none();
+    let mut opt_cfg = base_cfg.clone();
+    opt_cfg.layout = LayoutOptions::all();
+    let a = train(rt, &g, &sampler, &base_cfg).unwrap();
+    let b = train(rt, &g, &sampler, &opt_cfg).unwrap();
+    for (x, y) in a.metrics.losses.iter().zip(&b.metrics.losses) {
+        assert!(
+            (x - y).abs() < 2e-3 * x.abs().max(1.0),
+            "layout changed numerics: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn simulation_attaches_accelerator_timing() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    let g = tiny_graph();
+    let sampler = NeighborSampler::new(4, vec![5, 3]);
+    let mut cfg = TrainConfig::quick(GnnModel::Gcn, "tiny", 4);
+    cfg.simulate = Some((
+        hp_gnn::accel::Platform::alveo_u250(),
+        hp_gnn::accel::AccelConfig::paper_default(),
+    ));
+    let report = train(rt, &g, &sampler, &cfg).unwrap();
+    let sim = report.metrics.simulated_nvtps(cfg.sampler_threads).unwrap();
+    assert!(sim > 0.0);
+    assert!(report.metrics.t_gnn_sim.mean() > 0.0);
+}
+
+#[test]
+fn subgraph_sampler_trains_with_truncation() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    let mut g = generator::rmat(600, 9000, Default::default(), 93);
+    g.feat_dim = 16;
+    g.num_classes = 4;
+    // Tiny geometry is an NS shape; SS batches share the vertex set, so we
+    // need b0 == b1 == b2 — use the NS geometry bounds as caps instead by
+    // sampling few vertices.
+    let sampler = hp_gnn::sampler::subgraph::SubgraphSampler::new(4, 2);
+    let cfg = TrainConfig::quick(GnnModel::Gcn, "tiny", 6);
+    let report = train(rt, &g, &sampler, &cfg).unwrap();
+    assert_eq!(report.metrics.losses.len(), 6);
+    assert!(report.metrics.losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn mismatched_sampler_depth_is_rejected() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    let g = tiny_graph();
+    let sampler = NeighborSampler::new(4, vec![5]); // 1 layer vs 2-layer artifact
+    let cfg = TrainConfig::quick(GnnModel::Gcn, "tiny", 2);
+    assert!(train(rt, &g, &sampler, &cfg).is_err());
+}
+
+#[test]
+fn gin_trains_on_the_gcn_template() {
+    // GIN resolves to the GCN artifact family with (1+ε) self-loop values.
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    let g = tiny_graph();
+    let sampler = NeighborSampler::new(4, vec![5, 3]);
+    let mut cfg = TrainConfig::quick(GnnModel::Gin, "tiny", 40);
+    cfg.lr = 0.05;
+    let report = train(rt, &g, &sampler, &cfg).unwrap();
+    let (head, tail) = report.metrics.loss_drop().unwrap();
+    assert!(tail < head, "GIN loss did not descend: {head:.4} -> {tail:.4}");
+    // And its losses differ from plain GCN on the same seed (different
+    // edge values -> different computation).
+    let gcn = train(rt, &g, &sampler, &TrainConfig { lr: 0.05, ..TrainConfig::quick(GnnModel::Gcn, "tiny", 40) }).unwrap();
+    assert_ne!(report.metrics.losses, gcn.metrics.losses);
+}
+
+#[test]
+fn adam_optimizer_trains_and_differs_from_sgd() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    let g = tiny_graph();
+    let sampler = NeighborSampler::new(4, vec![5, 3]);
+    let mut adam_cfg = TrainConfig::quick(GnnModel::Gcn, "tiny", 40);
+    adam_cfg.optimizer = hp_gnn::coordinator::trainer::Optimizer::Adam;
+    adam_cfg.lr = 0.01;
+    adam_cfg.sampler_threads = 1;
+    let adam = train(rt, &g, &sampler, &adam_cfg).unwrap();
+    let (head, tail) = adam.metrics.loss_drop().unwrap();
+    assert!(tail < head, "adam loss did not descend: {head:.4} -> {tail:.4}");
+
+    let mut sgd_cfg = adam_cfg.clone();
+    sgd_cfg.optimizer = hp_gnn::coordinator::trainer::Optimizer::Sgd;
+    let sgd = train(rt, &g, &sampler, &sgd_cfg).unwrap();
+    // Same batches, same init, different update rule -> different losses
+    // after step 0 (step 0 loss is pre-update, identical).
+    assert!((adam.metrics.losses[0] - sgd.metrics.losses[0]).abs() < 1e-6);
+    assert_ne!(adam.metrics.losses[5..], sgd.metrics.losses[5..]);
+}
+
+#[test]
+fn trained_model_beats_chance_on_eval() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    let g = tiny_graph();
+    let sampler = NeighborSampler::new(4, vec![5, 3]);
+    let mut cfg = TrainConfig::quick(GnnModel::Sage, "tiny", 120);
+    cfg.lr = 0.1;
+    cfg.seed = 21;
+    let report = train(rt, &g, &sampler, &cfg).unwrap();
+    let eval =
+        hp_gnn::coordinator::evaluate(rt, &g, &sampler, &cfg, &report.final_weights, 8, 999)
+            .unwrap();
+    // 4 classes -> chance is 0.25; the trained SAGE model must beat it
+    // clearly on held-out batches.
+    assert!(
+        eval.accuracy() > 0.5,
+        "accuracy {:.3} ({}/{})",
+        eval.accuracy(),
+        eval.correct,
+        eval.total
+    );
+    // Untrained weights hover near chance.
+    let fresh = hp_gnn::runtime::WeightState::init_glorot(
+        &rt.manifest.find(GnnModel::Sage, "tiny", hp_gnn::runtime::Kind::TrainStep)
+            .unwrap()
+            .weight_shapes,
+        5,
+    );
+    let base = hp_gnn::coordinator::evaluate(rt, &g, &sampler, &cfg, &fresh, 8, 999).unwrap();
+    assert!(base.accuracy() < eval.accuracy());
+}
+
+#[test]
+fn checkpoint_resume_preserves_behaviour() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    let g = tiny_graph();
+    let sampler = NeighborSampler::new(4, vec![5, 3]);
+    let mut cfg = TrainConfig::quick(GnnModel::Gcn, "tiny", 30);
+    cfg.lr = 0.1;
+    let report = train(rt, &g, &sampler, &cfg).unwrap();
+    let dir = std::env::temp_dir().join(format!("hpgnn-it-ckpt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.bin");
+    report.final_weights.save(&path).unwrap();
+    let loaded = hp_gnn::runtime::WeightState::load(&path).unwrap();
+    // Saved and reloaded weights evaluate identically.
+    let a = hp_gnn::coordinator::evaluate(rt, &g, &sampler, &cfg, &report.final_weights, 3, 7)
+        .unwrap();
+    let b = hp_gnn::coordinator::evaluate(rt, &g, &sampler, &cfg, &loaded, 3, 7).unwrap();
+    assert_eq!(a.correct, b.correct);
+    assert_eq!(a.total, b.total);
+}
