@@ -1,0 +1,31 @@
+# HP-GNN build entry points.
+#
+# The rust crate builds and trains with zero external dependencies (pure-
+# Rust reference backend).  `make artifacts` is only needed for the
+# optional PJRT path (`--features xla`): it AOT-lowers the JAX/Pallas
+# model to HLO text and writes the manifest the runtime validates against.
+
+ARTIFACTS ?= rust/artifacts
+
+.PHONY: build test check-xla fmt artifacts clean-artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# The PJRT path must keep compiling even without an XLA install.
+check-xla:
+	cargo check --features xla
+
+fmt:
+	cargo fmt --check
+
+# Requires a python environment with jax (build time only; the rust
+# runtime never invokes python).
+artifacts:
+	cd python && python3 -m compile.aot --out $(abspath $(ARTIFACTS))
+
+clean-artifacts:
+	rm -rf $(ARTIFACTS)

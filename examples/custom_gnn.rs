@@ -21,7 +21,7 @@ use hp_gnn::sampler::neighbor::NeighborSampler;
 use hp_gnn::sampler::values::GnnModel;
 
 fn main() -> anyhow::Result<()> {
-    let runtime = Runtime::load(std::path::Path::new("artifacts"))?;
+    let runtime = Runtime::auto(std::path::Path::new("artifacts"))?;
 
     let mut g = generator::with_min_degree(
         generator::rmat(3_000, 24_000, Default::default(), 5),

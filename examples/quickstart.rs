@@ -14,7 +14,7 @@ use hp_gnn::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
     // Init() + PlatformParameters(board='xilinx-U250')
-    let runtime = Runtime::load(std::path::Path::new("artifacts"))?;
+    let runtime = Runtime::auto(std::path::Path::new("artifacts"))?;
 
     // GNN_Parameters + GNN_Computation + Sampler + LoadInputGraph
     let design = HpGnn::init()

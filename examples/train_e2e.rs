@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
         .flag("seed", "7", "seed")
         .parse()?;
 
-    let runtime = Runtime::load(std::path::Path::new("artifacts"))?;
+    let runtime = Runtime::auto(std::path::Path::new("artifacts"))?;
     let steps = args.usize("steps");
 
     for model in ["GCN", "SAGE"] {

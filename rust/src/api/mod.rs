@@ -397,13 +397,18 @@ mod tests {
         assert_eq!(s.num_layers(), 2);
     }
 
+    /// An artifact-less runtime on the always-available reference backend
+    /// (these tests only exercise builder validation).
+    fn empty_runtime() -> Runtime {
+        Runtime::with_backend(
+            crate::runtime::Manifest::from_specs(Vec::new()).unwrap(),
+            Box::new(crate::runtime::ReferenceBackend),
+        )
+    }
+
     #[test]
     fn builder_validates_missing_pieces() {
-        // No runtime needed to hit the validation errors.
-        let dir = std::env::temp_dir().join(format!("hpgnn-api-{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
-        std::fs::write(dir.join("manifest.json"), r#"{"version": 1, "artifacts": []}"#).unwrap();
-        let rt = Runtime::load(&dir).unwrap();
+        let rt = empty_runtime();
         let err = HpGnn::init().generate_design(&rt).unwrap_err().to_string();
         assert!(err.contains("PlatformParameters"), "{err}");
         let err = HpGnn::init()
@@ -422,10 +427,7 @@ mod tests {
 
     #[test]
     fn hidden_dims_must_match_depth() {
-        let dir = std::env::temp_dir().join(format!("hpgnn-api2-{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
-        std::fs::write(dir.join("manifest.json"), r#"{"version": 1, "artifacts": []}"#).unwrap();
-        let rt = Runtime::load(&dir).unwrap();
+        let rt = empty_runtime();
         let mut g = crate::graph::generator::uniform(100, 500, true, 2);
         g.feat_dim = 16;
         g.num_classes = 4;

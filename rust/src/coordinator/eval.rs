@@ -69,8 +69,8 @@ pub fn evaluate(
         let lits = inputs::build_inputs(spec, &padded, &features, weights, 0.0)?;
         let outs = exe.run(&lits)?;
         let logits = outs[0]
-            .to_vec::<f32>()
-            .map_err(|e| anyhow::anyhow!("logits readback: {e:?}"))?;
+            .f32_data()
+            .map_err(|e| anyhow::anyhow!("logits readback: {e}"))?;
 
         let real_targets = padded.real_b[ll];
         for i in 0..real_targets {

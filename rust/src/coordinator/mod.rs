@@ -3,8 +3,10 @@
 //! Runs Algorithm 2 with the paper's task schedule: mini-batch sampling on
 //! a host thread pool, *overlapped* with accelerator execution of the
 //! current batch (Eq. 5's `max(t_sampling, t_GNN)` emerges from the
-//! pipeline).  Execution is the AOT-compiled PJRT train step; per-batch
-//! accelerator timing optionally comes from the cycle-level simulator.
+//! pipeline).  Execution is the runtime backend's train step (pure-Rust
+//! reference by default, AOT-compiled PJRT under `--features xla`);
+//! per-batch accelerator timing optionally comes from the cycle-level
+//! simulator.
 
 pub mod eval;
 pub mod metrics;

@@ -3,7 +3,8 @@
 //! Producer threads sample mini-batches, attach edge values, run the
 //! layout engine (RMT/RRA), pad to the artifact geometry and synthesize
 //! the feature rows; a bounded channel feeds the consumer, which executes
-//! the AOT train step via PJRT and threads the weights through.  The
+//! the train step on the runtime backend (pure-Rust reference by default,
+//! PJRT under `--features xla`) and threads the weights through.  The
 //! bounded channel is the backpressure mechanism: when the accelerator is
 //! the bottleneck the producers idle (sampling fully hidden, Eq. 5), when
 //! sampling is the bottleneck the consumer starves and the measured
@@ -198,8 +199,8 @@ pub fn train(
             )?;
             let outs = exe.run(&lits)?;
             let loss = outs[0]
-                .to_vec::<f32>()
-                .map_err(|e| anyhow::anyhow!("loss readback: {e:?}"))?[0];
+                .scalar()
+                .map_err(|e| anyhow::anyhow!("loss readback: {e}"))?;
             anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}: {loss}");
             let nparams = weights.tensors.len();
             weights.update_from(&outs[1..1 + nparams])?;

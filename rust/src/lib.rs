@@ -12,11 +12,14 @@
 //! * **Layer 1 (python/compile/kernels, build time)** — the aggregate /
 //!   update hardware templates as Pallas kernels.
 //!
-//! At runtime the rust binary is self-contained: it loads the HLO
-//! artifacts once via the PJRT CPU client ([`runtime`]) and drives
-//! training (Algorithm 2) with sampling overlapped against execution
-//! ([`coordinator`]).  See DESIGN.md for the paper-to-module map and
-//! EXPERIMENTS.md for reproduced tables.
+//! At runtime the rust binary is self-contained: execution goes through a
+//! pluggable [`runtime`] backend.  The default is a pure-Rust reference
+//! executor implementing the exact train-step semantics (no artifacts or
+//! external libraries needed); `--features xla` swaps in the PJRT CPU
+//! client running the AOT HLO artifacts.  Either way the [`coordinator`]
+//! drives training (Algorithm 2) with sampling overlapped against
+//! execution.  See README.md for the two-backend story and the
+//! build/verify commands.
 
 pub mod accel;
 pub mod api;

@@ -62,7 +62,7 @@ fn cmd_run(argv: Vec<String>) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("usage: hp-gnn run <program.json>"))?;
     let text = std::fs::read_to_string(path)?;
     let (builder, params) = program::parse_program(&text)?;
-    let runtime = Runtime::load(std::path::Path::new(args.get("artifacts")))?;
+    let runtime = Runtime::auto(std::path::Path::new(args.get("artifacts")))?;
     let design = builder.generate_design(&runtime)?;
     println!("generated design:\n{}", design.to_json().pretty());
     let report = design.start_training(&runtime, params.steps, params.lr, params.simulate)?;
@@ -93,7 +93,7 @@ fn cmd_train(argv: Vec<String>) -> anyhow::Result<()> {
     )
     .parse_from(argv)?;
 
-    let runtime = Runtime::load(std::path::Path::new(args.get("artifacts")))?;
+    let runtime = Runtime::auto(std::path::Path::new(args.get("artifacts")))?;
     let sampler = match args.get("sampler") {
         "ns" => SamplerSpec::Neighbor {
             targets: args.usize("targets"),
@@ -293,8 +293,9 @@ fn cmd_info(argv: Vec<String>) -> anyhow::Result<()> {
         platform.bw_per_channel_gbps,
         platform.freq_hz / 1e6
     );
-    match Runtime::load(std::path::Path::new(args.get("artifacts"))) {
+    match Runtime::auto(std::path::Path::new(args.get("artifacts"))) {
         Ok(rt) => {
+            println!("backend: {}", rt.backend_name());
             println!("artifacts:");
             for name in rt.manifest.names() {
                 let spec = rt.manifest.get(name)?;

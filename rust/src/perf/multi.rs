@@ -37,8 +37,8 @@ impl MultiFpga {
 pub struct ScalingPoint {
     pub boards: usize,
     pub nvtps: f64,
-    /// What binds at this point: "compute", "sampling" or "allreduce" /
-    /// "link".
+    /// What binds at this point: "compute", "sampling", "allreduce",
+    /// "host-mem" (data parallel) or "link" (model parallel).
     pub bottleneck: &'static str,
 }
 
@@ -75,7 +75,10 @@ pub fn data_parallel(
     } else if t_sampling >= host_mem_bound {
         "sampling"
     } else {
-        "allreduce"
+        // Host memory bandwidth is the binding term: the all-reduce tree
+        // saturates host RAM (read grad + write sum + read back per
+        // board), not the PCIe links.
+        "host-mem"
     };
     ScalingPoint {
         boards: fabric.boards,
@@ -151,6 +154,21 @@ mod tests {
             starved.nvtps,
             starved4.nvtps
         );
+    }
+
+    #[test]
+    fn host_memory_saturation_is_named_host_mem() {
+        let (mut p, est, geom, model) = setup();
+        // Starve host memory bandwidth so the all-reduce's RAM traffic —
+        // not sampling, not the links — binds.
+        p.host.mem_bw_gbps = 1e-3;
+        let point = data_parallel(&est, &geom, &model, &p, MultiFpga::pcie(4), 5e-3, 64);
+        assert_eq!(point.bottleneck, "host-mem");
+        // And it is genuinely the iteration-time term: healthy host memory
+        // on the same configuration is strictly faster.
+        let (healthy, ..) = setup();
+        let fast = data_parallel(&est, &geom, &model, &healthy, MultiFpga::pcie(4), 5e-3, 64);
+        assert!(fast.nvtps > point.nvtps * 10.0, "{} vs {}", fast.nvtps, point.nvtps);
     }
 
     #[test]

@@ -1,0 +1,39 @@
+//! The pluggable execution backend contract.
+//!
+//! A [`Backend`] turns one manifest [`ArtifactSpec`] into an [`Executor`]
+//! that runs the artifact's semantics on positional [`Tensor`] inputs.
+//! Two implementations exist:
+//!
+//! * [`super::reference::ReferenceBackend`] — the default: a pure-Rust CPU
+//!   implementation of the train-step / adam-step / forward semantics
+//!   (mirror of `python/compile/kernels/ref.py` + `python/compile/model.py`),
+//!   requiring no compiled artifacts and no external libraries.
+//! * `XlaBackend` (`--features xla`) — the PJRT path: loads the AOT HLO
+//!   text artifact named by the spec and executes it on the XLA CPU client.
+//!
+//! The coordinator, API layer, examples and benches only see
+//! [`super::Runtime`] / [`super::Executable`], so they run unchanged on
+//! either backend.
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::tensor::Tensor;
+
+/// An execution engine that can instantiate manifest artifacts.
+pub trait Backend {
+    /// Human-readable backend name ("reference", "xla").
+    fn name(&self) -> &'static str;
+
+    /// Instantiate one artifact.  `manifest` provides artifact file paths
+    /// for backends that load compiled objects; the reference backend
+    /// executes straight from the spec.
+    fn compile(&self, manifest: &Manifest, spec: &ArtifactSpec) -> anyhow::Result<Box<dyn Executor>>;
+}
+
+/// A compiled (or interpreted) artifact ready to run.
+///
+/// Implementations receive inputs already validated against the manifest
+/// ABI by [`super::Executable::run`] — count, per-input element count and
+/// dtype all match the spec.
+pub trait Executor {
+    fn run(&self, inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>>;
+}

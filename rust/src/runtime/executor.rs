@@ -1,52 +1,85 @@
-//! PJRT execution: load HLO-text artifacts, compile once, run per batch.
+//! Backend-agnostic runtime: artifact registry + executable instantiation.
 //!
-//! Follows the reference wiring in /opt/xla-example/load_hlo: HLO *text*
-//! (not serialized protos — jax ≥ 0.5 emits 64-bit instruction ids that
-//! xla_extension 0.5.1 rejects) is parsed into an `HloModuleProto`,
-//! compiled on the CPU PJRT client, and executed with `Literal` inputs.
-//! Python never runs on this path.
+//! [`Runtime`] pairs a [`Manifest`] (which artifacts exist, with what ABI)
+//! with a [`Backend`] (how to run them).  The default backend is the
+//! pure-Rust [`reference`](super::reference) executor, which needs neither
+//! compiled artifacts nor external libraries; building with
+//! `--features xla` switches [`Runtime::load`] to the PJRT path that
+//! executes the AOT HLO artifacts (`make artifacts`).
 
 use std::path::Path;
 
-use super::manifest::{ArtifactSpec, DType, Manifest};
+use super::backend::{Backend, Executor};
+use super::manifest::{ArtifactSpec, Manifest};
+use super::reference::ReferenceBackend;
+use super::tensor::Tensor;
 
-/// Process-wide PJRT client + artifact registry.
+/// Process-wide backend + artifact registry.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    backend: Box<dyn Backend>,
     pub manifest: Manifest,
 }
 
 impl Runtime {
-    /// Load the manifest in `artifacts_dir` and bring up the CPU client.
+    /// The zero-dependency default: built-in artifact catalog executed by
+    /// the pure-Rust reference backend.  Works on a clean machine.
+    pub fn reference() -> Runtime {
+        Runtime {
+            backend: Box::new(ReferenceBackend),
+            manifest: Manifest::builtin(),
+        }
+    }
+
+    /// Load the manifest in `artifacts_dir` and bring up the default
+    /// backend for this build (reference; PJRT under `--features xla`).
     pub fn load(artifacts_dir: &Path) -> anyhow::Result<Runtime> {
         let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
-        log::info!(
-            "PJRT up: platform={} devices={}",
-            client.platform_name(),
-            client.device_count()
-        );
-        Ok(Runtime { client, manifest })
+        Ok(Runtime { backend: default_backend()?, manifest })
     }
 
-    /// Compile one artifact (slow — once per process per artifact).
+    /// `load(dir)` when a manifest exists there, else [`Runtime::reference`]
+    /// — what the CLI and examples use so they run out of the box.
+    pub fn auto(artifacts_dir: &Path) -> anyhow::Result<Runtime> {
+        if artifacts_dir.join("manifest.json").exists() {
+            Self::load(artifacts_dir)
+        } else {
+            // Surface the substitution: with the xla feature on, silently
+            // ignoring a typo'd artifacts dir would mask which backend ran.
+            if cfg!(feature = "xla") {
+                log::warn!(
+                    "no manifest.json in {artifacts_dir:?}; falling back to the \
+                     built-in reference runtime (run `make artifacts`?)"
+                );
+            } else {
+                log::info!(
+                    "no manifest.json in {artifacts_dir:?}; using the built-in \
+                     reference runtime"
+                );
+            }
+            Ok(Self::reference())
+        }
+    }
+
+    /// Pair an explicit manifest with an explicit backend.
+    pub fn with_backend(manifest: Manifest, backend: Box<dyn Backend>) -> Runtime {
+        Runtime { backend, manifest }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Instantiate one artifact (slow on compiled backends — once per
+    /// process per artifact).
     pub fn compile(&self, name: &str) -> anyhow::Result<Executable> {
         let spec = self.manifest.get(name)?.clone();
-        let path = self.manifest.hlo_path(&spec);
         let t = crate::util::stats::Timer::start();
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
-        log::info!("compiled {name} in {:.2}s", t.secs());
-        Ok(Executable { exe, spec })
+        let exec = self.backend.compile(&self.manifest, &spec)?;
+        log::info!("[{}] compiled {name} in {:.2}s", self.backend.name(), t.secs());
+        Ok(Executable { exec, spec })
     }
 
-    /// Compile the artifact for a (model, geometry, kind) role.
+    /// Instantiate the artifact for a (model, geometry, kind) role.
     pub fn compile_role(
         &self,
         model: crate::sampler::values::GnnModel,
@@ -58,19 +91,19 @@ impl Runtime {
     }
 }
 
-/// A compiled artifact, ready to execute.
+/// An instantiated artifact, ready to execute on any backend.
 pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
+    exec: Box<dyn Executor>,
     pub spec: ArtifactSpec,
 }
 
 impl Executable {
     /// Execute with positional inputs; returns the decomposed output tuple.
     ///
-    /// Validates input count and per-input element counts against the
-    /// manifest ABI before touching PJRT (shape bugs surface as rust
-    /// errors, not XLA crashes).
-    pub fn run(&self, inputs: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+    /// Validates input count, dtypes and per-input element counts against
+    /// the manifest ABI before touching the backend (shape bugs surface as
+    /// rust errors, not backend crashes), and the output count after.
+    pub fn run(&self, inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
         anyhow::ensure!(
             inputs.len() == self.spec.inputs.len(),
             "{}: got {} inputs, ABI wants {}",
@@ -78,67 +111,104 @@ impl Executable {
             inputs.len(),
             self.spec.inputs.len()
         );
-        for (lit, spec) in inputs.iter().zip(&self.spec.inputs) {
+        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
             anyhow::ensure!(
-                lit.element_count() == spec.elements(),
+                t.dtype() == spec.dtype,
+                "{}: input {} is {:?}, ABI wants {:?}",
+                self.spec.name,
+                spec.name,
+                t.dtype(),
+                spec.dtype
+            );
+            anyhow::ensure!(
+                t.shape() == spec.shape,
+                "{}: input {} has shape {:?}, ABI wants {:?}",
+                self.spec.name,
+                spec.name,
+                t.shape(),
+                spec.shape,
+            );
+            anyhow::ensure!(
+                t.element_count() == spec.elements(),
                 "{}: input {} has {} elements, ABI wants {} {:?}",
                 self.spec.name,
                 spec.name,
-                lit.element_count(),
+                t.element_count(),
                 spec.elements(),
                 spec.shape,
             );
         }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", self.spec.name))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetching result of {}: {e:?}", self.spec.name))?;
-        let parts = tuple
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("decomposing result of {}: {e:?}", self.spec.name))?;
+        let outs = self.exec.run(inputs)?;
         anyhow::ensure!(
-            parts.len() == self.spec.outputs.len(),
+            outs.len() == self.spec.outputs.len(),
             "{}: got {} outputs, manifest says {}",
             self.spec.name,
-            parts.len(),
+            outs.len(),
             self.spec.outputs.len()
         );
-        Ok(parts)
+        Ok(outs)
     }
 }
 
-/// Build a `Literal` for one ABI slot from raw data.
-pub fn literal_f32(spec: &TensorSpecRef, data: &[f32]) -> anyhow::Result<xla::Literal> {
-    anyhow::ensure!(spec.dtype == DType::F32, "{} is not f32", spec.name);
-    shape_literal(spec, xla::Literal::vec1(data))
-}
-
-pub fn literal_i32(spec: &TensorSpecRef, data: &[i32]) -> anyhow::Result<xla::Literal> {
-    anyhow::ensure!(spec.dtype == DType::I32, "{} is not i32", spec.name);
-    shape_literal(spec, xla::Literal::vec1(data))
-}
-
-pub fn literal_scalar_f32(value: f32) -> xla::Literal {
-    xla::Literal::scalar(value)
-}
-
-type TensorSpecRef = super::manifest::TensorSpec;
-
-fn shape_literal(spec: &TensorSpecRef, flat: xla::Literal) -> anyhow::Result<xla::Literal> {
-    anyhow::ensure!(
-        flat.element_count() == spec.elements(),
-        "{}: {} elements for shape {:?}",
-        spec.name,
-        flat.element_count(),
-        spec.shape
-    );
-    if spec.shape.len() <= 1 {
-        return Ok(flat);
+fn default_backend() -> anyhow::Result<Box<dyn Backend>> {
+    #[cfg(feature = "xla")]
+    {
+        Ok(Box::new(super::xla::XlaBackend::new()?))
     }
-    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-    flat.reshape(&dims)
-        .map_err(|e| anyhow::anyhow!("reshaping {}: {e:?}", spec.name))
+    #[cfg(not(feature = "xla"))]
+    {
+        Ok(Box::new(ReferenceBackend))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Kind;
+    use crate::sampler::values::GnnModel;
+
+    #[test]
+    fn reference_runtime_compiles_every_builtin_role() {
+        let rt = Runtime::reference();
+        assert_eq!(rt.backend_name(), "reference");
+        for geom in ["tiny", "ns_small", "ss_small", "ns_medium"] {
+            for model in [GnnModel::Gcn, GnnModel::Sage, GnnModel::Gin] {
+                for kind in [Kind::TrainStep, Kind::AdamStep, Kind::Forward] {
+                    rt.compile_role(model, geom, kind).unwrap();
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_validates_abi_before_execution() {
+        let rt = Runtime::reference();
+        let exe = rt.compile_role(GnnModel::Gcn, "tiny", Kind::Forward).unwrap();
+        // Wrong arity.
+        let err = exe.run(&[]).unwrap_err().to_string();
+        assert!(err.contains("inputs"), "{err}");
+        // Right arity, wrong dtype in slot 0 (x0 must be f32).
+        let mut bad: Vec<Tensor> = exe
+            .spec
+            .inputs
+            .iter()
+            .map(|s| match s.dtype {
+                crate::runtime::manifest::DType::F32 => {
+                    Tensor::f32(s.shape.clone(), vec![0.0; s.elements()]).unwrap()
+                }
+                crate::runtime::manifest::DType::I32 => {
+                    Tensor::i32(s.shape.clone(), vec![0; s.elements()]).unwrap()
+                }
+            })
+            .collect();
+        bad[0] = Tensor::i32(vec![96, 16], vec![0; 96 * 16]).unwrap();
+        let err = exe.run(&bad).unwrap_err().to_string();
+        assert!(err.contains("x0"), "{err}");
+    }
+
+    #[test]
+    fn unknown_role_is_a_clean_error() {
+        let rt = Runtime::reference();
+        assert!(rt.compile_role(GnnModel::Gcn, "nope", Kind::Forward).is_err());
+    }
 }

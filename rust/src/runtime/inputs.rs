@@ -9,8 +9,8 @@
 //! [w_l b_l]*, lr (train only), [m_* v_* step] (adam only)
 //! ```
 
-use super::executor::{literal_f32, literal_i32, literal_scalar_f32};
-use super::manifest::{ArtifactSpec, Kind};
+use super::manifest::{ArtifactSpec, DType, Kind, TensorSpec};
+use super::tensor::Tensor;
 use super::weights::{AdamState, WeightState};
 use crate::layout::pad::PaddedBatch;
 use crate::sampler::values::GnnModel;
@@ -23,7 +23,7 @@ pub fn build_inputs(
     features: &[f32],
     weights: &WeightState,
     lr: f32,
-) -> anyhow::Result<Vec<xla::Literal>> {
+) -> anyhow::Result<Vec<Tensor>> {
     build_inputs_opt(spec, batch, features, weights, lr, None)
 }
 
@@ -35,7 +35,7 @@ pub fn build_inputs_opt(
     weights: &WeightState,
     lr: f32,
     adam: Option<&AdamState>,
-) -> anyhow::Result<Vec<xla::Literal>> {
+) -> anyhow::Result<Vec<Tensor>> {
     let geom = &spec.geometry;
     anyhow::ensure!(
         batch.geom == *geom,
@@ -65,46 +65,71 @@ pub fn build_inputs_opt(
             .ok_or_else(|| anyhow::anyhow!("ABI mismatch at {name}"))
     };
 
-    out.push(literal_f32(next("x0")?, features)?);
-    out.push(literal_i32(next("labels")?, &batch.labels)?);
-    out.push(literal_f32(next("mask")?, &batch.mask)?);
+    out.push(tensor_f32(next("x0")?, features)?);
+    out.push(tensor_i32(next("labels")?, &batch.labels)?);
+    out.push(tensor_f32(next("mask")?, &batch.mask)?);
     for l in 1..=ll {
-        out.push(literal_i32(next(&format!("src{l}"))?, &batch.src[l - 1])?);
-        out.push(literal_i32(next(&format!("dst{l}"))?, &batch.dst[l - 1])?);
-        out.push(literal_f32(next(&format!("val{l}"))?, &batch.val[l - 1])?);
+        out.push(tensor_i32(next(&format!("src{l}"))?, &batch.src[l - 1])?);
+        out.push(tensor_i32(next(&format!("dst{l}"))?, &batch.dst[l - 1])?);
+        out.push(tensor_f32(next(&format!("val{l}"))?, &batch.val[l - 1])?);
     }
     if spec.model == GnnModel::Sage {
         for l in 1..=ll {
-            out.push(literal_i32(next(&format!("self_idx{l}"))?, &batch.self_idx[l - 1])?);
+            out.push(tensor_i32(next(&format!("self_idx{l}"))?, &batch.self_idx[l - 1])?);
         }
     }
     for l in 1..=ll {
         let (wshape, wdata) = &weights.tensors[2 * (l - 1)];
         let wspec = next(&format!("w{l}"))?;
         anyhow::ensure!(wspec.shape == *wshape, "w{l} shape mismatch");
-        out.push(literal_f32(wspec, wdata)?);
+        out.push(tensor_f32(wspec, wdata)?);
         let (_bshape, bdata) = &weights.tensors[2 * (l - 1) + 1];
-        out.push(literal_f32(next(&format!("b{l}"))?, bdata)?);
+        out.push(tensor_f32(next(&format!("b{l}"))?, bdata)?);
     }
     if matches!(spec.kind, Kind::TrainStep | Kind::AdamStep) {
         let _ = next("lr")?;
-        out.push(literal_scalar_f32(lr));
+        out.push(Tensor::scalar_f32(lr));
     }
     if spec.kind == Kind::AdamStep {
         let st = adam.ok_or_else(|| anyhow::anyhow!("adam_step needs AdamState"))?;
         for l in 1..=ll {
-            out.push(literal_f32(next(&format!("m_w{l}"))?, &st.m[2 * (l - 1)].1)?);
-            out.push(literal_f32(next(&format!("m_b{l}"))?, &st.m[2 * (l - 1) + 1].1)?);
+            out.push(tensor_f32(next(&format!("m_w{l}"))?, &st.m[2 * (l - 1)].1)?);
+            out.push(tensor_f32(next(&format!("m_b{l}"))?, &st.m[2 * (l - 1) + 1].1)?);
         }
         for l in 1..=ll {
-            out.push(literal_f32(next(&format!("v_w{l}"))?, &st.v[2 * (l - 1)].1)?);
-            out.push(literal_f32(next(&format!("v_b{l}"))?, &st.v[2 * (l - 1) + 1].1)?);
+            out.push(tensor_f32(next(&format!("v_w{l}"))?, &st.v[2 * (l - 1)].1)?);
+            out.push(tensor_f32(next(&format!("v_b{l}"))?, &st.v[2 * (l - 1) + 1].1)?);
         }
         let _ = next("step")?;
-        out.push(literal_scalar_f32(st.step));
+        out.push(Tensor::scalar_f32(st.step));
     }
     anyhow::ensure!(it.next().is_none(), "unconsumed ABI inputs");
     Ok(out)
+}
+
+/// Build the spec-shaped f32 [`Tensor`] for one ABI slot from raw data.
+pub fn tensor_f32(spec: &TensorSpec, data: &[f32]) -> anyhow::Result<Tensor> {
+    anyhow::ensure!(spec.dtype == DType::F32, "{} is not f32", spec.name);
+    anyhow::ensure!(
+        data.len() == spec.elements(),
+        "{}: {} elements for shape {:?}",
+        spec.name,
+        data.len(),
+        spec.shape
+    );
+    Tensor::f32(spec.shape.clone(), data.to_vec())
+}
+
+pub fn tensor_i32(spec: &TensorSpec, data: &[i32]) -> anyhow::Result<Tensor> {
+    anyhow::ensure!(spec.dtype == DType::I32, "{} is not i32", spec.name);
+    anyhow::ensure!(
+        data.len() == spec.elements(),
+        "{}: {} elements for shape {:?}",
+        spec.name,
+        data.len(),
+        spec.shape
+    );
+    Tensor::i32(spec.shape.clone(), data.to_vec())
 }
 
 /// Pad a real feature matrix (per-vertex rows for `real_rows`) up to the
@@ -135,5 +160,13 @@ mod tests {
     #[should_panic(expected = "feature matrix shape")]
     fn pad_features_validates_shape() {
         pad_features(&[1.0; 5], 2, 4, 3);
+    }
+
+    #[test]
+    fn tensor_builders_enforce_spec() {
+        let spec = TensorSpec { name: "x".into(), shape: vec![2, 2], dtype: DType::F32 };
+        assert!(tensor_f32(&spec, &[0.0; 4]).is_ok());
+        assert!(tensor_f32(&spec, &[0.0; 3]).is_err());
+        assert!(tensor_i32(&spec, &[0; 4]).is_err(), "dtype mismatch");
     }
 }

@@ -53,6 +53,16 @@ pub enum Kind {
     Forward,
 }
 
+impl Kind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Kind::TrainStep => "train_step",
+            Kind::AdamStep => "adam_step",
+            Kind::Forward => "forward",
+        }
+    }
+}
+
 /// One compiled HLO module's metadata.
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
@@ -75,6 +85,35 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// The built-in artifact registry: every (model × geometry × kind)
+    /// combination from `python/compile/geometry.py`'s catalog, with the
+    /// exact ABI `python/compile/aot.py` would record.  This is what the
+    /// reference backend runs from — no `make artifacts` required.
+    pub fn builtin() -> Manifest {
+        let mut by_name = BTreeMap::new();
+        for geom in builtin_geometries() {
+            for model in [GnnModel::Gcn, GnnModel::Sage] {
+                for kind in [Kind::TrainStep, Kind::AdamStep, Kind::Forward] {
+                    let spec = spec_for(model, kind, &geom);
+                    by_name.insert(spec.name.clone(), spec);
+                }
+            }
+        }
+        Manifest { dir: PathBuf::from("<builtin>"), by_name }
+    }
+
+    /// Build a manifest from explicit specs (tests, custom geometries).
+    pub fn from_specs(specs: Vec<ArtifactSpec>) -> anyhow::Result<Manifest> {
+        let mut by_name = BTreeMap::new();
+        for spec in specs {
+            anyhow::ensure!(
+                by_name.insert(spec.name.clone(), spec).is_none(),
+                "duplicate artifact name"
+            );
+        }
+        Ok(Manifest { dir: PathBuf::from("<custom>"), by_name })
+    }
+
     /// Load `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
         let path = dir.join("manifest.json");
@@ -183,6 +222,118 @@ impl Manifest {
     }
 }
 
+/// The static geometry catalog (mirror of `python/compile/geometry.py`;
+/// once artifacts exist, `loads_repo_manifest_when_built` diffs every
+/// builtin spec against the manifest aot.py wrote, so drift fails tests).
+fn builtin_geometries() -> Vec<Geometry> {
+    let g = |name: &str, b: &[usize], e: &[usize], f: &[usize]| Geometry {
+        name: name.to_string(),
+        b: b.to_vec(),
+        e: e.to_vec(),
+        f: f.to_vec(),
+    };
+    vec![
+        g("tiny", &[96, 16, 4], &[96, 16], &[16, 8, 4]),
+        g("ns_small", &[2112, 352, 32], &[2112, 352], &[500, 256, 7]),
+        g("ss_small", &[256, 256, 256], &[2048, 2048], &[500, 256, 7]),
+        g("ns_medium", &[8448, 1408, 128], &[8448, 1408], &[500, 256, 7]),
+    ]
+}
+
+/// Per-layer `(W shape, b shape)` — `model.weight_shapes` in rust.  SAGE
+/// doubles fan-in for the `h_v || mean(neigh)` concat.
+fn weight_shapes(model: GnnModel, geom: &Geometry) -> Vec<(Vec<usize>, Vec<usize>)> {
+    let sage = model == GnnModel::Sage;
+    (0..geom.layers())
+        .map(|l| {
+            let fin = geom.f[l] * if sage { 2 } else { 1 };
+            (vec![fin, geom.f[l + 1]], vec![geom.f[l + 1]])
+        })
+        .collect()
+}
+
+/// Synthesize the ArtifactSpec that `python/compile/aot.py` records for
+/// one (model, kind, geometry) — same name, same ABI order, same outputs.
+pub fn spec_for(model: GnnModel, kind: Kind, geom: &Geometry) -> ArtifactSpec {
+    assert!(
+        matches!(model, GnnModel::Gcn | GnnModel::Sage),
+        "artifacts exist per artifact family; resolve GIN via artifact_key() first"
+    );
+    let ll = geom.layers();
+    let name = format!("{}_{}_{}", model.as_str(), geom.name, kind.as_str());
+
+    let mut inputs = Vec::new();
+    let mut add = |name: String, shape: Vec<usize>, dtype: DType| {
+        inputs.push(TensorSpec { name, shape, dtype });
+    };
+    add("x0".into(), vec![geom.b[0], geom.f[0]], DType::F32);
+    add("labels".into(), vec![geom.b[ll]], DType::I32);
+    add("mask".into(), vec![geom.b[ll]], DType::F32);
+    for l in 1..=ll {
+        add(format!("src{l}"), vec![geom.e[l - 1]], DType::I32);
+        add(format!("dst{l}"), vec![geom.e[l - 1]], DType::I32);
+        add(format!("val{l}"), vec![geom.e[l - 1]], DType::F32);
+    }
+    if model == GnnModel::Sage {
+        for l in 1..=ll {
+            add(format!("self_idx{l}"), vec![geom.b[l]], DType::I32);
+        }
+    }
+    let shapes = weight_shapes(model, geom);
+    for (l, (wshape, bshape)) in shapes.iter().enumerate() {
+        add(format!("w{}", l + 1), wshape.clone(), DType::F32);
+        add(format!("b{}", l + 1), bshape.clone(), DType::F32);
+    }
+    if matches!(kind, Kind::TrainStep | Kind::AdamStep) {
+        add("lr".into(), vec![], DType::F32);
+    }
+    if kind == Kind::AdamStep {
+        for (l, (wshape, bshape)) in shapes.iter().enumerate() {
+            add(format!("m_w{}", l + 1), wshape.clone(), DType::F32);
+            add(format!("m_b{}", l + 1), bshape.clone(), DType::F32);
+        }
+        for (l, (wshape, bshape)) in shapes.iter().enumerate() {
+            add(format!("v_w{}", l + 1), wshape.clone(), DType::F32);
+            add(format!("v_b{}", l + 1), bshape.clone(), DType::F32);
+        }
+        add("step".into(), vec![], DType::F32);
+    }
+
+    let mut outputs = Vec::new();
+    match kind {
+        Kind::Forward => outputs.push("logits".to_string()),
+        Kind::TrainStep | Kind::AdamStep => {
+            outputs.push("loss".to_string());
+            for l in 1..=ll {
+                outputs.push(format!("w{l}"));
+                outputs.push(format!("b{l}"));
+            }
+            if kind == Kind::AdamStep {
+                for l in 1..=ll {
+                    outputs.push(format!("m_w{l}"));
+                    outputs.push(format!("m_b{l}"));
+                }
+                for l in 1..=ll {
+                    outputs.push(format!("v_w{l}"));
+                    outputs.push(format!("v_b{l}"));
+                }
+                outputs.push("step".to_string());
+            }
+        }
+    }
+
+    ArtifactSpec {
+        file: format!("{name}.hlo.txt"),
+        name,
+        model,
+        kind,
+        geometry: geom.clone(),
+        inputs,
+        outputs,
+        weight_shapes: shapes,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -240,6 +391,65 @@ mod tests {
     }
 
     #[test]
+    fn builtin_covers_all_roles() {
+        let m = Manifest::builtin();
+        for geom in ["tiny", "ns_small", "ss_small", "ns_medium"] {
+            for model in [GnnModel::Gcn, GnnModel::Sage] {
+                for kind in [Kind::TrainStep, Kind::AdamStep, Kind::Forward] {
+                    let spec = m.find(model, geom, kind).unwrap();
+                    spec.geometry.validate().unwrap();
+                    assert_eq!(spec.inputs.first().unwrap().name, "x0");
+                }
+            }
+        }
+        // GIN resolves onto the GCN family.
+        assert!(m.find(GnnModel::Gin, "tiny", Kind::TrainStep).is_ok());
+    }
+
+    #[test]
+    fn builtin_tiny_abi_matches_aot_contract() {
+        // The sample manifest above is a trimmed copy of what aot.py wrote
+        // for the tiny geometry; the synthesized spec must agree with the
+        // full contract on everything the sample pins.
+        let m = Manifest::builtin();
+        let a = m.get("gcn_tiny_train_step").unwrap();
+        assert_eq!(a.kind, Kind::TrainStep);
+        assert_eq!(a.geometry.b, vec![96, 16, 4]);
+        assert_eq!(a.inputs[0].shape, vec![96, 16]);
+        assert_eq!(a.inputs[1].name, "labels");
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+        assert_eq!(a.weight_shapes[0].0, vec![16, 8]);
+        assert_eq!(a.outputs, vec!["loss", "w1", "b1", "w2", "b2"]);
+        let last = a.inputs.last().unwrap();
+        assert_eq!(last.name, "lr");
+        assert_eq!(last.shape, Vec::<usize>::new());
+
+        // SAGE doubles fan-in and appends self_idx gathers.
+        let s = m.get("sage_tiny_train_step").unwrap();
+        assert_eq!(s.weight_shapes[0].0, vec![32, 8]);
+        assert!(s.inputs.iter().any(|i| i.name == "self_idx1"));
+
+        // Adam threads m/v/step through both directions of the ABI.
+        let ad = m.get("gcn_tiny_adam_step").unwrap();
+        assert_eq!(ad.inputs.last().unwrap().name, "step");
+        assert_eq!(ad.outputs.last().unwrap(), "step");
+        assert_eq!(ad.outputs.len(), 1 + 3 * 4 + 1);
+
+        // Forward drops lr and returns logits only.
+        let f = m.get("gcn_tiny_forward").unwrap();
+        assert!(f.inputs.iter().all(|i| i.name != "lr"));
+        assert_eq!(f.outputs, vec!["logits"]);
+    }
+
+    #[test]
+    fn from_specs_rejects_duplicates() {
+        let geom = builtin_geometries().remove(0);
+        let a = spec_for(GnnModel::Gcn, Kind::Forward, &geom);
+        assert!(Manifest::from_specs(vec![a.clone()]).is_ok());
+        assert!(Manifest::from_specs(vec![a.clone(), a]).is_err());
+    }
+
+    #[test]
     fn loads_repo_manifest_when_built() {
         let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if !dir.join("manifest.json").exists() {
@@ -249,5 +459,23 @@ mod tests {
         let a = m.find(GnnModel::Gcn, "tiny", Kind::TrainStep).unwrap();
         assert_eq!(a.inputs.first().unwrap().name, "x0");
         assert_eq!(a.outputs.first().unwrap(), "loss");
+        // The builtin catalog must agree with what aot.py actually wrote:
+        // any drift between geometry.py and builtin_geometries()/spec_for()
+        // fails here once artifacts exist.
+        let builtin = Manifest::builtin();
+        for name in builtin.names() {
+            let Ok(loaded) = m.get(name) else { continue };
+            let b = builtin.get(name).unwrap();
+            assert_eq!(loaded.geometry, b.geometry, "{name}: geometry drift");
+            assert_eq!(loaded.outputs, b.outputs, "{name}: outputs drift");
+            assert_eq!(loaded.weight_shapes, b.weight_shapes, "{name}: weight-shape drift");
+            let abi = |s: &ArtifactSpec| -> Vec<(String, Vec<usize>, DType)> {
+                s.inputs
+                    .iter()
+                    .map(|i| (i.name.clone(), i.shape.clone(), i.dtype))
+                    .collect()
+            };
+            assert_eq!(abi(loaded), abi(b), "{name}: input ABI drift");
+        }
     }
 }

@@ -1,16 +1,28 @@
-//! Runtime: PJRT-backed execution of the AOT artifacts.
+//! Runtime: pluggable execution of the training artifacts.
 //!
-//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
-//! `client.compile` → `execute`, exactly the /opt/xla-example/load_hlo
-//! wiring.  One compiled executable per (model × geometry × kind); the
-//! coordinator drives it every iteration with inputs assembled by
+//! One [`Runtime`] per process: a [`Manifest`] (artifact registry + ABI)
+//! plus a [`Backend`].  The default backend is the pure-Rust
+//! [`reference`] executor — a CPU implementation of the train-step /
+//! adam-step / forward semantics that needs no compiled artifacts, so the
+//! whole crate trains end to end on a clean machine.  Building with
+//! `--features xla` swaps in the PJRT path (`xla` module): HLO-text
+//! artifacts produced by `make artifacts`, compiled once per (model ×
+//! geometry × kind) and driven every iteration with inputs assembled by
 //! [`inputs::build_inputs`].
 
+pub mod backend;
 pub mod executor;
 pub mod inputs;
 pub mod manifest;
+pub mod reference;
+pub mod tensor;
 pub mod weights;
+#[cfg(feature = "xla")]
+pub mod xla;
 
+pub use backend::{Backend, Executor};
 pub use executor::{Executable, Runtime};
 pub use manifest::{ArtifactSpec, Kind, Manifest};
+pub use reference::ReferenceBackend;
+pub use tensor::Tensor;
 pub use weights::WeightState;

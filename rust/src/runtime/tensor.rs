@@ -1,0 +1,130 @@
+//! Backend-neutral tensor values crossing the runtime ABI boundary.
+//!
+//! Every executor — the pure-Rust reference backend and the feature-gated
+//! PJRT/XLA backend — consumes and produces [`Tensor`]s.  The type is a
+//! deliberately small shape-carrying value: row-major data plus dims,
+//! no strides, no views, two dtypes (the whole manifest ABI is f32/i32).
+
+use super::manifest::DType;
+
+/// A dense row-major tensor (f32 or i32).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    /// Build an f32 tensor, validating that `data` fills `shape` exactly.
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> anyhow::Result<Tensor> {
+        let want: usize = shape.iter().product();
+        anyhow::ensure!(
+            data.len() == want,
+            "tensor data has {} elements for shape {shape:?}",
+            data.len()
+        );
+        Ok(Tensor::F32 { shape, data })
+    }
+
+    /// Build an i32 tensor, validating that `data` fills `shape` exactly.
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> anyhow::Result<Tensor> {
+        let want: usize = shape.iter().product();
+        anyhow::ensure!(
+            data.len() == want,
+            "tensor data has {} elements for shape {shape:?}",
+            data.len()
+        );
+        Ok(Tensor::I32 { shape, data })
+    }
+
+    /// A rank-0 (scalar) f32 tensor.
+    pub fn scalar_f32(value: f32) -> Tensor {
+        Tensor::F32 { shape: Vec::new(), data: vec![value] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32 { .. } => DType::F32,
+            Tensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    /// Borrow the f32 payload; errors on an i32 tensor.
+    pub fn f32_data(&self) -> anyhow::Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32 { .. } => anyhow::bail!("expected an f32 tensor, got i32"),
+        }
+    }
+
+    /// Borrow the i32 payload; errors on an f32 tensor.
+    pub fn i32_data(&self) -> anyhow::Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            Tensor::F32 { .. } => anyhow::bail!("expected an i32 tensor, got f32"),
+        }
+    }
+
+    /// The single element of a rank-0/rank-1 f32 tensor (loss, step, ...).
+    pub fn scalar(&self) -> anyhow::Result<f32> {
+        let data = self.f32_data()?;
+        anyhow::ensure!(
+            data.len() == 1,
+            "expected a scalar, got {} elements",
+            data.len()
+        );
+        Ok(data[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_validate_shape() {
+        assert!(Tensor::f32(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::f32(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(Tensor::i32(vec![4], vec![1, 2, 3, 4]).is_ok());
+        assert!(Tensor::i32(vec![4], vec![1]).is_err());
+    }
+
+    #[test]
+    fn scalar_round_trip() {
+        let t = Tensor::scalar_f32(2.5);
+        assert_eq!(t.shape(), &[] as &[usize]);
+        assert_eq!(t.element_count(), 1);
+        assert_eq!(t.scalar().unwrap(), 2.5);
+    }
+
+    #[test]
+    fn dtype_accessors_are_strict() {
+        let f = Tensor::f32(vec![2], vec![1.0, 2.0]).unwrap();
+        let i = Tensor::i32(vec![2], vec![1, 2]).unwrap();
+        assert_eq!(f.dtype(), DType::F32);
+        assert_eq!(i.dtype(), DType::I32);
+        assert!(f.i32_data().is_err());
+        assert!(i.f32_data().is_err());
+        assert_eq!(f.f32_data().unwrap(), &[1.0, 2.0]);
+        assert_eq!(i.i32_data().unwrap(), &[1, 2]);
+    }
+
+    #[test]
+    fn scalar_rejects_vectors() {
+        let v = Tensor::f32(vec![2], vec![1.0, 2.0]).unwrap();
+        assert!(v.scalar().is_err());
+    }
+}

@@ -38,23 +38,21 @@ impl WeightState {
     }
 
     /// Replace all tensors from the train-step outputs (post-`loss` slots).
-    pub fn update_from(&mut self, outputs: &[xla::Literal]) -> anyhow::Result<()> {
+    pub fn update_from(&mut self, outputs: &[crate::runtime::Tensor]) -> anyhow::Result<()> {
         anyhow::ensure!(
             outputs.len() == self.tensors.len(),
             "weight update: {} outputs for {} tensors",
             outputs.len(),
             self.tensors.len()
         );
-        for (lit, (shape, data)) in outputs.iter().zip(self.tensors.iter_mut()) {
-            let got = lit
-                .to_vec::<f32>()
-                .map_err(|e| anyhow::anyhow!("weight readback: {e:?}"))?;
+        for (t, (shape, data)) in outputs.iter().zip(self.tensors.iter_mut()) {
+            let got = t.f32_data().map_err(|e| anyhow::anyhow!("weight readback: {e}"))?;
             anyhow::ensure!(
                 got.len() == data.len(),
                 "weight tensor {shape:?}: got {} elements",
                 got.len()
             );
-            *data = got;
+            data.copy_from_slice(got);
         }
         Ok(())
     }
@@ -147,7 +145,7 @@ impl AdamState {
 
     /// Consume the trailing outputs of an adam_step execution:
     /// `[m..., v..., step]`.
-    pub fn update_from(&mut self, outputs: &[xla::Literal]) -> anyhow::Result<()> {
+    pub fn update_from(&mut self, outputs: &[crate::runtime::Tensor]) -> anyhow::Result<()> {
         let n = self.m.len();
         anyhow::ensure!(
             outputs.len() == 2 * n + 1,
@@ -155,15 +153,19 @@ impl AdamState {
             outputs.len(),
             n
         );
-        for (lit, (_, data)) in outputs[..n].iter().zip(self.m.iter_mut()) {
-            *data = lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("m readback: {e:?}"))?;
+        for (t, (_, data)) in outputs[..n].iter().zip(self.m.iter_mut()) {
+            let got = t.f32_data().map_err(|e| anyhow::anyhow!("m readback: {e}"))?;
+            anyhow::ensure!(got.len() == data.len(), "m element count");
+            data.copy_from_slice(got);
         }
-        for (lit, (_, data)) in outputs[n..2 * n].iter().zip(self.v.iter_mut()) {
-            *data = lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("v readback: {e:?}"))?;
+        for (t, (_, data)) in outputs[n..2 * n].iter().zip(self.v.iter_mut()) {
+            let got = t.f32_data().map_err(|e| anyhow::anyhow!("v readback: {e}"))?;
+            anyhow::ensure!(got.len() == data.len(), "v element count");
+            data.copy_from_slice(got);
         }
         self.step = outputs[2 * n]
-            .to_vec::<f32>()
-            .map_err(|e| anyhow::anyhow!("step readback: {e:?}"))?[0];
+            .scalar()
+            .map_err(|e| anyhow::anyhow!("step readback: {e}"))?;
         Ok(())
     }
 }

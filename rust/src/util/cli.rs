@@ -13,9 +13,8 @@ struct FlagSpec {
     takes_value: bool,
 }
 
-/// Builder + result of a parse.  Typical use (`no_run`: doctest binaries
-/// miss the libxla rpath in this offline image; the same flow is covered
-/// by the unit tests below):
+/// Builder + result of a parse.  Typical use (`no_run`: the same flow is
+/// covered by the unit tests below):
 ///
 /// ```no_run
 /// # use hp_gnn::util::cli::Args;

@@ -20,13 +20,24 @@ pub enum Json {
 }
 
 /// Parse / access error with byte offset context.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("json parse error at byte {offset}: {msg}")]
     Parse { offset: usize, msg: String },
-    #[error("json access error: {0}")]
     Access(String),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Parse { offset, msg } => {
+                write!(f, "json parse error at byte {offset}: {msg}")
+            }
+            JsonError::Access(msg) => write!(f, "json access error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(text: &str) -> Result<Json, JsonError> {

@@ -1,8 +1,9 @@
 //! Utility substrate.
 //!
 //! The build image has no network and only a minimal vendored crate set
-//! (`xla`, `anyhow`, `thiserror`, `log`), so the conveniences a production
-//! service would pull from crates.io are implemented here from scratch:
+//! (`anyhow`, `log`, plus the optional `xla` backend), so the conveniences
+//! a production service would pull from crates.io are implemented here
+//! from scratch:
 //!
 //! * [`json`] — a small, strict JSON parser/writer (manifest + user
 //!   programs + metrics dumps).

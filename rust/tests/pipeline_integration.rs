@@ -2,9 +2,8 @@
 //! GenerateDesign → Start_training, plus pipeline-behaviour checks
 //! (overlap, backpressure) that unit tests can't see.
 //!
-//! Requires `make artifacts`; skips cleanly otherwise.
-
-use std::path::PathBuf;
+//! Runs on the reference backend by default; with `--features xla` it
+//! requires `make artifacts` and skips cleanly otherwise.
 
 use hp_gnn::api::program::parse_program;
 use hp_gnn::api::{HpGnn, SamplerSpec};
@@ -12,11 +11,17 @@ use hp_gnn::coordinator::{train, TrainConfig};
 use hp_gnn::runtime::Runtime;
 use hp_gnn::sampler::values::GnnModel;
 
+#[cfg(feature = "xla")]
 fn runtime() -> Option<Runtime> {
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     dir.join("manifest.json")
         .exists()
         .then(|| Runtime::load(&dir).expect("runtime"))
+}
+
+#[cfg(not(feature = "xla"))]
+fn runtime() -> Option<Runtime> {
+    Some(Runtime::reference())
 }
 
 fn tiny_graph(seed: u64) -> hp_gnn::graph::Graph {

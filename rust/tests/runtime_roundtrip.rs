@@ -1,11 +1,9 @@
-//! Integration: the full AOT→PJRT round-trip and the training coordinator
-//! on the tiny geometry.  This is the rust-side owner of the HLO-text
-//! interchange contract (python only checks parseability).
-//!
-//! Requires `make artifacts` (skips cleanly when artifacts are absent so
-//! `cargo test` works on a fresh checkout).
-
-use std::path::PathBuf;
+//! Integration: the full runtime round-trip and the training coordinator
+//! on the tiny geometry.  Under default features everything runs on the
+//! always-available pure-Rust reference backend; with `--features xla`
+//! the suite reverts to the artifact-gated AOT→PJRT path (skipping
+//! cleanly when `make artifacts` hasn't run), making it the rust-side
+//! owner of the HLO-text interchange contract.
 
 use hp_gnn::coordinator::{train, TrainConfig};
 use hp_gnn::graph::generator;
@@ -17,15 +15,19 @@ use hp_gnn::sampler::values::{attach_values, GnnModel};
 use hp_gnn::sampler::Sampler;
 use hp_gnn::util::rng::Pcg64;
 
-fn artifacts_dir() -> Option<PathBuf> {
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    dir.join("manifest.json").exists().then_some(dir)
-}
-
 /// Fresh runtime per test — the xla client is single-threaded (Rc-based),
 /// so it cannot live in a shared static.  Tiny-geometry compiles are fast.
+#[cfg(feature = "xla")]
 fn runtime() -> Option<Runtime> {
-    artifacts_dir().map(|d| Runtime::load(&d).expect("runtime"))
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json")
+        .exists()
+        .then(|| Runtime::load(&dir).expect("runtime"))
+}
+
+#[cfg(not(feature = "xla"))]
+fn runtime() -> Option<Runtime> {
+    Some(Runtime::reference())
 }
 
 fn tiny_graph() -> hp_gnn::graph::Graph {
@@ -60,7 +62,7 @@ fn forward_artifact_executes_with_correct_shapes() {
     let lits = inputs::build_inputs(&exe.spec, &padded, &feats, &weights, 0.0).unwrap();
     let outs = exe.run(&lits).unwrap();
     assert_eq!(outs.len(), 1, "forward returns logits only");
-    let logits = outs[0].to_vec::<f32>().unwrap();
+    let logits = outs[0].f32_data().unwrap();
     assert_eq!(logits.len(), geom.b[2] * geom.num_classes());
     assert!(logits.iter().all(|x| x.is_finite()));
 }
