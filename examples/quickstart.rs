@@ -7,7 +7,10 @@
 //! Builds a design for a 2-layer GCN with neighbor sampling on a small
 //! synthetic Flickr-statistics graph, prints the generated design (the
 //! analog of the paper's generated host program + accelerator config),
-//! trains briefly, and reports the loss curve.
+//! then opens a [`TrainingSession`] — the pull-based replacement for the
+//! fire-and-forget `Start_training()` loop: step-at-a-time control,
+//! `on_step`/`on_eval` progress hooks, interleaved validation, and a
+//! full-state checkpoint that a later process can `--resume` from.
 
 use hp_gnn::api::{HpGnn, SamplerSpec};
 use hp_gnn::runtime::Runtime;
@@ -39,13 +42,51 @@ fn main() -> anyhow::Result<()> {
 
     println!("== generated design ==\n{}\n", design.to_json().pretty());
 
-    // Start_training(): Algorithm 2 with sampling overlapped.
-    let report = design.start_training(&runtime, 60, 0.1, /*simulate=*/ true)?;
-    let m = &report.metrics;
+    // Start_training(), session style: the caller owns the loop.
     println!("== training ==");
-    println!("{}", m.to_json(2).pretty());
-    if let Some((head, tail)) = m.loss_drop() {
-        println!("\nloss descended {head:.4} -> {tail:.4} over {} steps", m.losses.len());
+    let mut session = design.session(&runtime, 0.1, /*simulate=*/ true)?;
+    session.on_step(|r| {
+        if (r.step + 1) % 20 == 0 {
+            println!("  step {:>3}: loss {:.4}", r.step, r.loss);
+        }
+    });
+    session.on_eval(|ev| {
+        println!(
+            "  eval @ step {}: {:.1}% accuracy over {} held-out targets",
+            ev.step,
+            ev.report.accuracy() * 100.0,
+            ev.report.total
+        );
+    });
+
+    // Train, validate mid-run, checkpoint, train some more.
+    session.run_for(30)?;
+    session.evaluate(2)?;
+    let ckpt = std::env::temp_dir().join("hpgnn-quickstart.ckpt");
+    session.save(&ckpt)?;
+    session.run_for(30)?;
+    session.evaluate(2)?;
+    let report = session.finish();
+
+    println!("\n{}", report.metrics.to_json(2).pretty());
+    if let Some((head, tail)) = report.metrics.loss_drop() {
+        println!(
+            "\nloss descended {head:.4} -> {tail:.4} over {} steps",
+            report.metrics.losses.len()
+        );
     }
+
+    // A fresh session resumed from the snapshot continues at step 30 and
+    // replays the exact batch stream the first session saw (same RNG
+    // cursor), so its losses match the uninterrupted run bit-exactly.
+    let mut resumed = design.resume_session(&runtime, 0.1, true, &ckpt)?;
+    resumed.run_for(30)?;
+    assert_eq!(
+        resumed.metrics().losses,
+        report.metrics.losses[30..].to_vec(),
+        "resumed session diverged from the uninterrupted run"
+    );
+    println!("resume check OK: steps 30..60 reproduced bit-exactly from {ckpt:?}");
+    let _ = std::fs::remove_file(&ckpt);
     Ok(())
 }

@@ -2,8 +2,12 @@
 //!
 //! Trains both GNN models on a Flickr-statistics synthetic graph with
 //! neighbor sampling for a few hundred steps, proving all three layers
-//! compose: rust sampling + layout + padding → AOT Pallas/JAX train step
-//! via PJRT → weights threaded through → loss descends.  Also runs the
+//! compose: rust sampling + layout + padding → runtime train step →
+//! weights threaded through → loss descends.  The run is driven through a
+//! `TrainingSession`: progress arrives via `on_step`/`on_eval` hooks,
+//! validation interleaves with training, a mid-run `HPGNNS01` snapshot is
+//! written, and (for GCN) a fresh session resumed from that snapshot must
+//! reproduce the remaining loss curve bit-exactly.  Also runs the
 //! cycle-level accelerator simulator per batch and reports the simulated
 //! CPU-FPGA NVTPS next to the functional (this-host) throughput.
 //!
@@ -48,18 +52,38 @@ fn main() -> anyhow::Result<()> {
         );
 
         let t = hp_gnn::util::stats::Timer::start();
-        let report = design.start_training(&runtime, steps, args.f32("lr"), true)?;
+        let mut session = design.session(&runtime, args.f32("lr"), /*simulate=*/ true)?;
+        let stride = (steps / 20).max(1);
+        session.on_step(move |r| {
+            if r.step % stride == 0 {
+                println!("  {:>4}: {:.4}", r.step, r.loss);
+            }
+        });
+        session.on_eval(|ev| {
+            println!(
+                "  eval @ step {}: {:.1}% accuracy over {} held-out targets",
+                ev.step,
+                ev.report.accuracy() * 100.0,
+                ev.report.total
+            );
+        });
+
+        // First half, then a full-state snapshot, then the second half —
+        // with a mid-run validation pass in between.
+        let half = steps / 2;
+        session.run_for(half)?;
+        let ckpt = std::env::temp_dir()
+            .join(format!("hpgnn-e2e-{}-{}.ckpt", model.to_lowercase(), std::process::id()));
+        session.save(&ckpt)?;
+        session.evaluate(3)?;
+        session.run_for(steps - half)?;
+
+        // Held-out accuracy via the forward (inference) artifact.
+        let eval = session.evaluate(5)?;
+        let report = session.finish();
         let wall = t.secs();
         let m = &report.metrics;
 
-        // Loss curve, decimated to ~20 points.
-        println!("loss curve (step: loss):");
-        let stride = (m.losses.len() / 20).max(1);
-        for (i, loss) in m.losses.iter().enumerate() {
-            if i % stride == 0 || i + 1 == m.losses.len() {
-                println!("  {i:>4}: {loss:.4}");
-            }
-        }
         let (head, tail) = m
             .loss_drop()
             .ok_or_else(|| anyhow::anyhow!("run too short for a loss trend"))?;
@@ -77,33 +101,29 @@ fn main() -> anyhow::Result<()> {
             si(m.simulated_nvtps(design.accel.sampler_threads.unwrap_or(2)).unwrap_or(0.0)),
         );
         anyhow::ensure!(tail < head, "{model}: loss did not descend ({head} -> {tail})");
-
-        // Held-out accuracy via the forward (inference) artifact.
-        let sampler = design.abstraction.sampler.build();
-        let cfg = hp_gnn::coordinator::TrainConfig {
-            lr: args.f32("lr"),
-            ..hp_gnn::coordinator::TrainConfig::quick(
-                design.abstraction.model,
-                &design.geometry,
-                0,
-            )
-        };
-        let eval = hp_gnn::coordinator::evaluate(
-            &runtime,
-            &design.graph,
-            sampler.as_ref(),
-            &cfg,
-            &report.final_weights,
-            5,
-            0xe5a1,
-        )?;
         println!(
-            "eval: {:.1}% accuracy over {} held-out targets ({} classes -> {:.1}% chance)\n",
+            "eval: {:.1}% accuracy over {} held-out targets ({} classes -> {:.1}% chance)",
             eval.accuracy() * 100.0,
             eval.total,
             design.graph.num_classes,
             100.0 / design.graph.num_classes as f64,
         );
+
+        // Preemption drill (GCN only, to bound runtime): a fresh session
+        // resumed from the mid-run snapshot must replay steps half..steps
+        // bit-exactly — same RNG cursor, same weights, same loss curve.
+        if model == "GCN" {
+            let mut resumed = design.resume_session(&runtime, args.f32("lr"), true, &ckpt)?;
+            anyhow::ensure!(resumed.current_step() == half, "snapshot step mismatch");
+            resumed.run_for(steps - half)?;
+            anyhow::ensure!(
+                resumed.metrics().losses == m.losses[half..],
+                "resumed session diverged from the uninterrupted run"
+            );
+            println!("resume check OK: steps {half}..{steps} reproduced bit-exactly");
+        }
+        let _ = std::fs::remove_file(&ckpt);
+        println!();
     }
     println!("train_e2e OK — both models converged");
     Ok(())

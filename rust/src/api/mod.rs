@@ -14,9 +14,12 @@
 
 pub mod program;
 
+use std::path::Path;
+use std::sync::Arc;
+
 use crate::accel::device::FeaturePlacement;
 use crate::accel::platform::Platform;
-use crate::coordinator::{train, TrainConfig, TrainReport};
+use crate::coordinator::{TrainConfig, TrainReport, TrainingSession};
 use crate::dse::{explore, DseProblem, DseResult};
 use crate::graph::{datasets, Graph};
 use crate::layout::pad::EdgeOverflow;
@@ -238,7 +241,7 @@ impl HpGnn {
             geometry,
             layout: self.layout,
             placement,
-            graph,
+            graph: Arc::new(graph),
             abstraction,
             seed: self.seed,
         })
@@ -299,6 +302,10 @@ fn select_geometry(
 }
 
 /// Output of `GenerateDesign()`: everything needed to run training.
+///
+/// The graph is held in an `Arc` so each [`session`](Self::session) shares
+/// it with the producer threads instead of deep-copying it (the feature
+/// matrix alone can be hundreds of MB at full dataset scale).
 #[derive(Debug)]
 pub struct GeneratedDesign {
     pub platform: Platform,
@@ -306,22 +313,17 @@ pub struct GeneratedDesign {
     pub geometry: String,
     pub layout: LayoutOptions,
     pub placement: FeaturePlacement,
-    pub graph: Graph,
+    pub graph: Arc<Graph>,
     pub abstraction: GnnAbstraction,
     pub seed: u64,
 }
 
 impl GeneratedDesign {
-    /// `Start_training()` — run Algorithm 2 for `steps` iterations.
-    pub fn start_training(
-        &self,
-        runtime: &Runtime,
-        steps: usize,
-        lr: f32,
-        simulate: bool,
-    ) -> anyhow::Result<TrainReport> {
-        let sampler = self.abstraction.sampler.build();
-        let cfg = TrainConfig {
+    /// The [`TrainConfig`] this design trains with (the generated host
+    /// program's knobs): artifact geometry, DSE-sized sampler thread pool,
+    /// overflow policy matched to the sampler class.
+    pub fn train_config(&self, steps: usize, lr: f32, simulate: bool) -> TrainConfig {
+        TrainConfig {
             model: self.abstraction.model,
             optimizer: Default::default(),
             geometry: self.geometry.clone(),
@@ -337,8 +339,60 @@ impl GeneratedDesign {
             simulate: simulate.then(|| (self.platform.clone(), self.accel.config)),
             log_every: 0,
             value_fn: None,
-        };
-        train(runtime, &self.graph, sampler.as_ref(), &cfg)
+        }
+    }
+
+    /// Open a [`TrainingSession`] on this design: compiles the artifact,
+    /// spawns the producer pipeline, and hands back pull-based control
+    /// (`step`/`run_for`/`evaluate`/`save`/`finish` plus the
+    /// `on_step`/`on_eval` hooks).
+    pub fn session<'rt>(
+        &self,
+        runtime: &'rt Runtime,
+        lr: f32,
+        simulate: bool,
+    ) -> anyhow::Result<TrainingSession<'rt>> {
+        TrainingSession::new(
+            runtime,
+            Arc::clone(&self.graph),
+            Arc::from(self.abstraction.sampler.build()),
+            self.train_config(0, lr, simulate),
+        )
+    }
+
+    /// [`session`](Self::session) restored from an `HPGNNS01` snapshot:
+    /// weights, optimizer state and the RNG cursor come from `checkpoint`,
+    /// and training continues bit-exactly where the snapshotted run left
+    /// off (reference backend).
+    pub fn resume_session<'rt>(
+        &self,
+        runtime: &'rt Runtime,
+        lr: f32,
+        simulate: bool,
+        checkpoint: &Path,
+    ) -> anyhow::Result<TrainingSession<'rt>> {
+        TrainingSession::resume(
+            runtime,
+            Arc::clone(&self.graph),
+            Arc::from(self.abstraction.sampler.build()),
+            self.train_config(0, lr, simulate),
+            checkpoint,
+        )
+    }
+
+    /// `Start_training()` — run Algorithm 2 for `steps` iterations (the
+    /// paper's fire-and-forget host program: a session driven start to
+    /// finish in one call).
+    pub fn start_training(
+        &self,
+        runtime: &Runtime,
+        steps: usize,
+        lr: f32,
+        simulate: bool,
+    ) -> anyhow::Result<TrainReport> {
+        let mut session = self.session(runtime, lr, simulate)?;
+        session.run_for(steps)?;
+        Ok(session.finish())
     }
 
     /// The generated-design summary (the analog of Listing 3's generated

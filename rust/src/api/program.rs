@@ -8,27 +8,87 @@
 //!   "model": {"computation": "SAGE", "hidden": [256]},
 //!   "sampler": {"type": "NeighborSampler", "budgets": [10, 25], "targets": 1024},
 //!   "graph": {"dataset": "FL", "scale": 0.05, "seed": 1},
-//!   "training": {"steps": 100, "lr": 0.05}
+//!   "training": {"steps": 100, "lr": 0.05, "eval_every": 20,
+//!                "checkpoint": "run.ckpt", "checkpoint_every": 25}
 //! }
 //! ```
 //!
 //! `parse_program` turns it into an [`HpGnn`] builder plus training
-//! parameters; the `hp-gnn run` CLI subcommand executes it end to end.
+//! parameters; the `hp-gnn run` CLI subcommand executes it end to end as a
+//! [`TrainingSession`](crate::coordinator::TrainingSession) (with
+//! `--resume <ckpt>` continuing from a session snapshot).
+//!
+//! # Schema
+//!
+//! Unknown keys are rejected everywhere — a typo like `"smapler"` is a
+//! parse error, never silently ignored.
+//!
+//! | Section | Key | Type | Meaning |
+//! |---|---|---|---|
+//! | *(top level)* | `platform` | string | board name (`"xilinx-U250"`) |
+//! | | `model` | object | GNN model section |
+//! | | `sampler` | object | sampling algorithm section |
+//! | | `graph` | object | input graph section |
+//! | | `training` | object | training-phase section |
+//! | `model` | `computation` | string | `"GCN"` \| `"SAGE"` \| `"GIN"` |
+//! | | `hidden` | [int] | hidden feature dims (length L-1) |
+//! | `sampler` | `type` | string | `NeighborSampler` \| `SubgraphSampler` \| `LayerwiseSampler` |
+//! | | `targets` | int | Neighbor/Layerwise: target vertices per batch |
+//! | | `budgets` | [int] | Neighbor: per-layer fan-outs (length L) |
+//! | | `budget` | int | Subgraph: vertex budget |
+//! | | `layers` | int | Subgraph: model depth L |
+//! | | `sizes` | [int] | Layerwise: per-layer sample sizes (length L) |
+//! | `graph` | `dataset` | string | Table 4 dataset key (`FL`/`RD`/`YP`/`AP`) |
+//! | | `scale` | number | dataset scale factor (default 1.0) |
+//! | | `edge_list` | string | path to an edge-list file (instead of `dataset`) |
+//! | | `feat_dim` | int | required with `edge_list` |
+//! | | `num_classes` | int | required with `edge_list` |
+//! | | `seed` | int | graph + training seed (default 1) |
+//! | `training` | `steps` | int | total training iterations |
+//! | | `lr` | number | learning rate |
+//! | | `simulate` | bool | attach accelerator-simulator timing (default false) |
+//! | | `eval_every` | int | evaluate every N steps; 0 disables (default 0) |
+//! | | `eval_batches` | int | held-out batches per evaluation (default 2) |
+//! | | `checkpoint` | string | `HPGNNS01` session-snapshot path (written every `checkpoint_every` steps and at the end) |
+//! | | `checkpoint_every` | int | snapshot cadence in steps; 0 = final snapshot only (default 0) |
 
 use super::{HpGnn, SamplerSpec};
 use crate::util::json::Json;
 
 /// Training-phase parameters of a user program.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct TrainingParams {
+    /// Total steps of the run (a resumed session trains the remainder).
     pub steps: usize,
     pub lr: f32,
     pub simulate: bool,
+    /// Evaluate on held-out batches every N steps (0 = off).
+    pub eval_every: usize,
+    /// Batches per evaluation.
+    pub eval_batches: usize,
+    /// Session-snapshot path (`HPGNNS01`); `None` disables checkpointing.
+    pub checkpoint: Option<std::path::PathBuf>,
+    /// Snapshot every N steps; 0 writes only the final snapshot.
+    pub checkpoint_every: usize,
+}
+
+/// Reject keys outside `allowed` so typos fail loudly instead of being
+/// silently ignored.
+fn check_keys(section: &str, obj: &Json, allowed: &[&str]) -> anyhow::Result<()> {
+    for key in obj.as_obj()?.keys() {
+        anyhow::ensure!(
+            allowed.contains(&key.as_str()),
+            "unknown key {key:?} in {section} (allowed: {})",
+            allowed.join(", ")
+        );
+    }
+    Ok(())
 }
 
 /// Parse a user program into a ready builder + training params.
 pub fn parse_program(text: &str) -> anyhow::Result<(HpGnn, TrainingParams)> {
     let doc = Json::parse(text)?;
+    check_keys("the user program", &doc, &["platform", "model", "sampler", "graph", "training"])?;
 
     let mut builder = HpGnn::init();
 
@@ -40,24 +100,34 @@ pub fn parse_program(text: &str) -> anyhow::Result<(HpGnn, TrainingParams)> {
 
     // Model.
     let model = doc.get("model")?;
+    check_keys("\"model\"", model, &["computation", "hidden"])?;
     builder = builder.gnn_computation(model.get("computation")?.as_str()?)?;
     builder = builder.gnn_parameters(model.get("hidden")?.usize_list()?);
 
     // Sampler.
     let sampler = doc.get("sampler")?;
     let spec = match sampler.get("type")?.as_str()? {
-        "NeighborSampler" => SamplerSpec::Neighbor {
-            targets: sampler.get("targets")?.as_usize()?,
-            budgets: sampler.get("budgets")?.usize_list()?,
-        },
-        "SubgraphSampler" => SamplerSpec::Subgraph {
-            budget: sampler.get("budget")?.as_usize()?,
-            layers: sampler.get("layers")?.as_usize()?,
-        },
-        "LayerwiseSampler" => SamplerSpec::Layerwise {
-            targets: sampler.get("targets")?.as_usize()?,
-            sizes: sampler.get("sizes")?.usize_list()?,
-        },
+        "NeighborSampler" => {
+            check_keys("\"sampler\" (NeighborSampler)", sampler, &["type", "targets", "budgets"])?;
+            SamplerSpec::Neighbor {
+                targets: sampler.get("targets")?.as_usize()?,
+                budgets: sampler.get("budgets")?.usize_list()?,
+            }
+        }
+        "SubgraphSampler" => {
+            check_keys("\"sampler\" (SubgraphSampler)", sampler, &["type", "budget", "layers"])?;
+            SamplerSpec::Subgraph {
+                budget: sampler.get("budget")?.as_usize()?,
+                layers: sampler.get("layers")?.as_usize()?,
+            }
+        }
+        "LayerwiseSampler" => {
+            check_keys("\"sampler\" (LayerwiseSampler)", sampler, &["type", "targets", "sizes"])?;
+            SamplerSpec::Layerwise {
+                targets: sampler.get("targets")?.as_usize()?,
+                sizes: sampler.get("sizes")?.usize_list()?,
+            }
+        }
         other => anyhow::bail!(
             "unknown sampler {other:?} (NeighborSampler|SubgraphSampler|LayerwiseSampler)"
         ),
@@ -66,6 +136,11 @@ pub fn parse_program(text: &str) -> anyhow::Result<(HpGnn, TrainingParams)> {
 
     // Graph.
     let graph = doc.get("graph")?;
+    check_keys(
+        "\"graph\"",
+        graph,
+        &["dataset", "scale", "edge_list", "feat_dim", "num_classes", "seed"],
+    )?;
     let seed = graph.opt("seed").map(|j| j.as_usize()).transpose()?.unwrap_or(1) as u64;
     if let Some(ds) = graph.opt("dataset") {
         let scale = graph.opt("scale").map(|j| j.as_f64()).transpose()?.unwrap_or(1.0);
@@ -82,6 +157,22 @@ pub fn parse_program(text: &str) -> anyhow::Result<(HpGnn, TrainingParams)> {
 
     // Training.
     let training = doc.get("training")?;
+    check_keys(
+        "\"training\"",
+        training,
+        &[
+            "steps",
+            "lr",
+            "simulate",
+            "eval_every",
+            "eval_batches",
+            "checkpoint",
+            "checkpoint_every",
+        ],
+    )?;
+    let opt_usize = |key: &str| -> anyhow::Result<Option<usize>> {
+        Ok(training.opt(key).map(|j| j.as_usize()).transpose()?)
+    };
     let params = TrainingParams {
         steps: training.get("steps")?.as_usize()?,
         lr: training.get("lr")?.as_f64()? as f32,
@@ -90,6 +181,14 @@ pub fn parse_program(text: &str) -> anyhow::Result<(HpGnn, TrainingParams)> {
             .map(|j| j.as_bool())
             .transpose()?
             .unwrap_or(false),
+        eval_every: opt_usize("eval_every")?.unwrap_or(0),
+        eval_batches: opt_usize("eval_batches")?.unwrap_or(2),
+        checkpoint: training
+            .opt("checkpoint")
+            .map(|j| j.as_str())
+            .transpose()?
+            .map(std::path::PathBuf::from),
+        checkpoint_every: opt_usize("checkpoint_every")?.unwrap_or(0),
     };
 
     Ok((builder, params))
@@ -113,6 +212,66 @@ mod tests {
         assert_eq!(params.steps, 5);
         assert!((params.lr - 0.1).abs() < 1e-6);
         assert!(params.simulate);
+        // Session knobs default off.
+        assert_eq!(params.eval_every, 0);
+        assert_eq!(params.eval_batches, 2);
+        assert!(params.checkpoint.is_none());
+        assert_eq!(params.checkpoint_every, 0);
+    }
+
+    #[test]
+    fn parses_session_training_keys() {
+        let prog = PROGRAM.replace(
+            r#""training": {"steps": 5, "lr": 0.1, "simulate": true}"#,
+            r#""training": {"steps": 8, "lr": 0.1, "eval_every": 2, "eval_batches": 3,
+                "checkpoint": "run.ckpt", "checkpoint_every": 4}"#,
+        );
+        let (_b, p) = parse_program(&prog).unwrap();
+        assert_eq!(p.eval_every, 2);
+        assert_eq!(p.eval_batches, 3);
+        assert_eq!(p.checkpoint.as_deref(), Some(std::path::Path::new("run.ckpt")));
+        assert_eq!(p.checkpoint_every, 4);
+        assert!(!p.simulate);
+    }
+
+    #[test]
+    fn rejects_unknown_top_level_key() {
+        // The classic typo: "smapler" next to a missing "sampler".
+        let bad = PROGRAM.replace("\"sampler\":", "\"smapler\":");
+        let err = parse_program(&bad).unwrap_err().to_string();
+        assert!(err.contains("smapler"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_model_key() {
+        let bad = PROGRAM.replace("\"hidden\":", "\"hiddne\":");
+        let err = parse_program(&bad).unwrap_err().to_string();
+        assert!(err.contains("hiddne") && err.contains("model"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_sampler_key() {
+        let bad = PROGRAM.replace("\"targets\": 4", "\"targets\": 4, \"budgte\": 9");
+        let err = parse_program(&bad).unwrap_err().to_string();
+        assert!(err.contains("budgte"), "{err}");
+        // Keys of *other* sampler variants are also rejected per variant.
+        let bad = PROGRAM.replace("\"targets\": 4", "\"targets\": 4, \"budget\": 9");
+        let err = parse_program(&bad).unwrap_err().to_string();
+        assert!(err.contains("budget") && err.contains("NeighborSampler"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_graph_key() {
+        let bad = PROGRAM.replace("\"scale\":", "\"scael\":");
+        let err = parse_program(&bad).unwrap_err().to_string();
+        assert!(err.contains("scael"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_training_key() {
+        let bad = PROGRAM.replace("\"lr\":", "\"lr ates\": 1, \"lr\":");
+        let err = parse_program(&bad).unwrap_err().to_string();
+        assert!(err.contains("lr ates"), "{err}");
     }
 
     #[test]

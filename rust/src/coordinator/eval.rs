@@ -8,7 +8,7 @@
 use crate::graph::{datasets, Graph};
 use crate::layout::pad::pad;
 use crate::layout::index_batch;
-use crate::runtime::{inputs, Kind, Runtime, WeightState};
+use crate::runtime::{inputs, Executable, Kind, Runtime, WeightState};
 use crate::sampler::values::attach_values;
 use crate::sampler::Sampler;
 use crate::util::rng::Pcg64;
@@ -30,7 +30,9 @@ impl EvalReport {
 }
 
 /// Evaluate `weights` on freshly sampled batches (seeded independently of
-/// training via `eval_seed`).
+/// training via `eval_seed`).  Compiles the forward artifact per call;
+/// repeated evaluations (a session's `eval_every` loop) should compile
+/// once and use [`evaluate_with`].
 pub fn evaluate(
     runtime: &Runtime,
     graph: &Graph,
@@ -41,6 +43,24 @@ pub fn evaluate(
     eval_seed: u64,
 ) -> anyhow::Result<EvalReport> {
     let exe = runtime.compile_role(cfg.model, &cfg.geometry, Kind::Forward)?;
+    evaluate_with(&exe, graph, sampler, cfg, weights, batches, eval_seed)
+}
+
+/// [`evaluate`] against an already-compiled forward [`Executable`].
+pub fn evaluate_with(
+    exe: &Executable,
+    graph: &Graph,
+    sampler: &dyn Sampler,
+    cfg: &TrainConfig,
+    weights: &WeightState,
+    batches: usize,
+    eval_seed: u64,
+) -> anyhow::Result<EvalReport> {
+    anyhow::ensure!(
+        exe.spec.kind == Kind::Forward,
+        "evaluate_with wants a Forward executable, got {:?}",
+        exe.spec.kind
+    );
     let spec = &exe.spec;
     let geom = spec.geometry.clone();
     let num_classes = geom.num_classes();

@@ -10,7 +10,9 @@
 
 pub mod eval;
 pub mod metrics;
+pub mod session;
 pub mod trainer;
 
-pub use eval::{evaluate, EvalReport};
+pub use eval::{evaluate, evaluate_with, EvalReport};
+pub use session::{EvalEvent, StepReport, TrainingSession};
 pub use trainer::{train, TrainConfig, TrainReport};

@@ -1,0 +1,879 @@
+//! Resumable, observable training sessions — the control plane over
+//! Algorithm 2.
+//!
+//! [`TrainingSession`] replaces the fire-and-forget `train()` loop with a
+//! pull-based object: it compiles the artifact, spawns and owns the
+//! producer pipeline (sampling → edge values → RMT/RRA layout → padding →
+//! feature synthesis on `sampler_threads` host threads), and hands control
+//! of the consumer side to the caller one [`step`](TrainingSession::step)
+//! at a time.  Validation ([`evaluate`](TrainingSession::evaluate)),
+//! progress observation (the [`on_step`](TrainingSession::on_step) /
+//! [`on_eval`](TrainingSession::on_eval) event hooks) and full-state
+//! checkpointing ([`save`](TrainingSession::save) /
+//! [`resume`](TrainingSession::resume), the `HPGNNS01` [`Checkpoint`]
+//! format) interleave freely with training.
+//!
+//! # Determinism and the RNG cursor
+//!
+//! The batch for global step `k` is a pure function of `(seed, k)`: every
+//! producer thread claims step indices from a shared counter and seeds a
+//! fresh [`Pcg64`] per batch via [`batch_rng`].  The consumer reorders
+//! arrivals back into step order, so the executed batch stream — and hence
+//! the loss curve — is bit-identical regardless of `sampler_threads` or
+//! producer scheduling.  A [`Checkpoint`] therefore only needs `(seed,
+//! step)` as its RNG cursor: resuming restarts the producers at `step` and
+//! replays the exact stream the uninterrupted run would have seen.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::eval::{self, EvalReport};
+use super::metrics::Metrics;
+use super::trainer::{Optimizer, TrainConfig, TrainReport};
+use crate::accel::{self, SimOptions};
+use crate::graph::{datasets, Graph};
+use crate::layout::pad::{pad, PaddedBatch};
+use crate::layout::{index_batch, Geometry, IndexedBatch};
+use crate::runtime::weights::AdamState;
+use crate::runtime::{inputs, Checkpoint, Executable, Kind, Runtime, WeightState};
+use crate::sampler::values::{attach_values, GnnModel};
+use crate::sampler::Sampler;
+use crate::util::rng::{Pcg64, SplitMix64};
+use crate::util::stats::Timer;
+
+/// Salt mixed into `cfg.seed` for evaluation sampling, so held-out batches
+/// never collide with a training step's stream.
+const EVAL_SEED_SALT: u64 = 0xe5a1;
+
+/// The per-step batch RNG: batch `step` of a run seeded with `seed` is a
+/// pure function of `(seed, step)` — the session's checkpointable RNG
+/// cursor.  The step index is whitened through SplitMix64 so consecutive
+/// steps land in unrelated Pcg64 streams.
+pub fn batch_rng(seed: u64, step: u64) -> Pcg64 {
+    let mix = SplitMix64 { state: step ^ 0x9e37_79b9_7f4a_7c15 }.next();
+    Pcg64::seed_from_u64(seed ^ mix)
+}
+
+/// What one executed training step looked like — the payload of
+/// [`TrainingSession::step`] and the `on_step` hook.
+#[derive(Debug, Clone)]
+pub struct StepReport {
+    /// Global step index (resumed sessions continue the original count).
+    pub step: usize,
+    pub loss: f32,
+    /// Producer-side preparation time for this batch (seconds).
+    pub prep_s: f64,
+    /// Backend execution time (seconds).
+    pub exec_s: f64,
+    /// Simulated accelerator t_GNN, when `cfg.simulate` is set.
+    pub t_gnn_sim: Option<f64>,
+}
+
+/// Payload of the `on_eval` hook.
+#[derive(Debug, Clone)]
+pub struct EvalEvent {
+    /// Global step the evaluation ran at.
+    pub step: usize,
+    pub report: EvalReport,
+}
+
+/// One prepared batch traveling producer → consumer, tagged with its
+/// global step index for in-order consumption.
+struct Prepared {
+    padded: PaddedBatch,
+    features: Vec<f32>,
+    indexed: IndexedBatch,
+    prep_s: f64,
+}
+
+/// Producer throttle: step claims may run at most [`CLAIM_WINDOW`] ×
+/// `sampler_threads` ahead of the consumer.  Without it, one straggler
+/// batch lets every other producer race arbitrarily far ahead while the
+/// consumer parks their arrivals in `pending` — each a full padded batch —
+/// so the reorder buffer (and resident memory) would be unbounded.
+struct ClaimWindow {
+    consumed: Mutex<usize>,
+    advanced: Condvar,
+    /// Exclusive upper bound on steps worth preparing (`usize::MAX` =
+    /// open-ended).  Claims at or beyond it park until shutdown, so a
+    /// fixed-length run ([`train`](super::trainer::train)) doesn't pay
+    /// for prefetched batches it will never consume.
+    limit: AtomicUsize,
+}
+
+/// Claim-ahead budget per producer thread (× `sampler_threads` total).
+const CLAIM_WINDOW: usize = 4;
+
+/// Identity string for the training graph, stored in checkpoints so a
+/// resume against a different graph fails instead of silently training
+/// checkpointed weights on a stream they never saw.
+fn graph_fingerprint(g: &Graph) -> String {
+    // Truncate by bytes (on a char boundary): the checkpoint string
+    // encoding caps at 256 bytes and the counts need room too.
+    let mut name = g.name.clone();
+    if name.len() > 128 {
+        let mut cut = 128;
+        while !name.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        name.truncate(cut);
+    }
+    format!("{name} |V|={} |E|={}", g.num_vertices(), g.num_edges())
+}
+
+/// A live training run: owned producer threads, weights/optimizer state,
+/// metrics, and pull-based control.  Construct via
+/// [`TrainingSession::new`], [`TrainingSession::resume`], or
+/// [`crate::api::GeneratedDesign::session`].
+pub struct TrainingSession<'rt> {
+    runtime: &'rt Runtime,
+    graph: Arc<Graph>,
+    sampler: Arc<dyn Sampler>,
+    cfg: TrainConfig,
+    exe: Executable,
+    /// Forward artifact for [`evaluate`](Self::evaluate), compiled once on
+    /// first use (a PJRT compile per eval would dominate `eval_every`).
+    forward: Option<Executable>,
+    geom: Geometry,
+    weights: WeightState,
+    adam: Option<AdamState>,
+    metrics: Metrics,
+    /// Next global step to execute (== steps executed since the seed
+    /// origin, including any checkpointed prefix).
+    step: usize,
+    /// Set when a step failed: step `self.step`'s batch was consumed but
+    /// not executed, and no producer will regenerate it, so further
+    /// stepping would hang — fail fast instead.
+    failed: bool,
+    compile_s: f64,
+    /// Out-of-order arrivals waiting for their turn (bounded by the
+    /// producers' [`ClaimWindow`]).
+    pending: BTreeMap<usize, Prepared>,
+    rx: Option<mpsc::Receiver<(usize, anyhow::Result<Prepared>)>>,
+    stop: Arc<AtomicBool>,
+    window: Arc<ClaimWindow>,
+    producers: Vec<JoinHandle<()>>,
+    step_hooks: Vec<Box<dyn FnMut(&StepReport)>>,
+    eval_hooks: Vec<Box<dyn FnMut(&EvalEvent)>>,
+}
+
+impl<'rt> TrainingSession<'rt> {
+    /// Compile the artifact for `cfg`, starting from freshly initialized
+    /// weights at step 0.  The producer pipeline spawns lazily at the
+    /// first [`step`](Self::step).
+    pub fn new(
+        runtime: &'rt Runtime,
+        graph: Arc<Graph>,
+        sampler: Arc<dyn Sampler>,
+        cfg: TrainConfig,
+    ) -> anyhow::Result<TrainingSession<'rt>> {
+        Self::with_state(runtime, graph, sampler, cfg, None)
+    }
+
+    /// Rebuild a session from a [`Checkpoint`] written by
+    /// [`save`](TrainingSession::save): weights, Adam state, and the RNG
+    /// cursor are restored, and the producers restart at the checkpointed
+    /// step, so the loss sequence continues bit-exactly where the
+    /// snapshotted run left off (reference backend).
+    pub fn resume(
+        runtime: &'rt Runtime,
+        graph: Arc<Graph>,
+        sampler: Arc<dyn Sampler>,
+        cfg: TrainConfig,
+        checkpoint: &Path,
+    ) -> anyhow::Result<TrainingSession<'rt>> {
+        let snap = Checkpoint::load(checkpoint)?;
+        Self::with_state(runtime, graph, sampler, cfg, Some(snap))
+    }
+
+    fn with_state(
+        runtime: &'rt Runtime,
+        graph: Arc<Graph>,
+        sampler: Arc<dyn Sampler>,
+        cfg: TrainConfig,
+        snapshot: Option<Checkpoint>,
+    ) -> anyhow::Result<TrainingSession<'rt>> {
+        let compile_t = Timer::start();
+        let kind = match cfg.optimizer {
+            Optimizer::Sgd => Kind::TrainStep,
+            Optimizer::Adam => Kind::AdamStep,
+        };
+        let exe = runtime.compile_role(cfg.model, &cfg.geometry, kind)?;
+        let compile_s = compile_t.secs();
+        let geom = exe.spec.geometry.clone();
+        anyhow::ensure!(
+            geom.layers() == sampler.num_layers(),
+            "sampler has {} layers, artifact geometry {} has {}",
+            sampler.num_layers(),
+            geom.name,
+            geom.layers()
+        );
+
+        let (weights, adam, start_step) = match snapshot {
+            None => {
+                let weights = WeightState::init_glorot(&exe.spec.weight_shapes, cfg.seed);
+                let adam = (cfg.optimizer == Optimizer::Adam)
+                    .then(|| AdamState::zeros(&exe.spec.weight_shapes));
+                (weights, adam, 0usize)
+            }
+            Some(snap) => {
+                anyhow::ensure!(
+                    snap.model == cfg.model.as_str(),
+                    "checkpoint was trained with model {:?}, session uses {:?}",
+                    snap.model,
+                    cfg.model.as_str()
+                );
+                anyhow::ensure!(
+                    snap.geometry == geom.name,
+                    "checkpoint geometry {:?} does not match session geometry {:?}",
+                    snap.geometry,
+                    geom.name
+                );
+                anyhow::ensure!(
+                    snap.weights.tensors.len() == exe.spec.weight_shapes.len() * 2,
+                    "checkpoint has {} weight tensors, artifact wants {}",
+                    snap.weights.tensors.len(),
+                    exe.spec.weight_shapes.len() * 2
+                );
+                for (l, (wshape, bshape)) in exe.spec.weight_shapes.iter().enumerate() {
+                    anyhow::ensure!(
+                        &snap.weights.tensors[2 * l].0 == wshape,
+                        "checkpoint w{} shape {:?} does not match artifact shape {:?}",
+                        l + 1,
+                        snap.weights.tensors[2 * l].0,
+                        wshape
+                    );
+                    anyhow::ensure!(
+                        &snap.weights.tensors[2 * l + 1].0 == bshape,
+                        "checkpoint b{} shape {:?} does not match artifact shape {:?}",
+                        l + 1,
+                        snap.weights.tensors[2 * l + 1].0,
+                        bshape
+                    );
+                }
+                match (cfg.optimizer, &snap.adam) {
+                    (Optimizer::Adam, None) => {
+                        anyhow::bail!("checkpoint has no Adam state but the optimizer is Adam")
+                    }
+                    (Optimizer::Sgd, Some(_)) => {
+                        anyhow::bail!("checkpoint carries Adam state but the optimizer is SGD")
+                    }
+                    _ => {}
+                }
+                if let Some(st) = &snap.adam {
+                    anyhow::ensure!(
+                        st.m.len() == snap.weights.tensors.len()
+                            && st.v.len() == snap.weights.tensors.len(),
+                        "checkpoint Adam state has {}/{} moment tensors for {} weights",
+                        st.m.len(),
+                        st.v.len(),
+                        snap.weights.tensors.len()
+                    );
+                    // Shapes too: a corrupt moment tensor must fail here,
+                    // not poison the session at its first step.
+                    for (i, (wshape, _)) in snap.weights.tensors.iter().enumerate() {
+                        anyhow::ensure!(
+                            st.m[i].0 == *wshape && st.v[i].0 == *wshape,
+                            "checkpoint Adam moment {i} shape {:?}/{:?} does not match \
+                             weight shape {:?}",
+                            st.m[i].0,
+                            st.v[i].0,
+                            wshape
+                        );
+                    }
+                }
+                // The RNG cursor is (seed, step): a different session seed
+                // would replay a different batch stream (and a different
+                // graph, when both derive from one seed) under the
+                // checkpointed weights — reject rather than silently
+                // diverge from the bit-exact-resume guarantee.
+                anyhow::ensure!(
+                    snap.seed == cfg.seed,
+                    "checkpoint was trained with seed {} but the session uses seed {}",
+                    snap.seed,
+                    cfg.seed
+                );
+                // The stream is a function of (graph, sampler, seed, step):
+                // all of them must match for the resume to be the
+                // checkpointed run's continuation.
+                anyhow::ensure!(
+                    snap.sampler == sampler.name(),
+                    "checkpoint was trained with sampler {:?}, session uses {:?}",
+                    snap.sampler,
+                    sampler.name()
+                );
+                anyhow::ensure!(
+                    snap.graph == graph_fingerprint(&graph),
+                    "checkpoint graph {:?} does not match session graph {:?}",
+                    snap.graph,
+                    graph_fingerprint(&graph)
+                );
+                (snap.weights, snap.adam, snap.step as usize)
+            }
+        };
+
+        Ok(TrainingSession {
+            runtime,
+            graph,
+            sampler,
+            cfg,
+            exe,
+            forward: None,
+            geom,
+            weights,
+            adam,
+            metrics: Metrics::default(),
+            step: start_step,
+            failed: false,
+            compile_s,
+            pending: BTreeMap::new(),
+            rx: None,
+            stop: Arc::new(AtomicBool::new(false)),
+            window: Arc::new(ClaimWindow {
+                consumed: Mutex::new(start_step),
+                advanced: Condvar::new(),
+                limit: AtomicUsize::new(usize::MAX),
+            }),
+            producers: Vec::new(),
+            step_hooks: Vec::new(),
+            eval_hooks: Vec::new(),
+        })
+    }
+
+    /// Spawn the producer pipeline.  Deferred to the first
+    /// [`step`](Self::step) so a [`set_step_limit`](Self::set_step_limit)
+    /// issued right after construction is in force before any claim is
+    /// made, and eval-/save-only sessions never spawn threads.
+    fn spawn_producers(&mut self) {
+        debug_assert!(self.rx.is_none() && self.producers.is_empty());
+        let threads = self.cfg.sampler_threads.max(1);
+        let cap = CLAIM_WINDOW * threads;
+        let counter = Arc::new(AtomicUsize::new(self.step));
+        *self.window.consumed.lock().unwrap() = self.step;
+        let (tx, rx) = mpsc::sync_channel::<(usize, anyhow::Result<Prepared>)>(2 * threads);
+        let feat_dim = self.geom.f[0];
+        let num_classes = self.geom.num_classes();
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let graph = Arc::clone(&self.graph);
+            let sampler = Arc::clone(&self.sampler);
+            let cfg = self.cfg.clone();
+            let geom = self.geom.clone();
+            let counter = Arc::clone(&counter);
+            let stop = Arc::clone(&self.stop);
+            let window = Arc::clone(&self.window);
+            self.producers.push(std::thread::spawn(move || loop {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let k = counter.fetch_add(1, Ordering::Relaxed);
+                // Throttle: stay within the claim window of the consumer
+                // and under the step limit (timeout guards a notify
+                // racing the wait).
+                {
+                    let mut consumed = window.consumed.lock().unwrap();
+                    while !stop.load(Ordering::Relaxed)
+                        && (k >= *consumed + cap
+                            || k >= window.limit.load(Ordering::Relaxed))
+                    {
+                        let (guard, _timeout) = window
+                            .advanced
+                            .wait_timeout(consumed, std::time::Duration::from_millis(50))
+                            .unwrap();
+                        consumed = guard;
+                    }
+                }
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let t = Timer::start();
+                let mut rng = batch_rng(cfg.seed, k as u64);
+                let item = prepare_batch(
+                    &graph,
+                    sampler.as_ref(),
+                    &cfg,
+                    &geom,
+                    feat_dim,
+                    num_classes,
+                    &mut rng,
+                )
+                .map(|(padded, features, indexed)| Prepared {
+                    padded,
+                    features,
+                    indexed,
+                    prep_s: t.secs(),
+                });
+                if tx.send((k, item)).is_err() {
+                    break; // session finished or dropped
+                }
+            }));
+        }
+        drop(tx);
+        self.rx = Some(rx);
+    }
+
+    /// Cap the global step the producers will prepare for.  A caller that
+    /// knows the run length up front (the `train()` wrapper, a CLI run
+    /// with `training.steps`) sets this so producers don't prefetch
+    /// batches past the end that `finish()` would discard.  Stepping at
+    /// or beyond the limit is an error (the batch was never prepared).
+    pub fn set_step_limit(&self, limit: usize) {
+        self.window.limit.store(limit, Ordering::Relaxed);
+        self.window.advanced.notify_all();
+    }
+
+    /// Register a hook fired after every executed step (replaces the old
+    /// `log_every` knob — install a hook that filters on `report.step`).
+    pub fn on_step(&mut self, hook: impl FnMut(&StepReport) + 'static) {
+        self.step_hooks.push(Box::new(hook));
+    }
+
+    /// Register a hook fired after every [`evaluate`](Self::evaluate) call.
+    pub fn on_eval(&mut self, hook: impl FnMut(&EvalEvent) + 'static) {
+        self.eval_hooks.push(Box::new(hook));
+    }
+
+    /// Execute one training step (Algorithm 2's consumer side): wait for
+    /// this step's prepared batch, run the train-step artifact, thread the
+    /// weights (and Adam state) through, record metrics, fire hooks.
+    ///
+    /// A step error is not retryable: the failed step's batch is gone from
+    /// the pipeline, so the session is poisoned and every later call
+    /// errors immediately (instead of blocking on a batch that will never
+    /// arrive).  Recover by resuming a new session from the last snapshot.
+    pub fn step(&mut self) -> anyhow::Result<StepReport> {
+        anyhow::ensure!(
+            !self.failed,
+            "session failed at step {}; resume a new session from the last checkpoint",
+            self.step
+        );
+        match self.step_inner() {
+            Ok(report) => Ok(report),
+            Err(e) => {
+                self.failed = true;
+                Err(e)
+            }
+        }
+    }
+
+    fn step_inner(&mut self) -> anyhow::Result<StepReport> {
+        let iter_t = Timer::start();
+        let k = self.step;
+        let limit = self.window.limit.load(Ordering::Relaxed);
+        anyhow::ensure!(
+            k < limit,
+            "step {k} is beyond the session's step limit {limit} \
+             (raise it with set_step_limit before running further)"
+        );
+        if self.rx.is_none() {
+            self.spawn_producers();
+        }
+        let prepared = self.next_prepared(k)?;
+        let exec_t = Timer::start();
+        let lits = inputs::build_inputs_opt(
+            &self.exe.spec,
+            &prepared.padded,
+            &prepared.features,
+            &self.weights,
+            self.cfg.lr,
+            self.adam.as_ref(),
+        )?;
+        let outs = self.exe.run(&lits)?;
+        let loss = outs[0]
+            .scalar()
+            .map_err(|e| anyhow::anyhow!("loss readback: {e}"))?;
+        anyhow::ensure!(loss.is_finite(), "loss diverged at step {k}: {loss}");
+        let nparams = self.weights.tensors.len();
+        self.weights.update_from(&outs[1..1 + nparams])?;
+        if let Some(st) = self.adam.as_mut() {
+            st.update_from(&outs[1 + nparams..])?;
+        }
+        let exec_s = exec_t.secs();
+
+        self.metrics.losses.push(loss);
+        self.metrics.t_sampling.add(prepared.prep_s);
+        self.metrics.t_execute.add(exec_s);
+        self.metrics.vertices.push(prepared.padded.vertices_traversed);
+
+        let mut t_gnn_sim = None;
+        if let Some((platform, accel_cfg)) = &self.cfg.simulate {
+            let sim = accel::simulate_batch(
+                platform,
+                accel_cfg,
+                &prepared.indexed,
+                &self.geom.f,
+                SimOptions {
+                    sage_concat: self.cfg.model == GnnModel::Sage,
+                    ..Default::default()
+                },
+            );
+            self.metrics.t_gnn_sim.add(sim.t_gnn);
+            t_gnn_sim = Some(sim.t_gnn);
+        }
+        self.metrics.t_iteration.add(iter_t.secs());
+        self.step += 1;
+        // Advance the producers' claim window.
+        *self.window.consumed.lock().unwrap() = self.step;
+        self.window.advanced.notify_all();
+
+        let report = StepReport { step: k, loss, prep_s: prepared.prep_s, exec_s, t_gnn_sim };
+        let mut hooks = std::mem::take(&mut self.step_hooks);
+        for hook in &mut hooks {
+            hook(&report);
+        }
+        self.step_hooks = hooks;
+        Ok(report)
+    }
+
+    /// Run `steps` consecutive training steps.
+    pub fn run_for(&mut self, steps: usize) -> anyhow::Result<()> {
+        for _ in 0..steps {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    /// Score the current weights on `batches` freshly sampled held-out
+    /// batches through the forward artifact (compiled once, on first use).
+    /// Evaluation draws from a seed-salted stream, so it never perturbs
+    /// training determinism.
+    pub fn evaluate(&mut self, batches: usize) -> anyhow::Result<EvalReport> {
+        if self.forward.is_none() {
+            self.forward =
+                Some(self.runtime.compile_role(self.cfg.model, &self.cfg.geometry, Kind::Forward)?);
+        }
+        let report = eval::evaluate_with(
+            self.forward.as_ref().expect("just compiled"),
+            &self.graph,
+            self.sampler.as_ref(),
+            &self.cfg,
+            &self.weights,
+            batches,
+            self.cfg.seed ^ EVAL_SEED_SALT,
+        )?;
+        let event = EvalEvent { step: self.step, report: report.clone() };
+        let mut hooks = std::mem::take(&mut self.eval_hooks);
+        for hook in &mut hooks {
+            hook(&event);
+        }
+        self.eval_hooks = hooks;
+        Ok(report)
+    }
+
+    /// Write a full-state `HPGNNS01` [`Checkpoint`] (weights + Adam state
+    /// + RNG cursor + sampler/graph identity) for a later
+    /// [`resume`](Self::resume).
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        Checkpoint {
+            step: self.step as u64,
+            seed: self.cfg.seed,
+            model: self.cfg.model.as_str().to_string(),
+            geometry: self.geom.name.clone(),
+            sampler: self.sampler.name(),
+            graph: graph_fingerprint(&self.graph),
+            weights: self.weights.clone(),
+            adam: self.adam.clone(),
+        }
+        .save(path)
+    }
+
+    /// Metrics accumulated so far (losses are indexed from the step this
+    /// session started at, not the global step).
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// The current model weights.
+    pub fn weights(&self) -> &WeightState {
+        &self.weights
+    }
+
+    /// Next global step to execute (== total steps since the seed origin).
+    pub fn current_step(&self) -> usize {
+        self.step
+    }
+
+    /// The session's effective configuration (resume validates that the
+    /// checkpoint's seed matches `cfg.seed`).
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    /// Artifact compile time paid at construction (seconds).
+    pub fn compile_s(&self) -> f64 {
+        self.compile_s
+    }
+
+    /// Stop the producers and fold the session into a [`TrainReport`].
+    pub fn finish(mut self) -> TrainReport {
+        self.shutdown();
+        let empty = WeightState { tensors: Vec::new() };
+        TrainReport {
+            metrics: std::mem::take(&mut self.metrics),
+            final_weights: std::mem::replace(&mut self.weights, empty),
+            compile_s: self.compile_s,
+        }
+    }
+
+    /// Receive until step `k`'s batch arrives, parking out-of-order
+    /// arrivals in `pending`.
+    fn next_prepared(&mut self, k: usize) -> anyhow::Result<Prepared> {
+        loop {
+            if let Some(p) = self.pending.remove(&k) {
+                return Ok(p);
+            }
+            let rx = self
+                .rx
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("session already finished"))?;
+            let (i, item) = match rx.recv_timeout(std::time::Duration::from_millis(100)) {
+                Ok(pair) => pair,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    // A panicked producer strands its claimed step while
+                    // the other senders stay alive (parked in the claim
+                    // window), so a plain recv() would hang forever —
+                    // detect the dead thread and fail instead.
+                    anyhow::ensure!(
+                        !self.producers.iter().any(|h| h.is_finished()),
+                        "a batch producer thread terminated unexpectedly (panicked?)"
+                    );
+                    continue;
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("batch producers terminated unexpectedly")
+                }
+            };
+            match item {
+                Ok(p) => {
+                    self.pending.insert(i, p);
+                }
+                Err(e) => return Err(e.context(format!("preparing batch {i}"))),
+            }
+        }
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.window.advanced.notify_all(); // unblocks throttled producers
+        self.pending.clear();
+        drop(self.rx.take()); // unblocks producers parked on send
+        for h in self.producers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TrainingSession<'_> {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Producer-side batch preparation (everything the paper's host program
+/// does between the sampler and the accelerator).
+fn prepare_batch(
+    graph: &Graph,
+    sampler: &dyn Sampler,
+    cfg: &TrainConfig,
+    geom: &Geometry,
+    feat_dim: usize,
+    num_classes: usize,
+    rng: &mut Pcg64,
+) -> anyhow::Result<(PaddedBatch, Vec<f32>, IndexedBatch)> {
+    let mb = sampler.sample(graph, rng);
+    let values = match &cfg.value_fn {
+        Some(f) => f(graph, &mb),
+        None => attach_values(graph, &mb, cfg.model),
+    };
+    let indexed = index_batch(&mb, &values, cfg.layout);
+    let ll = mb.num_layers();
+    let target_labels =
+        datasets::synth_labels(&mb.layers[ll], num_classes, cfg.seed, graph.num_vertices());
+    let padded = pad(&indexed, &target_labels, geom, cfg.overflow)?;
+    // Feature rows for B^0, labels drawn from the same per-vertex stream
+    // so the task is learnable.
+    let l0_labels =
+        datasets::synth_labels(&mb.layers[0], num_classes, cfg.seed, graph.num_vertices());
+    let real = datasets::synth_features(&mb.layers[0], &l0_labels, feat_dim, num_classes, cfg.seed);
+    let features = inputs::pad_features(&real, mb.layers[0].len(), geom.b[0], feat_dim);
+    Ok((padded, features, indexed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::sampler::neighbor::NeighborSampler;
+
+    fn tiny_graph(seed: u64) -> Graph {
+        let mut g = generator::with_min_degree(
+            generator::rmat(400, 3200, Default::default(), seed),
+            1,
+            seed ^ 1,
+        );
+        g.feat_dim = 16;
+        g.num_classes = 4;
+        g
+    }
+
+    fn session(rt: &Runtime, cfg: TrainConfig) -> TrainingSession<'_> {
+        TrainingSession::new(
+            rt,
+            Arc::new(tiny_graph(31)),
+            Arc::new(NeighborSampler::new(4, vec![5, 3])),
+            cfg,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn batch_rng_is_a_pure_function_of_seed_and_step() {
+        let a: Vec<u64> = (0..4).map(|_| batch_rng(7, 3).next_u64()).collect();
+        assert!(a.windows(2).all(|w| w[0] == w[1]), "not pure: {a:?}");
+        assert_ne!(batch_rng(7, 3).next_u64(), batch_rng(7, 4).next_u64());
+        assert_ne!(batch_rng(7, 3).next_u64(), batch_rng(8, 3).next_u64());
+    }
+
+    #[test]
+    fn stepwise_control_matches_run_for() {
+        let rt = Runtime::reference();
+        let cfg = TrainConfig::quick(GnnModel::Gcn, "tiny", 0);
+        let mut a = session(&rt, cfg.clone());
+        for _ in 0..6 {
+            a.step().unwrap();
+        }
+        let mut b = session(&rt, cfg);
+        b.run_for(6).unwrap();
+        assert_eq!(a.metrics().losses, b.metrics().losses);
+        assert_eq!(a.current_step(), 6);
+    }
+
+    #[test]
+    fn losses_are_thread_count_invariant() {
+        // The per-step RNG cursor makes the batch stream independent of the
+        // producer thread count and scheduling.
+        let rt = Runtime::reference();
+        let mut one = TrainConfig::quick(GnnModel::Gcn, "tiny", 0);
+        one.sampler_threads = 1;
+        let mut four = one.clone();
+        four.sampler_threads = 4;
+        let mut a = session(&rt, one);
+        a.run_for(8).unwrap();
+        let mut b = session(&rt, four);
+        b.run_for(8).unwrap();
+        assert_eq!(a.metrics().losses, b.metrics().losses);
+    }
+
+    #[test]
+    fn step_hooks_see_consecutive_steps() {
+        let rt = Runtime::reference();
+        let seen = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let sink = Arc::clone(&seen);
+        let mut s = session(&rt, TrainConfig::quick(GnnModel::Gcn, "tiny", 0));
+        s.on_step(move |r| sink.lock().unwrap().push(r.step));
+        s.run_for(5).unwrap();
+        assert_eq!(*seen.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn evaluate_fires_hook_and_scores() {
+        let rt = Runtime::reference();
+        let fired = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let sink = Arc::clone(&fired);
+        let mut s = session(&rt, TrainConfig::quick(GnnModel::Gcn, "tiny", 0));
+        s.on_eval(move |ev| sink.lock().unwrap().push((ev.step, ev.report.total)));
+        s.run_for(2).unwrap();
+        let report = s.evaluate(2).unwrap();
+        assert!(report.total > 0);
+        assert_eq!(fired.lock().unwrap().as_slice(), &[(2, report.total)]);
+    }
+
+    #[test]
+    fn finish_reports_accumulated_metrics() {
+        let rt = Runtime::reference();
+        let mut s = session(&rt, TrainConfig::quick(GnnModel::Gcn, "tiny", 0));
+        s.run_for(4).unwrap();
+        let report = s.finish();
+        assert_eq!(report.metrics.losses.len(), 4);
+        assert!(report.final_weights.l2_norm() > 0.0);
+    }
+
+    #[test]
+    fn save_resume_round_trip_is_bit_exact_in_process() {
+        let rt = Runtime::reference();
+        let cfg = TrainConfig::quick(GnnModel::Gcn, "tiny", 0);
+        let mut full = session(&rt, cfg.clone());
+        full.run_for(10).unwrap();
+        let want = full.metrics().losses.clone();
+
+        let dir = std::env::temp_dir().join(format!("hpgnn-sess-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mid.ckpt");
+        let mut first = session(&rt, cfg.clone());
+        first.run_for(5).unwrap();
+        first.save(&path).unwrap();
+        drop(first);
+
+        let mut resumed = TrainingSession::resume(
+            &rt,
+            Arc::new(tiny_graph(31)),
+            Arc::new(NeighborSampler::new(4, vec![5, 3])),
+            cfg,
+            &path,
+        )
+        .unwrap();
+        assert_eq!(resumed.current_step(), 5);
+        resumed.run_for(5).unwrap();
+        assert_eq!(resumed.metrics().losses, want[5..].to_vec());
+    }
+
+    #[test]
+    fn step_error_poisons_the_session_instead_of_hanging() {
+        let rt = Runtime::reference();
+        // Budgets far beyond the tiny geometry's vertex bounds: every
+        // batch fails padding, so the first step errors.
+        let mut s = TrainingSession::new(
+            &rt,
+            Arc::new(tiny_graph(31)),
+            Arc::new(NeighborSampler::new(8, vec![25, 25])),
+            TrainConfig::quick(GnnModel::Gcn, "tiny", 0),
+        )
+        .unwrap();
+        assert!(s.step().is_err());
+        // A retry must fail fast, not block on a batch that never comes.
+        let err = s.step().unwrap_err().to_string();
+        assert!(err.contains("failed at step"), "{err}");
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_model_and_optimizer() {
+        let rt = Runtime::reference();
+        let cfg = TrainConfig::quick(GnnModel::Gcn, "tiny", 0);
+        let s = session(&rt, cfg.clone());
+        let dir = std::env::temp_dir().join(format!("hpgnn-sess-mm-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("gcn.ckpt");
+        s.save(&path).unwrap();
+
+        let graph = Arc::new(tiny_graph(31));
+        let sampler: Arc<dyn Sampler> = Arc::new(NeighborSampler::new(4, vec![5, 3]));
+        let mut sage = cfg.clone();
+        sage.model = GnnModel::Sage;
+        let err =
+            TrainingSession::resume(&rt, Arc::clone(&graph), Arc::clone(&sampler), sage, &path)
+                .unwrap_err()
+                .to_string();
+        assert!(err.contains("model"), "{err}");
+
+        let mut adam = cfg;
+        adam.optimizer = Optimizer::Adam;
+        let err = TrainingSession::resume(&rt, graph, sampler, adam, &path)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("Adam"), "{err}");
+    }
+}

@@ -9,29 +9,30 @@
 //! the bottleneck the producers idle (sampling fully hidden, Eq. 5), when
 //! sampling is the bottleneck the consumer starves and the measured
 //! iteration time shows it.
+//!
+//! The pipeline itself lives in [`super::session::TrainingSession`];
+//! [`train`] is the paper's fire-and-forget host program expressed as a
+//! thin wrapper over a session (`run_for(cfg.steps)` then `finish()`).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
 use std::sync::Arc;
 
 use super::metrics::Metrics;
-use crate::accel::{self, AccelConfig, Platform, SimOptions};
-use crate::graph::{datasets, Graph};
-use crate::layout::pad::{pad, EdgeOverflow, PaddedBatch};
-use crate::layout::{index_batch, IndexedBatch, LayoutOptions};
-use crate::runtime::weights::AdamState;
-use crate::runtime::{inputs, Kind, Runtime, WeightState};
-use crate::sampler::values::{attach_values, GnnModel};
+use super::session::TrainingSession;
+use crate::accel::{AccelConfig, Platform};
+use crate::graph::Graph;
+use crate::layout::pad::EdgeOverflow;
+use crate::layout::LayoutOptions;
+use crate::runtime::{Runtime, WeightState};
+use crate::sampler::values::GnnModel;
 use crate::sampler::Sampler;
-use crate::util::rng::Pcg64;
-use crate::util::stats::Timer;
 
 /// Custom Scatter-UDF hook (paper Listing 2): computes per-edge values,
 /// replacing the built-in GCN/SAGE `PrepareEdges()`.  The aggregate
 /// hardware template is value-agnostic (`msg.val = edge.val * feat[src]`),
 /// so custom layers run on the stock artifacts.
-pub type ValueFn =
-    Arc<dyn Fn(&Graph, &crate::sampler::MiniBatch) -> crate::sampler::values::EdgeValues + Send + Sync>;
+pub type ValueFn = Arc<
+    dyn Fn(&Graph, &crate::sampler::MiniBatch) -> crate::sampler::values::EdgeValues + Send + Sync,
+>;
 
 /// Weight-update rule (paper Algorithm 2's WeightUpdate stage).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -49,6 +50,7 @@ pub struct TrainConfig {
     pub optimizer: Optimizer,
     /// Geometry name — selects the artifact (e.g. "tiny", "ns_small").
     pub geometry: String,
+    /// Iterations [`train`] runs; sessions ignore it (`run_for` decides).
     pub steps: usize,
     pub lr: f32,
     pub seed: u64,
@@ -58,6 +60,9 @@ pub struct TrainConfig {
     /// Simulate each batch on the accelerator model (Table 7's CPU-FPGA
     /// timing path); None disables.
     pub simulate: Option<(Platform, AccelConfig)>,
+    /// Legacy progress knob, honored by [`train`] only: log every N steps
+    /// (0 disables; step 0 is never logged).  Sessions use the
+    /// [`on_step`](TrainingSession::on_step) hook instead.
     pub log_every: usize,
     /// Custom Scatter UDF; None uses the model's standard edge values.
     pub value_fn: Option<ValueFn>,
@@ -76,13 +81,15 @@ impl std::fmt::Debug for TrainConfig {
     }
 }
 
-impl TrainConfig {
-    pub fn quick(model: GnnModel, geometry: &str, steps: usize) -> TrainConfig {
+impl Default for TrainConfig {
+    /// A GCN/SGD run on the built-in "tiny" geometry; set `steps` (and
+    /// usually `model`/`geometry`) to taste — [`TrainConfig::quick`] does.
+    fn default() -> TrainConfig {
         TrainConfig {
-            model,
+            model: GnnModel::Gcn,
             optimizer: Optimizer::Sgd,
-            geometry: geometry.to_string(),
-            steps,
+            geometry: "tiny".to_string(),
+            steps: 0,
             lr: 0.05,
             seed: 7,
             layout: LayoutOptions::all(),
@@ -95,6 +102,12 @@ impl TrainConfig {
     }
 }
 
+impl TrainConfig {
+    pub fn quick(model: GnnModel, geometry: &str, steps: usize) -> TrainConfig {
+        TrainConfig { model, geometry: geometry.to_string(), steps, ..Default::default() }
+    }
+}
+
 /// Result of a training run.
 #[derive(Debug)]
 pub struct TrainReport {
@@ -104,172 +117,60 @@ pub struct TrainReport {
     pub compile_s: f64,
 }
 
-/// One prepared batch traveling producer -> consumer.
-struct Prepared {
-    padded: PaddedBatch,
-    features: Vec<f32>,
-    indexed: IndexedBatch,
-    prep_s: f64,
-}
-
-/// Run Algorithm 2 for `cfg.steps` iterations.
+/// Run Algorithm 2 for `cfg.steps` iterations — the compat wrapper over
+/// [`TrainingSession`] (`new` → `run_for` → `finish`).
+///
+/// Keeps the original borrowed `&Graph` signature for existing call
+/// sites, which costs one graph deep-copy per call (sessions need owned
+/// `Arc`s for their producer threads).  Long-lived or large-graph callers
+/// should hold an `Arc<Graph>` and drive a [`TrainingSession`] directly.
 pub fn train(
     runtime: &Runtime,
     graph: &Graph,
     sampler: &dyn Sampler,
     cfg: &TrainConfig,
 ) -> anyhow::Result<TrainReport> {
-    let compile_t = Timer::start();
-    let kind = match cfg.optimizer {
-        Optimizer::Sgd => Kind::TrainStep,
-        Optimizer::Adam => Kind::AdamStep,
-    };
-    let exe = runtime.compile_role(cfg.model, &cfg.geometry, kind)?;
-    let compile_s = compile_t.secs();
-    let spec = &exe.spec;
-    let geom = spec.geometry.clone();
-    anyhow::ensure!(
-        geom.layers() == sampler.num_layers(),
-        "sampler has {} layers, artifact geometry {} has {}",
-        sampler.num_layers(),
-        geom.name,
-        geom.layers()
-    );
-    let num_classes = geom.num_classes();
-    let feat_dim = geom.f[0];
-
-    let mut weights = WeightState::init_glorot(&spec.weight_shapes, cfg.seed);
-    let mut adam = (cfg.optimizer == Optimizer::Adam)
-        .then(|| AdamState::zeros(&spec.weight_shapes));
-    let mut metrics = Metrics::default();
-
-    let produced = AtomicUsize::new(0);
-    let (tx, rx) = mpsc::sync_channel::<anyhow::Result<Prepared>>(2 * cfg.sampler_threads.max(1));
-
-    std::thread::scope(|scope| -> anyhow::Result<()> {
-        // ---- producers: sample -> values -> layout -> pad -> features.
-        for tid in 0..cfg.sampler_threads.max(1) {
-            let tx = tx.clone();
-            let produced = &produced;
-            let geom = &geom;
-            scope.spawn(move || {
-                let mut rng = Pcg64::seed_from_u64(cfg.seed ^ ((0xba7c4 ^ tid as u64) << 8));
-                loop {
-                    let k = produced.fetch_add(1, Ordering::Relaxed);
-                    if k >= cfg.steps {
-                        break;
-                    }
-                    let t = Timer::start();
-                    let item = prepare_batch(
-                        graph,
-                        sampler,
-                        cfg,
-                        geom,
-                        feat_dim,
-                        num_classes,
-                        &mut rng,
-                    )
-                    .map(|(padded, features, indexed)| Prepared {
-                        padded,
-                        features,
-                        indexed,
-                        prep_s: t.secs(),
-                    });
-                    if tx.send(item).is_err() {
-                        break; // consumer bailed
-                    }
-                }
-            });
-        }
-        drop(tx);
-
-        // ---- consumer: execute + weight threading.
-        let mut step = 0usize;
-        while let Ok(item) = rx.recv() {
-            let iter_t = Timer::start();
-            let prepared = item?;
-            let exec_t = Timer::start();
-            let lits = inputs::build_inputs_opt(
-                spec,
-                &prepared.padded,
-                &prepared.features,
-                &weights,
-                cfg.lr,
-                adam.as_ref(),
-            )?;
-            let outs = exe.run(&lits)?;
-            let loss = outs[0]
-                .scalar()
-                .map_err(|e| anyhow::anyhow!("loss readback: {e}"))?;
-            anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}: {loss}");
-            let nparams = weights.tensors.len();
-            weights.update_from(&outs[1..1 + nparams])?;
-            if let Some(st) = adam.as_mut() {
-                st.update_from(&outs[1 + nparams..])?;
-            }
-            let exec_s = exec_t.secs();
-
-            metrics.losses.push(loss);
-            metrics.t_sampling.add(prepared.prep_s);
-            metrics.t_execute.add(exec_s);
-            metrics.vertices.push(prepared.padded.vertices_traversed);
-
-            if let Some((platform, accel_cfg)) = &cfg.simulate {
-                let sim = accel::simulate_batch(
-                    platform,
-                    accel_cfg,
-                    &prepared.indexed,
-                    &geom.f,
-                    SimOptions {
-                        sage_concat: cfg.model == GnnModel::Sage,
-                        ..Default::default()
-                    },
-                );
-                metrics.t_gnn_sim.add(sim.t_gnn);
-            }
-
-            metrics.t_iteration.add(iter_t.secs());
-            if cfg.log_every > 0 && step % cfg.log_every == 0 {
+    let mut session = TrainingSession::new(
+        runtime,
+        Arc::new(graph.clone()),
+        Arc::from(sampler.clone_box()),
+        cfg.clone(),
+    )?;
+    // Fixed-length run: don't prefetch batches past the end.
+    session.set_step_limit(cfg.steps);
+    if cfg.log_every > 0 {
+        let every = cfg.log_every;
+        session.on_step(move |r| {
+            if r.step > 0 && r.step % every == 0 {
                 log::info!(
-                    "step {step}: loss {loss:.4}, exec {:.1} ms, prep {:.1} ms",
-                    exec_s * 1e3,
-                    prepared.prep_s * 1e3
+                    "step {}: loss {:.4}, exec {:.1} ms, prep {:.1} ms",
+                    r.step,
+                    r.loss,
+                    r.exec_s * 1e3,
+                    r.prep_s * 1e3
                 );
             }
-            step += 1;
-        }
-        Ok(())
-    })?;
-
-    Ok(TrainReport { metrics, final_weights: weights, compile_s })
+        });
+    }
+    session.run_for(cfg.steps)?;
+    Ok(session.finish())
 }
 
-/// Producer-side batch preparation (everything the paper's host program
-/// does between the sampler and the accelerator).
-fn prepare_batch(
-    graph: &Graph,
-    sampler: &dyn Sampler,
-    cfg: &TrainConfig,
-    geom: &crate::layout::Geometry,
-    feat_dim: usize,
-    num_classes: usize,
-    rng: &mut Pcg64,
-) -> anyhow::Result<(PaddedBatch, Vec<f32>, IndexedBatch)> {
-    let mb = sampler.sample(graph, rng);
-    let values = match &cfg.value_fn {
-        Some(f) => f(graph, &mb),
-        None => attach_values(graph, &mb, cfg.model),
-    };
-    let indexed = index_batch(&mb, &values, cfg.layout);
-    let ll = mb.num_layers();
-    let target_labels =
-        datasets::synth_labels(&mb.layers[ll], num_classes, cfg.seed, graph.num_vertices());
-    let padded = pad(&indexed, &target_labels, geom, cfg.overflow)?;
-    // Feature rows for B^0, labels drawn from the same per-vertex stream
-    // so the task is learnable.
-    let l0_labels =
-        datasets::synth_labels(&mb.layers[0], num_classes, cfg.seed, graph.num_vertices());
-    let real = datasets::synth_features(&mb.layers[0], &l0_labels, feat_dim, num_classes, cfg.seed);
-    let features = inputs::pad_features(&real, mb.layers[0].len(), geom.b[0], feat_dim);
-    Ok((padded, features, indexed))
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_derives_from_default() {
+        let q = TrainConfig::quick(GnnModel::Sage, "ns_small", 12);
+        let d = TrainConfig::default();
+        assert_eq!(q.model, GnnModel::Sage);
+        assert_eq!(q.geometry, "ns_small");
+        assert_eq!(q.steps, 12);
+        assert_eq!(q.lr, d.lr);
+        assert_eq!(q.seed, d.seed);
+        assert_eq!(q.sampler_threads, d.sampler_threads);
+        assert_eq!(q.optimizer, Optimizer::Sgd);
+        assert!(q.simulate.is_none() && q.value_fn.is_none());
+    }
 }

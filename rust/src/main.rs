@@ -2,45 +2,63 @@
 //!
 //! Subcommands:
 //!
-//! * `run <program.json>` — execute a user program (paper Listing 1).
+//! * `run <program.json>` — execute a user program (paper Listing 1) as a
+//!   training session (`--resume` continues from a session snapshot).
 //! * `train` — train a model on a synthetic Table 4 dataset.
 //! * `dse` — run the design space exploration engine (Table 5 rows).
 //! * `simulate` — simulate one mini-batch on the accelerator model.
 //! * `info` — list artifacts and platform description.
+//! * `help` — this overview.
 //!
 //! Run `hp-gnn <subcommand> --help` for flags.
 
+use std::path::{Path, PathBuf};
+
 use hp_gnn::accel::{AccelConfig, Platform, SimOptions};
 use hp_gnn::api::{program, HpGnn, SamplerSpec};
+use hp_gnn::coordinator::{trainer::Optimizer, TrainingSession};
 use hp_gnn::dse::{explore, DseProblem};
 use hp_gnn::graph::datasets;
 use hp_gnn::layout::{index_batch, LayoutOptions};
 use hp_gnn::perf::{ModelShape, ResourceCoefficients};
 use hp_gnn::runtime::Runtime;
 use hp_gnn::sampler::values::{attach_values, GnnModel};
+use hp_gnn::sampler::Sampler;
 use hp_gnn::util::cli::Args;
 use hp_gnn::util::rng::Pcg64;
 use hp_gnn::util::si;
 
+const USAGE: &str = "hp-gnn — HP-GNN training framework (FPGA '22 reproduction)\n\n\
+     SUBCOMMANDS:\n  run <program.json>   execute a user program as a training session\n  \
+     train                train on a synthetic dataset\n  \
+     dse                  design space exploration (Table 5)\n  \
+     simulate             accelerator simulation of one batch\n  \
+     info                 artifacts + platform info\n  \
+     help                 print this overview\n\n\
+     Run `hp-gnn <subcommand> --help` for flags.";
+
 fn main() {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
-    let sub = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
+    let sub = if argv.is_empty() { String::new() } else { argv.remove(0) };
     let result = match sub.as_str() {
         "run" => cmd_run(argv),
         "train" => cmd_train(argv),
         "dse" => cmd_dse(argv),
         "simulate" => cmd_simulate(argv),
         "info" => cmd_info(argv),
-        _ => {
-            eprintln!(
-                "hp-gnn — HP-GNN training framework (FPGA '22 reproduction)\n\n\
-                 SUBCOMMANDS:\n  run <program.json>   execute a user program\n  \
-                 train                train on a synthetic dataset\n  \
-                 dse                  design space exploration (Table 5)\n  \
-                 simulate             accelerator simulation of one batch\n  \
-                 info                 artifacts + platform info\n"
-            );
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
             return;
+        }
+        other => {
+            // A missing or unknown subcommand is a usage error: usage goes
+            // to stderr and the exit code is nonzero so scripts notice.
+            if other.is_empty() {
+                eprintln!("error: no subcommand given\n\n{USAGE}");
+            } else {
+                eprintln!("error: unknown subcommand {other:?}\n\n{USAGE}");
+            }
+            std::process::exit(2);
         }
     };
     if let Err(e) = result {
@@ -53,25 +71,147 @@ fn artifacts_flag(args: Args) -> Args {
     args.flag("artifacts", "artifacts", "artifact directory (make artifacts)")
 }
 
+/// Session-control flags shared by `run` and `train`.  The cadence flags
+/// default to "unset" (empty) so `run` can distinguish "not given" from an
+/// explicit `0` that disables a program-configured cadence.
+fn session_flags(args: Args) -> Args {
+    args.flag("resume", "", "resume from an HPGNNS01 session snapshot")
+        .flag("eval-every", "", "evaluate on held-out batches every N steps (0 = off)")
+        .flag("checkpoint", "", "session snapshot path (written per --checkpoint-every + at end)")
+        .flag("checkpoint-every", "", "snapshot every N steps (0 = final snapshot only)")
+}
+
+/// An optional usize flag: empty string (the default) means "not given".
+fn opt_usize_flag(args: &Args, name: &str) -> anyhow::Result<Option<usize>> {
+    match args.get(name) {
+        "" => Ok(None),
+        s => Ok(Some(
+            s.parse::<usize>()
+                .map_err(|e| anyhow::anyhow!("--{name} wants an unsigned integer: {e}"))?,
+        )),
+    }
+}
+
+/// Drive `session` until `total_steps` global steps have executed,
+/// evaluating every `eval_every` steps and snapshotting every
+/// `checkpoint_every` steps (plus a final snapshot) when configured.
+fn run_session(
+    session: &mut TrainingSession<'_>,
+    total_steps: usize,
+    eval_every: usize,
+    eval_batches: usize,
+    checkpoint: Option<&Path>,
+    checkpoint_every: usize,
+) -> anyhow::Result<()> {
+    let mut last_saved = None;
+    while session.current_step() < total_steps {
+        session.step()?;
+        let done = session.current_step();
+        if eval_every > 0 && done % eval_every == 0 {
+            session.evaluate(eval_batches)?;
+        }
+        if let Some(path) = checkpoint {
+            if checkpoint_every > 0 && done % checkpoint_every == 0 {
+                session.save(path)?;
+                last_saved = Some(done);
+            }
+        }
+    }
+    if let Some(path) = checkpoint {
+        // Final snapshot, unless the periodic cadence just wrote it.
+        if last_saved != Some(session.current_step()) {
+            session.save(path)?;
+        }
+        println!(
+            "checkpoint: wrote session snapshot to {path:?} at step {}",
+            session.current_step()
+        );
+    }
+    Ok(())
+}
+
+/// Progress hooks shared by `run` and `train`: decimated step lines plus
+/// one line per evaluation.
+fn install_progress_hooks(session: &mut TrainingSession<'_>, total_steps: usize) {
+    let stride = (total_steps / 10).max(1);
+    session.on_step(move |r| {
+        if (r.step + 1) % stride == 0 {
+            println!("step {:>5}: loss {:.4}", r.step, r.loss);
+        }
+    });
+    session.on_eval(|ev| {
+        println!(
+            "eval @ step {}: {:.1}% accuracy ({}/{} targets)",
+            ev.step,
+            ev.report.accuracy() * 100.0,
+            ev.report.correct,
+            ev.report.total
+        );
+    });
+}
+
 fn cmd_run(argv: Vec<String>) -> anyhow::Result<()> {
-    let args = artifacts_flag(Args::new("hp-gnn run", "execute a user program"))
-        .parse_from(argv)?;
+    let args = session_flags(artifacts_flag(Args::new(
+        "hp-gnn run",
+        "execute a user program as a training session",
+    )))
+    .flag("eval-batches", "", "override training.eval_batches")
+    .parse_from(argv)?;
     let path = args
         .positional
         .first()
         .ok_or_else(|| anyhow::anyhow!("usage: hp-gnn run <program.json>"))?;
     let text = std::fs::read_to_string(path)?;
-    let (builder, params) = program::parse_program(&text)?;
-    let runtime = Runtime::auto(std::path::Path::new(args.get("artifacts")))?;
+    let (builder, mut params) = program::parse_program(&text)?;
+    // Given CLI flags override the program's training section (an
+    // explicit 0 disables a program-configured cadence).
+    if let Some(v) = opt_usize_flag(&args, "eval-every")? {
+        params.eval_every = v;
+    }
+    if let Some(v) = opt_usize_flag(&args, "eval-batches")? {
+        params.eval_batches = v;
+    }
+    if !args.get("checkpoint").is_empty() {
+        params.checkpoint = Some(PathBuf::from(args.get("checkpoint")));
+    }
+    if let Some(v) = opt_usize_flag(&args, "checkpoint-every")? {
+        params.checkpoint_every = v;
+    }
+
+    let runtime = Runtime::auto(Path::new(args.get("artifacts")))?;
     let design = builder.generate_design(&runtime)?;
     println!("generated design:\n{}", design.to_json().pretty());
-    let report = design.start_training(&runtime, params.steps, params.lr, params.simulate)?;
-    println!("training report:\n{}", report.metrics.to_json(2).pretty());
+
+    let mut session = if args.get("resume").is_empty() {
+        design.session(&runtime, params.lr, params.simulate)?
+    } else {
+        let s = design.resume_session(
+            &runtime,
+            params.lr,
+            params.simulate,
+            Path::new(args.get("resume")),
+        )?;
+        println!("resumed at step {}", s.current_step());
+        s
+    };
+    session.set_step_limit(params.steps);
+    install_progress_hooks(&mut session, params.steps);
+    run_session(
+        &mut session,
+        params.steps,
+        params.eval_every,
+        params.eval_batches,
+        params.checkpoint.as_deref(),
+        params.checkpoint_every,
+    )?;
+    let threads = session.config().sampler_threads;
+    let report = session.finish();
+    println!("training report:\n{}", report.metrics.to_json(threads).pretty());
     Ok(())
 }
 
 fn cmd_train(argv: Vec<String>) -> anyhow::Result<()> {
-    let args = artifacts_flag(
+    let args = session_flags(artifacts_flag(
         Args::new("hp-gnn train", "train a GNN on a synthetic Table 4 dataset")
             .flag("model", "gcn", "gcn | sage")
             .flag("dataset", "FL", "FL | RD | YP | AP")
@@ -80,20 +220,20 @@ fn cmd_train(argv: Vec<String>) -> anyhow::Result<()> {
             .flag("targets", "32", "NS target vertices per batch")
             .flag("budgets", "5,10", "NS fan-outs per layer (comma separated)")
             .flag("budget", "256", "SS subgraph budget")
-            .flag("steps", "50", "training iterations")
+            .flag("steps", "50", "training iterations (total, including a resumed prefix)")
             .flag("lr", "0.05", "learning rate")
             .flag("seed", "7", "PRNG seed")
             .flag("threads", "2", "sampler threads")
             .flag("optimizer", "sgd", "sgd | adam")
-            .flag("save", "", "Save_model(): checkpoint path (empty = no save)")
-            .flag("eval-batches", "0", "held-out eval batches after training")
+            .flag("save", "", "Save_model(): final weights path (empty = no save)")
+            .flag("eval-batches", "", "held-out eval batches (also run once after training)")
             .switch("simulate", "attach accelerator-simulator timing")
             .switch("no-rmt", "disable the RMT layout optimization")
             .switch("no-rra", "disable the RRA layout optimization"),
-    )
+    ))
     .parse_from(argv)?;
 
-    let runtime = Runtime::auto(std::path::Path::new(args.get("artifacts")))?;
+    let runtime = Runtime::auto(Path::new(args.get("artifacts")))?;
     let sampler = match args.get("sampler") {
         "ns" => SamplerSpec::Neighbor {
             targets: args.usize("targets"),
@@ -117,54 +257,65 @@ fn cmd_train(argv: Vec<String>) -> anyhow::Result<()> {
         .load_dataset(args.get("dataset"), args.f64("scale"), args.usize("seed") as u64)?
         .generate_design(&runtime)?;
     println!("generated design:\n{}", design.to_json().pretty());
-    // The builder path uses SGD; Adam goes through TrainConfig directly.
-    let report = if args.get("optimizer") == "adam" {
-        let sampler = design.abstraction.sampler.build();
-        let mut cfg = hp_gnn::coordinator::TrainConfig::quick(
-            design.abstraction.model,
-            &design.geometry,
-            args.usize("steps"),
-        );
-        cfg.optimizer = hp_gnn::coordinator::trainer::Optimizer::Adam;
-        cfg.lr = args.f32("lr");
-        cfg.layout = layout;
-        cfg.seed = args.usize("seed") as u64;
-        cfg.sampler_threads = args.usize("threads");
-        hp_gnn::coordinator::train(&runtime, &design.graph, sampler.as_ref(), &cfg)?
-    } else {
-        design.start_training(&runtime, args.usize("steps"), args.f32("lr"), args.on("simulate"))?
+
+    let steps = args.usize("steps");
+    let mut cfg = design.train_config(steps, args.f32("lr"), args.on("simulate"));
+    cfg.sampler_threads = args.usize("threads");
+    cfg.optimizer = match args.get("optimizer") {
+        "sgd" => Optimizer::Sgd,
+        "adam" => Optimizer::Adam,
+        other => anyhow::bail!("unknown optimizer {other:?} (sgd|adam)"),
     };
+    let graph = std::sync::Arc::clone(&design.graph);
+    let boxed: std::sync::Arc<dyn Sampler> =
+        std::sync::Arc::from(design.abstraction.sampler.build());
+    let mut session = if args.get("resume").is_empty() {
+        TrainingSession::new(&runtime, graph, boxed, cfg)?
+    } else {
+        let s = TrainingSession::resume(
+            &runtime,
+            graph,
+            boxed,
+            cfg,
+            Path::new(args.get("resume")),
+        )?;
+        println!("resumed at step {}", s.current_step());
+        s
+    };
+    session.set_step_limit(steps);
+    install_progress_hooks(&mut session, steps);
+    let checkpoint = (!args.get("checkpoint").is_empty())
+        .then(|| PathBuf::from(args.get("checkpoint")));
+    let eval_batches = opt_usize_flag(&args, "eval-batches")?.unwrap_or(0);
+    let eval_every = opt_usize_flag(&args, "eval-every")?.unwrap_or(0);
+    let start_step = session.current_step();
+    run_session(
+        &mut session,
+        steps,
+        eval_every,
+        if eval_batches > 0 { eval_batches } else { 2 },
+        checkpoint.as_deref(),
+        opt_usize_flag(&args, "checkpoint-every")?.unwrap_or(0),
+    )?;
+    // Final held-out eval, unless the periodic cadence just ran one at
+    // the last step (the eval stream is fixed, so it would be identical).
+    // A resume that was already past `steps` ran no periodic evals.
+    let periodic_ran_final = eval_every > 0 && steps % eval_every == 0 && start_step < steps;
+    if eval_batches > 0 && !periodic_ran_final {
+        session.evaluate(eval_batches)?;
+    }
+
+    let threads = session.config().sampler_threads;
+    let report = session.finish();
     let m = &report.metrics;
-    println!("training report:\n{}", m.to_json(args.usize("threads")).pretty());
+    println!("training report:\n{}", m.to_json(threads).pretty());
     if let Some((head, tail)) = m.loss_drop() {
         println!("loss: {head:.4} -> {tail:.4}");
     }
     if !args.get("save").is_empty() {
-        let path = std::path::PathBuf::from(args.get("save"));
+        let path = PathBuf::from(args.get("save"));
         report.final_weights.save(&path)?;
-        println!("Save_model(): wrote checkpoint to {path:?}");
-    }
-    if args.usize("eval-batches") > 0 {
-        let sampler = design.abstraction.sampler.build();
-        let cfg = hp_gnn::coordinator::TrainConfig::quick(
-            design.abstraction.model,
-            &design.geometry,
-            0,
-        );
-        let eval = hp_gnn::coordinator::evaluate(
-            &runtime,
-            &design.graph,
-            sampler.as_ref(),
-            &cfg,
-            &report.final_weights,
-            args.usize("eval-batches"),
-            0xe5a1,
-        )?;
-        println!(
-            "eval: {:.1}% accuracy over {} targets",
-            eval.accuracy() * 100.0,
-            eval.total
-        );
+        println!("Save_model(): wrote weights to {path:?}");
     }
     Ok(())
 }
@@ -242,7 +393,6 @@ fn cmd_simulate(argv: Vec<String>) -> anyhow::Result<()> {
         .collect::<Result<_, _>>()?;
     let sampler =
         hp_gnn::sampler::neighbor::NeighborSampler::new(args.usize("targets"), budgets);
-    use hp_gnn::sampler::Sampler;
     let mb = sampler.sample(&g, &mut Pcg64::seed_from_u64(args.usize("seed") as u64));
     let vals = attach_values(&g, &mb, model);
     let layout = LayoutOptions { rmt: !args.on("no-rmt"), rra: !args.on("no-rra") };

@@ -25,4 +25,4 @@ pub use executor::{Executable, Runtime};
 pub use manifest::{ArtifactSpec, Kind, Manifest};
 pub use reference::ReferenceBackend;
 pub use tensor::Tensor;
-pub use weights::WeightState;
+pub use weights::{Checkpoint, WeightState};

@@ -61,19 +61,10 @@ impl WeightState {
     /// checkpoint (magic, tensor count, per-tensor dims + f32 LE data).
     pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
         use std::io::Write;
-        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
-        w.write_all(b"HPGNNW01")?;
-        w.write_all(&(self.tensors.len() as u64).to_le_bytes())?;
-        for (shape, data) in &self.tensors {
-            w.write_all(&(shape.len() as u64).to_le_bytes())?;
-            for &d in shape {
-                w.write_all(&(d as u64).to_le_bytes())?;
-            }
-            for &x in data {
-                w.write_all(&x.to_le_bytes())?;
-            }
-        }
-        Ok(())
+        atomic_write(path, |w| {
+            w.write_all(b"HPGNNW01")?;
+            write_tensors(w, &self.tensors)
+        })
     }
 
     /// Load a checkpoint written by [`save`]; validates magic and shapes.
@@ -82,32 +73,7 @@ impl WeightState {
         anyhow::ensure!(bytes.len() >= 16, "checkpoint too short");
         anyhow::ensure!(&bytes[..8] == b"HPGNNW01", "bad checkpoint magic");
         let mut off = 8usize;
-        let u64_at = |bytes: &[u8], off: &mut usize| -> anyhow::Result<u64> {
-            anyhow::ensure!(*off + 8 <= bytes.len(), "truncated checkpoint");
-            let v = u64::from_le_bytes(bytes[*off..*off + 8].try_into().unwrap());
-            *off += 8;
-            Ok(v)
-        };
-        let count = u64_at(&bytes, &mut off)? as usize;
-        anyhow::ensure!(count <= 1024, "implausible tensor count {count}");
-        let mut tensors = Vec::with_capacity(count);
-        for _ in 0..count {
-            let ndims = u64_at(&bytes, &mut off)? as usize;
-            anyhow::ensure!(ndims <= 8, "implausible rank {ndims}");
-            let mut shape = Vec::with_capacity(ndims);
-            for _ in 0..ndims {
-                shape.push(u64_at(&bytes, &mut off)? as usize);
-            }
-            let elems: usize = shape.iter().product();
-            anyhow::ensure!(off + elems * 4 <= bytes.len(), "truncated tensor data");
-            let mut data = Vec::with_capacity(elems);
-            for i in 0..elems {
-                let s = off + i * 4;
-                data.push(f32::from_le_bytes(bytes[s..s + 4].try_into().unwrap()));
-            }
-            off += elems * 4;
-            tensors.push((shape, data));
-        }
+        let tensors = read_tensors(&bytes, &mut off)?;
         anyhow::ensure!(off == bytes.len(), "trailing bytes in checkpoint");
         Ok(WeightState { tensors })
     }
@@ -167,6 +133,217 @@ impl AdamState {
             .scalar()
             .map_err(|e| anyhow::anyhow!("step readback: {e}"))?;
         Ok(())
+    }
+}
+
+// ---- shared binary tensor-list encoding (HPGNNW01 / HPGNNS01) ----------
+
+/// Write-then-rename: `write` fills a sibling `<path>.tmp`, which is
+/// flushed, fsynced, and renamed over `path` — a crash or full disk
+/// mid-save (the exact preemption checkpoints exist for) can therefore
+/// never clobber the previous good checkpoint with a truncated one.
+fn atomic_write(
+    path: &std::path::Path,
+    write: impl FnOnce(&mut std::io::BufWriter<std::fs::File>) -> anyhow::Result<()>,
+) -> anyhow::Result<()> {
+    use std::io::Write;
+    let mut tmp_name = path.as_os_str().to_owned();
+    tmp_name.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp_name);
+    let result = (|| -> anyhow::Result<()> {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        write(&mut w)?;
+        w.flush()?;
+        let file = w
+            .into_inner()
+            .map_err(|e| anyhow::anyhow!("checkpoint flush: {e}"))?;
+        file.sync_all()?;
+        Ok(())
+    })();
+    if let Err(e) = result {
+        let _ = std::fs::remove_file(&tmp); // don't leave a truncated file
+        return Err(e);
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Write a `(shape, data)` tensor list: u64 count, then per tensor u64
+/// rank, u64 dims, f32 LE data.  The byte layout is exactly the HPGNNW01
+/// body, reused by the HPGNNS01 session snapshot.
+fn write_tensors<W: std::io::Write>(
+    w: &mut W,
+    tensors: &[(Vec<usize>, Vec<f32>)],
+) -> anyhow::Result<()> {
+    w.write_all(&(tensors.len() as u64).to_le_bytes())?;
+    for (shape, data) in tensors {
+        w.write_all(&(shape.len() as u64).to_le_bytes())?;
+        for &d in shape {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        for &x in data {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+fn read_u64(bytes: &[u8], off: &mut usize) -> anyhow::Result<u64> {
+    anyhow::ensure!(*off + 8 <= bytes.len(), "truncated checkpoint");
+    let v = u64::from_le_bytes(bytes[*off..*off + 8].try_into().unwrap());
+    *off += 8;
+    Ok(v)
+}
+
+/// Inverse of [`write_tensors`]; validates plausibility bounds so corrupt
+/// files fail loudly instead of allocating absurd buffers.
+fn read_tensors(bytes: &[u8], off: &mut usize) -> anyhow::Result<Vec<(Vec<usize>, Vec<f32>)>> {
+    let count = read_u64(bytes, off)? as usize;
+    anyhow::ensure!(count <= 1024, "implausible tensor count {count}");
+    let mut tensors = Vec::with_capacity(count);
+    for _ in 0..count {
+        let ndims = read_u64(bytes, off)? as usize;
+        anyhow::ensure!(ndims <= 8, "implausible rank {ndims}");
+        let mut shape = Vec::with_capacity(ndims);
+        for _ in 0..ndims {
+            shape.push(read_u64(bytes, off)? as usize);
+        }
+        // Checked product: corrupt dims must error, not overflow.
+        let elems: usize = shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .ok_or_else(|| anyhow::anyhow!("implausible tensor shape {shape:?}"))?;
+        let nbytes = elems
+            .checked_mul(4)
+            .ok_or_else(|| anyhow::anyhow!("implausible tensor shape {shape:?}"))?;
+        anyhow::ensure!(nbytes <= bytes.len() - *off, "truncated tensor data");
+        let mut data = Vec::with_capacity(elems);
+        for i in 0..elems {
+            let s = *off + i * 4;
+            data.push(f32::from_le_bytes(bytes[s..s + 4].try_into().unwrap()));
+        }
+        *off += elems * 4;
+        tensors.push((shape, data));
+    }
+    Ok(tensors)
+}
+
+fn write_str<W: std::io::Write>(w: &mut W, s: &str) -> anyhow::Result<()> {
+    // Mirror read_str's cap: a name save accepts must be loadable again.
+    anyhow::ensure!(s.len() <= 256, "checkpoint string too long: {s:?}");
+    w.write_all(&(s.len() as u64).to_le_bytes())?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_str(bytes: &[u8], off: &mut usize) -> anyhow::Result<String> {
+    let len = read_u64(bytes, off)? as usize;
+    anyhow::ensure!(len <= 256, "implausible string length {len}");
+    anyhow::ensure!(*off + len <= bytes.len(), "truncated string");
+    let s = std::str::from_utf8(&bytes[*off..*off + len])
+        .map_err(|_| anyhow::anyhow!("non-utf8 string in checkpoint"))?
+        .to_string();
+    *off += len;
+    Ok(s)
+}
+
+/// Full training-session snapshot — the `HPGNNS01` format, extending the
+/// `HPGNNW01` weight checkpoint with everything a
+/// [`TrainingSession`](crate::coordinator::TrainingSession) needs to
+/// resume bit-exactly: the optimizer state, the step counter, the RNG
+/// cursor (`seed`; batch `k` is a pure function of `(seed, k)`), and the
+/// sampler/graph identity the stream was drawn from.
+///
+/// Layout: magic `HPGNNS01`, u64 step, u64 seed, length-prefixed model,
+/// geometry, sampler, and graph strings, u8 Adam flag, the weight tensor
+/// list, and — when the flag is set — the Adam `m`/`v` tensor lists plus
+/// the f32 Adam step.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// Global step the snapshot was taken at (== batches consumed).
+    pub step: u64,
+    /// Training seed; together with `step` this is the RNG cursor.
+    pub seed: u64,
+    /// `GnnModel::as_str()` of the training model.
+    pub model: String,
+    /// Artifact geometry name the weights are shaped for.
+    pub geometry: String,
+    /// `Sampler::name()` of the training sampler (parameters included) —
+    /// a different sampler would replay a different batch stream.
+    pub sampler: String,
+    /// Training-graph fingerprint (name + |V| + |E|), same rationale.
+    pub graph: String,
+    pub weights: WeightState,
+    pub adam: Option<AdamState>,
+}
+
+const SESSION_MAGIC: &[u8; 8] = b"HPGNNS01";
+
+impl Checkpoint {
+    /// Atomically write the snapshot (write-then-rename): an interrupted
+    /// save leaves any previous snapshot at `path` intact.
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        use std::io::Write;
+        atomic_write(path, |w| {
+            w.write_all(SESSION_MAGIC)?;
+            w.write_all(&self.step.to_le_bytes())?;
+            w.write_all(&self.seed.to_le_bytes())?;
+            write_str(w, &self.model)?;
+            write_str(w, &self.geometry)?;
+            write_str(w, &self.sampler)?;
+            write_str(w, &self.graph)?;
+            w.write_all(&[self.adam.is_some() as u8])?;
+            write_tensors(w, &self.weights.tensors)?;
+            if let Some(adam) = &self.adam {
+                write_tensors(w, &adam.m)?;
+                write_tensors(w, &adam.v)?;
+                w.write_all(&adam.step.to_le_bytes())?;
+            }
+            Ok(())
+        })
+    }
+
+    /// Load and structurally validate a snapshot; semantic validation
+    /// (model/geometry/shape agreement) happens at session resume.
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Checkpoint> {
+        let bytes = std::fs::read(path)?;
+        anyhow::ensure!(bytes.len() >= 8, "checkpoint too short");
+        anyhow::ensure!(
+            &bytes[..8] == SESSION_MAGIC,
+            "bad session checkpoint magic (want HPGNNS01; HPGNNW01 files hold \
+             weights only — load them with WeightState::load)"
+        );
+        let mut off = 8usize;
+        let step = read_u64(&bytes, &mut off)?;
+        let seed = read_u64(&bytes, &mut off)?;
+        let model = read_str(&bytes, &mut off)?;
+        let geometry = read_str(&bytes, &mut off)?;
+        let sampler = read_str(&bytes, &mut off)?;
+        let graph = read_str(&bytes, &mut off)?;
+        anyhow::ensure!(off < bytes.len(), "truncated checkpoint");
+        let has_adam = bytes[off];
+        off += 1;
+        anyhow::ensure!(has_adam <= 1, "corrupt Adam flag {has_adam}");
+        let weights = WeightState { tensors: read_tensors(&bytes, &mut off)? };
+        let adam = if has_adam == 1 {
+            let m = read_tensors(&bytes, &mut off)?;
+            let v = read_tensors(&bytes, &mut off)?;
+            anyhow::ensure!(off + 4 <= bytes.len(), "truncated Adam step");
+            let step = f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+            off += 4;
+            anyhow::ensure!(
+                m.len() == weights.tensors.len() && v.len() == weights.tensors.len(),
+                "Adam moment count {}/{} does not match {} weight tensors",
+                m.len(),
+                v.len(),
+                weights.tensors.len()
+            );
+            Some(AdamState { m, v, step })
+        } else {
+            None
+        };
+        anyhow::ensure!(off == bytes.len(), "trailing bytes in checkpoint");
+        Ok(Checkpoint { step, seed, model, geometry, sampler, graph, weights, adam })
     }
 }
 
@@ -234,6 +411,74 @@ mod tests {
         w.save(&path).unwrap();
         let w2 = WeightState::load(&path).unwrap();
         assert_eq!(w.tensors, w2.tensors);
+    }
+
+    fn demo_checkpoint(adam: bool) -> Checkpoint {
+        Checkpoint {
+            step: 17,
+            seed: 42,
+            model: "gcn".into(),
+            geometry: "tiny".into(),
+            sampler: "NS(t=4, budgets=[5, 3])".into(),
+            graph: "demo |V|=400 |E|=3200".into(),
+            weights: WeightState::init_glorot(&shapes(), 8),
+            adam: adam.then(|| AdamState::zeros(&shapes())),
+        }
+    }
+
+    #[test]
+    fn session_snapshot_round_trip() {
+        let dir = std::env::temp_dir().join(format!("hpgnn-snap-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for adam in [false, true] {
+            let snap = demo_checkpoint(adam);
+            let path = dir.join(format!("s-{adam}.ckpt"));
+            snap.save(&path).unwrap();
+            // Saving again over an existing snapshot is the periodic-
+            // checkpoint path: must succeed and leave no temp file.
+            snap.save(&path).unwrap();
+            let mut tmp = path.as_os_str().to_owned();
+            tmp.push(".tmp");
+            assert!(!std::path::Path::new(&tmp).exists(), "temp file left behind");
+            let back = Checkpoint::load(&path).unwrap();
+            assert_eq!(back.step, 17);
+            assert_eq!(back.seed, 42);
+            assert_eq!(back.model, "gcn");
+            assert_eq!(back.geometry, "tiny");
+            assert_eq!(back.sampler, "NS(t=4, budgets=[5, 3])");
+            assert_eq!(back.graph, "demo |V|=400 |E|=3200");
+            assert_eq!(back.weights.tensors, snap.weights.tensors);
+            assert_eq!(back.adam.is_some(), adam);
+            if let (Some(a), Some(b)) = (&back.adam, &snap.adam) {
+                assert_eq!(a.m, b.m);
+                assert_eq!(a.v, b.v);
+                assert_eq!(a.step, b.step);
+            }
+        }
+    }
+
+    #[test]
+    fn session_snapshot_rejects_corruption() {
+        let dir = std::env::temp_dir().join(format!("hpgnn-snap2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s.ckpt");
+        demo_checkpoint(true).save(&path).unwrap();
+        // Truncation anywhere in the file fails loudly.
+        let bytes = std::fs::read(&path).unwrap();
+        for cut in [bytes.len() - 2, bytes.len() / 2, 9] {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            assert!(Checkpoint::load(&path).is_err(), "accepted {cut}-byte prefix");
+        }
+        // Trailing garbage fails too.
+        let mut padded = bytes.clone();
+        padded.extend_from_slice(&[0, 1, 2]);
+        std::fs::write(&path, &padded).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        // A weights-only HPGNNW01 file is not a session snapshot.
+        let wpath = dir.join("w.bin");
+        demo_checkpoint(false).weights.save(&wpath).unwrap();
+        let err = Checkpoint::load(&wpath).unwrap_err().to_string();
+        assert!(err.contains("HPGNNS01"), "{err}");
     }
 
     #[test]

@@ -31,6 +31,10 @@ impl Sampler for LayerwiseSampler {
         self.layer_sizes.len()
     }
 
+    fn clone_box(&self) -> Box<dyn Sampler> {
+        Box::new(self.clone())
+    }
+
     fn name(&self) -> String {
         format!("LW(t={}, sizes={:?})", self.num_targets, self.layer_sizes)
     }

@@ -92,6 +92,12 @@ pub trait Sampler: Send + Sync {
     /// Number of GNN layers the batches serve.
     fn num_layers(&self) -> usize;
 
+    /// Clone into an owned trait object.  Training sessions hold their
+    /// sampler in an `Arc` shared with the producer threads, so borrowed
+    /// `&dyn Sampler` callers (the `train()` compat path) need an owned
+    /// copy to hand over.
+    fn clone_box(&self) -> Box<dyn Sampler>;
+
     /// Draw a mini-batch from `g` with the caller's RNG.
     fn sample(&self, g: &Graph, rng: &mut Pcg64) -> MiniBatch;
 

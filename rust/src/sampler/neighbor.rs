@@ -40,6 +40,10 @@ impl Sampler for NeighborSampler {
         self.budgets.len()
     }
 
+    fn clone_box(&self) -> Box<dyn Sampler> {
+        Box::new(self.clone())
+    }
+
     fn name(&self) -> String {
         format!("NS(t={}, budgets={:?})", self.num_targets, self.budgets)
     }

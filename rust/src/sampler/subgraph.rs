@@ -107,6 +107,10 @@ impl Sampler for SubgraphSampler {
         self.num_layers
     }
 
+    fn clone_box(&self) -> Box<dyn Sampler> {
+        Box::new(self.clone())
+    }
+
     fn name(&self) -> String {
         format!("SS(budget={}, L={})", self.budget, self.num_layers)
     }

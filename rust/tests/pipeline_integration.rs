@@ -55,6 +55,9 @@ fn user_program_end_to_end() {
         r#""budgets": [5, 10], "targets": 32"#,
     );
     let (builder, params) = parse_program(&program).unwrap();
+    // Session knobs default off when the program omits them.
+    assert_eq!(params.eval_every, 0);
+    assert!(params.checkpoint.is_none());
     let design = builder.generate_design(&rt).unwrap();
     assert_eq!(design.geometry, "ns_small");
     let report = design
@@ -127,7 +130,7 @@ fn sampler_overlap_hides_preparation() {
 #[test]
 fn multi_dataset_multi_model_matrix_trains() {
     // The "framework" claim: every (model, sampler-kind) combination runs
-    // through the same API with no special-casing.
+    // through the same session API with no special-casing.
     let Some(rt) = runtime() else { return };
     for model in ["gcn", "sage"] {
         for (spec, steps) in [
@@ -144,12 +147,20 @@ fn multi_dataset_multi_model_matrix_trains() {
                 .load_input_graph(tiny_graph(8))
                 .generate_design(&rt)
                 .unwrap();
-            let report = design.start_training(&rt, steps, 0.05, false).unwrap();
+            let mut session = design.session(&rt, 0.05, false).unwrap();
+            let seen = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+            let sink = std::sync::Arc::clone(&seen);
+            session.on_step(move |_| {
+                sink.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            });
+            session.run_for(steps).unwrap();
+            let report = session.finish();
             assert_eq!(
                 report.metrics.losses.len(),
                 steps,
                 "{model} with {spec:?} did not complete"
             );
+            assert_eq!(seen.load(std::sync::atomic::Ordering::Relaxed), steps);
             assert!(report.metrics.losses.iter().all(|l| l.is_finite()));
         }
     }

@@ -1,0 +1,249 @@
+//! Session checkpoint/resume acceptance: a run snapshotted mid-stream and
+//! resumed from disk — in a fresh runtime, and through the `hp-gnn` CLI in
+//! a fresh *process* — reproduces the uninterrupted run's loss sequence
+//! bit-exactly on the reference backend.  Plus rejection paths for the
+//! `HPGNNS01` snapshot format (corruption, wrong magic, wrong geometry,
+//! optimizer mismatch).
+
+use std::sync::Arc;
+
+use hp_gnn::coordinator::{trainer::Optimizer, TrainConfig, TrainingSession};
+use hp_gnn::graph::{generator, Graph};
+use hp_gnn::runtime::Runtime;
+use hp_gnn::sampler::neighbor::NeighborSampler;
+use hp_gnn::sampler::values::GnnModel;
+use hp_gnn::sampler::Sampler;
+
+/// The "process state" a resume has to rebuild from scratch: graph,
+/// sampler, config.  Everything is a pure function of the seed, exactly as
+/// it would be after a restart.
+fn world(seed: u64) -> (Arc<Graph>, Arc<dyn Sampler>, TrainConfig) {
+    let mut g = generator::with_min_degree(
+        generator::rmat(400, 3200, Default::default(), seed),
+        1,
+        seed ^ 1,
+    );
+    g.feat_dim = 16;
+    g.num_classes = 4;
+    let sampler: Arc<dyn Sampler> = Arc::new(NeighborSampler::new(4, vec![5, 3]));
+    (Arc::new(g), sampler, TrainConfig::quick(GnnModel::Gcn, "tiny", 0))
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("hpgnn-resume-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn losses_of(rt: &Runtime, cfg: &TrainConfig, steps: usize) -> Vec<f32> {
+    let (graph, sampler, _) = world(55);
+    let mut s = TrainingSession::new(rt, graph, sampler, cfg.clone()).unwrap();
+    s.run_for(steps).unwrap();
+    let report = s.finish();
+    report.metrics.losses
+}
+
+#[test]
+fn resumed_run_reproduces_uninterrupted_losses_bit_exactly() {
+    for optimizer in [Optimizer::Sgd, Optimizer::Adam] {
+        // Uninterrupted reference run: 12 steps in one session.
+        let (_, _, mut cfg) = world(55);
+        cfg.optimizer = optimizer;
+        let rt = Runtime::reference();
+        let want = losses_of(&rt, &cfg, 12);
+        assert_eq!(want.len(), 12);
+
+        // Interrupted run: 6 steps, snapshot, drop everything.
+        let dir = temp_dir("bitexact");
+        let path = dir.join(format!("{optimizer:?}.ckpt"));
+        {
+            let (graph, sampler, _) = world(55);
+            let mut s = TrainingSession::new(&rt, graph, sampler, cfg.clone()).unwrap();
+            s.run_for(6).unwrap();
+            s.save(&path).unwrap();
+            let prefix = s.finish().metrics.losses;
+            assert_eq!(prefix, want[..6].to_vec(), "{optimizer:?} prefix diverged");
+        }
+        drop(rt);
+
+        // "Fresh process": a brand-new runtime and freshly rebuilt graph /
+        // sampler / config, with only the snapshot carried over.
+        let rt2 = Runtime::reference();
+        let (graph, sampler, _) = world(55);
+        let mut resumed = TrainingSession::resume(&rt2, graph, sampler, cfg, &path).unwrap();
+        assert_eq!(resumed.current_step(), 6);
+        resumed.run_for(6).unwrap();
+        assert_eq!(
+            resumed.metrics().losses,
+            want[6..].to_vec(),
+            "{optimizer:?} resume is not bit-exact"
+        );
+    }
+}
+
+#[test]
+fn snapshot_rejects_corruption_and_mismatches() {
+    let rt = Runtime::reference();
+    let (graph, sampler, cfg) = world(55);
+    let dir = temp_dir("reject");
+    let path = dir.join("s.ckpt");
+    {
+        let mut s =
+            TrainingSession::new(&rt, Arc::clone(&graph), Arc::clone(&sampler), cfg.clone())
+                .unwrap();
+        s.run_for(2).unwrap();
+        s.save(&path).unwrap();
+    }
+
+    // Geometry mismatch: the snapshot is shaped for "tiny".
+    let mut other = cfg.clone();
+    other.geometry = "ns_small".to_string();
+    let err =
+        TrainingSession::resume(&rt, Arc::clone(&graph), Arc::clone(&sampler), other, &path)
+            .unwrap_err()
+            .to_string();
+    assert!(err.contains("geometry"), "{err}");
+
+    // Optimizer mismatch: SGD snapshot cannot seed an Adam session.
+    let mut adam = cfg.clone();
+    adam.optimizer = Optimizer::Adam;
+    let err = TrainingSession::resume(&rt, Arc::clone(&graph), Arc::clone(&sampler), adam, &path)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("Adam"), "{err}");
+
+    // Seed mismatch: the resumed stream would not be the checkpointed one.
+    let mut reseeded = cfg.clone();
+    reseeded.seed ^= 1;
+    let err =
+        TrainingSession::resume(&rt, Arc::clone(&graph), Arc::clone(&sampler), reseeded, &path)
+            .unwrap_err()
+            .to_string();
+    assert!(err.contains("seed"), "{err}");
+
+    // Sampler mismatch: different fan-out, different stream.
+    let fatter: Arc<dyn Sampler> = Arc::new(NeighborSampler::new(8, vec![5, 3]));
+    let err = TrainingSession::resume(&rt, Arc::clone(&graph), fatter, cfg.clone(), &path)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("sampler"), "{err}");
+
+    // Graph mismatch: checkpointed weights must not continue on a graph
+    // the stream never saw.
+    let other_graph = {
+        let mut g = generator::with_min_degree(
+            generator::rmat(500, 4000, Default::default(), 55),
+            1,
+            54,
+        );
+        g.feat_dim = 16;
+        g.num_classes = 4;
+        Arc::new(g)
+    };
+    let err = TrainingSession::resume(&rt, other_graph, Arc::clone(&sampler), cfg.clone(), &path)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("graph"), "{err}");
+
+    // Truncation anywhere fails loudly.
+    let bytes = std::fs::read(&path).unwrap();
+    let cut = dir.join("cut.ckpt");
+    for end in [bytes.len() - 3, bytes.len() / 2, 12] {
+        std::fs::write(&cut, &bytes[..end]).unwrap();
+        assert!(
+            TrainingSession::resume(
+                &rt,
+                Arc::clone(&graph),
+                Arc::clone(&sampler),
+                cfg.clone(),
+                &cut
+            )
+            .is_err(),
+            "accepted a {end}-byte prefix"
+        );
+    }
+
+    // A weights-only HPGNNW01 file is not a session snapshot; the error
+    // names both formats.
+    let wpath = dir.join("w.bin");
+    {
+        let s = TrainingSession::new(&rt, Arc::clone(&graph), Arc::clone(&sampler), cfg.clone())
+            .unwrap();
+        s.weights().save(&wpath).unwrap();
+    }
+    let err = TrainingSession::resume(&rt, graph, sampler, cfg, &wpath)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("HPGNNS01"), "{err}");
+}
+
+// ---- CLI end-to-end: checkpoint in one process, resume in another ------
+
+fn write_program(path: &std::path::Path, steps: usize, eval_every: usize) {
+    let program = format!(
+        r#"{{
+  "platform": "xilinx-U250",
+  "model": {{"computation": "GCN", "hidden": [256]}},
+  "sampler": {{"type": "NeighborSampler", "budgets": [5, 10], "targets": 32}},
+  "graph": {{"dataset": "FL", "scale": 0.004, "seed": 3}},
+  "training": {{"steps": {steps}, "lr": 0.1, "eval_every": {eval_every}, "eval_batches": 1}}
+}}"#
+    );
+    std::fs::write(path, program).unwrap();
+}
+
+#[test]
+fn cli_run_resume_and_eval_every_end_to_end() {
+    let exe = env!("CARGO_BIN_EXE_hp-gnn");
+    let dir = temp_dir("cli");
+    let ckpt = dir.join("cli.ckpt");
+    let first = dir.join("first.json");
+    let full = dir.join("full.json");
+    write_program(&first, 4, 0);
+    write_program(&full, 8, 2);
+
+    // Process 1: train 4 steps, write the session snapshot.
+    let out = std::process::Command::new(exe)
+        .args(["run", first.to_str().unwrap(), "--checkpoint", ckpt.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "first run failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(ckpt.exists(), "no snapshot written");
+
+    // Process 2: resume toward the full 8-step program, with periodic
+    // evaluation from the program's training.eval_every.
+    let out = std::process::Command::new(exe)
+        .args(["run", full.to_str().unwrap(), "--resume", ckpt.to_str().unwrap()])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "resume run failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(stdout.contains("resumed at step 4"), "{stdout}");
+    assert!(stdout.contains("eval @ step 6"), "{stdout}");
+    assert!(stdout.contains("eval @ step 8"), "{stdout}");
+}
+
+#[test]
+fn cli_unknown_subcommand_fails_and_help_succeeds() {
+    let exe = env!("CARGO_BIN_EXE_hp-gnn");
+
+    let out = std::process::Command::new(exe).arg("frobnicate").output().unwrap();
+    assert!(!out.status.success(), "unknown subcommand must exit nonzero");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown subcommand") && stderr.contains("SUBCOMMANDS"), "{stderr}");
+
+    let out = std::process::Command::new(exe).output().unwrap();
+    assert!(!out.status.success(), "bare invocation must exit nonzero");
+
+    let out = std::process::Command::new(exe).arg("help").output().unwrap();
+    assert!(out.status.success(), "`hp-gnn help` must exit 0");
+    assert!(String::from_utf8_lossy(&out.stdout).contains("SUBCOMMANDS"));
+}
