@@ -6,8 +6,12 @@
 # model to HLO text and writes the manifest the runtime validates against.
 
 ARTIFACTS ?= rust/artifacts
+# bench-hotpath: full (default) or smoke (tiny geometry, 1 iteration —
+# what CI runs to validate the JSON output shape).
+BENCH_PROFILE ?= full
+BENCH_OUT ?= $(abspath BENCH_hotpath.json)
 
-.PHONY: build test check-xla fmt artifacts clean-artifacts
+.PHONY: build test check-xla fmt artifacts clean-artifacts bench-hotpath
 
 build:
 	cargo build --release
@@ -21,6 +25,12 @@ check-xla:
 
 fmt:
 	cargo fmt --check
+
+# Train-step throughput anchor: times the reference executor's kernel
+# layer against the scalar pre-kernel baseline and writes the result to
+# BENCH_hotpath.json (schema documented in README "Performance").
+bench-hotpath:
+	HOTPATH_PROFILE=$(BENCH_PROFILE) HOTPATH_OUT=$(BENCH_OUT) cargo bench --bench hotpath
 
 # Requires a python environment with jax (build time only; the rust
 # runtime never invokes python).

@@ -1,23 +1,52 @@
-//! Hot-path micro-benchmarks for the §Perf optimization pass.
+//! Hot-path benchmarks: host pipeline stages + the executed training step.
 //!
-//! Times every host-side stage of the training pipeline in isolation
-//! (sampling, edge values, layout, padding, feature synthesis, simulator,
-//! executed CPU baseline) so the perf pass can attack the top bottleneck
-//! and record before/after in EXPERIMENTS.md §Perf.
+//! Two sections:
 //!
-//! Run: `cargo bench --offline --bench hotpath`
+//! * **Host pipeline stages** (full profile only) — times every host-side
+//!   stage of the training pipeline in isolation (sampling, edge values,
+//!   layout, padding, feature synthesis, simulator, executed CPU
+//!   baseline) so the perf pass can attack the top bottleneck.
+//! * **Train-step executor** — times one full `adam_step` on the
+//!   reference backend: the pre-kernel scalar executor as the baseline,
+//!   then the tiled kernel layer at several thread counts.  Results are
+//!   written to `BENCH_hotpath.json` (see the README "Performance"
+//!   section for the schema) — the repo's perf-trajectory anchor.
+//!
+//! Run: `make bench-hotpath` (repo root) or
+//! `cargo bench --bench hotpath`.  Environment knobs:
+//!
+//! * `HOTPATH_PROFILE=full|smoke` — smoke runs one iteration on a tiny
+//!   geometry (CI uses it to keep the JSON shape from rotting).
+//! * `HOTPATH_OUT=<path>` — where to write `BENCH_hotpath.json`
+//!   (default: current directory).
 
 use hp_gnn::accel::{simulate_batch, AccelConfig, Platform, SimOptions};
 use hp_gnn::graph::datasets;
-use hp_gnn::layout::pad::{pad, EdgeOverflow};
+use hp_gnn::layout::pad::{pad, EdgeOverflow, PaddedBatch};
 use hp_gnn::layout::{index_batch, Geometry, LayoutOptions};
 use hp_gnn::repro;
+use hp_gnn::runtime::manifest::{Kind, Manifest};
+use hp_gnn::runtime::weights::AdamState;
+use hp_gnn::runtime::{inputs, Backend, ReferenceBackend, Tensor, WeightState};
 use hp_gnn::sampler::values::{attach_values, GnnModel};
 use hp_gnn::sampler::{neighbor::NeighborSampler, Sampler};
 use hp_gnn::util::bench::{black_box, Bench, BenchSet};
+use hp_gnn::util::json::Json;
 use hp_gnn::util::rng::Pcg64;
+use hp_gnn::util::threadpool::default_threads;
 
 fn main() {
+    let profile = std::env::var("HOTPATH_PROFILE").unwrap_or_else(|_| "full".to_string());
+    let out_path =
+        std::env::var("HOTPATH_OUT").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    if profile != "smoke" {
+        host_pipeline_stages();
+    }
+    train_step_bench(&profile, &out_path);
+}
+
+/// Times every host-side stage of the training pipeline in isolation.
+fn host_pipeline_stages() {
     let mut set = BenchSet::new("hotpath — host pipeline stages");
     let b = Bench::default();
     let ds = datasets::FLICKR;
@@ -90,5 +119,134 @@ fn main() {
     set.push(m, None);
 
     set.persist();
+}
+
+/// One timed configuration of the train-step executor.
+struct StepRun {
+    label: String,
+    threads: usize,
+    step_s: f64,
+}
+
+fn train_step_bench(profile: &str, out_path: &str) {
+    let mut set = BenchSet::new("hotpath — train-step executor (reference backend)");
+    let smoke = profile == "smoke";
+    // Default bench geometry: the builtin ns_medium batch (paper-scale
+    // feature dims); smoke shrinks to tiny for a sub-second CI check.
+    let geom_name = if smoke { "tiny" } else { "ns_medium" };
+    let manifest = Manifest::builtin();
+    let spec = manifest
+        .find(GnnModel::Gcn, geom_name, Kind::AdamStep)
+        .expect("builtin role")
+        .clone();
+    let geom = spec.geometry.clone();
+    let batch = PaddedBatch::synthetic(&geom, 42);
+    let weights = WeightState::init_glorot(&spec.weight_shapes, 7);
+    let adam = AdamState::zeros(&spec.weight_shapes);
+    let mut rng = Pcg64::seed_from_u64(11);
+    let features: Vec<f32> =
+        (0..geom.b[0] * geom.f[0]).map(|_| rng.f32_range(-0.5, 0.5)).collect();
+    let lits = inputs::build_inputs_opt(&spec, &batch, &features, &weights, 0.01, Some(&adam))
+        .expect("bench inputs");
+    println!(
+        "geometry {}: b {:?}, e {:?}, f {:?} ({} host threads)\n",
+        geom.name,
+        geom.b,
+        geom.e,
+        geom.f,
+        default_threads()
+    );
+
+    let bench = if smoke {
+        Bench { warmup: 0, min_samples: 1, max_samples: 1, min_time_s: 0.0 }
+    } else {
+        Bench { warmup: 1, min_samples: 3, max_samples: 12, min_time_s: 0.8 }
+    };
+    let mut time_backend = |label: &str, threads: usize, backend: ReferenceBackend| -> StepRun {
+        let exe = backend.compile(&manifest, &spec).expect("compile");
+        let m = bench.run(label, || -> Vec<Tensor> { black_box(exe.run(&lits).unwrap()) });
+        let run = StepRun { label: label.to_string(), threads, step_s: m.median_s };
+        set.push(m, Some((1.0 / run.step_s, "steps/s")));
+        run
+    };
+
+    let baseline = time_backend(
+        "scalar baseline (pre-kernel executor)",
+        1,
+        ReferenceBackend::scalar_baseline(),
+    );
+    let thread_counts: &[usize] = if smoke { &[1, 2, 8] } else { &[1, 2, 4, 8] };
+    let runs: Vec<StepRun> = thread_counts
+        .iter()
+        .map(|&t| {
+            time_backend(
+                &format!("tiled kernels, {t} thread(s)"),
+                t,
+                ReferenceBackend::with_threads(t),
+            )
+        })
+        .collect();
+    set.persist();
+
+    // --- BENCH_hotpath.json: the perf-trajectory anchor. ---
+    let samples = geom.b[geom.layers()] as f64; // target vertices per step
+    let run_json = |r: &StepRun| {
+        Json::obj(vec![
+            ("label", Json::str(r.label.clone())),
+            ("threads", Json::num(r.threads as f64)),
+            ("step_s", Json::num(r.step_s)),
+            ("steps_per_s", Json::num(1.0 / r.step_s)),
+            ("samples_per_s", Json::num(samples / r.step_s)),
+            ("speedup_vs_baseline", Json::num(baseline.step_s / r.step_s)),
+        ])
+    };
+    let doc = Json::obj(vec![
+        ("bench", Json::str("hotpath-train-step")),
+        ("schema_version", Json::num(1.0)),
+        ("profile", Json::str(profile)),
+        ("model", Json::str("gcn")),
+        ("optimizer", Json::str("adam")),
+        ("host_parallelism", Json::num(default_threads() as f64)),
+        (
+            "geometry",
+            Json::obj(vec![
+                ("name", Json::str(geom.name.clone())),
+                ("b", Json::arr(geom.b.iter().map(|&x| Json::num(x as f64)).collect())),
+                ("e", Json::arr(geom.e.iter().map(|&x| Json::num(x as f64)).collect())),
+                ("f", Json::arr(geom.f.iter().map(|&x| Json::num(x as f64)).collect())),
+            ]),
+        ),
+        ("baseline", run_json(&baseline)),
+        ("runs", Json::arr(runs.iter().map(run_json).collect())),
+    ]);
+    std::fs::write(out_path, doc.pretty()).expect("write BENCH_hotpath.json");
+
+    // Self-validate the written file so the harness can't silently rot.
+    let text = std::fs::read_to_string(out_path).expect("read back");
+    let parsed = Json::parse(&text).expect("BENCH_hotpath.json must parse");
+    for key in ["bench", "profile", "geometry", "host_parallelism", "baseline", "runs"] {
+        parsed.get(key).unwrap_or_else(|e| panic!("missing {key}: {e:?}"));
+    }
+    let runs_arr = parsed.get("runs").unwrap().as_arr().expect("runs array");
+    assert!(!runs_arr.is_empty(), "runs must not be empty");
+    for r in runs_arr {
+        assert!(r.get("step_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(r.get("threads").unwrap().as_usize().unwrap() >= 1);
+        assert!(r.get("samples_per_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+    assert!(parsed.get("baseline").unwrap().get("step_s").unwrap().as_f64().unwrap() > 0.0);
+    println!("\nwrote {out_path} (validated, {} runs)", runs_arr.len());
+
+    if let Some(best) = runs
+        .iter()
+        .min_by(|a, b| a.step_s.partial_cmp(&b.step_s).unwrap())
+    {
+        println!(
+            "best: {} — {:.1} ms/step, {:.2}x vs scalar baseline",
+            best.label,
+            best.step_s * 1e3,
+            baseline.step_s / best.step_s
+        );
+    }
     println!("\nhotpath OK");
 }

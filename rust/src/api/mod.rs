@@ -332,6 +332,7 @@ impl GeneratedDesign {
             seed: self.seed,
             layout: self.layout,
             sampler_threads: self.accel.sampler_threads.unwrap_or(2),
+            compute_threads: crate::util::threadpool::default_threads(),
             overflow: match self.abstraction.sampler {
                 SamplerSpec::Neighbor { .. } => EdgeOverflow::Error,
                 _ => EdgeOverflow::TruncateKeepSelf,
@@ -456,7 +457,7 @@ mod tests {
     fn empty_runtime() -> Runtime {
         Runtime::with_backend(
             crate::runtime::Manifest::from_specs(Vec::new()).unwrap(),
-            Box::new(crate::runtime::ReferenceBackend),
+            Box::new(crate::runtime::ReferenceBackend::default()),
         )
     }
 

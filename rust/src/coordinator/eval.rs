@@ -42,7 +42,8 @@ pub fn evaluate(
     batches: usize,
     eval_seed: u64,
 ) -> anyhow::Result<EvalReport> {
-    let exe = runtime.compile_role(cfg.model, &cfg.geometry, Kind::Forward)?;
+    let exe =
+        runtime.compile_role_with(cfg.model, &cfg.geometry, Kind::Forward, &cfg.exec_options())?;
     evaluate_with(&exe, graph, sampler, cfg, weights, batches, eval_seed)
 }
 
@@ -95,15 +96,70 @@ pub fn evaluate_with(
         let real_targets = padded.real_b[ll];
         for i in 0..real_targets {
             let row = &logits[i * num_classes..(i + 1) * num_classes];
+            total += 1;
+            // A diverged model can emit NaN logits; count the row as
+            // incorrect rather than aborting the whole evaluation (and
+            // use total_cmp so no comparison can ever panic).
+            if row.iter().any(|x| x.is_nan()) {
+                continue;
+            }
             let pred = row
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .map(|(j, _)| j)
                 .unwrap();
             correct += usize::from(pred as i32 == padded.labels[i]);
-            total += 1;
         }
     }
     Ok(EvalReport { correct, total, batches })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::sampler::neighbor::NeighborSampler;
+    use crate::sampler::values::GnnModel;
+
+    fn setup() -> (Runtime, Graph, NeighborSampler, TrainConfig) {
+        let mut g = generator::with_min_degree(
+            generator::rmat(400, 3200, Default::default(), 5),
+            1,
+            6,
+        );
+        g.feat_dim = 16;
+        g.num_classes = 4;
+        let sampler = NeighborSampler::new(4, vec![5, 3]);
+        let cfg = TrainConfig::quick(GnnModel::Gcn, "tiny", 0);
+        (Runtime::reference(), g, sampler, cfg)
+    }
+
+    #[test]
+    fn evaluate_scores_real_targets() {
+        let (rt, g, sampler, cfg) = setup();
+        let exe = rt.compile_role(cfg.model, &cfg.geometry, Kind::Forward).unwrap();
+        let weights = WeightState::init_glorot(&exe.spec.weight_shapes, 3);
+        let report = evaluate(&rt, &g, &sampler, &cfg, &weights, 2, 99).unwrap();
+        assert_eq!(report.batches, 2);
+        assert!(report.total > 0);
+        assert!(report.correct <= report.total);
+    }
+
+    #[test]
+    fn nan_logits_count_as_incorrect_instead_of_panicking() {
+        let (rt, g, sampler, cfg) = setup();
+        let exe = rt.compile_role(cfg.model, &cfg.geometry, Kind::Forward).unwrap();
+        // NaN weights force NaN logits on every row — a diverged model.
+        let mut weights = WeightState::init_glorot(&exe.spec.weight_shapes, 3);
+        for (_, t) in weights.tensors.iter_mut() {
+            for x in t.iter_mut() {
+                *x = f32::NAN;
+            }
+        }
+        let report =
+            evaluate_with(&exe, &g, &sampler, &cfg, &weights, 2, 99).unwrap();
+        assert!(report.total > 0);
+        assert_eq!(report.correct, 0, "NaN rows must score as incorrect");
+    }
 }

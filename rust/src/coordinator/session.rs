@@ -202,7 +202,7 @@ impl<'rt> TrainingSession<'rt> {
             Optimizer::Sgd => Kind::TrainStep,
             Optimizer::Adam => Kind::AdamStep,
         };
-        let exe = runtime.compile_role(cfg.model, &cfg.geometry, kind)?;
+        let exe = runtime.compile_role_with(cfg.model, &cfg.geometry, kind, &cfg.exec_options())?;
         let compile_s = compile_t.secs();
         let geom = exe.spec.geometry.clone();
         anyhow::ensure!(
@@ -543,8 +543,12 @@ impl<'rt> TrainingSession<'rt> {
     /// training determinism.
     pub fn evaluate(&mut self, batches: usize) -> anyhow::Result<EvalReport> {
         if self.forward.is_none() {
-            self.forward =
-                Some(self.runtime.compile_role(self.cfg.model, &self.cfg.geometry, Kind::Forward)?);
+            self.forward = Some(self.runtime.compile_role_with(
+                self.cfg.model,
+                &self.cfg.geometry,
+                Kind::Forward,
+                &self.cfg.exec_options(),
+            )?);
         }
         let report = eval::evaluate_with(
             self.forward.as_ref().expect("just compiled"),

@@ -56,6 +56,12 @@ pub struct TrainConfig {
     pub seed: u64,
     pub layout: LayoutOptions,
     pub sampler_threads: usize,
+    /// Worker threads for the runtime's compute kernels (the reference
+    /// executor's dense/sparse kernel layer).  Purely a throughput knob:
+    /// losses and weights are bit-identical at every setting, and `1`
+    /// reproduces the fully sequential executor.  Defaults to all
+    /// available cores.
+    pub compute_threads: usize,
     pub overflow: EdgeOverflow,
     /// Simulate each batch on the accelerator model (Table 7's CPU-FPGA
     /// timing path); None disables.
@@ -94,6 +100,7 @@ impl Default for TrainConfig {
             seed: 7,
             layout: LayoutOptions::all(),
             sampler_threads: 2,
+            compute_threads: crate::util::threadpool::default_threads(),
             overflow: EdgeOverflow::TruncateKeepSelf,
             simulate: None,
             log_every: 0,
@@ -105,6 +112,12 @@ impl Default for TrainConfig {
 impl TrainConfig {
     pub fn quick(model: GnnModel, geometry: &str, steps: usize) -> TrainConfig {
         TrainConfig { model, geometry: geometry.to_string(), steps, ..Default::default() }
+    }
+
+    /// Backend execution options for this config — what the session and
+    /// evaluator hand to [`crate::runtime::Runtime::compile_role_with`].
+    pub fn exec_options(&self) -> crate::runtime::ExecOptions {
+        crate::runtime::ExecOptions { compute_threads: Some(self.compute_threads.max(1)) }
     }
 }
 

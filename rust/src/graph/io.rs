@@ -10,12 +10,18 @@ use super::{Graph, Vid};
 const BIN_MAGIC: &[u8; 8] = b"HPGNNG01";
 
 /// Load a whitespace-separated edge list. Vertex count is
-/// `max id + 1` unless a `# vertices: N` header is present.
+/// `max id + 1` unless a `# vertices: N` header is present; a header
+/// smaller than what the edges reference is rejected (naming the
+/// offending edge), never silently widened.  An empty edge list with no
+/// header is the empty graph.
 pub fn load_edge_list(path: &Path) -> anyhow::Result<Graph> {
     let file = std::fs::File::open(path)?;
     let reader = std::io::BufReader::new(file);
     let mut edges: Vec<(Vid, Vid)> = Vec::new();
     let mut declared_vertices: Option<usize> = None;
+    // The edge carrying the largest endpoint id, with its line number —
+    // what the error names when a declared header is too small.
+    let mut max_edge: Option<(Vid, Vid, usize)> = None;
     for (lineno, line) in reader.lines().enumerate() {
         let line = line?;
         let trimmed = line.trim();
@@ -37,10 +43,27 @@ pub fn load_edge_list(path: &Path) -> anyhow::Result<Graph> {
             .next()
             .ok_or_else(|| anyhow::anyhow!("line {}: missing dst", lineno + 1))?
             .parse()?;
+        match max_edge {
+            Some((mu, mv, _)) if mu.max(mv) >= u.max(v) => {}
+            _ => max_edge = Some((u, v, lineno + 1)),
+        }
         edges.push((u, v));
     }
-    let max_id = edges.iter().map(|&(u, v)| u.max(v)).max().unwrap_or(0) as usize;
-    let n = declared_vertices.unwrap_or(max_id + 1).max(max_id + 1);
+    let n = match (declared_vertices, max_edge) {
+        (Some(n), Some((u, v, line))) => {
+            let max_id = u.max(v) as usize;
+            anyhow::ensure!(
+                max_id < n,
+                "line {line}: edge `{u} {v}` references vertex {max_id} but \
+                 the `# vertices:` header declares only {n}"
+            );
+            n
+        }
+        (Some(n), None) => n,
+        (None, Some((u, v, _))) => u.max(v) as usize + 1,
+        // No edges, no header: the empty graph (not a phantom vertex 0).
+        (None, None) => 0,
+    };
     let g = Graph::from_edges(n, &edges);
     g.validate()?;
     Ok(g)
@@ -78,6 +101,11 @@ pub fn save_binary(g: &Graph, path: &Path) -> anyhow::Result<()> {
 }
 
 /// Load the binary format written by [`save_binary`].
+///
+/// All size arithmetic is checked: an adversarial header whose counts
+/// would wrap the expected-size computation (and so slip past the length
+/// check into a panic or a huge allocation) is rejected up front, the
+/// same hardening the `HPGNNS01` checkpoint loader applies.
 pub fn load_binary(path: &Path) -> anyhow::Result<Graph> {
     let mut bytes = Vec::new();
     std::fs::File::open(path)?.read_to_end(&mut bytes)?;
@@ -90,23 +118,31 @@ pub fn load_binary(path: &Path) -> anyhow::Result<Graph> {
         off += 8;
         Ok(v)
     };
-    let n = read_u64(&bytes)? as usize;
-    let e = read_u64(&bytes)? as usize;
+    let n64 = read_u64(&bytes)?;
+    let e64 = read_u64(&bytes)?;
     let feat_dim = read_u64(&bytes)? as usize;
     let num_classes = read_u64(&bytes)? as usize;
-    let need = off + (n + 1) * 8 + e * 4;
+    let oversized = || anyhow::anyhow!("header counts overflow (|V|={n64}, |E|={e64})");
+    let n = usize::try_from(n64).map_err(|_| oversized())?;
+    let e = usize::try_from(e64).map_err(|_| oversized())?;
+    let row_bytes = n
+        .checked_add(1)
+        .and_then(|r| r.checked_mul(8))
+        .ok_or_else(oversized)?;
+    let need = e
+        .checked_mul(4)
+        .and_then(|adj| adj.checked_add(row_bytes))
+        .and_then(|body| body.checked_add(off))
+        .ok_or_else(oversized)?;
     anyhow::ensure!(bytes.len() == need, "size mismatch: have {}, want {need}", bytes.len());
-    let mut row_ptr = Vec::with_capacity(n + 1);
-    for i in 0..=n {
-        let start = off + i * 8;
-        row_ptr.push(u64::from_le_bytes(bytes[start..start + 8].try_into().unwrap()) as usize);
-    }
-    let adj_off = off + (n + 1) * 8;
-    let mut adj = Vec::with_capacity(e);
-    for i in 0..e {
-        let start = adj_off + i * 4;
-        adj.push(u32::from_le_bytes(bytes[start..start + 4].try_into().unwrap()));
-    }
+    let row_ptr: Vec<usize> = bytes[off..off + row_bytes]
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+        .collect();
+    let adj: Vec<Vid> = bytes[off + row_bytes..]
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
     let g = Graph { row_ptr, adj, feat_dim, num_classes, name: String::new() };
     g.validate()?;
     Ok(g)
@@ -174,5 +210,58 @@ mod tests {
         let path = tmpdir().join("garb.txt");
         std::fs::write(&path, "0 x\n").unwrap();
         assert!(load_edge_list(&path).is_err());
+    }
+
+    #[test]
+    fn text_rejects_undersized_header_naming_the_edge() {
+        let path = tmpdir().join("undersized.txt");
+        std::fs::write(&path, "# vertices: 3\n0 1\n2 9\n1 0\n").unwrap();
+        let err = load_edge_list(&path).unwrap_err().to_string();
+        assert!(err.contains("2 9"), "{err}");
+        assert!(err.contains("line 3"), "{err}");
+        assert!(err.contains("9") && err.contains("3"), "{err}");
+    }
+
+    #[test]
+    fn text_empty_edge_list_is_the_empty_graph() {
+        let path = tmpdir().join("empty.txt");
+        std::fs::write(&path, "# just a comment\n\n").unwrap();
+        let g = load_edge_list(&path).unwrap();
+        assert_eq!(g.num_vertices(), 0, "no phantom vertex");
+        assert_eq!(g.num_edges(), 0);
+
+        // With a header, the declared isolated vertices survive.
+        let path = tmpdir().join("empty-header.txt");
+        std::fs::write(&path, "# vertices: 5\n").unwrap();
+        let g = load_edge_list(&path).unwrap();
+        assert_eq!(g.num_vertices(), 5);
+        assert_eq!(g.num_edges(), 0);
+    }
+
+    #[test]
+    fn binary_rejects_overflowing_header_counts() {
+        // Adversarial header: |V| = u64::MAX would wrap `(n + 1) * 8` in
+        // unchecked arithmetic and slip past the size check.
+        for (n, e) in [
+            (u64::MAX, 0u64),
+            (u64::MAX / 8, 0),
+            (0, u64::MAX),
+            (u64::MAX, u64::MAX),
+        ] {
+            let mut bytes = Vec::new();
+            bytes.extend_from_slice(BIN_MAGIC);
+            bytes.extend_from_slice(&n.to_le_bytes());
+            bytes.extend_from_slice(&e.to_le_bytes());
+            bytes.extend_from_slice(&16u64.to_le_bytes()); // feat_dim
+            bytes.extend_from_slice(&4u64.to_le_bytes()); // num_classes
+            bytes.extend_from_slice(&[0u8; 8]); // some body bytes
+            let path = tmpdir().join("overflow.bin");
+            std::fs::write(&path, &bytes).unwrap();
+            let err = load_binary(&path).unwrap_err().to_string();
+            assert!(
+                err.contains("overflow") || err.contains("size mismatch"),
+                "|V|={n} |E|={e}: {err}"
+            );
+        }
     }
 }

@@ -44,6 +44,46 @@ pub struct PaddedBatch {
     pub vertices_traversed: usize,
 }
 
+impl PaddedBatch {
+    /// Deterministic synthetic batch filling `geom` exactly — random
+    /// edges with a sprinkle of padding (`val == 0`) edges and masked-out
+    /// targets.  Test/bench support (the kernel-parity suite and the
+    /// hotpath train-step bench share it); real batches come from
+    /// [`pad`].
+    pub fn synthetic(geom: &Geometry, seed: u64) -> PaddedBatch {
+        let mut rng = crate::util::rng::Pcg64::seed_from_u64(seed);
+        let ll = geom.layers();
+        let mut src = Vec::with_capacity(ll);
+        let mut dst = Vec::with_capacity(ll);
+        let mut val = Vec::with_capacity(ll);
+        let mut self_idx = Vec::with_capacity(ll);
+        for l in 0..ll {
+            let (b_in, b_out, e) = (geom.b[l], geom.b[l + 1], geom.e[l]);
+            src.push((0..e).map(|_| rng.index(b_in) as i32).collect::<Vec<i32>>());
+            dst.push((0..e).map(|_| rng.index(b_out) as i32).collect::<Vec<i32>>());
+            val.push(
+                (0..e)
+                    .map(|i| if i % 7 == 0 { 0.0 } else { rng.f32_range(0.05, 1.0) })
+                    .collect::<Vec<f32>>(),
+            );
+            self_idx.push((0..b_out).map(|_| rng.index(b_in) as i32).collect::<Vec<i32>>());
+        }
+        let classes = geom.num_classes();
+        PaddedBatch {
+            geom: geom.clone(),
+            src,
+            dst,
+            val,
+            self_idx,
+            labels: (0..geom.b[ll]).map(|_| rng.index(classes) as i32).collect(),
+            mask: (0..geom.b[ll]).map(|i| if i % 9 == 0 { 0.0 } else { 1.0 }).collect(),
+            real_b: geom.b.clone(),
+            real_e: geom.e.clone(),
+            vertices_traversed: geom.b.iter().sum(),
+        }
+    }
+}
+
 /// Pad `batch` (with target labels) to `geom`.
 pub fn pad(
     batch: &IndexedBatch,

@@ -224,6 +224,11 @@ fn cmd_train(argv: Vec<String>) -> anyhow::Result<()> {
             .flag("lr", "0.05", "learning rate")
             .flag("seed", "7", "PRNG seed")
             .flag("threads", "2", "sampler threads")
+            .flag(
+                "compute-threads",
+                "",
+                "kernel worker threads for the executor (default: all cores)",
+            )
             .flag("optimizer", "sgd", "sgd | adam")
             .flag("save", "", "Save_model(): final weights path (empty = no save)")
             .flag("eval-batches", "", "held-out eval batches (also run once after training)")
@@ -261,6 +266,9 @@ fn cmd_train(argv: Vec<String>) -> anyhow::Result<()> {
     let steps = args.usize("steps");
     let mut cfg = design.train_config(steps, args.f32("lr"), args.on("simulate"));
     cfg.sampler_threads = args.usize("threads");
+    if let Some(v) = opt_usize_flag(&args, "compute-threads")? {
+        cfg.compute_threads = v.max(1);
+    }
     cfg.optimizer = match args.get("optimizer") {
         "sgd" => Optimizer::Sgd,
         "adam" => Optimizer::Adam,

@@ -18,6 +18,18 @@
 use super::manifest::{ArtifactSpec, Manifest};
 use super::tensor::Tensor;
 
+/// Per-compilation execution options a caller may request from a
+/// [`Backend`].  Backends honor what applies to them and ignore the rest
+/// (the PJRT path has no host kernel layer, so it ignores
+/// `compute_threads`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecOptions {
+    /// Worker threads for host-side compute kernels (the reference
+    /// executor's [`super::kernels`] layer).  `None` keeps the backend's
+    /// own default; results are bit-identical at every setting.
+    pub compute_threads: Option<usize>,
+}
+
 /// An execution engine that can instantiate manifest artifacts.
 pub trait Backend {
     /// Human-readable backend name ("reference", "xla").
@@ -27,6 +39,18 @@ pub trait Backend {
     /// for backends that load compiled objects; the reference backend
     /// executes straight from the spec.
     fn compile(&self, manifest: &Manifest, spec: &ArtifactSpec) -> anyhow::Result<Box<dyn Executor>>;
+
+    /// [`compile`](Backend::compile) with caller-requested [`ExecOptions`].
+    /// The default implementation ignores the options.
+    fn compile_opts(
+        &self,
+        manifest: &Manifest,
+        spec: &ArtifactSpec,
+        opts: &ExecOptions,
+    ) -> anyhow::Result<Box<dyn Executor>> {
+        let _ = opts;
+        self.compile(manifest, spec)
+    }
 }
 
 /// A compiled (or interpreted) artifact ready to run.

@@ -9,7 +9,7 @@
 
 use std::path::Path;
 
-use super::backend::{Backend, Executor};
+use super::backend::{Backend, ExecOptions, Executor};
 use super::manifest::{ArtifactSpec, Manifest};
 use super::reference::ReferenceBackend;
 use super::tensor::Tensor;
@@ -25,7 +25,7 @@ impl Runtime {
     /// the pure-Rust reference backend.  Works on a clean machine.
     pub fn reference() -> Runtime {
         Runtime {
-            backend: Box::new(ReferenceBackend),
+            backend: Box::new(ReferenceBackend::default()),
             manifest: Manifest::builtin(),
         }
     }
@@ -72,9 +72,16 @@ impl Runtime {
     /// Instantiate one artifact (slow on compiled backends — once per
     /// process per artifact).
     pub fn compile(&self, name: &str) -> anyhow::Result<Executable> {
+        self.compile_with(name, &ExecOptions::default())
+    }
+
+    /// [`compile`](Runtime::compile) with caller-requested execution
+    /// options (e.g. the kernel thread count from
+    /// `TrainConfig::compute_threads`).
+    pub fn compile_with(&self, name: &str, opts: &ExecOptions) -> anyhow::Result<Executable> {
         let spec = self.manifest.get(name)?.clone();
         let t = crate::util::stats::Timer::start();
-        let exec = self.backend.compile(&self.manifest, &spec)?;
+        let exec = self.backend.compile_opts(&self.manifest, &spec, opts)?;
         log::info!("[{}] compiled {name} in {:.2}s", self.backend.name(), t.secs());
         Ok(Executable { exec, spec })
     }
@@ -86,8 +93,19 @@ impl Runtime {
         geometry: &str,
         kind: super::manifest::Kind,
     ) -> anyhow::Result<Executable> {
+        self.compile_role_with(model, geometry, kind, &ExecOptions::default())
+    }
+
+    /// [`compile_role`](Runtime::compile_role) with execution options.
+    pub fn compile_role_with(
+        &self,
+        model: crate::sampler::values::GnnModel,
+        geometry: &str,
+        kind: super::manifest::Kind,
+        opts: &ExecOptions,
+    ) -> anyhow::Result<Executable> {
         let name = self.manifest.find(model, geometry, kind)?.name.clone();
-        self.compile(&name)
+        self.compile_with(&name, opts)
     }
 }
 
@@ -157,7 +175,7 @@ fn default_backend() -> anyhow::Result<Box<dyn Backend>> {
     }
     #[cfg(not(feature = "xla"))]
     {
-        Ok(Box::new(ReferenceBackend))
+        Ok(Box::new(ReferenceBackend::default()))
     }
 }
 

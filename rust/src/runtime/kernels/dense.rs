@@ -1,0 +1,326 @@
+//! Blocked, cache-tiled dense matmul kernels (plus the transposed
+//! variants backprop needs).
+//!
+//! All matrices are row-major f32.  Every tiled kernel is bit-identical
+//! to its `naive_*` oracle at every thread count: parallelism partitions
+//! output rows only, and cache blocks over a reduction dimension are
+//! visited in ascending order, so each output element sees the exact
+//! accumulation sequence of the scalar loop (see the module invariant in
+//! [`super`]).
+
+use super::{par_row_tiles, Kernels};
+
+/// Reduction-dimension cache block for [`matmul_bias`]: `K_BLOCK` rows of
+/// `W` (`K_BLOCK × n` f32) stay hot while a tile of output rows streams
+/// past.  Blocks are visited in ascending `k` order — order-preserving.
+const K_BLOCK: usize = 128;
+
+/// `Z[m×n] = A[m×k] @ W[k×n] + bias[n]` — the layer Update template.
+///
+/// Zero entries of `A` are skipped (ReLU-sparse activations, zero
+/// padding); the bias is added after the full accumulation, matching the
+/// scalar loop.
+pub fn matmul_bias(
+    a: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    kp: &Kernels,
+) -> Vec<f32> {
+    if kp.naive {
+        return naive_matmul_bias(a, w, bias, m, k, n);
+    }
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(bias.len(), n);
+    let mut out = vec![0.0f32; m * n];
+    par_row_tiles(kp.threads, m, n, 2 * m * k * n, &mut out, |r0, r1, tile| {
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + K_BLOCK).min(k);
+            for i in r0..r1 {
+                let arow = &a[i * k + k0..i * k + k1];
+                let zrow = &mut tile[(i - r0) * n..(i - r0 + 1) * n];
+                for (dk, &av) in arow.iter().enumerate() {
+                    if av != 0.0 {
+                        let wrow = &w[(k0 + dk) * n..(k0 + dk + 1) * n];
+                        for (z, &wv) in zrow.iter_mut().zip(wrow) {
+                            *z += av * wv;
+                        }
+                    }
+                }
+            }
+            k0 = k1;
+        }
+        for i in r0..r1 {
+            let zrow = &mut tile[(i - r0) * n..(i - r0 + 1) * n];
+            for (z, &bv) in zrow.iter_mut().zip(bias) {
+                *z += bv;
+            }
+        }
+    });
+    out
+}
+
+/// Scalar oracle for [`matmul_bias`] — the pre-kernel Update loop.
+pub fn naive_matmul_bias(
+    a: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let zrow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                let wrow = &w[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    zrow[j] += av * wrow[j];
+                }
+            }
+        }
+        for j in 0..n {
+            zrow[j] += bias[j];
+        }
+    }
+    out
+}
+
+/// `G[k×n] = A[m×k]ᵀ @ B[m×n]` — the weight gradient `dW = catᵀ @ dz`.
+///
+/// The reduction runs over the `m` batch rows in ascending order; threads
+/// partition the `k` output rows.  Zero entries of `A` are skipped.
+pub fn matmul_at_b(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, kp: &Kernels) -> Vec<f32> {
+    if kp.naive {
+        return naive_matmul_at_b(a, b, m, k, n);
+    }
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    let mut out = vec![0.0f32; k * n];
+    par_row_tiles(kp.threads, k, n, 2 * m * k * n, &mut out, |r0, r1, tile| {
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let brow = &b[i * n..(i + 1) * n];
+            for kk in r0..r1 {
+                let av = arow[kk];
+                if av != 0.0 {
+                    let orow = &mut tile[(kk - r0) * n..(kk - r0 + 1) * n];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+/// Scalar oracle for [`matmul_at_b`] — the pre-kernel `dW` loop.
+pub fn naive_matmul_at_b(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; k * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av != 0.0 {
+                let orow = &mut out[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `G[m×k] = A[m×n] @ B[k×n]ᵀ` — the input gradient `dcat = dz @ Wᵀ`.
+///
+/// `B` is transposed once up front so the inner loop is an order-
+/// preserving axpy (the scalar oracle's dot product, reduction over `n`
+/// ascending, but vectorizable); threads partition the `m` output rows.
+/// No zero-skip here: the scalar dot loop never had one, and keeping the
+/// exact same multiply/add sequence preserves oracle bit-identity even
+/// for non-finite operands (`0 · ∞ = NaN` must surface identically).
+pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, kp: &Kernels) -> Vec<f32> {
+    if kp.naive {
+        return naive_matmul_a_bt(a, b, m, n, k);
+    }
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    let mut bt = vec![0.0f32; n * k];
+    for kk in 0..k {
+        for j in 0..n {
+            bt[j * k + kk] = b[kk * n + j];
+        }
+    }
+    let mut out = vec![0.0f32; m * k];
+    par_row_tiles(kp.threads, m, k, 2 * m * k * n, &mut out, |r0, r1, tile| {
+        for i in r0..r1 {
+            let arow = &a[i * n..(i + 1) * n];
+            let orow = &mut tile[(i - r0) * k..(i - r0 + 1) * k];
+            for (j, &av) in arow.iter().enumerate() {
+                let btrow = &bt[j * k..(j + 1) * k];
+                for (o, &bv) in orow.iter_mut().zip(btrow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    });
+    out
+}
+
+/// Scalar oracle for [`matmul_a_bt`] — the pre-kernel `dcat` dot loop.
+pub fn naive_matmul_a_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * k];
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        let orow = &mut out[i * k..(i + 1) * k];
+        for kk in 0..k {
+            let brow = &b[kk * n..(kk + 1) * n];
+            let mut acc = 0.0f32;
+            for j in 0..n {
+                acc += arow[j] * brow[j];
+            }
+            orow[kk] = acc;
+        }
+    }
+    out
+}
+
+/// `s[n] = Σ_i A[i][·]` — the bias gradient `db` (column sums, reduction
+/// over rows ascending; threads partition columns).
+pub fn col_sums(a: &[f32], m: usize, n: usize, kp: &Kernels) -> Vec<f32> {
+    if kp.naive {
+        return naive_col_sums(a, m, n);
+    }
+    debug_assert_eq!(a.len(), m * n);
+    let mut out = vec![0.0f32; n];
+    par_row_tiles(kp.threads, n, 1, m * n, &mut out, |c0, c1, tile| {
+        for i in 0..m {
+            let arow = &a[i * n..(i + 1) * n];
+            for c in c0..c1 {
+                tile[c - c0] += arow[c];
+            }
+        }
+    });
+    out
+}
+
+/// Scalar oracle for [`col_sums`].
+pub fn naive_col_sums(a: &[f32], m: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    for i in 0..m {
+        for j in 0..n {
+            out[j] += a[i * n + j];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Odd shapes: non-multiple-of-tile dims, single rows/cols, a dim of 1.
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (1, 7, 3),
+        (5, 8, 13),
+        (33, 17, 9),
+        (64, 1, 2),
+        (7, 129, 5),
+        (130, 300, 31),
+        (2, 257, 1),
+    ];
+
+    fn randn(rng: &mut Pcg64, len: usize, zero_every: usize) -> Vec<f32> {
+        (0..len)
+            .map(|i| {
+                if zero_every > 0 && i % zero_every == 0 {
+                    0.0
+                } else {
+                    rng.f32_range(-1.5, 1.5)
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matmul_bias_matches_naive_bitwise_across_threads() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        for &(m, k, n) in SHAPES {
+            let a = randn(&mut rng, m * k, 3); // zeros exercise the skip path
+            let w = randn(&mut rng, k * n, 0);
+            let bias = randn(&mut rng, n, 0);
+            let want = naive_matmul_bias(&a, &w, &bias, m, k, n);
+            for threads in [1, 2, 8] {
+                let kp = Kernels::with_threads(threads);
+                let got = matmul_bias(&a, &w, &bias, m, k, n, &kp);
+                assert_eq!(got, want, "({m},{k},{n}) threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_at_b_matches_naive_bitwise_across_threads() {
+        let mut rng = Pcg64::seed_from_u64(8);
+        for &(m, k, n) in SHAPES {
+            let a = randn(&mut rng, m * k, 4);
+            let b = randn(&mut rng, m * n, 0);
+            let want = naive_matmul_at_b(&a, &b, m, k, n);
+            for threads in [1, 2, 8] {
+                let kp = Kernels::with_threads(threads);
+                assert_eq!(matmul_at_b(&a, &b, m, k, n, &kp), want, "({m},{k},{n}) t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_a_bt_matches_naive_bitwise_across_threads() {
+        let mut rng = Pcg64::seed_from_u64(9);
+        for &(m, n, k) in SHAPES {
+            let a = randn(&mut rng, m * n, 5);
+            let b = randn(&mut rng, k * n, 0);
+            let want = naive_matmul_a_bt(&a, &b, m, n, k);
+            for threads in [1, 2, 8] {
+                let kp = Kernels::with_threads(threads);
+                assert_eq!(matmul_a_bt(&a, &b, m, n, k, &kp), want, "({m},{n},{k}) t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn col_sums_matches_naive_bitwise_across_threads() {
+        let mut rng = Pcg64::seed_from_u64(10);
+        for &(m, n, _) in SHAPES {
+            let a = randn(&mut rng, m * n, 0);
+            let want = naive_col_sums(&a, m, n);
+            for threads in [1, 2, 8] {
+                let kp = Kernels::with_threads(threads);
+                assert_eq!(col_sums(&a, m, n, &kp), want, "({m},{n}) t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn forced_parallel_path_is_still_bitwise_equal() {
+        // A shape big enough to clear MIN_PAR_WORK, so workers really spawn.
+        let (m, k, n) = (256, 96, 64);
+        let mut rng = Pcg64::seed_from_u64(11);
+        let a = randn(&mut rng, m * k, 2);
+        let w = randn(&mut rng, k * n, 0);
+        let bias = randn(&mut rng, n, 0);
+        let want = naive_matmul_bias(&a, &w, &bias, m, k, n);
+        for threads in [2, 3, 8] {
+            let kp = Kernels::with_threads(threads);
+            assert_eq!(matmul_bias(&a, &w, &bias, m, k, n, &kp), want, "t={threads}");
+        }
+    }
+}

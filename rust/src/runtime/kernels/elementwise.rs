@@ -1,0 +1,269 @@
+//! Elementwise and row-wise kernels: ReLU, masked softmax cross-entropy,
+//! and the SGD/Adam update rules.
+//!
+//! Elementwise ops are trivially deterministic under chunked parallelism
+//! (each element is written once, by one thread).  The softmax loss keeps
+//! the scalar reduction order: per-row terms are computed row-parallel,
+//! then folded sequentially in ascending row order — the exact `loss -=
+//! term` sequence of the scalar loop.
+
+use super::{par_row_tiles, Kernels, MIN_PAR_WORK};
+use crate::util::threadpool::par_map;
+
+/// `max(x, 0)` — hidden-layer activation.
+pub fn relu(z: &[f32], kp: &Kernels) -> Vec<f32> {
+    let threads = if kp.naive { 1 } else { kp.threads };
+    let mut out = vec![0.0f32; z.len()];
+    par_row_tiles(threads, z.len(), 1, z.len(), &mut out, |r0, r1, tile| {
+        for (o, &x) in tile.iter_mut().zip(&z[r0..r1]) {
+            *o = x.max(0.0);
+        }
+    });
+    out
+}
+
+/// ReLU backward: zero `dz` wherever the cached pre-activation `z <= 0`.
+pub fn relu_mask_inplace(dz: &mut [f32], z: &[f32], kp: &Kernels) {
+    debug_assert_eq!(dz.len(), z.len());
+    let threads = if kp.naive { 1 } else { kp.threads };
+    let n = dz.len();
+    par_row_tiles(threads, n, 1, n, dz, |r0, r1, tile| {
+        for (g, &zv) in tile.iter_mut().zip(&z[r0..r1]) {
+            if zv <= 0.0 {
+                *g = 0.0;
+            }
+        }
+    });
+}
+
+/// Masked softmax cross-entropy (model.masked_xent) and its gradient
+/// w.r.t. the logits: mean over unmasked rows, `dlogits = mask · (p -
+/// onehot) / denom`.  Row-parallel; the loss fold runs sequentially over
+/// rows ascending.
+pub fn masked_xent(
+    logits: &[f32],
+    labels: &[i32],
+    mask: &[f32],
+    classes: usize,
+    kp: &Kernels,
+) -> (f32, Vec<f32>) {
+    let rows = labels.len();
+    let denom: f32 = mask.iter().sum::<f32>().max(1.0);
+
+    if kp.naive {
+        // The pre-kernel scalar loop, verbatim.
+        let mut loss = 0.0f32;
+        let mut dlogits = vec![0.0f32; rows * classes];
+        for i in 0..rows {
+            let row = &logits[i * classes..(i + 1) * classes];
+            let drow = &mut dlogits[i * classes..(i + 1) * classes];
+            loss -= xent_row(row, labels[i], mask[i], denom, drow);
+        }
+        return (loss / denom, dlogits);
+    }
+
+    let mut dlogits = vec![0.0f32; rows * classes];
+    let mut terms = vec![0.0f32; rows];
+    // ~6 scalar ops (incl. one exp) per logit.
+    let work = rows * classes * 6;
+    let threads = kp.threads.max(1).min(rows.max(1));
+    if threads == 1 || work < MIN_PAR_WORK {
+        for i in 0..rows {
+            let row = &logits[i * classes..(i + 1) * classes];
+            let drow = &mut dlogits[i * classes..(i + 1) * classes];
+            terms[i] = xent_row(row, labels[i], mask[i], denom, drow);
+        }
+    } else {
+        let per = rows.div_ceil(threads);
+        let tiles: Vec<((usize, &mut [f32]), &mut [f32])> = dlogits
+            .chunks_mut(per * classes)
+            .enumerate()
+            .zip(terms.chunks_mut(per))
+            .collect();
+        par_map(threads, tiles, |((t, dtile), ttile)| {
+            let r0 = t * per;
+            for (r, term) in ttile.iter_mut().enumerate() {
+                let i = r0 + r;
+                let row = &logits[i * classes..(i + 1) * classes];
+                let drow = &mut dtile[r * classes..(r + 1) * classes];
+                *term = xent_row(row, labels[i], mask[i], denom, drow);
+            }
+        });
+    }
+    // Sequential fold in row order — bit-identical to the scalar loop.
+    let mut loss = 0.0f32;
+    for &t in &terms {
+        loss -= t;
+    }
+    (loss / denom, dlogits)
+}
+
+/// One row of the loss: returns the (pre-negation) loss term and fills
+/// the gradient row when the mask is nonzero.
+#[inline]
+fn xent_row(row: &[f32], label: i32, mask: f32, denom: f32, drow: &mut [f32]) -> f32 {
+    let max = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+    let lse = max + row.iter().map(|&x| (x - max).exp()).sum::<f32>().ln();
+    let y = label as usize;
+    let term = (row[y] - lse) * mask;
+    if mask != 0.0 {
+        for (j, g) in drow.iter_mut().enumerate() {
+            let p = (row[j] - lse).exp();
+            let onehot = if j == y { 1.0 } else { 0.0 };
+            *g = mask * (p - onehot) / denom;
+        }
+    }
+    term
+}
+
+/// SGD: `p' = p - lr · g`.
+pub fn sgd_update(p: &[f32], g: &[f32], lr: f32, kp: &Kernels) -> Vec<f32> {
+    debug_assert_eq!(p.len(), g.len());
+    let threads = if kp.naive { 1 } else { kp.threads };
+    let mut out = vec![0.0f32; p.len()];
+    par_row_tiles(threads, p.len(), 1, p.len() * 2, &mut out, |r0, r1, tile| {
+        for (i, o) in (r0..r1).zip(tile.iter_mut()) {
+            *o = p[i] - lr * g[i];
+        }
+    });
+    out
+}
+
+/// Adam step inputs shared across all parameter tensors of one step.
+#[derive(Debug, Clone, Copy)]
+pub struct AdamParams {
+    pub lr: f32,
+    pub b1: f32,
+    pub b2: f32,
+    pub eps: f32,
+    /// `1 - b1^t` for the step's bias correction.
+    pub bias1: f32,
+    /// `1 - b2^t`.
+    pub bias2: f32,
+}
+
+/// Adam: returns `(p', m', v')` for one parameter tensor.
+pub fn adam_update(
+    p: &[f32],
+    g: &[f32],
+    m0: &[f32],
+    v0: &[f32],
+    ap: &AdamParams,
+    kp: &Kernels,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let n = p.len();
+    debug_assert!(g.len() == n && m0.len() == n && v0.len() == n);
+    let mut np = vec![0.0f32; n];
+    let mut nm = vec![0.0f32; n];
+    let mut nv = vec![0.0f32; n];
+    let scalar = |i: usize, np: &mut f32, nm: &mut f32, nv: &mut f32| {
+        let m = ap.b1 * m0[i] + (1.0 - ap.b1) * g[i];
+        let v = ap.b2 * v0[i] + (1.0 - ap.b2) * g[i] * g[i];
+        let mhat = m / ap.bias1;
+        let vhat = v / ap.bias2;
+        *np = p[i] - ap.lr * mhat / (vhat.sqrt() + ap.eps);
+        *nm = m;
+        *nv = v;
+    };
+    let threads = if kp.naive { 1 } else { kp.threads.max(1).min(n.max(1)) };
+    // ~10 scalar ops (incl. sqrt + divides) per element.
+    if threads == 1 || n * 10 < MIN_PAR_WORK {
+        for i in 0..n {
+            let (mut pv, mut mv, mut vv) = (0.0, 0.0, 0.0);
+            scalar(i, &mut pv, &mut mv, &mut vv);
+            np[i] = pv;
+            nm[i] = mv;
+            nv[i] = vv;
+        }
+    } else {
+        let per = n.div_ceil(threads);
+        let tiles: Vec<((usize, &mut [f32]), (&mut [f32], &mut [f32]))> = np
+            .chunks_mut(per)
+            .enumerate()
+            .zip(nm.chunks_mut(per).zip(nv.chunks_mut(per)))
+            .collect();
+        par_map(threads, tiles, |((t, ptile), (mtile, vtile))| {
+            let r0 = t * per;
+            for r in 0..ptile.len() {
+                scalar(r0 + r, &mut ptile[r], &mut mtile[r], &mut vtile[r]);
+            }
+        });
+    }
+    (np, nm, nv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn relu_and_mask_match_scalar_across_threads() {
+        let mut rng = Pcg64::seed_from_u64(31);
+        let z: Vec<f32> = (0..4097).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let dz0: Vec<f32> = (0..4097).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let want_relu: Vec<f32> = z.iter().map(|&x| x.max(0.0)).collect();
+        let mut want_dz = dz0.clone();
+        for (g, &zv) in want_dz.iter_mut().zip(&z) {
+            if zv <= 0.0 {
+                *g = 0.0;
+            }
+        }
+        for threads in [1, 2, 8] {
+            let kp = Kernels::with_threads(threads);
+            assert_eq!(relu(&z, &kp), want_relu);
+            let mut dz = dz0.clone();
+            relu_mask_inplace(&mut dz, &z, &kp);
+            assert_eq!(dz, want_dz);
+        }
+    }
+
+    #[test]
+    fn masked_xent_matches_naive_bitwise_across_threads() {
+        let mut rng = Pcg64::seed_from_u64(32);
+        for (rows, classes) in [(1usize, 2usize), (7, 3), (33, 5), (1024, 16)] {
+            let logits: Vec<f32> =
+                (0..rows * classes).map(|_| rng.f32_range(-4.0, 4.0)).collect();
+            let labels: Vec<i32> = (0..rows).map(|_| rng.index(classes) as i32).collect();
+            let mask: Vec<f32> =
+                (0..rows).map(|i| if i % 3 == 0 { 0.0 } else { 1.0 }).collect();
+            let (want_loss, want_d) =
+                masked_xent(&logits, &labels, &mask, classes, &Kernels::scalar_baseline());
+            for threads in [1, 2, 8] {
+                let kp = Kernels::with_threads(threads);
+                let (loss, d) = masked_xent(&logits, &labels, &mask, classes, &kp);
+                assert_eq!(loss.to_bits(), want_loss.to_bits(), "{rows}x{classes} t={threads}");
+                assert_eq!(d, want_d);
+            }
+        }
+    }
+
+    #[test]
+    fn updates_match_scalar_across_threads() {
+        let mut rng = Pcg64::seed_from_u64(33);
+        let n = 40_000; // above the sequential threshold
+        let p: Vec<f32> = (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let g: Vec<f32> = (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let m0: Vec<f32> = (0..n).map(|_| rng.f32_range(-0.1, 0.1)).collect();
+        let v0: Vec<f32> = (0..n).map(|_| rng.f32_range(0.0, 0.1)).collect();
+        let ap = AdamParams {
+            lr: 0.05,
+            b1: 0.9,
+            b2: 0.999,
+            eps: 1e-8,
+            bias1: 1.0 - 0.9f32.powf(1.0),
+            bias2: 1.0 - 0.999f32.powf(1.0),
+        };
+        let base = Kernels::scalar_baseline();
+        let want_sgd = sgd_update(&p, &g, 0.1, &base);
+        let (wp, wm, wv) = adam_update(&p, &g, &m0, &v0, &ap, &base);
+        for threads in [1, 2, 8] {
+            let kp = Kernels::with_threads(threads);
+            assert_eq!(sgd_update(&p, &g, 0.1, &kp), want_sgd);
+            let (ap_, am, av) = adam_update(&p, &g, &m0, &v0, &ap, &kp);
+            assert_eq!(ap_, wp);
+            assert_eq!(am, wm);
+            assert_eq!(av, wv);
+        }
+    }
+}

@@ -1,0 +1,277 @@
+//! Fused CSR aggregate kernels (SpMM over the per-layer COO
+//! `src/dst/val` triples) and the GraphSAGE gather/concat/scatter.
+//!
+//! The executor's batches arrive as COO edge triples.  [`group_edges`]
+//! buckets them into CSR rows **stably** — within a row, edges keep their
+//! original COO order — so the row-parallel kernels accumulate each
+//! output element in exactly the order the scalar COO loop does (the
+//! module invariant in [`super`]).  Edges with `val == 0.0` are padding
+//! and contribute nothing, as in the scalar loops.
+
+use super::{par_row_tiles, runs_sequential, Kernels};
+
+/// COO edges grouped by one endpoint: `edges[row_ptr[r]..row_ptr[r+1]]`
+/// are the original edge indices whose key is `r`, in COO order.
+pub struct Csr {
+    pub row_ptr: Vec<usize>,
+    pub edges: Vec<u32>,
+}
+
+impl Csr {
+    pub fn rows(&self) -> usize {
+        self.row_ptr.len() - 1
+    }
+}
+
+/// Stable counting-sort of edge indices by `keys[e]` (a `dst` column for
+/// the forward aggregate, `src` for its transpose, `self_idx` for the
+/// SAGE scatter).  Callers guarantee `0 <= keys[e] < rows` — the executor
+/// validates index bounds when parsing the ABI inputs.
+pub fn group_edges(keys: &[i32], rows: usize) -> Csr {
+    let mut row_ptr = vec![0usize; rows + 1];
+    for &k in keys {
+        row_ptr[k as usize + 1] += 1;
+    }
+    for r in 0..rows {
+        row_ptr[r + 1] += row_ptr[r];
+    }
+    let mut cursor = row_ptr.clone();
+    let mut edges = vec![0u32; keys.len()];
+    for (e, &k) in keys.iter().enumerate() {
+        edges[cursor[k as usize]] = e as u32;
+        cursor[k as usize] += 1;
+    }
+    Csr { row_ptr, edges }
+}
+
+/// Fused CSR aggregate: `out[group[e]] += val[e] · x[gather[e]]` over all
+/// edges, `out` sized `rows × f`.  The gathered row `gather[e]` is read
+/// at `x[gather[e] * x_stride + x_off ..][..f]`, so the same kernel runs
+/// the forward aggregate (`group = dst`, `gather = src`, `x_stride = f`,
+/// `x_off = 0`) and the backward one (`group = src`, `gather = dst`,
+/// reading the aggregate half of a `dcat` row).
+#[allow(clippy::too_many_arguments)]
+pub fn aggregate(
+    rows: usize,
+    f: usize,
+    group: &[i32],
+    gather: &[i32],
+    val: &[f32],
+    x: &[f32],
+    x_stride: usize,
+    x_off: usize,
+    kp: &Kernels,
+) -> Vec<f32> {
+    let work = group.len() * f + rows; // one axpy per edge
+    if kp.naive || runs_sequential(kp.threads, rows, work) {
+        // The scalar COO loop is bit-identical (module invariant) and
+        // skips the CSR grouping a sequential run would never amortize.
+        return naive_aggregate(rows, f, group, gather, val, x, x_stride, x_off);
+    }
+    let csr = group_edges(group, rows);
+    let mut out = vec![0.0f32; rows * f];
+    par_row_tiles(kp.threads, rows, f, work, &mut out, |r0, r1, tile| {
+        for r in r0..r1 {
+            let orow = &mut tile[(r - r0) * f..(r - r0 + 1) * f];
+            for &e in &csr.edges[csr.row_ptr[r]..csr.row_ptr[r + 1]] {
+                let e = e as usize;
+                let v = val[e];
+                if v == 0.0 {
+                    continue; // padding edge
+                }
+                let s = gather[e] as usize;
+                let xrow = &x[s * x_stride + x_off..s * x_stride + x_off + f];
+                for (o, &xv) in orow.iter_mut().zip(xrow) {
+                    *o += v * xv;
+                }
+            }
+        }
+    });
+    out
+}
+
+/// Scalar oracle for [`aggregate`] — the pre-kernel COO loop, edges in
+/// original order.
+#[allow(clippy::too_many_arguments)]
+pub fn naive_aggregate(
+    rows: usize,
+    f: usize,
+    group: &[i32],
+    gather: &[i32],
+    val: &[f32],
+    x: &[f32],
+    x_stride: usize,
+    x_off: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * f];
+    for ((&g, &s), &v) in group.iter().zip(gather).zip(val) {
+        if v == 0.0 {
+            continue;
+        }
+        let (g, s) = (g as usize, s as usize);
+        let xrow = &x[s * x_stride + x_off..s * x_stride + x_off + f];
+        let orow = &mut out[g * f..(g + 1) * f];
+        for j in 0..f {
+            orow[j] += v * xrow[j];
+        }
+    }
+    out
+}
+
+/// SAGE concat backward: `out[idx[i]] += x[i · x_stride ..][..f]` for
+/// every row `i` (the self half of each `dcat` row scattered back to the
+/// previous layer).  Row-parallel over `out`; per output row the
+/// contributing `i` are visited ascending, matching the scalar loop.
+pub fn scatter_add_rows(
+    out: &mut [f32],
+    rows: usize,
+    f: usize,
+    idx: &[i32],
+    x: &[f32],
+    x_stride: usize,
+    kp: &Kernels,
+) {
+    let work = idx.len() * f + rows;
+    if kp.naive || runs_sequential(kp.threads, rows, work) {
+        for (i, &s) in idx.iter().enumerate() {
+            let xrow = &x[i * x_stride..i * x_stride + f];
+            let orow = &mut out[s as usize * f..(s as usize + 1) * f];
+            for j in 0..f {
+                orow[j] += xrow[j];
+            }
+        }
+        return;
+    }
+    let csr = group_edges(idx, rows);
+    par_row_tiles(kp.threads, rows, f, work, out, |r0, r1, tile| {
+        for r in r0..r1 {
+            let orow = &mut tile[(r - r0) * f..(r - r0 + 1) * f];
+            for &i in &csr.edges[csr.row_ptr[r]..csr.row_ptr[r + 1]] {
+                let xrow = &x[i as usize * x_stride..i as usize * x_stride + f];
+                for (o, &xv) in orow.iter_mut().zip(xrow) {
+                    *o += xv;
+                }
+            }
+        }
+    });
+}
+
+/// SAGE concat forward: `cat[i] = h[self_idx[i]] ‖ agg[i]` (`rows ×
+/// 2·f_in`).  Pure copies — bit-exact at any thread count trivially.
+pub fn gather_concat(
+    h: &[f32],
+    f_in: usize,
+    self_idx: &[i32],
+    agg: &[f32],
+    rows: usize,
+    kp: &Kernels,
+) -> Vec<f32> {
+    let mut cat = vec![0.0f32; rows * 2 * f_in];
+    let threads = if kp.naive { 1 } else { kp.threads };
+    par_row_tiles(threads, rows, 2 * f_in, rows * 2 * f_in, &mut cat, |r0, r1, tile| {
+        for i in r0..r1 {
+            let s = self_idx[i] as usize;
+            let row = &mut tile[(i - r0) * 2 * f_in..(i - r0 + 1) * 2 * f_in];
+            row[..f_in].copy_from_slice(&h[s * f_in..(s + 1) * f_in]);
+            row[f_in..].copy_from_slice(&agg[i * f_in..(i + 1) * f_in]);
+        }
+    });
+    cat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Random COO triples with empty rows, repeated rows and padding
+    /// (val == 0) edges.
+    fn coo(
+        rng: &mut Pcg64,
+        edges: usize,
+        rows_out: usize,
+        rows_in: usize,
+    ) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+        let group: Vec<i32> = (0..edges).map(|_| rng.index(rows_out) as i32).collect();
+        let gather: Vec<i32> = (0..edges).map(|_| rng.index(rows_in) as i32).collect();
+        let val: Vec<f32> = (0..edges)
+            .map(|e| if e % 5 == 0 { 0.0 } else { rng.f32_range(-1.0, 1.0) })
+            .collect();
+        (group, gather, val)
+    }
+
+    #[test]
+    fn aggregate_matches_naive_bitwise_across_threads() {
+        let mut rng = Pcg64::seed_from_u64(21);
+        // The last two cases clear MIN_PAR_WORK, so the CSR row-parallel
+        // path (not the sequential naive fallback) is what's compared.
+        for (edges, rows_out, rows_in, f) in [
+            (0, 4, 4, 3),
+            (1, 1, 1, 1),
+            (37, 9, 13, 5),
+            (400, 31, 17, 8),
+            (4000, 3, 64, 33),
+            (5000, 129, 257, 40),
+        ] {
+            let (group, gather, val) = coo(&mut rng, edges, rows_out, rows_in);
+            let x: Vec<f32> = (0..rows_in * f).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+            let want = naive_aggregate(rows_out, f, &group, &gather, &val, &x, f, 0);
+            for threads in [1, 2, 8] {
+                let kp = Kernels::with_threads(threads);
+                let got = aggregate(rows_out, f, &group, &gather, &val, &x, f, 0, &kp);
+                assert_eq!(got, want, "edges={edges} rows={rows_out} f={f} t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn strided_offset_gather_matches_naive() {
+        // The backward form: gather the second half of wider rows, with
+        // enough work that the parallel CSR path runs.
+        let mut rng = Pcg64::seed_from_u64(22);
+        let (f, stride, off) = (24usize, 51usize, 27usize);
+        let (group, gather, val) = coo(&mut rng, 3000, 10, 6);
+        let x: Vec<f32> = (0..6 * stride).map(|_| rng.f32_range(-2.0, 2.0)).collect();
+        let want = naive_aggregate(10, f, &group, &gather, &val, &x, stride, off);
+        for threads in [1, 2, 8] {
+            let kp = Kernels::with_threads(threads);
+            assert_eq!(aggregate(10, f, &group, &gather, &val, &x, stride, off, &kp), want);
+        }
+    }
+
+    #[test]
+    fn group_edges_is_stable() {
+        let keys = vec![2, 0, 2, 1, 2, 0];
+        let csr = group_edges(&keys, 4);
+        assert_eq!(csr.row_ptr, vec![0, 2, 3, 6, 6]);
+        assert_eq!(csr.edges, vec![1, 5, 3, 0, 2, 4]); // COO order within rows
+        assert_eq!(csr.rows(), 4);
+    }
+
+    #[test]
+    fn scatter_add_rows_matches_sequential_loop() {
+        // rows_in × f clears MIN_PAR_WORK so the grouped parallel path runs.
+        let mut rng = Pcg64::seed_from_u64(23);
+        let (rows_out, rows_in, f, stride) = (9usize, 4000usize, 20usize, 23usize);
+        let idx: Vec<i32> = (0..rows_in).map(|_| rng.index(rows_out) as i32).collect();
+        let x: Vec<f32> = (0..rows_in * stride).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let base: Vec<f32> = (0..rows_out * f).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+
+        let mut want = base.clone();
+        scatter_add_rows(&mut want, rows_out, f, &idx, &x, stride, &Kernels::scalar_baseline());
+        for threads in [1, 2, 8] {
+            let mut got = base.clone();
+            let kp = Kernels::with_threads(threads);
+            scatter_add_rows(&mut got, rows_out, f, &idx, &x, stride, &kp);
+            assert_eq!(got, want, "t={threads}");
+        }
+    }
+
+    #[test]
+    fn gather_concat_layout() {
+        let h = vec![1.0, 2.0, 3.0, 4.0]; // two rows of f_in=2
+        let agg = vec![9.0, 8.0, 7.0, 6.0];
+        let cat = gather_concat(&h, 2, &[1, 0], &agg, 2, &Kernels::with_threads(2));
+        assert_eq!(cat, vec![3.0, 4.0, 9.0, 8.0, 1.0, 2.0, 7.0, 6.0]);
+    }
+}

@@ -13,6 +13,7 @@
 pub mod backend;
 pub mod executor;
 pub mod inputs;
+pub mod kernels;
 pub mod manifest;
 pub mod reference;
 pub mod tensor;
@@ -20,7 +21,7 @@ pub mod weights;
 #[cfg(feature = "xla")]
 pub mod xla;
 
-pub use backend::{Backend, Executor};
+pub use backend::{Backend, ExecOptions, Executor};
 pub use executor::{Executable, Runtime};
 pub use manifest::{ArtifactSpec, Kind, Manifest};
 pub use reference::ReferenceBackend;

@@ -15,12 +15,20 @@
 //!   accelerator), then an SGD or Adam (b1=0.9, b2=0.999, eps=1e-8)
 //!   update with the learning rate as a runtime input.
 //!
-//! Everything is plain sequential f32 — deterministic, artifact-free, and
-//! dependency-free, so `cargo test` exercises real training end to end on
-//! a clean machine.  The PJRT path (`--features xla`) runs the identical
-//! ABI from compiled HLO.
+//! The math itself lives in [`super::kernels`]: blocked, cache-tiled
+//! dense matmuls, the fused CSR aggregate (SpMM over the per-layer
+//! `src/dst/val` triples), and the elementwise/update ops, all dispatched
+//! row-parallel over [`crate::util::threadpool::par_map`].  Results are
+//! deterministic and **bit-identical at every thread count** (kernels
+//! never tile the reduction dimension — see the invariant in
+//! [`super::kernels`]), so `cargo test` exercises real training end to
+//! end on a clean machine and the loss curve is independent of the
+//! [`ReferenceBackend::with_threads`] knob.  The PJRT path (`--features
+//! xla`) runs the identical ABI from compiled HLO.
 
-use super::backend::{Backend, Executor};
+use super::backend::{Backend, ExecOptions, Executor};
+use super::kernels::elementwise::AdamParams;
+use super::kernels::{dense, elementwise, sparse, Kernels};
 use super::manifest::{ArtifactSpec, Kind, Manifest, TensorSpec};
 use super::tensor::Tensor;
 use crate::sampler::values::GnnModel;
@@ -29,9 +37,32 @@ const ADAM_B1: f32 = 0.9;
 const ADAM_B2: f32 = 0.999;
 const ADAM_EPS: f32 = 1e-8;
 
-/// The default backend: interprets artifact specs directly.
+/// The default backend: interprets artifact specs directly, executing
+/// the math on the [`super::kernels`] layer.
+///
+/// The kernel thread count defaults to every available core
+/// ([`crate::util::threadpool::default_threads`]); `with_threads(1)`
+/// reproduces the fully sequential behavior bit-exactly (as does any
+/// other thread count — the knob only changes throughput).
 #[derive(Debug, Clone, Copy, Default)]
-pub struct ReferenceBackend;
+pub struct ReferenceBackend {
+    policy: Kernels,
+}
+
+impl ReferenceBackend {
+    /// Kernel-layer worker threads for every executor this backend
+    /// compiles (clamped to ≥ 1).
+    pub fn with_threads(threads: usize) -> ReferenceBackend {
+        ReferenceBackend { policy: Kernels::with_threads(threads) }
+    }
+
+    /// The pre-kernel scalar executor: single-threaded naive loops,
+    /// bit-identical semantics.  Kept as the measured perf baseline for
+    /// `benches/hotpath.rs`.
+    pub fn scalar_baseline() -> ReferenceBackend {
+        ReferenceBackend { policy: Kernels::scalar_baseline() }
+    }
+}
 
 impl Backend for ReferenceBackend {
     fn name(&self) -> &'static str {
@@ -66,19 +97,34 @@ impl Backend for ReferenceBackend {
                 l + 1
             );
         }
-        Ok(Box::new(ReferenceExecutor { spec: spec.clone() }))
+        Ok(Box::new(ReferenceExecutor { spec: spec.clone(), kernels: self.policy }))
+    }
+
+    fn compile_opts(
+        &self,
+        manifest: &Manifest,
+        spec: &ArtifactSpec,
+        opts: &ExecOptions,
+    ) -> anyhow::Result<Box<dyn Executor>> {
+        let mut be = *self;
+        if let Some(t) = opts.compute_threads {
+            be.policy.threads = t.max(1);
+        }
+        be.compile(manifest, spec)
     }
 }
 
 /// One instantiated artifact, interpreting its spec per batch.
 pub struct ReferenceExecutor {
     spec: ArtifactSpec,
+    kernels: Kernels,
 }
 
 impl Executor for ReferenceExecutor {
     fn run(&self, inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        let kp = &self.kernels;
         let batch = parse_inputs(&self.spec, inputs)?;
-        let fwd = forward(&self.spec, &batch)?;
+        let fwd = forward(&self.spec, &batch, kp)?;
         match self.spec.kind {
             Kind::Forward => {
                 let geom = &self.spec.geometry;
@@ -86,48 +132,43 @@ impl Executor for ReferenceExecutor {
                 Ok(vec![Tensor::f32(vec![nt, geom.num_classes()], fwd.logits)?])
             }
             Kind::TrainStep => {
-                let (loss, grads) = loss_and_grads(&self.spec, &batch, &fwd)?;
+                let (loss, grads) = loss_and_grads(&self.spec, &batch, &fwd, kp)?;
                 let mut out = Vec::with_capacity(1 + batch.params.len());
                 out.push(Tensor::scalar_f32(loss));
                 for (i, g) in grads.iter().enumerate() {
-                    let new: Vec<f32> = batch.params[i]
-                        .data
-                        .iter()
-                        .zip(g)
-                        .map(|(&p, &g)| p - batch.lr * g)
-                        .collect();
+                    let new = elementwise::sgd_update(batch.params[i].data, g, batch.lr, kp);
                     out.push(Tensor::f32(batch.params[i].shape.clone(), new)?);
                 }
                 Ok(out)
             }
             Kind::AdamStep => {
-                let (loss, grads) = loss_and_grads(&self.spec, &batch, &fwd)?;
+                let (loss, grads) = loss_and_grads(&self.spec, &batch, &fwd, kp)?;
                 let adam = batch
                     .adam
                     .as_ref()
                     .ok_or_else(|| anyhow::anyhow!("adam_step ABI missing m/v/step inputs"))?;
                 let t = adam.step + 1.0;
-                let bias1 = 1.0 - ADAM_B1.powf(t);
-                let bias2 = 1.0 - ADAM_B2.powf(t);
+                let ap = AdamParams {
+                    lr: batch.lr,
+                    b1: ADAM_B1,
+                    b2: ADAM_B2,
+                    eps: ADAM_EPS,
+                    bias1: 1.0 - ADAM_B1.powf(t),
+                    bias2: 1.0 - ADAM_B2.powf(t),
+                };
                 let n = batch.params.len();
                 let mut new_p = Vec::with_capacity(n);
                 let mut new_m = Vec::with_capacity(n);
                 let mut new_v = Vec::with_capacity(n);
                 for i in 0..n {
-                    let p = batch.params[i].data;
-                    let g = &grads[i];
-                    let mut mi = Vec::with_capacity(p.len());
-                    let mut vi = Vec::with_capacity(p.len());
-                    let mut pi = Vec::with_capacity(p.len());
-                    for j in 0..p.len() {
-                        let m = ADAM_B1 * adam.m[i][j] + (1.0 - ADAM_B1) * g[j];
-                        let v = ADAM_B2 * adam.v[i][j] + (1.0 - ADAM_B2) * g[j] * g[j];
-                        let mhat = m / bias1;
-                        let vhat = v / bias2;
-                        pi.push(p[j] - batch.lr * mhat / (vhat.sqrt() + ADAM_EPS));
-                        mi.push(m);
-                        vi.push(v);
-                    }
+                    let (pi, mi, vi) = elementwise::adam_update(
+                        batch.params[i].data,
+                        &grads[i],
+                        adam.m[i],
+                        adam.v[i],
+                        &ap,
+                        kp,
+                    );
                     new_p.push(pi);
                     new_m.push(mi);
                     new_v.push(vi);
@@ -322,7 +363,7 @@ struct ForwardPass {
     logits: Vec<f32>,
 }
 
-fn forward(spec: &ArtifactSpec, batch: &BatchView) -> anyhow::Result<ForwardPass> {
+fn forward(spec: &ArtifactSpec, batch: &BatchView, kp: &Kernels) -> anyhow::Result<ForwardPass> {
     let geom = &spec.geometry;
     let ll = geom.layers();
     let sage = spec.model == GnnModel::Sage;
@@ -333,31 +374,23 @@ fn forward(spec: &ArtifactSpec, batch: &BatchView) -> anyhow::Result<ForwardPass
         let f_out = geom.f[l + 1];
         let rows = geom.b[l + 1];
 
-        // Aggregate: out[dst] += val * h[src]  (ref.py aggregate_ref).
-        let mut agg = vec![0.0f32; rows * f_in];
-        for ((&s, &d), &v) in batch.src[l].iter().zip(batch.dst[l]).zip(batch.val[l]) {
-            if v == 0.0 {
-                continue; // padding edge
-            }
-            let (s, d) = (s as usize, d as usize);
-            let hrow = &h[s * f_in..(s + 1) * f_in];
-            let orow = &mut agg[d * f_in..(d + 1) * f_in];
-            for j in 0..f_in {
-                orow[j] += v * hrow[j];
-            }
-        }
+        // Aggregate: out[dst] += val * h[src]  (ref.py aggregate_ref) —
+        // the fused CSR SpMM kernel, grouped by destination row.
+        let agg = sparse::aggregate(
+            rows,
+            f_in,
+            batch.dst[l],
+            batch.src[l],
+            batch.val[l],
+            &h,
+            f_in,
+            0,
+            kp,
+        );
 
         // SAGE concat: h_v || mean-aggregate (ref.py sage_layer_ref).
         let (cat, cat_cols) = if sage {
-            let si = batch.self_idx[l];
-            let mut cat = vec![0.0f32; rows * 2 * f_in];
-            for i in 0..rows {
-                let srow = &h[si[i] as usize * f_in..(si[i] as usize + 1) * f_in];
-                cat[i * 2 * f_in..i * 2 * f_in + f_in].copy_from_slice(srow);
-                cat[i * 2 * f_in + f_in..(i + 1) * 2 * f_in]
-                    .copy_from_slice(&agg[i * f_in..(i + 1) * f_in]);
-            }
-            (cat, 2 * f_in)
+            (sparse::gather_concat(&h, f_in, batch.self_idx[l], &agg, rows, kp), 2 * f_in)
         } else {
             (agg, f_in)
         };
@@ -365,56 +398,12 @@ fn forward(spec: &ArtifactSpec, batch: &BatchView) -> anyhow::Result<ForwardPass
         // Update: z = cat @ W + b, then ReLU on hidden layers.
         let w = batch.params[2 * l].data;
         let b = batch.params[2 * l + 1].data;
-        let mut z = vec![0.0f32; rows * f_out];
-        for i in 0..rows {
-            let crow = &cat[i * cat_cols..(i + 1) * cat_cols];
-            let zrow = &mut z[i * f_out..(i + 1) * f_out];
-            for (k, &a) in crow.iter().enumerate() {
-                if a != 0.0 {
-                    let wrow = &w[k * f_out..(k + 1) * f_out];
-                    for j in 0..f_out {
-                        zrow[j] += a * wrow[j];
-                    }
-                }
-            }
-            for j in 0..f_out {
-                zrow[j] += b[j];
-            }
-        }
+        let z = dense::matmul_bias(&cat, w, b, rows, cat_cols, f_out, kp);
         let relu = l + 1 < ll;
-        h = if relu { z.iter().map(|&x| x.max(0.0)).collect() } else { z.clone() };
+        h = if relu { elementwise::relu(&z, kp) } else { z.clone() };
         layers.push(LayerCache { cat, cat_cols, z });
     }
     Ok(ForwardPass { layers, logits: h })
-}
-
-/// Masked softmax cross-entropy (model.masked_xent) and its gradient
-/// w.r.t. the logits.
-fn masked_xent(
-    logits: &[f32],
-    labels: &[i32],
-    mask: &[f32],
-    classes: usize,
-) -> (f32, Vec<f32>) {
-    let rows = labels.len();
-    let denom: f32 = mask.iter().sum::<f32>().max(1.0);
-    let mut loss = 0.0f32;
-    let mut dlogits = vec![0.0f32; rows * classes];
-    for i in 0..rows {
-        let row = &logits[i * classes..(i + 1) * classes];
-        let max = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
-        let lse = max + row.iter().map(|&x| (x - max).exp()).sum::<f32>().ln();
-        let y = labels[i] as usize;
-        loss -= (row[y] - lse) * mask[i];
-        if mask[i] != 0.0 {
-            for j in 0..classes {
-                let p = (row[j] - lse).exp();
-                let onehot = if j == y { 1.0 } else { 0.0 };
-                dlogits[i * classes + j] = mask[i] * (p - onehot) / denom;
-            }
-        }
-    }
-    (loss / denom, dlogits)
 }
 
 /// Backprop through the layer stack; returns `(loss, [dW1, db1, ...])`.
@@ -422,17 +411,15 @@ fn loss_and_grads(
     spec: &ArtifactSpec,
     batch: &BatchView,
     fwd: &ForwardPass,
+    kp: &Kernels,
 ) -> anyhow::Result<(f32, Vec<Vec<f32>>)> {
     let geom = &spec.geometry;
     let ll = geom.layers();
     let sage = spec.model == GnnModel::Sage;
-    let (loss, dlogits) = masked_xent(&fwd.logits, batch.labels, batch.mask, geom.num_classes());
+    let (loss, dlogits) =
+        elementwise::masked_xent(&fwd.logits, batch.labels, batch.mask, geom.num_classes(), kp);
 
-    let mut grads: Vec<Vec<f32>> = batch
-        .params
-        .iter()
-        .map(|p| vec![0.0f32; p.data.len()])
-        .collect();
+    let mut grads: Vec<Vec<f32>> = vec![Vec::new(); batch.params.len()];
     let mut dh = dlogits; // gradient w.r.t. layer l's output, rows b[l+1]
     for l in (0..ll).rev() {
         let cache = &fwd.layers[l];
@@ -444,81 +431,38 @@ fn loss_and_grads(
         // Through the activation: hidden layers are ReLU, output is id.
         let mut dz = dh;
         if l + 1 < ll {
-            for (g, &z) in dz.iter_mut().zip(&cache.z) {
-                if z <= 0.0 {
-                    *g = 0.0;
-                }
-            }
+            elementwise::relu_mask_inplace(&mut dz, &cache.z, kp);
         }
 
         // dW = cat^T @ dz, db = column sums of dz.
         let w = batch.params[2 * l].data;
-        {
-            let (dw, db) = {
-                let (a, b) = grads.split_at_mut(2 * l + 1);
-                (&mut a[2 * l], &mut b[0])
-            };
-            for i in 0..rows {
-                let crow = &cache.cat[i * ck..(i + 1) * ck];
-                let zrow = &dz[i * f_out..(i + 1) * f_out];
-                for (k, &a) in crow.iter().enumerate() {
-                    if a != 0.0 {
-                        let wrow = &mut dw[k * f_out..(k + 1) * f_out];
-                        for j in 0..f_out {
-                            wrow[j] += a * zrow[j];
-                        }
-                    }
-                }
-                for j in 0..f_out {
-                    db[j] += zrow[j];
-                }
-            }
-        }
+        grads[2 * l] = dense::matmul_at_b(&cache.cat, &dz, rows, ck, f_out, kp);
+        grads[2 * l + 1] = dense::col_sums(&dz, rows, f_out, kp);
 
         if l == 0 {
             break; // no gradient consumer below the input features
         }
 
         // dcat = dz @ W^T, then scatter back through concat + aggregate.
-        let mut dcat = vec![0.0f32; rows * ck];
-        for i in 0..rows {
-            let zrow = &dz[i * f_out..(i + 1) * f_out];
-            let crow = &mut dcat[i * ck..(i + 1) * ck];
-            for k in 0..ck {
-                let wrow = &w[k * f_out..(k + 1) * f_out];
-                let mut acc = 0.0f32;
-                for j in 0..f_out {
-                    acc += zrow[j] * wrow[j];
-                }
-                crow[k] = acc;
-            }
-        }
+        let dcat = dense::matmul_a_bt(&dz, w, rows, f_out, ck, kp);
 
-        let mut dprev = vec![0.0f32; geom.b[l] * f_in];
+        // Aggregate backward: dprev[src] += val * dagg[dst] — the same
+        // fused CSR kernel, grouped by source row this time.
         let dagg_off = if sage { f_in } else { 0 };
-        // Aggregate backward: dprev[src] += val * dagg[dst].
-        for ((&s, &d), &v) in batch.src[l].iter().zip(batch.dst[l]).zip(batch.val[l]) {
-            if v == 0.0 {
-                continue;
-            }
-            let (s, d) = (s as usize, d as usize);
-            let grow = &dcat[d * ck + dagg_off..d * ck + dagg_off + f_in];
-            let prow = &mut dprev[s * f_in..(s + 1) * f_in];
-            for j in 0..f_in {
-                prow[j] += v * grow[j];
-            }
-        }
+        let mut dprev = sparse::aggregate(
+            geom.b[l],
+            f_in,
+            batch.src[l],
+            batch.dst[l],
+            batch.val[l],
+            &dcat,
+            ck,
+            dagg_off,
+            kp,
+        );
         // Concat backward (SAGE): dprev[self_idx[i]] += dself[i].
         if sage {
-            let si = batch.self_idx[l];
-            for i in 0..rows {
-                let grow = &dcat[i * ck..i * ck + f_in];
-                let s = si[i] as usize;
-                let prow = &mut dprev[s * f_in..(s + 1) * f_in];
-                for j in 0..f_in {
-                    prow[j] += grow[j];
-                }
-            }
+            sparse::scatter_add_rows(&mut dprev, geom.b[l], f_in, batch.self_idx[l], &dcat, ck, kp);
         }
         dh = dprev;
     }
@@ -579,7 +523,7 @@ mod tests {
     ) -> Vec<Tensor> {
         let geom = micro_geom();
         let spec = spec_for(model, kind, &geom);
-        let exe = ReferenceBackend
+        let exe = ReferenceBackend::default()
             .compile(&Manifest::builtin(), &spec)
             .unwrap();
         let batch = micro_batch(&geom);
@@ -717,7 +661,7 @@ mod tests {
         let geom = micro_geom();
         let spec = spec_for(GnnModel::Gcn, Kind::TrainStep, &geom);
         let weights = WeightState::init_glorot(&spec.weight_shapes, 9);
-        let exe = ReferenceBackend
+        let exe = ReferenceBackend::default()
             .compile(&Manifest::builtin(), &spec)
             .unwrap();
         let batch = micro_batch(&geom);
@@ -800,6 +744,6 @@ mod tests {
         let geom = micro_geom();
         let mut spec = spec_for(GnnModel::Gcn, Kind::TrainStep, &geom);
         spec.weight_shapes[0].0 = vec![5, 2];
-        assert!(ReferenceBackend.compile(&Manifest::builtin(), &spec).is_err());
+        assert!(ReferenceBackend::default().compile(&Manifest::builtin(), &spec).is_err());
     }
 }

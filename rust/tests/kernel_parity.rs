@@ -1,0 +1,104 @@
+//! Thread-count invariance of the kernel layer, end to end.
+//!
+//! The kernels in `runtime/kernels/` promise bit-identical results at
+//! every thread count (they never tile the reduction dimension — see the
+//! module docs).  The unit property suites assert that per kernel against
+//! the naive-loop oracles; this file asserts the composed guarantee:
+//!
+//! * every executor output (forward / train_step / adam_step, GCN and
+//!   SAGE) is bit-identical between the scalar pre-kernel baseline and
+//!   the tiled kernels at threads ∈ {1, 2, 8}, on a geometry large
+//!   enough that workers really spawn;
+//! * a training session's loss curve is bit-equal between
+//!   `compute_threads = 1` and `compute_threads = 8`.
+
+use std::sync::Arc;
+
+use hp_gnn::coordinator::{TrainConfig, TrainingSession};
+use hp_gnn::graph::generator;
+use hp_gnn::layout::pad::PaddedBatch;
+use hp_gnn::layout::Geometry;
+use hp_gnn::runtime::manifest::{spec_for, Kind, Manifest};
+use hp_gnn::runtime::weights::AdamState;
+use hp_gnn::runtime::{inputs, Backend, ReferenceBackend, Runtime, Tensor, WeightState};
+use hp_gnn::sampler::neighbor::NeighborSampler;
+use hp_gnn::sampler::values::GnnModel;
+use hp_gnn::util::rng::Pcg64;
+
+/// Big enough that every dense/sparse kernel clears the sequential-
+/// dispatch threshold, odd enough (non-power-of-two rows) to exercise
+/// ragged tiles.
+fn parity_geom() -> Geometry {
+    Geometry {
+        name: "kernel_parity".into(),
+        b: vec![600, 130, 33],
+        e: vec![2100, 520],
+        f: vec![96, 64, 8],
+    }
+}
+
+fn run_config(
+    backend: ReferenceBackend,
+    model: GnnModel,
+    kind: Kind,
+    geom: &Geometry,
+) -> Vec<Tensor> {
+    let spec = spec_for(model, kind, geom);
+    let exe = backend.compile(&Manifest::builtin(), &spec).unwrap();
+    let batch = PaddedBatch::synthetic(geom, 5);
+    let weights = WeightState::init_glorot(&spec.weight_shapes, 23);
+    let adam = (kind == Kind::AdamStep).then(|| AdamState::zeros(&spec.weight_shapes));
+    let mut rng = Pcg64::seed_from_u64(9);
+    let features: Vec<f32> =
+        (0..geom.b[0] * geom.f[0]).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    let lits =
+        inputs::build_inputs_opt(&spec, &batch, &features, &weights, 0.05, adam.as_ref()).unwrap();
+    exe.run(&lits).unwrap()
+}
+
+#[test]
+fn executor_outputs_are_bit_identical_across_thread_counts() {
+    let geom = parity_geom();
+    for model in [GnnModel::Gcn, GnnModel::Sage] {
+        for kind in [Kind::Forward, Kind::TrainStep, Kind::AdamStep] {
+            let baseline = run_config(ReferenceBackend::scalar_baseline(), model, kind, &geom);
+            for threads in [1usize, 2, 8] {
+                let got = run_config(ReferenceBackend::with_threads(threads), model, kind, &geom);
+                assert_eq!(
+                    got, baseline,
+                    "{model:?}/{kind:?} at {threads} threads diverged from the scalar baseline"
+                );
+            }
+        }
+    }
+}
+
+fn loss_curve(compute_threads: usize) -> Vec<f32> {
+    let rt = Runtime::reference();
+    let mut g = generator::with_min_degree(
+        generator::rmat(400, 3200, Default::default(), 31),
+        1,
+        30,
+    );
+    g.feat_dim = 16;
+    g.num_classes = 4;
+    let mut cfg = TrainConfig::quick(GnnModel::Gcn, "tiny", 0);
+    cfg.compute_threads = compute_threads;
+    let mut s = TrainingSession::new(
+        &rt,
+        Arc::new(g),
+        Arc::new(NeighborSampler::new(4, vec![5, 3])),
+        cfg,
+    )
+    .unwrap();
+    s.run_for(8).unwrap();
+    s.finish().metrics.losses
+}
+
+#[test]
+fn session_loss_curve_is_bit_equal_between_1_and_n_compute_threads() {
+    let one = loss_curve(1);
+    let eight = loss_curve(8);
+    assert_eq!(one.len(), 8);
+    assert_eq!(one, eight, "loss curve depends on compute_threads");
+}
