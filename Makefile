@@ -6,12 +6,13 @@
 # model to HLO text and writes the manifest the runtime validates against.
 
 ARTIFACTS ?= rust/artifacts
-# bench-hotpath: full (default) or smoke (tiny geometry, 1 iteration —
-# what CI runs to validate the JSON output shape).
+# bench-hotpath / bench-serve: full (default) or smoke (shrunk request
+# counts — what CI runs to validate the JSON output shapes).
 BENCH_PROFILE ?= full
 BENCH_OUT ?= $(abspath BENCH_hotpath.json)
+SERVE_OUT ?= $(abspath BENCH_serve.json)
 
-.PHONY: build test check-xla fmt artifacts clean-artifacts bench-hotpath
+.PHONY: build test check-xla fmt artifacts clean-artifacts bench-hotpath bench-serve
 
 build:
 	cargo build --release
@@ -31,6 +32,12 @@ fmt:
 # BENCH_hotpath.json (schema documented in README "Performance").
 bench-hotpath:
 	HOTPATH_PROFILE=$(BENCH_PROFILE) HOTPATH_OUT=$(BENCH_OUT) cargo bench --bench hotpath
+
+# Serving load generator: closed- and open-loop load against the
+# inference server, written to BENCH_serve.json (schema in README
+# "Serving").  Asserts the micro-batching acceptance claim.
+bench-serve:
+	SERVE_PROFILE=$(BENCH_PROFILE) SERVE_OUT=$(SERVE_OUT) cargo bench --bench serve
 
 # Requires a python environment with jax (build time only; the rust
 # runtime never invokes python).

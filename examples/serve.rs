@@ -1,0 +1,93 @@
+//! Serving walkthrough: train → checkpoint → serve → hot-swap.
+//!
+//! 1. Generate a design and train it briefly through a session.
+//! 2. Snapshot the session (`HPGNNS01`) — serving accepts those directly.
+//! 3. Start an inference server (worker pool + micro-batcher + cache) and
+//!    answer "classify vertex v" requests.
+//! 4. Keep training, save the improved weights, and hot-swap them into
+//!    the live server — the versioned cache invalidates itself.
+//!
+//! Run: `cargo run --release --example serve`
+
+use hp_gnn::api::{HpGnn, SamplerSpec};
+use hp_gnn::graph::generator;
+use hp_gnn::runtime::Runtime;
+use hp_gnn::serve::ServeConfig;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let runtime = Runtime::reference();
+
+    // A graph matching the builtin "tiny" geometry (f = [16, 8, 4]).
+    let mut graph = generator::with_min_degree(
+        generator::rmat(400, 3200, Default::default(), 5),
+        1,
+        6,
+    );
+    graph.feat_dim = 16;
+    graph.num_classes = 4;
+    graph.name = "serve-demo".to_string();
+
+    let design = HpGnn::init()
+        .platform_board("xilinx-U250")?
+        .gnn_computation("gcn")?
+        .gnn_parameters(vec![8])
+        .sampler(SamplerSpec::Neighbor { targets: 4, budgets: vec![5, 3] })
+        .load_input_graph(graph)
+        .generate_design(&runtime)?;
+    println!("design geometry: {}", design.geometry);
+
+    // --- 1+2: train a few dozen steps, snapshot the session. ------------
+    let dir = std::env::temp_dir().join(format!("hpgnn-serve-example-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let ckpt = dir.join("model.ckpt");
+    let mut session = design.session(&runtime, 0.05, false)?;
+    session.run_for(40)?;
+    session.save(&ckpt)?;
+    println!(
+        "trained 40 steps (loss {:.4} -> {:.4}), snapshot at {ckpt:?}",
+        session.metrics().losses.first().unwrap(),
+        session.metrics().losses.last().unwrap()
+    );
+
+    // --- 3: serve. ------------------------------------------------------
+    let cfg = ServeConfig {
+        workers: 2,
+        cache: true,
+        max_wait: Duration::from_micros(200),
+        ..design.serve_config()
+    };
+    let server = design.server(&runtime, cfg, &ckpt)?;
+    let vertices = [3u32, 57, 123, 388];
+    for pred in server.classify(&vertices)?.iter() {
+        println!(
+            "vertex {:>3} -> class {} (logits {:?})",
+            pred.vertex,
+            pred.label.expect("finite logits"),
+            pred.logits
+        );
+    }
+    // Repeat queries hit the cache instead of re-running the kernels.
+    server.classify(&vertices)?;
+    let m = server.metrics();
+    println!(
+        "after 2 rounds: {} requests, {} cache hits / {} misses, {} forward batches",
+        m.requests, m.cache_hits, m.cache_misses, m.batches
+    );
+    assert_eq!(m.cache_hits as usize, vertices.len(), "second round must hit");
+
+    // --- 4: hot-swap newer weights into the live server. ----------------
+    session.run_for(40)?;
+    let improved = dir.join("improved.bin");
+    session.finish().final_weights.save(&improved)?; // HPGNNW01 also accepted
+    let before = server.classify_one(vertices[0])?;
+    server.reload_weights(&improved)?;
+    let after = server.classify_one(vertices[0])?;
+    assert_ne!(before.logits, after.logits, "new weights must change the logits");
+    println!("hot-swapped {improved:?}; vertex {} re-scored under the new model", vertices[0]);
+
+    println!("serving metrics:\n{}", server.metrics().to_json().pretty());
+    server.shutdown();
+    println!("serve example OK");
+    Ok(())
+}

@@ -1,0 +1,387 @@
+//! Serving load generator: closed- and open-loop load against the
+//! inference server, written to a self-validated `BENCH_serve.json`
+//! (schema documented in the README "Serving" section).
+//!
+//! * **closed loop** — C client threads, each issuing blocking
+//!   single-vertex requests back to back; measures sustainable
+//!   throughput and the latency distribution under full load.
+//! * **open loop** (full profile) — requests dispatched on a fixed
+//!   arrival schedule regardless of completion, bounded by a client
+//!   pool; measures latency at an offered rate below saturation.
+//!
+//! The run matrix pins the acceptance claim: `workers=4, max_batch>=64`
+//! must sustain strictly higher closed-loop throughput than
+//! `workers=1, max_batch=1` — micro-batch coalescing amortizes the
+//! geometry-padded forward kernel, worker replicas add parallelism.  A
+//! determinism cross-check asserts the two configurations serve
+//! bit-identical logits.
+//!
+//! Run: `make bench-serve` or `cargo bench --bench serve`.  Knobs:
+//!
+//! * `SERVE_PROFILE=full|smoke` — smoke shrinks the request counts and
+//!   skips the open-loop section (CI's JSON-shape check).
+//! * `SERVE_OUT=<path>` — where to write `BENCH_serve.json`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hp_gnn::graph::{generator, Graph};
+use hp_gnn::runtime::{Kind, Runtime, WeightState};
+use hp_gnn::sampler::neighbor::NeighborSampler;
+use hp_gnn::sampler::values::GnnModel;
+use hp_gnn::serve::{ServeConfig, Server};
+use hp_gnn::util::json::Json;
+use hp_gnn::util::rng::Pcg64;
+
+struct LoadResult {
+    mode: &'static str,
+    workers: usize,
+    max_batch: usize,
+    cache: bool,
+    clients: usize,
+    requests: usize,
+    elapsed_s: f64,
+    throughput_rps: f64,
+    latency_p50_s: Option<f64>,
+    latency_p95_s: Option<f64>,
+    latency_p99_s: Option<f64>,
+    latency_mean_s: Option<f64>,
+    batches: u64,
+    mean_batch_occupancy: Option<f64>,
+    cache_hits: u64,
+}
+
+fn main() {
+    let profile = std::env::var("SERVE_PROFILE").unwrap_or_else(|_| "full".to_string());
+    let out_path = std::env::var("SERVE_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    let smoke = profile == "smoke";
+
+    // Serving stack on the built-in "tiny" geometry: padded-kernel cost is
+    // fixed per forward invocation, which is exactly what micro-batching
+    // amortizes; tiny keeps the unbatched baseline affordable.
+    let graph = Arc::new(bench_graph());
+    let sampler = NeighborSampler::new(4, vec![5, 3]);
+    let rt = Runtime::reference();
+    let exe = rt.compile_role(GnnModel::Gcn, "tiny", Kind::Forward).expect("builtin role");
+    let weights = WeightState::init_glorot(&exe.spec.weight_shapes, 7);
+
+    let requests = if smoke { 128 } else { 512 };
+    let clients = 8;
+
+    // Closed-loop matrix: the acceptance pair plus a cache-on run.
+    let mut runs = Vec::new();
+    let baseline = closed_loop(&rt, &graph, &sampler, &weights, 1, 1, false, clients, requests);
+    report(&baseline);
+    runs.push(baseline);
+    let batched = closed_loop(&rt, &graph, &sampler, &weights, 4, 64, false, clients, requests);
+    report(&batched);
+    runs.push(batched);
+    let cached = closed_loop(&rt, &graph, &sampler, &weights, 4, 64, true, clients, requests);
+    report(&cached);
+    runs.push(cached);
+
+    // Open loop at half the batched configuration's measured capacity.
+    if !smoke {
+        let rate = runs[1].throughput_rps * 0.5;
+        let open = open_loop(&rt, &graph, &sampler, &weights, 4, 64, rate, 256);
+        report(&open);
+        runs.push(open);
+    }
+
+    // Acceptance: coalescing + replicas must beat the unbatched single
+    // worker, and both configurations must serve identical logits.
+    let speedup = runs[1].throughput_rps / runs[0].throughput_rps;
+    assert!(
+        speedup > 1.0,
+        "workers=4/max_batch=64 ({:.0} rps) must beat workers=1/max_batch=1 ({:.0} rps)",
+        runs[1].throughput_rps,
+        runs[0].throughput_rps
+    );
+    println!("\ncoalescing speedup: {speedup:.2}x");
+    let determinism = determinism_check(&rt, &graph, &sampler, &weights);
+    println!("determinism check: {determinism}");
+
+    write_json(&out_path, &profile, &graph, &runs, speedup, determinism);
+}
+
+fn bench_graph() -> Graph {
+    let mut g = generator::with_min_degree(
+        generator::rmat(2000, 16_000, Default::default(), 21),
+        1,
+        22,
+    );
+    g.feat_dim = 16;
+    g.num_classes = 4;
+    g.name = "serve-bench".to_string();
+    g
+}
+
+fn server(
+    rt: &Runtime,
+    graph: &Arc<Graph>,
+    sampler: &NeighborSampler,
+    weights: &WeightState,
+    workers: usize,
+    max_batch: usize,
+    cache: bool,
+) -> Server {
+    // The coalescing deadline must stay well under the kernel cost, or
+    // the batched configuration pays more in waiting than it saves in
+    // amortization (tiny-geometry forwards run in tens of microseconds).
+    let cfg = ServeConfig {
+        workers,
+        max_batch,
+        max_wait: Duration::from_micros(25),
+        cache,
+        ..ServeConfig::default()
+    };
+    Server::start(rt, Arc::clone(graph), Arc::new(sampler.clone()), cfg, weights.clone())
+        .expect("server start")
+}
+
+/// Deterministic request stream `i -> vertex` shared by every run, drawn
+/// from a pool with repeats so the cache run has hits to find.
+fn request_vertex(graph: &Graph, i: usize) -> u32 {
+    let pool = 256.min(graph.num_vertices());
+    let mut rng = Pcg64::seed_from_u64(0x10ad ^ i as u64);
+    (rng.index(pool)) as u32
+}
+
+#[allow(clippy::too_many_arguments)]
+fn closed_loop(
+    rt: &Runtime,
+    graph: &Arc<Graph>,
+    sampler: &NeighborSampler,
+    weights: &WeightState,
+    workers: usize,
+    max_batch: usize,
+    cache: bool,
+    clients: usize,
+    requests: usize,
+) -> LoadResult {
+    let srv = Arc::new(server(rt, graph, sampler, weights, workers, max_batch, cache));
+    let t = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let srv = Arc::clone(&srv);
+            let graph = Arc::clone(graph);
+            scope.spawn(move || {
+                // Client c issues requests c, c+clients, c+2*clients, ...
+                let mut i = c;
+                while i < requests {
+                    srv.classify_one(request_vertex(&graph, i)).expect("classify");
+                    i += clients;
+                }
+            });
+        }
+    });
+    let elapsed_s = t.elapsed().as_secs_f64();
+    finish("closed", srv, workers, max_batch, cache, clients, requests, elapsed_s)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn open_loop(
+    rt: &Runtime,
+    graph: &Arc<Graph>,
+    sampler: &NeighborSampler,
+    weights: &WeightState,
+    workers: usize,
+    max_batch: usize,
+    rate_rps: f64,
+    requests: usize,
+) -> LoadResult {
+    let srv = Arc::new(server(rt, graph, sampler, weights, workers, max_batch, false));
+    let clients = 16; // outstanding-request bound
+    let interval = Duration::from_secs_f64(1.0 / rate_rps.max(1.0));
+    let start = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let srv = Arc::clone(&srv);
+            let graph = Arc::clone(graph);
+            scope.spawn(move || {
+                let mut i = c;
+                while i < requests {
+                    // Fixed arrival schedule: request i fires at i*interval
+                    // no matter how long earlier requests took.
+                    let due = start + interval * i as u32;
+                    let now = Instant::now();
+                    if due > now {
+                        std::thread::sleep(due - now);
+                    }
+                    srv.classify_one(request_vertex(&graph, i)).expect("classify");
+                    i += clients;
+                }
+            });
+        }
+    });
+    let elapsed_s = start.elapsed().as_secs_f64();
+    finish("open", srv, workers, max_batch, false, clients, requests, elapsed_s)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn finish(
+    mode: &'static str,
+    srv: Arc<Server>,
+    workers: usize,
+    max_batch: usize,
+    cache: bool,
+    clients: usize,
+    requests: usize,
+    elapsed_s: f64,
+) -> LoadResult {
+    let m = srv.metrics();
+    let result = LoadResult {
+        mode,
+        workers,
+        max_batch,
+        cache,
+        clients,
+        requests,
+        elapsed_s,
+        throughput_rps: requests as f64 / elapsed_s.max(1e-12),
+        latency_p50_s: m.latency_p50_s(),
+        latency_p95_s: m.latency_p95_s(),
+        latency_p99_s: m.latency_p99_s(),
+        latency_mean_s: (m.latency.count() > 0).then(|| m.latency.mean()),
+        batches: m.batches,
+        mean_batch_occupancy: m.mean_occupancy(),
+        cache_hits: m.cache_hits,
+    };
+    Arc::into_inner(srv).expect("all clients joined").shutdown();
+    result
+}
+
+fn report(r: &LoadResult) {
+    println!(
+        "{:>6} loop  workers={} max_batch={:<3} cache={:<5} clients={:<2} \
+         {:>5} req in {:>7.3}s  {:>8.0} req/s  p50 {:>8.1}us  p99 {:>8.1}us  \
+         occupancy {:.1}",
+        r.mode,
+        r.workers,
+        r.max_batch,
+        r.cache,
+        r.clients,
+        r.requests,
+        r.elapsed_s,
+        r.throughput_rps,
+        r.latency_p50_s.unwrap_or(f64::NAN) * 1e6,
+        r.latency_p99_s.unwrap_or(f64::NAN) * 1e6,
+        r.mean_batch_occupancy.unwrap_or(f64::NAN),
+    );
+}
+
+/// Serve the same vertices under the two acceptance configurations and
+/// assert bit-identical logits (the serving determinism invariant).
+fn determinism_check(
+    rt: &Runtime,
+    graph: &Arc<Graph>,
+    sampler: &NeighborSampler,
+    weights: &WeightState,
+) -> &'static str {
+    let verts: Vec<u32> = (0..16).map(|i| request_vertex(graph, i * 13)).collect();
+    let mut distinct: Vec<u32> = verts.clone();
+    distinct.sort_unstable();
+    distinct.dedup();
+    let a = server(rt, graph, sampler, weights, 1, 1, false);
+    let singles: Vec<Vec<f32>> = distinct
+        .iter()
+        .map(|&v| a.classify_one(v).expect("solo classify").logits.clone())
+        .collect();
+    a.shutdown();
+    let b = server(rt, graph, sampler, weights, 4, 64, false);
+    let bulk = b.classify(&distinct).expect("bulk classify");
+    b.shutdown();
+    for (j, p) in bulk.iter().enumerate() {
+        assert_eq!(
+            p.logits, singles[j],
+            "vertex {} served different logits under coalescing",
+            distinct[j]
+        );
+    }
+    "bit-identical"
+}
+
+fn opt_num(x: Option<f64>) -> Json {
+    x.map(Json::num).unwrap_or(Json::Null)
+}
+
+fn write_json(
+    out_path: &str,
+    profile: &str,
+    graph: &Graph,
+    runs: &[LoadResult],
+    speedup: f64,
+    determinism: &str,
+) {
+    let run_json = |r: &LoadResult| {
+        Json::obj(vec![
+            ("mode", Json::str(r.mode)),
+            ("workers", Json::num(r.workers as f64)),
+            ("max_batch", Json::num(r.max_batch as f64)),
+            ("cache", Json::Bool(r.cache)),
+            ("clients", Json::num(r.clients as f64)),
+            ("requests", Json::num(r.requests as f64)),
+            ("elapsed_s", Json::num(r.elapsed_s)),
+            ("throughput_rps", Json::num(r.throughput_rps)),
+            (
+                "latency_s",
+                Json::obj(vec![
+                    ("mean", opt_num(r.latency_mean_s)),
+                    ("p50", opt_num(r.latency_p50_s)),
+                    ("p95", opt_num(r.latency_p95_s)),
+                    ("p99", opt_num(r.latency_p99_s)),
+                ]),
+            ),
+            ("batches", Json::num(r.batches as f64)),
+            ("mean_batch_occupancy", opt_num(r.mean_batch_occupancy)),
+            ("cache_hits", Json::num(r.cache_hits as f64)),
+        ])
+    };
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serve-loadgen")),
+        ("schema_version", Json::num(1.0)),
+        ("profile", Json::str(profile)),
+        ("model", Json::str("gcn")),
+        ("geometry", Json::str("tiny")),
+        (
+            "graph",
+            Json::obj(vec![
+                ("vertices", Json::num(graph.num_vertices() as f64)),
+                ("edges", Json::num(graph.num_edges() as f64)),
+            ]),
+        ),
+        ("coalescing_speedup", Json::num(speedup)),
+        ("determinism", Json::str(determinism)),
+        ("runs", Json::arr(runs.iter().map(run_json).collect())),
+    ]);
+    std::fs::write(out_path, doc.pretty()).expect("write BENCH_serve.json");
+
+    // Self-validate the written file so the schema can't silently rot.
+    let text = std::fs::read_to_string(out_path).expect("read back");
+    let parsed = Json::parse(&text).expect("BENCH_serve.json must parse");
+    for key in ["bench", "profile", "geometry", "coalescing_speedup", "determinism", "runs"] {
+        parsed.get(key).unwrap_or_else(|e| panic!("missing {key}: {e:?}"));
+    }
+    assert_eq!(parsed.get("bench").unwrap().as_str().unwrap(), "serve-loadgen");
+    let runs_arr = parsed.get("runs").unwrap().as_arr().expect("runs array");
+    assert!(runs_arr.len() >= 2, "need the acceptance pair");
+    let find = |workers: f64, max_batch: f64| {
+        runs_arr
+            .iter()
+            .find(|r| {
+                r.get("mode").unwrap().as_str().unwrap() == "closed"
+                    && r.get("workers").unwrap().as_f64().unwrap() == workers
+                    && r.get("max_batch").unwrap().as_f64().unwrap() == max_batch
+            })
+            .unwrap_or_else(|| panic!("no closed-loop run with workers={workers}"))
+    };
+    let base = find(1.0, 1.0).get("throughput_rps").unwrap().as_f64().unwrap();
+    let batched = find(4.0, 64.0).get("throughput_rps").unwrap().as_f64().unwrap();
+    assert!(batched > base, "persisted acceptance violated: {batched} <= {base}");
+    for r in runs_arr {
+        assert!(r.get("throughput_rps").unwrap().as_f64().unwrap() > 0.0);
+        assert!(r.get("elapsed_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+    assert_eq!(parsed.get("determinism").unwrap().as_str().unwrap(), "bit-identical");
+    println!("\nwrote {out_path} (validated, {} runs)\nserve OK", runs_arr.len());
+}

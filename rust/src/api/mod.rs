@@ -30,6 +30,7 @@ use crate::sampler::{
     layerwise::LayerwiseSampler, neighbor::NeighborSampler, subgraph::SubgraphSampler, Sampler,
 };
 use crate::sampler::values::GnnModel;
+use crate::serve::{ServeConfig, Server};
 use crate::util::json::Json;
 
 /// Sampling algorithm + parameters (`Sampler('NeighborSampler', L=2,
@@ -377,6 +378,34 @@ impl GeneratedDesign {
             Arc::clone(&self.graph),
             Arc::from(self.abstraction.sampler.build()),
             self.train_config(0, lr, simulate),
+            checkpoint,
+        )
+    }
+
+    /// Serving configuration for this design: the training-time model,
+    /// artifact geometry, layout, overflow policy and seed, with the
+    /// serving knobs (workers, micro-batching, cache) at their defaults —
+    /// override fields before handing it to [`server`](Self::server).
+    pub fn serve_config(&self) -> ServeConfig {
+        ServeConfig::from_train(&self.train_config(0, 0.0, false))
+    }
+
+    /// Open an inference [`Server`] on this design from a trained
+    /// checkpoint (either `HPGNNW01` weights or an `HPGNNS01` session
+    /// snapshot): compiles one forward executor replica per worker,
+    /// spawns the micro-batcher + worker pool, and answers
+    /// [`classify`](Server::classify) requests until shutdown.
+    pub fn server(
+        &self,
+        runtime: &Runtime,
+        cfg: ServeConfig,
+        checkpoint: &Path,
+    ) -> anyhow::Result<Server> {
+        Server::from_checkpoint(
+            runtime,
+            Arc::clone(&self.graph),
+            Arc::from(self.abstraction.sampler.build()),
+            cfg,
             checkpoint,
         )
     }

@@ -4,13 +4,15 @@
 //! trained weights, and scores argmax accuracy over the real (unmasked)
 //! target vertices — the paper's accuracy claims ("same result and
 //! accuracy as training in serial fashion", §2.2) are checked this way.
+//!
+//! The sample→pad→forward→argmax sequence itself lives in
+//! [`crate::serve::infer`], shared with the serving worker pool, so the
+//! evaluation and serving paths cannot drift.
 
-use crate::graph::{datasets, Graph};
-use crate::layout::pad::pad;
-use crate::layout::index_batch;
-use crate::runtime::{inputs, Executable, Kind, Runtime, WeightState};
-use crate::sampler::values::attach_values;
+use crate::graph::Graph;
+use crate::runtime::{Executable, Kind, Runtime, WeightState};
 use crate::sampler::Sampler;
+use crate::serve::infer::{self, InferOptions};
 use crate::util::rng::Pcg64;
 
 use super::trainer::TrainConfig;
@@ -62,54 +64,22 @@ pub fn evaluate_with(
         "evaluate_with wants a Forward executable, got {:?}",
         exe.spec.kind
     );
-    let spec = &exe.spec;
-    let geom = spec.geometry.clone();
-    let num_classes = geom.num_classes();
-    let feat_dim = geom.f[0];
-
+    let opts = InferOptions::from_train(cfg);
     let mut rng = Pcg64::seed_from_u64(eval_seed);
     let mut correct = 0usize;
     let mut total = 0usize;
     for _ in 0..batches {
         let mb = sampler.sample(graph, &mut rng);
-        let values = match &cfg.value_fn {
-            Some(f) => f(graph, &mb),
-            None => attach_values(graph, &mb, cfg.model),
-        };
-        let ib = index_batch(&mb, &values, cfg.layout);
-        let ll = mb.num_layers();
-        let labels =
-            datasets::synth_labels(&mb.layers[ll], num_classes, cfg.seed, graph.num_vertices());
-        let padded = pad(&ib, &labels, &geom, cfg.overflow)?;
-        let l0_labels =
-            datasets::synth_labels(&mb.layers[0], num_classes, cfg.seed, graph.num_vertices());
-        let real =
-            datasets::synth_features(&mb.layers[0], &l0_labels, feat_dim, num_classes, cfg.seed);
-        let features = inputs::pad_features(&real, mb.layers[0].len(), geom.b[0], feat_dim);
-
-        let lits = inputs::build_inputs(spec, &padded, &features, weights, 0.0)?;
-        let outs = exe.run(&lits)?;
-        let logits = outs[0]
-            .f32_data()
-            .map_err(|e| anyhow::anyhow!("logits readback: {e}"))?;
-
-        let real_targets = padded.real_b[ll];
-        for i in 0..real_targets {
-            let row = &logits[i * num_classes..(i + 1) * num_classes];
+        let ib = infer::index_minibatch(graph, &mb, &opts);
+        let inf = infer::infer_indexed(exe, graph, &opts, weights, &ib)?;
+        for i in 0..inf.real_targets {
             total += 1;
-            // A diverged model can emit NaN logits; count the row as
-            // incorrect rather than aborting the whole evaluation (and
-            // use total_cmp so no comparison can ever panic).
-            if row.iter().any(|x| x.is_nan()) {
-                continue;
+            // A diverged model can emit NaN logits; `argmax` returns None
+            // for those rows — count them incorrect rather than aborting
+            // the whole evaluation.
+            if let Some(pred) = infer::argmax(inf.row(i)) {
+                correct += usize::from(pred as i32 == inf.labels[i]);
             }
-            let pred = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.total_cmp(b.1))
-                .map(|(j, _)| j)
-                .unwrap();
-            correct += usize::from(pred as i32 == padded.labels[i]);
         }
     }
     Ok(EvalReport { correct, total, batches })

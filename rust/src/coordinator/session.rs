@@ -110,8 +110,9 @@ const CLAIM_WINDOW: usize = 4;
 
 /// Identity string for the training graph, stored in checkpoints so a
 /// resume against a different graph fails instead of silently training
-/// checkpointed weights on a stream they never saw.
-fn graph_fingerprint(g: &Graph) -> String {
+/// checkpointed weights on a stream they never saw.  The serving
+/// subsystem reuses it to reject a snapshot served over the wrong graph.
+pub(crate) fn graph_fingerprint(g: &Graph) -> String {
     // Truncate by bytes (on a char boundary): the checkpoint string
     // encoding caps at 256 bytes and the counts need room too.
     let mut name = g.name.clone();

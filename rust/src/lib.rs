@@ -32,4 +32,5 @@ pub mod perf;
 pub mod repro;
 pub mod runtime;
 pub mod sampler;
+pub mod serve;
 pub mod util;

@@ -5,6 +5,7 @@
 //! * `run <program.json>` — execute a user program (paper Listing 1) as a
 //!   training session (`--resume` continues from a session snapshot).
 //! * `train` — train a model on a synthetic Table 4 dataset.
+//! * `serve` — serve vertex-classification requests from a checkpoint.
 //! * `dse` — run the design space exploration engine (Table 5 rows).
 //! * `simulate` — simulate one mini-batch on the accelerator model.
 //! * `info` — list artifacts and platform description.
@@ -31,6 +32,7 @@ use hp_gnn::util::si;
 const USAGE: &str = "hp-gnn — HP-GNN training framework (FPGA '22 reproduction)\n\n\
      SUBCOMMANDS:\n  run <program.json>   execute a user program as a training session\n  \
      train                train on a synthetic dataset\n  \
+     serve                serve vertex-classification requests from a checkpoint\n  \
      dse                  design space exploration (Table 5)\n  \
      simulate             accelerator simulation of one batch\n  \
      info                 artifacts + platform info\n  \
@@ -43,6 +45,7 @@ fn main() {
     let result = match sub.as_str() {
         "run" => cmd_run(argv),
         "train" => cmd_train(argv),
+        "serve" => cmd_serve(argv),
         "dse" => cmd_dse(argv),
         "simulate" => cmd_simulate(argv),
         "info" => cmd_info(argv),
@@ -325,6 +328,109 @@ fn cmd_train(argv: Vec<String>) -> anyhow::Result<()> {
         report.final_weights.save(&path)?;
         println!("Save_model(): wrote weights to {path:?}");
     }
+    Ok(())
+}
+
+fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = artifacts_flag(
+        Args::new(
+            "hp-gnn serve",
+            "serve vertex-classification requests from a trained checkpoint",
+        )
+        .flag("checkpoint", "", "HPGNNW01 weights or HPGNNS01 session snapshot (required)")
+        .flag("model", "gcn", "gcn | sage (must match training)")
+        .flag("dataset", "FL", "FL | RD | YP | AP (must match training)")
+        .flag("scale", "0.01", "dataset scale factor (0, 1] (must match training)")
+        .flag("targets", "32", "NS target vertices (sizes the artifact geometry)")
+        .flag("budgets", "5,10", "NS fan-outs per layer (comma separated)")
+        .flag("seed", "7", "PRNG seed (must match training for feature synthesis)")
+        .flag("workers", "2", "forward-executor replicas in the worker pool")
+        .flag("max-batch", "0", "micro-batch coalescing cap (0 = geometry target capacity)")
+        .flag("max-wait-us", "200", "micro-batch deadline in microseconds")
+        .flag("requests", "64", "self-driven demo requests when --vertices is empty")
+        .flag("vertices", "", "comma-separated vertex ids to classify (one line each)")
+        .switch("cache", "enable the versioned logits cache for repeat vertices"),
+    )
+    .parse_from(argv)?;
+    anyhow::ensure!(
+        !args.get("checkpoint").is_empty(),
+        "usage: hp-gnn serve --checkpoint <file> (weights from `hp-gnn train --save` \
+         or a session snapshot from `--checkpoint`)"
+    );
+
+    let runtime = Runtime::auto(Path::new(args.get("artifacts")))?;
+    // Rebuild the training-time design (same dataset, sampler and
+    // geometry selection) so the served model sees the inputs it learned.
+    let seed = args.usize("seed") as u64;
+    let design = HpGnn::init()
+        .platform_board("xilinx-U250")?
+        .gnn_computation(args.get("model"))?
+        .gnn_parameters(vec![256])
+        .sampler(SamplerSpec::Neighbor {
+            targets: args.usize("targets"),
+            budgets: args
+                .get("budgets")
+                .split(',')
+                .map(|b| b.trim().parse())
+                .collect::<Result<Vec<usize>, _>>()?,
+        })
+        .seed(seed)
+        .load_dataset(args.get("dataset"), args.f64("scale"), seed)?
+        .generate_design(&runtime)?;
+
+    let mut cfg = design.serve_config();
+    cfg.workers = args.usize("workers").max(1);
+    cfg.max_batch = args.usize("max-batch");
+    cfg.max_wait = std::time::Duration::from_micros(args.usize("max-wait-us") as u64);
+    cfg.cache = args.on("cache");
+    let server = design.server(&runtime, cfg, Path::new(args.get("checkpoint")))?;
+    println!(
+        "serving {} on geometry {} ({} workers, max batch {}, cache {})",
+        args.get("model"),
+        server.geometry().name,
+        server.num_workers(),
+        server.max_batch(),
+        if args.on("cache") { "on" } else { "off" },
+    );
+
+    if !args.get("vertices").is_empty() {
+        let vertices: Vec<u32> = args
+            .get("vertices")
+            .split(',')
+            .map(|v| v.trim().parse())
+            .collect::<Result<_, _>>()?;
+        for pred in server.classify(&vertices)?.iter() {
+            match pred.label {
+                Some(label) => println!(
+                    "vertex {:>8}: class {label} (logits {:?})",
+                    pred.vertex, pred.logits
+                ),
+                None => println!("vertex {:>8}: no prediction (NaN logits)", pred.vertex),
+            }
+        }
+    } else {
+        // Self-driven demo load: closed-loop single-vertex requests over
+        // a random vertex stream (repeat vertices exercise the cache).
+        let n = args.usize("requests");
+        let num_vertices = design.graph.num_vertices();
+        let mut rng = Pcg64::seed_from_u64(seed ^ 0x10ad);
+        let pool: Vec<u32> = (0..(num_vertices / 4).clamp(1, 512))
+            .map(|_| rng.index(num_vertices) as u32)
+            .collect();
+        let t = hp_gnn::util::stats::Timer::start();
+        for _ in 0..n {
+            let v = pool[rng.index(pool.len())];
+            server.classify_one(v)?;
+        }
+        let secs = t.secs();
+        println!(
+            "served {n} requests in {:.3}s ({:.0} req/s)",
+            secs,
+            n as f64 / secs.max(1e-12)
+        );
+    }
+    println!("serving metrics:\n{}", server.metrics().to_json().pretty());
+    server.shutdown();
     Ok(())
 }
 

@@ -58,6 +58,9 @@ pub trait Backend {
 /// Implementations receive inputs already validated against the manifest
 /// ABI by [`super::Executable::run`] — count, per-input element count and
 /// dtype all match the spec.
-pub trait Executor {
+///
+/// `Send` is part of the contract: the serving subsystem moves one
+/// executor replica into each worker thread of its pool.
+pub trait Executor: Send {
     fn run(&self, inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>>;
 }

@@ -26,4 +26,4 @@ pub use executor::{Executable, Runtime};
 pub use manifest::{ArtifactSpec, Kind, Manifest};
 pub use reference::ReferenceBackend;
 pub use tensor::Tensor;
-pub use weights::{Checkpoint, WeightState};
+pub use weights::{load_weights_any, Checkpoint, WeightState};

@@ -136,6 +136,50 @@ impl AdamState {
     }
 }
 
+/// Extract a [`WeightState`] from a checkpoint of either format: a
+/// weights-only `HPGNNW01` file ([`WeightState::save`], the CLI's
+/// `--save`) or a full `HPGNNS01` session snapshot ([`Checkpoint::save`]),
+/// whose embedded weight tensors are returned and whose optimizer/RNG
+/// state is ignored.  This is what inference-side consumers (the serving
+/// subsystem, `hp-gnn serve --checkpoint`) load: serving doesn't care
+/// which kind of artifact training produced.
+pub fn load_weights_any(path: &std::path::Path) -> anyhow::Result<WeightState> {
+    match checkpoint_magic(path)? {
+        CheckpointKind::Weights => WeightState::load(path),
+        CheckpointKind::Session => Ok(Checkpoint::load(path)?.weights),
+    }
+}
+
+/// Which checkpoint format a file's magic declares.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CheckpointKind {
+    /// `HPGNNW01` — weights only.
+    Weights,
+    /// `HPGNNS01` — full session snapshot.
+    Session,
+}
+
+/// Read `path`'s 8-byte magic and classify the checkpoint format; errors
+/// on anything that is neither.
+pub fn checkpoint_magic(path: &std::path::Path) -> anyhow::Result<CheckpointKind> {
+    let mut magic = [0u8; 8];
+    {
+        use std::io::Read;
+        let mut f = std::fs::File::open(path)?;
+        f.read_exact(&mut magic)
+            .map_err(|_| anyhow::anyhow!("checkpoint too short"))?;
+    }
+    match &magic {
+        b"HPGNNW01" => Ok(CheckpointKind::Weights),
+        m if m == SESSION_MAGIC => Ok(CheckpointKind::Session),
+        other => anyhow::bail!(
+            "unrecognized checkpoint magic {:?} (want HPGNNW01 weights or an \
+             HPGNNS01 session snapshot)",
+            String::from_utf8_lossy(other)
+        ),
+    }
+}
+
 // ---- shared binary tensor-list encoding (HPGNNW01 / HPGNNS01) ----------
 
 /// Write-then-rename: `write` fills a sibling `<path>.tmp`, which is
@@ -479,6 +523,30 @@ mod tests {
         demo_checkpoint(false).weights.save(&wpath).unwrap();
         let err = Checkpoint::load(&wpath).unwrap_err().to_string();
         assert!(err.contains("HPGNNS01"), "{err}");
+    }
+
+    #[test]
+    fn load_weights_any_round_trips_both_formats() {
+        let dir = std::env::temp_dir().join(format!("hpgnn-any-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // HPGNNW01: weights-only checkpoint.
+        let w = WeightState::init_glorot(&shapes(), 11);
+        let wpath = dir.join("weights.bin");
+        w.save(&wpath).unwrap();
+        assert_eq!(load_weights_any(&wpath).unwrap().tensors, w.tensors);
+        // HPGNNS01: full session snapshot — only the weights come back.
+        let snap = demo_checkpoint(true);
+        let spath = dir.join("session.ckpt");
+        snap.save(&spath).unwrap();
+        assert_eq!(load_weights_any(&spath).unwrap().tensors, snap.weights.tensors);
+        // Neither magic: a clean error naming both accepted formats.
+        let bad = dir.join("bad.bin");
+        std::fs::write(&bad, b"NOTMAGIC and then some").unwrap();
+        let err = load_weights_any(&bad).unwrap_err().to_string();
+        assert!(err.contains("HPGNNW01") && err.contains("HPGNNS01"), "{err}");
+        // Too short for any magic.
+        std::fs::write(&bad, b"HP").unwrap();
+        assert!(load_weights_any(&bad).is_err());
     }
 
     #[test]

@@ -101,6 +101,24 @@ pub trait Sampler: Send + Sync {
     /// Draw a mini-batch from `g` with the caller's RNG.
     fn sample(&self, g: &Graph, rng: &mut Pcg64) -> MiniBatch;
 
+    /// Target-directed sampling for inference: draw the L-layer
+    /// neighborhood of the *given* target vertices instead of a random
+    /// draw.  The serving subsystem uses this to answer "classify vertex
+    /// v" requests.  Not every sampling algorithm supports it (subgraph
+    /// sampling has no per-target expansion), so the default errors.
+    fn sample_targets(
+        &self,
+        g: &Graph,
+        targets: &[Vid],
+        rng: &mut Pcg64,
+    ) -> anyhow::Result<MiniBatch> {
+        let _ = (g, targets, rng);
+        anyhow::bail!(
+            "sampler {} does not support target-directed (inference-time) sampling",
+            self.name()
+        )
+    }
+
     /// Human-readable name for logs and tables.
     fn name(&self) -> String;
 

@@ -33,30 +33,12 @@ impl NeighborSampler {
     pub fn paper_default() -> Self {
         NeighborSampler::new(1024, vec![10, 25])
     }
-}
 
-impl Sampler for NeighborSampler {
-    fn num_layers(&self) -> usize {
-        self.budgets.len()
-    }
-
-    fn clone_box(&self) -> Box<dyn Sampler> {
-        Box::new(self.clone())
-    }
-
-    fn name(&self) -> String {
-        format!("NS(t={}, budgets={:?})", self.num_targets, self.budgets)
-    }
-
-    fn sample(&self, g: &Graph, rng: &mut Pcg64) -> MiniBatch {
+    /// Recursive neighbor expansion of an already-chosen target set — the
+    /// body shared by random training draws ([`Sampler::sample`]) and
+    /// target-directed inference draws ([`Sampler::sample_targets`]).
+    fn expand(&self, g: &Graph, targets: Vec<Vid>, rng: &mut Pcg64) -> MiniBatch {
         let ll = self.num_layers();
-        let n = g.num_vertices();
-        let targets: Vec<Vid> = rng
-            .sample_distinct(n, self.num_targets.min(n))
-            .into_iter()
-            .map(|v| v as Vid)
-            .collect();
-
         let mut layers = vec![Vec::new(); ll + 1];
         let mut edges = vec![Vec::new(); ll];
         layers[ll] = targets;
@@ -98,6 +80,51 @@ impl Sampler for NeighborSampler {
         }
 
         MiniBatch { layers, edges }
+    }
+}
+
+impl Sampler for NeighborSampler {
+    fn num_layers(&self) -> usize {
+        self.budgets.len()
+    }
+
+    fn clone_box(&self) -> Box<dyn Sampler> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> String {
+        format!("NS(t={}, budgets={:?})", self.num_targets, self.budgets)
+    }
+
+    fn sample(&self, g: &Graph, rng: &mut Pcg64) -> MiniBatch {
+        let n = g.num_vertices();
+        let targets: Vec<Vid> = rng
+            .sample_distinct(n, self.num_targets.min(n))
+            .into_iter()
+            .map(|v| v as Vid)
+            .collect();
+        self.expand(g, targets, rng)
+    }
+
+    /// Inference-time draw: expand the neighborhoods of the *given*
+    /// targets with the same recursion as [`sample`](Sampler::sample).
+    fn sample_targets(
+        &self,
+        g: &Graph,
+        targets: &[Vid],
+        rng: &mut Pcg64,
+    ) -> anyhow::Result<MiniBatch> {
+        anyhow::ensure!(!targets.is_empty(), "sample_targets: no target vertices");
+        let mut seen = std::collections::HashSet::with_capacity(targets.len());
+        for &v in targets {
+            anyhow::ensure!(
+                (v as usize) < g.num_vertices(),
+                "target vertex {v} out of range (graph has {} vertices)",
+                g.num_vertices()
+            );
+            anyhow::ensure!(seen.insert(v), "duplicate target vertex {v}");
+        }
+        Ok(self.expand(g, targets.to_vec(), rng))
     }
 
     /// Paper Table 2: |B^l| = |V^t| * Π_{i=l+1}^{L} NS^i  (plus the
@@ -188,6 +215,28 @@ mod tests {
         let b = s.sample(&g, &mut Pcg64::seed_from_u64(9));
         assert_eq!(a.layers, b.layers);
         assert_eq!(a.edges, b.edges);
+    }
+
+    #[test]
+    fn sample_targets_expands_the_requested_vertices() {
+        let g = graph();
+        let s = NeighborSampler::new(16, vec![4, 4]);
+        let targets = vec![3u32, 17, 42];
+        let mb = s
+            .sample_targets(&g, &targets, &mut Pcg64::seed_from_u64(12))
+            .unwrap();
+        mb.validate(&g).unwrap();
+        assert_eq!(mb.layers[2], targets);
+        // Deterministic under the same RNG seed.
+        let mb2 = s
+            .sample_targets(&g, &targets, &mut Pcg64::seed_from_u64(12))
+            .unwrap();
+        assert_eq!(mb.layers, mb2.layers);
+        assert_eq!(mb.edges, mb2.edges);
+        // Out-of-range and duplicate targets are rejected.
+        assert!(s.sample_targets(&g, &[9999], &mut Pcg64::seed_from_u64(1)).is_err());
+        assert!(s.sample_targets(&g, &[3, 3], &mut Pcg64::seed_from_u64(1)).is_err());
+        assert!(s.sample_targets(&g, &[], &mut Pcg64::seed_from_u64(1)).is_err());
     }
 
     #[test]

@@ -1,0 +1,152 @@
+//! Dynamic micro-batcher: coalesce queued requests into micro-batches.
+//!
+//! One batcher thread drains the bounded request queue and forms batches
+//! under two limits, whichever trips first:
+//!
+//! * **size** — up to `max_batch` waiting vertices are coalesced (an
+//!   oversized submission simply spans several batches: requests are
+//!   queued per vertex, so splitting is free);
+//! * **deadline** — once the first vertex of a batch is in hand, at most
+//!   `max_wait` passes before the batch ships, full or not (bounds the
+//!   queueing latency a lone request pays for the *possibility* of
+//!   coalescing).
+//!
+//! `max_batch == 1` degenerates to pass-through dispatch (the load
+//! generator's unbatched baseline).
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::graph::Vid;
+
+use super::Prediction;
+
+/// Reply channel of one request: `(slot index, prediction or error)`.
+pub(crate) type ReplySender = mpsc::Sender<(usize, anyhow::Result<std::sync::Arc<Prediction>>)>;
+
+/// One queued "classify vertex v" work unit.  `reply` carries the
+/// requester's slot index so multi-vertex requests reassemble in order.
+pub(crate) struct WorkItem {
+    pub vertex: Vid,
+    pub idx: usize,
+    pub reply: ReplySender,
+}
+
+/// Batcher thread body: runs until every request sender is gone, then
+/// flushes what is queued and shuts the worker channel down by dropping
+/// `tx` (which the caller moved in).
+pub(crate) fn run_batcher(
+    rx: mpsc::Receiver<WorkItem>,
+    tx: mpsc::SyncSender<Vec<WorkItem>>,
+    max_batch: usize,
+    max_wait: Duration,
+) {
+    let max_batch = max_batch.max(1);
+    loop {
+        // Block for the batch's first item; a closed queue means the
+        // server is shutting down and everything queued was drained.
+        let first = match rx.recv() {
+            Ok(item) => item,
+            Err(_) => return,
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + max_wait;
+        let mut disconnected = false;
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(item) => batch.push(item),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        if tx.send(batch).is_err() {
+            return; // workers are gone; nothing left to serve
+        }
+        if disconnected {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn items(
+        n: usize,
+    ) -> (Vec<WorkItem>, mpsc::Receiver<(usize, anyhow::Result<Arc<Prediction>>)>) {
+        let (reply, reply_rx) = mpsc::channel();
+        let v = (0..n)
+            .map(|i| WorkItem { vertex: i as Vid, idx: i, reply: reply.clone() })
+            .collect();
+        (v, reply_rx)
+    }
+
+    /// Run the batcher over a pre-filled, already-closed queue and return
+    /// the batch sizes it formed.
+    fn batch_sizes(n: usize, max_batch: usize, max_wait: Duration) -> Vec<usize> {
+        let (tx, rx) = mpsc::sync_channel(n.max(1));
+        let (work, _replies) = items(n);
+        for item in work {
+            tx.send(item).unwrap();
+        }
+        drop(tx);
+        let (btx, brx) = mpsc::sync_channel(n.max(1));
+        run_batcher(rx, btx, max_batch, max_wait);
+        brx.into_iter().map(|b| b.len()).collect()
+    }
+
+    #[test]
+    fn oversized_submission_splits_across_batches() {
+        // 10 queued vertices, capacity 4: batches of 4, 4, 2.
+        assert_eq!(batch_sizes(10, 4, Duration::from_millis(50)), vec![4, 4, 2]);
+    }
+
+    #[test]
+    fn max_batch_one_is_pass_through() {
+        assert_eq!(batch_sizes(5, 1, Duration::from_millis(50)), vec![1; 5]);
+    }
+
+    #[test]
+    fn full_queue_coalesces_into_one_batch() {
+        assert_eq!(batch_sizes(7, 64, Duration::from_millis(50)), vec![7]);
+    }
+
+    #[test]
+    fn deadline_ships_a_partial_batch() {
+        // A live queue that stays open: the batcher must ship the lone
+        // item once max_wait elapses instead of waiting for a full batch.
+        let (tx, rx) = mpsc::sync_channel(4);
+        let (work, _replies) = items(1);
+        for item in work {
+            tx.send(item).unwrap();
+        }
+        let (btx, brx) = mpsc::sync_channel(4);
+        let h = std::thread::spawn(move || {
+            run_batcher(rx, btx, 64, Duration::from_millis(10));
+        });
+        let t = Instant::now();
+        let batch = brx.recv().expect("batch before shutdown");
+        assert_eq!(batch.len(), 1);
+        assert!(t.elapsed() < Duration::from_secs(5), "deadline never fired");
+        drop(tx); // close the queue so the batcher exits
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn zero_wait_still_ships_the_first_item() {
+        // max_wait = 0: every batch is whatever was instantaneously
+        // available — at least the first item.
+        let sizes = batch_sizes(3, 8, Duration::ZERO);
+        assert_eq!(sizes.iter().sum::<usize>(), 3);
+        assert!(!sizes.is_empty());
+    }
+}

@@ -1,0 +1,173 @@
+//! Versioned per-vertex logits cache.
+//!
+//! Repeat query vertices skip sampling + forward execution entirely.  The
+//! cache is *versioned* against the server's weight state: every entry is
+//! stamped with the weight version it was computed under, and a weight
+//! reload ([`LogitsCache::invalidate`]) bumps the version — stale entries
+//! miss (and are evicted lazily), so hot-swapping a newer checkpoint
+//! mid-serve can never answer from the old model.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::Prediction;
+use crate::graph::Vid;
+
+struct Entry {
+    version: u64,
+    pred: Arc<Prediction>,
+}
+
+/// Default entry cap — a weeks-long server queried across a large vertex
+/// space must not grow cache memory without bound (same rationale as the
+/// metrics sample window).
+pub const DEFAULT_CACHE_CAPACITY: usize = 65_536;
+
+/// Thread-safe vertex → prediction cache with weight-version stamping.
+pub struct LogitsCache {
+    enabled: bool,
+    capacity: usize,
+    version: AtomicU64,
+    map: Mutex<HashMap<Vid, Entry>>,
+}
+
+impl LogitsCache {
+    pub fn new(enabled: bool) -> LogitsCache {
+        Self::with_capacity(enabled, DEFAULT_CACHE_CAPACITY)
+    }
+
+    pub fn with_capacity(enabled: bool, capacity: usize) -> LogitsCache {
+        LogitsCache {
+            enabled,
+            capacity: capacity.max(1),
+            version: AtomicU64::new(0),
+            map: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// The current weight version entries must match to hit.
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Current-version hit for `v`, if any.  Stale entries are evicted.
+    pub fn get(&self, v: Vid) -> Option<Arc<Prediction>> {
+        if !self.enabled {
+            return None;
+        }
+        let mut map = self.map.lock().unwrap();
+        let current = self.version.load(Ordering::Acquire);
+        let stale = match map.get(&v) {
+            Some(e) if e.version == current => return Some(Arc::clone(&e.pred)),
+            Some(_) => true,
+            None => false,
+        };
+        if stale {
+            map.remove(&v);
+        }
+        None
+    }
+
+    /// Insert a prediction computed under weight `version`.  Dropped when
+    /// the cache has moved on (a reload raced the computation) — a stale
+    /// result must never be readable at the current version.  At capacity
+    /// an arbitrary entry is evicted first (O(1); repeat-vertex workloads
+    /// re-warm hot entries on their next query).
+    pub fn put(&self, version: u64, pred: Arc<Prediction>) {
+        if !self.enabled {
+            return;
+        }
+        let mut map = self.map.lock().unwrap();
+        if self.version.load(Ordering::Acquire) != version {
+            return;
+        }
+        if map.len() >= self.capacity && !map.contains_key(&pred.vertex) {
+            if let Some(&evict) = map.keys().next() {
+                map.remove(&evict);
+            }
+        }
+        map.insert(pred.vertex, Entry { version, pred });
+    }
+
+    /// Bump the weight version and drop every entry; returns the new
+    /// version (what freshly-computed predictions must be stamped with).
+    pub fn invalidate(&self) -> u64 {
+        let mut map = self.map.lock().unwrap();
+        let v = self.version.fetch_add(1, Ordering::AcqRel) + 1;
+        map.clear();
+        v
+    }
+
+    /// Number of live entries (any version; stale ones evict on access).
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pred(v: Vid) -> Arc<Prediction> {
+        Arc::new(Prediction { vertex: v, label: Some(1), logits: vec![0.0, 1.0] })
+    }
+
+    #[test]
+    fn hit_after_put_at_current_version() {
+        let c = LogitsCache::new(true);
+        assert!(c.get(3).is_none());
+        c.put(c.version(), pred(3));
+        assert_eq!(c.get(3).unwrap().vertex, 3);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn invalidate_evicts_and_rejects_stale_puts() {
+        let c = LogitsCache::new(true);
+        let v0 = c.version();
+        c.put(v0, pred(1));
+        let v1 = c.invalidate();
+        assert_eq!(v1, v0 + 1);
+        assert!(c.get(1).is_none(), "entry survived invalidation");
+        // A computation that started before the reload finished cannot
+        // publish under the new version.
+        c.put(v0, pred(2));
+        assert!(c.get(2).is_none());
+        // The new version works.
+        c.put(v1, pred(2));
+        assert!(c.get(2).is_some());
+    }
+
+    #[test]
+    fn capacity_bounds_the_entry_count() {
+        let c = LogitsCache::with_capacity(true, 4);
+        let v = c.version();
+        for i in 0..20 {
+            c.put(v, pred(i));
+        }
+        assert_eq!(c.len(), 4, "cache must not grow past its capacity");
+        // Re-inserting an existing key does not evict anything.
+        let resident: Vec<Vid> = (0..20).filter(|&i| c.get(i).is_some()).collect();
+        assert_eq!(resident.len(), 4);
+        c.put(v, pred(resident[0]));
+        assert_eq!(c.len(), 4);
+        assert!(c.get(resident[0]).is_some());
+    }
+
+    #[test]
+    fn disabled_cache_never_stores() {
+        let c = LogitsCache::new(false);
+        c.put(c.version(), pred(9));
+        assert!(c.get(9).is_none());
+        assert!(c.is_empty());
+    }
+}

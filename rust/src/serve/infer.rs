@@ -1,0 +1,277 @@
+//! Shared forward-inference helper: the sample → layout → pad → forward →
+//! logits sequence used by *both* the evaluator
+//! ([`crate::coordinator::eval::evaluate_with`]) and the serving worker
+//! pool — one implementation, so eval and serve cannot drift.
+//!
+//! # The per-target determinism invariant
+//!
+//! Serving coalesces single-vertex requests into micro-batches whose
+//! composition depends on arrival timing, yet served logits must be
+//! bit-identical regardless of which other vertices share a batch.  The
+//! invariant holds because merged batches are built as a *concatenation of
+//! independently-sampled per-target subtrees* ([`merge_indexed`]): each
+//! subtree occupies its own contiguous position block, every row-level
+//! kernel (matmul, aggregate, self-gather) touches only rows wired to that
+//! block, and the edge order within a block is fixed by the subtree's own
+//! RMT/RRA layout.  Batch composition therefore changes *which rows exist*,
+//! never the value or float accumulation order of any existing row — the
+//! serving-path extension of the repo's kernel determinism invariant
+//! (tests: `serve_parity.rs`).
+
+use crate::coordinator::trainer::{TrainConfig, ValueFn};
+use crate::graph::{datasets, Graph};
+use crate::layout::pad::{pad, EdgeOverflow};
+use crate::layout::{index_batch, IndexedBatch, IndexedLayer, LayoutOptions};
+use crate::runtime::{inputs, Executable, Kind, WeightState};
+use crate::sampler::values::{attach_values, GnnModel};
+use crate::sampler::MiniBatch;
+
+/// Everything forward inference needs besides the batch itself.  Built
+/// from a [`TrainConfig`] so evaluation and serving see exactly the
+/// training-time edge values, layout, overflow policy and feature stream.
+#[derive(Clone)]
+pub struct InferOptions {
+    pub model: GnnModel,
+    pub layout: LayoutOptions,
+    pub overflow: EdgeOverflow,
+    /// Feature/label synthesis seed — must match training, or the served
+    /// model sees inputs from a different distribution than it learned.
+    pub seed: u64,
+    /// Custom Scatter UDF; `None` uses the model's standard edge values.
+    pub value_fn: Option<ValueFn>,
+}
+
+impl InferOptions {
+    pub fn from_train(cfg: &TrainConfig) -> InferOptions {
+        InferOptions {
+            model: cfg.model,
+            layout: cfg.layout,
+            overflow: cfg.overflow,
+            seed: cfg.seed,
+            value_fn: cfg.value_fn.clone(),
+        }
+    }
+}
+
+impl std::fmt::Debug for InferOptions {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("InferOptions")
+            .field("model", &self.model)
+            .field("layout", &self.layout)
+            .field("overflow", &self.overflow)
+            .field("seed", &self.seed)
+            .field("custom_values", &self.value_fn.is_some())
+            .finish()
+    }
+}
+
+/// Attach edge values and run the layout engine — the positional form of
+/// a global-id mini-batch under `opts`.
+pub fn index_minibatch(graph: &Graph, mb: &MiniBatch, opts: &InferOptions) -> IndexedBatch {
+    let values = match &opts.value_fn {
+        Some(f) => f(graph, mb),
+        None => attach_values(graph, mb, opts.model),
+    };
+    index_batch(mb, &values, opts.layout)
+}
+
+/// Output of one forward execution, trimmed to the real (unpadded)
+/// target vertices.
+#[derive(Debug, Clone)]
+pub struct Inference {
+    /// Row-major `real_targets × num_classes` logits.
+    pub logits: Vec<f32>,
+    /// Synthetic ground-truth label per real target (what the evaluator
+    /// scores against).
+    pub labels: Vec<i32>,
+    pub real_targets: usize,
+    pub num_classes: usize,
+}
+
+impl Inference {
+    /// Logits row of target `i`.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.logits[i * self.num_classes..(i + 1) * self.num_classes]
+    }
+}
+
+/// Run the forward artifact over one positional batch: synthesize the
+/// target labels and `B^0` feature rows (the per-vertex deterministic
+/// streams training used), pad to the artifact geometry, execute, and
+/// read the logits back.
+pub fn infer_indexed(
+    exe: &Executable,
+    graph: &Graph,
+    opts: &InferOptions,
+    weights: &WeightState,
+    ib: &IndexedBatch,
+) -> anyhow::Result<Inference> {
+    anyhow::ensure!(
+        exe.spec.kind == Kind::Forward,
+        "inference wants a Forward executable, got {:?}",
+        exe.spec.kind
+    );
+    let geom = &exe.spec.geometry;
+    let num_classes = geom.num_classes();
+    let feat_dim = geom.f[0];
+    let ll = ib.num_layers();
+
+    let target_labels =
+        datasets::synth_labels(&ib.layers[ll], num_classes, opts.seed, graph.num_vertices());
+    let padded = pad(ib, &target_labels, geom, opts.overflow)?;
+    let l0_labels =
+        datasets::synth_labels(&ib.layers[0], num_classes, opts.seed, graph.num_vertices());
+    let real =
+        datasets::synth_features(&ib.layers[0], &l0_labels, feat_dim, num_classes, opts.seed);
+    let features = inputs::pad_features(&real, ib.layers[0].len(), geom.b[0], feat_dim);
+
+    let lits = inputs::build_inputs(&exe.spec, &padded, &features, weights, 0.0)?;
+    let outs = exe.run(&lits)?;
+    let logits = outs[0]
+        .f32_data()
+        .map_err(|e| anyhow::anyhow!("logits readback: {e}"))?;
+
+    let real_targets = padded.real_b[ll];
+    Ok(Inference {
+        logits: logits[..real_targets * num_classes].to_vec(),
+        labels: padded.labels[..real_targets].to_vec(),
+        real_targets,
+        num_classes,
+    })
+}
+
+/// Argmax class of one logits row via a total order; `None` when the row
+/// contains a NaN (a diverged model must not crash or win ties).
+pub fn argmax(row: &[f32]) -> Option<usize> {
+    if row.is_empty() || row.iter().any(|x| x.is_nan()) {
+        return None;
+    }
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+}
+
+/// Concatenate positional batches into one, offsetting each part's
+/// positions by the vertices already placed.  Part boundaries stay
+/// contiguous, so every part's rows and intra-part edge order are
+/// preserved verbatim — the mechanism behind the per-target determinism
+/// invariant (module docs).  Accepts owned batches or references (the
+/// serving hot path merges straight from borrowed subtrees, no copies).
+pub fn merge_indexed<B: std::borrow::Borrow<IndexedBatch>>(parts: &[B]) -> IndexedBatch {
+    assert!(!parts.is_empty(), "merge_indexed: no parts");
+    let ll = parts[0].borrow().num_layers();
+    let opts = parts[0].borrow().opts;
+    let mut layers: Vec<Vec<crate::graph::Vid>> = vec![Vec::new(); ll + 1];
+    let mut layer_edges: Vec<IndexedLayer> = (0..ll)
+        .map(|_| IndexedLayer {
+            src: Vec::new(),
+            dst: Vec::new(),
+            val: Vec::new(),
+            self_idx: Vec::new(),
+        })
+        .collect();
+    for p in parts {
+        let p = p.borrow();
+        assert_eq!(p.num_layers(), ll, "merge_indexed: layer-count mismatch");
+        for l in 0..ll {
+            let src_off = layers[l].len() as u32;
+            let dst_off = layers[l + 1].len() as u32;
+            let le = &p.layer_edges[l];
+            layer_edges[l].src.extend(le.src.iter().map(|&x| x + src_off));
+            layer_edges[l].dst.extend(le.dst.iter().map(|&x| x + dst_off));
+            layer_edges[l].val.extend_from_slice(&le.val);
+            layer_edges[l]
+                .self_idx
+                .extend(le.self_idx.iter().map(|&x| x + src_off));
+        }
+        for l in 0..=ll {
+            layers[l].extend_from_slice(&p.layers[l]);
+        }
+    }
+    IndexedBatch { layers, layer_edges, opts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::runtime::Runtime;
+    use crate::sampler::neighbor::NeighborSampler;
+    use crate::sampler::Sampler;
+    use crate::util::rng::Pcg64;
+
+    fn setup() -> (Runtime, Graph, NeighborSampler, InferOptions) {
+        let mut g = generator::with_min_degree(
+            generator::rmat(400, 3200, Default::default(), 5),
+            1,
+            6,
+        );
+        g.feat_dim = 16;
+        g.num_classes = 4;
+        let sampler = NeighborSampler::new(4, vec![5, 3]);
+        let opts = InferOptions::from_train(&TrainConfig::quick(GnnModel::Gcn, "tiny", 0));
+        (Runtime::reference(), g, sampler, opts)
+    }
+
+    #[test]
+    fn infer_indexed_returns_one_row_per_real_target() {
+        let (rt, g, sampler, opts) = setup();
+        let exe = rt.compile_role(opts.model, "tiny", Kind::Forward).unwrap();
+        let weights = WeightState::init_glorot(&exe.spec.weight_shapes, 3);
+        let mb = sampler.sample(&g, &mut Pcg64::seed_from_u64(8));
+        let ib = index_minibatch(&g, &mb, &opts);
+        let inf = infer_indexed(&exe, &g, &opts, &weights, &ib).unwrap();
+        assert_eq!(inf.real_targets, mb.layers[2].len());
+        assert_eq!(inf.num_classes, 4);
+        assert_eq!(inf.logits.len(), inf.real_targets * 4);
+        assert_eq!(inf.labels.len(), inf.real_targets);
+        assert!(inf.logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn merged_subtree_logits_match_solo_inference_bitwise() {
+        // The serving invariant in miniature: each vertex inferred alone
+        // equals the same vertex inferred inside a coalesced batch.
+        let (rt, g, sampler, opts) = setup();
+        let exe = rt.compile_role(opts.model, "tiny", Kind::Forward).unwrap();
+        let weights = WeightState::init_glorot(&exe.spec.weight_shapes, 3);
+        let verts = [7u32, 91, 230];
+        let parts: Vec<IndexedBatch> = verts
+            .iter()
+            .map(|&v| {
+                let mb = sampler
+                    .sample_targets(&g, &[v], &mut crate::serve::vertex_rng(17, v))
+                    .unwrap();
+                index_minibatch(&g, &mb, &opts)
+            })
+            .collect();
+        let solo: Vec<Inference> = parts
+            .iter()
+            .map(|p| infer_indexed(&exe, &g, &opts, &weights, p).unwrap())
+            .collect();
+        let merged = merge_indexed(&parts);
+        let joint = infer_indexed(&exe, &g, &opts, &weights, &merged).unwrap();
+        assert_eq!(joint.real_targets, verts.len());
+        for (j, s) in solo.iter().enumerate() {
+            assert_eq!(joint.row(j), s.row(0), "vertex {} drifted when batched", verts[j]);
+        }
+        // A different merge order still reproduces each row bitwise.
+        let rev: Vec<IndexedBatch> = parts.iter().rev().cloned().collect();
+        let joint_rev = infer_indexed(&exe, &g, &opts, &weights, &merge_indexed(&rev)).unwrap();
+        for (j, s) in solo.iter().rev().enumerate() {
+            assert_eq!(joint_rev.row(j), s.row(0));
+        }
+    }
+
+    #[test]
+    fn argmax_total_order_and_nan_handling() {
+        assert_eq!(argmax(&[0.0, 3.0, 1.0]), Some(1));
+        assert_eq!(argmax(&[-1.0, -5.0]), Some(0));
+        assert_eq!(argmax(&[1.0, f32::NAN]), None);
+        assert_eq!(argmax(&[]), None);
+        // Ties resolve to the last maximal element (std `max_by`
+        // semantics — the evaluator's historical behavior).
+        assert_eq!(argmax(&[2.0, 2.0, 1.0]), Some(1));
+    }
+}

@@ -1,0 +1,224 @@
+//! Per-request serving metrics: throughput counters plus latency
+//! percentiles on [`Summary`].
+//!
+//! Distribution metrics (latency, occupancy, execution time) are kept in
+//! a bounded ring of the most recent [`SAMPLE_WINDOW`] samples: a server
+//! that runs for weeks must not grow its metrics memory with every
+//! request, and percentile snapshots must not sort an ever-growing
+//! vector.  Counters are all-time.
+//!
+//! An idle metrics window has no samples; percentiles come back as
+//! `None` (and JSON `null`) rather than crashing the server — the reason
+//! `Summary::percentile` returns `Option`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Retained samples per distribution metric (ring buffer bound).
+pub const SAMPLE_WINDOW: usize = 4096;
+
+/// Bounded sample ring: the last [`SAMPLE_WINDOW`] observations.
+#[derive(Default)]
+struct SampleWindow {
+    buf: Vec<f64>,
+    next: usize,
+}
+
+impl SampleWindow {
+    fn add(&mut self, x: f64) {
+        if self.buf.len() < SAMPLE_WINDOW {
+            self.buf.push(x);
+        } else {
+            self.buf[self.next] = x;
+            self.next = (self.next + 1) % SAMPLE_WINDOW;
+        }
+    }
+
+    /// The window's contents as a [`Summary`] (order is irrelevant to
+    /// mean/percentiles).
+    fn summary(&self) -> Summary {
+        let mut s = Summary::new();
+        for &x in &self.buf {
+            s.add(x);
+        }
+        s
+    }
+}
+
+/// Shared mutable metrics the server and its workers update.
+#[derive(Default)]
+pub struct ServeMetrics {
+    requests: AtomicU64,
+    vertices: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    /// Executed forward micro-batches (kernel invocations).
+    batches: AtomicU64,
+    /// Per-request wall latency, seconds (enqueue → last reply).
+    latency: Mutex<SampleWindow>,
+    /// Real target vertices per executed micro-batch.
+    occupancy: Mutex<SampleWindow>,
+    /// Forward execution time per micro-batch, seconds.
+    exec: Mutex<SampleWindow>,
+}
+
+impl ServeMetrics {
+    pub fn record_request(&self, vertices: usize, latency_s: f64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.vertices.fetch_add(vertices as u64, Ordering::Relaxed);
+        self.latency.lock().unwrap().add(latency_s);
+    }
+
+    pub fn record_cache(&self, hits: usize, misses: usize) {
+        self.cache_hits.fetch_add(hits as u64, Ordering::Relaxed);
+        self.cache_misses.fetch_add(misses as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, occupancy: usize, exec_s: f64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.occupancy.lock().unwrap().add(occupancy as f64);
+        self.exec.lock().unwrap().add(exec_s);
+    }
+
+    /// Consistent point-in-time copy for reporting.  Counters are
+    /// all-time; the distribution summaries cover the most recent
+    /// [`SAMPLE_WINDOW`] samples of each metric.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let latency = self.latency.lock().unwrap().summary();
+        let occupancy = self.occupancy.lock().unwrap().summary();
+        let exec = self.exec.lock().unwrap().summary();
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            vertices: self.vertices.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            latency,
+            occupancy,
+            exec,
+        }
+    }
+}
+
+/// Frozen metrics view with derived percentiles.  The `Summary` fields
+/// cover the most recent [`SAMPLE_WINDOW`] samples of each metric.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub vertices: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub batches: u64,
+    pub latency: Summary,
+    pub occupancy: Summary,
+    pub exec: Summary,
+}
+
+fn opt_num(x: Option<f64>) -> Json {
+    x.map(Json::num).unwrap_or(Json::Null)
+}
+
+impl MetricsSnapshot {
+    pub fn latency_p50_s(&self) -> Option<f64> {
+        self.latency.percentile(50.0)
+    }
+
+    pub fn latency_p95_s(&self) -> Option<f64> {
+        self.latency.percentile(95.0)
+    }
+
+    pub fn latency_p99_s(&self) -> Option<f64> {
+        self.latency.percentile(99.0)
+    }
+
+    /// Mean real targets per executed micro-batch (`None` when idle) —
+    /// how well the micro-batcher is coalescing.
+    pub fn mean_occupancy(&self) -> Option<f64> {
+        (self.occupancy.count() > 0).then(|| self.occupancy.mean())
+    }
+
+    /// JSON dump (idle windows report `null` percentiles, never panic).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::num(self.requests as f64)),
+            ("vertices", Json::num(self.vertices as f64)),
+            ("cache_hits", Json::num(self.cache_hits as f64)),
+            ("cache_misses", Json::num(self.cache_misses as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            (
+                "latency_s",
+                Json::obj(vec![
+                    ("count", Json::num(self.latency.count() as f64)),
+                    (
+                        "mean",
+                        opt_num((self.latency.count() > 0).then(|| self.latency.mean())),
+                    ),
+                    ("p50", opt_num(self.latency_p50_s())),
+                    ("p95", opt_num(self.latency_p95_s())),
+                    ("p99", opt_num(self.latency_p99_s())),
+                ]),
+            ),
+            ("mean_batch_occupancy", opt_num(self.mean_occupancy())),
+            (
+                "exec_mean_s",
+                opt_num((self.exec.count() > 0).then(|| self.exec.mean())),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_snapshot_reports_null_percentiles_without_panicking() {
+        let m = ServeMetrics::default();
+        let snap = m.snapshot();
+        assert_eq!(snap.requests, 0);
+        assert!(snap.latency_p50_s().is_none());
+        assert!(snap.latency_p99_s().is_none());
+        assert!(snap.mean_occupancy().is_none());
+        let json = snap.to_json();
+        assert!(matches!(json.get("latency_s").unwrap().get("p99").unwrap(), &Json::Null));
+        // Must serialize to valid JSON (no bare NaN/inf tokens).
+        Json::parse(&json.pretty()).unwrap();
+    }
+
+    #[test]
+    fn distribution_window_is_bounded_but_counters_are_all_time() {
+        let m = ServeMetrics::default();
+        for i in 0..(SAMPLE_WINDOW + 100) {
+            m.record_request(1, i as f64);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests as usize, SAMPLE_WINDOW + 100);
+        assert_eq!(s.latency.count(), SAMPLE_WINDOW);
+        // The 100 oldest samples were evicted from the ring.
+        assert!(s.latency.percentile(0.0).unwrap() >= 100.0);
+    }
+
+    #[test]
+    fn counters_and_percentiles_accumulate() {
+        let m = ServeMetrics::default();
+        for i in 0..10 {
+            m.record_request(2, 0.001 * (i + 1) as f64);
+        }
+        m.record_cache(3, 17);
+        m.record_batch(4, 0.01);
+        m.record_batch(2, 0.02);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 10);
+        assert_eq!(s.vertices, 20);
+        assert_eq!(s.cache_hits, 3);
+        assert_eq!(s.cache_misses, 17);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.mean_occupancy(), Some(3.0));
+        let p50 = s.latency_p50_s().unwrap();
+        assert!(p50 > 0.004 && p50 < 0.007, "{p50}");
+        assert!(s.latency_p99_s().unwrap() >= p50);
+    }
+}

@@ -1,0 +1,77 @@
+//! Inference serving subsystem — the train→deploy half of the loop.
+//!
+//! Training (PRs 1–3) produces `HPGNNW01`/`HPGNNS01` checkpoints; this
+//! module answers "classify vertex v" requests from them:
+//!
+//! ```text
+//! classify(v…) ──► bounded request queue ──► micro-batcher (size/deadline)
+//!                                                   │ coalesced batches
+//!                       ┌───────────────────────────┴───────────┐
+//!                       ▼                                       ▼
+//!                worker 0 (forward Executable)  …  worker N-1 (replica)
+//!                sample_targets → layout → pack → pad → forward → argmax
+//!                       │                                       │
+//!                       └────────► versioned logits cache ◄─────┘
+//! ```
+//!
+//! * [`infer`] — the shared sample→pad→forward→argmax helper (also the
+//!   evaluator's implementation, so eval and serve cannot drift) and the
+//!   per-target determinism invariant that makes served logits
+//!   bit-identical across worker counts and coalescing patterns.
+//! * [`batcher`] — dynamic micro-batching: coalesce up to the geometry's
+//!   target capacity or a `max_wait` deadline, whichever first; oversized
+//!   submissions split across batches.
+//! * [`server`] — the worker pool of per-worker forward executables,
+//!   weight hot-swap, graceful shutdown.
+//! * [`cache`] — versioned per-vertex logits cache, invalidated on
+//!   weight reload.
+//! * [`metrics`] — request latency percentiles (p50/p95/p99) and
+//!   throughput counters on [`crate::util::stats::Summary`].
+//!
+//! Entry points: [`Server::start`] /
+//! [`crate::api::GeneratedDesign::server`] / the `hp-gnn serve` CLI.
+
+pub mod batcher;
+pub mod cache;
+pub mod infer;
+pub mod metrics;
+pub mod server;
+
+pub use metrics::{MetricsSnapshot, ServeMetrics};
+pub use server::{ServeConfig, Server};
+
+use crate::graph::Vid;
+use crate::util::rng::{Pcg64, SplitMix64};
+
+/// The answer to one "classify vertex v" request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Prediction {
+    pub vertex: Vid,
+    /// Argmax class, `None` when the logits contain a NaN (diverged
+    /// model) — mirrors the evaluator's NaN policy.
+    pub label: Option<usize>,
+    /// The raw logits row (`num_classes` entries).
+    pub logits: Vec<f32>,
+}
+
+/// Inference-time sampling RNG for one query vertex: a pure function of
+/// `(seed, v)`, whitened so neighboring vertex ids land in unrelated
+/// streams.  Per-vertex purity is what makes served results cacheable and
+/// independent of batch composition (see [`infer`]'s module docs).
+pub fn vertex_rng(seed: u64, v: Vid) -> Pcg64 {
+    let mix = SplitMix64 { state: (v as u64) ^ 0x94d0_49bb_1331_11eb }.next();
+    Pcg64::seed_from_u64(seed ^ mix)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vertex_rng_is_pure_and_vertex_distinct() {
+        let a: Vec<u64> = (0..3).map(|_| vertex_rng(7, 42).next_u64()).collect();
+        assert!(a.windows(2).all(|w| w[0] == w[1]), "not pure: {a:?}");
+        assert_ne!(vertex_rng(7, 42).next_u64(), vertex_rng(7, 43).next_u64());
+        assert_ne!(vertex_rng(7, 42).next_u64(), vertex_rng(8, 42).next_u64());
+    }
+}

@@ -1,0 +1,797 @@
+//! The serving engine: request intake, worker pool, weight hot-swap.
+//!
+//! [`Server::start`] compiles one forward [`Executable`] replica per
+//! worker through the runtime's [`Backend`](crate::runtime::Backend)
+//! contract, spawns the micro-batcher and the worker pool, and returns a
+//! [`Server`] whose [`classify`](Server::classify) answers "classify
+//! vertex v" end to end: per-vertex deterministic neighborhood sampling
+//! (the [`Sampler::sample_targets`] path) → per-target positional layout →
+//! greedy packing into the artifact geometry → forward execution →
+//! logits/argmax.  See [`super::infer`] for why served logits are
+//! bit-identical across worker counts and batch coalescing patterns.
+
+use std::path::Path;
+use std::sync::{mpsc, Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::batcher::{run_batcher, WorkItem};
+use super::cache::LogitsCache;
+use super::infer::{self, InferOptions};
+use super::metrics::{MetricsSnapshot, ServeMetrics};
+use super::{vertex_rng, Prediction};
+use crate::coordinator::session::graph_fingerprint;
+use crate::coordinator::trainer::{TrainConfig, ValueFn};
+use crate::graph::{Graph, Vid};
+use crate::layout::pad::EdgeOverflow;
+use crate::layout::{Geometry, IndexedBatch, LayoutOptions};
+use crate::runtime::weights::{checkpoint_magic, CheckpointKind};
+use crate::runtime::{Checkpoint, Executable, ExecOptions, Kind, Runtime, WeightState};
+use crate::sampler::values::GnnModel;
+use crate::sampler::Sampler;
+use crate::util::stats::Timer;
+
+/// Serving knobs (the `hp-gnn serve` flag set).
+#[derive(Clone)]
+pub struct ServeConfig {
+    pub model: GnnModel,
+    /// Artifact geometry name the forward executable is compiled for.
+    pub geometry: String,
+    pub layout: LayoutOptions,
+    pub overflow: EdgeOverflow,
+    /// Feature/label synthesis seed — must match training.
+    pub seed: u64,
+    /// Custom Scatter UDF; must match training for value parity.
+    pub value_fn: Option<ValueFn>,
+    /// Inference-time neighborhood sampling seed.  Each query vertex gets
+    /// its own whitened RNG stream from `(infer_seed, v)`, making served
+    /// results a pure function of the vertex — the cache's soundness and
+    /// the determinism invariant both rest on this.
+    pub infer_seed: u64,
+    /// Executor replicas (worker threads).
+    pub workers: usize,
+    /// Micro-batch coalescing cap; `0` = the geometry's target-vertex
+    /// capacity `b[L]`.
+    pub max_batch: usize,
+    /// Micro-batch deadline: a batch ships at most this long after its
+    /// first request arrives.
+    pub max_wait: Duration,
+    /// Bound of the request queue (enqueue blocks when full).
+    pub queue_depth: usize,
+    /// Enable the versioned logits cache for repeat query vertices.
+    pub cache: bool,
+    /// Kernel threads per worker replica (workers are the parallelism
+    /// axis, so each replica defaults to sequential kernels).
+    pub compute_threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            model: GnnModel::Gcn,
+            geometry: "tiny".to_string(),
+            layout: LayoutOptions::all(),
+            overflow: EdgeOverflow::Error,
+            seed: 7,
+            value_fn: None,
+            infer_seed: 0x5e7e,
+            workers: 2,
+            max_batch: 0,
+            max_wait: Duration::from_micros(200),
+            queue_depth: 1024,
+            cache: false,
+            compute_threads: 1,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Serving view of a training configuration: same model, geometry,
+    /// layout, overflow policy, seed and edge-value UDF; serving knobs at
+    /// their defaults.
+    pub fn from_train(cfg: &TrainConfig) -> ServeConfig {
+        ServeConfig {
+            model: cfg.model,
+            geometry: cfg.geometry.clone(),
+            layout: cfg.layout,
+            overflow: cfg.overflow,
+            seed: cfg.seed,
+            value_fn: cfg.value_fn.clone(),
+            ..ServeConfig::default()
+        }
+    }
+}
+
+impl std::fmt::Debug for ServeConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServeConfig")
+            .field("model", &self.model)
+            .field("geometry", &self.geometry)
+            .field("workers", &self.workers)
+            .field("max_batch", &self.max_batch)
+            .field("max_wait", &self.max_wait)
+            .field("cache", &self.cache)
+            .finish()
+    }
+}
+
+/// Weights plus the cache version they correspond to, swapped atomically
+/// on reload.
+struct VersionedWeights {
+    version: u64,
+    weights: Arc<WeightState>,
+}
+
+/// The serving identity an `HPGNNS01` session snapshot must match.
+/// Weights-only `HPGNNW01` files carry no metadata, but snapshots record
+/// what they were trained with — serving them under a different sampler,
+/// graph, seed, model or geometry would return confidently wrong
+/// predictions, so the mismatch is rejected exactly like session resume
+/// rejects it.
+struct SnapshotIdentity {
+    model: String,
+    geometry: String,
+    sampler: String,
+    graph: String,
+    seed: u64,
+}
+
+impl SnapshotIdentity {
+    fn new(cfg: &ServeConfig, graph: &Graph, sampler: &dyn Sampler) -> SnapshotIdentity {
+        SnapshotIdentity {
+            model: cfg.model.as_str().to_string(),
+            geometry: cfg.geometry.clone(),
+            sampler: sampler.name(),
+            graph: graph_fingerprint(graph),
+            seed: cfg.seed,
+        }
+    }
+
+    fn check(&self, snap: &Checkpoint) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            snap.model == self.model,
+            "checkpoint was trained with model {:?}, the server runs {:?}",
+            snap.model,
+            self.model
+        );
+        anyhow::ensure!(
+            snap.geometry == self.geometry,
+            "checkpoint geometry {:?} does not match serving geometry {:?}",
+            snap.geometry,
+            self.geometry
+        );
+        anyhow::ensure!(
+            snap.sampler == self.sampler,
+            "checkpoint was trained with sampler {:?}, the server samples with {:?}",
+            snap.sampler,
+            self.sampler
+        );
+        anyhow::ensure!(
+            snap.graph == self.graph,
+            "checkpoint graph {:?} does not match serving graph {:?}",
+            snap.graph,
+            self.graph
+        );
+        anyhow::ensure!(
+            snap.seed == self.seed,
+            "checkpoint was trained with seed {} but the server synthesizes features \
+             with seed {}",
+            snap.seed,
+            self.seed
+        );
+        Ok(())
+    }
+}
+
+/// Load serving weights from either checkpoint format, validating an
+/// `HPGNNS01` snapshot's recorded training identity against `id` (an
+/// `HPGNNW01` file has no metadata to check — shapes are still validated
+/// downstream).
+fn load_weights_validated(path: &Path, id: &SnapshotIdentity) -> anyhow::Result<WeightState> {
+    match checkpoint_magic(path)? {
+        CheckpointKind::Weights => WeightState::load(path),
+        CheckpointKind::Session => {
+            let snap = Checkpoint::load(path)?;
+            id.check(&snap)?;
+            Ok(snap.weights)
+        }
+    }
+}
+
+/// A live inference server.  `Sync`: share it behind an `Arc` and call
+/// [`classify`](Server::classify) from any number of client threads.
+pub struct Server {
+    geom: Geometry,
+    weight_shapes: Vec<(Vec<usize>, Vec<usize>)>,
+    identity: SnapshotIdentity,
+    num_workers: usize,
+    max_batch: usize,
+    weights: Arc<RwLock<VersionedWeights>>,
+    cache: Arc<LogitsCache>,
+    metrics: Arc<ServeMetrics>,
+    job_tx: Mutex<Option<mpsc::SyncSender<WorkItem>>>,
+    batcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Compile the worker replicas, validate `weights` against the
+    /// artifact, and bring the pipeline up.
+    pub fn start(
+        runtime: &Runtime,
+        graph: Arc<Graph>,
+        sampler: Arc<dyn Sampler>,
+        cfg: ServeConfig,
+        weights: WeightState,
+    ) -> anyhow::Result<Server> {
+        let num_workers = cfg.workers.max(1);
+        let exec_opts = ExecOptions { compute_threads: Some(cfg.compute_threads.max(1)) };
+        let mut exes = Vec::with_capacity(num_workers);
+        for _ in 0..num_workers {
+            exes.push(runtime.compile_role_with(
+                cfg.model,
+                &cfg.geometry,
+                Kind::Forward,
+                &exec_opts,
+            )?);
+        }
+        let spec = &exes[0].spec;
+        let geom = spec.geometry.clone();
+        let weight_shapes = spec.weight_shapes.clone();
+        let identity = SnapshotIdentity::new(&cfg, &graph, sampler.as_ref());
+        validate_weight_shapes(&weight_shapes, &weights)?;
+        anyhow::ensure!(
+            geom.layers() == sampler.num_layers(),
+            "sampler has {} layers, artifact geometry {} has {}",
+            sampler.num_layers(),
+            geom.name,
+            geom.layers()
+        );
+
+        let capacity = geom.b[geom.layers()];
+        let max_batch = if cfg.max_batch == 0 { capacity } else { cfg.max_batch };
+        let cache = Arc::new(LogitsCache::new(cfg.cache));
+        let metrics = Arc::new(ServeMetrics::default());
+        let weights = Arc::new(RwLock::new(VersionedWeights {
+            version: cache.version(),
+            weights: Arc::new(weights),
+        }));
+
+        let (job_tx, job_rx) = mpsc::sync_channel::<WorkItem>(cfg.queue_depth.max(1));
+        let (work_tx, work_rx) = mpsc::sync_channel::<Vec<WorkItem>>(num_workers);
+        let max_wait = cfg.max_wait;
+        let batcher = std::thread::Builder::new()
+            .name("hp-gnn-serve-batcher".to_string())
+            .spawn(move || run_batcher(job_rx, work_tx, max_batch, max_wait))?;
+
+        let opts = InferOptions {
+            model: cfg.model,
+            layout: cfg.layout,
+            overflow: cfg.overflow,
+            seed: cfg.seed,
+            value_fn: cfg.value_fn.clone(),
+        };
+        let work_rx = Arc::new(Mutex::new(work_rx));
+        let mut workers = Vec::with_capacity(num_workers);
+        for (i, exe) in exes.into_iter().enumerate() {
+            let ctx = WorkerCtx {
+                exe,
+                graph: Arc::clone(&graph),
+                sampler: Arc::clone(&sampler),
+                opts: opts.clone(),
+                infer_seed: cfg.infer_seed,
+                weights: Arc::clone(&weights),
+                cache: Arc::clone(&cache),
+                metrics: Arc::clone(&metrics),
+                work_rx: Arc::clone(&work_rx),
+            };
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("hp-gnn-serve-worker-{i}"))
+                    .spawn(move || run_worker(ctx))?,
+            );
+        }
+
+        Ok(Server {
+            geom,
+            weight_shapes,
+            identity,
+            num_workers,
+            max_batch,
+            weights,
+            cache,
+            metrics,
+            job_tx: Mutex::new(Some(job_tx)),
+            batcher: Some(batcher),
+            workers,
+        })
+    }
+
+    /// [`start`](Server::start) with weights loaded from an `HPGNNW01` or
+    /// `HPGNNS01` checkpoint.  A session snapshot's recorded training
+    /// identity (model, geometry, sampler, graph, seed) must match the
+    /// serving configuration, or the load is rejected.
+    pub fn from_checkpoint(
+        runtime: &Runtime,
+        graph: Arc<Graph>,
+        sampler: Arc<dyn Sampler>,
+        cfg: ServeConfig,
+        checkpoint: &Path,
+    ) -> anyhow::Result<Server> {
+        let identity = SnapshotIdentity::new(&cfg, &graph, sampler.as_ref());
+        let weights = load_weights_validated(checkpoint, &identity)?;
+        Server::start(runtime, graph, sampler, cfg, weights)
+    }
+
+    /// Classify a set of vertices: cache hits answer immediately, misses
+    /// go through the micro-batcher, and the results come back in input
+    /// order.  Blocking; call from as many threads as you like.
+    pub fn classify(&self, vertices: &[Vid]) -> anyhow::Result<Vec<Arc<Prediction>>> {
+        anyhow::ensure!(!vertices.is_empty(), "classify: no vertices given");
+        let t = Timer::start();
+        let tx = {
+            let guard = self.job_tx.lock().unwrap();
+            guard
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("server is shut down"))?
+                .clone()
+        };
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let mut results: Vec<Option<Arc<Prediction>>> = vec![None; vertices.len()];
+        let (mut hits, mut pending) = (0usize, 0usize);
+        for (idx, &vertex) in vertices.iter().enumerate() {
+            if let Some(hit) = self.cache.get(vertex) {
+                hits += 1;
+                results[idx] = Some(hit);
+            } else {
+                pending += 1;
+                tx.send(WorkItem { vertex, idx, reply: reply_tx.clone() })
+                    .map_err(|_| anyhow::anyhow!("server request queue closed"))?;
+            }
+        }
+        drop(reply_tx);
+        self.metrics.record_cache(hits, pending);
+        for _ in 0..pending {
+            let (idx, res) = reply_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("serving workers terminated before replying"))?;
+            results[idx] = Some(res?);
+        }
+        self.metrics.record_request(vertices.len(), t.secs());
+        Ok(results
+            .into_iter()
+            .map(|slot| slot.expect("every vertex slot resolved"))
+            .collect())
+    }
+
+    /// Single-vertex convenience wrapper over [`classify`](Self::classify).
+    pub fn classify_one(&self, vertex: Vid) -> anyhow::Result<Arc<Prediction>> {
+        Ok(self.classify(&[vertex])?.remove(0))
+    }
+
+    /// Hot-swap the model weights from an `HPGNNW01`/`HPGNNS01` checkpoint
+    /// without restarting: in-flight batches finish under the old weights
+    /// (and cannot pollute the cache — their version is stale), new
+    /// requests see the new model.
+    pub fn reload_weights(&self, checkpoint: &Path) -> anyhow::Result<()> {
+        let w = load_weights_validated(checkpoint, &self.identity)?;
+        validate_weight_shapes(&self.weight_shapes, &w)?;
+        let mut guard = self.weights.write().unwrap();
+        guard.version = self.cache.invalidate();
+        guard.weights = Arc::new(w);
+        Ok(())
+    }
+
+    /// Point-in-time serving metrics.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Live entries in the logits cache.
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn geometry(&self) -> &Geometry {
+        &self.geom
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.num_workers
+    }
+
+    /// The effective micro-batch coalescing cap (a configured `0`
+    /// resolves to the geometry's target-vertex capacity).
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Stop accepting requests, drain the queue, and join every thread.
+    /// In-flight [`classify`](Self::classify) calls complete.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        drop(self.job_tx.lock().unwrap().take());
+        if let Some(h) = self.batcher.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn validate_weight_shapes(
+    weight_shapes: &[(Vec<usize>, Vec<usize>)],
+    weights: &WeightState,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        weights.tensors.len() == weight_shapes.len() * 2,
+        "checkpoint has {} weight tensors, artifact wants {}",
+        weights.tensors.len(),
+        weight_shapes.len() * 2
+    );
+    for (l, (wshape, bshape)) in weight_shapes.iter().enumerate() {
+        anyhow::ensure!(
+            &weights.tensors[2 * l].0 == wshape,
+            "checkpoint w{} shape {:?} does not match artifact shape {:?}",
+            l + 1,
+            weights.tensors[2 * l].0,
+            wshape
+        );
+        anyhow::ensure!(
+            &weights.tensors[2 * l + 1].0 == bshape,
+            "checkpoint b{} shape {:?} does not match artifact shape {:?}",
+            l + 1,
+            weights.tensors[2 * l + 1].0,
+            bshape
+        );
+    }
+    Ok(())
+}
+
+/// Everything one worker thread owns or shares.
+struct WorkerCtx {
+    exe: Executable,
+    graph: Arc<Graph>,
+    sampler: Arc<dyn Sampler>,
+    opts: InferOptions,
+    infer_seed: u64,
+    weights: Arc<RwLock<VersionedWeights>>,
+    cache: Arc<LogitsCache>,
+    metrics: Arc<ServeMetrics>,
+    work_rx: Arc<Mutex<mpsc::Receiver<Vec<WorkItem>>>>,
+}
+
+/// Worker thread body: pull coalesced batches, sample each vertex's
+/// subtree, pack subtrees into the geometry, execute, reply.
+fn run_worker(ctx: WorkerCtx) {
+    loop {
+        // Receive under the shared-receiver lock; only the *wait* is
+        // serialized — execution below runs with the lock released.
+        let batch = {
+            let guard = ctx.work_rx.lock().unwrap();
+            match guard.recv() {
+                Ok(b) => b,
+                Err(_) => return, // batcher gone: shutdown
+            }
+        };
+        serve_batch(&ctx, batch);
+    }
+}
+
+fn serve_batch(ctx: &WorkerCtx, batch: Vec<WorkItem>) {
+    // Weights and their cache version travel together so a concurrent
+    // reload can't mix old logits with the new version stamp.
+    let (version, weights) = {
+        let guard = ctx.weights.read().unwrap();
+        (guard.version, Arc::clone(&guard.weights))
+    };
+
+    // Sample + lay out each vertex's subtree independently (per-vertex
+    // RNG: results don't depend on batch composition).
+    let mut pieces: Vec<(WorkItem, IndexedBatch)> = Vec::with_capacity(batch.len());
+    for item in batch {
+        let mut rng = vertex_rng(ctx.infer_seed, item.vertex);
+        match ctx
+            .sampler
+            .sample_targets(&ctx.graph, &[item.vertex], &mut rng)
+            .map(|mb| infer::index_minibatch(&ctx.graph, &mb, &ctx.opts))
+        {
+            Ok(ib) => pieces.push((item, ib)),
+            Err(e) => {
+                let _ = item
+                    .reply
+                    .send((item.idx, Err(e.context(format!("sampling vertex {}", item.vertex)))));
+            }
+        }
+    }
+
+    // Greedy packing: a group of subtrees must fit the artifact geometry
+    // exactly as sampled (no cross-group effects), so per-layer vertex
+    // AND edge budgets bound the group.  A subtree that alone exceeds a
+    // budget still forms its own group — pad() then applies the overflow
+    // policy identically to how a solo request would see it.
+    let ll = ctx.exe.spec.geometry.layers();
+    let geom = &ctx.exe.spec.geometry;
+    let mut group: Vec<(WorkItem, IndexedBatch)> = Vec::new();
+    let mut used_b = vec![0usize; ll + 1];
+    let mut used_e = vec![0usize; ll];
+    let flush = |group: &mut Vec<(WorkItem, IndexedBatch)>,
+                 used_b: &mut Vec<usize>,
+                 used_e: &mut Vec<usize>| {
+        if group.is_empty() {
+            return;
+        }
+        execute_group(ctx, version, &weights, std::mem::take(group));
+        used_b.iter_mut().for_each(|x| *x = 0);
+        used_e.iter_mut().for_each(|x| *x = 0);
+    };
+    for (item, ib) in pieces {
+        let fits_b = (0..=ll).all(|l| used_b[l] + ib.layers[l].len() <= geom.b[l]);
+        let fits_e = (0..ll).all(|l| used_e[l] + ib.layer_edges[l].src.len() <= geom.e[l]);
+        if !(fits_b && fits_e) && !group.is_empty() {
+            flush(&mut group, &mut used_b, &mut used_e);
+        }
+        for l in 0..=ll {
+            used_b[l] += ib.layers[l].len();
+        }
+        for l in 0..ll {
+            used_e[l] += ib.layer_edges[l].src.len();
+        }
+        group.push((item, ib));
+    }
+    flush(&mut group, &mut used_b, &mut used_e);
+}
+
+/// Execute one packed group as a single forward pass and reply per item.
+fn execute_group(
+    ctx: &WorkerCtx,
+    version: u64,
+    weights: &WeightState,
+    group: Vec<(WorkItem, IndexedBatch)>,
+) {
+    let parts: Vec<&IndexedBatch> = group.iter().map(|(_, ib)| ib).collect();
+    let merged = infer::merge_indexed(&parts);
+    let t = Timer::start();
+    let result = infer::infer_indexed(&ctx.exe, &ctx.graph, &ctx.opts, weights, &merged);
+    ctx.metrics.record_batch(group.len(), t.secs());
+    match result {
+        Ok(inf) => {
+            debug_assert_eq!(inf.real_targets, group.len());
+            for (j, (item, _)) in group.into_iter().enumerate() {
+                let row = inf.row(j);
+                let pred = Arc::new(Prediction {
+                    vertex: item.vertex,
+                    label: infer::argmax(row),
+                    logits: row.to_vec(),
+                });
+                ctx.cache.put(version, Arc::clone(&pred));
+                let _ = item.reply.send((item.idx, Ok(pred)));
+            }
+        }
+        Err(e) => {
+            let msg = format!("forward inference failed: {e:#}");
+            for (item, _) in group {
+                let _ = item.reply.send((item.idx, Err(anyhow::anyhow!("{msg}"))));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::sampler::neighbor::NeighborSampler;
+
+    fn tiny_graph() -> Arc<Graph> {
+        let mut g = generator::with_min_degree(
+            generator::rmat(400, 3200, Default::default(), 31),
+            1,
+            30,
+        );
+        g.feat_dim = 16;
+        g.num_classes = 4;
+        Arc::new(g)
+    }
+
+    fn start(cfg: ServeConfig) -> (Runtime, Server) {
+        let rt = Runtime::reference();
+        let exe = rt.compile_role(GnnModel::Gcn, "tiny", Kind::Forward).unwrap();
+        let weights = WeightState::init_glorot(&exe.spec.weight_shapes, 3);
+        let server = Server::start(
+            &rt,
+            tiny_graph(),
+            Arc::new(NeighborSampler::new(4, vec![5, 3])),
+            cfg,
+            weights,
+        )
+        .unwrap();
+        (rt, server)
+    }
+
+    #[test]
+    fn classifies_vertices_and_reports_metrics() {
+        let (_rt, server) = start(ServeConfig::default());
+        let preds = server.classify(&[5, 77, 123]).unwrap();
+        assert_eq!(preds.len(), 3);
+        for (p, &v) in preds.iter().zip(&[5u32, 77, 123]) {
+            assert_eq!(p.vertex, v);
+            assert_eq!(p.logits.len(), 4);
+            assert!(p.logits.iter().all(|x| x.is_finite()));
+            assert!(p.label.unwrap() < 4);
+        }
+        let m = server.metrics();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.vertices, 3);
+        assert!(m.batches >= 1);
+        assert!(m.latency_p50_s().is_some());
+        server.shutdown();
+    }
+
+    #[test]
+    fn idle_server_metrics_do_not_panic() {
+        let (_rt, server) = start(ServeConfig::default());
+        let m = server.metrics();
+        assert_eq!(m.requests, 0);
+        assert!(m.latency_p99_s().is_none());
+        m.to_json().pretty();
+    }
+
+    #[test]
+    fn cache_hits_repeat_queries_and_reload_invalidates() {
+        let mut cfg = ServeConfig { cache: true, ..ServeConfig::default() };
+        cfg.workers = 1;
+        let (_rt, server) = start(cfg);
+        let a = server.classify_one(42).unwrap();
+        assert_eq!(server.metrics().cache_misses, 1);
+        let b = server.classify_one(42).unwrap();
+        assert_eq!(server.metrics().cache_hits, 1, "second query must hit");
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(server.cache_len(), 1);
+
+        // Hot-swap different weights: cache must invalidate and logits
+        // must change.
+        let rt = Runtime::reference();
+        let exe = rt.compile_role(GnnModel::Gcn, "tiny", Kind::Forward).unwrap();
+        let other = WeightState::init_glorot(&exe.spec.weight_shapes, 99);
+        let dir = std::env::temp_dir().join(format!("hpgnn-serve-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("other.bin");
+        other.save(&path).unwrap();
+        server.reload_weights(&path).unwrap();
+        assert_eq!(server.cache_len(), 0, "reload must clear the cache");
+        let c = server.classify_one(42).unwrap();
+        assert_ne!(a.logits, c.logits, "new weights must change the logits");
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_each_get_their_own_vertices() {
+        let (_rt, server) = start(ServeConfig {
+            workers: 4,
+            max_wait: Duration::from_millis(2),
+            ..ServeConfig::default()
+        });
+        let server = Arc::new(server);
+        let mut handles = Vec::new();
+        for c in 0..6u32 {
+            let s = Arc::clone(&server);
+            handles.push(std::thread::spawn(move || {
+                let verts: Vec<Vid> = (0..8).map(|i| (c * 37 + i * 11) % 400).collect();
+                let preds = s.classify(&verts).unwrap();
+                for (p, &v) in preds.iter().zip(&verts) {
+                    assert_eq!(p.vertex, v, "reply order scrambled");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let m = server.metrics();
+        assert_eq!(m.requests, 6);
+        assert_eq!(m.vertices, 48);
+    }
+
+    #[test]
+    fn snapshot_identity_mismatch_is_rejected_at_start_and_reload() {
+        let rt = Runtime::reference();
+        let exe = rt.compile_role(GnnModel::Gcn, "tiny", Kind::Forward).unwrap();
+        let graph = tiny_graph();
+        // A snapshot recorded under a *different* sampler than the server
+        // would use — resume rejects this, so serving must too.
+        let snap = Checkpoint {
+            step: 5,
+            seed: 7,
+            model: "gcn".into(),
+            geometry: "tiny".into(),
+            sampler: "NS(t=4, budgets=[9, 9])".into(),
+            graph: graph_fingerprint(&graph),
+            weights: WeightState::init_glorot(&exe.spec.weight_shapes, 3),
+            adam: None,
+        };
+        let dir = std::env::temp_dir().join(format!("hpgnn-serve-id-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mismatch.ckpt");
+        snap.save(&path).unwrap();
+
+        let sampler: Arc<dyn Sampler> = Arc::new(NeighborSampler::new(4, vec![5, 3]));
+        let err = Server::from_checkpoint(
+            &rt,
+            Arc::clone(&graph),
+            Arc::clone(&sampler),
+            ServeConfig::default(),
+            &path,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("sampler"), "{err}");
+
+        // Reload path: a running server must reject it too.
+        let (_rt2, server) = start(ServeConfig::default());
+        let err = server.reload_weights(&path).unwrap_err().to_string();
+        assert!(err.contains("sampler"), "{err}");
+        // A matching snapshot loads fine.
+        let ok = Checkpoint { sampler: "NS(t=4, budgets=[5, 3])".into(), ..snap };
+        let ok_path = dir.join("match.ckpt");
+        ok.save(&ok_path).unwrap();
+        server.reload_weights(&ok_path).unwrap();
+        server.shutdown();
+    }
+
+    #[test]
+    fn rejects_mismatched_weights() {
+        let rt = Runtime::reference();
+        let bad = WeightState { tensors: vec![(vec![2, 2], vec![0.0; 4])] };
+        let err = Server::start(
+            &rt,
+            tiny_graph(),
+            Arc::new(NeighborSampler::new(4, vec![5, 3])),
+            ServeConfig::default(),
+            bad,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("weight tensors"), "{err}");
+    }
+
+    #[test]
+    fn subgraph_sampler_requests_fail_per_vertex_not_per_server() {
+        use crate::sampler::subgraph::SubgraphSampler;
+        let rt = Runtime::reference();
+        let exe = rt.compile_role(GnnModel::Gcn, "ss_small", Kind::Forward).unwrap();
+        let weights = WeightState::init_glorot(&exe.spec.weight_shapes, 3);
+        let mut g = generator::with_min_degree(
+            generator::rmat(400, 3200, Default::default(), 31),
+            1,
+            30,
+        );
+        g.feat_dim = 500;
+        g.num_classes = 7;
+        let cfg = ServeConfig {
+            geometry: "ss_small".to_string(),
+            overflow: EdgeOverflow::TruncateKeepSelf,
+            ..ServeConfig::default()
+        };
+        let server = Server::start(
+            &rt,
+            Arc::new(g),
+            Arc::new(SubgraphSampler::new(64, 2)),
+            cfg,
+            weights,
+        )
+        .unwrap();
+        let err = format!("{:#}", server.classify_one(3).unwrap_err());
+        assert!(err.contains("target-directed"), "{err}");
+        server.shutdown();
+    }
+}

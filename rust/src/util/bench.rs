@@ -64,7 +64,9 @@ impl Bench {
             name: name.to_string(),
             mean_s: summary.mean(),
             std_s: summary.std(),
-            median_s: summary.median(),
+            median_s: summary
+                .median()
+                .expect("bench runs record at least min_samples >= 1 samples"),
             samples: summary.count(),
             metric: None,
         }

@@ -70,23 +70,27 @@ impl Summary {
         self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 
-    /// Percentile by linear interpolation (p in [0, 100]).
-    pub fn percentile(&self, p: f64) -> f64 {
-        assert!(!self.samples.is_empty(), "percentile of empty summary");
+    /// Percentile by linear interpolation (p in [0, 100]).  `None` when no
+    /// samples have been recorded — an idle serving metrics window must
+    /// report "no data", not crash the server.
+    pub fn percentile(&self, p: f64) -> Option<f64> {
+        if self.samples.is_empty() {
+            return None;
+        }
         let mut sorted = self.samples.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let rank = (p / 100.0) * (sorted.len() - 1) as f64;
         let lo = rank.floor() as usize;
         let hi = rank.ceil() as usize;
-        if lo == hi {
+        Some(if lo == hi {
             sorted[lo]
         } else {
             let w = rank - lo as f64;
             sorted[lo] * (1.0 - w) + sorted[hi] * w
-        }
+        })
     }
 
-    pub fn median(&self) -> f64 {
+    pub fn median(&self) -> Option<f64> {
         self.percentile(50.0)
     }
 }
@@ -115,10 +119,10 @@ mod tests {
         for i in 1..=100 {
             s.add(i as f64);
         }
-        assert!((s.median() - 50.5).abs() < 1e-9);
-        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
-        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
-        assert!((s.percentile(90.0) - 90.1).abs() < 1e-9);
+        assert!((s.median().unwrap() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0).unwrap() - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0).unwrap() - 100.0).abs() < 1e-9);
+        assert!((s.percentile(90.0).unwrap() - 90.1).abs() < 1e-9);
     }
 
     #[test]
@@ -127,7 +131,16 @@ mod tests {
         s.add(3.0);
         assert_eq!(s.mean(), 3.0);
         assert_eq!(s.var(), 0.0);
-        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.median(), Some(3.0));
+    }
+
+    #[test]
+    fn empty_summary_has_no_percentiles() {
+        let s = Summary::new();
+        assert_eq!(s.count(), 0);
+        assert!(s.percentile(50.0).is_none());
+        assert!(s.median().is_none());
+        assert!(s.percentile(99.0).is_none());
     }
 
     #[test]

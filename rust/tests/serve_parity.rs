@@ -1,0 +1,217 @@
+//! Serving-path determinism and end-to-end coverage.
+//!
+//! The repo's determinism invariant — results bit-identical at every
+//! thread count — extends to serving: a served vertex's logits must be
+//! bit-identical to the evaluator's forward path (`serve::infer`, the
+//! exact code `evaluate_with` runs over a sampled batch) no matter how
+//! many workers serve it, whether the cache is on, or how requests
+//! coalesce into micro-batches.  Plus: the CLI answers requests from
+//! checkpoints written by `hp-gnn train` (both formats).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use hp_gnn::graph::{generator, Graph};
+use hp_gnn::runtime::{Kind, Runtime, WeightState};
+use hp_gnn::sampler::neighbor::NeighborSampler;
+use hp_gnn::sampler::Sampler;
+use hp_gnn::serve::infer::{self, InferOptions};
+use hp_gnn::serve::{vertex_rng, ServeConfig, Server};
+
+fn tiny_graph() -> Graph {
+    let mut g = generator::with_min_degree(
+        generator::rmat(400, 3200, Default::default(), 31),
+        1,
+        30,
+    );
+    g.feat_dim = 16;
+    g.num_classes = 4;
+    g.name = "parity".to_string();
+    g
+}
+
+fn infer_options(cfg: &ServeConfig) -> InferOptions {
+    InferOptions {
+        model: cfg.model,
+        layout: cfg.layout,
+        overflow: cfg.overflow,
+        seed: cfg.seed,
+        value_fn: None,
+    }
+}
+
+/// Ground truth for one vertex: the evaluator's forward path run over the
+/// same per-vertex sampled batch the server draws.
+fn solo_logits(
+    rt: &Runtime,
+    g: &Graph,
+    sampler: &NeighborSampler,
+    weights: &WeightState,
+    cfg: &ServeConfig,
+    v: u32,
+) -> Vec<f32> {
+    let exe = rt.compile_role(cfg.model, &cfg.geometry, Kind::Forward).unwrap();
+    let mb = sampler
+        .sample_targets(g, &[v], &mut vertex_rng(cfg.infer_seed, v))
+        .unwrap();
+    let opts = infer_options(cfg);
+    let ib = infer::index_minibatch(g, &mb, &opts);
+    let inf = infer::infer_indexed(&exe, g, &opts, weights, &ib).unwrap();
+    assert_eq!(inf.real_targets, 1);
+    inf.row(0).to_vec()
+}
+
+#[test]
+fn served_logits_bit_identical_across_workers_cache_and_coalescing() {
+    let rt = Runtime::reference();
+    let graph = Arc::new(tiny_graph());
+    let sampler = NeighborSampler::new(4, vec![5, 3]);
+    let base = ServeConfig::default();
+    let exe = rt.compile_role(base.model, &base.geometry, Kind::Forward).unwrap();
+    let weights = WeightState::init_glorot(&exe.spec.weight_shapes, 3);
+
+    let vertices: Vec<u32> = vec![2, 48, 77, 123, 199, 256, 311, 388];
+    let truth: Vec<Vec<f32>> = vertices
+        .iter()
+        .map(|&v| solo_logits(&rt, &graph, &sampler, &weights, &base, v))
+        .collect();
+
+    for workers in [1usize, 4] {
+        for cache in [false, true] {
+            let cfg = ServeConfig {
+                workers,
+                cache,
+                max_wait: Duration::from_millis(2),
+                ..base.clone()
+            };
+            let server = Server::start(
+                &rt,
+                Arc::clone(&graph),
+                Arc::new(sampler.clone()),
+                cfg,
+                weights.clone(),
+            )
+            .unwrap();
+            // Coalescing pattern 1: one request per vertex (batches form
+            // from whatever the batcher happens to coalesce).
+            for (v, want) in vertices.iter().zip(&truth) {
+                let p = server.classify_one(*v).unwrap();
+                assert_eq!(
+                    &p.logits, want,
+                    "vertex {v} drifted (workers={workers}, cache={cache}, singles)"
+                );
+                assert_eq!(p.label, infer::argmax(want));
+            }
+            // Coalescing pattern 2: one bulk request spanning several
+            // micro-batches (tiny's target capacity is 4 < 8 vertices).
+            for (p, want) in server.classify(&vertices).unwrap().iter().zip(&truth) {
+                assert_eq!(
+                    &p.logits, want,
+                    "vertex {} drifted (workers={workers}, cache={cache}, bulk)",
+                    p.vertex
+                );
+            }
+            server.shutdown();
+        }
+    }
+}
+
+#[test]
+fn unbatched_and_zero_wait_configurations_agree_with_truth() {
+    let rt = Runtime::reference();
+    let graph = Arc::new(tiny_graph());
+    let sampler = NeighborSampler::new(4, vec![5, 3]);
+    let base = ServeConfig::default();
+    let exe = rt.compile_role(base.model, &base.geometry, Kind::Forward).unwrap();
+    let weights = WeightState::init_glorot(&exe.spec.weight_shapes, 9);
+    let vertices = [5u32, 60, 245];
+    let truth: Vec<Vec<f32>> = vertices
+        .iter()
+        .map(|&v| solo_logits(&rt, &graph, &sampler, &weights, &base, v))
+        .collect();
+    for (max_batch, max_wait) in [(1usize, Duration::from_millis(1)), (64, Duration::ZERO)] {
+        let cfg = ServeConfig { max_batch, max_wait, ..base.clone() };
+        let server = Server::start(
+            &rt,
+            Arc::clone(&graph),
+            Arc::new(sampler.clone()),
+            cfg,
+            weights.clone(),
+        )
+        .unwrap();
+        for (p, want) in server.classify(&vertices).unwrap().iter().zip(&truth) {
+            assert_eq!(&p.logits, want, "max_batch={max_batch} drifted");
+        }
+        server.shutdown();
+    }
+}
+
+// ---- CLI end-to-end: train writes a checkpoint, serve answers from it --
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("hpgnn-serve-cli-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The "vertex N: class C" lines of a serve run's stdout.
+fn vertex_lines(stdout: &str) -> Vec<String> {
+    stdout
+        .lines()
+        .filter(|l| l.trim_start().starts_with("vertex "))
+        .map(|l| l.trim().to_string())
+        .collect()
+}
+
+#[test]
+fn cli_serve_answers_from_both_checkpoint_formats_deterministically() {
+    let exe = env!("CARGO_BIN_EXE_hp-gnn");
+    let dir = temp_dir("e2e");
+    let weights = dir.join("weights.bin");
+    let snapshot = dir.join("session.ckpt");
+
+    // Train on a small synthetic instance; write BOTH artifact kinds:
+    // final weights (--save, HPGNNW01) and a session snapshot
+    // (--checkpoint, HPGNNS01).
+    let out = std::process::Command::new(exe)
+        .args(["train", "--dataset", "FL", "--scale", "0.004", "--steps", "2"])
+        .args(["--save", weights.to_str().unwrap()])
+        .args(["--checkpoint", snapshot.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "train failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(weights.exists() && snapshot.exists());
+
+    let serve = |ckpt: &std::path::Path, extra: &[&str]| {
+        let mut args =
+            vec!["serve", "--checkpoint", ckpt.to_str().unwrap(), "--dataset", "FL"];
+        args.extend_from_slice(&["--scale", "0.004", "--vertices", "3,17,42"]);
+        args.extend_from_slice(extra);
+        let out = std::process::Command::new(exe).args(&args).output().unwrap();
+        assert!(
+            out.status.success(),
+            "serve failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+
+    // HPGNNW01 weights, unbatched single worker.
+    let a = serve(&weights, &["--workers", "1", "--max-batch", "1"]);
+    let lines_a = vertex_lines(&a);
+    assert_eq!(lines_a.len(), 3, "one answer line per vertex:\n{a}");
+    assert!(lines_a.iter().all(|l| l.contains("class")), "{a}");
+
+    // Same checkpoint, coalescing worker pool: answers must be
+    // bit-identical (the printed logits include full float repr).
+    let b = serve(&weights, &["--workers", "4", "--max-batch", "64", "--cache"]);
+    assert_eq!(lines_a, vertex_lines(&b), "serving answers depend on batching");
+
+    // HPGNNS01 session snapshot: same weights, same answers.
+    let c = serve(&snapshot, &[]);
+    assert_eq!(lines_a, vertex_lines(&c), "session snapshot served different answers");
+}

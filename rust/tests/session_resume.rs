@@ -245,5 +245,10 @@ fn cli_unknown_subcommand_fails_and_help_succeeds() {
 
     let out = std::process::Command::new(exe).arg("help").output().unwrap();
     assert!(out.status.success(), "`hp-gnn help` must exit 0");
-    assert!(String::from_utf8_lossy(&out.stdout).contains("SUBCOMMANDS"));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("SUBCOMMANDS"));
+    // Every subcommand the dispatcher knows must be in the overview.
+    for sub in ["run", "train", "serve", "dse", "simulate", "info"] {
+        assert!(stdout.contains(sub), "help output misses {sub:?}: {stdout}");
+    }
 }
