@@ -14,14 +14,17 @@
 
 use std::sync::Arc;
 
+use hp_gnn::api::Workspace;
 use hp_gnn::coordinator::{train, TrainConfig};
 use hp_gnn::graph::generator;
-use hp_gnn::runtime::Runtime;
 use hp_gnn::sampler::neighbor::NeighborSampler;
 use hp_gnn::sampler::values::GnnModel;
 
 fn main() -> anyhow::Result<()> {
-    let runtime = Runtime::auto(std::path::Path::new("artifacts"))?;
+    // The workspace owns the runtime; the low-level train() entry point
+    // borrows it for UDF experiments below the ProgramSpec surface.
+    let ws = Workspace::open(std::path::Path::new("artifacts"))?;
+    let runtime = ws.runtime();
 
     let mut g = generator::with_min_degree(
         generator::rmat(3_000, 24_000, Default::default(), 5),
@@ -60,7 +63,7 @@ fn main() -> anyhow::Result<()> {
     cfg.value_fn = Some(custom_values);
 
     println!("training custom layer (heat-kernel Scatter UDF, sum Gather, ReLU Update)...");
-    let report = train(&runtime, &g, &sampler, &cfg)?;
+    let report = train(runtime, &g, &sampler, &cfg)?;
     let m = &report.metrics;
     let (head, tail) = m
         .loss_drop()
@@ -77,7 +80,7 @@ fn main() -> anyhow::Result<()> {
     // Contrast with the stock GCN normalization on the same batches.
     let mut stock = TrainConfig::quick(GnnModel::Gcn, "tiny", 120);
     stock.lr = 0.1;
-    let stock_report = train(&runtime, &g, &sampler, &stock)?;
+    let stock_report = train(runtime, &g, &sampler, &stock)?;
     let (shead, stail) = stock_report.metrics.loss_drop().unwrap();
     println!("stock GCN loss:    {shead:.4} -> {stail:.4}");
     println!("custom_gnn OK — UDF layer trains end to end on stock artifacts");

@@ -9,7 +9,7 @@
 //! cargo run --release --offline --example dse_explore
 //! ```
 
-use hp_gnn::accel::{AccelConfig, Platform};
+use hp_gnn::accel::AccelConfig;
 use hp_gnn::dse::{explore, DseProblem};
 use hp_gnn::graph::datasets;
 use hp_gnn::layout::LayoutOptions;
@@ -34,7 +34,10 @@ fn problem(ds: &datasets::DatasetSpec, sampler: &str, sage: bool) -> DseProblem 
 }
 
 fn main() -> anyhow::Result<()> {
-    let platform = Platform::alveo_u250();
+    // Boards come from the named registry — the same lookup
+    // `PlatformParameters(board=…)` and the JSON `platform` key use.
+    let platform = hp_gnn::accel::platform::by_board("xilinx-U250")
+        .expect("xilinx-U250 is registered");
 
     println!("== DSE results (paper Table 5 analog) ==");
     println!(
@@ -86,5 +89,21 @@ fn main() -> anyhow::Result<()> {
         n *= 2;
     }
     println!("\n(paper picks (256, 4) for NS/SS-GCN/NS-SAGE and (256, 8) for SS-SAGE)");
+
+    // The same workload across every registered board: the registry makes
+    // cross-platform what-ifs a one-liner.
+    println!("\n== NS-GCN on Reddit across the board registry ==");
+    for name in hp_gnn::accel::platform::board_names() {
+        let board = hp_gnn::accel::platform::by_board(name).expect("registered board");
+        let r = explore(&board, &problem(&datasets::REDDIT, "NS", false));
+        println!(
+            "  {name:<14} ({} dies, {:>6.1} GB/s): (m, n) = ({}, {}) -> {:>8} NVTPS",
+            board.dies,
+            board.total_bw_gbps(),
+            r.config.m,
+            r.config.n,
+            si(r.nvtps),
+        );
+    }
     Ok(())
 }

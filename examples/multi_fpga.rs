@@ -9,13 +9,16 @@
 //! cargo run --release --offline --example multi_fpga
 //! ```
 
-use hp_gnn::accel::{AccelConfig, Platform};
+use hp_gnn::accel::AccelConfig;
 use hp_gnn::layout::LayoutOptions;
 use hp_gnn::perf::{data_parallel, estimate, model_parallel, BatchGeometry, ModelShape, MultiFpga};
 use hp_gnn::util::si;
 
 fn main() {
-    let platform = Platform::alveo_u250();
+    // Resolve the board through the named registry (same lookup as the
+    // builder's PlatformParameters and the JSON `platform` key).
+    let platform = hp_gnn::accel::platform::by_board("xilinx-U250")
+        .expect("xilinx-U250 is registered");
     let geom = BatchGeometry::neighbor_capped(1024, &[10, 25], 232_965);
     let model = ModelShape { feat: vec![602, 256, 41], sage_concat: false };
     let single = estimate(

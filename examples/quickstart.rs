@@ -4,23 +4,20 @@
 //! cargo run --release --offline --example quickstart
 //! ```
 //!
-//! Builds a design for a 2-layer GCN with neighbor sampling on a small
-//! synthetic Flickr-statistics graph, prints the generated design (the
-//! analog of the paper's generated host program + accelerator config),
-//! then opens a [`TrainingSession`] — the pull-based replacement for the
-//! fire-and-forget `Start_training()` loop: step-at-a-time control,
-//! `on_step`/`on_eval` progress hooks, interleaved validation, and a
-//! full-state checkpoint that a later process can `--resume` from.
+//! Lowers the Table 1 builder calls into a declarative [`ProgramSpec`],
+//! opens a [`Workspace`] (which owns the runtime — no `&Runtime`
+//! threading), designs a 2-layer GCN with neighbor sampling on a small
+//! synthetic graph, prints the generated-design report (the analog of the
+//! paper's Listing 3), then opens a [`TrainingSession`] — step-at-a-time
+//! control, `on_step`/`on_eval` progress hooks, interleaved validation,
+//! and a full-state checkpoint that a later process can `--resume` from.
 
-use hp_gnn::api::{HpGnn, SamplerSpec};
-use hp_gnn::runtime::Runtime;
+use hp_gnn::api::{HpGnn, SamplerSpec, TrainingSpec, Workspace};
 
 fn main() -> anyhow::Result<()> {
-    // Init() + PlatformParameters(board='xilinx-U250')
-    let runtime = Runtime::auto(std::path::Path::new("artifacts"))?;
-
-    // GNN_Parameters + GNN_Computation + Sampler + LoadInputGraph
-    let design = HpGnn::init()
+    // Init() + PlatformParameters(board='xilinx-U250') + GNN_Computation +
+    // GNN_Parameters + Sampler + LoadInputGraph, lowered into one spec.
+    let spec = HpGnn::init()
         .platform_board("xilinx-U250")?
         .gnn_computation("GCN")?
         .gnn_parameters(vec![8]) // hidden dim (tiny geometry: f = [16, 8, 4])
@@ -37,14 +34,19 @@ fn main() -> anyhow::Result<()> {
             g.name = "quickstart".into();
             g
         })
-        // GenerateDesign(): DSE + artifact selection + thread sizing.
-        .generate_design(&runtime)?;
+        .training(TrainingSpec { lr: 0.1, simulate: true, ..Default::default() })
+        .spec()?;
 
-    println!("== generated design ==\n{}\n", design.to_json().pretty());
+    // GenerateDesign(): DSE + artifact selection + thread sizing, through
+    // the runtime-owning workspace.
+    let ws = Workspace::open(std::path::Path::new("artifacts"))?;
+    let design = ws.design(&spec)?;
+    println!("{}\n", design.explain());
 
-    // Start_training(), session style: the caller owns the loop.
+    // Start_training(), session style: the caller owns the loop.  The
+    // session picks up training.lr / training.simulate from the spec.
     println!("== training ==");
-    let mut session = design.session(&runtime, 0.1, /*simulate=*/ true)?;
+    let mut session = design.session()?;
     session.on_step(|r| {
         if (r.step + 1) % 20 == 0 {
             println!("  step {:>3}: loss {:.4}", r.step, r.loss);
@@ -79,7 +81,7 @@ fn main() -> anyhow::Result<()> {
     // A fresh session resumed from the snapshot continues at step 30 and
     // replays the exact batch stream the first session saw (same RNG
     // cursor), so its losses match the uninterrupted run bit-exactly.
-    let mut resumed = design.resume_session(&runtime, 0.1, true, &ckpt)?;
+    let mut resumed = design.resume_session(&ckpt)?;
     resumed.run_for(30)?;
     assert_eq!(
         resumed.metrics().losses,

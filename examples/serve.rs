@@ -1,7 +1,9 @@
 //! Serving walkthrough: train → checkpoint → serve → hot-swap.
 //!
-//! 1. Generate a design and train it briefly through a session.
-//! 2. Snapshot the session (`HPGNNS01`) — serving accepts those directly.
+//! 1. Lower a builder program (with a `serving` section!) into a spec and
+//!    design it through a [`Workspace`].
+//! 2. Train briefly through a session and snapshot it (`HPGNNS01`) —
+//!    serving accepts those directly.
 //! 3. Start an inference server (worker pool + micro-batcher + cache) and
 //!    answer "classify vertex v" requests.
 //! 4. Keep training, save the improved weights, and hot-swap them into
@@ -9,14 +11,11 @@
 //!
 //! Run: `cargo run --release --example serve`
 
-use hp_gnn::api::{HpGnn, SamplerSpec};
+use hp_gnn::api::{HpGnn, SamplerSpec, ServingSpec, TrainingSpec, Workspace};
 use hp_gnn::graph::generator;
-use hp_gnn::runtime::Runtime;
-use hp_gnn::serve::ServeConfig;
-use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
-    let runtime = Runtime::reference();
+    let ws = Workspace::reference();
 
     // A graph matching the builtin "tiny" geometry (f = [16, 8, 4]).
     let mut graph = generator::with_min_degree(
@@ -28,20 +27,25 @@ fn main() -> anyhow::Result<()> {
     graph.num_classes = 4;
     graph.name = "serve-demo".to_string();
 
-    let design = HpGnn::init()
+    // The serving knobs live in the same declarative spec as everything
+    // else — a JSON user program expresses the identical section.
+    let spec = HpGnn::init()
         .platform_board("xilinx-U250")?
         .gnn_computation("gcn")?
         .gnn_parameters(vec![8])
         .sampler(SamplerSpec::Neighbor { targets: 4, budgets: vec![5, 3] })
         .load_input_graph(graph)
-        .generate_design(&runtime)?;
+        .training(TrainingSpec { lr: 0.05, ..Default::default() })
+        .serving(ServingSpec { workers: 2, cache: true, max_wait_us: 200, ..Default::default() })
+        .spec()?;
+    let design = ws.design(&spec)?;
     println!("design geometry: {}", design.geometry);
 
     // --- 1+2: train a few dozen steps, snapshot the session. ------------
     let dir = std::env::temp_dir().join(format!("hpgnn-serve-example-{}", std::process::id()));
     std::fs::create_dir_all(&dir)?;
     let ckpt = dir.join("model.ckpt");
-    let mut session = design.session(&runtime, 0.05, false)?;
+    let mut session = design.session()?;
     session.run_for(40)?;
     session.save(&ckpt)?;
     println!(
@@ -50,14 +54,8 @@ fn main() -> anyhow::Result<()> {
         session.metrics().losses.last().unwrap()
     );
 
-    // --- 3: serve. ------------------------------------------------------
-    let cfg = ServeConfig {
-        workers: 2,
-        cache: true,
-        max_wait: Duration::from_micros(200),
-        ..design.serve_config()
-    };
-    let server = design.server(&runtime, cfg, &ckpt)?;
+    // --- 3: serve (knobs from the spec's serving section). --------------
+    let server = design.server_from(&ckpt)?;
     let vertices = [3u32, 57, 123, 388];
     for pred in server.classify(&vertices)?.iter() {
         println!(

@@ -17,8 +17,7 @@
 //!
 //! Results are recorded in EXPERIMENTS.md §End-to-end.
 
-use hp_gnn::api::{HpGnn, SamplerSpec};
-use hp_gnn::runtime::Runtime;
+use hp_gnn::api::{HpGnn, SamplerSpec, TrainingSpec, Workspace};
 use hp_gnn::util::cli::Args;
 use hp_gnn::util::si;
 
@@ -30,19 +29,26 @@ fn main() -> anyhow::Result<()> {
         .flag("seed", "7", "seed")
         .parse()?;
 
-    let runtime = Runtime::auto(std::path::Path::new("artifacts"))?;
+    let ws = Workspace::open(std::path::Path::new("artifacts"))?;
     let steps = args.usize("steps");
 
     for model in ["GCN", "SAGE"] {
         println!("=== {model} / neighbor sampling / Flickr@{} ===", args.get("scale"));
-        let design = HpGnn::init()
+        let spec = HpGnn::init()
             .platform_board("xilinx-U250")?
             .gnn_computation(model)?
             .gnn_parameters(vec![256]) // ns_small geometry: f = [500, 256, 7]
             .sampler(SamplerSpec::Neighbor { targets: 32, budgets: vec![5, 10] })
             .seed(args.usize("seed") as u64)
             .load_dataset("FL", args.f64("scale"), args.usize("seed") as u64)?
-            .generate_design(&runtime)?;
+            .training(TrainingSpec {
+                steps,
+                lr: args.f32("lr"),
+                simulate: true,
+                ..Default::default()
+            })
+            .spec()?;
+        let design = ws.design(&spec)?;
         println!(
             "design: artifact={} accel=(m={}, n={}) predicted {} NVTPS",
             design.geometry,
@@ -52,7 +58,7 @@ fn main() -> anyhow::Result<()> {
         );
 
         let t = hp_gnn::util::stats::Timer::start();
-        let mut session = design.session(&runtime, args.f32("lr"), /*simulate=*/ true)?;
+        let mut session = design.session()?; // training.lr/simulate from the spec
         let stride = (steps / 20).max(1);
         session.on_step(move |r| {
             if r.step % stride == 0 {
@@ -98,7 +104,7 @@ fn main() -> anyhow::Result<()> {
         println!(
             "throughput: functional {} NVTPS (this host) | simulated CPU-FPGA {} NVTPS",
             si(m.functional_nvtps()),
-            si(m.simulated_nvtps(design.accel.sampler_threads.unwrap_or(2)).unwrap_or(0.0)),
+            si(m.simulated_nvtps(design.sampler_threads()).unwrap_or(0.0)),
         );
         anyhow::ensure!(tail < head, "{model}: loss did not descend ({head} -> {tail})");
         println!(
@@ -113,7 +119,7 @@ fn main() -> anyhow::Result<()> {
         // resumed from the mid-run snapshot must replay steps half..steps
         // bit-exactly — same RNG cursor, same weights, same loss curve.
         if model == "GCN" {
-            let mut resumed = design.resume_session(&runtime, args.f32("lr"), true, &ckpt)?;
+            let mut resumed = design.resume_session(&ckpt)?;
             anyhow::ensure!(resumed.current_step() == half, "snapshot step mismatch");
             resumed.run_for(steps - half)?;
             anyhow::ensure!(

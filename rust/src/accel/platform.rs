@@ -1,8 +1,9 @@
 //! Target platform descriptions (paper Table 3 and Listing 2).
 //!
-//! `PlatformParameters(board='xilinx-U250')` in the paper's API resolves to
-//! [`ALVEO_U250`]; custom boards are constructed field-by-field exactly as
-//! Listing 2 shows (`SLR=4, DSP=3072, LUT=423000, URAM=320, BW=19.25`).
+//! `PlatformParameters(board='xilinx-U250')` in the paper's API resolves
+//! through the named-board registry ([`BOARDS`] / [`by_board`]); custom
+//! boards are constructed field-by-field exactly as Listing 2 shows
+//! (`SLR=4, DSP=3072, LUT=423000, URAM=320, BW=19.25`).
 
 /// A CPU-FPGA platform: per-die FPGA resources + DDR memory system + the
 /// host CPU the sampler and loss/weight-update stages run on.
@@ -77,6 +78,36 @@ impl Platform {
         }
     }
 
+    /// Xilinx Alveo U280 — the paper's "boards with HBM" direction.  The
+    /// performance model assumes one memory channel per die, so the HBM2
+    /// stacks (≈460 GB/s aggregate, 8 GB) plus the 32 GB DDR4 flatten into
+    /// three fat per-die channels and a 40 GB feature budget; the lower
+    /// random-activation penalty reflects HBM's shorter rows.
+    pub fn alveo_u280() -> Platform {
+        Platform {
+            name: "xilinx-U280".into(),
+            dies: 3,
+            dsp_per_die: 3008, // 9024 DSP slices over 3 SLRs
+            lut_per_die: 434_000,
+            uram_per_die: 320, // 960 URAM blocks over 3 SLRs
+            bram_per_die: 672,
+            bw_per_channel_gbps: 153.6, // 460.8 GB/s HBM2 aggregate / 3
+            ddr_bytes: 40 * (1usize << 30), // 8 GB HBM + 32 GB DDR4
+            pcie_gbps: 12.0,
+            freq_hz: 300e6,
+            burst_bytes: 64,
+            // HBM2 pseudo-channel tRC ≈ 45 ns at 14.4 GB/s/pc ≈ 650 bytes.
+            random_penalty_bytes: 650.0,
+            cross_channel_efficiency: 0.8,
+            host: HostCpu {
+                cores: 64,
+                freq_hz: 2.9e9,
+                peak_gflops: 3700.0,
+                mem_bw_gbps: 107.0,
+            },
+        }
+    }
+
     /// Aggregate DDR bandwidth (GB/s).
     pub fn total_bw_gbps(&self) -> f64 {
         self.bw_per_channel_gbps * self.dies as f64
@@ -96,6 +127,27 @@ impl Platform {
     pub fn onchip_bytes_per_die(&self) -> usize {
         self.uram_per_die * (288 * 1024 / 8) + self.bram_per_die * (36 * 1024 / 8)
     }
+}
+
+/// The named-board registry `PlatformParameters(board=…)` resolves
+/// against.  Lookup is case-insensitive; unknown-board errors should
+/// enumerate [`board_names`] so users see what is available.
+pub const BOARDS: &[(&str, fn() -> Platform)] = &[
+    ("xilinx-U250", Platform::alveo_u250),
+    ("xilinx-U280", Platform::alveo_u280),
+];
+
+/// Resolve a board name (case-insensitive) against [`BOARDS`].
+pub fn by_board(name: &str) -> Option<Platform> {
+    BOARDS
+        .iter()
+        .find(|(n, _)| n.eq_ignore_ascii_case(name))
+        .map(|(_, make)| make())
+}
+
+/// Every registered board name, for "unknown board" error messages.
+pub fn board_names() -> Vec<&'static str> {
+    BOARDS.iter().map(|(n, _)| *n).collect()
 }
 
 #[cfg(test)]
@@ -146,5 +198,31 @@ mod tests {
         let h = Platform::alveo_u250().host;
         assert_eq!(h.cores, 64);
         assert!((h.peak_gflops - 3700.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn registry_resolves_case_insensitively() {
+        assert_eq!(by_board("xilinx-U250").unwrap().name, "xilinx-U250");
+        assert_eq!(by_board("XILINX-u250").unwrap().name, "xilinx-U250");
+        assert_eq!(by_board("xilinx-u280").unwrap().name, "xilinx-U280");
+        assert!(by_board("stratix-10").is_none());
+        let names = board_names();
+        assert!(names.contains(&"xilinx-U250") && names.contains(&"xilinx-U280"));
+        // Every registered constructor's name matches its registry key.
+        for (key, make) in BOARDS {
+            assert_eq!(&make().name, key, "registry key / Platform.name drift");
+        }
+    }
+
+    #[test]
+    fn u280_is_a_plausible_hbm_board() {
+        let p = Platform::alveo_u280();
+        assert_eq!(p.dies, 3);
+        // HBM: much higher aggregate bandwidth than the U250's DDR4...
+        assert!(p.total_bw_gbps() > Platform::alveo_u250().total_bw_gbps());
+        // ...but a smaller feature-capacity budget (8 GB HBM + 32 GB DDR).
+        assert!(p.ddr_bytes < Platform::alveo_u250().ddr_bytes);
+        // Random accesses are cheaper than on DDR4 at equal access size.
+        assert!(p.alpha(2000.0, false) > Platform::alveo_u250().alpha(2000.0, false));
     }
 }

@@ -1,0 +1,175 @@
+//! Structured, full-pass program diagnostics.
+//!
+//! The old validation style (`anyhow::bail!` at the first problem) made
+//! fixing a user program a whack-a-mole loop: fix one field, re-run, hit
+//! the next error.  [`Diagnostics`] is the replacement contract: every
+//! checker walks the *whole* spec and reports *all* problems at once, each
+//! as a [`Diagnostic`] anchored to the JSON path it concerns
+//! (`"sampler.budgets"`, `"model.hidden"`, …) with an optional fix hint.
+//!
+//! `Diagnostics` implements [`std::error::Error`], so a non-empty set
+//! converts into `anyhow::Error` losslessly — its `Display` renders the
+//! complete list, which is what `hp-gnn validate` prints line by line.
+
+use std::fmt;
+
+/// One problem in a user program, anchored to the spec path it concerns.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Dotted JSON path of the offending field (`"sampler.budgets"`), or a
+    /// section name when the problem is section-level (`"graph"`); `"$"`
+    /// means the document itself did not parse.
+    pub path: String,
+    /// What is wrong with the value at `path`.
+    pub reason: String,
+    /// How to fix it, when a concrete suggestion exists.
+    pub hint: Option<String>,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.path, self.reason)?;
+        if let Some(hint) = &self.hint {
+            write!(f, " (hint: {hint})")?;
+        }
+        Ok(())
+    }
+}
+
+/// An ordered collection of [`Diagnostic`]s — the result of one full
+/// validation pass.  Empty means the program is clean.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Diagnostics {
+    items: Vec<Diagnostic>,
+}
+
+impl Diagnostics {
+    pub fn new() -> Diagnostics {
+        Diagnostics::default()
+    }
+
+    /// A single-entry set (e.g. "the document is not JSON at all").
+    pub fn one(path: impl Into<String>, reason: impl Into<String>) -> Diagnostics {
+        let mut d = Diagnostics::new();
+        d.push(path, reason);
+        d
+    }
+
+    /// Record a problem without a fix hint.
+    pub fn push(&mut self, path: impl Into<String>, reason: impl Into<String>) {
+        self.items.push(Diagnostic { path: path.into(), reason: reason.into(), hint: None });
+    }
+
+    /// Record a problem with a concrete fix hint.
+    pub fn push_hint(
+        &mut self,
+        path: impl Into<String>,
+        reason: impl Into<String>,
+        hint: impl Into<String>,
+    ) {
+        self.items.push(Diagnostic {
+            path: path.into(),
+            reason: reason.into(),
+            hint: Some(hint.into()),
+        });
+    }
+
+    /// Append every entry of `other` (checkers compose by merging).
+    pub fn merge(&mut self, other: Diagnostics) {
+        self.items.extend(other.items);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.items.iter()
+    }
+
+    /// `Ok(value)` when clean, `Err(self)` when any problem was recorded.
+    pub fn into_result<T>(self, value: T) -> Result<T, Diagnostics> {
+        if self.is_empty() {
+            Ok(value)
+        } else {
+            Err(self)
+        }
+    }
+
+    /// `Ok(())` when clean, `Err(anyhow)` carrying the full list otherwise.
+    pub fn into_anyhow(self) -> anyhow::Result<()> {
+        if self.is_empty() {
+            Ok(())
+        } else {
+            Err(anyhow::Error::new(self))
+        }
+    }
+}
+
+impl fmt::Display for Diagnostics {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "invalid program: {} problem{}",
+            self.items.len(),
+            if self.items.len() == 1 { "" } else { "s" }
+        )?;
+        for (i, item) in self.items.iter().enumerate() {
+            if i + 1 == self.items.len() {
+                write!(f, "  - {item}")?;
+            } else {
+                writeln!(f, "  - {item}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for Diagnostics {}
+
+impl IntoIterator for Diagnostics {
+    type Item = Diagnostic;
+    type IntoIter = std::vec::IntoIter<Diagnostic>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.items.into_iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_lists_every_problem_with_paths() {
+        let mut d = Diagnostics::new();
+        d.push("sampler.budgets", "must not be empty");
+        d.push_hint("platform", "unknown board \"x\"", "known boards: xilinx-U250");
+        let text = d.to_string();
+        assert!(text.contains("2 problems"), "{text}");
+        assert!(text.contains("sampler.budgets: must not be empty"), "{text}");
+        assert!(text.contains("platform: unknown board"), "{text}");
+        assert!(text.contains("hint: known boards"), "{text}");
+    }
+
+    #[test]
+    fn into_result_and_anyhow_respect_emptiness() {
+        assert_eq!(Diagnostics::new().into_result(7).unwrap(), 7);
+        assert!(Diagnostics::new().into_anyhow().is_ok());
+        let d = Diagnostics::one("graph", "missing section");
+        assert!(d.clone().into_result(0).is_err());
+        let err = d.into_anyhow().unwrap_err().to_string();
+        assert!(err.contains("graph: missing section"), "{err}");
+    }
+
+    #[test]
+    fn merge_preserves_order() {
+        let mut a = Diagnostics::one("a", "first");
+        a.merge(Diagnostics::one("b", "second"));
+        let paths: Vec<&str> = a.iter().map(|x| x.path.as_str()).collect();
+        assert_eq!(paths, vec!["a", "b"]);
+    }
+}

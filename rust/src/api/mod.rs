@@ -1,18 +1,44 @@
-//! High-level programming interface — the paper's Table 1 API.
+//! High-level programming interface — the paper's Table 1 API behind one
+//! declarative spec.
 //!
 //! The paper's user program (Listing 1) is a dozen lines: specify
 //! platform, GNN parameters, computation, sampler, input graph; call
-//! `GenerateDesign()`; call `Start_training()`.  [`HpGnn`] is that flow as
-//! a rust builder; [`program`] parses the same thing from a JSON "user
-//! program" file.
+//! `GenerateDesign()`; call `Start_training()`.  Three frontends express
+//! that program here, and all of them converge on the same typed
+//! [`ProgramSpec`](spec::ProgramSpec):
 //!
-//! `GenerateDesign()` here performs what the paper's software + hardware
-//! generators do: runs the DSE engine to pick the accelerator
+//! * the [`HpGnn`] builder (the Table 1 call sequence as rust) lowers into
+//!   a spec via [`HpGnn::spec`];
+//! * the JSON user program parses into one via
+//!   [`ProgramSpec::from_json`](spec::ProgramSpec::from_json) (schema in
+//!   [`program`]);
+//! * the `hp-gnn` CLI subcommands construct one from flags.
+//!
+//! [`ProgramSpec::build`] then performs what the paper's software +
+//! hardware generators do: runs the DSE engine to pick the accelerator
 //! configuration, selects the AOT artifact geometry (the "bitstream"), and
 //! sizes the sampler thread pool — returning a [`GeneratedDesign`] that
-//! can start training immediately.
+//! can start training immediately.  Validation is full-pass: every problem
+//! in a spec is reported at once as [`diag::Diagnostic`]s, not just the
+//! first.
+//!
+//! [`Workspace`] is the runtime-owning facade: open it once over an
+//! artifact directory and design/train/serve without threading `&Runtime`
+//! through every call:
+//!
+//! ```no_run
+//! # use hp_gnn::api::{ProgramSpec, Workspace};
+//! # fn demo(spec: &ProgramSpec) -> anyhow::Result<()> {
+//! let ws = Workspace::open(std::path::Path::new("artifacts"))?;
+//! let design = ws.design(spec)?;
+//! println!("{}", design.explain());
+//! let _session = design.session()?;
+//! # Ok(()) }
+//! ```
 
+pub mod diag;
 pub mod program;
+pub mod spec;
 
 use std::path::Path;
 use std::sync::Arc;
@@ -26,12 +52,15 @@ use crate::layout::pad::EdgeOverflow;
 use crate::layout::LayoutOptions;
 use crate::perf::{BatchGeometry, KappaEstimator, ModelShape, ResourceCoefficients};
 use crate::runtime::{Kind, Runtime};
+use crate::sampler::values::GnnModel;
 use crate::sampler::{
     layerwise::LayerwiseSampler, neighbor::NeighborSampler, subgraph::SubgraphSampler, Sampler,
 };
-use crate::sampler::values::GnnModel;
 use crate::serve::{ServeConfig, Server};
 use crate::util::json::Json;
+
+pub use diag::{Diagnostic, Diagnostics};
+pub use spec::{GraphSpec, ModelSpec, PlatformSpec, ProgramSpec, ServingSpec, TrainingSpec};
 
 /// Sampling algorithm + parameters (`Sampler('NeighborSampler', L=2,
 /// budgets=[10, 25])` in Listing 2).
@@ -67,25 +96,46 @@ impl SamplerSpec {
 
     /// Table 2 batch shape for the DSE engine.
     pub fn batch_geometry(&self, g: &Graph) -> BatchGeometry {
+        self.batch_geometry_stats(g.num_vertices(), g.num_edges())
+    }
+
+    /// [`batch_geometry`](Self::batch_geometry) from graph *statistics*
+    /// alone — what `hp-gnn dse` uses to size against a full published
+    /// dataset without materializing it.
+    pub fn batch_geometry_stats(&self, nodes: usize, edges: usize) -> BatchGeometry {
         match self {
             SamplerSpec::Neighbor { targets, budgets } => {
-                BatchGeometry::neighbor_capped(*targets, budgets, g.num_vertices())
+                BatchGeometry::neighbor_capped(*targets, budgets, nodes)
             }
             SamplerSpec::Subgraph { budget, layers } => {
-                let kappa = KappaEstimator::from_stats(g.num_vertices(), g.num_edges());
+                let kappa = KappaEstimator::from_stats(nodes, edges);
                 BatchGeometry::subgraph(*budget, *layers, &kappa)
             }
             SamplerSpec::Layerwise { targets, sizes } => {
-                let kappa = KappaEstimator::from_stats(g.num_vertices(), g.num_edges());
+                let kappa = KappaEstimator::from_stats(nodes, edges);
                 let mut s = sizes.clone();
                 s.push(*targets);
                 BatchGeometry::layerwise(&s, &kappa)
             }
         }
     }
+
+    fn describe(&self) -> String {
+        match self {
+            SamplerSpec::Neighbor { targets, budgets } => {
+                format!("NeighborSampler targets={targets} budgets={budgets:?}")
+            }
+            SamplerSpec::Subgraph { budget, layers } => {
+                format!("SubgraphSampler budget={budget} layers={layers}")
+            }
+            SamplerSpec::Layerwise { targets, sizes } => {
+                format!("LayerwiseSampler targets={targets} sizes={sizes:?}")
+            }
+        }
+    }
 }
 
-/// The GNN abstraction the program parser extracts (paper Fig. 2): model
+/// The GNN abstraction the program lowering extracts (paper Fig. 2): model
 /// configuration + mini-batch configuration.
 #[derive(Debug, Clone)]
 pub struct GnnAbstraction {
@@ -95,44 +145,54 @@ pub struct GnnAbstraction {
     pub batch: BatchGeometry,
 }
 
-/// Builder implementing the Table 1 call sequence.
+/// Builder implementing the Table 1 call sequence.  It accumulates a
+/// [`ProgramSpec`] piece by piece — [`spec`](Self::spec) hands the spec
+/// out, [`generate_design`](Self::generate_design) builds it directly.
+///
+/// Two escape hatches go beyond what the JSON frontend can express: an
+/// in-memory graph ([`load_input_graph`](Self::load_input_graph)) and a
+/// field-by-field custom [`platform`](Self::platform).  Specs using them
+/// work everywhere except [`ProgramSpec::to_json`].
 #[derive(Default, Debug)]
 pub struct HpGnn {
-    platform: Option<Platform>,
+    platform: Option<PlatformSpec>,
     model: Option<GnnModel>,
     hidden: Vec<usize>,
     sampler: Option<SamplerSpec>,
-    graph: Option<Graph>,
+    graph: Option<GraphSpec>,
     layout: LayoutOptions,
-    seed: u64,
-    placement_override: Option<FeaturePlacement>,
-    /// Full-dataset statistics behind a scaled instance, if known
-    /// (placement must be decided against the *real* feature matrix).
-    full_nodes: Option<usize>,
+    seed: Option<u64>,
+    placement: Option<FeaturePlacement>,
+    training: TrainingSpec,
+    serving: Option<ServingSpec>,
 }
 
 impl HpGnn {
     /// `Init()` — start a program.
     pub fn init() -> HpGnn {
-        HpGnn { layout: LayoutOptions::all(), seed: 7, ..Default::default() }
+        HpGnn { layout: LayoutOptions::all(), ..Default::default() }
     }
 
-    /// `PlatformParameters(board='xilinx-U250')` or a custom board.
+    /// `PlatformParameters(board='xilinx-U250')` — any name in the board
+    /// registry ([`crate::accel::platform::BOARDS`]); unknown boards error
+    /// with the full registry listing.
     pub fn platform_board(mut self, board: &str) -> anyhow::Result<HpGnn> {
         anyhow::ensure!(
-            board.eq_ignore_ascii_case("xilinx-u250"),
-            "unknown board {board:?} (known: xilinx-U250; use .platform() for custom)"
+            crate::accel::platform::by_board(board).is_some(),
+            "unknown board {board:?} (known boards: {}; use .platform() for custom)",
+            crate::accel::platform::board_names().join(", ")
         );
-        self.platform = Some(Platform::alveo_u250());
+        self.platform = Some(PlatformSpec::Board(board.to_string()));
         Ok(self)
     }
 
+    /// A custom board built field-by-field (paper Listing 2).
     pub fn platform(mut self, p: Platform) -> HpGnn {
-        self.platform = Some(p);
+        self.platform = Some(PlatformSpec::Custom(p));
         self
     }
 
-    /// `GNN_Computation('SAGE' | 'GCN')`.
+    /// `GNN_Computation('SAGE' | 'GCN' | 'GIN')`.
     pub fn gnn_computation(mut self, model: &str) -> anyhow::Result<HpGnn> {
         self.model = Some(GnnModel::parse(model)?);
         Ok(self)
@@ -150,25 +210,37 @@ impl HpGnn {
         self
     }
 
-    /// `LoadInputGraph()` — a materialized graph (use
+    /// `LoadInputGraph()` — a materialized in-memory graph (use
     /// `datasets::DatasetSpec::scale(..).instantiate(..)` or graph::io).
+    /// Builder-only: such a spec has no JSON form.
     pub fn load_input_graph(mut self, g: Graph) -> HpGnn {
-        self.graph = Some(g);
+        self.graph = Some(GraphSpec::Inline(Arc::new(g)));
         self
     }
 
-    /// Convenience: a Table 4 dataset at a scale factor.
+    /// Convenience: a Table 4 dataset at a scale factor.  `seed` is the
+    /// graph-*structure* seed (`graph.seed` in the spec).
     pub fn load_dataset(mut self, key: &str, scale: f64, seed: u64) -> anyhow::Result<HpGnn> {
-        let spec = datasets::by_key(key)
-            .ok_or_else(|| anyhow::anyhow!("unknown dataset {key:?}"))?;
-        self.full_nodes = Some(spec.nodes);
-        Ok(self.load_input_graph(spec.scale(scale).instantiate(seed)))
+        anyhow::ensure!(datasets::by_key(key).is_some(), "unknown dataset {key:?}");
+        self.graph = Some(GraphSpec::Dataset { key: key.to_string(), scale, seed: Some(seed) });
+        Ok(self)
+    }
+
+    /// An edge-list file plus the dims the file does not carry.
+    pub fn load_edge_list(mut self, path: &Path, feat_dim: usize, num_classes: usize) -> HpGnn {
+        self.graph = Some(GraphSpec::EdgeList {
+            path: path.to_path_buf(),
+            feat_dim,
+            num_classes,
+            seed: None,
+        });
+        self
     }
 
     /// `DistributeData()` — explicitly place the feature matrix (default:
     /// decided automatically against the board's DDR capacity).
     pub fn distribute_data(mut self, placement: FeaturePlacement) -> HpGnn {
-        self.placement_override = Some(placement);
+        self.placement = Some(placement);
         self
     }
 
@@ -178,44 +250,99 @@ impl HpGnn {
         self
     }
 
+    /// The training/feature seed (the spec's top-level `seed`).
+    ///
+    /// When never called, the seed resolves like a JSON program's:
+    /// `graph.seed` (e.g. the `load_dataset` seed argument), else 1.
+    /// Note this changed with the spec unification — the builder
+    /// previously defaulted to a training seed of 7 independent of the
+    /// graph seed, so builder programs that relied on the implicit 7
+    /// (and any `HPGNNS01` snapshots they wrote) must now say `.seed(7)`.
     pub fn seed(mut self, seed: u64) -> HpGnn {
-        self.seed = seed;
+        self.seed = Some(seed);
         self
     }
 
-    /// `GenerateDesign()` — DSE + artifact-geometry selection + sampler
-    /// thread sizing.  `runtime` provides the artifact registry (the
-    /// "bitstream library").
+    /// Training-phase parameters (steps, lr, eval/checkpoint cadences).
+    pub fn training(mut self, training: TrainingSpec) -> HpGnn {
+        self.training = training;
+        self
+    }
+
+    /// Serving section (worker pool, micro-batching, cache, checkpoint).
+    pub fn serving(mut self, serving: ServingSpec) -> HpGnn {
+        self.serving = Some(serving);
+        self
+    }
+
+    /// Lower the builder into a [`ProgramSpec`].  Missing required pieces
+    /// are reported together as [`Diagnostics`] (named after the paper's
+    /// API calls).
+    pub fn spec(self) -> Result<ProgramSpec, Diagnostics> {
+        let mut d = Diagnostics::new();
+        if self.platform.is_none() {
+            d.push_hint(
+                "platform",
+                "PlatformParameters() missing",
+                format!("known boards: {}", crate::accel::platform::board_names().join(", ")),
+            );
+        }
+        if self.model.is_none() {
+            d.push("model.computation", "GNN_Computation() missing");
+        }
+        if self.sampler.is_none() {
+            d.push("sampler", "Sampler() missing");
+        }
+        if self.graph.is_none() {
+            d.push("graph", "LoadInputGraph() missing");
+        }
+        match (self.platform, self.model, self.sampler, self.graph) {
+            (Some(platform), Some(model), Some(sampler), Some(graph)) => Ok(ProgramSpec {
+                platform,
+                model: ModelSpec { computation: model, hidden: self.hidden },
+                sampler,
+                graph,
+                seed: self.seed,
+                layout: self.layout,
+                placement: self.placement,
+                training: self.training,
+                serving: self.serving,
+            }),
+            _ => Err(d),
+        }
+    }
+
+    /// `GenerateDesign()` — lower into a spec and [`ProgramSpec::build`]
+    /// it.  `runtime` provides the artifact registry (the "bitstream
+    /// library").
     pub fn generate_design(self, runtime: &Runtime) -> anyhow::Result<GeneratedDesign> {
-        let platform = self.platform.ok_or_else(|| anyhow::anyhow!("PlatformParameters() missing"))?;
-        let model = self.model.ok_or_else(|| anyhow::anyhow!("GNN_Computation() missing"))?;
-        let sampler = self.sampler.ok_or_else(|| anyhow::anyhow!("Sampler() missing"))?;
-        let graph = self.graph.ok_or_else(|| anyhow::anyhow!("LoadInputGraph() missing"))?;
-        anyhow::ensure!(graph.feat_dim > 0, "graph has no feature dimension");
-        anyhow::ensure!(graph.num_classes > 0, "graph has no class count");
-        anyhow::ensure!(
-            self.hidden.len() + 1 == sampler.layers(),
-            "GNN_Parameters: {} hidden dims for {} layers (need L-1)",
-            self.hidden.len(),
-            sampler.layers()
-        );
+        let spec = self.spec()?;
+        spec.build(runtime)
+    }
+}
 
-        let mut feat = vec![graph.feat_dim];
-        feat.extend(&self.hidden);
-        feat.push(graph.num_classes);
+impl ProgramSpec {
+    /// `GenerateDesign()` for a spec: full-pass validation, then DSE +
+    /// artifact-geometry selection + sampler thread sizing.  Every
+    /// validation problem is returned at once (as [`Diagnostics`] inside
+    /// the error), not just the first.
+    pub fn build(&self, runtime: &Runtime) -> anyhow::Result<GeneratedDesign> {
+        self.validate().into_anyhow()?;
+        let platform = self.platform.resolve()?;
+        let (graph, full_rows) = self.graph.materialize(self.structure_seed())?;
+        let model = self.model.computation;
 
-        let batch = sampler.batch_geometry(&graph);
-        let abstraction = GnnAbstraction { model, feat: feat.clone(), sampler, batch };
+        let feat = self.layer_dims(graph.feat_dim, graph.num_classes);
+        let batch = self.sampler.batch_geometry(&graph);
+        let abstraction =
+            GnnAbstraction { model, feat: feat.clone(), sampler: self.sampler.clone(), batch };
 
         // Hardware generator: Algorithm 4 on the target platform.
         let dse = explore(
             &platform,
             &DseProblem {
                 geom: abstraction.batch.clone(),
-                model: ModelShape {
-                    feat: feat.clone(),
-                    sage_concat: model == GnnModel::Sage,
-                },
+                model: ModelShape { feat, sage_concat: model == GnnModel::Sage },
                 layout: self.layout,
                 coeff: ResourceCoefficients::default(),
                 t_sampling_single: None,
@@ -228,9 +355,8 @@ impl HpGnn {
 
         // DistributeData(): features go to FPGA DDR when the *full-scale*
         // matrix fits (paper §3.1), else stay in host memory and stream.
-        let feature_rows = self.full_nodes.unwrap_or(graph.num_vertices());
-        let feature_bytes = feature_rows * graph.feat_dim * 4;
-        let placement = self.placement_override.unwrap_or(if feature_bytes <= platform.ddr_bytes {
+        let feature_bytes = full_rows * graph.feat_dim * 4;
+        let placement = self.placement.unwrap_or(if feature_bytes <= platform.ddr_bytes {
             FeaturePlacement::FpgaLocal
         } else {
             FeaturePlacement::HostStreamed
@@ -242,10 +368,88 @@ impl HpGnn {
             geometry,
             layout: self.layout,
             placement,
-            graph: Arc::new(graph),
+            graph,
             abstraction,
-            seed: self.seed,
+            seed: self.resolved_seed(),
+            spec: self.clone(),
         })
+    }
+
+    /// The per-layer feature dims `[f0, hidden..., classes]` — the one
+    /// assembly [`build`](Self::build), [`design_check`](Self::design_check)
+    /// and [`dse_problem`](Self::dse_problem) all share.
+    fn layer_dims(&self, f0: usize, classes: usize) -> Vec<usize> {
+        let mut feat = vec![f0];
+        feat.extend(&self.model.hidden);
+        feat.push(classes);
+        feat
+    }
+
+    /// Statistics of this spec's graph — `(nodes, edges, feat_dim,
+    /// num_classes)` — without instantiating a dataset graph (edge-list
+    /// and inline graphs load / are already in memory).  `full_scale`
+    /// picks the published Table 4 size (what DSE targets) over the
+    /// spec's scaled size (what training materializes).
+    fn graph_stats(&self, full_scale: bool) -> anyhow::Result<(usize, usize, usize, usize)> {
+        match &self.graph {
+            GraphSpec::Dataset { key, scale, .. } => {
+                let ds = datasets::by_key(key)
+                    .ok_or_else(|| anyhow::anyhow!("unknown dataset {key:?}"))?;
+                if full_scale {
+                    Ok((ds.nodes, ds.edges, ds.f0, ds.f2))
+                } else {
+                    let scaled = ds.scale(*scale);
+                    Ok((scaled.nodes, scaled.edges, ds.f0, ds.f2))
+                }
+            }
+            other => {
+                let (g, _) = other.materialize(self.structure_seed())?;
+                Ok((g.num_vertices(), g.num_edges(), g.feat_dim, g.num_classes))
+            }
+        }
+    }
+
+    /// The feasibility half of [`build`](Self::build) — full-pass
+    /// validation, board resolution and artifact-geometry selection —
+    /// sized from dataset *statistics*, so `hp-gnn validate` on a
+    /// full-scale AmazonProducts program never instantiates 132M edges.
+    /// Returns the geometry name [`build`](Self::build) would select (for
+    /// dataset graphs the choice can differ only when the min-degree
+    /// floor perturbs the subgraph/layerwise κ estimate).
+    pub fn design_check(&self, runtime: &Runtime) -> anyhow::Result<String> {
+        self.validate().into_anyhow()?;
+        self.platform.resolve()?;
+        let (nodes, edges, f0, classes) = self.graph_stats(false)?;
+        let abstraction = GnnAbstraction {
+            model: self.model.computation,
+            feat: self.layer_dims(f0, classes),
+            sampler: self.sampler.clone(),
+            batch: self.sampler.batch_geometry_stats(nodes, edges),
+        };
+        select_geometry(runtime, self.model.computation, &abstraction)
+    }
+
+    /// The DSE problem this spec poses, sized against the graph's *full
+    /// published statistics* (a `dataset` graph is never materialized —
+    /// `hp-gnn dse` on AmazonProducts must not instantiate 132M edges;
+    /// edge-list and inline graphs use their real size).
+    pub fn dse_problem(&self) -> anyhow::Result<(Platform, DseProblem)> {
+        self.validate().into_anyhow()?;
+        let platform = self.platform.resolve()?;
+        let (nodes, edges, f0, classes) = self.graph_stats(true)?;
+        Ok((
+            platform,
+            DseProblem {
+                geom: self.sampler.batch_geometry_stats(nodes, edges),
+                model: ModelShape {
+                    feat: self.layer_dims(f0, classes),
+                    sage_concat: self.model.computation == GnnModel::Sage,
+                },
+                layout: self.layout,
+                coeff: ResourceCoefficients::default(),
+                t_sampling_single: None,
+            },
+        ))
     }
 }
 
@@ -302,7 +506,8 @@ fn select_geometry(
         })
 }
 
-/// Output of `GenerateDesign()`: everything needed to run training.
+/// Output of `GenerateDesign()`: everything needed to run training, plus
+/// the originating [`ProgramSpec`] so an emitted design is rerunnable.
 ///
 /// The graph is held in an `Arc` so each [`session`](Self::session) shares
 /// it with the producer threads instead of deep-copying it (the feature
@@ -316,10 +521,23 @@ pub struct GeneratedDesign {
     pub placement: FeaturePlacement,
     pub graph: Arc<Graph>,
     pub abstraction: GnnAbstraction,
+    /// The resolved training/feature seed ([`ProgramSpec::resolved_seed`]).
     pub seed: u64,
+    /// The program this design was generated from (single source of
+    /// truth; [`to_json`](Self::to_json) embeds it so the emitted design
+    /// doubles as a rerunnable experiment file).
+    pub spec: ProgramSpec,
 }
 
 impl GeneratedDesign {
+    /// The DSE-sized sampler thread pool (fallback 2 when the DSE engine
+    /// had no sampling-time measurement) — the one number both
+    /// [`train_config`](Self::train_config) and [`explain`](Self::explain)
+    /// report.
+    pub fn sampler_threads(&self) -> usize {
+        self.accel.sampler_threads.unwrap_or(2)
+    }
+
     /// The [`TrainConfig`] this design trains with (the generated host
     /// program's knobs): artifact geometry, DSE-sized sampler thread pool,
     /// overflow policy matched to the sampler class.
@@ -332,7 +550,7 @@ impl GeneratedDesign {
             lr,
             seed: self.seed,
             layout: self.layout,
-            sampler_threads: self.accel.sampler_threads.unwrap_or(2),
+            sampler_threads: self.sampler_threads(),
             compute_threads: crate::util::threadpool::default_threads(),
             overflow: match self.abstraction.sampler {
                 SamplerSpec::Neighbor { .. } => EdgeOverflow::Error,
@@ -383,11 +601,15 @@ impl GeneratedDesign {
     }
 
     /// Serving configuration for this design: the training-time model,
-    /// artifact geometry, layout, overflow policy and seed, with the
-    /// serving knobs (workers, micro-batching, cache) at their defaults —
+    /// artifact geometry, layout, overflow policy and seed, overlaid with
+    /// the spec's `serving` section when present (defaults otherwise) —
     /// override fields before handing it to [`server`](Self::server).
     pub fn serve_config(&self) -> ServeConfig {
-        ServeConfig::from_train(&self.train_config(0, 0.0, false))
+        let cfg = ServeConfig::from_train(&self.train_config(0, 0.0, false));
+        match &self.spec.serving {
+            Some(serving) => cfg.apply_spec(serving),
+            None => cfg,
+        }
     }
 
     /// Open an inference [`Server`] on this design from a trained
@@ -425,10 +647,78 @@ impl GeneratedDesign {
         Ok(session.finish())
     }
 
-    /// The generated-design summary (the analog of Listing 3's generated
-    /// host program + accelerator configuration).
+    /// The Listing-3 generated-design report: chosen artifact geometry,
+    /// DSE configuration, predicted throughput, resource utilization and
+    /// feature placement, as human-readable text (`hp-gnn explain`).
+    pub fn explain(&self) -> String {
+        let u = &self.accel.utilization;
+        let mut out = String::new();
+        out.push_str("== generated design ==\n");
+        out.push_str(&format!(
+            "platform:        {} ({} dies, {} DSP/die, {:.1} GB/s)\n",
+            self.platform.name,
+            self.platform.dies,
+            self.platform.dsp_per_die,
+            self.platform.total_bw_gbps()
+        ));
+        out.push_str(&format!(
+            "model:           {}, layer dims {:?}\n",
+            self.abstraction.model.as_str(),
+            self.abstraction.feat
+        ));
+        out.push_str(&format!("sampler:         {}\n", self.abstraction.sampler.describe()));
+        out.push_str(&format!(
+            "graph:           {} ({} vertices, {} edges)\n",
+            if self.graph.name.is_empty() { "<unnamed>" } else { &self.graph.name },
+            self.graph.num_vertices(),
+            self.graph.num_edges()
+        ));
+        out.push_str(&format!(
+            "seed:            {} (training/features; structure seed {})\n",
+            self.seed,
+            self.spec.structure_seed()
+        ));
+        out.push_str(&format!(
+            "layout:          RMT {}, RRA {}\n",
+            if self.layout.rmt { "on" } else { "off" },
+            if self.layout.rra { "on" } else { "off" }
+        ));
+        out.push_str(&format!(
+            "artifact:        {} (batch needs b={:?}, e={:?})\n",
+            self.geometry, self.abstraction.batch.b, self.abstraction.batch.e
+        ));
+        out.push_str(&format!(
+            "accelerator:     (m, n) = ({}, {}) per die -> predicted {} NVTPS \
+             ({} candidates explored)\n",
+            self.accel.config.m,
+            self.accel.config.n,
+            crate::util::si(self.accel.nvtps),
+            self.accel.evaluated
+        ));
+        out.push_str(&format!(
+            "utilization:     DSP {:.0}%  LUT {:.0}%  URAM {:.0}%  BRAM {:.0}%\n",
+            u.dsp * 100.0,
+            u.lut * 100.0,
+            u.uram * 100.0,
+            u.bram * 100.0
+        ));
+        out.push_str(&format!(
+            "placement:       {}\n",
+            match self.placement {
+                FeaturePlacement::FpgaLocal => "fpga-local",
+                FeaturePlacement::HostStreamed => "host-streamed",
+            }
+        ));
+        out.push_str(&format!("sampler threads: {}", self.sampler_threads()));
+        out
+    }
+
+    /// The generated design as JSON: a `"program"` section holding the
+    /// round-trippable [`ProgramSpec`] (re-runnable with `hp-gnn run`;
+    /// `null` for the two builder-only escape hatches) and a `"design"`
+    /// section summarizing what the generators chose.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let design = Json::obj(vec![
             ("board", Json::str(self.platform.name.clone())),
             ("model", Json::str(self.abstraction.model.as_str())),
             (
@@ -458,7 +748,161 @@ impl GeneratedDesign {
                 "batch_e",
                 Json::arr(self.abstraction.batch.e.iter().map(|&e| Json::num(e as f64)).collect()),
             ),
+        ]);
+        Json::obj(vec![
+            ("program", self.spec.to_json().unwrap_or(Json::Null)),
+            ("design", design),
         ])
+    }
+}
+
+/// The runtime-owning facade: open once, then design/train/serve without
+/// threading `&Runtime` through every call.
+///
+/// ```no_run
+/// # use hp_gnn::api::{ProgramSpec, Workspace};
+/// # fn demo(spec: &ProgramSpec) -> anyhow::Result<()> {
+/// let design = Workspace::open(std::path::Path::new("artifacts"))?.design(spec)?;
+/// design.session()?.run_for(10)?;
+/// # Ok(()) }
+/// ```
+pub struct Workspace {
+    runtime: Arc<Runtime>,
+}
+
+impl Workspace {
+    /// Open over an artifact directory ([`Runtime::auto`]: a real manifest
+    /// when one exists, the built-in reference catalog otherwise).
+    pub fn open(artifacts: &Path) -> anyhow::Result<Workspace> {
+        Ok(Workspace { runtime: Arc::new(Runtime::auto(artifacts)?) })
+    }
+
+    /// The artifact-less reference-backend workspace.
+    pub fn reference() -> Workspace {
+        Workspace { runtime: Arc::new(Runtime::reference()) }
+    }
+
+    /// Wrap an already-constructed runtime.
+    pub fn with_runtime(runtime: Runtime) -> Workspace {
+        Workspace { runtime: Arc::new(runtime) }
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    /// `GenerateDesign()` — [`ProgramSpec::build`] against this
+    /// workspace's runtime, returning a [`Design`] whose
+    /// `session()`/`server()`/`explain()` need no further `&Runtime`.
+    pub fn design(&self, spec: &ProgramSpec) -> anyhow::Result<Design> {
+        Ok(Design { inner: spec.build(&self.runtime)?, runtime: Arc::clone(&self.runtime) })
+    }
+}
+
+/// A [`GeneratedDesign`] bound to the [`Workspace`]'s runtime.  Derefs to
+/// the design, so every `GeneratedDesign` accessor works here too.
+pub struct Design {
+    runtime: Arc<Runtime>,
+    inner: GeneratedDesign,
+}
+
+impl std::ops::Deref for Design {
+    type Target = GeneratedDesign;
+    fn deref(&self) -> &GeneratedDesign {
+        &self.inner
+    }
+}
+
+impl Design {
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    /// Unwrap the bare [`GeneratedDesign`].
+    pub fn into_inner(self) -> GeneratedDesign {
+        self.inner
+    }
+
+    /// A [`TrainingSession`] with the spec's `training.lr` / `simulate`.
+    pub fn session(&self) -> anyhow::Result<TrainingSession<'_>> {
+        self.session_with(self.inner.spec.training.lr, self.inner.spec.training.simulate)
+    }
+
+    /// [`session`](Self::session) with explicit overrides.
+    pub fn session_with(&self, lr: f32, simulate: bool) -> anyhow::Result<TrainingSession<'_>> {
+        self.inner.session(&self.runtime, lr, simulate)
+    }
+
+    /// A session on a caller-tuned [`TrainConfig`] (start from
+    /// [`GeneratedDesign::train_config`]).
+    pub fn session_with_config(&self, cfg: TrainConfig) -> anyhow::Result<TrainingSession<'_>> {
+        TrainingSession::new(
+            &self.runtime,
+            Arc::clone(&self.inner.graph),
+            Arc::from(self.inner.abstraction.sampler.build()),
+            cfg,
+        )
+    }
+
+    /// A session resumed from an `HPGNNS01` snapshot, with the spec's
+    /// `training.lr` / `simulate`.
+    pub fn resume_session(&self, checkpoint: &Path) -> anyhow::Result<TrainingSession<'_>> {
+        self.inner.resume_session(
+            &self.runtime,
+            self.inner.spec.training.lr,
+            self.inner.spec.training.simulate,
+            checkpoint,
+        )
+    }
+
+    /// [`resume_session`](Self::resume_session) on a caller-tuned config.
+    pub fn resume_session_with_config(
+        &self,
+        cfg: TrainConfig,
+        checkpoint: &Path,
+    ) -> anyhow::Result<TrainingSession<'_>> {
+        TrainingSession::resume(
+            &self.runtime,
+            Arc::clone(&self.inner.graph),
+            Arc::from(self.inner.abstraction.sampler.build()),
+            cfg,
+            checkpoint,
+        )
+    }
+
+    /// An inference [`Server`] configured entirely by the spec's `serving`
+    /// section (which must name a `checkpoint`).
+    pub fn server(&self) -> anyhow::Result<Server> {
+        let serving = self.inner.spec.serving.clone().unwrap_or_default();
+        let checkpoint = serving.checkpoint.clone().ok_or_else(|| {
+            anyhow::anyhow!(
+                "the program names no trained checkpoint to serve — add \
+                 serving.checkpoint, or use server_from(path)"
+            )
+        })?;
+        self.server_from(&checkpoint)
+    }
+
+    /// A server from an explicit checkpoint, serving knobs from the
+    /// spec's `serving` section (defaults when absent).
+    pub fn server_from(&self, checkpoint: &Path) -> anyhow::Result<Server> {
+        self.server_with(self.inner.serve_config(), checkpoint)
+    }
+
+    /// A server on a caller-tuned [`ServeConfig`].
+    pub fn server_with(&self, cfg: ServeConfig, checkpoint: &Path) -> anyhow::Result<Server> {
+        self.inner.server(&self.runtime, cfg, checkpoint)
+    }
+
+    /// `Start_training()` — run the spec's `training.steps` to completion.
+    pub fn start_training(&self) -> anyhow::Result<TrainReport> {
+        let t = &self.inner.spec.training;
+        self.inner.start_training(&self.runtime, t.steps, t.lr, t.simulate)
+    }
+
+    /// The Listing-3 report ([`GeneratedDesign::explain`]).
+    pub fn explain(&self) -> String {
+        self.inner.explain()
     }
 }
 
@@ -479,6 +923,11 @@ mod tests {
         assert_eq!(geom.b, vec![100, 100, 100]);
         let s = ns.build();
         assert_eq!(s.num_layers(), 2);
+        // The stats-based variant agrees with the graph-based one.
+        assert_eq!(
+            ns.batch_geometry_stats(g.num_vertices(), g.num_edges()).b,
+            ns.batch_geometry(&g).b
+        );
     }
 
     /// An artifact-less runtime on the always-available reference backend
@@ -494,19 +943,27 @@ mod tests {
     fn builder_validates_missing_pieces() {
         let rt = empty_runtime();
         let err = HpGnn::init().generate_design(&rt).unwrap_err().to_string();
+        // Every missing Table 1 call is reported at once, by paper name.
         assert!(err.contains("PlatformParameters"), "{err}");
+        assert!(err.contains("GNN_Computation"), "{err}");
+        assert!(err.contains("Sampler"), "{err}");
+        assert!(err.contains("LoadInputGraph"), "{err}");
         let err = HpGnn::init()
             .platform(Platform::alveo_u250())
             .generate_design(&rt)
             .unwrap_err()
             .to_string();
         assert!(err.contains("GNN_Computation"), "{err}");
+        assert!(!err.contains("PlatformParameters"), "{err}");
     }
 
     #[test]
-    fn unknown_board_rejected() {
-        assert!(HpGnn::init().platform_board("stratix-10").is_err());
+    fn unknown_board_rejected_with_registry_listing() {
+        let err = HpGnn::init().platform_board("stratix-10").unwrap_err().to_string();
+        assert!(err.contains("stratix-10"), "{err}");
+        assert!(err.contains("xilinx-U250") && err.contains("xilinx-U280"), "{err}");
         assert!(HpGnn::init().platform_board("Xilinx-U250").is_ok());
+        assert!(HpGnn::init().platform_board("xilinx-u280").is_ok());
     }
 
     #[test]
@@ -525,6 +982,69 @@ mod tests {
             .generate_design(&rt)
             .unwrap_err()
             .to_string();
+        assert!(err.contains("model.hidden"), "{err}");
         assert!(err.contains("GNN_Parameters"), "{err}");
+    }
+
+    #[test]
+    fn builder_lowers_into_a_serializable_spec() {
+        let spec = HpGnn::init()
+            .platform_board("xilinx-U250")
+            .unwrap()
+            .gnn_computation("GCN")
+            .unwrap()
+            .gnn_parameters(vec![8])
+            .sampler(SamplerSpec::Neighbor { targets: 4, budgets: vec![5, 3] })
+            .seed(7)
+            .load_dataset("FL", 0.005, 7)
+            .unwrap()
+            .serving(ServingSpec { workers: 3, ..Default::default() })
+            .spec()
+            .unwrap();
+        assert!(spec.validate().is_empty());
+        assert_eq!(spec.resolved_seed(), 7);
+        let text = spec.to_json().unwrap().pretty();
+        let again = ProgramSpec::from_json(&text).unwrap();
+        assert_eq!(again, spec);
+        assert_eq!(again.serving.as_ref().unwrap().workers, 3);
+    }
+
+    #[test]
+    fn workspace_designs_and_opens_sessions() {
+        let ws = Workspace::reference();
+        let mut g = crate::graph::generator::with_min_degree(
+            crate::graph::generator::rmat(400, 3200, Default::default(), 5),
+            1,
+            6,
+        );
+        g.feat_dim = 16;
+        g.num_classes = 4;
+        let spec = HpGnn::init()
+            .platform_board("xilinx-U250")
+            .unwrap()
+            .gnn_computation("gcn")
+            .unwrap()
+            .gnn_parameters(vec![8])
+            .sampler(SamplerSpec::Neighbor { targets: 4, budgets: vec![5, 3] })
+            .load_input_graph(g)
+            .training(TrainingSpec { steps: 2, lr: 0.1, ..Default::default() })
+            .spec()
+            .unwrap();
+        let design = ws.design(&spec).unwrap();
+        // Deref exposes the GeneratedDesign fields...
+        assert_eq!(design.abstraction.model, GnnModel::Gcn);
+        assert_eq!(design.seed, 1, "no seed given -> default 1");
+        // ...explain() renders the Listing-3 report...
+        let report = design.explain();
+        assert!(report.contains("artifact:"), "{report}");
+        assert!(report.contains("utilization:"), "{report}");
+        // ...and a session opens + steps without touching the runtime.
+        let mut session = design.session().unwrap();
+        session.run_for(2).unwrap();
+        assert_eq!(session.current_step(), 2);
+        // Inline graphs have no JSON form: design JSON says so.
+        let json = design.to_json();
+        assert_eq!(*json.get("program").unwrap(), Json::Null);
+        assert!(json.get("design").unwrap().get("artifact_geometry").is_ok());
     }
 }

@@ -1,4 +1,4 @@
-//! User-program parser: the JSON analog of the paper's Listing 1.
+//! User-program schema: the JSON analog of the paper's Listing 1.
 //!
 //! A user program is a small JSON document:
 //!
@@ -7,30 +7,46 @@
 //!   "platform": "xilinx-U250",
 //!   "model": {"computation": "SAGE", "hidden": [256]},
 //!   "sampler": {"type": "NeighborSampler", "budgets": [10, 25], "targets": 1024},
-//!   "graph": {"dataset": "FL", "scale": 0.05, "seed": 1},
+//!   "graph": {"dataset": "FL", "scale": 0.05},
+//!   "seed": 1,
 //!   "training": {"steps": 100, "lr": 0.05, "eval_every": 20,
-//!                "checkpoint": "run.ckpt", "checkpoint_every": 25}
+//!                "checkpoint": "run.ckpt", "checkpoint_every": 25},
+//!   "serving": {"checkpoint": "run.ckpt", "workers": 4, "max_batch": 64,
+//!               "cache": true}
 //! }
 //! ```
 //!
-//! `parse_program` turns it into an [`HpGnn`] builder plus training
-//! parameters; the `hp-gnn run` CLI subcommand executes it end to end as a
-//! [`TrainingSession`](crate::coordinator::TrainingSession) (with
-//! `--resume <ckpt>` continuing from a session snapshot).
+//! [`parse_program`] turns it into a
+//! [`ProgramSpec`](super::spec::ProgramSpec) — the same typed spec the
+//! [`HpGnn`](super::HpGnn) builder lowers into — reporting **every**
+//! problem in the document at once (see [`super::diag`]).  The spec
+//! round-trips: [`ProgramSpec::to_json`](super::spec::ProgramSpec::to_json)
+//! emits this exact schema, so a design's embedded program re-parses to an
+//! equal spec and an emitted design doubles as a rerunnable experiment
+//! file.  The `hp-gnn run` CLI subcommand executes a program end to end as
+//! a [`TrainingSession`](crate::coordinator::TrainingSession) (with
+//! `--resume <ckpt>` continuing from a session snapshot); `hp-gnn serve`
+//! serves its `serving` section; `hp-gnn validate` prints the full
+//! diagnostic list; `hp-gnn explain` prints the generated-design report.
 //!
 //! # Schema
 //!
 //! Unknown keys are rejected everywhere — a typo like `"smapler"` is a
-//! parse error, never silently ignored.
+//! diagnostic, never silently ignored (and *every* unknown key in the
+//! document is reported, not just the first).
 //!
 //! | Section | Key | Type | Meaning |
 //! |---|---|---|---|
-//! | *(top level)* | `platform` | string | board name (`"xilinx-U250"`) |
+//! | *(top level)* | `platform` | string | registered board name (`"xilinx-U250"`, `"xilinx-U280"`; case-insensitive) |
 //! | | `model` | object | GNN model section |
 //! | | `sampler` | object | sampling algorithm section |
 //! | | `graph` | object | input graph section |
+//! | | `seed` | int | training/feature-synthesis seed (≤ 2^53; default: `graph.seed`, else 1) |
+//! | | `layout` | object | RMT/RRA switches (optional; default both on) |
+//! | | `placement` | string | `"fpga-local"` \| `"host-streamed"` (optional; default: decided against DDR capacity) |
 //! | | `training` | object | training-phase section |
-//! | `model` | `computation` | string | `"GCN"` \| `"SAGE"` \| `"GIN"` |
+//! | | `serving` | object | inference-serving section (optional) |
+//! | `model` | `computation` | string | `"gcn"` \| `"sage"` (alias `"graphsage"`) \| `"gin"`, case-insensitive — exactly the names [`GnnModel::parse`](crate::sampler::values::GnnModel::parse) accepts |
 //! | | `hidden` | [int] | hidden feature dims (length L-1) |
 //! | `sampler` | `type` | string | `NeighborSampler` \| `SubgraphSampler` \| `LayerwiseSampler` |
 //! | | `targets` | int | Neighbor/Layerwise: target vertices per batch |
@@ -39,11 +55,13 @@
 //! | | `layers` | int | Subgraph: model depth L |
 //! | | `sizes` | [int] | Layerwise: per-layer sample sizes (length L) |
 //! | `graph` | `dataset` | string | Table 4 dataset key (`FL`/`RD`/`YP`/`AP`) |
-//! | | `scale` | number | dataset scale factor (default 1.0) |
+//! | | `scale` | number | dataset scale factor in (0, 1] (default 1.0) |
 //! | | `edge_list` | string | path to an edge-list file (instead of `dataset`) |
 //! | | `feat_dim` | int | required with `edge_list` |
 //! | | `num_classes` | int | required with `edge_list` |
-//! | | `seed` | int | graph + training seed (default 1) |
+//! | | `seed` | int | graph-*structure* seed (default: top-level `seed`, else 1) |
+//! | `layout` | `rmt` | bool | rank-minimizing transform (default true) |
+//! | | `rra` | bool | round-robin assignment (default true) |
 //! | `training` | `steps` | int | total training iterations |
 //! | | `lr` | number | learning rate |
 //! | | `simulate` | bool | attach accelerator-simulator timing (default false) |
@@ -51,147 +69,29 @@
 //! | | `eval_batches` | int | held-out batches per evaluation (default 2) |
 //! | | `checkpoint` | string | `HPGNNS01` session-snapshot path (written every `checkpoint_every` steps and at the end) |
 //! | | `checkpoint_every` | int | snapshot cadence in steps; 0 = final snapshot only (default 0) |
+//! | `serving` | `checkpoint` | string | trained checkpoint to serve (`HPGNNW01` or `HPGNNS01`; `hp-gnn serve --checkpoint` overrides) |
+//! | | `workers` | int | forward-executor replicas (default 2) |
+//! | | `max_batch` | int | micro-batch coalescing cap; 0 = geometry capacity (default 0) |
+//! | | `max_wait_us` | int | micro-batch deadline in µs (default 200) |
+//! | | `queue_depth` | int | request-queue bound (default 1024) |
+//! | | `cache` | bool | versioned logits cache (default false) |
+//!
+//! # Seed precedence
+//!
+//! The top-level `seed` drives training and feature synthesis; `graph.seed`
+//! drives synthetic graph structure.  Each falls back to the other (so the
+//! old single-`graph.seed` programs keep their exact behavior), then to 1.
+//! Giving both with *different* values is a diagnostic — see
+//! [`spec`](super::spec) for the rationale.
 
-use super::{HpGnn, SamplerSpec};
-use crate::util::json::Json;
+use super::spec::ProgramSpec;
 
-/// Training-phase parameters of a user program.
-#[derive(Debug, Clone)]
-pub struct TrainingParams {
-    /// Total steps of the run (a resumed session trains the remainder).
-    pub steps: usize,
-    pub lr: f32,
-    pub simulate: bool,
-    /// Evaluate on held-out batches every N steps (0 = off).
-    pub eval_every: usize,
-    /// Batches per evaluation.
-    pub eval_batches: usize,
-    /// Session-snapshot path (`HPGNNS01`); `None` disables checkpointing.
-    pub checkpoint: Option<std::path::PathBuf>,
-    /// Snapshot every N steps; 0 writes only the final snapshot.
-    pub checkpoint_every: usize,
-}
-
-/// Reject keys outside `allowed` so typos fail loudly instead of being
-/// silently ignored.
-fn check_keys(section: &str, obj: &Json, allowed: &[&str]) -> anyhow::Result<()> {
-    for key in obj.as_obj()?.keys() {
-        anyhow::ensure!(
-            allowed.contains(&key.as_str()),
-            "unknown key {key:?} in {section} (allowed: {})",
-            allowed.join(", ")
-        );
-    }
-    Ok(())
-}
-
-/// Parse a user program into a ready builder + training params.
-pub fn parse_program(text: &str) -> anyhow::Result<(HpGnn, TrainingParams)> {
-    let doc = Json::parse(text)?;
-    check_keys("the user program", &doc, &["platform", "model", "sampler", "graph", "training"])?;
-
-    let mut builder = HpGnn::init();
-
-    // Platform.
-    match doc.get("platform")? {
-        Json::Str(board) => builder = builder.platform_board(board)?,
-        other => anyhow::bail!("platform must be a board name string, got {other:?}"),
-    }
-
-    // Model.
-    let model = doc.get("model")?;
-    check_keys("\"model\"", model, &["computation", "hidden"])?;
-    builder = builder.gnn_computation(model.get("computation")?.as_str()?)?;
-    builder = builder.gnn_parameters(model.get("hidden")?.usize_list()?);
-
-    // Sampler.
-    let sampler = doc.get("sampler")?;
-    let spec = match sampler.get("type")?.as_str()? {
-        "NeighborSampler" => {
-            check_keys("\"sampler\" (NeighborSampler)", sampler, &["type", "targets", "budgets"])?;
-            SamplerSpec::Neighbor {
-                targets: sampler.get("targets")?.as_usize()?,
-                budgets: sampler.get("budgets")?.usize_list()?,
-            }
-        }
-        "SubgraphSampler" => {
-            check_keys("\"sampler\" (SubgraphSampler)", sampler, &["type", "budget", "layers"])?;
-            SamplerSpec::Subgraph {
-                budget: sampler.get("budget")?.as_usize()?,
-                layers: sampler.get("layers")?.as_usize()?,
-            }
-        }
-        "LayerwiseSampler" => {
-            check_keys("\"sampler\" (LayerwiseSampler)", sampler, &["type", "targets", "sizes"])?;
-            SamplerSpec::Layerwise {
-                targets: sampler.get("targets")?.as_usize()?,
-                sizes: sampler.get("sizes")?.usize_list()?,
-            }
-        }
-        other => anyhow::bail!(
-            "unknown sampler {other:?} (NeighborSampler|SubgraphSampler|LayerwiseSampler)"
-        ),
-    };
-    builder = builder.sampler(spec);
-
-    // Graph.
-    let graph = doc.get("graph")?;
-    check_keys(
-        "\"graph\"",
-        graph,
-        &["dataset", "scale", "edge_list", "feat_dim", "num_classes", "seed"],
-    )?;
-    let seed = graph.opt("seed").map(|j| j.as_usize()).transpose()?.unwrap_or(1) as u64;
-    if let Some(ds) = graph.opt("dataset") {
-        let scale = graph.opt("scale").map(|j| j.as_f64()).transpose()?.unwrap_or(1.0);
-        builder = builder.load_dataset(ds.as_str()?, scale, seed)?;
-    } else if let Some(path) = graph.opt("edge_list") {
-        let mut g = crate::graph::io::load_edge_list(std::path::Path::new(path.as_str()?))?;
-        g.feat_dim = graph.get("feat_dim")?.as_usize()?;
-        g.num_classes = graph.get("num_classes")?.as_usize()?;
-        builder = builder.load_input_graph(g);
-    } else {
-        anyhow::bail!("graph needs either \"dataset\" or \"edge_list\"");
-    }
-    builder = builder.seed(seed);
-
-    // Training.
-    let training = doc.get("training")?;
-    check_keys(
-        "\"training\"",
-        training,
-        &[
-            "steps",
-            "lr",
-            "simulate",
-            "eval_every",
-            "eval_batches",
-            "checkpoint",
-            "checkpoint_every",
-        ],
-    )?;
-    let opt_usize = |key: &str| -> anyhow::Result<Option<usize>> {
-        Ok(training.opt(key).map(|j| j.as_usize()).transpose()?)
-    };
-    let params = TrainingParams {
-        steps: training.get("steps")?.as_usize()?,
-        lr: training.get("lr")?.as_f64()? as f32,
-        simulate: training
-            .opt("simulate")
-            .map(|j| j.as_bool())
-            .transpose()?
-            .unwrap_or(false),
-        eval_every: opt_usize("eval_every")?.unwrap_or(0),
-        eval_batches: opt_usize("eval_batches")?.unwrap_or(2),
-        checkpoint: training
-            .opt("checkpoint")
-            .map(|j| j.as_str())
-            .transpose()?
-            .map(std::path::PathBuf::from),
-        checkpoint_every: opt_usize("checkpoint_every")?.unwrap_or(0),
-    };
-
-    Ok((builder, params))
+/// Parse a user program into a [`ProgramSpec`], converting the full
+/// diagnostic list into one `anyhow` error (each problem with its JSON
+/// path).  Use [`ProgramSpec::from_json`] directly to keep the structured
+/// [`Diagnostics`](super::diag::Diagnostics).
+pub fn parse_program(text: &str) -> anyhow::Result<ProgramSpec> {
+    Ok(ProgramSpec::from_json(text)?)
 }
 
 #[cfg(test)]
@@ -208,15 +108,21 @@ mod tests {
 
     #[test]
     fn parses_full_program() {
-        let (_builder, params) = parse_program(PROGRAM).unwrap();
-        assert_eq!(params.steps, 5);
-        assert!((params.lr - 0.1).abs() < 1e-6);
-        assert!(params.simulate);
+        let spec = parse_program(PROGRAM).unwrap();
+        assert_eq!(spec.training.steps, 5);
+        assert!((spec.training.lr - 0.1).abs() < 1e-6);
+        assert!(spec.training.simulate);
         // Session knobs default off.
-        assert_eq!(params.eval_every, 0);
-        assert_eq!(params.eval_batches, 2);
-        assert!(params.checkpoint.is_none());
-        assert_eq!(params.checkpoint_every, 0);
+        assert_eq!(spec.training.eval_every, 0);
+        assert_eq!(spec.training.eval_batches, 2);
+        assert!(spec.training.checkpoint.is_none());
+        assert_eq!(spec.training.checkpoint_every, 0);
+        // graph.seed alone drives both seeds (back-compat).
+        assert_eq!(spec.resolved_seed(), 3);
+        assert_eq!(spec.structure_seed(), 3);
+        // No serving section -> None.
+        assert!(spec.serving.is_none());
+        assert!(spec.validate().is_empty());
     }
 
     #[test]
@@ -226,12 +132,38 @@ mod tests {
             r#""training": {"steps": 8, "lr": 0.1, "eval_every": 2, "eval_batches": 3,
                 "checkpoint": "run.ckpt", "checkpoint_every": 4}"#,
         );
-        let (_b, p) = parse_program(&prog).unwrap();
-        assert_eq!(p.eval_every, 2);
-        assert_eq!(p.eval_batches, 3);
-        assert_eq!(p.checkpoint.as_deref(), Some(std::path::Path::new("run.ckpt")));
-        assert_eq!(p.checkpoint_every, 4);
-        assert!(!p.simulate);
+        let spec = parse_program(&prog).unwrap();
+        assert_eq!(spec.training.eval_every, 2);
+        assert_eq!(spec.training.eval_batches, 3);
+        assert_eq!(
+            spec.training.checkpoint.as_deref(),
+            Some(std::path::Path::new("run.ckpt"))
+        );
+        assert_eq!(spec.training.checkpoint_every, 4);
+        assert!(!spec.training.simulate);
+    }
+
+    #[test]
+    fn parses_serving_and_top_level_seed() {
+        let prog = PROGRAM
+            .replace(
+                r#""graph": {"dataset": "FL", "scale": 0.005, "seed": 3},"#,
+                r#""graph": {"dataset": "FL", "scale": 0.005},
+                   "seed": 3,
+                   "serving": {"checkpoint": "model.bin", "workers": 4,
+                               "max_batch": 64, "cache": true},"#,
+            );
+        let spec = parse_program(&prog).unwrap();
+        assert_eq!(spec.resolved_seed(), 3);
+        let s = spec.serving.as_ref().unwrap();
+        assert_eq!(s.checkpoint.as_deref(), Some(std::path::Path::new("model.bin")));
+        assert_eq!(s.workers, 4);
+        assert_eq!(s.max_batch, 64);
+        assert!(s.cache);
+        // Unspecified serving knobs take their defaults.
+        assert_eq!(s.max_wait_us, 200);
+        assert_eq!(s.queue_depth, 1024);
+        assert!(spec.validate().is_empty());
     }
 
     #[test]
@@ -240,6 +172,8 @@ mod tests {
         let bad = PROGRAM.replace("\"sampler\":", "\"smapler\":");
         let err = parse_program(&bad).unwrap_err().to_string();
         assert!(err.contains("smapler"), "{err}");
+        // Both problems surface in the same pass.
+        assert!(err.contains("sampler: missing section"), "{err}");
     }
 
     #[test]
@@ -275,6 +209,16 @@ mod tests {
     }
 
     #[test]
+    fn rejects_unknown_serving_key() {
+        let prog = PROGRAM.replace(
+            "\"training\":",
+            r#""serving": {"wrokers": 4}, "training":"#,
+        );
+        let err = parse_program(&prog).unwrap_err().to_string();
+        assert!(err.contains("serving.wrokers"), "{err}");
+    }
+
+    #[test]
     fn rejects_unknown_sampler() {
         let bad = PROGRAM.replace("NeighborSampler", "MagicSampler");
         let err = parse_program(&bad).unwrap_err().to_string();
@@ -284,7 +228,38 @@ mod tests {
     #[test]
     fn rejects_graphless_program() {
         let bad = PROGRAM.replace("\"dataset\": \"FL\", \"scale\": 0.005, ", "");
-        assert!(parse_program(&bad).is_err());
+        // Still has "seed", so the section is present but incomplete.
+        let err = parse_program(&bad).unwrap_err().to_string();
+        assert!(err.contains("dataset") || err.contains("edge_list"), "{err}");
+    }
+
+    #[test]
+    fn reports_every_problem_in_one_error() {
+        // Three independent mistakes in three different sections.
+        let bad = PROGRAM
+            .replace("xilinx-U250", "stratix-10")
+            .replace("\"hidden\": [8]", "\"hidden\": [8, 8]")
+            .replace("\"budgets\": [5, 3]", "\"budgets\": []");
+        let spec = parse_program(&bad).unwrap();
+        let d = spec.validate();
+        let paths: Vec<&str> = d.iter().map(|x| x.path.as_str()).collect();
+        assert!(paths.contains(&"platform"), "{paths:?}");
+        assert!(paths.contains(&"model.hidden"), "{paths:?}");
+        assert!(paths.contains(&"sampler.budgets"), "{paths:?}");
+    }
+
+    #[test]
+    fn graphsage_alias_matches_schema_table() {
+        // The schema table documents the aliases GnnModel::parse accepts;
+        // keep them in sync.
+        let prog = PROGRAM.replace("\"computation\": \"GCN\"", "\"computation\": \"graphsage\"");
+        let spec = parse_program(&prog).unwrap();
+        assert_eq!(
+            spec.model.computation,
+            crate::sampler::values::GnnModel::Sage
+        );
+        let prog = PROGRAM.replace("\"computation\": \"GCN\"", "\"computation\": \"GIN\"");
+        assert!(parse_program(&prog).is_ok());
     }
 
     #[test]
@@ -293,7 +268,18 @@ mod tests {
             r#"{"type": "NeighborSampler", "budgets": [5, 3], "targets": 4}"#,
             r#"{"type": "SubgraphSampler", "budget": 64, "layers": 2}"#,
         );
-        let (_b, p) = parse_program(&prog).unwrap();
-        assert_eq!(p.steps, 5);
+        let spec = parse_program(&prog).unwrap();
+        assert_eq!(spec.training.steps, 5);
+    }
+
+    #[test]
+    fn seed_conflict_is_a_diagnostic() {
+        let prog = PROGRAM.replace("\"training\":", "\"seed\": 9, \"training\":");
+        let spec = parse_program(&prog).unwrap();
+        let d = spec.validate();
+        assert!(d.iter().any(|x| x.path == "seed"), "{d}");
+        // Top-level wins for training; graph.seed keeps the structure.
+        assert_eq!(spec.resolved_seed(), 9);
+        assert_eq!(spec.structure_seed(), 3);
     }
 }

@@ -1,0 +1,1166 @@
+//! `ProgramSpec` — the one declarative description of an HP-GNN program.
+//!
+//! Every frontend converges here: the JSON user program parses into a
+//! `ProgramSpec` ([`ProgramSpec::from_json`]), the [`HpGnn`](super::HpGnn)
+//! builder lowers into one ([`HpGnn::spec`](super::HpGnn::spec)), and the
+//! CLI subcommands drive one through an [`api::Workspace`](super::Workspace).
+//! Generation, validation, serving and the DSE engine all consume the same
+//! typed spec, so the frontends cannot drift.
+//!
+//! Two properties carry the design:
+//!
+//! * **Round-trip**: `from_json(to_json(spec)) == spec` for every
+//!   serializable spec (asserted property-style in
+//!   `rust/tests/spec_roundtrip.rs`).  An emitted design therefore doubles
+//!   as a rerunnable, versionable experiment file.  The two builder-only
+//!   escape hatches — an in-memory [`GraphSpec::Inline`] graph and a
+//!   [`PlatformSpec::Custom`] platform — have no JSON form and make
+//!   [`ProgramSpec::to_json`] return an error naming the fix.
+//! * **Full-pass validation**: [`ProgramSpec::from_json`] and
+//!   [`ProgramSpec::validate`] walk the *entire* document/spec and report
+//!   every problem as a [`Diagnostic`](super::diag::Diagnostic) with its
+//!   JSON path, instead of bailing at the first.
+//!
+//! The JSON schema itself is documented in [`super::program`].
+//!
+//! # Seeds
+//!
+//! Historically the seed lived only under `graph.seed`, where it silently
+//! doubled as the training seed.  The spec makes the canonical location
+//! explicit: the top-level `seed` drives everything — training, feature
+//! synthesis, and synthetic graph structure.  `graph.seed` stays honored
+//! for back-compat (old programs behave bit-identically), and giving both
+//! with *different* values is a [`validate`](ProgramSpec::validate)
+//! diagnostic: one program, one seed.
+//!
+//! Precedence, as seen by the accessors: [`ProgramSpec::resolved_seed`]
+//! (training/features) prefers the top-level `seed`;
+//! [`ProgramSpec::structure_seed`] (graph synthesis) prefers `graph.seed`;
+//! each falls back to the other, then to `1` — so on any spec that passes
+//! validation the two agree.  Seeds must fit in 53 bits (they travel
+//! through JSON numbers; [`validate`](ProgramSpec::validate) enforces it).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use super::diag::Diagnostics;
+use super::SamplerSpec;
+use crate::accel::device::FeaturePlacement;
+use crate::accel::platform::{self, Platform};
+use crate::graph::{datasets, Graph};
+use crate::layout::LayoutOptions;
+use crate::sampler::values::GnnModel;
+use crate::util::json::Json;
+
+/// Target platform: a registered board name, or a custom field-by-field
+/// [`Platform`] (builder-only; not serializable).
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlatformSpec {
+    /// A name in the board registry (`accel::platform::BOARDS`).
+    Board(String),
+    /// A custom platform built field-by-field (paper Listing 2).
+    Custom(Platform),
+}
+
+impl PlatformSpec {
+    /// Resolve to a concrete [`Platform`] (registry lookup for boards).
+    pub fn resolve(&self) -> anyhow::Result<Platform> {
+        match self {
+            PlatformSpec::Board(name) => platform::by_board(name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown board {name:?} (known boards: {})",
+                    platform::board_names().join(", ")
+                )
+            }),
+            PlatformSpec::Custom(p) => Ok(p.clone()),
+        }
+    }
+}
+
+/// GNN model section: operator + hidden dims (length L-1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub computation: GnnModel,
+    /// Hidden feature dims between the input features and the classes.
+    pub hidden: Vec<usize>,
+}
+
+/// Input graph section.
+#[derive(Debug, Clone)]
+pub enum GraphSpec {
+    /// A Table 4 dataset key instantiated at a scale factor.
+    Dataset { key: String, scale: f64, seed: Option<u64> },
+    /// An edge-list file plus the dims the file does not carry.
+    EdgeList { path: PathBuf, feat_dim: usize, num_classes: usize, seed: Option<u64> },
+    /// A materialized in-memory graph (builder-only; not serializable).
+    Inline(Arc<Graph>),
+}
+
+impl PartialEq for GraphSpec {
+    fn eq(&self, other: &GraphSpec) -> bool {
+        match (self, other) {
+            (
+                GraphSpec::Dataset { key: a, scale: b, seed: c },
+                GraphSpec::Dataset { key: x, scale: y, seed: z },
+            ) => a == x && b == y && c == z,
+            (
+                GraphSpec::EdgeList { path: a, feat_dim: b, num_classes: c, seed: d },
+                GraphSpec::EdgeList { path: w, feat_dim: x, num_classes: y, seed: z },
+            ) => a == w && b == x && c == y && d == z,
+            // Inline graphs are equal only when they are the same graph.
+            (GraphSpec::Inline(a), GraphSpec::Inline(b)) => Arc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
+}
+
+impl GraphSpec {
+    /// The graph-section seed, when one was given.
+    pub fn seed(&self) -> Option<u64> {
+        match self {
+            GraphSpec::Dataset { seed, .. } | GraphSpec::EdgeList { seed, .. } => *seed,
+            GraphSpec::Inline(_) => None,
+        }
+    }
+
+    /// Materialize the graph, returning it plus the *full-scale* feature
+    /// row count (`DistributeData()` decides placement against the real
+    /// matrix, not a scaled instance).
+    pub fn materialize(&self, structure_seed: u64) -> anyhow::Result<(Arc<Graph>, usize)> {
+        match self {
+            GraphSpec::Dataset { key, scale, .. } => {
+                let spec = datasets::by_key(key)
+                    .ok_or_else(|| anyhow::anyhow!("unknown dataset {key:?}"))?;
+                Ok((Arc::new(spec.scale(*scale).instantiate(structure_seed)), spec.nodes))
+            }
+            GraphSpec::EdgeList { path, feat_dim, num_classes, .. } => {
+                let mut g = crate::graph::io::load_edge_list(path)?;
+                g.feat_dim = *feat_dim;
+                g.num_classes = *num_classes;
+                let rows = g.num_vertices();
+                Ok((Arc::new(g), rows))
+            }
+            GraphSpec::Inline(g) => Ok((Arc::clone(g), g.num_vertices())),
+        }
+    }
+}
+
+/// Training-phase section (the old `TrainingParams`, now part of the spec).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainingSpec {
+    /// Total steps of the run (a resumed session trains the remainder).
+    pub steps: usize,
+    pub lr: f32,
+    /// Attach accelerator-simulator timing to every batch.
+    pub simulate: bool,
+    /// Evaluate on held-out batches every N steps (0 = off).
+    pub eval_every: usize,
+    /// Batches per evaluation.
+    pub eval_batches: usize,
+    /// Session-snapshot path (`HPGNNS01`); `None` disables checkpointing.
+    pub checkpoint: Option<PathBuf>,
+    /// Snapshot every N steps; 0 writes only the final snapshot.
+    pub checkpoint_every: usize,
+}
+
+impl Default for TrainingSpec {
+    fn default() -> TrainingSpec {
+        TrainingSpec {
+            steps: 0,
+            lr: 0.05,
+            simulate: false,
+            eval_every: 0,
+            eval_batches: 2,
+            checkpoint: None,
+            checkpoint_every: 0,
+        }
+    }
+}
+
+/// Serving section — the knobs `hp-gnn serve` and
+/// [`ServeConfig`](crate::serve::ServeConfig) share, expressible in the
+/// user program so a deployment is part of the same versionable artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingSpec {
+    /// Trained checkpoint to serve (`HPGNNW01` weights or an `HPGNNS01`
+    /// session snapshot).  `None` means the caller must supply one
+    /// (e.g. `hp-gnn serve --checkpoint`).
+    pub checkpoint: Option<PathBuf>,
+    /// Forward-executor replicas in the worker pool.
+    pub workers: usize,
+    /// Micro-batch coalescing cap; 0 = the geometry's target capacity.
+    pub max_batch: usize,
+    /// Micro-batch deadline in microseconds.
+    pub max_wait_us: u64,
+    /// Bound of the request queue (enqueue blocks when full).
+    pub queue_depth: usize,
+    /// Enable the versioned logits cache for repeat vertices.
+    pub cache: bool,
+}
+
+impl Default for ServingSpec {
+    /// Mirrors [`ServeConfig`](crate::serve::ServeConfig)'s defaults.
+    fn default() -> ServingSpec {
+        ServingSpec {
+            checkpoint: None,
+            workers: 2,
+            max_batch: 0,
+            max_wait_us: 200,
+            queue_depth: 1024,
+            cache: false,
+        }
+    }
+}
+
+/// A complete, typed HP-GNN program: platform, model, sampler, graph,
+/// seeds, layout switches, training phase and (optionally) serving.
+///
+/// See the [module docs](self) for the round-trip and full-pass-validation
+/// contracts, and [`super::program`] for the JSON schema.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProgramSpec {
+    pub platform: PlatformSpec,
+    pub model: ModelSpec,
+    pub sampler: SamplerSpec,
+    pub graph: GraphSpec,
+    /// Top-level training/feature seed; see the module docs for precedence.
+    pub seed: Option<u64>,
+    /// RMT/RRA layout switches (Table 6 ablation; default: all on).
+    pub layout: LayoutOptions,
+    /// Explicit feature placement (`DistributeData()`); `None` decides
+    /// automatically against the board's DDR capacity.
+    pub placement: Option<FeaturePlacement>,
+    pub training: TrainingSpec,
+    pub serving: Option<ServingSpec>,
+}
+
+impl ProgramSpec {
+    /// The training/feature-synthesis seed: top-level `seed`, else
+    /// `graph.seed`, else 1.
+    pub fn resolved_seed(&self) -> u64 {
+        self.seed.or(self.graph.seed()).unwrap_or(1)
+    }
+
+    /// The synthetic graph-structure seed: `graph.seed`, else the
+    /// top-level `seed`, else 1.
+    pub fn structure_seed(&self) -> u64 {
+        self.graph.seed().or(self.seed).unwrap_or(1)
+    }
+
+    // ---- validation ------------------------------------------------------
+
+    /// Walk the whole spec and report **every** problem (empty = clean).
+    /// Cheap and pure: no graph materialization, no artifact registry.
+    pub fn validate(&self) -> Diagnostics {
+        let mut d = Diagnostics::new();
+
+        if let PlatformSpec::Board(name) = &self.platform {
+            if platform::by_board(name).is_none() {
+                d.push_hint(
+                    "platform",
+                    format!("unknown board {name:?}"),
+                    format!("known boards: {}", platform::board_names().join(", ")),
+                );
+            }
+        }
+
+        let layers = self.sampler.layers();
+        if self.model.hidden.len() + 1 != layers {
+            d.push_hint(
+                "model.hidden",
+                format!("{} hidden dims for {} sampler layers", self.model.hidden.len(), layers),
+                "GNN_Parameters lists the L-1 dims between the input features and the classes",
+            );
+        }
+        if self.model.hidden.contains(&0) {
+            d.push("model.hidden", "hidden dims must be at least 1");
+        }
+
+        match &self.sampler {
+            SamplerSpec::Neighbor { targets, budgets } => {
+                if *targets == 0 {
+                    d.push("sampler.targets", "must be at least 1");
+                }
+                if budgets.is_empty() {
+                    d.push("sampler.budgets", "must list at least one per-layer fan-out");
+                } else if budgets.contains(&0) {
+                    d.push("sampler.budgets", "per-layer fan-outs must be at least 1");
+                }
+            }
+            SamplerSpec::Subgraph { budget, layers } => {
+                if *budget == 0 {
+                    d.push("sampler.budget", "must be at least 1");
+                }
+                if *layers == 0 {
+                    d.push("sampler.layers", "must be at least 1");
+                }
+            }
+            SamplerSpec::Layerwise { targets, sizes } => {
+                if *targets == 0 {
+                    d.push("sampler.targets", "must be at least 1");
+                }
+                if sizes.is_empty() {
+                    d.push("sampler.sizes", "must list at least one per-layer sample size");
+                } else if sizes.contains(&0) {
+                    d.push("sampler.sizes", "per-layer sample sizes must be at least 1");
+                }
+            }
+        }
+
+        match &self.graph {
+            GraphSpec::Dataset { key, scale, .. } => {
+                if datasets::by_key(key).is_none() {
+                    let known: Vec<&str> = datasets::ALL.iter().map(|ds| ds.key).collect();
+                    d.push_hint(
+                        "graph.dataset",
+                        format!("unknown dataset {key:?}"),
+                        format!("known datasets: {}", known.join(", ")),
+                    );
+                }
+                if !(*scale > 0.0 && *scale <= 1.0) {
+                    d.push("graph.scale", format!("{scale} is outside (0, 1]"));
+                }
+            }
+            GraphSpec::EdgeList { feat_dim, num_classes, .. } => {
+                if *feat_dim == 0 {
+                    d.push("graph.feat_dim", "must be at least 1");
+                }
+                if *num_classes == 0 {
+                    d.push("graph.num_classes", "must be at least 1");
+                }
+            }
+            GraphSpec::Inline(g) => {
+                if g.feat_dim == 0 {
+                    d.push("graph", "inline graph has no feature dimension");
+                }
+                if g.num_classes == 0 {
+                    d.push("graph", "inline graph has no class count");
+                }
+            }
+        }
+
+        if let (Some(top), Some(gs)) = (self.seed, self.graph.seed()) {
+            if top != gs {
+                d.push_hint(
+                    "seed",
+                    format!("top-level seed {top} conflicts with graph.seed {gs}"),
+                    "one seed drives graph synthesis, feature synthesis and training — \
+                     drop graph.seed (the top-level seed is the canonical one)",
+                );
+            }
+        }
+        // Seeds travel through JSON numbers: 53 bits is the lossless bound.
+        const MAX_JSON_INT: u64 = 1 << 53;
+        if self.seed.is_some_and(|s| s > MAX_JSON_INT) {
+            d.push("seed", "must fit in 53 bits (seeds travel through JSON numbers)");
+        }
+        if self.graph.seed().is_some_and(|s| s > MAX_JSON_INT) {
+            d.push("graph.seed", "must fit in 53 bits (seeds travel through JSON numbers)");
+        }
+
+        let t = &self.training;
+        if !t.lr.is_finite() || t.lr < 0.0 {
+            d.push("training.lr", format!("{} is not a usable learning rate", t.lr));
+        }
+        if t.checkpoint_every > 0 && t.checkpoint.is_none() {
+            d.push_hint(
+                "training.checkpoint_every",
+                "set without training.checkpoint",
+                "name a snapshot path, or drop the cadence",
+            );
+        }
+        if t.eval_every > 0 && t.eval_batches == 0 {
+            d.push("training.eval_batches", "eval_every is set but eval_batches is 0");
+        }
+
+        if let Some(s) = &self.serving {
+            if s.workers == 0 {
+                d.push("serving.workers", "must be at least 1");
+            }
+            if s.queue_depth == 0 {
+                d.push("serving.queue_depth", "must be at least 1");
+            }
+            if s.max_wait_us > MAX_JSON_INT {
+                d.push("serving.max_wait_us", "must fit in 53 bits (travels through JSON)");
+            }
+        }
+
+        d
+    }
+
+    // ---- JSON ------------------------------------------------------------
+
+    /// Parse a JSON user program, collecting **every** problem — unknown
+    /// keys, wrong types, missing sections — before failing.
+    pub fn from_json(text: &str) -> Result<ProgramSpec, Diagnostics> {
+        let doc = match Json::parse(text) {
+            Ok(doc) => doc,
+            Err(e) => return Err(Diagnostics::one("$", e.to_string())),
+        };
+        if doc.as_obj().is_err() {
+            return Err(Diagnostics::one("$", "user program must be a JSON object"));
+        }
+        let mut d = Diagnostics::new();
+        check_keys(
+            &doc,
+            "",
+            &[
+                "platform", "model", "sampler", "graph", "training", "serving", "seed",
+                "layout", "placement",
+            ],
+            &mut d,
+        );
+
+        let platform = parse_platform(&doc, &mut d);
+        let model = parse_model(&doc, &mut d);
+        let sampler = parse_sampler(&doc, &mut d);
+        let graph = parse_graph(&doc, &mut d);
+        let seed = opt_seed(&doc, "", "seed", &mut d);
+        let layout = parse_layout(&doc, &mut d);
+        let placement = parse_placement(&doc, &mut d);
+        let training = parse_training(&doc, &mut d);
+        let serving = parse_serving(&doc, &mut d);
+
+        match (platform, model, sampler, graph, training) {
+            (Some(platform), Some(model), Some(sampler), Some(graph), Some(training))
+                if d.is_empty() =>
+            {
+                Ok(ProgramSpec {
+                    platform,
+                    model,
+                    sampler,
+                    graph,
+                    seed,
+                    layout,
+                    placement,
+                    training,
+                    serving,
+                })
+            }
+            _ => Err(d),
+        }
+    }
+
+    /// Serialize to the same JSON schema [`from_json`](Self::from_json)
+    /// parses, such that `from_json(to_json(spec).pretty()) == spec`.
+    ///
+    /// Errors only on the two builder escape hatches with no JSON form:
+    /// an [`GraphSpec::Inline`] graph or a [`PlatformSpec::Custom`]
+    /// platform.
+    pub fn to_json(&self) -> anyhow::Result<Json> {
+        // JSON numbers are f64: refuse u64 values that would round —
+        // emitting a lossy seed would silently break the round-trip
+        // contract (validate() diagnoses the same bound).
+        const MAX_JSON_INT: u64 = 1 << 53;
+        for (field, value) in [
+            ("seed", self.seed),
+            ("graph.seed", self.graph.seed()),
+            ("serving.max_wait_us", self.serving.as_ref().map(|s| s.max_wait_us)),
+        ] {
+            if value.is_some_and(|v| v > MAX_JSON_INT) {
+                anyhow::bail!("{field} does not fit in a JSON number (53-bit limit)");
+            }
+        }
+        let board = match &self.platform {
+            PlatformSpec::Board(name) => name.clone(),
+            PlatformSpec::Custom(p) => anyhow::bail!(
+                "custom platform {:?} has no JSON form — register it as a named board \
+                 (accel::platform::BOARDS) to serialize this program",
+                p.name
+            ),
+        };
+        let graph = match &self.graph {
+            GraphSpec::Dataset { key, scale, seed } => {
+                let mut pairs = vec![
+                    ("dataset", Json::str(key.clone())),
+                    ("scale", Json::num(*scale)),
+                ];
+                if let Some(seed) = seed {
+                    pairs.push(("seed", Json::num(*seed as f64)));
+                }
+                Json::obj(pairs)
+            }
+            GraphSpec::EdgeList { path, feat_dim, num_classes, seed } => {
+                let path = path.to_str().ok_or_else(|| {
+                    anyhow::anyhow!("edge-list path {path:?} is not valid UTF-8")
+                })?;
+                let mut pairs = vec![
+                    ("edge_list", Json::str(path)),
+                    ("feat_dim", Json::num(*feat_dim as f64)),
+                    ("num_classes", Json::num(*num_classes as f64)),
+                ];
+                if let Some(seed) = seed {
+                    pairs.push(("seed", Json::num(*seed as f64)));
+                }
+                Json::obj(pairs)
+            }
+            GraphSpec::Inline(g) => anyhow::bail!(
+                "inline graph {:?} has no JSON form — load it from a dataset key or an \
+                 edge_list file to serialize this program",
+                g.name
+            ),
+        };
+        let sampler = match &self.sampler {
+            SamplerSpec::Neighbor { targets, budgets } => Json::obj(vec![
+                ("type", Json::str("NeighborSampler")),
+                ("targets", Json::num(*targets as f64)),
+                ("budgets", usize_arr(budgets)),
+            ]),
+            SamplerSpec::Subgraph { budget, layers } => Json::obj(vec![
+                ("type", Json::str("SubgraphSampler")),
+                ("budget", Json::num(*budget as f64)),
+                ("layers", Json::num(*layers as f64)),
+            ]),
+            SamplerSpec::Layerwise { targets, sizes } => Json::obj(vec![
+                ("type", Json::str("LayerwiseSampler")),
+                ("targets", Json::num(*targets as f64)),
+                ("sizes", usize_arr(sizes)),
+            ]),
+        };
+        let t = &self.training;
+        let mut training = vec![
+            ("steps", Json::num(t.steps as f64)),
+            ("lr", Json::num(t.lr as f64)),
+            ("simulate", Json::Bool(t.simulate)),
+            ("eval_every", Json::num(t.eval_every as f64)),
+            ("eval_batches", Json::num(t.eval_batches as f64)),
+            ("checkpoint_every", Json::num(t.checkpoint_every as f64)),
+        ];
+        if let Some(ckpt) = &t.checkpoint {
+            training.push(("checkpoint", path_json(ckpt)?));
+        }
+
+        let mut pairs = vec![
+            ("platform", Json::str(board)),
+            (
+                "model",
+                Json::obj(vec![
+                    ("computation", Json::str(self.model.computation.as_str())),
+                    ("hidden", usize_arr(&self.model.hidden)),
+                ]),
+            ),
+            ("sampler", sampler),
+            ("graph", graph),
+            ("training", Json::obj(training)),
+        ];
+        if let Some(seed) = self.seed {
+            pairs.push(("seed", Json::num(seed as f64)));
+        }
+        if self.layout != LayoutOptions::all() {
+            pairs.push((
+                "layout",
+                Json::obj(vec![
+                    ("rmt", Json::Bool(self.layout.rmt)),
+                    ("rra", Json::Bool(self.layout.rra)),
+                ]),
+            ));
+        }
+        if let Some(p) = self.placement {
+            pairs.push((
+                "placement",
+                Json::str(match p {
+                    FeaturePlacement::FpgaLocal => "fpga-local",
+                    FeaturePlacement::HostStreamed => "host-streamed",
+                }),
+            ));
+        }
+        if let Some(s) = &self.serving {
+            let mut serving = vec![
+                ("workers", Json::num(s.workers as f64)),
+                ("max_batch", Json::num(s.max_batch as f64)),
+                ("max_wait_us", Json::num(s.max_wait_us as f64)),
+                ("queue_depth", Json::num(s.queue_depth as f64)),
+                ("cache", Json::Bool(s.cache)),
+            ];
+            if let Some(ckpt) = &s.checkpoint {
+                serving.push(("checkpoint", path_json(ckpt)?));
+            }
+            pairs.push(("serving", Json::obj(serving)));
+        }
+        Ok(Json::obj(pairs))
+    }
+}
+
+fn usize_arr(values: &[usize]) -> Json {
+    Json::arr(values.iter().map(|&v| Json::num(v as f64)).collect())
+}
+
+fn path_json(path: &std::path::Path) -> anyhow::Result<Json> {
+    Ok(Json::str(path.to_str().ok_or_else(|| {
+        anyhow::anyhow!("path {path:?} is not valid UTF-8")
+    })?))
+}
+
+// ---- parsing helpers (each pushes diagnostics instead of bailing) --------
+
+fn at(section: &str, key: &str) -> String {
+    if section.is_empty() {
+        key.to_string()
+    } else {
+        format!("{section}.{key}")
+    }
+}
+
+/// Reject keys outside `allowed` so typos fail loudly — one diagnostic per
+/// unknown key, never just the first.
+fn check_keys(obj: &Json, section: &str, allowed: &[&str], d: &mut Diagnostics) {
+    let Ok(map) = obj.as_obj() else { return };
+    for key in map.keys() {
+        if !allowed.contains(&key.as_str()) {
+            d.push_hint(
+                at(section, key),
+                if section.is_empty() {
+                    "unknown key".to_string()
+                } else {
+                    format!("unknown key in \"{section}\"")
+                },
+                format!("allowed: {}", allowed.join(", ")),
+            );
+        }
+    }
+}
+
+/// A required section: present and an object, else a diagnostic.
+fn req_section<'j>(doc: &'j Json, name: &str, d: &mut Diagnostics) -> Option<&'j Json> {
+    match doc.opt(name) {
+        None => {
+            d.push(name, "missing section");
+            None
+        }
+        Some(section) => {
+            if section.as_obj().is_err() {
+                d.push(name, "must be a JSON object");
+                return None;
+            }
+            Some(section)
+        }
+    }
+}
+
+fn req_usize(obj: &Json, section: &str, key: &str, d: &mut Diagnostics) -> Option<usize> {
+    match obj.opt(key) {
+        None => {
+            d.push(at(section, key), "missing");
+            None
+        }
+        Some(j) => match j.as_usize() {
+            Ok(v) => Some(v),
+            Err(e) => {
+                d.push(at(section, key), e.to_string());
+                None
+            }
+        },
+    }
+}
+
+fn req_str<'j>(obj: &'j Json, section: &str, key: &str, d: &mut Diagnostics) -> Option<&'j str> {
+    match obj.opt(key) {
+        None => {
+            d.push(at(section, key), "missing");
+            None
+        }
+        Some(j) => match j.as_str() {
+            Ok(v) => Some(v),
+            Err(e) => {
+                d.push(at(section, key), e.to_string());
+                None
+            }
+        },
+    }
+}
+
+fn req_usize_list(obj: &Json, section: &str, key: &str, d: &mut Diagnostics) -> Option<Vec<usize>> {
+    match obj.opt(key) {
+        None => {
+            d.push(at(section, key), "missing");
+            None
+        }
+        Some(j) => match j.usize_list() {
+            Ok(v) => Some(v),
+            Err(e) => {
+                d.push(at(section, key), e.to_string());
+                None
+            }
+        },
+    }
+}
+
+fn opt_usize(obj: &Json, section: &str, key: &str, default: usize, d: &mut Diagnostics) -> usize {
+    match obj.opt(key) {
+        None => default,
+        Some(j) => match j.as_usize() {
+            Ok(v) => v,
+            Err(e) => {
+                d.push(at(section, key), e.to_string());
+                default
+            }
+        },
+    }
+}
+
+fn opt_bool(obj: &Json, section: &str, key: &str, default: bool, d: &mut Diagnostics) -> bool {
+    match obj.opt(key) {
+        None => default,
+        Some(j) => match j.as_bool() {
+            Ok(v) => v,
+            Err(e) => {
+                d.push(at(section, key), e.to_string());
+                default
+            }
+        },
+    }
+}
+
+fn opt_f64(obj: &Json, section: &str, key: &str, default: f64, d: &mut Diagnostics) -> f64 {
+    match obj.opt(key) {
+        None => default,
+        Some(j) => match j.as_f64() {
+            Ok(v) => v,
+            Err(e) => {
+                d.push(at(section, key), e.to_string());
+                default
+            }
+        },
+    }
+}
+
+fn opt_seed(obj: &Json, section: &str, key: &str, d: &mut Diagnostics) -> Option<u64> {
+    match obj.opt(key) {
+        None => None,
+        Some(j) => match j.as_usize() {
+            Ok(v) => Some(v as u64),
+            Err(e) => {
+                d.push(at(section, key), e.to_string());
+                None
+            }
+        },
+    }
+}
+
+fn opt_path(obj: &Json, section: &str, key: &str, d: &mut Diagnostics) -> Option<PathBuf> {
+    match obj.opt(key) {
+        None => None,
+        Some(j) => match j.as_str() {
+            Ok(v) => Some(PathBuf::from(v)),
+            Err(e) => {
+                d.push(at(section, key), e.to_string());
+                None
+            }
+        },
+    }
+}
+
+fn parse_platform(doc: &Json, d: &mut Diagnostics) -> Option<PlatformSpec> {
+    match doc.opt("platform") {
+        None => {
+            d.push_hint(
+                "platform",
+                "missing section",
+                format!("a board name string; known boards: {}", platform::board_names().join(", ")),
+            );
+            None
+        }
+        Some(j) => match j.as_str() {
+            Ok(board) => Some(PlatformSpec::Board(board.to_string())),
+            Err(_) => {
+                d.push("platform", "must be a board name string");
+                None
+            }
+        },
+    }
+}
+
+fn parse_model(doc: &Json, d: &mut Diagnostics) -> Option<ModelSpec> {
+    let model = req_section(doc, "model", d)?;
+    check_keys(model, "model", &["computation", "hidden"], d);
+    let computation = match req_str(model, "model", "computation", d) {
+        None => None,
+        Some(s) => match GnnModel::parse(s) {
+            Ok(m) => Some(m),
+            Err(e) => {
+                d.push_hint(
+                    "model.computation",
+                    e.to_string(),
+                    "gcn | sage (alias: graphsage) | gin, case-insensitive",
+                );
+                None
+            }
+        },
+    };
+    let hidden = req_usize_list(model, "model", "hidden", d);
+    Some(ModelSpec { computation: computation?, hidden: hidden? })
+}
+
+fn parse_sampler(doc: &Json, d: &mut Diagnostics) -> Option<SamplerSpec> {
+    let sampler = req_section(doc, "sampler", d)?;
+    let kind = req_str(sampler, "sampler", "type", d)?.to_string();
+    match kind.as_str() {
+        "NeighborSampler" => {
+            check_keys_variant(sampler, "NeighborSampler", &["type", "targets", "budgets"], d);
+            let targets = req_usize(sampler, "sampler", "targets", d);
+            let budgets = req_usize_list(sampler, "sampler", "budgets", d);
+            Some(SamplerSpec::Neighbor { targets: targets?, budgets: budgets? })
+        }
+        "SubgraphSampler" => {
+            check_keys_variant(sampler, "SubgraphSampler", &["type", "budget", "layers"], d);
+            let budget = req_usize(sampler, "sampler", "budget", d);
+            let layers = req_usize(sampler, "sampler", "layers", d);
+            Some(SamplerSpec::Subgraph { budget: budget?, layers: layers? })
+        }
+        "LayerwiseSampler" => {
+            check_keys_variant(sampler, "LayerwiseSampler", &["type", "targets", "sizes"], d);
+            let targets = req_usize(sampler, "sampler", "targets", d);
+            let sizes = req_usize_list(sampler, "sampler", "sizes", d);
+            Some(SamplerSpec::Layerwise { targets: targets?, sizes: sizes? })
+        }
+        other => {
+            d.push_hint(
+                "sampler.type",
+                format!("unknown sampler {other:?}"),
+                "NeighborSampler | SubgraphSampler | LayerwiseSampler",
+            );
+            None
+        }
+    }
+}
+
+/// Per-variant key check: an unknown key's diagnostic names the variant
+/// (a `budget` under `NeighborSampler` is almost certainly a mix-up with
+/// `SubgraphSampler`).
+fn check_keys_variant(obj: &Json, variant: &str, allowed: &[&str], d: &mut Diagnostics) {
+    let Ok(map) = obj.as_obj() else { return };
+    for key in map.keys() {
+        if !allowed.contains(&key.as_str()) {
+            d.push_hint(
+                at("sampler", key),
+                format!("unknown key for {variant}"),
+                format!("allowed: {}", allowed.join(", ")),
+            );
+        }
+    }
+}
+
+fn parse_graph(doc: &Json, d: &mut Diagnostics) -> Option<GraphSpec> {
+    let graph = req_section(doc, "graph", d)?;
+    check_keys(
+        graph,
+        "graph",
+        &["dataset", "scale", "edge_list", "feat_dim", "num_classes", "seed"],
+        d,
+    );
+    let seed = opt_seed(graph, "graph", "seed", d);
+    let has_dataset = graph.opt("dataset").is_some();
+    let has_edge_list = graph.opt("edge_list").is_some();
+    if has_dataset && has_edge_list {
+        d.push("graph", "give either \"dataset\" or \"edge_list\", not both");
+        return None;
+    }
+    if has_dataset {
+        for key in ["feat_dim", "num_classes"] {
+            if graph.opt(key).is_some() {
+                d.push_hint(
+                    at("graph", key),
+                    "only meaningful with \"edge_list\"",
+                    "dataset graphs carry their own dims",
+                );
+            }
+        }
+        let key = req_str(graph, "graph", "dataset", d)?.to_string();
+        let scale = opt_f64(graph, "graph", "scale", 1.0, d);
+        Some(GraphSpec::Dataset { key, scale, seed })
+    } else if has_edge_list {
+        if graph.opt("scale").is_some() {
+            d.push_hint(
+                "graph.scale",
+                "only meaningful with \"dataset\"",
+                "edge-list graphs load at their file's size",
+            );
+        }
+        let path = req_str(graph, "graph", "edge_list", d).map(PathBuf::from);
+        let feat_dim = req_usize(graph, "graph", "feat_dim", d);
+        let num_classes = req_usize(graph, "graph", "num_classes", d);
+        Some(GraphSpec::EdgeList {
+            path: path?,
+            feat_dim: feat_dim?,
+            num_classes: num_classes?,
+            seed,
+        })
+    } else {
+        d.push("graph", "needs either \"dataset\" or \"edge_list\"");
+        None
+    }
+}
+
+fn parse_layout(doc: &Json, d: &mut Diagnostics) -> LayoutOptions {
+    match doc.opt("layout") {
+        None => LayoutOptions::all(),
+        Some(layout) => {
+            if layout.as_obj().is_err() {
+                d.push("layout", "must be a JSON object");
+                return LayoutOptions::all();
+            }
+            check_keys(layout, "layout", &["rmt", "rra"], d);
+            LayoutOptions {
+                rmt: opt_bool(layout, "layout", "rmt", true, d),
+                rra: opt_bool(layout, "layout", "rra", true, d),
+            }
+        }
+    }
+}
+
+fn parse_placement(doc: &Json, d: &mut Diagnostics) -> Option<FeaturePlacement> {
+    let j = doc.opt("placement")?;
+    match j.as_str() {
+        Ok("fpga-local") => Some(FeaturePlacement::FpgaLocal),
+        Ok("host-streamed") => Some(FeaturePlacement::HostStreamed),
+        Ok(other) => {
+            d.push_hint(
+                "placement",
+                format!("unknown placement {other:?}"),
+                "fpga-local | host-streamed (omit to decide automatically)",
+            );
+            None
+        }
+        Err(e) => {
+            d.push("placement", e.to_string());
+            None
+        }
+    }
+}
+
+fn parse_training(doc: &Json, d: &mut Diagnostics) -> Option<TrainingSpec> {
+    let training = req_section(doc, "training", d)?;
+    check_keys(
+        training,
+        "training",
+        &[
+            "steps",
+            "lr",
+            "simulate",
+            "eval_every",
+            "eval_batches",
+            "checkpoint",
+            "checkpoint_every",
+        ],
+        d,
+    );
+    let steps = req_usize(training, "training", "steps", d);
+    let lr = match training.opt("lr") {
+        None => {
+            d.push("training.lr", "missing");
+            None
+        }
+        Some(j) => match j.as_f64() {
+            Ok(v) => Some(v as f32),
+            Err(e) => {
+                d.push("training.lr", e.to_string());
+                None
+            }
+        },
+    };
+    let defaults = TrainingSpec::default();
+    let spec = TrainingSpec {
+        steps: steps?,
+        lr: lr?,
+        simulate: opt_bool(training, "training", "simulate", defaults.simulate, d),
+        eval_every: opt_usize(training, "training", "eval_every", defaults.eval_every, d),
+        eval_batches: opt_usize(training, "training", "eval_batches", defaults.eval_batches, d),
+        checkpoint: opt_path(training, "training", "checkpoint", d),
+        checkpoint_every: opt_usize(
+            training,
+            "training",
+            "checkpoint_every",
+            defaults.checkpoint_every,
+            d,
+        ),
+    };
+    Some(spec)
+}
+
+fn parse_serving(doc: &Json, d: &mut Diagnostics) -> Option<ServingSpec> {
+    let serving = doc.opt("serving")?;
+    if serving.as_obj().is_err() {
+        d.push("serving", "must be a JSON object");
+        return None;
+    }
+    check_keys(
+        serving,
+        "serving",
+        &["checkpoint", "workers", "max_batch", "max_wait_us", "queue_depth", "cache"],
+        d,
+    );
+    let defaults = ServingSpec::default();
+    Some(ServingSpec {
+        checkpoint: opt_path(serving, "serving", "checkpoint", d),
+        workers: opt_usize(serving, "serving", "workers", defaults.workers, d),
+        max_batch: opt_usize(serving, "serving", "max_batch", defaults.max_batch, d),
+        max_wait_us: opt_usize(serving, "serving", "max_wait_us", defaults.max_wait_us as usize, d)
+            as u64,
+        queue_depth: opt_usize(serving, "serving", "queue_depth", defaults.queue_depth, d),
+        cache: opt_bool(serving, "serving", "cache", defaults.cache, d),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal() -> ProgramSpec {
+        ProgramSpec {
+            platform: PlatformSpec::Board("xilinx-U250".to_string()),
+            model: ModelSpec { computation: GnnModel::Gcn, hidden: vec![8] },
+            sampler: SamplerSpec::Neighbor { targets: 4, budgets: vec![5, 3] },
+            graph: GraphSpec::Dataset { key: "FL".to_string(), scale: 0.005, seed: Some(3) },
+            seed: None,
+            layout: LayoutOptions::all(),
+            placement: None,
+            training: TrainingSpec { steps: 5, lr: 0.1, ..Default::default() },
+            serving: None,
+        }
+    }
+
+    #[test]
+    fn minimal_spec_is_clean_and_round_trips() {
+        let spec = minimal();
+        assert!(spec.validate().is_empty());
+        let text = spec.to_json().unwrap().pretty();
+        let again = ProgramSpec::from_json(&text).unwrap();
+        assert_eq!(again, spec);
+    }
+
+    #[test]
+    fn full_spec_round_trips() {
+        let mut spec = minimal();
+        spec.seed = Some(3);
+        spec.layout = LayoutOptions { rmt: false, rra: true };
+        spec.placement = Some(FeaturePlacement::HostStreamed);
+        spec.training = TrainingSpec {
+            steps: 12,
+            lr: 0.05,
+            simulate: true,
+            eval_every: 4,
+            eval_batches: 3,
+            checkpoint: Some(PathBuf::from("run.ckpt")),
+            checkpoint_every: 6,
+        };
+        spec.serving = Some(ServingSpec {
+            checkpoint: Some(PathBuf::from("model.bin")),
+            workers: 4,
+            max_batch: 64,
+            max_wait_us: 150,
+            queue_depth: 256,
+            cache: true,
+        });
+        assert!(spec.validate().is_empty());
+        let text = spec.to_json().unwrap().pretty();
+        let again = ProgramSpec::from_json(&text).unwrap();
+        assert_eq!(again, spec);
+    }
+
+    #[test]
+    fn seed_precedence_and_conflict() {
+        let mut spec = minimal();
+        // graph.seed alone drives both (back-compat).
+        assert_eq!(spec.resolved_seed(), 3);
+        assert_eq!(spec.structure_seed(), 3);
+        // A top-level seed takes over training; graph.seed keeps structure.
+        spec.seed = Some(9);
+        assert_eq!(spec.resolved_seed(), 9);
+        assert_eq!(spec.structure_seed(), 3);
+        // ...but differing values is flagged.
+        let d = spec.validate();
+        assert_eq!(d.len(), 1, "{d}");
+        assert!(d.iter().any(|x| x.path == "seed"), "{d}");
+        // Equal values are fine.
+        spec.seed = Some(3);
+        assert!(spec.validate().is_empty());
+        // Neither given: default 1.
+        spec.seed = None;
+        spec.graph = GraphSpec::Dataset { key: "FL".into(), scale: 0.005, seed: None };
+        assert_eq!(spec.resolved_seed(), 1);
+        assert_eq!(spec.structure_seed(), 1);
+    }
+
+    #[test]
+    fn validate_reports_every_problem_in_one_pass() {
+        let mut spec = minimal();
+        spec.platform = PlatformSpec::Board("stratix-10".to_string());
+        spec.model.hidden = vec![8, 8]; // 2 hidden dims for a 2-layer sampler
+        spec.sampler = SamplerSpec::Neighbor { targets: 4, budgets: vec![] };
+        let d = spec.validate();
+        let paths: Vec<&str> = d.iter().map(|x| x.path.as_str()).collect();
+        assert!(paths.contains(&"platform"), "{paths:?}");
+        assert!(paths.contains(&"model.hidden"), "{paths:?}");
+        assert!(paths.contains(&"sampler.budgets"), "{paths:?}");
+        assert!(d.len() >= 3, "{d}");
+    }
+
+    #[test]
+    fn from_json_collects_problems_across_sections() {
+        // Three independent parse-stage mistakes: a typo'd top-level key
+        // (which also leaves "sampler" missing) and a bad training type.
+        let text = r#"{
+          "platform": "xilinx-U250",
+          "model": {"computation": "GCN", "hidden": [8]},
+          "smapler": {"type": "NeighborSampler", "budgets": [5, 3], "targets": 4},
+          "graph": {"dataset": "FL", "scale": 0.005},
+          "training": {"steps": "five", "lr": 0.1}
+        }"#;
+        let d = ProgramSpec::from_json(text).unwrap_err();
+        let paths: Vec<&str> = d.iter().map(|x| x.path.as_str()).collect();
+        assert!(paths.contains(&"smapler"), "{paths:?}");
+        assert!(paths.contains(&"sampler"), "{paths:?}");
+        assert!(paths.contains(&"training.steps"), "{paths:?}");
+    }
+
+    #[test]
+    fn inline_and_custom_have_no_json_form() {
+        let mut spec = minimal();
+        spec.graph = GraphSpec::Inline(Arc::new(crate::graph::generator::uniform(
+            50, 200, true, 1,
+        )));
+        let err = spec.to_json().unwrap_err().to_string();
+        assert!(err.contains("no JSON form"), "{err}");
+        let mut spec = minimal();
+        spec.platform = PlatformSpec::Custom(Platform::alveo_u250());
+        let err = spec.to_json().unwrap_err().to_string();
+        assert!(err.contains("no JSON form"), "{err}");
+    }
+
+    #[test]
+    fn oversized_seed_is_diagnosed_not_silently_rounded() {
+        // A >53-bit seed cannot survive a JSON number; the write side must
+        // refuse it instead of letting to_json emit a rounded value that
+        // re-parses to a different (or no) seed.
+        let mut spec = minimal();
+        spec.seed = Some(1u64 << 60);
+        spec.graph = GraphSpec::Dataset { key: "FL".into(), scale: 0.005, seed: None };
+        let d = spec.validate();
+        assert!(d.iter().any(|x| x.path == "seed" && x.reason.contains("53")), "{d}");
+        // ...and to_json refuses even on an unvalidated spec.
+        let err = spec.to_json().unwrap_err().to_string();
+        assert!(err.contains("53-bit"), "{err}");
+    }
+
+    #[test]
+    fn serving_defaults_mirror_serve_config() {
+        // An empty `"serving": {}` section and *no* serving section must
+        // configure the server identically: ServingSpec::default has to
+        // track ServeConfig::default field for field.
+        let spec = ServingSpec::default();
+        let cfg = crate::serve::ServeConfig::default();
+        assert_eq!(spec.workers, cfg.workers);
+        assert_eq!(spec.max_batch, cfg.max_batch);
+        assert_eq!(spec.max_wait_us, cfg.max_wait.as_micros() as u64);
+        assert_eq!(spec.queue_depth, cfg.queue_depth);
+        assert_eq!(spec.cache, cfg.cache);
+    }
+
+    #[test]
+    fn non_default_scale_checks() {
+        let mut spec = minimal();
+        spec.graph = GraphSpec::Dataset { key: "FL".into(), scale: 0.0, seed: None };
+        let d = spec.validate();
+        assert!(d.iter().any(|x| x.path == "graph.scale"), "{d}");
+    }
+}

@@ -538,6 +538,44 @@ impl<'rt> TrainingSession<'rt> {
         Ok(())
     }
 
+    /// The generated host program's main loop: train until `total_steps`
+    /// *global* steps have executed (a resumed session trains only the
+    /// remainder), evaluating on `eval_batches` held-out batches every
+    /// `eval_every` steps and snapshotting to `checkpoint` every
+    /// `checkpoint_every` steps — plus a final snapshot, unless the
+    /// periodic cadence just wrote one at the last step.  Both `hp-gnn
+    /// run` and `hp-gnn train` sit on this; progress arrives through the
+    /// [`on_step`](Self::on_step)/[`on_eval`](Self::on_eval) hooks.
+    pub fn drive(
+        &mut self,
+        total_steps: usize,
+        eval_every: usize,
+        eval_batches: usize,
+        checkpoint: Option<&Path>,
+        checkpoint_every: usize,
+    ) -> anyhow::Result<()> {
+        let mut last_saved = None;
+        while self.current_step() < total_steps {
+            self.step()?;
+            let done = self.current_step();
+            if eval_every > 0 && done % eval_every == 0 {
+                self.evaluate(eval_batches)?;
+            }
+            if let Some(path) = checkpoint {
+                if checkpoint_every > 0 && done % checkpoint_every == 0 {
+                    self.save(path)?;
+                    last_saved = Some(done);
+                }
+            }
+        }
+        if let Some(path) = checkpoint {
+            if last_saved != Some(self.current_step()) {
+                self.save(path)?;
+            }
+        }
+        Ok(())
+    }
+
     /// Score the current weights on `batches` freshly sampled held-out
     /// batches through the forward artifact (compiled once, on first use).
     /// Evaluation draws from a seed-salted stream, so it never perturbs

@@ -1,28 +1,36 @@
 //! `hp-gnn` — the leader binary.
 //!
+//! Every subcommand drives the same declarative [`ProgramSpec`] through an
+//! [`api::Workspace`](hp_gnn::api::Workspace) — whether the spec came from
+//! a JSON user program (`run`/`serve`/`validate`/`explain`) or from flags
+//! lowered through the [`HpGnn`] builder (`train`/`serve`/`dse`).
+//!
 //! Subcommands:
 //!
 //! * `run <program.json>` — execute a user program (paper Listing 1) as a
 //!   training session (`--resume` continues from a session snapshot).
 //! * `train` — train a model on a synthetic Table 4 dataset.
-//! * `serve` — serve vertex-classification requests from a checkpoint.
+//! * `serve [program.json]` — serve vertex-classification requests from a
+//!   checkpoint (flags, or the program's `serving` section).
+//! * `validate <program.json>` — parse + design-check a program, printing
+//!   **every** diagnostic (no training).
+//! * `explain <program.json>` — print the generated-design report
+//!   (Listing 3): artifact geometry, DSE config, utilization, placement.
 //! * `dse` — run the design space exploration engine (Table 5 rows).
 //! * `simulate` — simulate one mini-batch on the accelerator model.
-//! * `info` — list artifacts and platform description.
+//! * `info` — list artifacts, boards and platform description.
 //! * `help` — this overview.
 //!
 //! Run `hp-gnn <subcommand> --help` for flags.
 
 use std::path::{Path, PathBuf};
 
-use hp_gnn::accel::{AccelConfig, Platform, SimOptions};
-use hp_gnn::api::{program, HpGnn, SamplerSpec};
+use hp_gnn::accel::{AccelConfig, SimOptions};
+use hp_gnn::api::{program, HpGnn, ProgramSpec, SamplerSpec, TrainingSpec, Workspace};
 use hp_gnn::coordinator::{trainer::Optimizer, TrainingSession};
-use hp_gnn::dse::{explore, DseProblem};
+use hp_gnn::dse::explore;
 use hp_gnn::graph::datasets;
 use hp_gnn::layout::{index_batch, LayoutOptions};
-use hp_gnn::perf::{ModelShape, ResourceCoefficients};
-use hp_gnn::runtime::Runtime;
 use hp_gnn::sampler::values::{attach_values, GnnModel};
 use hp_gnn::sampler::Sampler;
 use hp_gnn::util::cli::Args;
@@ -32,7 +40,9 @@ use hp_gnn::util::si;
 const USAGE: &str = "hp-gnn — HP-GNN training framework (FPGA '22 reproduction)\n\n\
      SUBCOMMANDS:\n  run <program.json>   execute a user program as a training session\n  \
      train                train on a synthetic dataset\n  \
-     serve                serve vertex-classification requests from a checkpoint\n  \
+     serve [program.json] serve vertex-classification requests from a checkpoint\n  \
+     validate <program.json>  parse + design-check a program, print every diagnostic\n  \
+     explain <program.json>   print the generated-design report (Listing 3)\n  \
      dse                  design space exploration (Table 5)\n  \
      simulate             accelerator simulation of one batch\n  \
      info                 artifacts + platform info\n  \
@@ -46,6 +56,8 @@ fn main() {
         "run" => cmd_run(argv),
         "train" => cmd_train(argv),
         "serve" => cmd_serve(argv),
+        "validate" => cmd_validate(argv),
+        "explain" => cmd_explain(argv),
         "dse" => cmd_dse(argv),
         "simulate" => cmd_simulate(argv),
         "info" => cmd_info(argv),
@@ -95,42 +107,13 @@ fn opt_usize_flag(args: &Args, name: &str) -> anyhow::Result<Option<usize>> {
     }
 }
 
-/// Drive `session` until `total_steps` global steps have executed,
-/// evaluating every `eval_every` steps and snapshotting every
-/// `checkpoint_every` steps (plus a final snapshot) when configured.
-fn run_session(
-    session: &mut TrainingSession<'_>,
-    total_steps: usize,
-    eval_every: usize,
-    eval_batches: usize,
-    checkpoint: Option<&Path>,
-    checkpoint_every: usize,
-) -> anyhow::Result<()> {
-    let mut last_saved = None;
-    while session.current_step() < total_steps {
-        session.step()?;
-        let done = session.current_step();
-        if eval_every > 0 && done % eval_every == 0 {
-            session.evaluate(eval_batches)?;
-        }
-        if let Some(path) = checkpoint {
-            if checkpoint_every > 0 && done % checkpoint_every == 0 {
-                session.save(path)?;
-                last_saved = Some(done);
-            }
-        }
-    }
-    if let Some(path) = checkpoint {
-        // Final snapshot, unless the periodic cadence just wrote it.
-        if last_saved != Some(session.current_step()) {
-            session.save(path)?;
-        }
-        println!(
-            "checkpoint: wrote session snapshot to {path:?} at step {}",
-            session.current_step()
-        );
-    }
-    Ok(())
+/// Read + parse a required `<program.json>` positional.
+fn read_program(args: &Args, usage: &str) -> anyhow::Result<(String, String)> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: {usage}"))?;
+    Ok((path.clone(), std::fs::read_to_string(path)?))
 }
 
 /// Progress hooks shared by `run` and `train`: decimated step lines plus
@@ -160,53 +143,50 @@ fn cmd_run(argv: Vec<String>) -> anyhow::Result<()> {
     )))
     .flag("eval-batches", "", "override training.eval_batches")
     .parse_from(argv)?;
-    let path = args
-        .positional
-        .first()
-        .ok_or_else(|| anyhow::anyhow!("usage: hp-gnn run <program.json>"))?;
-    let text = std::fs::read_to_string(path)?;
-    let (builder, mut params) = program::parse_program(&text)?;
+    let (_, text) = read_program(&args, "hp-gnn run <program.json>")?;
+    let mut spec = program::parse_program(&text)?;
     // Given CLI flags override the program's training section (an
     // explicit 0 disables a program-configured cadence).
     if let Some(v) = opt_usize_flag(&args, "eval-every")? {
-        params.eval_every = v;
+        spec.training.eval_every = v;
     }
     if let Some(v) = opt_usize_flag(&args, "eval-batches")? {
-        params.eval_batches = v;
+        spec.training.eval_batches = v;
     }
     if !args.get("checkpoint").is_empty() {
-        params.checkpoint = Some(PathBuf::from(args.get("checkpoint")));
+        spec.training.checkpoint = Some(PathBuf::from(args.get("checkpoint")));
     }
     if let Some(v) = opt_usize_flag(&args, "checkpoint-every")? {
-        params.checkpoint_every = v;
+        spec.training.checkpoint_every = v;
     }
 
-    let runtime = Runtime::auto(Path::new(args.get("artifacts")))?;
-    let design = builder.generate_design(&runtime)?;
-    println!("generated design:\n{}", design.to_json().pretty());
+    let ws = Workspace::open(Path::new(args.get("artifacts")))?;
+    let design = ws.design(&spec)?;
+    println!("{}\n", design.explain());
 
     let mut session = if args.get("resume").is_empty() {
-        design.session(&runtime, params.lr, params.simulate)?
+        design.session()?
     } else {
-        let s = design.resume_session(
-            &runtime,
-            params.lr,
-            params.simulate,
-            Path::new(args.get("resume")),
-        )?;
+        let s = design.resume_session(Path::new(args.get("resume")))?;
         println!("resumed at step {}", s.current_step());
         s
     };
-    session.set_step_limit(params.steps);
-    install_progress_hooks(&mut session, params.steps);
-    run_session(
-        &mut session,
-        params.steps,
-        params.eval_every,
-        params.eval_batches,
-        params.checkpoint.as_deref(),
-        params.checkpoint_every,
+    let t = &design.spec.training;
+    session.set_step_limit(t.steps);
+    install_progress_hooks(&mut session, t.steps);
+    session.drive(
+        t.steps,
+        t.eval_every,
+        t.eval_batches,
+        t.checkpoint.as_deref(),
+        t.checkpoint_every,
     )?;
+    if let Some(path) = &t.checkpoint {
+        println!(
+            "checkpoint: wrote session snapshot to {path:?} at step {}",
+            session.current_step()
+        );
+    }
     let threads = session.config().sampler_threads;
     let report = session.finish();
     println!("training report:\n{}", report.metrics.to_json(threads).pretty());
@@ -216,7 +196,8 @@ fn cmd_run(argv: Vec<String>) -> anyhow::Result<()> {
 fn cmd_train(argv: Vec<String>) -> anyhow::Result<()> {
     let args = session_flags(artifacts_flag(
         Args::new("hp-gnn train", "train a GNN on a synthetic Table 4 dataset")
-            .flag("model", "gcn", "gcn | sage")
+            .flag("board", "xilinx-U250", "board name (see `hp-gnn info` for the registry)")
+            .flag("model", "gcn", "gcn | sage | gin")
             .flag("dataset", "FL", "FL | RD | YP | AP")
             .flag("scale", "0.01", "dataset scale factor (0, 1]")
             .flag("sampler", "ns", "ns | ss")
@@ -241,7 +222,6 @@ fn cmd_train(argv: Vec<String>) -> anyhow::Result<()> {
     ))
     .parse_from(argv)?;
 
-    let runtime = Runtime::auto(Path::new(args.get("artifacts")))?;
     let sampler = match args.get("sampler") {
         "ns" => SamplerSpec::Neighbor {
             targets: args.usize("targets"),
@@ -255,18 +235,28 @@ fn cmd_train(argv: Vec<String>) -> anyhow::Result<()> {
         other => anyhow::bail!("unknown sampler {other:?} (ns|ss)"),
     };
     let layout = LayoutOptions { rmt: !args.on("no-rmt"), rra: !args.on("no-rra") };
-    let design = HpGnn::init()
-        .platform_board("xilinx-U250")?
+    let steps = args.usize("steps");
+    let seed = args.usize("seed") as u64;
+    let spec = HpGnn::init()
+        .platform_board(args.get("board"))?
         .gnn_computation(args.get("model"))?
         .gnn_parameters(vec![256])
         .sampler(sampler)
         .layout(layout)
-        .seed(args.usize("seed") as u64)
-        .load_dataset(args.get("dataset"), args.f64("scale"), args.usize("seed") as u64)?
-        .generate_design(&runtime)?;
-    println!("generated design:\n{}", design.to_json().pretty());
+        .seed(seed)
+        .load_dataset(args.get("dataset"), args.f64("scale"), seed)?
+        .training(TrainingSpec {
+            steps,
+            lr: args.f32("lr"),
+            simulate: args.on("simulate"),
+            ..Default::default()
+        })
+        .spec()?;
 
-    let steps = args.usize("steps");
+    let ws = Workspace::open(Path::new(args.get("artifacts")))?;
+    let design = ws.design(&spec)?;
+    println!("{}\n", design.explain());
+
     let mut cfg = design.train_config(steps, args.f32("lr"), args.on("simulate"));
     cfg.sampler_threads = args.usize("threads");
     if let Some(v) = opt_usize_flag(&args, "compute-threads")? {
@@ -277,19 +267,10 @@ fn cmd_train(argv: Vec<String>) -> anyhow::Result<()> {
         "adam" => Optimizer::Adam,
         other => anyhow::bail!("unknown optimizer {other:?} (sgd|adam)"),
     };
-    let graph = std::sync::Arc::clone(&design.graph);
-    let boxed: std::sync::Arc<dyn Sampler> =
-        std::sync::Arc::from(design.abstraction.sampler.build());
     let mut session = if args.get("resume").is_empty() {
-        TrainingSession::new(&runtime, graph, boxed, cfg)?
+        design.session_with_config(cfg)?
     } else {
-        let s = TrainingSession::resume(
-            &runtime,
-            graph,
-            boxed,
-            cfg,
-            Path::new(args.get("resume")),
-        )?;
+        let s = design.resume_session_with_config(cfg, Path::new(args.get("resume")))?;
         println!("resumed at step {}", s.current_step());
         s
     };
@@ -300,14 +281,19 @@ fn cmd_train(argv: Vec<String>) -> anyhow::Result<()> {
     let eval_batches = opt_usize_flag(&args, "eval-batches")?.unwrap_or(0);
     let eval_every = opt_usize_flag(&args, "eval-every")?.unwrap_or(0);
     let start_step = session.current_step();
-    run_session(
-        &mut session,
+    session.drive(
         steps,
         eval_every,
         if eval_batches > 0 { eval_batches } else { 2 },
         checkpoint.as_deref(),
         opt_usize_flag(&args, "checkpoint-every")?.unwrap_or(0),
     )?;
+    if let Some(path) = &checkpoint {
+        println!(
+            "checkpoint: wrote session snapshot to {path:?} at step {}",
+            session.current_step()
+        );
+    }
     // Final held-out eval, unless the periodic cadence just ran one at
     // the last step (the eval stream is fixed, so it would be identical).
     // A resume that was already past `steps` ran no periodic evals.
@@ -335,62 +321,89 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
     let args = artifacts_flag(
         Args::new(
             "hp-gnn serve",
-            "serve vertex-classification requests from a trained checkpoint",
+            "serve vertex-classification requests from a trained checkpoint \
+             (give a program.json with a serving section, or flags)",
         )
-        .flag("checkpoint", "", "HPGNNW01 weights or HPGNNS01 session snapshot (required)")
-        .flag("model", "gcn", "gcn | sage (must match training)")
-        .flag("dataset", "FL", "FL | RD | YP | AP (must match training)")
-        .flag("scale", "0.01", "dataset scale factor (0, 1] (must match training)")
-        .flag("targets", "32", "NS target vertices (sizes the artifact geometry)")
-        .flag("budgets", "5,10", "NS fan-outs per layer (comma separated)")
-        .flag("seed", "7", "PRNG seed (must match training for feature synthesis)")
-        .flag("workers", "2", "forward-executor replicas in the worker pool")
-        .flag("max-batch", "0", "micro-batch coalescing cap (0 = geometry target capacity)")
-        .flag("max-wait-us", "200", "micro-batch deadline in microseconds")
+        .flag(
+            "checkpoint",
+            "",
+            "HPGNNW01 weights or HPGNNS01 snapshot (required unless the program's \
+             serving section names one)",
+        )
+        .flag("board", "xilinx-U250", "board name (flag mode; must match training)")
+        .flag("model", "gcn", "gcn | sage | gin (flag mode; must match training)")
+        .flag("dataset", "FL", "FL | RD | YP | AP (flag mode; must match training)")
+        .flag("scale", "0.01", "dataset scale factor (0, 1] (flag mode; must match training)")
+        .flag("targets", "32", "NS target vertices (flag mode; sizes the artifact geometry)")
+        .flag("budgets", "5,10", "NS fan-outs per layer (flag mode; comma separated)")
+        .flag("seed", "7", "PRNG seed (flag mode; must match training for feature synthesis)")
+        .flag("workers", "", "forward-executor replicas (default: program value or 2)")
+        .flag("max-batch", "", "micro-batch coalescing cap (0 = geometry target capacity)")
+        .flag("max-wait-us", "", "micro-batch deadline in microseconds (default 200)")
         .flag("requests", "64", "self-driven demo requests when --vertices is empty")
         .flag("vertices", "", "comma-separated vertex ids to classify (one line each)")
         .switch("cache", "enable the versioned logits cache for repeat vertices"),
     )
     .parse_from(argv)?;
-    anyhow::ensure!(
-        !args.get("checkpoint").is_empty(),
-        "usage: hp-gnn serve --checkpoint <file> (weights from `hp-gnn train --save` \
-         or a session snapshot from `--checkpoint`)"
-    );
 
-    let runtime = Runtime::auto(Path::new(args.get("artifacts")))?;
-    // Rebuild the training-time design (same dataset, sampler and
-    // geometry selection) so the served model sees the inputs it learned.
-    let seed = args.usize("seed") as u64;
-    let design = HpGnn::init()
-        .platform_board("xilinx-U250")?
-        .gnn_computation(args.get("model"))?
-        .gnn_parameters(vec![256])
-        .sampler(SamplerSpec::Neighbor {
-            targets: args.usize("targets"),
-            budgets: args
-                .get("budgets")
-                .split(',')
-                .map(|b| b.trim().parse())
-                .collect::<Result<Vec<usize>, _>>()?,
-        })
-        .seed(seed)
-        .load_dataset(args.get("dataset"), args.f64("scale"), seed)?
-        .generate_design(&runtime)?;
+    let spec = if let Some(path) = args.positional.first() {
+        program::parse_program(&std::fs::read_to_string(path)?)?
+    } else {
+        let seed = args.usize("seed") as u64;
+        HpGnn::init()
+            .platform_board(args.get("board"))?
+            .gnn_computation(args.get("model"))?
+            .gnn_parameters(vec![256])
+            .sampler(SamplerSpec::Neighbor {
+                targets: args.usize("targets"),
+                budgets: args
+                    .get("budgets")
+                    .split(',')
+                    .map(|b| b.trim().parse())
+                    .collect::<Result<Vec<usize>, _>>()?,
+            })
+            .seed(seed)
+            .load_dataset(args.get("dataset"), args.f64("scale"), seed)?
+            .spec()?
+    };
 
-    let mut cfg = design.serve_config();
-    cfg.workers = args.usize("workers").max(1);
-    cfg.max_batch = args.usize("max-batch");
-    cfg.max_wait = std::time::Duration::from_micros(args.usize("max-wait-us") as u64);
-    cfg.cache = args.on("cache");
-    let server = design.server(&runtime, cfg, Path::new(args.get("checkpoint")))?;
+    // The program's serving section is the baseline; given flags override.
+    let mut serving = spec.serving.clone().unwrap_or_default();
+    if let Some(v) = opt_usize_flag(&args, "workers")? {
+        serving.workers = v.max(1);
+    }
+    if let Some(v) = opt_usize_flag(&args, "max-batch")? {
+        serving.max_batch = v;
+    }
+    if let Some(v) = opt_usize_flag(&args, "max-wait-us")? {
+        serving.max_wait_us = v as u64;
+    }
+    if args.on("cache") {
+        serving.cache = true;
+    }
+    if !args.get("checkpoint").is_empty() {
+        serving.checkpoint = Some(PathBuf::from(args.get("checkpoint")));
+    }
+    let checkpoint = serving.checkpoint.clone().ok_or_else(|| {
+        anyhow::anyhow!(
+            "no checkpoint to serve: give --checkpoint <file> (weights from `hp-gnn train \
+             --save` or a session snapshot from `--checkpoint`), or name one in the \
+             program's serving section"
+        )
+    })?;
+    let mut spec = spec;
+    spec.serving = Some(serving);
+
+    let ws = Workspace::open(Path::new(args.get("artifacts")))?;
+    let design = ws.design(&spec)?;
+    let server = design.server_from(&checkpoint)?;
     println!(
         "serving {} on geometry {} ({} workers, max batch {}, cache {})",
-        args.get("model"),
+        design.abstraction.model.as_str(),
         server.geometry().name,
         server.num_workers(),
         server.max_batch(),
-        if args.on("cache") { "on" } else { "off" },
+        if design.spec.serving.as_ref().is_some_and(|s| s.cache) { "on" } else { "off" },
     );
 
     if !args.get("vertices").is_empty() {
@@ -413,7 +426,7 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         // a random vertex stream (repeat vertices exercise the cache).
         let n = args.usize("requests");
         let num_vertices = design.graph.num_vertices();
-        let mut rng = Pcg64::seed_from_u64(seed ^ 0x10ad);
+        let mut rng = Pcg64::seed_from_u64(design.seed ^ 0x10ad);
         let pool: Vec<u32> = (0..(num_vertices / 4).clamp(1, 512))
             .map(|_| rng.index(num_vertices) as u32)
             .collect();
@@ -434,43 +447,96 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_validate(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = artifacts_flag(Args::new(
+        "hp-gnn validate",
+        "parse + design-check a user program, printing every diagnostic",
+    ))
+    .parse_from(argv)?;
+    let (path, text) = read_program(&args, "hp-gnn validate <program.json>")?;
+
+    // Parse-stage problems (syntax, unknown keys, wrong types)...
+    let spec = match ProgramSpec::from_json(&text) {
+        Ok(spec) => spec,
+        Err(diags) => print_diags_and_exit(&path, &diags),
+    };
+    // ...then a full semantic pass over the whole spec...
+    let diags = spec.validate();
+    if !diags.is_empty() {
+        print_diags_and_exit(&path, &diags);
+    }
+    // ...then the design-feasibility check (board resolution + artifact
+    // geometry), sized from statistics — a full-scale dataset program
+    // validates without being materialized.
+    let ws = Workspace::open(Path::new(args.get("artifacts")))?;
+    match spec.design_check(ws.runtime()) {
+        Err(e) => {
+            println!("{path}: design check failed: {e:#}");
+            std::process::exit(1);
+        }
+        Ok(geometry) => {
+            println!(
+                "{path}: ok — artifact geometry {geometry}, seed {}{}",
+                spec.resolved_seed(),
+                if spec.serving.is_some() { ", serving section present" } else { "" },
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Print every diagnostic (the `Diagnostics` Display renders the full
+/// list, one line each) and exit 1 (`hp-gnn validate`).
+fn print_diags_and_exit(path: &str, diags: &hp_gnn::api::Diagnostics) -> ! {
+    println!("{path}: {diags}");
+    std::process::exit(1)
+}
+
+fn cmd_explain(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = artifacts_flag(Args::new(
+        "hp-gnn explain",
+        "print the generated-design report (Listing 3) for a user program",
+    ))
+    .parse_from(argv)?;
+    let (_, text) = read_program(&args, "hp-gnn explain <program.json>")?;
+    let spec = program::parse_program(&text)?;
+    let ws = Workspace::open(Path::new(args.get("artifacts")))?;
+    let design = ws.design(&spec)?;
+    println!("{}", design.explain());
+    println!("\nas JSON (rerunnable program + design summary):\n{}", design.to_json().pretty());
+    Ok(())
+}
+
 fn cmd_dse(argv: Vec<String>) -> anyhow::Result<()> {
     let args = Args::new("hp-gnn dse", "design space exploration (paper Table 5)")
-        .flag("model", "gcn", "gcn | sage")
+        .flag("board", "xilinx-U250", "board name (see `hp-gnn info` for the registry)")
+        .flag("model", "gcn", "gcn | sage | gin")
         .flag("dataset", "FL", "FL | RD | YP | AP")
         .flag("sampler", "ns", "ns | ss")
         .parse_from(argv)?;
-    let ds = datasets::by_key(args.get("dataset"))
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
-    let model = GnnModel::parse(args.get("model"))?;
-    let geom = match args.get("sampler") {
-        "ns" => hp_gnn::perf::BatchGeometry::neighbor_capped(1024, &[10, 25], ds.nodes),
-        "ss" => {
-            let kappa = hp_gnn::perf::KappaEstimator::from_stats(ds.nodes, ds.edges);
-            hp_gnn::perf::BatchGeometry::subgraph(2750, 2, &kappa)
-        }
-        other => anyhow::bail!("unknown sampler {other:?}"),
+    let sampler = match args.get("sampler") {
+        "ns" => SamplerSpec::Neighbor { targets: 1024, budgets: vec![10, 25] },
+        "ss" => SamplerSpec::Subgraph { budget: 2750, layers: 2 },
+        other => anyhow::bail!("unknown sampler {other:?} (ns|ss)"),
     };
-    let platform = Platform::alveo_u250();
-    let r = explore(
-        &platform,
-        &DseProblem {
-            geom: geom.clone(),
-            model: ModelShape {
-                feat: vec![ds.f0, 256, ds.f2],
-                sage_concat: model == GnnModel::Sage,
-            },
-            layout: LayoutOptions::all(),
-            coeff: ResourceCoefficients::default(),
-            t_sampling_single: None,
-        },
-    );
+    // The same spec path as every other subcommand; dse never materializes
+    // the graph — the DSE problem is sized from the published statistics.
+    let spec = HpGnn::init()
+        .platform_board(args.get("board"))?
+        .gnn_computation(args.get("model"))?
+        .gnn_parameters(vec![256])
+        .sampler(sampler)
+        .load_dataset(args.get("dataset"), 1.0, 1)?
+        .spec()?;
+    let (platform, problem) = spec.dse_problem()?;
+    let r = explore(&platform, &problem);
     println!(
-        "{}-{} on {}: (m, n) = ({}, {}), predicted {} NVTPS, \
+        "{}-{} on {} ({}): (m, n) = ({}, {}), predicted {} NVTPS, \
          DSP {:.0}% LUT {:.0}% URAM {:.0}% BRAM {:.0}% ({} candidates)",
         args.get("sampler").to_uppercase(),
-        model.as_str().to_uppercase(),
-        ds.key,
+        spec.model.computation.as_str().to_uppercase(),
+        args.get("dataset"),
+        platform.name,
         r.config.m,
         r.config.n,
         si(r.nvtps),
@@ -485,6 +551,7 @@ fn cmd_dse(argv: Vec<String>) -> anyhow::Result<()> {
 
 fn cmd_simulate(argv: Vec<String>) -> anyhow::Result<()> {
     let args = Args::new("hp-gnn simulate", "simulate one mini-batch on the accelerator")
+        .flag("board", "xilinx-U250", "board name (see `hp-gnn info` for the registry)")
         .flag("model", "gcn", "gcn | sage")
         .flag("dataset", "FL", "FL | RD | YP | AP")
         .flag("scale", "0.05", "dataset scale factor")
@@ -511,7 +578,8 @@ fn cmd_simulate(argv: Vec<String>) -> anyhow::Result<()> {
     let vals = attach_values(&g, &mb, model);
     let layout = LayoutOptions { rmt: !args.on("no-rmt"), rra: !args.on("no-rra") };
     let ib = index_batch(&mb, &vals, layout);
-    let platform = Platform::alveo_u250();
+    let platform =
+        hp_gnn::api::PlatformSpec::Board(args.get("board").to_string()).resolve()?;
     let config = AccelConfig { n: args.usize("n"), m: args.usize("m") };
     let timing = hp_gnn::accel::simulate_batch(
         &platform,
@@ -547,17 +615,19 @@ fn cmd_simulate(argv: Vec<String>) -> anyhow::Result<()> {
 fn cmd_info(argv: Vec<String>) -> anyhow::Result<()> {
     let args = artifacts_flag(Args::new("hp-gnn info", "artifacts + platform info"))
         .parse_from(argv)?;
-    let platform = Platform::alveo_u250();
-    println!(
-        "platform: {} — {} dies, {} DSP/die, {} LUT/die, {:.2} GB/s/channel, {} MHz",
-        platform.name,
-        platform.dies,
-        platform.dsp_per_die,
-        platform.lut_per_die,
-        platform.bw_per_channel_gbps,
-        platform.freq_hz / 1e6
-    );
-    match Runtime::auto(std::path::Path::new(args.get("artifacts"))) {
+    println!("boards:");
+    for name in hp_gnn::accel::platform::board_names() {
+        let p = hp_gnn::accel::platform::by_board(name).expect("registered board");
+        println!(
+            "  {name}: {} dies, {} DSP/die, {} LUT/die, {:.2} GB/s/channel, {} MHz",
+            p.dies,
+            p.dsp_per_die,
+            p.lut_per_die,
+            p.bw_per_channel_gbps,
+            p.freq_hz / 1e6
+        );
+    }
+    match hp_gnn::runtime::Runtime::auto(std::path::Path::new(args.get("artifacts"))) {
         Ok(rt) => {
             println!("backend: {}", rt.backend_name());
             println!("artifacts:");

@@ -100,6 +100,18 @@ impl ServeConfig {
             ..ServeConfig::default()
         }
     }
+
+    /// Overlay a user program's `serving` section
+    /// ([`ServingSpec`](crate::api::spec::ServingSpec)) on this config —
+    /// how a declarative program drives `hp-gnn serve` end to end.
+    pub fn apply_spec(mut self, s: &crate::api::spec::ServingSpec) -> ServeConfig {
+        self.workers = s.workers.max(1);
+        self.max_batch = s.max_batch;
+        self.max_wait = Duration::from_micros(s.max_wait_us);
+        self.queue_depth = s.queue_depth.max(1);
+        self.cache = s.cache;
+        self
+    }
 }
 
 impl std::fmt::Debug for ServeConfig {

@@ -6,7 +6,7 @@
 //! requires `make artifacts` and skips cleanly otherwise.
 
 use hp_gnn::api::program::parse_program;
-use hp_gnn::api::{HpGnn, SamplerSpec};
+use hp_gnn::api::{HpGnn, SamplerSpec, Workspace};
 use hp_gnn::coordinator::{train, TrainConfig};
 use hp_gnn::runtime::Runtime;
 use hp_gnn::sampler::values::GnnModel;
@@ -54,21 +54,27 @@ fn user_program_end_to_end() {
         r#""budgets": [5, 3], "targets": 4"#,
         r#""budgets": [5, 10], "targets": 32"#,
     );
-    let (builder, params) = parse_program(&program).unwrap();
+    let spec = parse_program(&program).unwrap();
     // Session knobs default off when the program omits them.
-    assert_eq!(params.eval_every, 0);
-    assert!(params.checkpoint.is_none());
-    let design = builder.generate_design(&rt).unwrap();
+    assert_eq!(spec.training.eval_every, 0);
+    assert!(spec.training.checkpoint.is_none());
+    // The workspace owns the runtime; the design binds to it.
+    let ws = Workspace::with_runtime(rt);
+    let design = ws.design(&spec).unwrap();
     assert_eq!(design.geometry, "ns_small");
-    let report = design
-        .start_training(&rt, params.steps, params.lr, params.simulate)
-        .unwrap();
+    // Start_training() takes steps/lr/simulate from the program itself.
+    let report = design.start_training().unwrap();
     assert_eq!(report.metrics.losses.len(), 10);
     assert!(report.metrics.simulated_nvtps(2).unwrap() > 0.0);
-    // Generated-design dump carries the DSE outcome.
+    // Generated-design dump: a "design" summary with the DSE outcome plus
+    // the embedded "program", which re-parses to the exact same spec.
     let dump = design.to_json();
-    assert!(dump.get("accel_m_macs").unwrap().as_f64().unwrap() >= 64.0);
-    assert_eq!(dump.get("artifact_geometry").unwrap().as_str().unwrap(), "ns_small");
+    let summary = dump.get("design").unwrap();
+    assert!(summary.get("accel_m_macs").unwrap().as_f64().unwrap() >= 64.0);
+    assert_eq!(summary.get("artifact_geometry").unwrap().as_str().unwrap(), "ns_small");
+    let embedded = dump.get("program").unwrap().pretty();
+    let reparsed = hp_gnn::api::ProgramSpec::from_json(&embedded).unwrap();
+    assert_eq!(reparsed, design.spec, "design JSON must embed a round-trippable program");
 }
 
 #[test]
@@ -185,7 +191,14 @@ fn distribute_data_places_features_by_capacity() {
         .unwrap();
     assert_eq!(design.placement, FeaturePlacement::FpgaLocal);
     assert_eq!(
-        design.to_json().get("feature_placement").unwrap().as_str().unwrap(),
+        design
+            .to_json()
+            .get("design")
+            .unwrap()
+            .get("feature_placement")
+            .unwrap()
+            .as_str()
+            .unwrap(),
         "fpga-local"
     );
 

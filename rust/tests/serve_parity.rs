@@ -214,4 +214,37 @@ fn cli_serve_answers_from_both_checkpoint_formats_deterministically() {
     // HPGNNS01 session snapshot: same weights, same answers.
     let c = serve(&snapshot, &[]);
     assert_eq!(lines_a, vertex_lines(&c), "session snapshot served different answers");
+
+    // Program-driven serve: a JSON user program whose `serving` section
+    // names the checkpoint and the coalescing knobs drives `hp-gnn serve`
+    // end to end — and answers bit-identically to the flag path.
+    let prog = dir.join("serve.json");
+    std::fs::write(
+        &prog,
+        format!(
+            r#"{{
+  "platform": "xilinx-U250",
+  "model": {{"computation": "gcn", "hidden": [256]}},
+  "sampler": {{"type": "NeighborSampler", "targets": 32, "budgets": [5, 10]}},
+  "graph": {{"dataset": "FL", "scale": 0.004}},
+  "seed": 7,
+  "training": {{"steps": 2, "lr": 0.05}},
+  "serving": {{"checkpoint": "{}", "workers": 4, "max_batch": 64, "cache": true}}
+}}"#,
+            weights.to_str().unwrap()
+        ),
+    )
+    .unwrap();
+    let out = std::process::Command::new(exe)
+        .args(["serve", prog.to_str().unwrap(), "--vertices", "3,17,42"])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "program-driven serve failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let d = String::from_utf8_lossy(&out.stdout).to_string();
+    assert_eq!(lines_a, vertex_lines(&d), "program-driven serving diverged from flags");
+    assert!(d.contains("4 workers"), "serving section must set the pool size:\n{d}");
 }

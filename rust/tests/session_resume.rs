@@ -248,7 +248,65 @@ fn cli_unknown_subcommand_fails_and_help_succeeds() {
     let stdout = String::from_utf8_lossy(&out.stdout);
     assert!(stdout.contains("SUBCOMMANDS"));
     // Every subcommand the dispatcher knows must be in the overview.
-    for sub in ["run", "train", "serve", "dse", "simulate", "info"] {
+    for sub in ["run", "train", "serve", "validate", "explain", "dse", "simulate", "info"] {
         assert!(stdout.contains(sub), "help output misses {sub:?}: {stdout}");
+    }
+}
+
+#[test]
+fn cli_validate_prints_every_diagnostic_and_explain_reports() {
+    let exe = env!("CARGO_BIN_EXE_hp-gnn");
+    let dir = temp_dir("validate");
+
+    // A clean program validates with exit 0 and an "ok" summary line.
+    let good = dir.join("good.json");
+    write_program(&good, 4, 0);
+    let out = std::process::Command::new(exe)
+        .args(["validate", good.to_str().unwrap()])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "validate failed on a clean program: {stdout}");
+    assert!(stdout.contains("ok"), "{stdout}");
+    assert!(stdout.contains("geometry"), "{stdout}");
+
+    // Three independent mistakes -> all three paths in one invocation,
+    // nonzero exit.
+    let bad = dir.join("bad.json");
+    std::fs::write(
+        &bad,
+        r#"{
+  "platform": "stratix-10",
+  "model": {"computation": "GCN", "hidden": [256, 256]},
+  "sampler": {"type": "NeighborSampler", "budgets": [], "targets": 32},
+  "graph": {"dataset": "FL", "scale": 0.004},
+  "training": {"steps": 4, "lr": 0.1}
+}"#,
+    )
+    .unwrap();
+    let out = std::process::Command::new(exe)
+        .args(["validate", bad.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "validate must exit nonzero on a broken program");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for path in ["platform", "model.hidden", "sampler.budgets"] {
+        assert!(stdout.contains(path), "validate output misses {path:?}:\n{stdout}");
+    }
+    assert!(stdout.contains("3 problems"), "{stdout}");
+
+    // `explain` prints the Listing-3 report + the rerunnable program JSON.
+    let out = std::process::Command::new(exe)
+        .args(["explain", good.to_str().unwrap()])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "explain failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    for needle in ["generated design", "artifact:", "utilization:", "placement:", "\"program\""] {
+        assert!(stdout.contains(needle), "explain output misses {needle:?}:\n{stdout}");
     }
 }

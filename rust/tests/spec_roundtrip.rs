@@ -1,0 +1,247 @@
+//! The two contracts the declarative API redesign rests on:
+//!
+//! 1. **Round-trip** — for every serializable [`ProgramSpec`],
+//!    `from_json(to_json(spec)) == spec` (property-style over randomly
+//!    generated builder programs, every sampler variant × graph kind ×
+//!    board × optional sections).
+//! 2. **Full-pass diagnostics** — a program with several independent
+//!    mistakes reports *all* of them, each at its JSON path, in one pass.
+
+use std::path::{Path, PathBuf};
+
+use hp_gnn::api::{
+    GraphSpec, HpGnn, ProgramSpec, SamplerSpec, ServingSpec, TrainingSpec, Workspace,
+};
+use hp_gnn::util::prop::Runner;
+use hp_gnn::util::rng::Pcg64;
+
+const BOARDS: &[&str] = &["xilinx-U250", "xilinx-U280"];
+const MODELS: &[&str] = &["gcn", "sage", "gin"];
+const DATASETS: &[&str] = &["FL", "RD", "YP", "AP"];
+
+/// A random program, built through the [`HpGnn`] builder like a user
+/// would, with every optional section flipped on or off independently.
+fn random_spec(rng: &mut Pcg64) -> ProgramSpec {
+    let layers = 2 + rng.index(2); // 2..=3
+    let sampler = match rng.index(3) {
+        0 => SamplerSpec::Neighbor {
+            targets: 1 + rng.index(64),
+            budgets: (0..layers).map(|_| 1 + rng.index(16)).collect(),
+        },
+        1 => SamplerSpec::Subgraph { budget: 1 + rng.index(512), layers },
+        _ => SamplerSpec::Layerwise {
+            targets: 1 + rng.index(64),
+            sizes: (0..layers).map(|_| 1 + rng.index(64)).collect(),
+        },
+    };
+    let hidden: Vec<usize> = (0..layers - 1).map(|_| 1 + rng.index(256)).collect();
+    let graph_seed = rng.below(1 << 20);
+
+    let mut builder = HpGnn::init()
+        .platform_board(BOARDS[rng.index(BOARDS.len())])
+        .unwrap()
+        .gnn_computation(MODELS[rng.index(MODELS.len())])
+        .unwrap()
+        .gnn_parameters(hidden)
+        .sampler(sampler)
+        .layout(hp_gnn::layout::LayoutOptions {
+            rmt: rng.index(2) == 0,
+            rra: rng.index(2) == 0,
+        })
+        .training(TrainingSpec {
+            steps: rng.index(1000),
+            lr: (1 + rng.index(1000)) as f32 / 997.0,
+            simulate: rng.index(2) == 0,
+            eval_every: rng.index(20),
+            eval_batches: 1 + rng.index(4),
+            checkpoint: (rng.index(2) == 0).then(|| PathBuf::from("run.ckpt")),
+            checkpoint_every: rng.index(20),
+        });
+    builder = if rng.index(4) == 0 {
+        builder.load_edge_list(Path::new("edges.txt"), 1 + rng.index(64), 2 + rng.index(9))
+    } else {
+        builder
+            .load_dataset(
+                DATASETS[rng.index(DATASETS.len())],
+                (1 + rng.index(1000)) as f64 / 1000.0,
+                graph_seed,
+            )
+            .unwrap()
+    };
+    if rng.index(2) == 0 {
+        builder = builder.seed(rng.below(1 << 20));
+    }
+    if rng.index(2) == 0 {
+        builder = builder.serving(ServingSpec {
+            checkpoint: (rng.index(2) == 0).then(|| PathBuf::from("model.bin")),
+            workers: 1 + rng.index(8),
+            max_batch: rng.index(128),
+            max_wait_us: rng.below(10_000),
+            queue_depth: 1 + rng.index(4096),
+            cache: rng.index(2) == 0,
+        });
+    }
+    if rng.index(4) == 0 {
+        builder = builder.distribute_data(if rng.index(2) == 0 {
+            hp_gnn::accel::device::FeaturePlacement::FpgaLocal
+        } else {
+            hp_gnn::accel::device::FeaturePlacement::HostStreamed
+        });
+    }
+    let mut spec = builder.spec().expect("all required pieces are set");
+    // load_dataset always records a structure seed; sometimes drop it to
+    // cover the "top-level only" and "neither" seed configurations too.
+    if rng.index(3) == 0 {
+        if let GraphSpec::Dataset { seed, .. } = &mut spec.graph {
+            *seed = None;
+        }
+    }
+    spec
+}
+
+#[test]
+fn builder_specs_round_trip_through_json() {
+    Runner::new(128, 0x5bec).run(random_spec, |spec| {
+        let json = spec
+            .to_json()
+            .map_err(|e| format!("to_json failed: {e}"))?;
+        // pretty and compact must parse back to the identical spec.
+        for text in [json.pretty(), json.compact()] {
+            let again = ProgramSpec::from_json(&text)
+                .map_err(|d| format!("re-parse failed:\n{d}\n--- emitted:\n{text}"))?;
+            if &again != spec {
+                return Err(format!("round-trip mismatch:\n{again:#?}\n--- vs\n{spec:#?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn round_trip_preserves_seed_resolution() {
+    // The *resolved* seeds — not just the fields — must survive the trip,
+    // since they are what training/serving actually key on.
+    Runner::new(64, 0x5eed).run(random_spec, |spec| {
+        let text = spec.to_json().map_err(|e| e.to_string())?.pretty();
+        let again = ProgramSpec::from_json(&text).map_err(|d| d.to_string())?;
+        if again.resolved_seed() != spec.resolved_seed() {
+            return Err(format!(
+                "resolved seed drifted: {} -> {}",
+                spec.resolved_seed(),
+                again.resolved_seed()
+            ));
+        }
+        if again.structure_seed() != spec.structure_seed() {
+            return Err("structure seed drifted".to_string());
+        }
+        Ok(())
+    });
+}
+
+/// Three independent mistakes in three different sections — all three
+/// paths must come back from a single validation pass.
+#[test]
+fn program_with_three_mistakes_reports_all_three_paths() {
+    let text = r#"{
+      "platform": "stratix-10",
+      "model": {"computation": "GCN", "hidden": [8, 8]},
+      "sampler": {"type": "NeighborSampler", "budgets": [], "targets": 4},
+      "graph": {"dataset": "FL", "scale": 0.005},
+      "training": {"steps": 5, "lr": 0.1}
+    }"#;
+    let spec = ProgramSpec::from_json(text).expect("syntactically fine");
+    let d = spec.validate();
+    let paths: Vec<&str> = d.iter().map(|x| x.path.as_str()).collect();
+    assert!(paths.contains(&"platform"), "missing platform diagnostic: {paths:?}");
+    assert!(paths.contains(&"model.hidden"), "missing model.hidden diagnostic: {paths:?}");
+    assert!(paths.contains(&"sampler.budgets"), "missing sampler.budgets diagnostic: {paths:?}");
+    assert!(d.len() >= 3, "{d}");
+    // The unknown-board diagnostic enumerates the registry.
+    let board = d.iter().find(|x| x.path == "platform").unwrap();
+    let hint = board.hint.as_deref().unwrap_or_default();
+    assert!(hint.contains("xilinx-U250") && hint.contains("xilinx-U280"), "{hint}");
+    // And the whole set surfaces through the design path as one error.
+    let err = Workspace::reference().design(&spec).unwrap_err().to_string();
+    assert!(
+        err.contains("platform") && err.contains("model.hidden") && err.contains("sampler.budgets"),
+        "{err}"
+    );
+}
+
+#[test]
+fn parse_stage_also_collects_across_sections() {
+    // Unknown keys in two different sections + a type error in a third:
+    // one parse, three diagnostics.
+    let text = r#"{
+      "platform": "xilinx-U250",
+      "model": {"computation": "GCN", "hiddne": [8]},
+      "sampler": {"type": "NeighborSampler", "budgets": [5, 3], "targets": 4, "budgte": 1},
+      "graph": {"dataset": "FL", "scale": "tiny"},
+      "training": {"steps": 5, "lr": 0.1}
+    }"#;
+    let d = ProgramSpec::from_json(text).unwrap_err();
+    let paths: Vec<&str> = d.iter().map(|x| x.path.as_str()).collect();
+    assert!(paths.contains(&"model.hiddne"), "{paths:?}");
+    assert!(paths.contains(&"sampler.budgte"), "{paths:?}");
+    assert!(paths.contains(&"graph.scale"), "{paths:?}");
+    // The typo'd `hidden` is *also* reported as missing.
+    assert!(paths.contains(&"model.hidden"), "{paths:?}");
+}
+
+#[test]
+fn seed_conflict_diagnostic_and_precedence() {
+    let text = r#"{
+      "platform": "xilinx-U250",
+      "model": {"computation": "GCN", "hidden": [8]},
+      "sampler": {"type": "NeighborSampler", "budgets": [5, 3], "targets": 4},
+      "graph": {"dataset": "FL", "scale": 0.005, "seed": 3},
+      "seed": 9,
+      "training": {"steps": 5, "lr": 0.1}
+    }"#;
+    let spec = ProgramSpec::from_json(text).unwrap();
+    assert_eq!(spec.resolved_seed(), 9, "top-level seed drives training");
+    assert_eq!(spec.structure_seed(), 3, "graph.seed drives structure");
+    let d = spec.validate();
+    assert!(d.iter().any(|x| x.path == "seed"), "conflict must be diagnosed: {d}");
+    // Removing the conflict clears the diagnostic either way.
+    let same = text.replace("\"seed\": 9,", "\"seed\": 3,");
+    assert!(ProgramSpec::from_json(&same).unwrap().validate().is_empty());
+    let top_only = text.replace("\"scale\": 0.005, \"seed\": 3", "\"scale\": 0.005");
+    let spec = ProgramSpec::from_json(&top_only).unwrap();
+    assert!(spec.validate().is_empty());
+    assert_eq!(spec.resolved_seed(), 9);
+    assert_eq!(spec.structure_seed(), 9, "top-level seed backfills structure");
+}
+
+#[test]
+fn workspace_design_honors_serving_section() {
+    // A spec with a serving section resolves the serve config from the
+    // program (the CLI path layers flag overrides on the same struct).
+    let mut g = hp_gnn::graph::generator::with_min_degree(
+        hp_gnn::graph::generator::rmat(400, 3200, Default::default(), 5),
+        1,
+        6,
+    );
+    g.feat_dim = 16;
+    g.num_classes = 4;
+    let spec = HpGnn::init()
+        .platform_board("xilinx-U250")
+        .unwrap()
+        .gnn_computation("gcn")
+        .unwrap()
+        .gnn_parameters(vec![8])
+        .sampler(SamplerSpec::Neighbor { targets: 4, budgets: vec![5, 3] })
+        .load_input_graph(g)
+        .serving(ServingSpec { workers: 3, max_batch: 7, cache: true, ..Default::default() })
+        .spec()
+        .unwrap();
+    let ws = Workspace::reference();
+    let design = ws.design(&spec).unwrap();
+    let cfg = design.serve_config();
+    assert_eq!(cfg.workers, 3);
+    assert_eq!(cfg.max_batch, 7);
+    assert!(cfg.cache);
+    // No checkpoint in the section -> .server() says what is missing.
+    let err = design.server().unwrap_err().to_string();
+    assert!(err.contains("serving.checkpoint"), "{err}");
+}
