@@ -12,13 +12,19 @@ BENCH_PROFILE ?= full
 BENCH_OUT ?= $(abspath BENCH_hotpath.json)
 SERVE_OUT ?= $(abspath BENCH_serve.json)
 
-.PHONY: build test check-xla fmt artifacts clean-artifacts bench-hotpath bench-serve
+.PHONY: build test lint check-xla fmt artifacts clean-artifacts bench-hotpath bench-serve
 
 build:
 	cargo build --release
 
 test:
 	cargo test -q
+
+# In-repo static analysis: machine-checks the determinism (D1-D3) and
+# serving-robustness (R1-R2) contracts over rust/src.  Nonzero exit on
+# any finding; see README "Static analysis" for rules and pragmas.
+lint:
+	cargo run -q --release --bin hp-gnn -- lint
 
 # The PJRT path must keep compiling even without an XLA install.
 check-xla:

@@ -28,6 +28,7 @@ pub mod coordinator;
 pub mod dse;
 pub mod graph;
 pub mod layout;
+pub mod lint;
 pub mod perf;
 pub mod repro;
 pub mod runtime;

@@ -1,0 +1,455 @@
+//! `hp-gnn lint` — static enforcement of the determinism and
+//! serving-robustness contracts.
+//!
+//! The repo's load-bearing invariants — batch *k* is a pure function of
+//! `(seed, k)`, kernels are bit-identical at every thread count, served
+//! logits are bit-identical across worker counts and coalescing patterns,
+//! a serving worker degrades per-request instead of crashing the pool —
+//! are probed dynamically by the test matrix, but a finite matrix cannot
+//! stop the *next* change from quietly introducing a `HashMap` iteration
+//! or a wall-clock read into a determinism-critical module.  This pass
+//! checks the contracts at the source level, on every `make lint` / CI
+//! run.
+//!
+//! # Rules
+//!
+//! | id | name | what it forbids |
+//! |----|------|-----------------|
+//! | D1 | no-unordered-iteration | `HashMap`/`HashSet` iteration (order leaks into outputs) |
+//! | D2 | no-wallclock | `Instant::now` / `SystemTime` in deterministic step paths |
+//! | D3 | no-ad-hoc-float-reduction | float `sum`/`fold` bypassing the `kernels::` helpers |
+//! | R1 | no-panic-in-serving-path | `unwrap`/`expect`/`panic!` where a request must fail soft |
+//! | R2 | checked-arithmetic-in-loaders | unchecked size arithmetic on header-derived counts |
+//!
+//! Each rule applies only where a [`Contract`] binds it (see
+//! [`CONTRACTS`]); the scanner is comment/string-aware and skips
+//! `#[cfg(test)] mod` bodies ([`source`]).  Suppression requires an
+//! inline `// lint:allow(rule): <reason>` pragma with a non-empty
+//! reason, and a pragma that suppresses nothing is itself an error —
+//! every exception stays justified and current.
+//!
+//! Findings reuse the [`crate::api::diag`] shape (`hp-gnn validate`'s
+//! diagnostic contract): path-anchored reason + fix hint, all problems
+//! reported in one pass.  `hp-gnn lint --json` emits the machine-readable
+//! report (schema in README "Static analysis").
+
+pub mod rules;
+pub mod source;
+
+use std::path::{Path, PathBuf};
+
+use crate::api::diag::{Diagnostic, Diagnostics};
+use crate::util::json::Json;
+
+/// The five contract rules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RuleId {
+    D1,
+    D2,
+    D3,
+    R1,
+    R2,
+}
+
+impl RuleId {
+    pub const ALL: [RuleId; 5] = [RuleId::D1, RuleId::D2, RuleId::D3, RuleId::R1, RuleId::R2];
+
+    /// Short id as written in pragmas (`"D1"`).
+    pub fn id(self) -> &'static str {
+        match self {
+            RuleId::D1 => "D1",
+            RuleId::D2 => "D2",
+            RuleId::D3 => "D3",
+            RuleId::R1 => "R1",
+            RuleId::R2 => "R2",
+        }
+    }
+
+    /// Human name (`"no-unordered-iteration"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            RuleId::D1 => "no-unordered-iteration",
+            RuleId::D2 => "no-wallclock",
+            RuleId::D3 => "no-ad-hoc-float-reduction",
+            RuleId::R1 => "no-panic-in-serving-path",
+            RuleId::R2 => "checked-arithmetic-in-loaders",
+        }
+    }
+
+    /// The repo-blessed fix, attached to findings as the diagnostic hint.
+    pub fn hint(self) -> &'static str {
+        match self {
+            RuleId::D1 => {
+                "use BTreeMap/BTreeSet, a Vec/VecDeque insertion ring, or sort before iterating"
+            }
+            RuleId::D2 => {
+                "keep wall-clock reads in measurement-only code (util::stats::Timer) — \
+                 step outputs must be a pure function of (seed, step)"
+            }
+            RuleId::D3 => {
+                "reduce through the kernels:: helpers (their accumulation order is \
+                 oracle-pinned), or justify with lint:allow(D3) if the value never \
+                 reaches a determinism-pinned output"
+            }
+            RuleId::R1 => {
+                "propagate with `?`/context, recover (serve::lock_unpoisoned), or \
+                 justify provable infallibility with lint:allow(R1)"
+            }
+            RuleId::R2 => "use checked_add/checked_mul on header-derived sizes",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RuleId> {
+        RuleId::ALL.iter().copied().find(|r| r.id() == s)
+    }
+}
+
+/// Where a bound rule applies within the file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scope {
+    /// The whole file (minus `#[cfg(test)] mod` bodies).
+    File,
+    /// Only inside the named function (e.g. `TrainingSession::drive`).
+    Function(&'static str),
+}
+
+/// One row of the contract table: rule `rule` applies to every file under
+/// `prefix` (a `rust/src/`-relative path prefix), because `why`.
+#[derive(Debug, Clone, Copy)]
+pub struct Contract {
+    pub prefix: &'static str,
+    pub rule: RuleId,
+    pub scope: Scope,
+    pub why: &'static str,
+}
+
+/// The per-module contract table — which invariant each module owes.
+pub const CONTRACTS: &[Contract] = &[
+    Contract {
+        prefix: "runtime/kernels/",
+        rule: RuleId::D1,
+        scope: Scope::File,
+        why: "kernel outputs are oracle-pinned and bit-identical at every thread count",
+    },
+    Contract {
+        prefix: "runtime/kernels/",
+        rule: RuleId::D2,
+        scope: Scope::File,
+        why: "kernel outputs are oracle-pinned and bit-identical at every thread count",
+    },
+    Contract {
+        prefix: "sampler/",
+        rule: RuleId::D1,
+        scope: Scope::File,
+        why: "batch k is a pure function of (seed, k)",
+    },
+    Contract {
+        prefix: "sampler/",
+        rule: RuleId::D2,
+        scope: Scope::File,
+        why: "batch k is a pure function of (seed, k)",
+    },
+    Contract {
+        prefix: "serve/",
+        rule: RuleId::D1,
+        scope: Scope::File,
+        why: "served logits are bit-identical across worker counts and coalescing \
+              patterns (cache eviction included)",
+    },
+    Contract {
+        prefix: "serve/",
+        rule: RuleId::R1,
+        scope: Scope::File,
+        why: "a serving worker degrades per-request; one bad request or poisoned lock \
+              must not take down the pool",
+    },
+    Contract {
+        prefix: "serve/infer.rs",
+        rule: RuleId::D2,
+        scope: Scope::File,
+        why: "the shared inference path feeds both eval and serve — wall-clock reads \
+              would un-pin served logits",
+    },
+    Contract {
+        prefix: "serve/infer.rs",
+        rule: RuleId::D3,
+        scope: Scope::File,
+        why: "logits post-processing must not reorder float accumulation",
+    },
+    Contract {
+        prefix: "coordinator/session.rs",
+        rule: RuleId::D1,
+        scope: Scope::File,
+        why: "the session's batch_rng(seed, k) purity makes resume bit-exact",
+    },
+    Contract {
+        prefix: "coordinator/session.rs",
+        rule: RuleId::D2,
+        scope: Scope::File,
+        why: "the session's batch_rng(seed, k) purity makes resume bit-exact",
+    },
+    Contract {
+        prefix: "coordinator/session.rs",
+        rule: RuleId::R1,
+        scope: Scope::Function("drive"),
+        why: "the long-running training driver reports errors; it does not crash \
+              mid-run with checkpoints unwritten",
+    },
+    Contract {
+        prefix: "graph/io.rs",
+        rule: RuleId::R2,
+        scope: Scope::File,
+        why: "adversarial headers must fail the length check, not wrap it",
+    },
+    Contract {
+        prefix: "runtime/reference.rs",
+        rule: RuleId::D3,
+        scope: Scope::File,
+        why: "the reference executor is the oracle — reductions go through kernels::",
+    },
+    Contract {
+        prefix: "runtime/executor.rs",
+        rule: RuleId::D3,
+        scope: Scope::File,
+        why: "executor-side reductions must use the oracle-pinned kernels:: helpers",
+    },
+    Contract {
+        prefix: "runtime/inputs.rs",
+        rule: RuleId::D3,
+        scope: Scope::File,
+        why: "input packing feeds the kernels — no ad-hoc float accumulation",
+    },
+    Contract {
+        prefix: "runtime/tensor.rs",
+        rule: RuleId::D3,
+        scope: Scope::File,
+        why: "tensor utilities sit under every kernel — no ad-hoc float accumulation",
+    },
+    Contract {
+        prefix: "runtime/weights.rs",
+        rule: RuleId::D3,
+        scope: Scope::File,
+        why: "weight updates are part of the bit-exact train step",
+    },
+];
+
+/// Rule bindings for one `rust/src/`-relative file path.
+pub fn contracts_for(rel_path: &str) -> Vec<(RuleId, Scope)> {
+    CONTRACTS
+        .iter()
+        .filter(|c| rel_path.starts_with(c.prefix))
+        .map(|c| (c.rule, c.scope))
+        .collect()
+}
+
+/// One lint violation (or pragma problem, when `rule` is `None`).
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// `rust/src/`-relative path of the offending file.
+    pub path: String,
+    /// 1-based line.
+    pub line: usize,
+    /// The violated rule; `None` for pragma problems (`P1`/`P2`, which
+    /// carry their id in `reason`).
+    pub rule: Option<RuleId>,
+    pub reason: String,
+}
+
+impl Finding {
+    /// The finding as an [`api::diag`](crate::api::diag) diagnostic:
+    /// `path:line` anchor, rule-tagged reason, per-rule fix hint.
+    pub fn to_diagnostic(&self) -> Diagnostic {
+        let reason = match self.rule {
+            Some(r) => format!("[{} {}] {}", r.id(), r.name(), self.reason),
+            None => self.reason.clone(),
+        };
+        Diagnostic {
+            path: format!("{}:{}", self.path, self.line),
+            reason,
+            hint: self.rule.map(|r| r.hint().to_string()),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("path", Json::str(&self.path)),
+            ("line", Json::num(self.line as f64)),
+            (
+                "rule",
+                match self.rule {
+                    Some(r) => Json::str(r.id()),
+                    None => Json::str(pragma_rule_id(&self.reason)),
+                },
+            ),
+            (
+                "name",
+                match self.rule {
+                    Some(r) => Json::str(r.name()),
+                    None => Json::str("pragma"),
+                },
+            ),
+            ("reason", Json::str(&self.reason)),
+            (
+                "hint",
+                match self.rule {
+                    Some(r) => Json::str(r.hint()),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+/// Pragma findings encode their id (`P1`/`P2`) as the reason prefix.
+fn pragma_rule_id(reason: &str) -> &'static str {
+    if reason.starts_with("P1") {
+        "P1"
+    } else {
+        "P2"
+    }
+}
+
+/// Result of one lint pass.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Findings as an [`api::diag::Diagnostics`](crate::api::diag) set —
+    /// what `hp-gnn lint` prints (all problems in one pass, like
+    /// `validate`).
+    pub fn into_diagnostics(&self) -> Diagnostics {
+        let mut d = Diagnostics::new();
+        for f in &self.findings {
+            let diag = f.to_diagnostic();
+            match diag.hint {
+                Some(h) => d.push_hint(diag.path, diag.reason, h),
+                None => d.push(diag.path, diag.reason),
+            }
+        }
+        d
+    }
+
+    /// The `--json` report (schema documented in README "Static
+    /// analysis").
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tool", Json::str("hp-gnn-lint")),
+            ("schema_version", Json::num(1.0)),
+            ("files_scanned", Json::num(self.files_scanned as f64)),
+            ("clean", Json::Bool(self.is_clean())),
+            (
+                "findings",
+                Json::Arr(self.findings.iter().map(|f| f.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// Lint a single source text as if it lived at `rel_path` under
+/// `rust/src/` — the contract table decides which rules bind.  This is
+/// the unit the fixture tests drive directly.
+pub fn lint_source(rel_path: &str, text: &str) -> Vec<Finding> {
+    let src = source::SourceFile::parse(rel_path, text);
+    rules::check_file(&src, &contracts_for(rel_path))
+}
+
+/// Lint the whole `rust/src/` tree under `repo_root`.  Every file is
+/// scanned (so stray pragmas are caught even in uncontracted modules);
+/// rules apply per the contract table.
+pub fn lint_tree(repo_root: &Path) -> anyhow::Result<Report> {
+    let src_root = repo_root.join("rust").join("src");
+    anyhow::ensure!(
+        src_root.is_dir(),
+        "lint: {} is not a directory (run from the repo root or pass --root)",
+        src_root.display()
+    );
+    let mut files = Vec::new();
+    collect_rs(&src_root, &mut files)?;
+    files.sort();
+    let mut report = Report::default();
+    for path in files {
+        let rel = path
+            .strip_prefix(&src_root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = std::fs::read_to_string(&path)?;
+        report.findings.extend(lint_source(&rel, &text));
+        report.files_scanned += 1;
+    }
+    report.findings.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contract_table_binds_the_documented_modules() {
+        let kernels = contracts_for("runtime/kernels/dense.rs");
+        assert!(kernels.iter().any(|(r, _)| *r == RuleId::D1));
+        assert!(kernels.iter().any(|(r, _)| *r == RuleId::D2));
+        let serve = contracts_for("serve/server.rs");
+        assert!(serve.iter().any(|(r, _)| *r == RuleId::R1));
+        assert!(serve.iter().any(|(r, _)| *r == RuleId::D1));
+        let session = contracts_for("coordinator/session.rs");
+        assert!(session
+            .iter()
+            .any(|(r, s)| *r == RuleId::R1 && *s == Scope::Function("drive")));
+        assert!(contracts_for("graph/io.rs").iter().any(|(r, _)| *r == RuleId::R2));
+        assert!(contracts_for("util/json.rs").is_empty(), "uncontracted module");
+    }
+
+    #[test]
+    fn rule_ids_round_trip() {
+        for r in RuleId::ALL {
+            assert_eq!(RuleId::parse(r.id()), Some(r));
+            assert!(!r.name().is_empty() && !r.hint().is_empty());
+        }
+        assert_eq!(RuleId::parse("Z9"), None);
+    }
+
+    #[test]
+    fn findings_render_as_diag_shape_and_json() {
+        let f = Finding {
+            path: "serve/server.rs".into(),
+            line: 41,
+            rule: Some(RuleId::R1),
+            reason: "`.unwrap()` can panic in the serving path".into(),
+        };
+        let d = f.to_diagnostic();
+        assert_eq!(d.path, "serve/server.rs:41");
+        assert!(d.reason.starts_with("[R1 no-panic-in-serving-path]"), "{}", d.reason);
+        assert!(d.hint.is_some());
+        let j = f.to_json();
+        assert_eq!(j.get("rule").unwrap(), &Json::str("R1"));
+        assert_eq!(j.get("line").unwrap(), &Json::num(41.0));
+
+        let report = Report { files_scanned: 3, findings: vec![f] };
+        let j = report.to_json();
+        assert_eq!(j.get("clean").unwrap(), &Json::Bool(false));
+        // Must serialize to parseable JSON.
+        Json::parse(&j.pretty()).unwrap();
+    }
+}

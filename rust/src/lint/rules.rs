@@ -1,0 +1,510 @@
+//! The contract rules (D1–D3, R1–R2) and the per-file check engine.
+//!
+//! Every rule is a line-level pattern over the scrubbed code produced by
+//! [`super::source`] — deliberately heuristic (no type information), but
+//! tuned so the *blessed* idioms in this codebase never trip it:
+//! membership tests (`set.contains`, `map.get`, `entry()`) are fine under
+//! D1, `util::stats::Timer` is the sanctioned wall-clock wrapper under
+//! D2, `checked_mul`/`checked_add` chains satisfy R2, and combinator
+//! forms (`unwrap_or_else`, `map_err`, `ok_or_else`) satisfy R1.
+//!
+//! A finding names the rule, the line, what is wrong, and how this repo
+//! fixes it.  Suppression is explicit and audited: an inline
+//! `// lint:allow(rule): reason` pragma on (or directly above) the line,
+//! with a non-empty reason — and a pragma that suppresses nothing is
+//! itself a finding (`P2`), so stale allows cannot accumulate.
+
+use std::collections::BTreeSet;
+
+use super::source::{find_word, SourceFile};
+use super::{Finding, RuleId, Scope};
+
+/// Run `bindings` over one preprocessed file, apply pragma suppression,
+/// and report pragma problems (`P1`) and unused pragmas (`P2`).
+pub fn check_file(src: &SourceFile, bindings: &[(RuleId, Scope)]) -> Vec<Finding> {
+    let mut findings: Vec<Finding> = Vec::new();
+    for (rule, scope) in bindings {
+        let emit = |line: usize, reason: String| Finding {
+            path: src.rel_path.clone(),
+            line,
+            rule: Some(*rule),
+            reason,
+        };
+        match rule {
+            RuleId::D1 => d1_unordered_iteration(src, scope, &emit, &mut findings),
+            RuleId::D2 => d2_wallclock(src, scope, &emit, &mut findings),
+            RuleId::D3 => d3_float_reduction(src, scope, &emit, &mut findings),
+            RuleId::R1 => r1_panic(src, scope, &emit, &mut findings),
+            RuleId::R2 => r2_unchecked_arith(src, scope, &emit, &mut findings),
+        }
+    }
+
+    // Pragma suppression: a finding survives unless a well-formed pragma
+    // for its rule targets its line.  Every applied pragma is marked used.
+    let mut used = vec![false; src.pragmas.len()];
+    findings.retain(|f| {
+        let rule_id = f.rule.map(|r| r.id()).unwrap_or("");
+        match src
+            .pragmas
+            .iter()
+            .position(|p| p.target == f.line && p.rule == rule_id)
+        {
+            Some(i) => {
+                used[i] = true;
+                false
+            }
+            None => true,
+        }
+    });
+
+    for (line, what) in &src.pragma_problems {
+        findings.push(Finding {
+            path: src.rel_path.clone(),
+            line: *line,
+            rule: None,
+            reason: format!("P1 bad-pragma: {what}"),
+        });
+    }
+    for (i, p) in src.pragmas.iter().enumerate() {
+        let known = RuleId::parse(&p.rule).is_some();
+        if !known {
+            findings.push(Finding {
+                path: src.rel_path.clone(),
+                line: p.line,
+                rule: None,
+                reason: format!(
+                    "P1 bad-pragma: unknown rule {:?} (rules: D1 D2 D3 R1 R2)",
+                    p.rule
+                ),
+            });
+        } else if !used[i] {
+            findings.push(Finding {
+                path: src.rel_path.clone(),
+                line: p.line,
+                rule: None,
+                reason: format!(
+                    "P2 unused-pragma: lint:allow({}) suppresses nothing on line {} — \
+                     delete it (stale allows must not accumulate)",
+                    p.rule, p.target
+                ),
+            });
+        }
+    }
+
+    findings.sort_by_key(|f| f.line);
+    findings
+}
+
+/// Lines the rule actually applies to: non-test and inside the scope.
+fn in_scope(src: &SourceFile, idx: usize, scope: &Scope) -> bool {
+    let line = &src.lines[idx];
+    if line.is_test {
+        return false;
+    }
+    match scope {
+        Scope::File => true,
+        Scope::Function(name) => line.func.as_deref() == Some(*name),
+    }
+}
+
+/// D1: names bound to `HashMap`/`HashSet` in this file — `let` bindings
+/// and struct-field declarations (the two forms this codebase uses).
+fn hash_bound_names(src: &SourceFile) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for line in &src.lines {
+        let code = line.code.trim_start();
+        if !(code.contains("HashMap") || code.contains("HashSet")) {
+            continue;
+        }
+        if code.starts_with("use ") {
+            continue;
+        }
+        // `let [mut] name ... = ... HashMap/HashSet ...`
+        if let Some(rest) = code.strip_prefix("let ") {
+            let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+            let name: String = rest
+                .chars()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect();
+            if !name.is_empty() {
+                names.insert(name);
+            }
+            continue;
+        }
+        // Field declaration: `[pub] name: … HashMap<…>,`
+        if let Some((lhs, rhs)) = code.split_once(':') {
+            if !(rhs.contains("HashMap") || rhs.contains("HashSet")) {
+                continue;
+            }
+            let lhs = lhs.trim();
+            let lhs = lhs.strip_prefix("pub(crate)").unwrap_or(lhs);
+            let lhs = lhs.strip_prefix("pub").unwrap_or(lhs).trim();
+            if !lhs.is_empty() && lhs.chars().all(|c| c.is_alphanumeric() || c == '_') {
+                names.insert(lhs.to_string());
+            }
+        }
+    }
+    names
+}
+
+/// Method suffixes that iterate a hash container in arbitrary order.
+const ITER_SUFFIXES: &[&str] = &[
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".into_iter()",
+    ".into_keys()",
+    ".into_values()",
+    ".drain(",
+    ".retain(",
+];
+
+fn d1_unordered_iteration(
+    src: &SourceFile,
+    scope: &Scope,
+    emit: &dyn Fn(usize, String) -> Finding,
+    out: &mut Vec<Finding>,
+) {
+    let names = hash_bound_names(src);
+    if names.is_empty() {
+        return;
+    }
+    for (idx, line) in src.lines.iter().enumerate() {
+        if !in_scope(src, idx, scope) {
+            continue;
+        }
+        let code = &line.code;
+        for name in &names {
+            // `name.iter()` / `self.name.keys()` / `name.drain(..)` …
+            let mut from = 0;
+            while let Some(at) = find_word(code, name, from) {
+                let after = &code[at + name.len()..];
+                if let Some(suffix) = ITER_SUFFIXES.iter().find(|s| after.starts_with(**s)) {
+                    out.push(emit(
+                        idx + 1,
+                        format!(
+                            "iteration over HashMap/HashSet `{name}` via `{}` — hash order \
+                             is nondeterministic across runs",
+                            suffix.trim_end_matches('(')
+                        ),
+                    ));
+                    break;
+                }
+                from = at + name.len().max(1);
+            }
+            // `for x in [&[mut]] name {` — direct IntoIterator use.
+            if let Some(in_at) = code.find(" in ") {
+                if code.trim_start().starts_with("for ") || code.contains(" for ") {
+                    let tail = code[in_at + 4..].trim_start();
+                    let tail = tail.strip_prefix('&').unwrap_or(tail);
+                    let tail = tail.strip_prefix("mut ").unwrap_or(tail).trim_start();
+                    if let Some(rest) = tail.strip_prefix(name.as_str()) {
+                        let next = rest.chars().next();
+                        if matches!(next, None | Some(' ') | Some('{')) {
+                            out.push(emit(
+                                idx + 1,
+                                format!(
+                                    "`for … in {name}` iterates a HashMap/HashSet — hash \
+                                     order is nondeterministic across runs"
+                                ),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn d2_wallclock(
+    src: &SourceFile,
+    scope: &Scope,
+    emit: &dyn Fn(usize, String) -> Finding,
+    out: &mut Vec<Finding>,
+) {
+    for (idx, line) in src.lines.iter().enumerate() {
+        if !in_scope(src, idx, scope) {
+            continue;
+        }
+        let code = &line.code;
+        if code.trim_start().starts_with("use ") {
+            continue; // the import is not the read; the call site is
+        }
+        for pat in ["Instant::now", "SystemTime"] {
+            if find_word(code, pat, 0).is_some() {
+                out.push(emit(
+                    idx + 1,
+                    format!(
+                        "wall-clock read `{pat}` in a deterministic step path — outputs \
+                         must be a pure function of (seed, step)"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+fn d3_float_reduction(
+    src: &SourceFile,
+    scope: &Scope,
+    emit: &dyn Fn(usize, String) -> Finding,
+    out: &mut Vec<Finding>,
+) {
+    for (idx, line) in src.lines.iter().enumerate() {
+        if !in_scope(src, idx, scope) {
+            continue;
+        }
+        let code = &line.code;
+        for pat in [
+            ".sum::<f32>()",
+            ".sum::<f64>()",
+            ".product::<f32>()",
+            ".product::<f64>()",
+        ] {
+            if code.contains(pat) {
+                out.push(emit(
+                    idx + 1,
+                    format!(
+                        "ad-hoc float reduction `{}` — accumulation order is not pinned \
+                         by the kernels:: oracle",
+                        pat.trim_end_matches("()")
+                    ),
+                ));
+            }
+        }
+        // `.fold(` seeded with a float literal or f32::/f64:: constant.
+        let mut from = 0;
+        while let Some(at) = code[from..].find(".fold(") {
+            let abs = from + at;
+            let arg = code[abs + ".fold(".len()..].trim_start();
+            let arg = arg.strip_prefix('-').unwrap_or(arg);
+            let float_seed = arg.starts_with("f32::")
+                || arg.starts_with("f64::")
+                || is_float_literal(arg);
+            if float_seed {
+                out.push(emit(
+                    idx + 1,
+                    "float `.fold(…)` reduction — accumulation order is not pinned by \
+                     the kernels:: oracle"
+                        .to_string(),
+                ));
+            }
+            from = abs + ".fold(".len();
+        }
+    }
+}
+
+/// Does `s` start with a float literal (`0.0`, `1e-3`, `0f32`)?
+fn is_float_literal(s: &str) -> bool {
+    let mut chars = s.chars().peekable();
+    let mut digits = 0;
+    while chars.peek().map(|c| c.is_ascii_digit()).unwrap_or(false) {
+        chars.next();
+        digits += 1;
+    }
+    if digits == 0 {
+        return false;
+    }
+    matches!(chars.peek(), Some('.') | Some('e') | Some('E') | Some('f'))
+}
+
+/// Macros and method calls that panic instead of returning an error.
+const PANIC_PATTERNS: &[(&str, &str)] = &[
+    (".unwrap()", "propagate with `?`, `ok_or_else`, or recover (locks: `lock_unpoisoned`)"),
+    (".expect(", "propagate with `?` and `context(…)` instead of crashing the worker"),
+    ("panic!(", "return an error — one bad request must not take down the pool"),
+    ("unreachable!(", "return an internal error instead"),
+    ("todo!(", "serving paths must be implemented, not stubbed"),
+    ("unimplemented!(", "serving paths must be implemented, not stubbed"),
+];
+
+fn r1_panic(
+    src: &SourceFile,
+    scope: &Scope,
+    emit: &dyn Fn(usize, String) -> Finding,
+    out: &mut Vec<Finding>,
+) {
+    for (idx, line) in src.lines.iter().enumerate() {
+        if !in_scope(src, idx, scope) {
+            continue;
+        }
+        let code = &line.code;
+        for (pat, fix) in PANIC_PATTERNS {
+            if code.contains(pat) {
+                out.push(emit(
+                    idx + 1,
+                    format!("`{}` can panic in the serving path — {fix}", pat.trim_end_matches('(')),
+                ));
+            }
+        }
+    }
+}
+
+fn r2_unchecked_arith(
+    src: &SourceFile,
+    scope: &Scope,
+    emit: &dyn Fn(usize, String) -> Finding,
+    out: &mut Vec<Finding>,
+) {
+    for (idx, line) in src.lines.iter().enumerate() {
+        if !in_scope(src, idx, scope) {
+            continue;
+        }
+        // Only loader/parser functions handle header-derived sizes.
+        let in_loader = line
+            .func
+            .as_deref()
+            .map(|f| f.starts_with("load") || f.starts_with("read_"))
+            .unwrap_or(false);
+        if !in_loader {
+            continue;
+        }
+        let code = &line.code;
+        if code.contains("checked_mul") || code.contains("checked_add") {
+            continue; // already the blessed form
+        }
+        let alloc = ["with_capacity", "vec![", ".reserve("]
+            .iter()
+            .any(|p| code.contains(p));
+        let bytes = code.as_bytes();
+        for (i, &b) in bytes.iter().enumerate() {
+            let binary = i > 0
+                && prev_value_token(bytes, i)
+                && bytes.get(i + 1).map(|&n| n != b'=').unwrap_or(true);
+            if b == b'*' && binary {
+                out.push(emit(
+                    idx + 1,
+                    "unchecked `*` on a loader-computed size — a wrapping product \
+                     defeats the length check; use `checked_mul`"
+                        .to_string(),
+                ));
+                break;
+            }
+            if b == b'+' && binary && alloc {
+                out.push(emit(
+                    idx + 1,
+                    "unchecked `+` sizing an allocation in a loader — use \
+                     `checked_add` before allocating"
+                        .to_string(),
+                ));
+                break;
+            }
+        }
+    }
+}
+
+/// Is the nearest non-space byte before `i` something a binary operator's
+/// left operand ends with (identifier, closing bracket, literal)?  A
+/// `*`/`+` after `(`/`,`/`=`/operator is unary (deref, sign, generics).
+fn prev_value_token(bytes: &[u8], i: usize) -> bool {
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let p = bytes[j];
+        if p == b' ' {
+            continue;
+        }
+        return p.is_ascii_alphanumeric() || p == b'_' || p == b')' || p == b']';
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::source::SourceFile;
+    use super::super::{RuleId, Scope};
+    use super::check_file;
+
+    fn run(rel: &str, src: &str, rule: RuleId, scope: Scope) -> Vec<(usize, String)> {
+        let f = SourceFile::parse(rel, src);
+        check_file(&f, &[(rule, scope)])
+            .into_iter()
+            .map(|f| (f.line, f.reason))
+            .collect()
+    }
+
+    #[test]
+    fn d1_flags_iteration_but_not_membership() {
+        let src = "fn f() {\n    let mut seen = HashSet::new();\n    seen.insert(1);\n    if seen.contains(&1) {}\n    for x in &seen { use_(x); }\n    let n = seen.iter().count();\n}\n";
+        let hits = run("sampler/x.rs", src, RuleId::D1, Scope::File);
+        let lines: Vec<usize> = hits.iter().map(|h| h.0).collect();
+        assert_eq!(lines, vec![5, 6], "{hits:?}");
+    }
+
+    #[test]
+    fn d1_tracks_struct_fields_and_keys() {
+        let src = "struct C {\n    map: Mutex<HashMap<u32, E>>,\n}\nimpl C {\n    fn evict(&self) {\n        if let Some(k) = self.map.keys().next() {}\n        self.map.get(&3);\n    }\n}\n";
+        let hits = run("serve/cache.rs", src, RuleId::D1, Scope::File);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].0, 6);
+    }
+
+    #[test]
+    fn d2_flags_wallclock_outside_use_lines() {
+        let src = "use std::time::Instant;\nfn f() {\n    let t = Instant::now();\n    let s = SystemTime::now();\n}\n";
+        let hits = run("sampler/x.rs", src, RuleId::D2, Scope::File);
+        let lines: Vec<usize> = hits.iter().map(|h| h.0).collect();
+        assert_eq!(lines, vec![3, 4], "{hits:?}");
+    }
+
+    #[test]
+    fn d3_flags_turbofish_sums_and_float_folds_only() {
+        let src = "fn f(v: &[f32]) -> f32 {\n    let a: f32 = v.iter().sum::<f32>();\n    let b = v.iter().fold(0.0f32, |x, y| x + y);\n    let n = v.iter().map(|_| 1usize).fold(0, |a, b| a + b);\n    a + b + n as f32\n}\n";
+        let hits = run("runtime/reference.rs", src, RuleId::D3, Scope::File);
+        let lines: Vec<usize> = hits.iter().map(|h| h.0).collect();
+        assert_eq!(lines, vec![2, 3], "integer fold must not be flagged: {hits:?}");
+    }
+
+    #[test]
+    fn r1_flags_panics_but_not_combinators() {
+        let src = "fn f() -> anyhow::Result<u32> {\n    let a = x().unwrap();\n    let b = y().expect(\"y\");\n    let c = z().unwrap_or_else(|p| p.into_inner());\n    let d = w().ok_or_else(|| anyhow::anyhow!(\"w\"))?;\n    Ok(a + b + c + d)\n}\n";
+        let hits = run("serve/server.rs", src, RuleId::R1, Scope::File);
+        let lines: Vec<usize> = hits.iter().map(|h| h.0).collect();
+        assert_eq!(lines, vec![2, 3], "{hits:?}");
+    }
+
+    #[test]
+    fn r1_function_scope_limits_to_that_fn() {
+        let src = "fn other() {\n    x().unwrap();\n}\nfn drive(&mut self) {\n    y().unwrap();\n}\n";
+        let hits = run("coordinator/session.rs", src, RuleId::R1, Scope::Function("drive"));
+        let lines: Vec<usize> = hits.iter().map(|h| h.0).collect();
+        assert_eq!(lines, vec![5], "{hits:?}");
+    }
+
+    #[test]
+    fn r2_flags_bare_multiply_not_deref_or_checked() {
+        let src = "fn load_binary(n: usize, e: usize) {\n    let need = n * 8;\n    let ok = e.checked_mul(4);\n    let p = *ptr;\n    let buf = Vec::with_capacity(n + 1);\n    let idx = off + 8;\n}\nfn not_a_loader(n: usize) {\n    let x = n * 8;\n}\n";
+        let hits = run("graph/io.rs", src, RuleId::R2, Scope::File);
+        let lines: Vec<usize> = hits.iter().map(|h| h.0).collect();
+        assert_eq!(lines, vec![2, 5], "{hits:?}");
+    }
+
+    #[test]
+    fn pragmas_suppress_and_unused_ones_fail() {
+        let src = "fn f() {\n    let t = Instant::now(); // lint:allow(D2): measurement only, never reaches outputs\n}\n";
+        let hits = run("sampler/x.rs", src, RuleId::D2, Scope::File);
+        assert!(hits.is_empty(), "{hits:?}");
+
+        let src = "fn f() {\n    let t = 1; // lint:allow(D2): nothing here trips D2\n}\n";
+        let hits = run("sampler/x.rs", src, RuleId::D2, Scope::File);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert!(hits[0].1.contains("P2 unused-pragma"), "{hits:?}");
+    }
+
+    #[test]
+    fn test_mod_bodies_are_exempt() {
+        let src = "fn f() {}\n#[cfg(test)]\nmod tests {\n    fn t() {\n        x().unwrap();\n        let t = Instant::now();\n    }\n}\n";
+        assert!(run("serve/server.rs", src, RuleId::R1, Scope::File).is_empty());
+        assert!(run("serve/infer.rs", src, RuleId::D2, Scope::File).is_empty());
+    }
+
+    #[test]
+    fn unknown_pragma_rule_is_a_problem() {
+        let src = "fn f() {\n    let x = 1; // lint:allow(Z9): nope\n}\n";
+        let hits = run("sampler/x.rs", src, RuleId::D2, Scope::File);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert!(hits[0].1.contains("unknown rule"), "{hits:?}");
+    }
+}

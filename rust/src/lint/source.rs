@@ -1,0 +1,491 @@
+//! Comment/string-aware source preprocessing for the lint pass.
+//!
+//! [`SourceFile::parse`] turns raw Rust text into the view the rules
+//! operate on: per-line *scrubbed* code (comments, string/char literals
+//! and raw strings blanked to spaces, so a rule pattern can never match
+//! inside prose), per-line test-block membership (`#[cfg(test)] mod`
+//! bodies are skipped — test code is allowed to `unwrap()` and iterate
+//! hash maps), the innermost enclosing function name per line (for
+//! function-scoped contracts like `TrainingSession::drive`), and the
+//! suppression pragmas.
+//!
+//! This is a lightweight lexer, not a parser: it tracks exactly the
+//! token classes the rules need (comments, strings, braces, `fn`/`mod`
+//! headers) and nothing else, so the lint subsystem stays dependency-free.
+
+/// One `// lint:allow(rule): reason` suppression pragma.
+#[derive(Debug, Clone)]
+pub struct Pragma {
+    /// 1-based line the pragma comment sits on.
+    pub line: usize,
+    /// Rule id as written (`"D1"`, `"R1"`, …).
+    pub rule: String,
+    /// The mandatory justification after the colon.
+    pub reason: String,
+    /// 1-based line the pragma suppresses: its own line when that line
+    /// carries code, otherwise the next line that does.
+    pub target: usize,
+}
+
+/// Per-line view after scrubbing.
+#[derive(Debug, Clone)]
+pub struct Line {
+    /// The line with comments and string/char literal *contents* blanked
+    /// to spaces (delimiters too).  Columns line up with the original.
+    pub code: String,
+    /// Inside a `#[cfg(test)] mod … { }` body (rules skip these lines).
+    pub is_test: bool,
+    /// Innermost enclosing function name at the start of this line.
+    pub func: Option<String>,
+}
+
+/// A preprocessed source file ready for rule checks.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Path the findings are reported against (repo-relative).
+    pub rel_path: String,
+    /// 0-indexed; line `i` of the file is `lines[i]` (report as `i + 1`).
+    pub lines: Vec<Line>,
+    pub pragmas: Vec<Pragma>,
+    /// Malformed pragmas: `(line, what is wrong)` — e.g. an empty reason
+    /// or an unknown rule id.  The engine reports these as `P1` findings.
+    pub pragma_problems: Vec<(usize, String)>,
+}
+
+impl SourceFile {
+    pub fn parse(rel_path: &str, text: &str) -> SourceFile {
+        let (scrubbed, comments) = scrub(text);
+        let code_lines: Vec<&str> = scrubbed.split('\n').collect();
+        let mut lines = annotate(&code_lines);
+        // `split` yields one trailing empty entry for a final newline;
+        // keep `lines` aligned with the file's real line count.
+        if text.ends_with('\n') && lines.len() > 1 {
+            lines.pop();
+        }
+        let (pragmas, pragma_problems) = extract_pragmas(&comments, &lines);
+        SourceFile { rel_path: rel_path.to_string(), lines, pragmas, pragma_problems }
+    }
+}
+
+/// Blank comments and literal contents to spaces (newlines preserved, so
+/// line/column structure survives).  Returns the scrubbed text plus every
+/// line comment's text keyed by 1-based line (pragmas live there).
+fn scrub(text: &str) -> (String, Vec<(usize, String)>) {
+    #[derive(PartialEq)]
+    enum St {
+        Code,
+        LineComment,
+        BlockComment(u32),
+        Str,
+        RawStr(u32),
+    }
+    let b: Vec<char> = text.chars().collect();
+    let mut out = String::with_capacity(text.len());
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut cur = String::new();
+    let mut st = St::Code;
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            if st == St::LineComment {
+                comments.push((line, std::mem::take(&mut cur)));
+                st = St::Code;
+            }
+            out.push('\n');
+            line += 1;
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                let next = b.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    st = St::LineComment;
+                    cur.clear();
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::BlockComment(1);
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Str;
+                    out.push(' ');
+                    i += 1;
+                } else if c == 'r' && matches!(next, Some('"') | Some('#')) && !prev_is_ident(&b, i)
+                {
+                    // Raw string r"…", r#"…"#, … — count the hashes.
+                    let mut hashes = 0u32;
+                    let mut j = i + 1;
+                    while b.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if b.get(j) == Some(&'"') {
+                        st = St::RawStr(hashes);
+                        for _ in i..=j {
+                            out.push(' ');
+                        }
+                        i = j + 1;
+                    } else {
+                        out.push(c); // `r#ident` raw identifier, not a string
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal vs lifetime: a backslash or a closing
+                    // quote two chars ahead means char literal.
+                    if next == Some('\\') {
+                        let mut j = i + 2; // skip the escaped char
+                        if b.get(j).is_some() {
+                            j += 1;
+                        }
+                        while j < b.len() && b[j] != '\'' && b[j] != '\n' {
+                            j += 1;
+                        }
+                        for _ in i..=j.min(b.len() - 1) {
+                            out.push(' ');
+                        }
+                        i = j + 1;
+                    } else if b.get(i + 2) == Some(&'\'') {
+                        out.push_str("   ");
+                        i += 3;
+                    } else {
+                        out.push(c); // lifetime: keep (harmless to rules)
+                        i += 1;
+                    }
+                } else {
+                    out.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                cur.push(c);
+                out.push(' ');
+                i += 1;
+            }
+            St::BlockComment(depth) => {
+                let next = b.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    st = St::BlockComment(depth + 1);
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    st = if depth == 1 { St::Code } else { St::BlockComment(depth - 1) };
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    out.push(' ');
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    out.push(' ');
+                    if b.get(i + 1).map(|&n| n != '\n').unwrap_or(false) {
+                        out.push(' ');
+                        i += 1;
+                    }
+                    i += 1;
+                } else {
+                    if c == '"' {
+                        st = St::Code;
+                    }
+                    out.push(' ');
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                if c == '"' {
+                    let closes = (1..=hashes as usize)
+                        .all(|k| b.get(i + k) == Some(&'#'));
+                    if closes {
+                        st = St::Code;
+                        for _ in 0..=hashes as usize {
+                            out.push(' ');
+                        }
+                        i += 1 + hashes as usize;
+                        continue;
+                    }
+                }
+                out.push(' ');
+                i += 1;
+            }
+        }
+    }
+    if st == St::LineComment {
+        comments.push((line, cur));
+    }
+    (out, comments)
+}
+
+fn prev_is_ident(b: &[char], i: usize) -> bool {
+    i > 0 && (b[i - 1].is_alphanumeric() || b[i - 1] == '_')
+}
+
+/// Second pass over scrubbed lines: brace depth → test-mod membership and
+/// innermost enclosing function per line.
+fn annotate(code_lines: &[&str]) -> Vec<Line> {
+    let mut out = Vec::with_capacity(code_lines.len());
+    let mut depth: i64 = 0;
+    // (name, depth of the fn body once its `{` opened)
+    let mut fn_stack: Vec<(String, i64)> = Vec::new();
+    let mut pending_fn: Option<String> = None;
+    // Saw `#[cfg(test)]`; the next `mod`'s `{` opens a skipped body.
+    let mut pending_test_attr = false;
+    let mut pending_test_mod = false;
+    let mut test_depth: Option<i64> = None;
+
+    for &code in code_lines {
+        out.push(Line {
+            code: code.to_string(),
+            is_test: test_depth.is_some(),
+            func: fn_stack.last().map(|(n, _)| n.clone()),
+        });
+        if test_depth.is_none() && code.replace(' ', "").contains("#[cfg(test)]") {
+            pending_test_attr = true;
+        }
+        if pending_test_attr && has_word(code, "mod") {
+            pending_test_mod = true;
+        }
+        if let Some(name) = fn_name_on(code) {
+            pending_fn = Some(name);
+        }
+        for ch in code.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    if pending_test_mod {
+                        test_depth = Some(depth);
+                        pending_test_mod = false;
+                        pending_test_attr = false;
+                    }
+                    if let Some(name) = pending_fn.take() {
+                        fn_stack.push((name, depth));
+                        // A `#[cfg(test)]`-gated fn (no mod) must not leak
+                        // the pending attribute onto a later module.
+                        pending_test_attr = false;
+                    }
+                }
+                '}' => {
+                    if test_depth == Some(depth) {
+                        test_depth = None;
+                    }
+                    depth -= 1;
+                    while fn_stack.last().map(|&(_, d)| d > depth).unwrap_or(false) {
+                        fn_stack.pop();
+                    }
+                }
+                ';' => {
+                    // `fn` in a trait decl / type position never opens a
+                    // body — a `;` at the same depth cancels it.
+                    pending_fn = None;
+                }
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+/// The *last* `fn <ident>` on a scrubbed line (the one whose `{` comes
+/// next), or `None`.
+fn fn_name_on(code: &str) -> Option<String> {
+    let mut found = None;
+    let bytes = code.as_bytes();
+    let mut i = 0usize;
+    while let Some(pos) = code[i..].find("fn ") {
+        let at = i + pos;
+        let boundary = at == 0
+            || !(bytes[at - 1].is_ascii_alphanumeric() || bytes[at - 1] == b'_');
+        if boundary {
+            let rest = code[at + 3..].trim_start();
+            let name: String = rest
+                .chars()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect();
+            if !name.is_empty() {
+                found = Some(name);
+            }
+        }
+        i = at + 3;
+    }
+    found
+}
+
+/// Whole-word occurrence test on scrubbed code.
+pub fn has_word(code: &str, word: &str) -> bool {
+    find_word(code, word, 0).is_some()
+}
+
+/// Position of the next whole-word occurrence of `word` at or after
+/// `from`, on scrubbed code.
+pub fn find_word(code: &str, word: &str, from: usize) -> Option<usize> {
+    let bytes = code.as_bytes();
+    let mut i = from;
+    while let Some(pos) = code.get(i..).and_then(|s| s.find(word)) {
+        let at = i + pos;
+        let pre_ok = at == 0
+            || !(bytes[at - 1].is_ascii_alphanumeric() || bytes[at - 1] == b'_');
+        let end = at + word.len();
+        let post_ok = end >= bytes.len()
+            || !(bytes[end].is_ascii_alphanumeric() || bytes[end] == b'_');
+        if pre_ok && post_ok {
+            return Some(at);
+        }
+        i = at + word.len().max(1);
+    }
+    None
+}
+
+/// Parse `lint:allow(rule): reason` pragmas out of the line comments and
+/// resolve each to the line it suppresses.
+fn extract_pragmas(
+    comments: &[(usize, String)],
+    lines: &[Line],
+) -> (Vec<Pragma>, Vec<(usize, String)>) {
+    let mut pragmas = Vec::new();
+    let mut problems = Vec::new();
+    for (line, text) in comments {
+        // Doc comments (`///`, `//!`) are prose — they may *mention* the
+        // pragma syntax (as the lint module's own docs do) without it
+        // counting.  The captured text starts after `//`, so a doc
+        // comment begins with `/` or `!`.
+        if matches!(text.trim_start().chars().next(), Some('/') | Some('!')) {
+            continue;
+        }
+        let Some(at) = text.find("lint:allow") else { continue };
+        let rest = &text[at + "lint:allow".len()..];
+        let parsed = (|| {
+            let rest = rest.strip_prefix('(')?;
+            let (rule, rest) = rest.split_once(')')?;
+            let reason = rest.strip_prefix(':')?.trim();
+            Some((rule.trim().to_string(), reason.to_string()))
+        })();
+        let Some((rule, reason)) = parsed else {
+            problems.push((
+                *line,
+                "malformed pragma: expected `lint:allow(rule): reason`".to_string(),
+            ));
+            continue;
+        };
+        if reason.is_empty() {
+            problems.push((
+                *line,
+                format!("pragma lint:allow({rule}) has an empty reason — say why"),
+            ));
+            continue;
+        }
+        // Target: the pragma's own line if it carries code (trailing
+        // comment), else the next line that does.
+        let own = lines
+            .get(*line - 1)
+            .map(|l| !l.code.trim().is_empty())
+            .unwrap_or(false);
+        let target = if own {
+            Some(*line)
+        } else {
+            (*line..lines.len())
+                .find(|&i| !lines[i].code.trim().is_empty())
+                .map(|i| i + 1)
+        };
+        match target {
+            Some(target) => pragmas.push(Pragma {
+                line: *line,
+                rule,
+                reason,
+                target,
+            }),
+            None => problems.push((
+                *line,
+                format!("pragma lint:allow({rule}) targets no code line"),
+            )),
+        }
+    }
+    (pragmas, problems)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_blanked() {
+        let src = "let x = \"Instant::now\"; // Instant::now\nlet c = 'x';\n/* block\nInstant::now */ let y = 1;\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert!(!f.lines[0].code.contains("Instant"), "{:?}", f.lines[0].code);
+        assert!(f.lines[0].code.contains("let x ="));
+        assert!(!f.lines[1].code.contains('x') || f.lines[1].code.contains("let c"));
+        assert!(!f.lines[2].code.contains("block"));
+        assert!(!f.lines[3].code.contains("Instant"));
+        assert!(f.lines[3].code.contains("let y = 1;"));
+    }
+
+    #[test]
+    fn raw_strings_and_escapes_are_blanked() {
+        let src = "let a = r#\"unwrap() \"# ;\nlet b = \"\\\" .unwrap()\";\nlet l: &'static str = \"x\";\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert!(!f.lines[0].code.contains("unwrap"));
+        assert!(f.lines[0].code.ends_with(';'));
+        assert!(!f.lines[1].code.contains("unwrap"), "{:?}", f.lines[1].code);
+        assert!(f.lines[2].code.contains("'static"));
+    }
+
+    #[test]
+    fn char_literals_do_not_eat_the_rest_of_the_line() {
+        let src = "if c == '\\n' { x.unwrap(); }\nif d == '}' { depth -= 1; }\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert!(f.lines[0].code.contains(".unwrap()"));
+        assert!(f.lines[1].code.contains("depth -= 1"));
+        // The '}' literal was blanked — brace depth is not corrupted.
+        assert_eq!(f.lines[1].code.matches('}').count(), 1);
+    }
+
+    #[test]
+    fn cfg_test_mod_bodies_are_marked() {
+        let src = "fn real() { a(); }\n#[cfg(test)]\nmod tests {\n    fn t() { b(); }\n}\nfn after() { c(); }\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert!(!f.lines[0].is_test);
+        assert!(f.lines[3].is_test, "test body must be marked");
+        assert!(!f.lines[5].is_test, "code after the test mod is live again");
+    }
+
+    #[test]
+    fn function_names_track_multiline_signatures_and_closures() {
+        let src = "fn load_binary(\n    path: &Path,\n) -> Result<()> {\n    let f = |x: u32| {\n        x * 2\n    };\n}\nfn other() {\n    1 + 1;\n}\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert_eq!(f.lines[4].func.as_deref(), Some("load_binary"));
+        assert_eq!(f.lines[8].func.as_deref(), Some("other"));
+    }
+
+    #[test]
+    fn pragmas_parse_with_rule_reason_and_target() {
+        let src = "// lint:allow(D1): iteration feeds a sorted vec\nfor k in m.keys() {}\nlet x = 1; // lint:allow(R1): infallible by construction\n// lint:allow(D2):\nlet y = 2;\n// lint:allow D2 broken\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert_eq!(f.pragmas.len(), 2);
+        assert_eq!(f.pragmas[0].rule, "D1");
+        assert_eq!(f.pragmas[0].target, 2, "comment-only pragma targets the next code line");
+        assert_eq!(f.pragmas[1].rule, "R1");
+        assert_eq!(f.pragmas[1].target, 3, "trailing pragma targets its own line");
+        assert_eq!(f.pragma_problems.len(), 2, "{:?}", f.pragma_problems);
+        assert!(f.pragma_problems[0].1.contains("empty reason"));
+        assert!(f.pragma_problems[1].1.contains("malformed"));
+    }
+
+    #[test]
+    fn doc_comments_mentioning_the_syntax_are_not_pragmas() {
+        let src = "//! Suppress with `lint:allow(rule): reason`.\n/// Same: lint:allow(D1): docs only.\nfn f() {}\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert!(f.pragmas.is_empty(), "{:?}", f.pragmas);
+        assert!(f.pragma_problems.is_empty(), "{:?}", f.pragma_problems);
+    }
+
+    #[test]
+    fn word_boundaries_respected() {
+        assert!(has_word("let map = x;", "map"));
+        assert!(!has_word("let remap = x;", "map"));
+        assert!(!has_word("let mapper = x;", "map"));
+        assert_eq!(find_word("self.map.keys()", "map", 0), Some(5));
+    }
+}

@@ -17,6 +17,8 @@
 //! * `explain <program.json>` — print the generated-design report
 //!   (Listing 3): artifact geometry, DSE config, utilization, placement.
 //! * `dse` — run the design space exploration engine (Table 5 rows).
+//! * `lint` — statically check the determinism / serving-robustness
+//!   contracts over `rust/src` (rules D1–D3, R1–R2).
 //! * `simulate` — simulate one mini-batch on the accelerator model.
 //! * `info` — list artifacts, boards and platform description.
 //! * `help` — this overview.
@@ -44,6 +46,7 @@ const USAGE: &str = "hp-gnn — HP-GNN training framework (FPGA '22 reproduction
      validate <program.json>  parse + design-check a program, print every diagnostic\n  \
      explain <program.json>   print the generated-design report (Listing 3)\n  \
      dse                  design space exploration (Table 5)\n  \
+     lint                 check the determinism/serving-robustness contracts\n  \
      simulate             accelerator simulation of one batch\n  \
      info                 artifacts + platform info\n  \
      help                 print this overview\n\n\
@@ -59,6 +62,7 @@ fn main() {
         "validate" => cmd_validate(argv),
         "explain" => cmd_explain(argv),
         "dse" => cmd_dse(argv),
+        "lint" => cmd_lint(argv),
         "simulate" => cmd_simulate(argv),
         "info" => cmd_info(argv),
         "help" | "--help" | "-h" => {
@@ -546,6 +550,45 @@ fn cmd_dse(argv: Vec<String>) -> anyhow::Result<()> {
         r.utilization.bram * 100.0,
         r.evaluated,
     );
+    Ok(())
+}
+
+fn cmd_lint(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = Args::new(
+        "hp-gnn lint",
+        "statically check the determinism (D1-D3) and serving-robustness (R1-R2) \
+         contracts over rust/src (rules + contract table: README \"Static analysis\")",
+    )
+    .flag("root", ".", "repository root (the directory containing rust/src)")
+    .switch("json", "emit the machine-readable report instead of diagnostics")
+    .parse_from(argv)?;
+
+    let report = hp_gnn::lint::lint_tree(Path::new(args.get("root")))?;
+    if args.on("json") {
+        println!("{}", report.to_json().pretty());
+    } else if report.is_clean() {
+        println!(
+            "lint: {} files clean ({} contract bindings across rules D1 D2 D3 R1 R2)",
+            report.files_scanned,
+            hp_gnn::lint::CONTRACTS.len(),
+        );
+    } else {
+        // Same one-line-per-problem diagnostic rendering as `hp-gnn
+        // validate`: every finding in one pass, path:line anchored.
+        let diags = report.into_diagnostics();
+        println!(
+            "lint: {} problem{} in rust/src ({} files scanned)",
+            diags.len(),
+            if diags.len() == 1 { "" } else { "s" },
+            report.files_scanned,
+        );
+        for d in diags.iter() {
+            println!("  - {d}");
+        }
+    }
+    if !report.is_clean() {
+        std::process::exit(1);
+    }
     Ok(())
 }
 

@@ -84,6 +84,7 @@ impl WeightState {
             .iter()
             .flat_map(|(_, d)| d.iter())
             .map(|&x| (x as f64) * (x as f64))
+            // lint:allow(D3): log-line diagnostic only; never feeds the oracle-pinned output path
             .sum::<f64>()
             .sqrt()
     }

@@ -6,12 +6,19 @@
 //! reload ([`LogitsCache::invalidate`]) bumps the version — stale entries
 //! miss (and are evicted lazily), so hot-swapping a newer checkpoint
 //! mid-serve can never answer from the old model.
+//!
+//! Eviction is **deterministic FIFO** over an insertion ring: at capacity
+//! the oldest *first-inserted* key still resident is evicted.  The
+//! previous policy ("remove whatever `HashMap::keys().next()` yields")
+//! made the evicted key depend on hasher state, so two identical runs
+//! could hold different residents — exactly the class of drift the D1
+//! no-unordered-iteration lint rule now rejects in `serve/`.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use super::Prediction;
+use super::{lock_unpoisoned, Prediction};
 use crate::graph::Vid;
 
 struct Entry {
@@ -19,17 +26,29 @@ struct Entry {
     pred: Arc<Prediction>,
 }
 
+/// Map + insertion ring, guarded together: the ring orders eviction, the
+/// map answers lookups.  The map is *never iterated* (D1).
+#[derive(Default)]
+struct Inner {
+    entries: HashMap<Vid, Entry>,
+    /// Keys in first-insertion order.  May briefly hold "ghost" keys
+    /// whose entry was already removed (lazy stale eviction); the
+    /// eviction loop pops and skips them.
+    ring: VecDeque<Vid>,
+}
+
 /// Default entry cap — a weeks-long server queried across a large vertex
 /// space must not grow cache memory without bound (same rationale as the
 /// metrics sample window).
 pub const DEFAULT_CACHE_CAPACITY: usize = 65_536;
 
-/// Thread-safe vertex → prediction cache with weight-version stamping.
+/// Thread-safe vertex → prediction cache with weight-version stamping and
+/// deterministic FIFO eviction.
 pub struct LogitsCache {
     enabled: bool,
     capacity: usize,
     version: AtomicU64,
-    map: Mutex<HashMap<Vid, Entry>>,
+    inner: Mutex<Inner>,
 }
 
 impl LogitsCache {
@@ -42,7 +61,7 @@ impl LogitsCache {
             enabled,
             capacity: capacity.max(1),
             version: AtomicU64::new(0),
-            map: Mutex::new(HashMap::new()),
+            inner: Mutex::new(Inner::default()),
         }
     }
 
@@ -55,20 +74,21 @@ impl LogitsCache {
         self.version.load(Ordering::Acquire)
     }
 
-    /// Current-version hit for `v`, if any.  Stale entries are evicted.
+    /// Current-version hit for `v`, if any.  Stale entries are evicted
+    /// (their ring slot becomes a ghost, skipped at eviction time).
     pub fn get(&self, v: Vid) -> Option<Arc<Prediction>> {
         if !self.enabled {
             return None;
         }
-        let mut map = self.map.lock().unwrap();
+        let mut inner = lock_unpoisoned(&self.inner);
         let current = self.version.load(Ordering::Acquire);
-        let stale = match map.get(&v) {
+        let stale = match inner.entries.get(&v) {
             Some(e) if e.version == current => return Some(Arc::clone(&e.pred)),
             Some(_) => true,
             None => false,
         };
         if stale {
-            map.remove(&v);
+            inner.entries.remove(&v);
         }
         None
     }
@@ -76,36 +96,49 @@ impl LogitsCache {
     /// Insert a prediction computed under weight `version`.  Dropped when
     /// the cache has moved on (a reload raced the computation) — a stale
     /// result must never be readable at the current version.  At capacity
-    /// an arbitrary entry is evicted first (O(1); repeat-vertex workloads
-    /// re-warm hot entries on their next query).
+    /// the ring's oldest resident key is evicted first: deterministic
+    /// FIFO, so identical request streams leave identical residents.
     pub fn put(&self, version: u64, pred: Arc<Prediction>) {
         if !self.enabled {
             return;
         }
-        let mut map = self.map.lock().unwrap();
+        let mut inner = lock_unpoisoned(&self.inner);
         if self.version.load(Ordering::Acquire) != version {
             return;
         }
-        if map.len() >= self.capacity && !map.contains_key(&pred.vertex) {
-            if let Some(&evict) = map.keys().next() {
-                map.remove(&evict);
+        let fresh = !inner.entries.contains_key(&pred.vertex);
+        if fresh {
+            while inner.entries.len() >= self.capacity {
+                match inner.ring.pop_front() {
+                    // Ghosts (keys already lazily evicted as stale) just
+                    // pop; a resident key is the FIFO victim.
+                    Some(old) => {
+                        inner.entries.remove(&old);
+                    }
+                    None => break,
+                }
             }
+            inner.ring.push_back(pred.vertex);
         }
-        map.insert(pred.vertex, Entry { version, pred });
+        // Re-inserting a resident key refreshes the value in place and
+        // keeps its original ring position (first-insertion FIFO).
+        inner.entries.insert(pred.vertex, Entry { version, pred });
     }
 
-    /// Bump the weight version and drop every entry; returns the new
-    /// version (what freshly-computed predictions must be stamped with).
+    /// Bump the weight version and drop every entry (map and ring);
+    /// returns the new version (what freshly-computed predictions must be
+    /// stamped with).
     pub fn invalidate(&self) -> u64 {
-        let mut map = self.map.lock().unwrap();
+        let mut inner = lock_unpoisoned(&self.inner);
         let v = self.version.fetch_add(1, Ordering::AcqRel) + 1;
-        map.clear();
+        inner.entries.clear();
+        inner.ring.clear();
         v
     }
 
     /// Number of live entries (any version; stale ones evict on access).
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        lock_unpoisoned(&self.inner).entries.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -161,6 +194,33 @@ mod tests {
         c.put(v, pred(resident[0]));
         assert_eq!(c.len(), 4);
         assert!(c.get(resident[0]).is_some());
+    }
+
+    #[test]
+    fn eviction_order_is_deterministic_fifo() {
+        let c = LogitsCache::with_capacity(true, 3);
+        let v = c.version();
+        for i in [10u32, 20, 30] {
+            c.put(v, pred(i));
+        }
+        // Re-inserting 10 keeps its original (oldest) ring position.
+        c.put(v, pred(10));
+        // Fourth distinct key evicts the first-inserted key: 10.
+        c.put(v, pred(40));
+        assert!(c.get(10).is_none(), "FIFO must evict the oldest insertion");
+        assert!(c.get(20).is_some() && c.get(30).is_some() && c.get(40).is_some());
+        // Next eviction is 20, then 30 — the full order is pinned.
+        c.put(v, pred(50));
+        assert!(c.get(20).is_none());
+        assert!(c.get(30).is_some() && c.get(40).is_some() && c.get(50).is_some());
+        c.put(v, pred(60));
+        assert!(c.get(30).is_none());
+        let resident: Vec<Vid> = [40u32, 50, 60]
+            .iter()
+            .copied()
+            .filter(|&i| c.get(i).is_some())
+            .collect();
+        assert_eq!(resident, vec![40, 50, 60]);
     }
 
     #[test]

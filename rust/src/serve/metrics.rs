@@ -14,6 +14,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use super::lock_unpoisoned;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
@@ -69,7 +70,7 @@ impl ServeMetrics {
     pub fn record_request(&self, vertices: usize, latency_s: f64) {
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.vertices.fetch_add(vertices as u64, Ordering::Relaxed);
-        self.latency.lock().unwrap().add(latency_s);
+        lock_unpoisoned(&self.latency).add(latency_s);
     }
 
     pub fn record_cache(&self, hits: usize, misses: usize) {
@@ -79,17 +80,17 @@ impl ServeMetrics {
 
     pub fn record_batch(&self, occupancy: usize, exec_s: f64) {
         self.batches.fetch_add(1, Ordering::Relaxed);
-        self.occupancy.lock().unwrap().add(occupancy as f64);
-        self.exec.lock().unwrap().add(exec_s);
+        lock_unpoisoned(&self.occupancy).add(occupancy as f64);
+        lock_unpoisoned(&self.exec).add(exec_s);
     }
 
     /// Consistent point-in-time copy for reporting.  Counters are
     /// all-time; the distribution summaries cover the most recent
     /// [`SAMPLE_WINDOW`] samples of each metric.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let latency = self.latency.lock().unwrap().summary();
-        let occupancy = self.occupancy.lock().unwrap().summary();
-        let exec = self.exec.lock().unwrap().summary();
+        let latency = lock_unpoisoned(&self.latency).summary();
+        let occupancy = lock_unpoisoned(&self.occupancy).summary();
+        let exec = lock_unpoisoned(&self.exec).summary();
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             vertices: self.vertices.load(Ordering::Relaxed),

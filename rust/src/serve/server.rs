@@ -19,7 +19,7 @@ use super::batcher::{run_batcher, WorkItem};
 use super::cache::LogitsCache;
 use super::infer::{self, InferOptions};
 use super::metrics::{MetricsSnapshot, ServeMetrics};
-use super::{vertex_rng, Prediction};
+use super::{lock_unpoisoned, read_unpoisoned, vertex_rng, write_unpoisoned, Prediction};
 use crate::coordinator::session::graph_fingerprint;
 use crate::coordinator::trainer::{TrainConfig, ValueFn};
 use crate::graph::{Graph, Vid};
@@ -342,7 +342,7 @@ impl Server {
         anyhow::ensure!(!vertices.is_empty(), "classify: no vertices given");
         let t = Timer::start();
         let tx = {
-            let guard = self.job_tx.lock().unwrap();
+            let guard = lock_unpoisoned(&self.job_tx);
             guard
                 .as_ref()
                 .ok_or_else(|| anyhow::anyhow!("server is shut down"))?
@@ -370,10 +370,18 @@ impl Server {
             results[idx] = Some(res?);
         }
         self.metrics.record_request(vertices.len(), t.secs());
-        Ok(results
+        // Every slot was filled by a cache hit or a counted reply above;
+        // an empty one is an internal invariant break, reported as an
+        // error rather than a panic (R1).
+        results
             .into_iter()
-            .map(|slot| slot.expect("every vertex slot resolved"))
-            .collect())
+            .enumerate()
+            .map(|(i, slot)| {
+                slot.ok_or_else(|| {
+                    anyhow::anyhow!("internal: vertex slot {i} left unresolved")
+                })
+            })
+            .collect()
     }
 
     /// Single-vertex convenience wrapper over [`classify`](Self::classify).
@@ -388,7 +396,7 @@ impl Server {
     pub fn reload_weights(&self, checkpoint: &Path) -> anyhow::Result<()> {
         let w = load_weights_validated(checkpoint, &self.identity)?;
         validate_weight_shapes(&self.weight_shapes, &w)?;
-        let mut guard = self.weights.write().unwrap();
+        let mut guard = write_unpoisoned(&self.weights);
         guard.version = self.cache.invalidate();
         guard.weights = Arc::new(w);
         Ok(())
@@ -425,7 +433,7 @@ impl Server {
     }
 
     fn stop(&mut self) {
-        drop(self.job_tx.lock().unwrap().take());
+        drop(lock_unpoisoned(&self.job_tx).take());
         if let Some(h) = self.batcher.take() {
             let _ = h.join();
         }
@@ -490,7 +498,7 @@ fn run_worker(ctx: WorkerCtx) {
         // Receive under the shared-receiver lock; only the *wait* is
         // serialized — execution below runs with the lock released.
         let batch = {
-            let guard = ctx.work_rx.lock().unwrap();
+            let guard = lock_unpoisoned(&ctx.work_rx);
             match guard.recv() {
                 Ok(b) => b,
                 Err(_) => return, // batcher gone: shutdown
@@ -504,7 +512,7 @@ fn serve_batch(ctx: &WorkerCtx, batch: Vec<WorkItem>) {
     // Weights and their cache version travel together so a concurrent
     // reload can't mix old logits with the new version stamp.
     let (version, weights) = {
-        let guard = ctx.weights.read().unwrap();
+        let guard = read_unpoisoned(&ctx.weights);
         (guard.version, Arc::clone(&guard.weights))
     };
 

@@ -1,0 +1,9 @@
+//! Clean fixture: contracted (D1/D2) sampler code that trips no rule —
+//! membership tests on a `HashSet` are the blessed idiom.
+
+use std::collections::HashSet;
+
+pub fn dedup_frontier(frontier: &[u32]) -> Vec<u32> {
+    let mut seen = HashSet::new();
+    frontier.iter().copied().filter(|v| seen.insert(*v)).collect()
+}

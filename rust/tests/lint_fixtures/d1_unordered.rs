@@ -1,0 +1,12 @@
+//! Seeded D1 violation for the lint fixture tests: a sampler helper
+//! that iterates a `HashMap`, leaking hash order into its output.
+
+use std::collections::HashMap;
+
+pub fn degree_histogram(edges: &[(u32, u32)]) -> Vec<(u32, usize)> {
+    let mut degree: HashMap<u32, usize> = HashMap::new();
+    for &(src, _) in edges {
+        *degree.entry(src).or_insert(0) += 1;
+    }
+    degree.iter().map(|(v, d)| (*v, *d)).collect()
+}

@@ -1,0 +1,6 @@
+//! Seeded D2 violation: a wall-clock read inside a sampler step path.
+
+pub fn jitter_seed(base: u64) -> u64 {
+    let t = std::time::Instant::now();
+    base ^ (t.elapsed().subsec_nanos() as u64)
+}

@@ -1,0 +1,6 @@
+//! Seeded D3 violation: an ad-hoc float reduction bypassing kernels::.
+
+pub fn mean_activation(xs: &[f32]) -> f32 {
+    let total = xs.iter().copied().sum::<f32>();
+    total / xs.len().max(1) as f32
+}

@@ -1,0 +1,7 @@
+//! Pragma fixture: a justified, audited D2 suppression.
+
+pub fn walltime_probe() -> std::time::Duration {
+    // lint:allow(D2): measurement-only probe; never reaches batch outputs
+    let start = std::time::Instant::now();
+    start.elapsed()
+}

@@ -1,0 +1,6 @@
+//! Pragma fixture: a stale allow that suppresses nothing.
+
+pub fn add(a: u32, b: u32) -> u32 {
+    // lint:allow(D2): stale justification left behind by a refactor
+    a + b
+}

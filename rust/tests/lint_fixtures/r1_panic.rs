@@ -1,0 +1,5 @@
+//! Seeded R1 violation: a panicking unwrap on a serving request path.
+
+pub fn first_logit(logits: &[f32]) -> f32 {
+    *logits.first().unwrap()
+}

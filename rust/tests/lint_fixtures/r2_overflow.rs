@@ -1,0 +1,5 @@
+//! Seeded R2 violation: unchecked size arithmetic on header counts.
+
+pub fn load_row_region(n_rows: usize, row_bytes: usize) -> usize {
+    n_rows * row_bytes
+}

@@ -1,0 +1,114 @@
+//! Fixture-driven tests for the `hp-gnn lint` contract rules.
+//!
+//! Each fixture under `lint_fixtures/` seeds exactly one violation (or
+//! exercises the pragma machinery); the tests pin rule id, path, and
+//! line, so the scanner cannot silently stop seeing a pattern.  The
+//! final test lints the real `rust/src` tree — the repo itself must stay
+//! clean, which is exactly what `make lint` / CI enforce.
+//!
+//! Fixture files live in a subdirectory so cargo does not compile them
+//! as test targets (several would not build — that is the point).
+
+use hp_gnn::lint::{lint_source, lint_tree, Finding, RuleId};
+
+/// Run `lint_source` and insist the fixture seeds exactly one finding.
+fn only_finding(rel: &str, text: &str) -> Finding {
+    let mut findings = lint_source(rel, text);
+    assert_eq!(findings.len(), 1, "expected exactly one finding, got {findings:?}");
+    findings.pop().unwrap()
+}
+
+#[test]
+fn d1_fixture_flags_hashmap_iteration() {
+    let f = only_finding(
+        "sampler/d1_unordered.rs",
+        include_str!("lint_fixtures/d1_unordered.rs"),
+    );
+    assert_eq!(f.rule, Some(RuleId::D1));
+    assert_eq!(f.path, "sampler/d1_unordered.rs");
+    assert_eq!(f.line, 11, "the `degree.iter()` line: {}", f.reason);
+    assert!(f.reason.contains("degree"), "{}", f.reason);
+}
+
+#[test]
+fn d2_fixture_flags_wallclock_read() {
+    let f = only_finding(
+        "sampler/d2_wallclock.rs",
+        include_str!("lint_fixtures/d2_wallclock.rs"),
+    );
+    assert_eq!(f.rule, Some(RuleId::D2));
+    assert_eq!(f.path, "sampler/d2_wallclock.rs");
+    assert_eq!(f.line, 4, "the `Instant::now()` line: {}", f.reason);
+}
+
+#[test]
+fn d3_fixture_flags_adhoc_float_sum() {
+    let f = only_finding(
+        "runtime/tensor.rs",
+        include_str!("lint_fixtures/d3_float_reduction.rs"),
+    );
+    assert_eq!(f.rule, Some(RuleId::D3));
+    assert_eq!(f.line, 4, "the `.sum::<f32>()` line: {}", f.reason);
+    assert!(f.reason.contains("sum::<f32>"), "{}", f.reason);
+}
+
+#[test]
+fn r1_fixture_flags_unwrap_in_serving_path() {
+    let f = only_finding("serve/r1_panic.rs", include_str!("lint_fixtures/r1_panic.rs"));
+    assert_eq!(f.rule, Some(RuleId::R1));
+    assert_eq!(f.line, 4, "the `.unwrap()` line: {}", f.reason);
+    assert!(f.reason.contains(".unwrap"), "{}", f.reason);
+}
+
+#[test]
+fn r2_fixture_flags_unchecked_loader_multiply() {
+    let f = only_finding("graph/io.rs", include_str!("lint_fixtures/r2_overflow.rs"));
+    assert_eq!(f.rule, Some(RuleId::R2));
+    assert_eq!(f.line, 4, "the `n_rows * row_bytes` line: {}", f.reason);
+    assert!(f.reason.contains("checked_mul"), "{}", f.reason);
+}
+
+#[test]
+fn clean_fixture_produces_no_findings() {
+    let findings = lint_source("sampler/clean.rs", include_str!("lint_fixtures/clean.rs"));
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn pragma_with_reason_suppresses_the_finding() {
+    let findings = lint_source(
+        "sampler/pragma_allowed.rs",
+        include_str!("lint_fixtures/pragma_allowed.rs"),
+    );
+    assert!(findings.is_empty(), "a justified pragma must suppress: {findings:?}");
+}
+
+#[test]
+fn unused_pragma_is_itself_a_finding() {
+    let f = only_finding(
+        "sampler/pragma_unused.rs",
+        include_str!("lint_fixtures/pragma_unused.rs"),
+    );
+    assert_eq!(f.rule, None, "pragma problems carry no rule: {f:?}");
+    assert_eq!(f.line, 4, "anchored at the pragma itself: {}", f.reason);
+    assert!(f.reason.contains("P2 unused-pragma"), "{}", f.reason);
+}
+
+#[test]
+fn fixtures_cover_every_contract_rule() {
+    // The five seeded fixtures above demonstrate D1, D2, D3, R1, R2 —
+    // keep this inventory in sync so adding a rule forces a fixture.
+    assert_eq!(RuleId::ALL.len(), 5);
+}
+
+#[test]
+fn the_repo_tree_is_lint_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    let report = lint_tree(&root).expect("lint_tree over the real repo");
+    assert!(report.files_scanned > 30, "only scanned {} files", report.files_scanned);
+    assert!(
+        report.is_clean(),
+        "rust/src must stay lint-clean (fix or lint:allow with a reason):\n{}",
+        report.into_diagnostics()
+    );
+}
