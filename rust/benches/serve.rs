@@ -16,22 +16,33 @@
 //! determinism cross-check asserts the two configurations serve
 //! bit-identical logits.
 //!
+//! * **HTTP SLO trajectory** (both profiles) — an open-loop *network*
+//!   load generator drives the real socket (`net::HttpServer` +
+//!   `POST /v1/classify`) at fixed offered rates from below to ≥2× the
+//!   measured saturation, on a deliberately shallow request queue.
+//!   Past saturation the server must shed (`429` + `Retry-After`)
+//!   rather than queue unboundedly, and the p99 of *accepted* requests
+//!   must stay bounded — the admission-control acceptance claim,
+//!   persisted as the `http` object in `BENCH_serve.json`.
+//!
 //! Run: `make bench-serve` or `cargo bench --bench serve`.  Knobs:
 //!
 //! * `SERVE_PROFILE=full|smoke` — smoke shrinks the request counts and
-//!   skips the open-loop section (CI's JSON-shape check).
+//!   skips the in-process open-loop section (CI's JSON-shape check).
 //! * `SERVE_OUT=<path>` — where to write `BENCH_serve.json`.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use hp_gnn::graph::{generator, Graph};
+use hp_gnn::net::{api_router, HttpClient, HttpOptions, HttpServer};
 use hp_gnn::runtime::{Kind, Runtime, WeightState};
 use hp_gnn::sampler::neighbor::NeighborSampler;
 use hp_gnn::sampler::values::GnnModel;
 use hp_gnn::serve::{ServeConfig, Server};
 use hp_gnn::util::json::Json;
 use hp_gnn::util::rng::Pcg64;
+use hp_gnn::util::stats::Summary;
 
 struct LoadResult {
     mode: &'static str,
@@ -101,7 +112,217 @@ fn main() {
     let determinism = determinism_check(&rt, &graph, &sampler, &weights);
     println!("determinism check: {determinism}");
 
-    write_json(&out_path, &profile, &graph, &runs, speedup, determinism);
+    // SLO trajectory over the real socket (runs in both profiles: CI's
+    // smoke validates the recorded shape AND the shedding claim).
+    let http = http_slo(&rt, &graph, &sampler, &weights, smoke);
+
+    write_json(&out_path, &profile, &graph, &runs, speedup, determinism, &http);
+}
+
+/// Admission-control knobs of the HTTP SLO run: a deliberately shallow
+/// queue so the sweep reaches the shedding regime quickly.
+const HTTP_QUEUE_DEPTH: usize = 8;
+
+struct HttpSloPoint {
+    offered_rps: f64,
+    requests: usize,
+    accepted: usize,
+    shed: usize,
+    elapsed_s: f64,
+    latency: Summary,
+}
+
+struct HttpSlo {
+    saturation_rps: f64,
+    points: Vec<HttpSloPoint>,
+}
+
+/// One classify request over an existing keep-alive connection,
+/// reconnecting once if the server side closed it.  Returns the status.
+fn http_classify(client: &mut Option<HttpClient>, addr: &str, vertex: u32) -> u16 {
+    let body = Json::obj(vec![("vertex", Json::num(vertex as f64))]);
+    for _ in 0..2 {
+        if client.is_none() {
+            *client = Some(HttpClient::connect(addr).expect("connect load generator"));
+        }
+        if let Some(c) = client.as_mut() {
+            match c.request("POST", "/v1/classify", Some(&body)) {
+                Ok(resp) => {
+                    if resp.status == 429 {
+                        assert!(
+                            resp.header("retry-after").is_some(),
+                            "shed responses must carry Retry-After"
+                        );
+                    }
+                    return resp.status;
+                }
+                Err(_) => *client = None, // stale connection: reconnect once
+            }
+        }
+    }
+    panic!("load generator could not reach {addr}");
+}
+
+fn http_slo(
+    rt: &Runtime,
+    graph: &Arc<Graph>,
+    sampler: &NeighborSampler,
+    weights: &WeightState,
+    smoke: bool,
+) -> HttpSlo {
+    let cfg = ServeConfig {
+        workers: 4,
+        max_batch: 64,
+        max_wait: Duration::from_micros(25),
+        queue_depth: HTTP_QUEUE_DEPTH,
+        ..ServeConfig::default()
+    };
+    let srv = Arc::new(
+        Server::start(rt, Arc::clone(graph), Arc::new(sampler.clone()), cfg, weights.clone())
+            .expect("server start"),
+    );
+    let router = Arc::new(api_router(Arc::clone(&srv)));
+    let http = HttpServer::bind(
+        "127.0.0.1:0",
+        router,
+        HttpOptions { workers: 8, log: false, ..HttpOptions::default() },
+    )
+    .expect("bind load-generator socket");
+    let addr = http.addr().to_string();
+
+    // Closed-loop saturation over the socket: 8 keep-alive clients
+    // hammering single-vertex requests; sheds don't count as service.
+    let sat_requests = if smoke { 256 } else { 768 };
+    let sat_clients = 8;
+    let accepted = Arc::new(Mutex::new(0usize));
+    let t = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..sat_clients {
+            let addr = addr.clone();
+            let graph = Arc::clone(graph);
+            let accepted = Arc::clone(&accepted);
+            scope.spawn(move || {
+                let mut client = None;
+                let mut ok = 0usize;
+                let mut i = c;
+                while i < sat_requests {
+                    if http_classify(&mut client, &addr, request_vertex(&graph, i)) == 200 {
+                        ok += 1;
+                    }
+                    i += sat_clients;
+                }
+                *accepted.lock().unwrap() += ok;
+            });
+        }
+    });
+    let sat_elapsed = t.elapsed().as_secs_f64();
+    let sat_accepted = *accepted.lock().unwrap();
+    assert!(sat_accepted > 0, "saturation probe served nothing");
+    let saturation_rps = sat_accepted as f64 / sat_elapsed.max(1e-12);
+    println!(
+        "\nhttp saturation: {saturation_rps:.0} accepted req/s \
+         ({sat_accepted}/{sat_requests} over {sat_elapsed:.3}s, queue_depth={HTTP_QUEUE_DEPTH})"
+    );
+
+    // Open-loop sweep: fixed arrival schedules from half to ≥2× (full:
+    // 3×) the measured saturation.
+    let multipliers: &[f64] = if smoke { &[0.5, 2.0] } else { &[0.5, 1.0, 1.5, 2.0, 3.0] };
+    let window_s = if smoke { 0.8 } else { 1.5 };
+    let pool = 32; // outstanding-request bound (open-loop approximation)
+    let mut points = Vec::new();
+    for &mult in multipliers {
+        let offered_rps = saturation_rps * mult;
+        let requests =
+            ((offered_rps * window_s) as usize).clamp(64, if smoke { 1500 } else { 6000 });
+        let interval = Duration::from_secs_f64(1.0 / offered_rps.max(1.0));
+        let tally = Arc::new(Mutex::new((0usize, 0usize, Summary::new())));
+        let start = Instant::now();
+        std::thread::scope(|scope| {
+            for c in 0..pool {
+                let addr = addr.clone();
+                let graph = Arc::clone(graph);
+                let tally = Arc::clone(&tally);
+                scope.spawn(move || {
+                    let mut client = None;
+                    let (mut ok, mut shed) = (0usize, 0usize);
+                    let mut lat = Summary::new();
+                    let mut i = c;
+                    while i < requests {
+                        let due = start + interval * i as u32;
+                        let now = Instant::now();
+                        if due > now {
+                            std::thread::sleep(due - now);
+                        }
+                        let t0 = Instant::now();
+                        match http_classify(&mut client, &addr, request_vertex(&graph, i)) {
+                            200 => {
+                                ok += 1;
+                                lat.add(t0.elapsed().as_secs_f64());
+                            }
+                            429 => shed += 1,
+                            other => panic!("unexpected status {other}"),
+                        }
+                        i += pool;
+                    }
+                    let mut guard = tally.lock().unwrap();
+                    guard.0 += ok;
+                    guard.1 += shed;
+                    guard.2.merge(&lat);
+                });
+            }
+        });
+        let elapsed_s = start.elapsed().as_secs_f64();
+        let (ok, shed, latency) = {
+            let guard = tally.lock().unwrap();
+            (guard.0, guard.1, guard.2.clone())
+        };
+        let point = HttpSloPoint {
+            offered_rps,
+            requests,
+            accepted: ok,
+            shed,
+            elapsed_s,
+            latency,
+        };
+        println!(
+            "http open loop  offered {:>7.0} rps ({mult:.1}x)  {:>5} req  accepted {:>5}  \
+             shed {:>5} ({:>5.1}%)  p50 {:>8.1}us  p99 {:>8.1}us",
+            point.offered_rps,
+            point.requests,
+            point.accepted,
+            point.shed,
+            100.0 * point.shed as f64 / point.requests as f64,
+            point.latency.percentile(50.0).unwrap_or(f64::NAN) * 1e6,
+            point.latency.percentile(99.0).unwrap_or(f64::NAN) * 1e6,
+        );
+        points.push(point);
+    }
+    http.shutdown();
+    drop(addr);
+    Arc::into_inner(srv).expect("all clients joined").shutdown();
+
+    // Acceptance: past 2× saturation the server sheds instead of
+    // queueing, and accepted-request p99 stays bounded by the shallow
+    // queue (not by the offered backlog).
+    let over = points
+        .iter()
+        .filter(|p| p.offered_rps >= 2.0 * saturation_rps - 1e-9)
+        .collect::<Vec<_>>();
+    assert!(!over.is_empty(), "sweep must include an offered rate >= 2x saturation");
+    for p in over {
+        assert!(p.accepted > 0, "overload must still serve admitted requests");
+        assert!(
+            p.shed > 0,
+            "offered {:.0} rps >= 2x saturation ({saturation_rps:.0} rps) must shed",
+            p.offered_rps
+        );
+        let p99 = p.latency.percentile(99.0).expect("accepted latency samples");
+        assert!(
+            p99 < 0.5,
+            "accepted p99 {p99:.3}s unbounded under overload — admission control broken"
+        );
+    }
+    HttpSlo { saturation_rps, points }
 }
 
 fn bench_graph() -> Graph {
@@ -312,6 +533,7 @@ fn write_json(
     runs: &[LoadResult],
     speedup: f64,
     determinism: &str,
+    http: &HttpSlo,
 ) {
     let run_json = |r: &LoadResult| {
         Json::obj(vec![
@@ -353,6 +575,45 @@ fn write_json(
         ("coalescing_speedup", Json::num(speedup)),
         ("determinism", Json::str(determinism)),
         ("runs", Json::arr(runs.iter().map(run_json).collect())),
+        (
+            "http",
+            Json::obj(vec![
+                ("queue_depth", Json::num(HTTP_QUEUE_DEPTH as f64)),
+                ("saturation_rps", Json::num(http.saturation_rps)),
+                (
+                    "slo",
+                    Json::arr(
+                        http.points
+                            .iter()
+                            .map(|p| {
+                                Json::obj(vec![
+                                    ("offered_rps", Json::num(p.offered_rps)),
+                                    ("requests", Json::num(p.requests as f64)),
+                                    ("accepted", Json::num(p.accepted as f64)),
+                                    ("shed", Json::num(p.shed as f64)),
+                                    (
+                                        "shed_rate",
+                                        Json::num(p.shed as f64 / p.requests.max(1) as f64),
+                                    ),
+                                    (
+                                        "achieved_rps",
+                                        Json::num(p.accepted as f64 / p.elapsed_s.max(1e-12)),
+                                    ),
+                                    (
+                                        "latency_s",
+                                        Json::obj(vec![
+                                            ("p50", opt_num(p.latency.percentile(50.0))),
+                                            ("p95", opt_num(p.latency.percentile(95.0))),
+                                            ("p99", opt_num(p.latency.percentile(99.0))),
+                                        ]),
+                                    ),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ),
     ]);
     std::fs::write(out_path, doc.pretty()).expect("write BENCH_serve.json");
 
@@ -383,5 +644,32 @@ fn write_json(
         assert!(r.get("elapsed_s").unwrap().as_f64().unwrap() > 0.0);
     }
     assert_eq!(parsed.get("determinism").unwrap().as_str().unwrap(), "bit-identical");
-    println!("\nwrote {out_path} (validated, {} runs)\nserve OK", runs_arr.len());
+
+    // The persisted SLO trajectory must carry the admission-control
+    // acceptance: shedding past 2x saturation, bounded accepted p99.
+    let http_json = parsed.get("http").expect("http section");
+    let sat = http_json.get("saturation_rps").unwrap().as_f64().unwrap();
+    assert!(sat > 0.0, "saturation must be positive");
+    let slo = http_json.get("slo").unwrap().as_arr().expect("slo array");
+    assert!(!slo.is_empty(), "slo trajectory must have points");
+    let mut over_saturated = 0;
+    for p in slo {
+        for key in ["offered_rps", "requests", "accepted", "shed", "shed_rate", "achieved_rps"] {
+            assert!(p.get(key).unwrap().as_f64().unwrap() >= 0.0, "bad {key}");
+        }
+        let lat = p.get("latency_s").unwrap();
+        let offered = p.get("offered_rps").unwrap().as_f64().unwrap();
+        if offered >= 2.0 * sat - 1e-9 {
+            over_saturated += 1;
+            assert!(p.get("shed").unwrap().as_f64().unwrap() > 0.0, "no shed past 2x");
+            let p99 = lat.get("p99").unwrap().as_f64().expect("accepted p99");
+            assert!(p99 < 0.5, "persisted accepted p99 {p99}s unbounded");
+        }
+    }
+    assert!(over_saturated >= 1, "trajectory must reach 2x saturation");
+    println!(
+        "\nwrote {out_path} (validated, {} runs + {}-point SLO trajectory)\nserve OK",
+        runs_arr.len(),
+        slo.len()
+    );
 }

@@ -73,8 +73,9 @@
 //! | | `workers` | int | forward-executor replicas (default 2) |
 //! | | `max_batch` | int | micro-batch coalescing cap; 0 = geometry capacity (default 0) |
 //! | | `max_wait_us` | int | micro-batch deadline in µs (default 200) |
-//! | | `queue_depth` | int | request-queue bound (default 1024) |
+//! | | `queue_depth` | int | request-queue bound; admission sheds past it (default 1024) |
 //! | | `cache` | bool | versioned logits cache (default false) |
+//! | | `listen` | string | HTTP frontend bind address `host:port`; port 0 = ephemeral (`hp-gnn serve --listen` overrides; default: in-process only) |
 //!
 //! # Seed precedence
 //!
@@ -164,6 +165,28 @@ mod tests {
         assert_eq!(s.max_wait_us, 200);
         assert_eq!(s.queue_depth, 1024);
         assert!(spec.validate().is_empty());
+    }
+
+    #[test]
+    fn parses_serving_listen_address() {
+        let prog = PROGRAM.replace(
+            "\"training\":",
+            r#""serving": {"listen": "127.0.0.1:8080"}, "training":"#,
+        );
+        let spec = parse_program(&prog).unwrap();
+        assert_eq!(
+            spec.serving.as_ref().unwrap().listen.as_deref(),
+            Some("127.0.0.1:8080")
+        );
+        assert!(spec.validate().is_empty());
+        // A non-host:port address is a validation diagnostic, not a crash.
+        let prog = PROGRAM.replace(
+            "\"training\":",
+            r#""serving": {"listen": "localhost"}, "training":"#,
+        );
+        let spec = parse_program(&prog).unwrap();
+        let d = spec.validate();
+        assert!(d.iter().any(|x| x.path == "serving.listen"), "{d}");
     }
 
     #[test]

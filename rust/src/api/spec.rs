@@ -196,6 +196,10 @@ pub struct ServingSpec {
     pub queue_depth: usize,
     /// Enable the versioned logits cache for repeat vertices.
     pub cache: bool,
+    /// HTTP listen address (`host:port`; port 0 = ephemeral) for the
+    /// network frontend.  `None` serves in-process only; the
+    /// `hp-gnn serve --listen` flag overrides whatever is here.
+    pub listen: Option<String>,
 }
 
 impl Default for ServingSpec {
@@ -208,6 +212,7 @@ impl Default for ServingSpec {
             max_wait_us: 200,
             queue_depth: 1024,
             cache: false,
+            listen: None,
         }
     }
 }
@@ -382,6 +387,19 @@ impl ProgramSpec {
             }
             if s.max_wait_us > MAX_JSON_INT {
                 d.push("serving.max_wait_us", "must fit in 53 bits (travels through JSON)");
+            }
+            if let Some(listen) = &s.listen {
+                let port_ok = listen
+                    .rsplit_once(':')
+                    .map(|(host, port)| !host.is_empty() && port.parse::<u16>().is_ok())
+                    .unwrap_or(false);
+                if !port_ok {
+                    d.push_hint(
+                        "serving.listen",
+                        format!("{listen:?} is not a host:port address"),
+                        "use e.g. \"127.0.0.1:8080\" (port 0 picks an ephemeral port)",
+                    );
+                }
             }
         }
 
@@ -575,6 +593,9 @@ impl ProgramSpec {
             if let Some(ckpt) = &s.checkpoint {
                 serving.push(("checkpoint", path_json(ckpt)?));
             }
+            if let Some(listen) = &s.listen {
+                serving.push(("listen", Json::str(listen.clone())));
+            }
             pairs.push(("serving", Json::obj(serving)));
         }
         Ok(Json::obj(pairs))
@@ -729,6 +750,19 @@ fn opt_seed(obj: &Json, section: &str, key: &str, d: &mut Diagnostics) -> Option
         None => None,
         Some(j) => match j.as_usize() {
             Ok(v) => Some(v as u64),
+            Err(e) => {
+                d.push(at(section, key), e.to_string());
+                None
+            }
+        },
+    }
+}
+
+fn opt_string(obj: &Json, section: &str, key: &str, d: &mut Diagnostics) -> Option<String> {
+    match obj.opt(key) {
+        None => None,
+        Some(j) => match j.as_str() {
+            Ok(v) => Some(v.to_string()),
             Err(e) => {
                 d.push(at(section, key), e.to_string());
                 None
@@ -986,12 +1020,13 @@ fn parse_serving(doc: &Json, d: &mut Diagnostics) -> Option<ServingSpec> {
     check_keys(
         serving,
         "serving",
-        &["checkpoint", "workers", "max_batch", "max_wait_us", "queue_depth", "cache"],
+        &["checkpoint", "workers", "max_batch", "max_wait_us", "queue_depth", "cache", "listen"],
         d,
     );
     let defaults = ServingSpec::default();
     Some(ServingSpec {
         checkpoint: opt_path(serving, "serving", "checkpoint", d),
+        listen: opt_string(serving, "serving", "listen", d),
         workers: opt_usize(serving, "serving", "workers", defaults.workers, d),
         max_batch: opt_usize(serving, "serving", "max_batch", defaults.max_batch, d),
         max_wait_us: opt_usize(serving, "serving", "max_wait_us", defaults.max_wait_us as usize, d)
@@ -1050,6 +1085,7 @@ mod tests {
             max_wait_us: 150,
             queue_depth: 256,
             cache: true,
+            listen: Some("127.0.0.1:8080".to_string()),
         });
         assert!(spec.validate().is_empty());
         let text = spec.to_json().unwrap().pretty();
@@ -1154,6 +1190,26 @@ mod tests {
         assert_eq!(spec.max_wait_us, cfg.max_wait.as_micros() as u64);
         assert_eq!(spec.queue_depth, cfg.queue_depth);
         assert_eq!(spec.cache, cfg.cache);
+    }
+
+    #[test]
+    fn bad_listen_addresses_are_diagnosed() {
+        let mut spec = minimal();
+        for bad in ["8080", "localhost", ":8080", "127.0.0.1:", "127.0.0.1:notaport"] {
+            spec.serving =
+                Some(ServingSpec { listen: Some(bad.to_string()), ..Default::default() });
+            let d = spec.validate();
+            assert!(
+                d.iter().any(|x| x.path == "serving.listen"),
+                "{bad:?} passed validation: {d}"
+            );
+        }
+        for good in ["127.0.0.1:0", "0.0.0.0:8080", "[::1]:443", "gnn.internal:9090"] {
+            spec.serving =
+                Some(ServingSpec { listen: Some(good.to_string()), ..Default::default() });
+            let d = spec.validate();
+            assert!(d.is_empty(), "{good:?} rejected: {d}");
+        }
     }
 
     #[test]

@@ -29,6 +29,7 @@ pub mod dse;
 pub mod graph;
 pub mod layout;
 pub mod lint;
+pub mod net;
 pub mod perf;
 pub mod repro;
 pub mod runtime;

@@ -164,6 +164,20 @@ pub const CONTRACTS: &[Contract] = &[
               must not take down the pool",
     },
     Contract {
+        prefix: "net/",
+        rule: RuleId::R1,
+        scope: Scope::File,
+        why: "the HTTP frontend degrades per request: a malformed request or dead \
+              socket costs one response, never a connection worker or the listener",
+    },
+    Contract {
+        prefix: "net/",
+        rule: RuleId::D2,
+        scope: Scope::File,
+        why: "latency and socket deadlines go through util::stats::Timer; raw \
+              wall-clock reads need a reasoned allow (the request-log timestamp)",
+    },
+    Contract {
         prefix: "serve/infer.rs",
         rule: RuleId::D2,
         scope: Scope::File,
@@ -418,6 +432,9 @@ mod tests {
             .iter()
             .any(|(r, s)| *r == RuleId::R1 && *s == Scope::Function("drive")));
         assert!(contracts_for("graph/io.rs").iter().any(|(r, _)| *r == RuleId::R2));
+        let net = contracts_for("net/http.rs");
+        assert!(net.iter().any(|(r, _)| *r == RuleId::R1), "net/ owes no-panic");
+        assert!(net.iter().any(|(r, _)| *r == RuleId::D2), "net/ owes Timer-only time");
         assert!(contracts_for("util/json.rs").is_empty(), "uncontracted module");
     }
 

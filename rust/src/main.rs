@@ -346,6 +346,12 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         .flag("max-wait-us", "", "micro-batch deadline in microseconds (default 200)")
         .flag("requests", "64", "self-driven demo requests when --vertices is empty")
         .flag("vertices", "", "comma-separated vertex ids to classify (one line each)")
+        .flag(
+            "listen",
+            "",
+            "serve the HTTP API on host:port (0 port = ephemeral) and block; \
+             overrides the program's serving.listen",
+        )
         .switch("cache", "enable the versioned logits cache for repeat vertices"),
     )
     .parse_from(argv)?;
@@ -388,6 +394,10 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
     if !args.get("checkpoint").is_empty() {
         serving.checkpoint = Some(PathBuf::from(args.get("checkpoint")));
     }
+    if !args.get("listen").is_empty() {
+        serving.listen = Some(args.get("listen").to_string());
+    }
+    let listen = serving.listen.clone();
     let checkpoint = serving.checkpoint.clone().ok_or_else(|| {
         anyhow::anyhow!(
             "no checkpoint to serve: give --checkpoint <file> (weights from `hp-gnn train \
@@ -409,6 +419,17 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
         server.max_batch(),
         if design.spec.serving.as_ref().is_some_and(|s| s.cache) { "on" } else { "off" },
     );
+
+    if let Some(addr) = listen {
+        // HTTP mode: bind the network frontend and serve until killed.
+        let server = std::sync::Arc::new(server);
+        let router = std::sync::Arc::new(hp_gnn::net::api_router(std::sync::Arc::clone(&server)));
+        let http = hp_gnn::net::HttpServer::bind(&addr, router, Default::default())?;
+        // Tests and CI parse this exact line for the resolved port.
+        println!("listening on http://{}", http.addr());
+        http.join();
+        return Ok(());
+    }
 
     if !args.get("vertices").is_empty() {
         let vertices: Vec<u32> = args

@@ -1,0 +1,109 @@
+//! Minimal keep-alive HTTP/1.1 client for the load-generator bench and
+//! the socket tests.  Speaks exactly the dialect [`super::server`]
+//! serves: `Content-Length`-framed bodies, no chunked encoding.  Not a
+//! general-purpose client and not part of the serving path — but it
+//! lives in `net/`, so it obeys the same no-panic contract.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use crate::util::json::Json;
+
+/// One keep-alive connection to an HTTP server.
+pub struct HttpClient {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+/// A parsed response.
+#[derive(Debug)]
+pub struct ClientResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl ClientResponse {
+    /// First header with this (case-insensitive) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let want = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(n, _)| *n == want)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Body parsed as JSON.
+    pub fn json(&self) -> anyhow::Result<Json> {
+        let text = std::str::from_utf8(&self.body)?;
+        Ok(Json::parse(text)?)
+    }
+}
+
+impl HttpClient {
+    /// Connect to `host:port`.
+    pub fn connect(addr: &str) -> anyhow::Result<HttpClient> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(HttpClient { writer: stream, reader })
+    }
+
+    /// Issue one request and read the full response.  The connection
+    /// stays usable afterwards (keep-alive) unless the server closed it.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&Json>,
+    ) -> anyhow::Result<ClientResponse> {
+        let payload = body.map(|j| j.compact()).unwrap_or_default();
+        let mut req = format!("{method} {path} HTTP/1.1\r\nHost: hp-gnn\r\n");
+        if body.is_some() {
+            req.push_str("Content-Type: application/json\r\n");
+        }
+        req.push_str(&format!("Content-Length: {}\r\n\r\n", payload.len()));
+        self.writer.write_all(req.as_bytes())?;
+        self.writer.write_all(payload.as_bytes())?;
+        self.writer.flush()?;
+        self.read_response()
+    }
+
+    fn read_line(&mut self) -> anyhow::Result<String> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        anyhow::ensure!(n > 0, "server closed the connection mid-response");
+        Ok(line.trim_end_matches(['\r', '\n']).to_string())
+    }
+
+    fn read_response(&mut self) -> anyhow::Result<ClientResponse> {
+        let status_line = self.read_line()?;
+        let status = status_line
+            .split(' ')
+            .nth(1)
+            .and_then(|s| s.parse::<u16>().ok())
+            .ok_or_else(|| anyhow::anyhow!("malformed status line: {status_line:?}"))?;
+        let mut headers = Vec::new();
+        let mut content_length = 0usize;
+        loop {
+            let line = self.read_line()?;
+            if line.is_empty() {
+                break;
+            }
+            let (name, value) = line
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("malformed response header: {line:?}"))?;
+            let name = name.trim().to_ascii_lowercase();
+            let value = value.trim().to_string();
+            if name == "content-length" {
+                content_length = value
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad Content-Length: {value:?}"))?;
+            }
+            headers.push((name, value));
+        }
+        let mut body = vec![0u8; content_length];
+        std::io::Read::read_exact(&mut self.reader, &mut body)?;
+        Ok(ClientResponse { status, headers, body })
+    }
+}

@@ -1,0 +1,524 @@
+//! Hand-rolled HTTP/1.1 subset: exactly what the serving frontend needs,
+//! nothing more.
+//!
+//! Supported: request parsing with hard size limits and a wall-clock
+//! budget, `Content-Length` bodies, keep-alive (including pipelined
+//! requests on one connection), fixed-length responses.  Deliberately
+//! unsupported: chunked transfer encoding (`501`), upgrades, trailers,
+//! HTTP/2.  The parser is allocation-bounded: a request can never make
+//! the server buffer more than [`Limits::max_header_bytes`] of headers
+//! or [`Limits::max_body_bytes`] of body, and a peer that trickles bytes
+//! (slowloris) is cut off once [`Limits::read_timeout`] of wall time has
+//! elapsed — provided the underlying socket has a short poll-style read
+//! timeout set, which [`super::server::HttpServer`] arranges.
+//!
+//! Parse errors map to client-visible status codes ([`HttpError::status`])
+//! with `api::diag::Diagnostic`-shaped JSON bodies, so a malformed
+//! request never takes down a connection worker, let alone the listener.
+
+use std::io::{BufRead, ErrorKind, Read, Write};
+use std::time::Duration;
+
+use crate::util::json::Json;
+use crate::util::stats::Timer;
+
+/// Hard per-request resource bounds.
+#[derive(Debug, Clone)]
+pub struct Limits {
+    /// Cap on the start line + header section, bytes.
+    pub max_header_bytes: usize,
+    /// Cap on the declared `Content-Length`, bytes.
+    pub max_body_bytes: usize,
+    /// Wall-clock budget for reading one complete request once its first
+    /// byte has arrived.
+    pub read_timeout: Duration,
+}
+
+impl Default for Limits {
+    fn default() -> Limits {
+        Limits {
+            max_header_bytes: 8 * 1024,
+            max_body_bytes: 1024 * 1024,
+            read_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// A parsed request.  Header names are lowercased at parse time.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    /// `HTTP/1.1` or `HTTP/1.0`.
+    pub version: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First header with this (case-insensitive) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let want = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(n, _)| *n == want)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// HTTP/1.1 defaults to keep-alive unless `Connection: close`;
+    /// HTTP/1.0 defaults to close unless `Connection: keep-alive`.
+    pub fn keep_alive(&self) -> bool {
+        let conn = self
+            .header("connection")
+            .map(|v| v.to_ascii_lowercase())
+            .unwrap_or_default();
+        if self.version == "HTTP/1.0" {
+            conn == "keep-alive"
+        } else {
+            conn != "close"
+        }
+    }
+
+    /// Body parsed as JSON.
+    pub fn json_body(&self) -> Result<Json, String> {
+        let text = std::str::from_utf8(&self.body)
+            .map_err(|_| "request body is not utf-8".to_string())?;
+        if text.trim().is_empty() {
+            return Err("request body is empty; expected a JSON object".to_string());
+        }
+        Json::parse(text).map_err(|e| format!("request body is not valid JSON: {e}"))
+    }
+}
+
+/// Everything that can go wrong while reading one request.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Syntactically broken request (start line, headers, body framing).
+    BadRequest(String),
+    /// Header section over [`Limits::max_header_bytes`].
+    HeadersTooLarge(String),
+    /// Declared body over [`Limits::max_body_bytes`].
+    BodyTooLarge(String),
+    /// [`Limits::read_timeout`] elapsed mid-request.
+    Timeout,
+    /// A feature this server deliberately does not speak (chunked).
+    Unsupported(String),
+    /// Transport error; the connection is unusable.
+    Io(std::io::Error),
+}
+
+impl HttpError {
+    /// The status code the client sees.
+    pub fn status(&self) -> u16 {
+        match self {
+            HttpError::BadRequest(_) => 400,
+            HttpError::HeadersTooLarge(_) => 431,
+            HttpError::BodyTooLarge(_) => 413,
+            HttpError::Timeout => 408,
+            HttpError::Unsupported(_) => 501,
+            HttpError::Io(_) => 400,
+        }
+    }
+
+    /// Diagnostic-shaped error response for this parse failure.
+    pub fn to_response(&self) -> Response {
+        let reason = match self {
+            HttpError::BadRequest(m) => m.clone(),
+            HttpError::HeadersTooLarge(m) => m.clone(),
+            HttpError::BodyTooLarge(m) => m.clone(),
+            HttpError::Timeout => "request read timed out".to_string(),
+            HttpError::Unsupported(m) => m.clone(),
+            HttpError::Io(e) => format!("transport error: {e}"),
+        };
+        error_response(self.status(), "request", &reason, None)
+    }
+}
+
+fn would_block(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+fn bad(msg: impl Into<String>) -> HttpError {
+    HttpError::BadRequest(msg.into())
+}
+
+/// Read one CRLF- (or LF-) terminated line, retrying short poll-timeout
+/// reads until `limits.read_timeout` of wall time has passed.  `Ok(None)`
+/// means the peer closed cleanly before sending anything — the normal end
+/// of a keep-alive connection.  `cap` bounds the line length (remaining
+/// header budget).
+fn read_line<R: BufRead>(
+    r: &mut R,
+    t: &Timer,
+    limits: &Limits,
+    cap: usize,
+) -> Result<Option<Vec<u8>>, HttpError> {
+    let mut buf = Vec::new();
+    loop {
+        match r.read_until(b'\n', &mut buf) {
+            Ok(0) => {
+                if buf.is_empty() {
+                    return Ok(None);
+                }
+                return Err(bad("connection closed mid-request"));
+            }
+            Ok(_) => {
+                if buf.len() > cap {
+                    return Err(HttpError::HeadersTooLarge(format!(
+                        "header section exceeds {} bytes",
+                        limits.max_header_bytes
+                    )));
+                }
+                if buf.last() == Some(&b'\n') {
+                    buf.pop();
+                    if buf.last() == Some(&b'\r') {
+                        buf.pop();
+                    }
+                    return Ok(Some(buf));
+                }
+                // Delimiter not found and not EOF: keep reading.
+            }
+            Err(e) if would_block(&e) => {
+                if t.secs() > limits.read_timeout.as_secs_f64() {
+                    return Err(HttpError::Timeout);
+                }
+            }
+            Err(e) => return Err(HttpError::Io(e)),
+        }
+    }
+}
+
+fn parse_start_line(line: &[u8]) -> Result<(String, String, String), HttpError> {
+    let s = std::str::from_utf8(line).map_err(|_| bad("start line is not utf-8"))?;
+    let mut parts = s.split(' ');
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None) => (m, p, v),
+        _ => return Err(bad(format!("malformed start line: {s:?}"))),
+    };
+    let method_ok = !method.is_empty() && method.bytes().all(|b| b.is_ascii_uppercase());
+    let version_ok = version == "HTTP/1.1" || version == "HTTP/1.0";
+    if !method_ok || !path.starts_with('/') || !version_ok {
+        return Err(bad(format!("malformed start line: {s:?}")));
+    }
+    Ok((method.to_string(), path.to_string(), version.to_string()))
+}
+
+fn read_body<R: BufRead>(
+    r: &mut R,
+    len: usize,
+    t: &Timer,
+    limits: &Limits,
+) -> Result<Vec<u8>, HttpError> {
+    let mut body = vec![0u8; len];
+    let mut got = 0usize;
+    while got < len {
+        match r.read(&mut body[got..]) {
+            Ok(0) => return Err(bad("connection closed mid-body")),
+            Ok(n) => got += n,
+            Err(e) if would_block(&e) => {
+                if t.secs() > limits.read_timeout.as_secs_f64() {
+                    return Err(HttpError::Timeout);
+                }
+            }
+            Err(e) => return Err(HttpError::Io(e)),
+        }
+    }
+    Ok(body)
+}
+
+/// Parse one request off the stream.  `Ok(None)` means the peer closed
+/// the connection cleanly between requests (keep-alive end-of-life);
+/// every other early exit is an [`HttpError`] the caller can answer
+/// with [`HttpError::to_response`] (except `Io`/`Timeout`, where the
+/// connection is torn down).
+pub fn read_request<R: BufRead>(
+    r: &mut R,
+    limits: &Limits,
+) -> Result<Option<Request>, HttpError> {
+    let t = Timer::start();
+    let mut header_budget = limits.max_header_bytes;
+    let start = match read_line(r, &t, limits, header_budget)? {
+        None => return Ok(None),
+        Some(line) => line,
+    };
+    header_budget = header_budget.saturating_sub(start.len());
+    let (method, path, version) = parse_start_line(&start)?;
+
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line(r, &t, limits, header_budget)?
+            .ok_or_else(|| bad("connection closed inside headers"))?;
+        if line.is_empty() {
+            break;
+        }
+        header_budget = header_budget.saturating_sub(line.len());
+        if header_budget == 0 {
+            return Err(HttpError::HeadersTooLarge(format!(
+                "header section exceeds {} bytes",
+                limits.max_header_bytes
+            )));
+        }
+        let text = std::str::from_utf8(&line).map_err(|_| bad("header is not utf-8"))?;
+        let (name, value) = text
+            .split_once(':')
+            .ok_or_else(|| bad(format!("malformed header: {text:?}")))?;
+        headers.push((
+            name.trim().to_ascii_lowercase(),
+            value.trim().to_string(),
+        ));
+    }
+
+    let req = Request { method, path, version, headers, body: Vec::new() };
+    if req.header("transfer-encoding").is_some() {
+        return Err(HttpError::Unsupported(
+            "chunked transfer encoding is not supported; send Content-Length".to_string(),
+        ));
+    }
+    let len = match req.header("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| bad(format!("invalid Content-Length: {v:?}")))?,
+    };
+    if len > limits.max_body_bytes {
+        return Err(HttpError::BodyTooLarge(format!(
+            "declared body of {len} bytes exceeds the {}-byte limit",
+            limits.max_body_bytes
+        )));
+    }
+    let body = if len > 0 { read_body(r, len, &t, limits)? } else { Vec::new() };
+    Ok(Some(Request { body, ..req }))
+}
+
+/// Reason phrase for the status codes this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        _ => "",
+    }
+}
+
+/// A fixed-length response.  `batch` is bookkeeping for the request log
+/// line (vertices answered), never serialized to the wire.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    pub batch: usize,
+}
+
+impl Response {
+    /// JSON response with `Content-Type: application/json`.
+    pub fn json(status: u16, body: &Json) -> Response {
+        let mut bytes = body.compact().into_bytes();
+        bytes.push(b'\n');
+        Response {
+            status,
+            headers: vec![("Content-Type".to_string(), "application/json".to_string())],
+            body: bytes,
+            batch: 0,
+        }
+    }
+
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        self.headers.push((name.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn with_batch(mut self, batch: usize) -> Response {
+        self.batch = batch;
+        self
+    }
+
+    /// Serialize to the wire.  `keep_alive` decides the `Connection`
+    /// header; the body is always `Content-Length`-framed.
+    pub fn write_to<W: Write>(&self, w: &mut W, keep_alive: bool) -> std::io::Result<()> {
+        write!(w, "HTTP/1.1 {} {}\r\n", self.status, reason(self.status))?;
+        write!(w, "Content-Length: {}\r\n", self.body.len())?;
+        write!(
+            w,
+            "Connection: {}\r\n",
+            if keep_alive { "keep-alive" } else { "close" }
+        )?;
+        for (name, value) in &self.headers {
+            write!(w, "{name}: {value}\r\n")?;
+        }
+        w.write_all(b"\r\n")?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+/// `api::diag::Diagnostic`-shaped error payload:
+/// `{"errors":[{"path":…,"reason":…,"hint":…}]}`.
+pub fn error_body(path: &str, why: &str, hint: Option<&str>) -> Json {
+    Json::obj(vec![(
+        "errors",
+        Json::arr(vec![Json::obj(vec![
+            ("path", Json::str(path)),
+            ("reason", Json::str(why)),
+            ("hint", hint.map(Json::str).unwrap_or(Json::Null)),
+        ])]),
+    )])
+}
+
+/// JSON error response carrying one [`error_body`] diagnostic.
+pub fn error_response(status: u16, path: &str, why: &str, hint: Option<&str>) -> Response {
+    Response::json(status, &error_body(path, why, hint))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Result<Option<Request>, HttpError> {
+        read_request(&mut Cursor::new(raw.as_bytes().to_vec()), &Limits::default())
+    }
+
+    #[test]
+    fn parses_a_post_with_body_and_lowercases_header_names() {
+        let req = parse(
+            "POST /v1/classify HTTP/1.1\r\nHost: x\r\nContent-Length: 13\r\n\r\n{\"vertex\": 3}",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/classify");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("HOST"), Some("x"), "lookup is case-insensitive");
+        assert_eq!(req.body, b"{\"vertex\": 3}");
+        assert!(req.keep_alive(), "HTTP/1.1 defaults to keep-alive");
+        assert_eq!(req.json_body().unwrap().get("vertex").unwrap().as_usize().unwrap(), 3);
+    }
+
+    #[test]
+    fn clean_eof_before_any_bytes_is_none_not_an_error() {
+        assert!(parse("").unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_start_lines_are_rejected_with_400() {
+        for raw in [
+            "GET\r\n\r\n",
+            "GET /x\r\n\r\n",
+            "GET /x HTTP/2\r\n\r\n",
+            "get /x HTTP/1.1\r\n\r\n",
+            "GET x HTTP/1.1\r\n\r\n",
+            "GET /x HTTP/1.1 extra\r\n\r\n",
+            "\u{7f}\u{3}binary HTTP/1.1\r\n\r\n",
+        ] {
+            match parse(raw) {
+                Err(e) => assert_eq!(e.status(), 400, "{raw:?} -> {e:?}"),
+                other => panic!("{raw:?} parsed as {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_requests_are_bad_requests_not_hangs() {
+        for raw in ["GET /x HT", "GET /x HTTP/1.1\r\nHost: y", "POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc"] {
+            match parse(raw) {
+                Err(HttpError::BadRequest(_)) => {}
+                other => panic!("{raw:?} parsed as {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_header_section_is_431() {
+        let raw = format!("GET /x HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "a".repeat(9000));
+        match parse(&raw) {
+            Err(e @ HttpError::HeadersTooLarge(_)) => assert_eq!(e.status(), 431),
+            other => panic!("parsed as {other:?}"),
+        }
+        // Many small headers trip the cumulative budget too.
+        let mut raw = String::from("GET /x HTTP/1.1\r\n");
+        for i in 0..600 {
+            raw.push_str(&format!("X-H{i}: {}\r\n", "v".repeat(10)));
+        }
+        raw.push_str("\r\n");
+        assert!(matches!(parse(&raw), Err(HttpError::HeadersTooLarge(_))));
+    }
+
+    #[test]
+    fn oversized_declared_body_is_413_without_buffering_it() {
+        let raw = format!(
+            "POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            2 * 1024 * 1024
+        );
+        match parse(&raw) {
+            Err(e @ HttpError::BodyTooLarge(_)) => assert_eq!(e.status(), 413),
+            other => panic!("parsed as {other:?}"),
+        }
+    }
+
+    #[test]
+    fn chunked_transfer_encoding_is_501() {
+        let raw = "POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n";
+        match parse(raw) {
+            Err(e @ HttpError::Unsupported(_)) => assert_eq!(e.status(), 501),
+            other => panic!("parsed as {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pipelined_keep_alive_requests_parse_back_to_back() {
+        let raw = "POST /a HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi\
+                   GET /b HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let mut cur = Cursor::new(raw.as_bytes().to_vec());
+        let limits = Limits::default();
+        let a = read_request(&mut cur, &limits).unwrap().unwrap();
+        assert_eq!((a.path.as_str(), a.body.as_slice()), ("/a", &b"hi"[..]));
+        assert!(a.keep_alive());
+        let b = read_request(&mut cur, &limits).unwrap().unwrap();
+        assert_eq!(b.path, "/b");
+        assert!(!b.keep_alive(), "Connection: close must end keep-alive");
+        assert!(read_request(&mut cur, &limits).unwrap().is_none());
+    }
+
+    #[test]
+    fn http_1_0_defaults_to_close() {
+        let req = parse("GET /x HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!req.keep_alive());
+        let req = parse("GET /x HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").unwrap().unwrap();
+        assert!(req.keep_alive());
+    }
+
+    #[test]
+    fn responses_frame_with_content_length_and_connection() {
+        let resp = Response::json(200, &Json::obj(vec![("ok", Json::Bool(true))]))
+            .with_header("Retry-After", "1");
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire, false).unwrap();
+        let text = String::from_utf8(wire).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.contains("Content-Type: application/json\r\n"));
+        let body = text.split("\r\n\r\n").nth(1).unwrap();
+        assert_eq!(body.as_bytes().len(), resp.body.len());
+        Json::parse(body).unwrap();
+    }
+
+    #[test]
+    fn error_payloads_are_diagnostic_shaped() {
+        let resp = error_response(429, "serving.queue", "request queue is full", Some("retry"));
+        let body = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let errs = body.get("errors").unwrap().as_arr().unwrap();
+        assert_eq!(errs.len(), 1);
+        assert_eq!(errs[0].get("path").unwrap().as_str().unwrap(), "serving.queue");
+        assert_eq!(errs[0].get("hint").unwrap().as_str().unwrap(), "retry");
+    }
+}

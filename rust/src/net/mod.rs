@@ -1,0 +1,33 @@
+//! The network serving frontend: a dependency-free HTTP/1.1 layer over
+//! [`serve::Server`](crate::serve::Server).
+//!
+//! HP-GNN's deployment story (recommendation-style inference serving)
+//! needs a front door: [`http`] is a hand-rolled, allocation-bounded
+//! HTTP/1.1 parser and response writer; [`router`] is an exact-match
+//! typed route table; [`server`] accepts connections over the shared
+//! [`util::threadpool`](crate::util::threadpool) idiom; [`routes`] wires
+//! the four-route serving API (`/v1/classify`, `/healthz`, `/metrics`,
+//! `/v1/reload`); [`client`] is the matching minimal client the bench
+//! and tests drive the real socket with.
+//!
+//! Design rules, enforced by `hp-gnn lint` contracts over this module:
+//! no panics in the serving path (R1 — a malformed request must cost one
+//! response, never a worker), and no raw wall-clock reads (D2 — latency
+//! and deadlines go through [`util::stats::Timer`](crate::util::stats::Timer);
+//! the only allowed `SystemTime` is the request log line's timestamp,
+//! behind a reasoned `lint:allow`).  Admission control lives in
+//! `serve::Server::try_classify`: a full request queue sheds with
+//! `429 Too Many Requests` + `Retry-After` instead of queueing without
+//! bound, so p99 of *accepted* requests stays flat past saturation.
+
+pub mod client;
+pub mod http;
+pub mod router;
+pub mod routes;
+pub mod server;
+
+pub use client::{ClientResponse, HttpClient};
+pub use http::{Limits, Request, Response};
+pub use router::Router;
+pub use routes::api_router;
+pub use server::{HttpOptions, HttpServer};

@@ -1,0 +1,131 @@
+//! Typed route table: exact-match `(method, path)` dispatch.
+//!
+//! Unknown paths answer `404`, known paths with the wrong method answer
+//! `405` + `Allow` — both with `Diagnostic`-shaped JSON bodies, so a
+//! client poking the wrong URL gets the same error schema as a bad
+//! program file.  Handlers are plain closures over `&Request`; anything
+//! they capture must be `Send + Sync` because every connection worker
+//! dispatches through the same table.
+
+use super::http::{error_response, Request, Response};
+
+type Handler = Box<dyn Fn(&Request) -> Response + Send + Sync>;
+
+struct Route {
+    method: &'static str,
+    path: &'static str,
+    handler: Handler,
+}
+
+/// Exact-match route table (no wildcards — the API surface is four
+/// routes; introduce patterns when a route actually needs one).
+#[derive(Default)]
+pub struct Router {
+    routes: Vec<Route>,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router::default()
+    }
+
+    /// Register a handler; builder-style.
+    pub fn route(
+        mut self,
+        method: &'static str,
+        path: &'static str,
+        handler: impl Fn(&Request) -> Response + Send + Sync + 'static,
+    ) -> Router {
+        self.routes.push(Route { method, path, handler: Box::new(handler) });
+        self
+    }
+
+    /// Dispatch a request to its handler, or a 404/405 diagnostic.
+    pub fn dispatch(&self, req: &Request) -> Response {
+        let mut allowed: Vec<&'static str> = Vec::new();
+        for r in &self.routes {
+            if r.path != req.path {
+                continue;
+            }
+            if r.method == req.method {
+                return (r.handler)(req);
+            }
+            allowed.push(r.method);
+        }
+        if allowed.is_empty() {
+            let routes: Vec<String> = self
+                .routes
+                .iter()
+                .map(|r| format!("{} {}", r.method, r.path))
+                .collect();
+            error_response(
+                404,
+                &req.path,
+                "no such route",
+                Some(&format!("available: {}", routes.join(", "))),
+            )
+        } else {
+            error_response(
+                405,
+                &req.path,
+                &format!("method {} not allowed here", req.method),
+                Some(&format!("use: {}", allowed.join(", "))),
+            )
+            .with_header("Allow", &allowed.join(", "))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn req(method: &str, path: &str) -> Request {
+        Request {
+            method: method.to_string(),
+            path: path.to_string(),
+            version: "HTTP/1.1".to_string(),
+            headers: Vec::new(),
+            body: Vec::new(),
+        }
+    }
+
+    fn table() -> Router {
+        Router::new()
+            .route("GET", "/healthz", |_| Response::json(200, &Json::str("ok")))
+            .route("POST", "/v1/classify", |r| {
+                Response::json(200, &Json::num(r.body.len() as f64))
+            })
+    }
+
+    #[test]
+    fn dispatches_on_method_and_path() {
+        let router = table();
+        assert_eq!(router.dispatch(&req("GET", "/healthz")).status, 200);
+        assert_eq!(router.dispatch(&req("POST", "/v1/classify")).status, 200);
+    }
+
+    #[test]
+    fn unknown_path_is_404_with_route_listing() {
+        let resp = table().dispatch(&req("GET", "/nope"));
+        assert_eq!(resp.status, 404);
+        let body = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let err = &body.get("errors").unwrap().as_arr().unwrap()[0];
+        assert_eq!(err.get("path").unwrap().as_str().unwrap(), "/nope");
+        assert!(err.get("hint").unwrap().as_str().unwrap().contains("GET /healthz"));
+    }
+
+    #[test]
+    fn wrong_method_is_405_with_allow_header() {
+        let resp = table().dispatch(&req("DELETE", "/healthz"));
+        assert_eq!(resp.status, 405);
+        let allow = resp
+            .headers
+            .iter()
+            .find(|(n, _)| n == "Allow")
+            .map(|(_, v)| v.clone())
+            .unwrap();
+        assert_eq!(allow, "GET");
+    }
+}

@@ -1,0 +1,226 @@
+//! The serving API: four routes over one [`serve::Server`].
+//!
+//! | Route               | Body                                   | Answer |
+//! |---------------------|----------------------------------------|--------|
+//! | `POST /v1/classify` | `{"vertex": v}` or `{"vertices": [v…]}`| `{"predictions":[{vertex,label,logits}…],"weight_version":n}` |
+//! | `GET /healthz`      | —                                      | geometry, pool size, weight version, cache entries |
+//! | `GET /metrics`      | —                                      | `serve::metrics` snapshot (counters, queue depth, latency percentiles, sheds) |
+//! | `POST /v1/reload`   | `{"checkpoint": "path"}`               | `{"reloaded":true,"weight_version":n}` |
+//!
+//! Classify goes through [`Server::try_classify`]: when the bounded
+//! request queue is full the route sheds with `429 Too Many Requests`
+//! and a `Retry-After` header instead of queueing unboundedly.  Error
+//! bodies reuse the `api::diag::Diagnostic` shape
+//! (`{"errors":[{path,reason,hint}]}`), so HTTP clients and program-file
+//! users read the same error schema.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use super::http::{error_response, Response};
+use super::router::Router;
+use crate::graph::Vid;
+use crate::serve::{Prediction, Server};
+use crate::util::json::Json;
+
+/// Seconds a shed client should wait before retrying.  One micro-batch
+/// deadline plus execution is far below a second, so 1 s is always a
+/// safe (conservative) backoff to advertise.
+const RETRY_AFTER_S: u32 = 1;
+
+fn prediction_json(p: &Prediction) -> Json {
+    Json::obj(vec![
+        ("vertex", Json::num(p.vertex as f64)),
+        (
+            "label",
+            p.label.map(|l| Json::num(l as f64)).unwrap_or(Json::Null),
+        ),
+        // f32 → f64 is exact, and the JSON writer prints the shortest
+        // round-tripping decimal: served logits survive the wire
+        // bit-identical.
+        (
+            "logits",
+            Json::arr(p.logits.iter().map(|&x| Json::num(x as f64)).collect()),
+        ),
+    ])
+}
+
+/// Pull the vertex list out of a classify body; any shape problem
+/// becomes a ready-made 400 response.
+fn parse_vertices(body: &[u8]) -> Result<Vec<Vid>, Response> {
+    let hint = r#"send {"vertex": id} or {"vertices": [id, ...]}"#;
+    let json = match std::str::from_utf8(body).ok().and_then(|t| {
+        if t.trim().is_empty() { None } else { Json::parse(t).ok() }
+    }) {
+        Some(j) => j,
+        None => {
+            return Err(error_response(
+                400,
+                "body",
+                "request body is not a JSON object",
+                Some(hint),
+            ))
+        }
+    };
+    let obj = match json.as_obj() {
+        Ok(o) => o,
+        Err(_) => {
+            return Err(error_response(400, "body", "expected a JSON object", Some(hint)))
+        }
+    };
+    for key in obj.keys() {
+        if key != "vertex" && key != "vertices" {
+            return Err(error_response(
+                400,
+                &format!("body.{key}"),
+                "unknown key",
+                Some(hint),
+            ));
+        }
+    }
+    let ids: Vec<usize> = match (json.opt("vertex"), json.opt("vertices")) {
+        (Some(_), Some(_)) => {
+            return Err(error_response(
+                400,
+                "body",
+                "give either \"vertex\" or \"vertices\", not both",
+                Some(hint),
+            ))
+        }
+        (Some(v), None) => match v.as_usize() {
+            Ok(id) => vec![id],
+            Err(e) => {
+                return Err(error_response(400, "body.vertex", &e.to_string(), Some(hint)))
+            }
+        },
+        (None, Some(vs)) => match vs.usize_list() {
+            Ok(ids) if !ids.is_empty() => ids,
+            Ok(_) => {
+                return Err(error_response(
+                    400,
+                    "body.vertices",
+                    "vertex list is empty",
+                    Some(hint),
+                ))
+            }
+            Err(e) => {
+                return Err(error_response(400, "body.vertices", &e.to_string(), Some(hint)))
+            }
+        },
+        (None, None) => {
+            return Err(error_response(
+                400,
+                "body",
+                "missing \"vertex\" or \"vertices\"",
+                Some(hint),
+            ))
+        }
+    };
+    let mut vertices = Vec::with_capacity(ids.len());
+    for id in ids {
+        match Vid::try_from(id) {
+            Ok(v) => vertices.push(v),
+            Err(_) => {
+                return Err(error_response(
+                    400,
+                    "body.vertices",
+                    &format!("vertex id {id} does not fit u32"),
+                    Some(hint),
+                ))
+            }
+        }
+    }
+    Ok(vertices)
+}
+
+fn classify(server: &Server, body: &[u8]) -> Response {
+    let vertices = match parse_vertices(body) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    match server.try_classify(&vertices) {
+        Ok(Some(preds)) => {
+            let out = Json::obj(vec![
+                (
+                    "predictions",
+                    Json::arr(preds.iter().map(|p| prediction_json(p)).collect()),
+                ),
+                ("weight_version", Json::num(server.weight_version() as f64)),
+            ]);
+            Response::json(200, &out).with_batch(vertices.len())
+        }
+        Ok(None) => error_response(
+            429,
+            "serving.queue",
+            "request queue is full; load shed",
+            Some("retry after the Retry-After interval, or lower the offered rate"),
+        )
+        .with_header("Retry-After", &RETRY_AFTER_S.to_string()),
+        Err(e) => error_response(500, "serving", &format!("classification failed: {e}"), None),
+    }
+}
+
+fn healthz(server: &Server) -> Response {
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("status", Json::str("ok")),
+            ("geometry", Json::str(server.geometry().name.clone())),
+            ("workers", Json::num(server.num_workers() as f64)),
+            ("max_batch", Json::num(server.max_batch() as f64)),
+            ("weight_version", Json::num(server.weight_version() as f64)),
+            ("cache_entries", Json::num(server.cache_len() as f64)),
+        ]),
+    )
+}
+
+fn metrics(server: &Server) -> Response {
+    Response::json(200, &server.metrics().to_json())
+}
+
+fn reload(server: &Server, body: &[u8]) -> Response {
+    let hint = r#"send {"checkpoint": "path/to/weights.bin"}"#;
+    let json = match std::str::from_utf8(body).ok().and_then(|t| Json::parse(t).ok()) {
+        Some(j) => j,
+        None => {
+            return error_response(400, "body", "request body is not a JSON object", Some(hint))
+        }
+    };
+    let checkpoint = match json.opt("checkpoint").map(|c| c.as_str()) {
+        Some(Ok(path)) => path.to_string(),
+        _ => {
+            return error_response(400, "body.checkpoint", "missing checkpoint path", Some(hint))
+        }
+    };
+    match server.reload_weights(Path::new(&checkpoint)) {
+        Ok(()) => Response::json(
+            200,
+            &Json::obj(vec![
+                ("reloaded", Json::Bool(true)),
+                ("checkpoint", Json::str(checkpoint)),
+                ("weight_version", Json::num(server.weight_version() as f64)),
+            ]),
+        ),
+        // The running weights are untouched on failure: rejected rollouts
+        // are a conflict with the serving identity, not a server fault.
+        Err(e) => error_response(
+            409,
+            "serving.checkpoint",
+            &format!("reload rejected: {e}"),
+            Some("the checkpoint must match the serving model/geometry identity"),
+        ),
+    }
+}
+
+/// The route table for one server.
+pub fn api_router(server: Arc<Server>) -> Router {
+    let s_classify = Arc::clone(&server);
+    let s_healthz = Arc::clone(&server);
+    let s_metrics = Arc::clone(&server);
+    let s_reload = server;
+    Router::new()
+        .route("POST", "/v1/classify", move |req| classify(&s_classify, &req.body))
+        .route("GET", "/healthz", move |_| healthz(&s_healthz))
+        .route("GET", "/metrics", move |_| metrics(&s_metrics))
+        .route("POST", "/v1/reload", move |req| reload(&s_reload, &req.body))
+}

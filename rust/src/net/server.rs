@@ -1,0 +1,313 @@
+//! Threadpool-backed HTTP listener.
+//!
+//! One supervisor thread hosts a scoped [`run_jobs`] pool: job 0 owns
+//! the `TcpListener` and accepts, jobs 1..=N are connection workers
+//! pulling accepted sockets off a bounded channel.  The bounded channel
+//! plus the OS accept backlog are the only connection buffering — the
+//! pool never grows with load, it just makes clients wait to be read,
+//! and the *request* queue inside `serve::Server` is what decides
+//! admission (shed vs serve).
+//!
+//! Every socket gets a short poll-style read timeout so workers can
+//! observe shutdown between requests; a whole request must still land
+//! within [`Limits::read_timeout`] (enforced by the parser's wall-clock
+//! budget).  Each handled request emits one structured log line:
+//! `http ts=… method=… route=… status=… latency_us=… batch=…`.
+
+use std::io::{BufRead, BufReader, BufWriter};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::http::{read_request, HttpError, Limits, Response};
+use super::router::Router;
+use crate::util::stats::Timer;
+use crate::util::threadpool::run_jobs;
+
+/// How often blocked reads wake up to check the stop flag.
+const POLL: Duration = Duration::from_millis(100);
+
+/// Listener configuration.
+#[derive(Debug, Clone)]
+pub struct HttpOptions {
+    /// Connection worker threads (concurrent connections being read).
+    pub workers: usize,
+    /// Per-request parse limits.
+    pub limits: Limits,
+    /// Emit the per-request log line on stdout.
+    pub log: bool,
+}
+
+impl Default for HttpOptions {
+    fn default() -> HttpOptions {
+        HttpOptions { workers: 4, limits: Limits::default(), log: true }
+    }
+}
+
+/// A running HTTP listener.  Dropping it (or calling
+/// [`shutdown`](HttpServer::shutdown)) stops accepting, lets in-flight
+/// requests finish, and joins every thread.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    supervisor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (`host:port`; port 0 picks an ephemeral port) and
+    /// start serving `router`.
+    pub fn bind(addr: &str, router: Arc<Router>, opts: HttpOptions) -> anyhow::Result<HttpServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("cannot listen on {addr}: {e}"))?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let supervisor = std::thread::Builder::new()
+            .name("hp-gnn-http".to_string())
+            .spawn(move || serve_pool(listener, router, opts, stop2))?;
+        Ok(HttpServer { addr: local, stop, supervisor: Some(supervisor) })
+    }
+
+    /// The bound address (with the real port when 0 was requested).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until the listener exits on its own (it never does unless
+    /// the process is killed) — the `hp-gnn serve --listen` foreground.
+    pub fn join(mut self) {
+        if let Some(h) = self.supervisor.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting, finish in-flight requests, join all threads.
+    pub fn shutdown(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        if !self.stop.swap(true, Ordering::SeqCst) {
+            // Wake the blocking accept with a throwaway connection.
+            let _ = TcpStream::connect(self.addr);
+        }
+        if let Some(h) = self.supervisor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+fn serve_pool(listener: TcpListener, router: Arc<Router>, opts: HttpOptions, stop: Arc<AtomicBool>) {
+    let workers = opts.workers.max(1);
+    let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(workers * 2);
+    let conn_rx = Arc::new(Mutex::new(conn_rx));
+    let mut jobs: Vec<Box<dyn FnOnce() + Send>> = Vec::with_capacity(workers + 1);
+    {
+        let stop = Arc::clone(&stop);
+        jobs.push(Box::new(move || accept_loop(listener, conn_tx, &stop)));
+    }
+    for _ in 0..workers {
+        let rx = Arc::clone(&conn_rx);
+        let router = Arc::clone(&router);
+        let stop = Arc::clone(&stop);
+        let opts = opts.clone();
+        jobs.push(Box::new(move || loop {
+            let conn = {
+                let guard = match rx.lock() {
+                    Ok(g) => g,
+                    Err(p) => p.into_inner(),
+                };
+                guard.recv()
+            };
+            match conn {
+                Ok(stream) => handle_connection(stream, &router, &opts, &stop),
+                Err(_) => return, // acceptor gone: drain complete
+            }
+        }));
+    }
+    run_jobs(workers + 1, jobs);
+}
+
+fn accept_loop(listener: TcpListener, tx: mpsc::SyncSender<TcpStream>, stop: &AtomicBool) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if stop.load(Ordering::Relaxed) {
+                    return; // the wake-up connection (or a late client)
+                }
+                if tx.send(stream).is_err() {
+                    return;
+                }
+            }
+            Err(_) => {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                // Transient accept failure (e.g. fd pressure): back off
+                // instead of spinning.
+                std::thread::sleep(POLL);
+            }
+        }
+    }
+}
+
+fn would_block(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// Serve one connection until close, keep-alive end, error, or shutdown.
+fn handle_connection(stream: TcpStream, router: &Router, opts: &HttpOptions, stop: &AtomicBool) {
+    if stream.set_read_timeout(Some(POLL)).is_err() {
+        return;
+    }
+    let reader_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(reader_stream);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        // Idle wait for the next request's first byte, polling the stop
+        // flag so shutdown does not hang on open keep-alive connections.
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            match reader.fill_buf() {
+                Ok([]) => return, // peer closed cleanly
+                Ok(_) => break,
+                Err(e) if would_block(&e) => continue,
+                Err(_) => return,
+            }
+        }
+        let t = Timer::start();
+        let (resp, keep, method, path) = match read_request(&mut reader, &opts.limits) {
+            Ok(None) => return,
+            Ok(Some(req)) => {
+                let keep = req.keep_alive() && !stop.load(Ordering::Relaxed);
+                let resp = router.dispatch(&req);
+                (resp, keep, req.method, req.path)
+            }
+            Err(HttpError::Io(_)) => return,
+            Err(e) => (e.to_response(), false, "-".to_string(), "-".to_string()),
+        };
+        let ok = resp.write_to(&mut writer, keep).is_ok();
+        if opts.log {
+            log_request(&method, &path, &resp, t.secs());
+        }
+        if !ok || !keep {
+            return;
+        }
+    }
+}
+
+/// The one structured log line per request.
+fn log_request(method: &str, path: &str, resp: &Response, latency_s: f64) {
+    // lint:allow(D2): observability only — the log line stamps wall-clock arrival time; it never feeds computation or control flow
+    let ts = std::time::SystemTime::now().duration_since(std::time::UNIX_EPOCH).map(|d| d.as_secs()).unwrap_or(0);
+    println!(
+        "http ts={ts} method={method} route={path} status={} latency_us={:.0} batch={}",
+        resp.status,
+        latency_s * 1e6,
+        resp.batch,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::client::HttpClient;
+    use crate::util::json::Json;
+
+    fn echo_router() -> Arc<Router> {
+        Arc::new(
+            Router::new()
+                .route("GET", "/healthz", |_| {
+                    Response::json(200, &Json::obj(vec![("status", Json::str("ok"))]))
+                })
+                .route("POST", "/echo", |req| {
+                    let len = req.body.len();
+                    Response::json(200, &Json::obj(vec![("bytes", Json::num(len as f64))]))
+                }),
+        )
+    }
+
+    fn quiet() -> HttpOptions {
+        HttpOptions { log: false, ..HttpOptions::default() }
+    }
+
+    #[test]
+    fn binds_ephemeral_port_serves_keep_alive_requests_and_shuts_down() {
+        let srv = HttpServer::bind("127.0.0.1:0", echo_router(), quiet()).unwrap();
+        let addr = srv.addr();
+        assert_ne!(addr.port(), 0, "ephemeral port must be resolved");
+        let mut client = HttpClient::connect(&addr.to_string()).unwrap();
+        // Two requests on one connection: keep-alive works.
+        for _ in 0..2 {
+            let resp = client.request("GET", "/healthz", None).unwrap();
+            assert_eq!(resp.status, 200);
+            assert_eq!(
+                resp.json().unwrap().get("status").unwrap().as_str().unwrap(),
+                "ok"
+            );
+        }
+        let resp = client
+            .request("POST", "/echo", Some(&Json::obj(vec![("x", Json::num(1.0))])))
+            .unwrap();
+        assert_eq!(resp.status, 200);
+        drop(client);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn concurrent_connections_are_served_by_the_worker_pool() {
+        let srv = HttpServer::bind(
+            "127.0.0.1:0",
+            echo_router(),
+            HttpOptions { workers: 4, log: false, ..HttpOptions::default() },
+        )
+        .unwrap();
+        let addr = srv.addr().to_string();
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let addr = addr.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut c = HttpClient::connect(&addr).unwrap();
+                for _ in 0..4 {
+                    let r = c.request("GET", "/healthz", None).unwrap();
+                    assert_eq!(r.status, 200);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        srv.shutdown();
+    }
+
+    #[test]
+    fn malformed_requests_get_diagnostic_errors_not_dead_workers() {
+        use std::io::{Read, Write};
+        let srv = HttpServer::bind("127.0.0.1:0", echo_router(), quiet()).unwrap();
+        let addr = srv.addr();
+        let mut raw = TcpStream::connect(addr).unwrap();
+        raw.write_all(b"NOT A REQUEST\r\n\r\n").unwrap();
+        let mut text = String::new();
+        raw.read_to_string(&mut text).unwrap();
+        assert!(text.starts_with("HTTP/1.1 400"), "{text}");
+        assert!(text.contains("\"errors\""), "{text}");
+        // The listener survives: a well-formed request still works.
+        let mut client = HttpClient::connect(&addr.to_string()).unwrap();
+        assert_eq!(client.request("GET", "/healthz", None).unwrap().status, 200);
+        drop(client);
+        srv.shutdown();
+    }
+}

@@ -58,6 +58,12 @@ pub struct ServeMetrics {
     cache_misses: AtomicU64,
     /// Executed forward micro-batches (kernel invocations).
     batches: AtomicU64,
+    /// Requests rejected at admission because the bounded work queue was
+    /// full (answered `429 Too Many Requests` over HTTP).
+    shed: AtomicU64,
+    /// Work items currently in flight: enqueued on the bounded queue or
+    /// executing, reply not yet collected.  A gauge, not a counter.
+    depth: AtomicU64,
     /// Per-request wall latency, seconds (enqueue → last reply).
     latency: Mutex<SampleWindow>,
     /// Real target vertices per executed micro-batch.
@@ -76,6 +82,22 @@ impl ServeMetrics {
     pub fn record_cache(&self, hits: usize, misses: usize) {
         self.cache_hits.fetch_add(hits as u64, Ordering::Relaxed);
         self.cache_misses.fetch_add(misses as u64, Ordering::Relaxed);
+    }
+
+    /// One request shed at admission (bounded queue full).
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` work items entered the pipeline (enqueued on the queue).
+    pub fn depth_add(&self, n: usize) {
+        self.depth.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// `n` work items left the pipeline (replies collected).  Callers
+    /// keep add/sub balanced; the gauge never goes negative.
+    pub fn depth_sub(&self, n: usize) {
+        self.depth.fetch_sub(n as u64, Ordering::Relaxed);
     }
 
     pub fn record_batch(&self, occupancy: usize, exec_s: f64) {
@@ -97,6 +119,8 @@ impl ServeMetrics {
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
+            shed_requests: self.shed.load(Ordering::Relaxed),
+            queue_depth: self.depth.load(Ordering::Relaxed),
             latency,
             occupancy,
             exec,
@@ -113,6 +137,10 @@ pub struct MetricsSnapshot {
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub batches: u64,
+    /// Requests rejected at admission (all-time counter).
+    pub shed_requests: u64,
+    /// In-flight work items at snapshot time (gauge).
+    pub queue_depth: u64,
     pub latency: Summary,
     pub occupancy: Summary,
     pub exec: Summary,
@@ -149,6 +177,8 @@ impl MetricsSnapshot {
             ("cache_hits", Json::num(self.cache_hits as f64)),
             ("cache_misses", Json::num(self.cache_misses as f64)),
             ("batches", Json::num(self.batches as f64)),
+            ("shed_requests", Json::num(self.shed_requests as f64)),
+            ("queue_depth", Json::num(self.queue_depth as f64)),
             (
                 "latency_s",
                 Json::obj(vec![
@@ -180,6 +210,8 @@ mod tests {
         let m = ServeMetrics::default();
         let snap = m.snapshot();
         assert_eq!(snap.requests, 0);
+        assert_eq!(snap.shed_requests, 0);
+        assert_eq!(snap.queue_depth, 0);
         assert!(snap.latency_p50_s().is_none());
         assert!(snap.latency_p99_s().is_none());
         assert!(snap.mean_occupancy().is_none());
@@ -221,5 +253,24 @@ mod tests {
         let p50 = s.latency_p50_s().unwrap();
         assert!(p50 > 0.004 && p50 < 0.007, "{p50}");
         assert!(s.latency_p99_s().unwrap() >= p50);
+    }
+
+    #[test]
+    fn shed_counter_and_depth_gauge_track_admission() {
+        let m = ServeMetrics::default();
+        m.depth_add(5);
+        m.record_shed();
+        m.record_shed();
+        let s = m.snapshot();
+        assert_eq!(s.shed_requests, 2);
+        assert_eq!(s.queue_depth, 5);
+        m.depth_sub(3);
+        m.depth_sub(2);
+        let s = m.snapshot();
+        assert_eq!(s.queue_depth, 0, "balanced add/sub returns the gauge to zero");
+        assert_eq!(s.shed_requests, 2, "shed is an all-time counter");
+        let json = s.to_json();
+        assert_eq!(json.get("shed_requests").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(json.get("queue_depth").unwrap().as_usize().unwrap(), 0);
     }
 }

@@ -359,6 +359,7 @@ impl Server {
                 pending += 1;
                 tx.send(WorkItem { vertex, idx, reply: reply_tx.clone() })
                     .map_err(|_| anyhow::anyhow!("server request queue closed"))?;
+                self.metrics.depth_add(1);
             }
         }
         drop(reply_tx);
@@ -367,6 +368,7 @@ impl Server {
             let (idx, res) = reply_rx
                 .recv()
                 .map_err(|_| anyhow::anyhow!("serving workers terminated before replying"))?;
+            self.metrics.depth_sub(1);
             results[idx] = Some(res?);
         }
         self.metrics.record_request(vertices.len(), t.secs());
@@ -389,6 +391,83 @@ impl Server {
         Ok(self.classify(&[vertex])?.remove(0))
     }
 
+    /// Admission-controlled [`classify`](Self::classify): enqueue misses
+    /// with `try_send` instead of blocking.  When the bounded request
+    /// queue is full the request is *shed* — `Ok(None)` comes back, the
+    /// shed counter ticks, and nothing waits behind an unbounded backlog
+    /// (the HTTP frontend turns this into `429 Too Many Requests`).
+    ///
+    /// A bulk request that fills the queue partway through is still shed
+    /// as a whole: the items already enqueued are drained (their results
+    /// may warm the cache) and the caller gets `Ok(None)`, never a
+    /// partial answer.
+    pub fn try_classify(&self, vertices: &[Vid]) -> anyhow::Result<Option<Vec<Arc<Prediction>>>> {
+        anyhow::ensure!(!vertices.is_empty(), "classify: no vertices given");
+        let t = Timer::start();
+        let tx = {
+            let guard = lock_unpoisoned(&self.job_tx);
+            guard
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("server is shut down"))?
+                .clone()
+        };
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let mut results: Vec<Option<Arc<Prediction>>> = vec![None; vertices.len()];
+        let (mut hits, mut pending) = (0usize, 0usize);
+        let mut shed = false;
+        for (idx, &vertex) in vertices.iter().enumerate() {
+            if let Some(hit) = self.cache.get(vertex) {
+                hits += 1;
+                results[idx] = Some(hit);
+                continue;
+            }
+            match tx.try_send(WorkItem { vertex, idx, reply: reply_tx.clone() }) {
+                Ok(()) => {
+                    pending += 1;
+                    self.metrics.depth_add(1);
+                }
+                Err(mpsc::TrySendError::Full(_)) => {
+                    shed = true;
+                    break;
+                }
+                Err(mpsc::TrySendError::Disconnected(_)) => {
+                    anyhow::bail!("server request queue closed");
+                }
+            }
+        }
+        drop(reply_tx);
+        if shed {
+            // Drain what was already enqueued so the depth gauge stays
+            // balanced; the computed logits still populate the cache.
+            for _ in 0..pending {
+                if reply_rx.recv().is_ok() {
+                    self.metrics.depth_sub(1);
+                }
+            }
+            self.metrics.record_shed();
+            return Ok(None);
+        }
+        self.metrics.record_cache(hits, pending);
+        for _ in 0..pending {
+            let (idx, res) = reply_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("serving workers terminated before replying"))?;
+            self.metrics.depth_sub(1);
+            results[idx] = Some(res?);
+        }
+        self.metrics.record_request(vertices.len(), t.secs());
+        results
+            .into_iter()
+            .enumerate()
+            .map(|(i, slot)| {
+                slot.ok_or_else(|| {
+                    anyhow::anyhow!("internal: vertex slot {i} left unresolved")
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()
+            .map(Some)
+    }
+
     /// Hot-swap the model weights from an `HPGNNW01`/`HPGNNS01` checkpoint
     /// without restarting: in-flight batches finish under the old weights
     /// (and cannot pollute the cache — their version is stale), new
@@ -405,6 +484,12 @@ impl Server {
     /// Point-in-time serving metrics.
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
+    }
+
+    /// Version of the weights new requests are served under; bumps on
+    /// every successful [`reload_weights`](Self::reload_weights).
+    pub fn weight_version(&self) -> u64 {
+        read_unpoisoned(&self.weights).version
     }
 
     /// Live entries in the logits cache.
@@ -688,8 +773,10 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("other.bin");
         other.save(&path).unwrap();
+        let v0 = server.weight_version();
         server.reload_weights(&path).unwrap();
         assert_eq!(server.cache_len(), 0, "reload must clear the cache");
+        assert!(server.weight_version() > v0, "reload must bump the weight version");
         let c = server.classify_one(42).unwrap();
         assert_ne!(a.logits, c.logits, "new weights must change the logits");
         server.shutdown();
@@ -720,6 +807,24 @@ mod tests {
         let m = server.metrics();
         assert_eq!(m.requests, 6);
         assert_eq!(m.vertices, 48);
+    }
+
+    #[test]
+    fn try_classify_agrees_with_classify_and_balances_the_depth_gauge() {
+        let (_rt, server) = start(ServeConfig::default());
+        let blocking = server.classify(&[5, 77]).unwrap();
+        let admitted = server
+            .try_classify(&[5, 77])
+            .unwrap()
+            .expect("an idle queue must admit the request");
+        for (a, b) in blocking.iter().zip(&admitted) {
+            assert_eq!(a.logits, b.logits, "admission path changed the answer");
+        }
+        let m = server.metrics();
+        assert_eq!(m.shed_requests, 0);
+        assert_eq!(m.queue_depth, 0, "all replies collected; gauge must be balanced");
+        assert_eq!(m.requests, 2);
+        server.shutdown();
     }
 
     #[test]

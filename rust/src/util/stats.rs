@@ -93,6 +93,15 @@ impl Summary {
     pub fn median(&self) -> Option<f64> {
         self.percentile(50.0)
     }
+
+    /// Fold another summary's samples into this one — equivalent to
+    /// having [`add`](Self::add)ed every sample individually (used to
+    /// combine per-thread latency summaries after a load run).
+    pub fn merge(&mut self, other: &Summary) {
+        for &x in &other.samples {
+            self.add(x);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -141,6 +150,20 @@ mod tests {
         assert!(s.percentile(50.0).is_none());
         assert!(s.median().is_none());
         assert!(s.percentile(99.0).is_none());
+    }
+
+    #[test]
+    fn merge_matches_adding_individually() {
+        let (mut a, mut b, mut all) = (Summary::new(), Summary::new(), Summary::new());
+        for i in 0..50 {
+            let x = (i as f64).sin();
+            if i % 2 == 0 { a.add(x) } else { b.add(x) }
+            all.add(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert!((a.mean() - all.mean()).abs() < 1e-12);
+        assert_eq!(a.percentile(99.0), all.percentile(99.0));
     }
 
     #[test]

@@ -1,0 +1,438 @@
+//! Socket-level coverage of the HTTP serving frontend.
+//!
+//! The determinism invariant crosses the wire here: logits served over
+//! `POST /v1/classify` must be *byte-identical* to in-process
+//! `Server::classify_one` — possible because f32→f64 widening is exact
+//! and the JSON writer emits shortest-round-trip decimals.  Plus:
+//! admission control sheds with `429` + `Retry-After` when the bounded
+//! queue fills, `/v1/reload` hot-swaps weights and bumps the reported
+//! version, route errors are `Diagnostic`-shaped, and the
+//! `hp-gnn serve --listen` CLI serves the same API end to end.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use hp_gnn::graph::{generator, Graph, Vid};
+use hp_gnn::net::{api_router, HttpClient, HttpOptions, HttpServer};
+use hp_gnn::runtime::{Kind, Runtime, WeightState};
+use hp_gnn::sampler::neighbor::NeighborSampler;
+use hp_gnn::sampler::{MiniBatch, Sampler};
+use hp_gnn::serve::{ServeConfig, Server};
+use hp_gnn::util::json::Json;
+use hp_gnn::util::rng::Pcg64;
+
+fn tiny_graph() -> Arc<Graph> {
+    let mut g = generator::with_min_degree(
+        generator::rmat(400, 3200, Default::default(), 31),
+        1,
+        30,
+    );
+    g.feat_dim = 16;
+    g.num_classes = 4;
+    g.name = "net-http".to_string();
+    Arc::new(g)
+}
+
+fn start_server(cfg: ServeConfig, weight_seed: u64) -> Arc<Server> {
+    let rt = Runtime::reference();
+    let exe = rt.compile_role(cfg.model, &cfg.geometry, Kind::Forward).unwrap();
+    let weights = WeightState::init_glorot(&exe.spec.weight_shapes, weight_seed);
+    Arc::new(
+        Server::start(
+            &rt,
+            tiny_graph(),
+            Arc::new(NeighborSampler::new(4, vec![5, 3])),
+            cfg,
+            weights,
+        )
+        .unwrap(),
+    )
+}
+
+fn bind(server: &Arc<Server>) -> HttpServer {
+    HttpServer::bind(
+        "127.0.0.1:0",
+        Arc::new(api_router(Arc::clone(server))),
+        HttpOptions { log: false, ..HttpOptions::default() },
+    )
+    .unwrap()
+}
+
+/// The logits array of prediction `i` in a classify response, bit-cast
+/// back to f32 exactly as a client would reconstruct them.
+fn wire_logits(resp: &Json, i: usize) -> Vec<f32> {
+    resp.get("predictions").unwrap().as_arr().unwrap()[i]
+        .get("logits")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as f32)
+        .collect()
+}
+
+#[test]
+fn served_logits_are_byte_identical_to_in_process_classify() {
+    let server = start_server(ServeConfig::default(), 3);
+    let http = bind(&server);
+    let mut client = HttpClient::connect(&http.addr().to_string()).unwrap();
+
+    let vertices: Vec<Vid> = vec![2, 48, 77, 123, 199];
+    let truth: Vec<Vec<f32>> = vertices
+        .iter()
+        .map(|&v| server.classify_one(v).unwrap().logits.clone())
+        .collect();
+
+    // Single-vertex requests.
+    for (&v, want) in vertices.iter().zip(&truth) {
+        let resp = client
+            .request(
+                "POST",
+                "/v1/classify",
+                Some(&Json::obj(vec![("vertex", Json::num(v as f64))])),
+            )
+            .unwrap();
+        assert_eq!(resp.status, 200);
+        let body = resp.json().unwrap();
+        let got = wire_logits(&body, 0);
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(want) {
+            assert_eq!(a.to_bits(), b.to_bits(), "logits drifted over the wire");
+        }
+    }
+
+    // One bulk request: same bytes, input order preserved.
+    let bulk = client
+        .request(
+            "POST",
+            "/v1/classify",
+            Some(&Json::obj(vec![(
+                "vertices",
+                Json::arr(vertices.iter().map(|&v| Json::num(v as f64)).collect()),
+            )])),
+        )
+        .unwrap();
+    assert_eq!(bulk.status, 200);
+    let body = bulk.json().unwrap();
+    for (i, want) in truth.iter().enumerate() {
+        let got = wire_logits(&body, i);
+        for (a, b) in got.iter().zip(want) {
+            assert_eq!(a.to_bits(), b.to_bits(), "bulk logits drifted (vertex {i})");
+        }
+    }
+
+    // healthz and metrics describe the same server.
+    let health = client.request("GET", "/healthz", None).unwrap();
+    assert_eq!(health.status, 200);
+    let h = health.json().unwrap();
+    assert_eq!(h.get("status").unwrap().as_str().unwrap(), "ok");
+    assert_eq!(h.get("workers").unwrap().as_usize().unwrap(), server.num_workers());
+    assert_eq!(
+        h.get("weight_version").unwrap().as_usize().unwrap() as u64,
+        server.weight_version()
+    );
+
+    let metrics = client.request("GET", "/metrics", None).unwrap().json().unwrap();
+    assert!(metrics.get("requests").unwrap().as_usize().unwrap() >= vertices.len());
+    assert_eq!(metrics.get("shed_requests").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(metrics.get("queue_depth").unwrap().as_usize().unwrap(), 0);
+    metrics.get("latency_s").unwrap().get("p99").unwrap();
+
+    drop(client);
+    http.shutdown();
+}
+
+/// NeighborSampler wrapper that makes every target-directed sample slow,
+/// so a tiny queue fills deterministically under concurrent requests.
+#[derive(Clone)]
+struct SlowSampler(NeighborSampler);
+
+impl Sampler for SlowSampler {
+    fn num_layers(&self) -> usize {
+        self.0.num_layers()
+    }
+    fn clone_box(&self) -> Box<dyn Sampler> {
+        Box::new(self.clone())
+    }
+    fn sample(&self, g: &Graph, rng: &mut Pcg64) -> MiniBatch {
+        self.0.sample(g, rng)
+    }
+    fn sample_targets(
+        &self,
+        g: &Graph,
+        targets: &[Vid],
+        rng: &mut Pcg64,
+    ) -> anyhow::Result<MiniBatch> {
+        std::thread::sleep(Duration::from_millis(40));
+        self.0.sample_targets(g, targets, rng)
+    }
+    fn name(&self) -> String {
+        self.0.name()
+    }
+    fn expected_layer_sizes(&self, g: &Graph) -> Vec<usize> {
+        self.0.expected_layer_sizes(g)
+    }
+    fn expected_edge_counts(&self, g: &Graph) -> Vec<usize> {
+        self.0.expected_edge_counts(g)
+    }
+}
+
+#[test]
+fn full_queue_sheds_with_429_and_retry_after() {
+    // One slow worker, no coalescing, a one-slot queue: total pipeline
+    // capacity is ~4 items, so 10 concurrent requests must shed.
+    let rt = Runtime::reference();
+    let cfg = ServeConfig {
+        workers: 1,
+        max_batch: 1,
+        max_wait: Duration::ZERO,
+        queue_depth: 1,
+        ..ServeConfig::default()
+    };
+    let exe = rt.compile_role(cfg.model, &cfg.geometry, Kind::Forward).unwrap();
+    let weights = WeightState::init_glorot(&exe.spec.weight_shapes, 3);
+    let server = Arc::new(
+        Server::start(
+            &rt,
+            tiny_graph(),
+            Arc::new(SlowSampler(NeighborSampler::new(4, vec![5, 3]))),
+            cfg,
+            weights,
+        )
+        .unwrap(),
+    );
+    let http = bind(&server);
+    let addr = http.addr().to_string();
+
+    let clients = 10;
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = HttpClient::connect(&addr).unwrap();
+            let resp = client
+                .request(
+                    "POST",
+                    "/v1/classify",
+                    Some(&Json::obj(vec![("vertex", Json::num((c * 17 % 400) as f64))])),
+                )
+                .unwrap();
+            let retry_after = resp.header("retry-after").map(|v| v.to_string());
+            let body = resp.json().unwrap();
+            (resp.status, retry_after, body)
+        }));
+    }
+    let outcomes: Vec<(u16, Option<String>, Json)> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    let served = outcomes.iter().filter(|(s, _, _)| *s == 200).count();
+    let shed = outcomes.iter().filter(|(s, _, _)| *s == 429).count();
+    assert_eq!(served + shed, clients, "only 200 or 429 expected: {outcomes:?}");
+    assert!(served > 0, "admitted requests must still be answered");
+    assert!(shed > 0, "10 concurrent requests into a ~4-item pipeline must shed");
+    for (status, retry_after, body) in &outcomes {
+        if *status == 429 {
+            assert_eq!(retry_after.as_deref(), Some("1"), "429 must carry Retry-After");
+            let err = &body.get("errors").unwrap().as_arr().unwrap()[0];
+            assert_eq!(err.get("path").unwrap().as_str().unwrap(), "serving.queue");
+        }
+    }
+
+    // The shed counter agrees with what clients observed, and nothing
+    // is left in flight.
+    let mut client = HttpClient::connect(&addr).unwrap();
+    let metrics = client.request("GET", "/metrics", None).unwrap().json().unwrap();
+    assert_eq!(metrics.get("shed_requests").unwrap().as_usize().unwrap(), shed);
+    assert_eq!(metrics.get("queue_depth").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(metrics.get("requests").unwrap().as_usize().unwrap(), served);
+
+    drop(client);
+    http.shutdown();
+}
+
+#[test]
+fn reload_bumps_the_reported_weight_version_and_changes_logits() {
+    let server = start_server(ServeConfig::default(), 3);
+    let http = bind(&server);
+    let mut client = HttpClient::connect(&http.addr().to_string()).unwrap();
+
+    // Different weights on disk, same shapes.
+    let rt = Runtime::reference();
+    let cfg = ServeConfig::default();
+    let exe = rt.compile_role(cfg.model, &cfg.geometry, Kind::Forward).unwrap();
+    let other = WeightState::init_glorot(&exe.spec.weight_shapes, 99);
+    let dir = std::env::temp_dir().join(format!("hpgnn-net-http-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("rollout.bin");
+    other.save(&path).unwrap();
+
+    let v0 = client
+        .request("GET", "/healthz", None)
+        .unwrap()
+        .json()
+        .unwrap()
+        .get("weight_version")
+        .unwrap()
+        .as_usize()
+        .unwrap();
+    let before = server.classify_one(42).unwrap().logits.clone();
+
+    let resp = client
+        .request(
+            "POST",
+            "/v1/reload",
+            Some(&Json::obj(vec![("checkpoint", Json::str(path.to_str().unwrap()))])),
+        )
+        .unwrap();
+    assert_eq!(resp.status, 200, "{:?}", resp.json());
+    let body = resp.json().unwrap();
+    assert!(body.get("reloaded").unwrap().as_bool().unwrap());
+    let v1 = body.get("weight_version").unwrap().as_usize().unwrap();
+    assert!(v1 > v0, "reload must bump the weight version ({v0} -> {v1})");
+
+    // healthz agrees, and the server now answers under the new weights.
+    let h = client.request("GET", "/healthz", None).unwrap().json().unwrap();
+    assert_eq!(h.get("weight_version").unwrap().as_usize().unwrap(), v1);
+    let after = server.classify_one(42).unwrap().logits.clone();
+    assert_ne!(before, after, "new weights must change the logits");
+
+    // A bogus rollout is a 409 and leaves the version untouched.
+    let resp = client
+        .request(
+            "POST",
+            "/v1/reload",
+            Some(&Json::obj(vec![("checkpoint", Json::str("/no/such/file.bin"))])),
+        )
+        .unwrap();
+    assert_eq!(resp.status, 409);
+    let h = client.request("GET", "/healthz", None).unwrap().json().unwrap();
+    assert_eq!(h.get("weight_version").unwrap().as_usize().unwrap(), v1);
+
+    drop(client);
+    http.shutdown();
+}
+
+#[test]
+fn route_and_body_errors_are_diagnostic_shaped() {
+    let server = start_server(ServeConfig::default(), 3);
+    let http = bind(&server);
+    let mut client = HttpClient::connect(&http.addr().to_string()).unwrap();
+
+    // 404 with the route listing in the hint.
+    let resp = client.request("GET", "/nope", None).unwrap();
+    assert_eq!(resp.status, 404);
+    let err = resp.json().unwrap();
+    let first = err.get("errors").unwrap().as_arr().unwrap()[0].clone();
+    assert_eq!(first.get("path").unwrap().as_str().unwrap(), "/nope");
+    assert!(first.get("hint").unwrap().as_str().unwrap().contains("POST /v1/classify"));
+
+    // 405 with Allow.
+    let resp = client.request("DELETE", "/healthz", None).unwrap();
+    assert_eq!(resp.status, 405);
+    assert_eq!(resp.header("allow"), Some("GET"));
+
+    // Classify body mistakes are 400s that name the bad key.
+    for (body, expect_path) in [
+        (Json::obj(vec![]), "body"),
+        (Json::obj(vec![("vertices", Json::arr(vec![]))]), "body.vertices"),
+        (Json::obj(vec![("vertx", Json::num(1.0))]), "body.vertx"),
+        (
+            Json::obj(vec![
+                ("vertex", Json::num(1.0)),
+                ("vertices", Json::arr(vec![Json::num(2.0)])),
+            ]),
+            "body",
+        ),
+    ] {
+        let resp = client.request("POST", "/v1/classify", Some(&body)).unwrap();
+        assert_eq!(resp.status, 400, "{}", body.compact());
+        let err = resp.json().unwrap();
+        let first = &err.get("errors").unwrap().as_arr().unwrap()[0];
+        assert_eq!(first.get("path").unwrap().as_str().unwrap(), expect_path);
+    }
+
+    drop(client);
+    http.shutdown();
+}
+
+// ---- CLI end-to-end: hp-gnn serve --listen over a real socket ----------
+
+/// Kills the serving child even when an assertion fails mid-test.
+struct ChildGuard(std::process::Child);
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+#[test]
+fn cli_serve_listen_serves_the_http_api_end_to_end() {
+    use std::io::BufRead;
+
+    let exe = env!("CARGO_BIN_EXE_hp-gnn");
+    let dir = std::env::temp_dir().join(format!("hpgnn-listen-e2e-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let weights = dir.join("weights.bin");
+
+    let out = std::process::Command::new(exe)
+        .args(["train", "--dataset", "FL", "--scale", "0.004", "--steps", "2"])
+        .args(["--save", weights.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "train failed: {}", String::from_utf8_lossy(&out.stderr));
+
+    let child = std::process::Command::new(exe)
+        .args(["serve", "--checkpoint", weights.to_str().unwrap()])
+        .args(["--dataset", "FL", "--scale", "0.004", "--listen", "127.0.0.1:0"])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+    let mut child = ChildGuard(child);
+
+    // The CLI prints "listening on http://ADDR" once the socket is up.
+    let stdout = child.0.stdout.take().unwrap();
+    let mut lines = std::io::BufReader::new(stdout).lines();
+    let addr = loop {
+        match lines.next() {
+            Some(Ok(line)) => {
+                if let Some(rest) = line.strip_prefix("listening on http://") {
+                    break rest.trim().to_string();
+                }
+            }
+            other => panic!("server exited before listening: {other:?}"),
+        }
+    };
+
+    let mut client = HttpClient::connect(&addr).unwrap();
+    let health = client.request("GET", "/healthz", None).unwrap();
+    assert_eq!(health.status, 200);
+    assert_eq!(
+        health.json().unwrap().get("status").unwrap().as_str().unwrap(),
+        "ok"
+    );
+
+    let resp = client
+        .request(
+            "POST",
+            "/v1/classify",
+            Some(&Json::obj(vec![("vertex", Json::num(3.0))])),
+        )
+        .unwrap();
+    assert_eq!(resp.status, 200);
+    let body = resp.json().unwrap();
+    let preds = body.get("predictions").unwrap().as_arr().unwrap();
+    assert_eq!(preds.len(), 1);
+    assert_eq!(preds[0].get("vertex").unwrap().as_usize().unwrap(), 3);
+    assert!(!preds[0].get("logits").unwrap().as_arr().unwrap().is_empty());
+
+    let metrics = client.request("GET", "/metrics", None).unwrap().json().unwrap();
+    assert!(metrics.get("requests").unwrap().as_usize().unwrap() >= 1);
+    metrics.get("shed_requests").unwrap();
+    metrics.get("queue_depth").unwrap();
+
+    drop(client);
+    // ChildGuard kills the serving process on drop.
+}

@@ -79,6 +79,8 @@ fn random_spec(rng: &mut Pcg64) -> ProgramSpec {
             max_wait_us: rng.below(10_000),
             queue_depth: 1 + rng.index(4096),
             cache: rng.index(2) == 0,
+            listen: (rng.index(2) == 0)
+                .then(|| format!("127.0.0.1:{}", rng.index(65536))),
         });
     }
     if rng.index(4) == 0 {
