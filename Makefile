@@ -12,7 +12,7 @@ BENCH_PROFILE ?= full
 BENCH_OUT ?= $(abspath BENCH_hotpath.json)
 SERVE_OUT ?= $(abspath BENCH_serve.json)
 
-.PHONY: build test lint check-xla fmt artifacts clean-artifacts bench-hotpath bench-serve
+.PHONY: build test lint lint-baseline check-xla fmt artifacts clean-artifacts bench-hotpath bench-serve
 
 build:
 	cargo build --release
@@ -20,11 +20,18 @@ build:
 test:
 	cargo test -q
 
-# In-repo static analysis: machine-checks the determinism (D1-D3) and
-# serving-robustness (R1-R2) contracts over rust/src.  Nonzero exit on
-# any finding; see README "Static analysis" for rules and pragmas.
+# In-repo static analysis: machine-checks the determinism (D1-D3),
+# serving-robustness (R1-R3), lock-order (C1), and hot-path allocation
+# (A1) contracts over rust/src, ratcheted against lint_baseline.json.
+# Nonzero exit on any fresh finding or stale baseline entry; see README
+# "Static analysis" for rules, pragmas, and the baseline workflow.
 lint:
-	cargo run -q --release --bin hp-gnn -- lint
+	cargo run -q --release --bin hp-gnn -- lint --baseline lint_baseline.json
+
+# Regenerate the accepted-findings baseline after burning down (or
+# deliberately accepting) findings.  Commit the resulting file.
+lint-baseline:
+	cargo run -q --release --bin hp-gnn -- lint --baseline lint_baseline.json --update-baseline
 
 # The PJRT path must keep compiling even without an XLA install.
 check-xla:

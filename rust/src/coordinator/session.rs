@@ -44,6 +44,7 @@ use crate::sampler::values::{attach_values, GnnModel};
 use crate::sampler::Sampler;
 use crate::util::rng::{Pcg64, SplitMix64};
 use crate::util::stats::Timer;
+use crate::util::sync::lock_unpoisoned;
 
 /// Salt mixed into `cfg.seed` for evaluation sampling, so held-out batches
 /// never collide with a training step's stream.
@@ -354,7 +355,7 @@ impl<'rt> TrainingSession<'rt> {
         let threads = self.cfg.sampler_threads.max(1);
         let cap = CLAIM_WINDOW * threads;
         let counter = Arc::new(AtomicUsize::new(self.step));
-        *self.window.consumed.lock().unwrap() = self.step;
+        *lock_unpoisoned(&self.window.consumed) = self.step;
         let (tx, rx) = mpsc::sync_channel::<(usize, anyhow::Result<Prepared>)>(2 * threads);
         let feat_dim = self.geom.f[0];
         let num_classes = self.geom.num_classes();
@@ -376,7 +377,7 @@ impl<'rt> TrainingSession<'rt> {
                 // and under the step limit (timeout guards a notify
                 // racing the wait).
                 {
-                    let mut consumed = window.consumed.lock().unwrap();
+                    let mut consumed = lock_unpoisoned(&window.consumed);
                     while !stop.load(Ordering::Relaxed)
                         && (k >= *consumed + cap
                             || k >= window.limit.load(Ordering::Relaxed))
@@ -384,7 +385,7 @@ impl<'rt> TrainingSession<'rt> {
                         let (guard, _timeout) = window
                             .advanced
                             .wait_timeout(consumed, std::time::Duration::from_millis(50))
-                            .unwrap();
+                            .unwrap_or_else(std::sync::PoisonError::into_inner);
                         consumed = guard;
                     }
                 }
@@ -518,7 +519,7 @@ impl<'rt> TrainingSession<'rt> {
         self.metrics.t_iteration.add(iter_t.secs());
         self.step += 1;
         // Advance the producers' claim window.
-        *self.window.consumed.lock().unwrap() = self.step;
+        *lock_unpoisoned(&self.window.consumed) = self.step;
         self.window.advanced.notify_all();
 
         let report = StepReport { step: k, loss, prep_s: prepared.prep_s, exec_s, t_gnn_sim };

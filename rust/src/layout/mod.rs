@@ -43,6 +43,7 @@ impl Geometry {
     }
 
     pub fn num_classes(&self) -> usize {
+        // lint:allow(R3): validate() rejects geometries with empty f, so last() is Some
         *self.f.last().unwrap()
     }
 

@@ -1,0 +1,229 @@
+//! Finding fingerprints and the ratchet baseline.
+//!
+//! A fingerprint identifies a finding *stably across edits elsewhere in
+//! the file*: FNV-1a 64 over `rule|path|enclosing-fn|snippet|occurrence`
+//! — deliberately **no line number**, so inserting code above a known
+//! finding does not churn the baseline; `occurrence` disambiguates
+//! identical snippets within the same fn (0-based, in line order).
+//!
+//! The baseline file (`lint_baseline.json`, repo root) is the set of
+//! accepted findings.  `hp-gnn lint --baseline <file>` then fails only
+//! on *fresh* findings (not in the baseline — the ratchet never admits
+//! new debt) or *stale* entries (in the baseline but no longer found —
+//! the debt shrank, so the file must be regenerated via
+//! `make lint-baseline` to lock in the progress).
+
+use crate::util::json::Json;
+
+use super::Finding;
+
+/// FNV-1a 64-bit.
+pub fn fnv1a64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The fingerprint input, hashed to 16 hex chars.
+pub fn fingerprint(rule: &str, path: &str, func: &str, snippet: &str, occurrence: usize) -> String {
+    format!("{:016x}", fnv1a64(&format!("{rule}|{path}|{func}|{snippet}|{occurrence}")))
+}
+
+/// Compute and store the fingerprint of every finding.  `line_info`
+/// maps `(path, 1-based line)` to the enclosing fn name (empty when
+/// top-level) and the trimmed scrubbed snippet of the line.  Callers
+/// sort findings by `(path, line)` first so occurrence indices are
+/// deterministic.
+pub fn assign_fingerprints<F>(findings: &mut [Finding], mut line_info: F)
+where
+    F: FnMut(&str, usize) -> (String, String),
+{
+    let mut seen: std::collections::BTreeMap<String, usize> = std::collections::BTreeMap::new();
+    for f in findings.iter_mut() {
+        let (func, snippet) = line_info(&f.path, f.line);
+        let key = format!("{}|{}|{func}|{snippet}", f.rule_id_str(), f.path);
+        let occ = seen.entry(key).or_insert(0);
+        f.fingerprint = fingerprint(f.rule_id_str(), &f.path, &func, &snippet, *occ);
+        *occ += 1;
+    }
+}
+
+/// One accepted finding in the baseline file (rule and path ride along
+/// for human review of the file; the fingerprint is the identity).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Entry {
+    pub fingerprint: String,
+    pub rule: String,
+    pub path: String,
+}
+
+/// The accepted-findings set.
+#[derive(Debug, Clone, Default)]
+pub struct Baseline {
+    pub entries: Vec<Entry>,
+}
+
+impl Baseline {
+    pub fn from_findings(findings: &[Finding]) -> Baseline {
+        Baseline {
+            entries: findings
+                .iter()
+                .map(|f| Entry {
+                    fingerprint: f.fingerprint.clone(),
+                    rule: f.rule_id_str().to_string(),
+                    path: f.path.clone(),
+                })
+                .collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tool", Json::str("hp-gnn-lint")),
+            ("schema_version", Json::num(1.0)),
+            (
+                "entries",
+                Json::Arr(
+                    self.entries
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("fingerprint", Json::str(&e.fingerprint)),
+                                ("rule", Json::str(&e.rule)),
+                                ("path", Json::str(&e.path)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn parse(text: &str) -> Result<Baseline, String> {
+        let j = Json::parse(text).map_err(|e| format!("baseline: {e:?}"))?;
+        let entries = j
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .map_err(|e| format!("baseline: {e:?}"))?
+            .iter()
+            .map(|e| {
+                Ok(Entry {
+                    fingerprint: e
+                        .get("fingerprint")
+                        .and_then(|v| v.as_str())
+                        .map_err(|e| format!("baseline entry: {e:?}"))?
+                        .to_string(),
+                    rule: e
+                        .get("rule")
+                        .and_then(|v| v.as_str())
+                        .map_err(|e| format!("baseline entry: {e:?}"))?
+                        .to_string(),
+                    path: e
+                        .get("path")
+                        .and_then(|v| v.as_str())
+                        .map_err(|e| format!("baseline entry: {e:?}"))?
+                        .to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(Baseline { entries })
+    }
+}
+
+/// The ratchet verdict: both sides must be empty to pass.
+#[derive(Debug, Default)]
+pub struct Delta {
+    /// Indices (into the findings slice) of findings absent from the
+    /// baseline — new debt, always a failure.
+    pub fresh: Vec<usize>,
+    /// Baseline entries no longer found — fixed debt; regenerate the
+    /// baseline so the ratchet tightens.
+    pub stale: Vec<Entry>,
+}
+
+impl Delta {
+    pub fn is_clean(&self) -> bool {
+        self.fresh.is_empty() && self.stale.is_empty()
+    }
+}
+
+pub fn diff(findings: &[Finding], baseline: &Baseline) -> Delta {
+    let accepted: std::collections::BTreeSet<&str> =
+        baseline.entries.iter().map(|e| e.fingerprint.as_str()).collect();
+    let present: std::collections::BTreeSet<&str> =
+        findings.iter().map(|f| f.fingerprint.as_str()).collect();
+    Delta {
+        fresh: findings
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| !accepted.contains(f.fingerprint.as_str()))
+            .map(|(i, _)| i)
+            .collect(),
+        stale: baseline
+            .entries
+            .iter()
+            .filter(|e| !present.contains(e.fingerprint.as_str()))
+            .cloned()
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::RuleId;
+    use super::*;
+
+    fn finding(path: &str, line: usize, rule: RuleId) -> Finding {
+        Finding {
+            path: path.to_string(),
+            line,
+            rule: Some(rule),
+            reason: "r".to_string(),
+            fingerprint: String::new(),
+        }
+    }
+
+    #[test]
+    fn fingerprints_ignore_line_numbers_but_count_occurrences() {
+        let mut a = vec![finding("x.rs", 10, RuleId::R3), finding("x.rs", 90, RuleId::R3)];
+        // Same fn, same snippet, different lines: only the occurrence
+        // index separates them.
+        assign_fingerprints(&mut a, |_, _| ("f".into(), "x.unwrap()".into()));
+        assert_ne!(a[0].fingerprint, a[1].fingerprint);
+
+        let mut b = vec![finding("x.rs", 33, RuleId::R3), finding("x.rs", 150, RuleId::R3)];
+        assign_fingerprints(&mut b, |_, _| ("f".into(), "x.unwrap()".into()));
+        assert_eq!(a[0].fingerprint, b[0].fingerprint, "line shifts must not churn");
+        assert_eq!(a[1].fingerprint, b[1].fingerprint);
+    }
+
+    #[test]
+    fn baseline_round_trips_through_json() {
+        let mut f = vec![finding("a.rs", 1, RuleId::C1), finding("b.rs", 2, RuleId::A1)];
+        assign_fingerprints(&mut f, |p, _| (String::new(), p.to_string()));
+        let base = Baseline::from_findings(&f);
+        let again = Baseline::parse(&base.to_json().pretty()).unwrap();
+        assert_eq!(again.entries, base.entries);
+        assert_eq!(again.entries[0].rule, "C1");
+    }
+
+    #[test]
+    fn diff_separates_fresh_from_stale() {
+        let mut f = vec![finding("a.rs", 1, RuleId::R3), finding("a.rs", 2, RuleId::C1)];
+        assign_fingerprints(&mut f, |_, l| (String::new(), format!("line{l}")));
+        let base = Baseline::from_findings(&f[..1]);
+
+        let d = diff(&f, &base);
+        assert_eq!(d.fresh, vec![1], "the C1 finding is new debt");
+        assert!(d.stale.is_empty());
+
+        let d = diff(&f[1..], &base);
+        assert_eq!(d.fresh, vec![0]);
+        assert_eq!(d.stale.len(), 1, "the accepted R3 finding disappeared");
+        assert!(!d.is_clean());
+        assert!(diff(&f[..1], &base).is_clean());
+    }
+}

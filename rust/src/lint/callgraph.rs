@@ -1,0 +1,478 @@
+//! Crate-wide call graph over the parsed items of every `rust/src` file.
+//!
+//! Extracts call sites from the token stream (path calls `a::b::f(…)`,
+//! bare calls `f(…)`, method calls `recv.m(…)`) and resolves each to an
+//! in-crate function by name heuristics:
+//!
+//! * **path** — normalize `crate::`/`self::`/`super::`/`Self::`, then
+//!   match the segment chain as a `::`-boundary suffix of a known
+//!   qualified path, preferring the caller's own module.  Unmatched
+//!   paths are *external* (std / vendored crates).
+//! * **bare** — free functions only (Rust cannot import associated fns
+//!   into bare scope): the caller's module first, else a unique
+//!   crate-wide free fn; several candidates is *ambiguous*.
+//! * **method** — `self.m(…)` resolves inside the caller's own impl
+//!   first; other receivers consult a std-method blocklist, then a
+//!   unique crate-wide `self`-taking fn of that name.
+//!
+//! Macros (`ident!(…)`), uppercase path tails (`Mode::Fast(…)` tuple
+//! variants), keywords, and `#[cfg(test)]` lines never become calls.
+//! The builder reports resolution stats (the `--json` report surfaces
+//! them and CI asserts ≥ 80%), and records which `.expect(…)` sites
+//! resolved to an *in-crate* method so the R3 panic scan can exempt
+//! them (the JSON parser's `Parser::expect` is not `Option::expect`).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::items::{FileItems, FnItem};
+use super::source::SourceFile;
+use super::token::Tok;
+
+/// Keywords that can precede `(` without being calls.
+const KEYWORDS: &[&str] = &[
+    "if", "else", "while", "for", "loop", "match", "return", "fn", "let", "mut", "ref",
+    "move", "in", "as", "use", "pub", "impl", "trait", "struct", "enum", "mod", "where",
+    "unsafe", "dyn", "break", "continue", "const", "static", "type", "crate", "super",
+    "self", "Self", "await", "async",
+];
+
+/// Method names resolved as std/external without consulting the crate
+/// index (only for non-`self` receivers — `self.expect(…)` still
+/// resolves inside its own impl first).
+const STD_METHODS: &[&str] = &[
+    "clone", "into", "to_string", "to_owned", "to_vec", "as_str", "as_ref", "as_mut",
+    "as_bytes", "as_slice", "unwrap", "unwrap_or", "unwrap_or_else", "unwrap_or_default",
+    "expect", "ok", "err", "iter", "iter_mut", "into_iter", "len", "is_empty", "push",
+    "pop", "insert", "remove", "get", "get_mut", "contains", "contains_key", "map",
+    "map_err", "and_then", "or_else", "filter", "filter_map", "flat_map", "collect",
+    "extend", "extend_from_slice", "join", "send", "recv", "recv_timeout", "try_recv",
+    "lock", "read", "write", "flush", "write_all", "read_to_end", "read_to_string",
+    "read_exact", "take", "replace", "clear", "sort", "sort_by", "sort_by_key",
+    "sort_unstable", "dedup", "min", "max", "abs", "sqrt", "powi", "powf", "exp", "ln",
+    "floor", "ceil", "round", "split", "splitn", "trim", "trim_start", "trim_end",
+    "starts_with", "ends_with", "strip_prefix", "strip_suffix", "parse", "wait",
+    "wait_timeout", "notify_all", "notify_one", "spawn", "first", "last", "chars",
+    "bytes", "windows", "chunks", "chunks_exact", "fill", "copy_from_slice",
+    "clone_from_slice", "swap", "reserve", "truncate", "resize", "drain", "retain",
+    "position", "find", "any", "all", "count", "sum", "product", "fold", "rev", "zip",
+    "enumerate", "skip", "skip_while", "take_while", "step_by", "saturating_sub",
+    "saturating_add", "saturating_mul", "checked_add", "checked_sub", "checked_mul",
+    "checked_div", "wrapping_add", "wrapping_mul", "rotate_left", "rotate_right",
+    "to_le_bytes", "to_be_bytes", "try_into", "into_inner", "borrow", "borrow_mut",
+    "next", "next_back", "peek", "peekable", "eq", "ne", "cmp", "partial_cmp", "hash",
+    "fmt", "min_by", "max_by", "min_by_key", "max_by_key", "load", "store", "fetch_add",
+    "fetch_sub", "fetch_max", "compare_exchange", "elapsed", "as_secs_f64", "as_millis",
+    "as_micros", "duration_since", "keys", "values", "values_mut", "entry", "or_insert",
+    "or_insert_with", "to_uppercase", "to_lowercase", "to_ascii_lowercase",
+    "split_whitespace", "lines", "is_finite", "is_nan", "is_some", "is_none", "is_ok",
+    "is_err", "mul_add", "exists", "is_file", "is_dir", "display", "extension",
+    "file_name", "to_path_buf", "with_extension", "set_nonblocking", "shutdown",
+    "local_addr", "peer_addr", "accept", "incoming", "connect",
+];
+
+/// How one extracted call resolved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Resolution {
+    /// Resolved to `fns[idx]` (global index).
+    InCrate(usize),
+    /// std / vendored crate — out of scope, counts as understood.
+    External,
+    /// Several in-crate candidates and no tiebreak.
+    Ambiguous,
+}
+
+/// Resolution statistics, surfaced in `hp-gnn lint --json` and ratcheted
+/// by CI (`resolution_pct() >= 80`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Stats {
+    /// Non-test function items across the crate.
+    pub functions: usize,
+    /// Call sites extracted from non-test code.
+    pub calls: usize,
+    pub resolved: usize,
+    pub external: usize,
+    pub ambiguous: usize,
+}
+
+impl Stats {
+    /// Share of call sites the graph understands (resolved or provably
+    /// external), in percent.
+    pub fn resolution_pct(&self) -> f64 {
+        if self.calls == 0 {
+            return 100.0;
+        }
+        100.0 * (self.resolved + self.external) as f64 / self.calls as f64
+    }
+}
+
+/// The crate-wide graph: all fn items (global indices), caller→callee
+/// edges with one representative call-site line, and the bookkeeping the
+/// whole-program rules need.
+#[derive(Debug)]
+pub struct CrateGraph {
+    /// Every fn item, files concatenated in input order.
+    pub fns: Vec<FnItem>,
+    /// Per input file, the global index of its first fn (parallel to the
+    /// `build` input slice) — translates `FileItems::fn_of_line`.
+    pub offsets: Vec<usize>,
+    /// caller → sorted `(callee, call line)`, deduped per callee.
+    pub edges: BTreeMap<usize, Vec<(usize, usize)>>,
+    pub stats: Stats,
+    /// `(file, line, method)` sites where a method call resolved to an
+    /// in-crate fn — consumed by R3's `.expect(` exemption.
+    pub in_crate_methods: BTreeSet<(String, usize, String)>,
+}
+
+impl CrateGraph {
+    /// Global fn index for a 0-based line of input file `fi`, if the
+    /// line sits inside a fn body.
+    pub fn fn_at(&self, files: &[(SourceFile, FileItems)], fi: usize, line0: usize) -> Option<usize> {
+        files[fi].1.fn_of_line.get(line0).copied().flatten().map(|l| self.offsets[fi] + l)
+    }
+}
+
+struct Index {
+    /// name → global indices of non-test fns.
+    by_name: BTreeMap<String, Vec<usize>>,
+}
+
+pub fn build(files: &[(SourceFile, FileItems)]) -> CrateGraph {
+    let mut fns: Vec<FnItem> = Vec::new();
+    let mut offsets = Vec::with_capacity(files.len());
+    for (_, items) in files {
+        offsets.push(fns.len());
+        fns.extend(items.fns.iter().cloned());
+    }
+
+    let mut by_name: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    for (gi, f) in fns.iter().enumerate() {
+        if !f.is_test {
+            by_name.entry(f.name.clone()).or_default().push(gi);
+        }
+    }
+    let index = Index { by_name };
+
+    let mut stats = Stats { functions: fns.iter().filter(|f| !f.is_test).count(), ..Stats::default() };
+    let mut edge_map: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+    let mut in_crate_methods: BTreeSet<(String, usize, String)> = BTreeSet::new();
+
+    for (fi, (src, items)) in files.iter().enumerate() {
+        let toks = &items.toks;
+        for i in 0..toks.len() {
+            let t = &toks[i];
+            if !t.is_ident() {
+                continue;
+            }
+            if call_paren(toks, i).is_none() {
+                continue;
+            }
+            let line0 = t.line - 1;
+            if src.lines.get(line0).map(|l| l.is_test).unwrap_or(true) {
+                continue;
+            }
+            let prev = i.checked_sub(1).map(|p| toks[p].text.as_str()).unwrap_or("");
+            let caller_local = match items.fn_of_line.get(line0).copied().flatten() {
+                Some(c) => c,
+                None => continue, // call outside any fn body (const exprs)
+            };
+            let caller = offsets[fi] + caller_local;
+            if fns[caller].is_test {
+                continue;
+            }
+
+            let res = if prev == "::" {
+                // Last segment of a path call: walk back to the chain
+                // start and resolve the whole path.
+                if starts_upper(&t.text) {
+                    continue; // tuple-variant / unit-struct construction
+                }
+                let mut j = i;
+                while j >= 2 && toks[j - 1].is("::") && toks[j - 2].is_ident() {
+                    j -= 2;
+                }
+                if j >= 1 && (toks[j - 1].is("::") || toks[j - 1].is(".")) {
+                    // `<T as Trait>::f(…)` / `Vec::<u32>::new(…)` — a
+                    // qualified or generic-applied path; treated as
+                    // external dispatch (documented caveat).
+                    Resolution::External
+                } else {
+                    let segs: Vec<String> =
+                        (j..=i).step_by(2).map(|k| toks[k].text.clone()).collect();
+                    resolve_path(&index, &fns, &fns[caller], &segs)
+                }
+            } else if prev == "." {
+                let self_recv = i >= 2 && toks[i - 2].is("self") && toks[i - 2].is_ident();
+                resolve_method(&index, &fns, &fns[caller], &t.text, self_recv)
+            } else {
+                if KEYWORDS.contains(&t.text.as_str()) || starts_upper(&t.text) || prev == "fn" {
+                    continue;
+                }
+                resolve_bare(&index, &fns, &fns[caller], &t.text)
+            };
+
+            stats.calls += 1;
+            match res {
+                Resolution::InCrate(callee) => {
+                    stats.resolved += 1;
+                    edge_map.entry((caller, callee)).or_insert(t.line);
+                    if prev == "." {
+                        in_crate_methods.insert((src.rel_path.clone(), t.line, t.text.clone()));
+                    }
+                }
+                Resolution::External => stats.external += 1,
+                Resolution::Ambiguous => stats.ambiguous += 1,
+            }
+        }
+    }
+
+    let mut edges: BTreeMap<usize, Vec<(usize, usize)>> = BTreeMap::new();
+    for (&(from, to), &line) in &edge_map {
+        edges.entry(from).or_default().push((to, line));
+    }
+
+    CrateGraph { fns, offsets, edges, stats, in_crate_methods }
+}
+
+fn starts_upper(s: &str) -> bool {
+    s.chars().next().map(|c| c.is_ascii_uppercase()).unwrap_or(false)
+}
+
+/// Is token `i` (an ident) followed — possibly through a turbofish
+/// `::<…>` — by a call `(`?  Returns the index of that `(`.
+fn call_paren(toks: &[Tok], i: usize) -> Option<usize> {
+    let mut j = i + 1;
+    if toks.get(j).map(|t| t.is("::")).unwrap_or(false)
+        && toks.get(j + 1).map(|t| t.is("<")).unwrap_or(false)
+    {
+        let mut angle = 0i32;
+        j += 1;
+        while j < toks.len() {
+            match toks[j].text.as_str() {
+                "<" => angle += 1,
+                ">" => {
+                    angle -= 1;
+                    if angle == 0 {
+                        j += 1;
+                        break;
+                    }
+                }
+                ";" | "{" => return None,
+                _ => {}
+            }
+            j += 1;
+        }
+    }
+    if toks.get(j).map(|t| t.is("(")).unwrap_or(false) {
+        Some(j)
+    } else {
+        None
+    }
+}
+
+fn resolve_path(index: &Index, fns: &[FnItem], caller: &FnItem, segs: &[String]) -> Resolution {
+    // Normalize the leading segment against the caller's position.
+    let mut module: Vec<String> =
+        caller.module.split("::").filter(|s| !s.is_empty()).map(str::to_string).collect();
+    let mut rest: &[String] = segs;
+    let mut key_segs: Vec<String> = Vec::new();
+    match segs[0].as_str() {
+        "crate" => rest = &segs[1..],
+        "self" => {
+            rest = &segs[1..];
+            key_segs = module;
+        }
+        "super" => {
+            rest = segs;
+            while rest.first().map(|s| s == "super").unwrap_or(false) {
+                module.pop();
+                rest = &rest[1..];
+            }
+            key_segs = module;
+        }
+        "Self" => {
+            rest = &segs[1..];
+            key_segs = module;
+            if let Some(t) = &caller.impl_type {
+                key_segs.push(t.clone());
+            }
+        }
+        "std" | "core" | "alloc" => return Resolution::External,
+        _ => {}
+    }
+    key_segs.extend(rest.iter().cloned());
+    if key_segs.is_empty() {
+        return Resolution::External;
+    }
+    let key = key_segs.join("::");
+    let tail = key_segs.last().unwrap();
+
+    let mut hits: Vec<usize> = Vec::new();
+    for &gi in index.by_name.get(tail).map(|v| v.as_slice()).unwrap_or(&[]) {
+        let q = &fns[gi].qpath;
+        if q == &key || q.ends_with(&format!("::{key}")) {
+            hits.push(gi);
+        }
+    }
+    pick(fns, caller, hits, /* external_when_empty= */ true)
+}
+
+fn resolve_bare(index: &Index, fns: &[FnItem], caller: &FnItem, name: &str) -> Resolution {
+    let free: Vec<usize> = index
+        .by_name
+        .get(name)
+        .map(|v| v.iter().copied().filter(|&gi| fns[gi].impl_type.is_none()).collect())
+        .unwrap_or_default();
+    pick(fns, caller, free, true)
+}
+
+fn resolve_method(
+    index: &Index,
+    fns: &[FnItem],
+    caller: &FnItem,
+    name: &str,
+    self_recv: bool,
+) -> Resolution {
+    if self_recv {
+        if let Some(impl_type) = &caller.impl_type {
+            let same_impl: Vec<usize> = index
+                .by_name
+                .get(name)
+                .map(|v| {
+                    v.iter()
+                        .copied()
+                        .filter(|&gi| fns[gi].impl_type.as_deref() == Some(impl_type))
+                        .collect()
+                })
+                .unwrap_or_default();
+            match same_impl.len() {
+                1 => return Resolution::InCrate(same_impl[0]),
+                n if n > 1 => return Resolution::Ambiguous,
+                _ => {}
+            }
+        }
+    }
+    if STD_METHODS.contains(&name) {
+        return Resolution::External;
+    }
+    let methods: Vec<usize> = index
+        .by_name
+        .get(name)
+        .map(|v| v.iter().copied().filter(|&gi| fns[gi].has_self).collect())
+        .unwrap_or_default();
+    pick(fns, caller, methods, true)
+}
+
+/// Same-module preference, then uniqueness; empty resolves external
+/// (std or vendored) and several candidates is ambiguous.
+fn pick(fns: &[FnItem], caller: &FnItem, hits: Vec<usize>, external_when_empty: bool) -> Resolution {
+    if hits.is_empty() {
+        return if external_when_empty { Resolution::External } else { Resolution::Ambiguous };
+    }
+    if hits.len() == 1 {
+        return Resolution::InCrate(hits[0]);
+    }
+    let local: Vec<usize> =
+        hits.iter().copied().filter(|&gi| fns[gi].module == caller.module).collect();
+    if local.len() == 1 {
+        return Resolution::InCrate(local[0]);
+    }
+    Resolution::Ambiguous
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::items;
+
+    fn graph(files: &[(&str, &str)]) -> (Vec<(SourceFile, FileItems)>, CrateGraph) {
+        let parsed: Vec<(SourceFile, FileItems)> = files
+            .iter()
+            .map(|(rel, text)| {
+                let src = SourceFile::parse(rel, text);
+                let it = items::parse(&src);
+                (src, it)
+            })
+            .collect();
+        let g = build(&parsed);
+        (parsed, g)
+    }
+
+    fn edge_names(g: &CrateGraph) -> Vec<(String, String)> {
+        let mut out = Vec::new();
+        for (&from, tos) in &g.edges {
+            for &(to, _) in tos {
+                out.push((g.fns[from].qpath.clone(), g.fns[to].qpath.clone()));
+            }
+        }
+        out.sort();
+        out
+    }
+
+    #[test]
+    fn known_edges_resolve_across_files() {
+        let (_, g) = graph(&[
+            (
+                "serve/server.rs",
+                "impl Server {\n    pub fn classify(&self) -> u32 {\n        let p = crate::util::helper(1);\n        self.lookup(p)\n    }\n    fn lookup(&self, p: u32) -> u32 {\n        decode(p)\n    }\n}\n\nfn decode(p: u32) -> u32 {\n    p\n}\n",
+            ),
+            ("util/mod.rs", "pub fn helper(x: u32) -> u32 {\n    x + 1\n}\n"),
+        ]);
+        assert_eq!(
+            edge_names(&g),
+            vec![
+                ("serve::server::Server::classify".into(), "serve::server::Server::lookup".into()),
+                ("serve::server::Server::classify".into(), "util::helper".into()),
+                ("serve::server::Server::lookup".into(), "serve::server::decode".into()),
+            ]
+        );
+        assert_eq!(g.stats.calls, 3);
+        assert_eq!(g.stats.resolved, 3);
+        assert!((g.stats.resolution_pct() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn std_and_macro_and_variant_calls_do_not_make_edges() {
+        let (_, g) = graph(&[(
+            "a.rs",
+            "fn f() -> Vec<u32> {\n    let mut v = Vec::new();\n    v.push(Some(1));\n    format!(\"{v:?}\");\n    std::mem::drop(&v);\n    v.iter().map(|x| x.unwrap()).collect()\n}\n",
+        )]);
+        assert!(g.edges.is_empty(), "{:?}", edge_names(&g));
+        assert_eq!(g.stats.resolved, 0);
+        // Everything extracted was recognizably external.
+        assert_eq!(g.stats.ambiguous, 0);
+        assert!(g.stats.calls > 0);
+    }
+
+    #[test]
+    fn self_method_resolves_in_own_impl_and_is_recorded() {
+        let (_, g) = graph(&[(
+            "util/json.rs",
+            "struct Parser;\nimpl Parser {\n    fn expect(&mut self, b: u8) {}\n    fn object(&mut self) {\n        self.expect(1);\n    }\n}\n",
+        )]);
+        assert_eq!(
+            edge_names(&g),
+            vec![("util::json::Parser::object".into(), "util::json::Parser::expect".into())]
+        );
+        assert!(g.in_crate_methods.contains(&("util/json.rs".into(), 5, "expect".into())));
+    }
+
+    #[test]
+    fn duplicate_method_names_are_ambiguous_not_guessed() {
+        let (_, g) = graph(&[(
+            "b.rs",
+            "struct A;\nstruct B;\nimpl A {\n    fn run(&self) {}\n}\nimpl B {\n    fn run(&self) {}\n}\nfn drive(x: &A) {\n    x.run();\n}\n",
+        )]);
+        assert!(g.edges.is_empty());
+        assert_eq!(g.stats.ambiguous, 1);
+    }
+
+    #[test]
+    fn test_code_is_invisible_to_the_graph() {
+        let (_, g) = graph(&[(
+            "c.rs",
+            "fn prod() {}\n\n#[cfg(test)]\nmod tests {\n    fn helper() {\n        super::prod();\n    }\n}\n",
+        )]);
+        assert_eq!(g.stats.calls, 0);
+        assert_eq!(g.stats.functions, 1);
+    }
+}

@@ -1,0 +1,396 @@
+//! Item extraction: modules, `impl` blocks, functions, loop spans.
+//!
+//! Walks the token stream of one scrubbed file ([`super::token`]) with a
+//! brace-depth state machine and produces every function item with its
+//! *qualified path* (`serve::server::Server::classify`), receiver-ness,
+//! and body line span — plus two per-line attributions the whole-program
+//! rules consume directly: the innermost enclosing function and the loop
+//! nesting depth (for the A1 hot-path allocation rule).
+//!
+//! Heuristic by design (no type information): inline `mod name { … }`
+//! extends the module path derived from the file's `rust/src/`-relative
+//! location, `impl Trait for Type` attributes to `Type`, and a closure's
+//! body attributes to the enclosing `fn` — which is exactly what the R3
+//! reachability pass wants (a panic inside a worker closure belongs to
+//! the thread body that runs it).
+
+use super::source::SourceFile;
+use super::token::{tokenize, Tok};
+
+/// One `fn` item.
+#[derive(Debug, Clone)]
+pub struct FnItem {
+    /// File the item lives in (`rust/src/`-relative).
+    pub file: String,
+    /// Bare name (`classify`).
+    pub name: String,
+    /// `module::[Type::]name` — the resolution key.
+    pub qpath: String,
+    /// Module path (`serve::server`), inline mods included.
+    pub module: String,
+    /// Enclosing `impl` type, if any (`Server`).
+    pub impl_type: Option<String>,
+    /// Param list mentions `self` — it is a method.
+    pub has_self: bool,
+    /// Inside a `#[cfg(test)] mod` body.
+    pub is_test: bool,
+    /// 1-based line of the `fn` keyword.
+    pub start: usize,
+    /// 1-based line of the body's closing `}` (inclusive).
+    pub end: usize,
+}
+
+/// Parsed items plus per-line attributions for one file.
+#[derive(Debug)]
+pub struct FileItems {
+    pub fns: Vec<FnItem>,
+    /// Innermost enclosing fn (index into `fns`) per 0-based line.
+    pub fn_of_line: Vec<Option<usize>>,
+    /// Loop nesting depth per 0-based line (max observed on the line).
+    pub loop_depth: Vec<u32>,
+    /// The token stream, retained for the call-graph builder.
+    pub toks: Vec<Tok>,
+}
+
+/// Module path from a `rust/src/`-relative file path: `serve/server.rs`
+/// → `serve::server`, `serve/mod.rs` → `serve`, `lib.rs`/`main.rs` → ``.
+pub fn module_of(rel_path: &str) -> String {
+    let p = rel_path.trim_end_matches(".rs");
+    let mut segs: Vec<&str> = p.split('/').filter(|s| !s.is_empty()).collect();
+    if segs.last().map(|s| *s == "mod").unwrap_or(false) {
+        segs.pop();
+    }
+    if segs.last().map(|s| *s == "lib" || *s == "main").unwrap_or(false) {
+        segs.pop();
+    }
+    segs.join("::")
+}
+
+pub fn parse(src: &SourceFile) -> FileItems {
+    let texts: Vec<String> = src.lines.iter().map(|l| l.code.clone()).collect();
+    let toks = tokenize(&texts);
+    let file_module = module_of(&src.rel_path);
+
+    let mut fns: Vec<FnItem> = Vec::new();
+    let mut fn_of_line: Vec<Option<usize>> = vec![None; src.lines.len()];
+    let mut loop_depth: Vec<u32> = vec![0; src.lines.len()];
+
+    let mut depth: i64 = 0;
+    let mut mod_stack: Vec<(String, i64)> = Vec::new();
+    let mut impl_stack: Vec<(String, i64)> = Vec::new();
+    let mut fn_stack: Vec<(usize, i64)> = Vec::new();
+    let mut loop_stack: Vec<i64> = Vec::new();
+
+    let mut pending_mod: Option<String> = None;
+    let mut pending_impl: Option<String> = None;
+    let mut pending_fn: Option<(String, bool, usize)> = None; // (name, has_self, start line)
+    let mut pending_loop = false;
+
+    let mut i = 0usize;
+    while i < toks.len() {
+        let li = toks[i].line - 1;
+        let before_fn = fn_stack.last().map(|&(f, _)| f);
+        let before_loops = loop_stack.len() as u32;
+
+        match toks[i].text.as_str() {
+            "{" => {
+                depth += 1;
+                if let Some((name, has_self, start)) = pending_fn.take() {
+                    let module = {
+                        let mut m = file_module.clone();
+                        for (inner, _) in &mod_stack {
+                            if m.is_empty() {
+                                m = inner.clone();
+                            } else {
+                                m = format!("{m}::{inner}");
+                            }
+                        }
+                        m
+                    };
+                    let impl_type = impl_stack.last().map(|(t, _)| t.clone());
+                    let qpath = {
+                        let mut q = module.clone();
+                        if let Some(t) = &impl_type {
+                            if q.is_empty() {
+                                q = t.clone();
+                            } else {
+                                q = format!("{q}::{t}");
+                            }
+                        }
+                        if q.is_empty() {
+                            name.clone()
+                        } else {
+                            format!("{q}::{name}")
+                        }
+                    };
+                    let is_test = src.lines.get(start - 1).map(|l| l.is_test).unwrap_or(false);
+                    fns.push(FnItem {
+                        file: src.rel_path.clone(),
+                        name,
+                        qpath,
+                        module,
+                        impl_type,
+                        has_self,
+                        is_test,
+                        start,
+                        end: src.lines.len(),
+                    });
+                    fn_stack.push((fns.len() - 1, depth));
+                } else if let Some(t) = pending_impl.take() {
+                    impl_stack.push((t, depth));
+                } else if let Some(m) = pending_mod.take() {
+                    mod_stack.push((m, depth));
+                } else if pending_loop {
+                    loop_stack.push(depth);
+                }
+                pending_loop = false;
+            }
+            "}" => {
+                while loop_stack.last().map(|&d| d >= depth).unwrap_or(false) {
+                    loop_stack.pop();
+                }
+                while fn_stack.last().map(|&(_, d)| d >= depth).unwrap_or(false) {
+                    let (idx, _) = fn_stack.pop().unwrap();
+                    fns[idx].end = toks[i].line;
+                }
+                while impl_stack.last().map(|&(_, d)| d >= depth).unwrap_or(false) {
+                    impl_stack.pop();
+                }
+                while mod_stack.last().map(|&(_, d)| d >= depth).unwrap_or(false) {
+                    mod_stack.pop();
+                }
+                depth -= 1;
+            }
+            ";" => {
+                pending_fn = None;
+                pending_mod = None;
+                pending_impl = None;
+                pending_loop = false;
+            }
+            "mod" if toks[i].is_ident() => {
+                if let Some(next) = toks.get(i + 1) {
+                    if next.is_ident() {
+                        pending_mod = Some(next.text.clone());
+                        i += 1;
+                    }
+                }
+            }
+            "impl" if toks[i].is_ident() => {
+                let (ty, consumed) = parse_impl_header(&toks, i + 1);
+                pending_impl = ty;
+                i += consumed;
+            }
+            "fn" if toks[i].is_ident() => {
+                if let Some(next) = toks.get(i + 1) {
+                    if next.is_ident() {
+                        let name = next.text.clone();
+                        let has_self = params_mention_self(&toks, i + 2);
+                        pending_fn = Some((name, has_self, toks[i].line));
+                        i += 1;
+                    }
+                }
+            }
+            "for" | "while" | "loop" if toks[i].is_ident() => {
+                // `for<'a>` higher-ranked bounds are not loops.
+                let hrtb = toks[i].text == "for"
+                    && toks.get(i + 1).map(|t| t.is("<")).unwrap_or(false);
+                if !hrtb && !fn_stack.is_empty() {
+                    pending_loop = true;
+                }
+            }
+            _ => {}
+        }
+
+        // Per-line attributions: a line belongs to a fn if one is live at
+        // any token on it (so a header line and a closing-brace line both
+        // attribute); loop depth is the max observed on the line.
+        let after_fn = fn_stack.last().map(|&(f, _)| f);
+        if let Some(f) = after_fn.or(before_fn) {
+            fn_of_line[li] = Some(f);
+        }
+        let after_loops = loop_stack.len() as u32;
+        loop_depth[li] = loop_depth[li].max(before_loops).max(after_loops);
+
+        i += 1;
+    }
+
+    FileItems { fns, fn_of_line, loop_depth, toks }
+}
+
+/// Scan an `impl` header (from just after the `impl` keyword) for the
+/// type name it attributes to: the last path segment outside generic
+/// arguments, taking the `for Type` side when present, stopping at
+/// `where`/`{`/`;`.  Returns `(type name, tokens consumed)`.
+fn parse_impl_header(toks: &[Tok], from: usize) -> (Option<String>, usize) {
+    let mut angle = 0i32;
+    let mut name: Option<String> = None;
+    let mut j = from;
+    while j < toks.len() {
+        let t = &toks[j];
+        match t.text.as_str() {
+            "<" => angle += 1,
+            ">" => angle -= 1,
+            "{" | ";" => break,
+            "where" if t.is_ident() && angle == 0 => break,
+            "for" if t.is_ident() && angle == 0 => name = None,
+            _ => {
+                if t.is_ident() && angle == 0 {
+                    name = Some(t.text.clone());
+                }
+            }
+        }
+        j += 1;
+    }
+    (name, j.saturating_sub(from))
+}
+
+/// Does the parameter list starting at or after `from` mention `self`?
+fn params_mention_self(toks: &[Tok], from: usize) -> bool {
+    let mut j = from;
+    // Skip generics on the fn itself: `fn f<T: Bound>(…)`.
+    let mut angle = 0i32;
+    while j < toks.len() {
+        match toks[j].text.as_str() {
+            "<" => angle += 1,
+            ">" => angle -= 1,
+            "(" if angle == 0 => break,
+            "{" | ";" => return false,
+            _ => {}
+        }
+        j += 1;
+    }
+    let mut paren = 0i32;
+    while j < toks.len() {
+        match toks[j].text.as_str() {
+            "(" => paren += 1,
+            ")" => {
+                paren -= 1;
+                if paren == 0 {
+                    return false;
+                }
+            }
+            "self" if toks[j].is_ident() => return true,
+            _ => {}
+        }
+        j += 1;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn items(rel: &str, src: &str) -> FileItems {
+        parse(&SourceFile::parse(rel, src))
+    }
+
+    #[test]
+    fn module_paths_derive_from_file_location() {
+        assert_eq!(module_of("serve/server.rs"), "serve::server");
+        assert_eq!(module_of("serve/mod.rs"), "serve");
+        assert_eq!(module_of("lib.rs"), "");
+        assert_eq!(module_of("main.rs"), "");
+    }
+
+    #[test]
+    fn fns_get_qualified_paths_and_spans() {
+        let src = "\
+pub fn free() {
+    inner();
+}
+
+impl Server {
+    pub fn classify(&self, v: u32) -> u32 {
+        v
+    }
+    fn assoc() {}
+}
+
+impl std::fmt::Debug for Config {
+    fn fmt(&self, f: &mut F) -> R {
+        ok()
+    }
+}
+";
+        let it = items("serve/server.rs", src);
+        let q: Vec<(&str, bool)> =
+            it.fns.iter().map(|f| (f.qpath.as_str(), f.has_self)).collect();
+        assert_eq!(
+            q,
+            vec![
+                ("serve::server::free", false),
+                ("serve::server::Server::classify", true),
+                ("serve::server::Server::assoc", false),
+                ("serve::server::Config::fmt", true),
+            ]
+        );
+        assert_eq!(it.fns[0].start, 1);
+        assert_eq!(it.fns[0].end, 3);
+        assert_eq!(it.fns[1].end, 8);
+    }
+
+    #[test]
+    fn inline_mods_and_test_mods_attribute() {
+        let src = "\
+mod deep {
+    pub fn f() {}
+}
+
+#[cfg(test)]
+mod tests {
+    fn t() {}
+}
+";
+        let it = items("util/json.rs", src);
+        assert_eq!(it.fns[0].qpath, "util::json::deep::f");
+        assert!(!it.fns[0].is_test);
+        assert!(it.fns[1].is_test, "{:?}", it.fns[1]);
+    }
+
+    #[test]
+    fn loop_depth_tracks_nesting_and_closures_attribute_to_the_fn() {
+        let src = "\
+fn kernel(n: usize) {
+    let setup = alloc();
+    for i in 0..n {
+        for j in 0..n {
+            work(i, j);
+        }
+        tail(i);
+    }
+    let c = |x: u32| {
+        x
+    };
+}
+";
+        let it = items("runtime/kernels/k.rs", src);
+        assert_eq!(it.loop_depth[1], 0, "prologue");
+        assert_eq!(it.loop_depth[3], 2, "inner loop body");
+        assert_eq!(it.loop_depth[6], 1, "outer loop tail");
+        assert_eq!(it.loop_depth[9], 0, "closure body is not a loop");
+        assert_eq!(it.fn_of_line[9], Some(0), "closure attributes to kernel");
+        assert_eq!(it.fns[0].name, "kernel");
+    }
+
+    #[test]
+    fn trait_decls_without_bodies_are_not_items() {
+        let src = "\
+trait Backend {
+    fn run(&self, x: u32) -> u32;
+}
+
+fn real() {}
+";
+        let it = items("runtime/backend.rs", src);
+        let names: Vec<&str> = it.fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["real"], "{names:?}");
+    }
+
+    #[test]
+    fn hrtb_for_is_not_a_loop() {
+        let src = "fn f(g: impl Fn(u32) -> u32) {\n    g(1);\n}\n";
+        let it = items("util/x.rs", src);
+        assert_eq!(it.loop_depth[1], 0);
+    }
+}

@@ -20,28 +20,44 @@
 //! | D3 | no-ad-hoc-float-reduction | float `sum`/`fold` bypassing the `kernels::` helpers |
 //! | R1 | no-panic-in-serving-path | `unwrap`/`expect`/`panic!` where a request must fail soft |
 //! | R2 | checked-arithmetic-in-loaders | unchecked size arithmetic on header-derived counts |
+//! | R3 | no-panic-reachable-from-entrypoint | panics in fns *transitively called* from serving/training roots |
+//! | C1 | lock-order | inconsistent lock acquisition order; blocking calls under a held guard |
+//! | A1 | no-alloc-in-kernel-loop | allocation inside loop bodies of hot-path files |
 //!
-//! Each rule applies only where a [`Contract`] binds it (see
-//! [`CONTRACTS`]); the scanner is comment/string-aware and skips
-//! `#[cfg(test)] mod` bodies ([`source`]).  Suppression requires an
-//! inline `// lint:allow(rule): <reason>` pragma with a non-empty
-//! reason, and a pragma that suppresses nothing is itself an error —
-//! every exception stays justified and current.
+//! D1–R2 are line-level and apply only where a [`Contract`] binds them
+//! (see [`CONTRACTS`]).  R3/C1/A1 are **whole-program**: the engine
+//! tokenizes every file ([`token`]), parses items ([`items`]), builds a
+//! crate-wide call graph ([`callgraph`] — resolution stats surface in
+//! `--json`), and walks it ([`whole`]).  The scanner is
+//! comment/string-aware and skips `#[cfg(test)] mod` bodies
+//! ([`source`]).  Suppression requires an inline
+//! `// lint:allow(rule): <reason>` pragma with a non-empty reason, and
+//! a pragma that suppresses nothing is itself an error — every
+//! exception stays justified and current.
 //!
 //! Findings reuse the [`crate::api::diag`] shape (`hp-gnn validate`'s
 //! diagnostic contract): path-anchored reason + fix hint, all problems
 //! reported in one pass.  `hp-gnn lint --json` emits the machine-readable
-//! report (schema in README "Static analysis").
+//! report, `--format sarif` the SARIF 2.1.0 form ([`sarif`]), and
+//! `--baseline lint_baseline.json` engages the ratchet ([`baseline`]):
+//! fail on findings not in the baseline, and fail when the baseline
+//! could shrink but was not regenerated (`make lint-baseline`).
 
+pub mod baseline;
+pub mod callgraph;
+pub mod items;
 pub mod rules;
+pub mod sarif;
 pub mod source;
+pub mod token;
+pub mod whole;
 
 use std::path::{Path, PathBuf};
 
 use crate::api::diag::{Diagnostic, Diagnostics};
 use crate::util::json::Json;
 
-/// The five contract rules.
+/// The eight contract rules.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RuleId {
     D1,
@@ -49,10 +65,22 @@ pub enum RuleId {
     D3,
     R1,
     R2,
+    R3,
+    C1,
+    A1,
 }
 
 impl RuleId {
-    pub const ALL: [RuleId; 5] = [RuleId::D1, RuleId::D2, RuleId::D3, RuleId::R1, RuleId::R2];
+    pub const ALL: [RuleId; 8] = [
+        RuleId::D1,
+        RuleId::D2,
+        RuleId::D3,
+        RuleId::R1,
+        RuleId::R2,
+        RuleId::R3,
+        RuleId::C1,
+        RuleId::A1,
+    ];
 
     /// Short id as written in pragmas (`"D1"`).
     pub fn id(self) -> &'static str {
@@ -62,6 +90,9 @@ impl RuleId {
             RuleId::D3 => "D3",
             RuleId::R1 => "R1",
             RuleId::R2 => "R2",
+            RuleId::R3 => "R3",
+            RuleId::C1 => "C1",
+            RuleId::A1 => "A1",
         }
     }
 
@@ -73,6 +104,9 @@ impl RuleId {
             RuleId::D3 => "no-ad-hoc-float-reduction",
             RuleId::R1 => "no-panic-in-serving-path",
             RuleId::R2 => "checked-arithmetic-in-loaders",
+            RuleId::R3 => "no-panic-reachable-from-entrypoint",
+            RuleId::C1 => "lock-order",
+            RuleId::A1 => "no-alloc-in-kernel-loop",
         }
     }
 
@@ -92,10 +126,23 @@ impl RuleId {
                  reaches a determinism-pinned output"
             }
             RuleId::R1 => {
-                "propagate with `?`/context, recover (serve::lock_unpoisoned), or \
+                "propagate with `?`/context, recover (util::sync::lock_unpoisoned), or \
                  justify provable infallibility with lint:allow(R1)"
             }
             RuleId::R2 => "use checked_add/checked_mul on header-derived sizes",
+            RuleId::R3 => {
+                "make the whole chain fallible (`?`/context) or recover at the callee; \
+                 the printed call chain shows how the entrypoint reaches the panic — \
+                 accepted legacy sites live in lint_baseline.json"
+            }
+            RuleId::C1 => {
+                "acquire locks in one global order everywhere, and drop guards (scope \
+                 or explicit drop) before send/recv/join"
+            }
+            RuleId::A1 => {
+                "allocate once in a prologue (with_capacity) and reuse the buffer \
+                 across iterations"
+            }
         }
     }
 
@@ -156,20 +203,13 @@ pub const CONTRACTS: &[Contract] = &[
         why: "served logits are bit-identical across worker counts and coalescing \
               patterns (cache eviction included)",
     },
-    Contract {
-        prefix: "serve/",
-        rule: RuleId::R1,
-        scope: Scope::File,
-        why: "a serving worker degrades per-request; one bad request or poisoned lock \
-              must not take down the pool",
-    },
-    Contract {
-        prefix: "net/",
-        rule: RuleId::R1,
-        scope: Scope::File,
-        why: "the HTTP frontend degrades per request: a malformed request or dead \
-              socket costs one response, never a connection worker or the listener",
-    },
+    // serve/ and net/ previously owed the module-textual R1; they are
+    // now covered (more precisely and transitively) by R3, whose roots
+    // are the request entrypoints and detached thread bodies listed in
+    // [`whole::R3_ROOT_QPATHS`] / [`whole::R3_ROOT_MODULES`]:
+    // Server::classify / try_classify, the net::routes handlers,
+    // TrainingSession::step, and the run_worker / run_batcher /
+    // serve_pool / accept_loop thread bodies.
     Contract {
         prefix: "net/",
         rule: RuleId::D2,
@@ -245,6 +285,20 @@ pub const CONTRACTS: &[Contract] = &[
         scope: Scope::File,
         why: "weight updates are part of the bit-exact train step",
     },
+    Contract {
+        prefix: "runtime/kernels/",
+        rule: RuleId::A1,
+        scope: Scope::File,
+        why: "kernel loop bodies are the per-batch hot path — allocation belongs in \
+              the prologue (§5.2 t_compute modeling assumes steady-state buffers)",
+    },
+    Contract {
+        prefix: "serve/infer.rs",
+        rule: RuleId::A1,
+        scope: Scope::File,
+        why: "the shared inference path runs per request — loop-body allocation is \
+              tail latency",
+    },
 ];
 
 /// Rule bindings for one `rust/src/`-relative file path.
@@ -267,9 +321,21 @@ pub struct Finding {
     /// carry their id in `reason`).
     pub rule: Option<RuleId>,
     pub reason: String,
+    /// Line-number-free identity for the ratchet baseline — see
+    /// [`baseline::fingerprint`].  Assigned by [`analyze_files`]; empty
+    /// on hand-built findings.
+    pub fingerprint: String,
 }
 
 impl Finding {
+    /// The rule id string, covering pragma pseudo-rules (`P1`/`P2`).
+    pub fn rule_id_str(&self) -> &str {
+        match self.rule {
+            Some(r) => r.id(),
+            None => pragma_rule_id(&self.reason),
+        }
+    }
+
     /// The finding as an [`api::diag`](crate::api::diag) diagnostic:
     /// `path:line` anchor, rule-tagged reason, per-rule fix hint.
     pub fn to_diagnostic(&self) -> Diagnostic {
@@ -288,13 +354,7 @@ impl Finding {
         Json::obj(vec![
             ("path", Json::str(&self.path)),
             ("line", Json::num(self.line as f64)),
-            (
-                "rule",
-                match self.rule {
-                    Some(r) => Json::str(r.id()),
-                    None => Json::str(pragma_rule_id(&self.reason)),
-                },
-            ),
+            ("rule", Json::str(self.rule_id_str())),
             (
                 "name",
                 match self.rule {
@@ -310,6 +370,7 @@ impl Finding {
                     None => Json::Null,
                 },
             ),
+            ("fingerprint", Json::str(&self.fingerprint)),
         ])
     }
 }
@@ -328,6 +389,10 @@ fn pragma_rule_id(reason: &str) -> &'static str {
 pub struct Report {
     pub files_scanned: usize,
     pub findings: Vec<Finding>,
+    /// Call-graph resolution statistics from the whole-program pass.
+    pub stats: callgraph::Stats,
+    /// Resolved caller→callee edge count.
+    pub edge_count: usize,
 }
 
 impl Report {
@@ -355,9 +420,24 @@ impl Report {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("tool", Json::str("hp-gnn-lint")),
-            ("schema_version", Json::num(1.0)),
+            ("schema_version", Json::num(2.0)),
             ("files_scanned", Json::num(self.files_scanned as f64)),
             ("clean", Json::Bool(self.is_clean())),
+            (
+                "callgraph",
+                Json::obj(vec![
+                    ("functions", Json::num(self.stats.functions as f64)),
+                    ("edges", Json::num(self.edge_count as f64)),
+                    ("calls", Json::num(self.stats.calls as f64)),
+                    ("resolved", Json::num(self.stats.resolved as f64)),
+                    ("external", Json::num(self.stats.external as f64)),
+                    ("ambiguous", Json::num(self.stats.ambiguous as f64)),
+                    (
+                        "resolution_pct",
+                        Json::num((self.stats.resolution_pct() * 10.0).round() / 10.0),
+                    ),
+                ]),
+            ),
             (
                 "findings",
                 Json::Arr(self.findings.iter().map(|f| f.to_json()).collect()),
@@ -366,12 +446,60 @@ impl Report {
     }
 }
 
+/// The full analysis pipeline over a set of `(rel_path, text)` inputs:
+/// per-file rules, then item parsing + crate-wide call graph + the
+/// whole-program rules (R3/C1/A1), then one global pragma-suppression
+/// pass and fingerprint assignment.  [`lint_source`] and [`lint_tree`]
+/// are thin wrappers.
+pub fn analyze_files(inputs: &[(String, String)]) -> Report {
+    let parsed: Vec<(source::SourceFile, items::FileItems)> = inputs
+        .iter()
+        .map(|(rel, text)| {
+            let src = source::SourceFile::parse(rel, text);
+            let it = items::parse(&src);
+            (src, it)
+        })
+        .collect();
+    let graph = callgraph::build(&parsed);
+
+    let mut raw: Vec<Finding> = Vec::new();
+    for (src, _) in &parsed {
+        raw.extend(rules::file_rule_findings(src, &contracts_for(&src.rel_path)));
+    }
+    raw.extend(whole::r3_panic_reachability(&parsed, &graph));
+    raw.extend(whole::c1_lock_order(&parsed));
+    raw.extend(whole::a1_hot_path_alloc(&parsed));
+
+    // Global pragma pass: every finding — per-file or whole-program —
+    // meets its file's pragmas exactly once.
+    let mut findings: Vec<Finding> = Vec::new();
+    for (src, _) in &parsed {
+        let mut mine: Vec<Finding> =
+            raw.iter().filter(|f| f.path == src.rel_path).cloned().collect();
+        rules::apply_pragmas(src, &mut mine);
+        findings.extend(mine);
+    }
+    findings.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
+
+    let by_path: std::collections::BTreeMap<&str, &source::SourceFile> =
+        parsed.iter().map(|(src, _)| (src.rel_path.as_str(), src)).collect();
+    baseline::assign_fingerprints(&mut findings, |path, line| {
+        match by_path.get(path).and_then(|src| src.lines.get(line - 1)) {
+            Some(l) => (l.func.clone().unwrap_or_default(), l.code.trim().to_string()),
+            None => (String::new(), String::new()),
+        }
+    });
+
+    let edge_count = graph.edges.values().map(|v| v.len()).sum();
+    Report { files_scanned: inputs.len(), findings, stats: graph.stats, edge_count }
+}
+
 /// Lint a single source text as if it lived at `rel_path` under
-/// `rust/src/` — the contract table decides which rules bind.  This is
+/// `rust/src/` — the contract table decides which per-file rules bind,
+/// and the whole-program rules run over the one-file "crate".  This is
 /// the unit the fixture tests drive directly.
 pub fn lint_source(rel_path: &str, text: &str) -> Vec<Finding> {
-    let src = source::SourceFile::parse(rel_path, text);
-    rules::check_file(&src, &contracts_for(rel_path))
+    analyze_files(&[(rel_path.to_string(), text.to_string())]).findings
 }
 
 /// Lint the whole `rust/src/` tree under `repo_root`.  Every file is
@@ -387,19 +515,16 @@ pub fn lint_tree(repo_root: &Path) -> anyhow::Result<Report> {
     let mut files = Vec::new();
     collect_rs(&src_root, &mut files)?;
     files.sort();
-    let mut report = Report::default();
+    let mut inputs = Vec::new();
     for path in files {
         let rel = path
             .strip_prefix(&src_root)
             .unwrap_or(&path)
             .to_string_lossy()
             .replace('\\', "/");
-        let text = std::fs::read_to_string(&path)?;
-        report.findings.extend(lint_source(&rel, &text));
-        report.files_scanned += 1;
+        inputs.push((rel, std::fs::read_to_string(&path)?));
     }
-    report.findings.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
-    Ok(report)
+    Ok(analyze_files(&inputs))
 }
 
 fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
@@ -424,8 +549,12 @@ mod tests {
         let kernels = contracts_for("runtime/kernels/dense.rs");
         assert!(kernels.iter().any(|(r, _)| *r == RuleId::D1));
         assert!(kernels.iter().any(|(r, _)| *r == RuleId::D2));
+        assert!(kernels.iter().any(|(r, _)| *r == RuleId::A1), "kernels owe hot-path alloc");
         let serve = contracts_for("serve/server.rs");
-        assert!(serve.iter().any(|(r, _)| *r == RuleId::R1));
+        assert!(
+            !serve.iter().any(|(r, _)| *r == RuleId::R1),
+            "serve/ panics are covered transitively by R3 now, not module-textual R1"
+        );
         assert!(serve.iter().any(|(r, _)| *r == RuleId::D1));
         let session = contracts_for("coordinator/session.rs");
         assert!(session
@@ -433,8 +562,10 @@ mod tests {
             .any(|(r, s)| *r == RuleId::R1 && *s == Scope::Function("drive")));
         assert!(contracts_for("graph/io.rs").iter().any(|(r, _)| *r == RuleId::R2));
         let net = contracts_for("net/http.rs");
-        assert!(net.iter().any(|(r, _)| *r == RuleId::R1), "net/ owes no-panic");
+        assert!(!net.iter().any(|(r, _)| *r == RuleId::R1), "net/ moved to R3 too");
         assert!(net.iter().any(|(r, _)| *r == RuleId::D2), "net/ owes Timer-only time");
+        let infer = contracts_for("serve/infer.rs");
+        assert!(infer.iter().any(|(r, _)| *r == RuleId::A1), "infer owes hot-path alloc");
         assert!(contracts_for("util/json.rs").is_empty(), "uncontracted module");
     }
 
@@ -454,6 +585,7 @@ mod tests {
             line: 41,
             rule: Some(RuleId::R1),
             reason: "`.unwrap()` can panic in the serving path".into(),
+            fingerprint: "0011223344556677".into(),
         };
         let d = f.to_diagnostic();
         assert_eq!(d.path, "serve/server.rs:41");
@@ -462,11 +594,27 @@ mod tests {
         let j = f.to_json();
         assert_eq!(j.get("rule").unwrap(), &Json::str("R1"));
         assert_eq!(j.get("line").unwrap(), &Json::num(41.0));
+        assert_eq!(j.get("fingerprint").unwrap(), &Json::str("0011223344556677"));
 
-        let report = Report { files_scanned: 3, findings: vec![f] };
+        let report = Report { files_scanned: 3, findings: vec![f], ..Report::default() };
         let j = report.to_json();
         assert_eq!(j.get("clean").unwrap(), &Json::Bool(false));
+        let cg = j.get("callgraph").unwrap();
+        assert_eq!(cg.get("functions").unwrap(), &Json::num(0.0));
         // Must serialize to parseable JSON.
         Json::parse(&j.pretty()).unwrap();
+    }
+
+    #[test]
+    fn analyze_files_reports_callgraph_stats_and_fingerprints() {
+        let report = analyze_files(&[(
+            "serve/server.rs".to_string(),
+            "impl Server {\n    pub fn classify(&self) -> u32 {\n        helper()\n    }\n}\n\nfn helper() -> u32 {\n    7\n}\n"
+                .to_string(),
+        )]);
+        assert!(report.is_clean(), "{:?}", report.findings);
+        assert_eq!(report.stats.functions, 2);
+        assert_eq!(report.edge_count, 1);
+        assert_eq!(report.stats.resolved, 1);
     }
 }

@@ -20,8 +20,19 @@ use super::source::{find_word, SourceFile};
 use super::{Finding, RuleId, Scope};
 
 /// Run `bindings` over one preprocessed file, apply pragma suppression,
-/// and report pragma problems (`P1`) and unused pragmas (`P2`).
+/// and report pragma problems (`P1`) and unused pragmas (`P2`).  The
+/// single-file convenience path; [`super::analyze_files`] runs the
+/// per-file rules and the pragma pass separately so whole-program
+/// findings (R3/C1/A1) go through the same suppression machinery.
 pub fn check_file(src: &SourceFile, bindings: &[(RuleId, Scope)]) -> Vec<Finding> {
+    let mut findings = file_rule_findings(src, bindings);
+    apply_pragmas(src, &mut findings);
+    findings.sort_by_key(|f| f.line);
+    findings
+}
+
+/// The per-file (line-level) rules only — no pragma handling.
+pub fn file_rule_findings(src: &SourceFile, bindings: &[(RuleId, Scope)]) -> Vec<Finding> {
     let mut findings: Vec<Finding> = Vec::new();
     for (rule, scope) in bindings {
         let emit = |line: usize, reason: String| Finding {
@@ -29,6 +40,7 @@ pub fn check_file(src: &SourceFile, bindings: &[(RuleId, Scope)]) -> Vec<Finding
             line,
             rule: Some(*rule),
             reason,
+            fingerprint: String::new(),
         };
         match rule {
             RuleId::D1 => d1_unordered_iteration(src, scope, &emit, &mut findings),
@@ -36,9 +48,19 @@ pub fn check_file(src: &SourceFile, bindings: &[(RuleId, Scope)]) -> Vec<Finding
             RuleId::D3 => d3_float_reduction(src, scope, &emit, &mut findings),
             RuleId::R1 => r1_panic(src, scope, &emit, &mut findings),
             RuleId::R2 => r2_unchecked_arith(src, scope, &emit, &mut findings),
+            // Whole-program rules don't run per file; a contract row only
+            // marks which files they bind (see super::whole).
+            RuleId::R3 | RuleId::C1 | RuleId::A1 => {}
         }
     }
+    findings
+}
 
+/// Pragma suppression and pragma problems for one file.  `findings`
+/// holds every finding attributed to this file — per-file *and*
+/// whole-program rules — so a `lint:allow(R3)` works exactly like a
+/// `lint:allow(D1)`.
+pub fn apply_pragmas(src: &SourceFile, findings: &mut Vec<Finding>) {
     // Pragma suppression: a finding survives unless a well-formed pragma
     // for its rule targets its line.  Every applied pragma is marked used.
     let mut used = vec![false; src.pragmas.len()];
@@ -63,6 +85,7 @@ pub fn check_file(src: &SourceFile, bindings: &[(RuleId, Scope)]) -> Vec<Finding
             line: *line,
             rule: None,
             reason: format!("P1 bad-pragma: {what}"),
+            fingerprint: String::new(),
         });
     }
     for (i, p) in src.pragmas.iter().enumerate() {
@@ -73,9 +96,10 @@ pub fn check_file(src: &SourceFile, bindings: &[(RuleId, Scope)]) -> Vec<Finding
                 line: p.line,
                 rule: None,
                 reason: format!(
-                    "P1 bad-pragma: unknown rule {:?} (rules: D1 D2 D3 R1 R2)",
+                    "P1 bad-pragma: unknown rule {:?} (rules: D1 D2 D3 R1 R2 R3 C1 A1)",
                     p.rule
                 ),
+                fingerprint: String::new(),
             });
         } else if !used[i] {
             findings.push(Finding {
@@ -87,12 +111,10 @@ pub fn check_file(src: &SourceFile, bindings: &[(RuleId, Scope)]) -> Vec<Finding
                      delete it (stale allows must not accumulate)",
                     p.rule, p.target
                 ),
+                fingerprint: String::new(),
             });
         }
     }
-
-    findings.sort_by_key(|f| f.line);
-    findings
 }
 
 /// Lines the rule actually applies to: non-test and inside the scope.
@@ -311,7 +333,8 @@ fn is_float_literal(s: &str) -> bool {
 }
 
 /// Macros and method calls that panic instead of returning an error.
-const PANIC_PATTERNS: &[(&str, &str)] = &[
+/// Shared with R3's reachability scan ([`super::whole`]).
+pub(crate) const PANIC_PATTERNS: &[(&str, &str)] = &[
     (".unwrap()", "propagate with `?`, `ok_or_else`, or recover (locks: `lock_unpoisoned`)"),
     (".expect(", "propagate with `?` and `context(…)` instead of crashing the worker"),
     ("panic!(", "return an error — one bad request must not take down the pool"),

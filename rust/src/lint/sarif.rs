@@ -1,0 +1,110 @@
+//! Minimal SARIF 2.1.0 emitter (`hp-gnn lint --format sarif`), so CI
+//! annotation tooling can ingest lint findings without knowing the
+//! native JSON schema.  Only the subset consumers actually read:
+//! `tool.driver.rules`, and per-result `ruleId`, `message.text`,
+//! `physicalLocation`, and the stable fingerprint.
+
+use crate::util::json::Json;
+
+use super::{Finding, RuleId};
+
+const SCHEMA: &str = "https://json.schemastore.org/sarif-2.1.0.json";
+
+/// Render findings (usually the unbaselined remainder) as one SARIF run.
+pub fn sarif(findings: &[Finding]) -> Json {
+    let rules = RuleId::ALL
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("id", Json::str(r.id())),
+                ("name", Json::str(r.name())),
+                ("shortDescription", Json::obj(vec![("text", Json::str(r.hint()))])),
+            ])
+        })
+        .collect();
+    let results = findings
+        .iter()
+        .map(|f| {
+            Json::obj(vec![
+                ("ruleId", Json::str(f.rule_id_str())),
+                ("level", Json::str("error")),
+                ("message", Json::obj(vec![("text", Json::str(&f.reason))])),
+                (
+                    "locations",
+                    Json::arr(vec![Json::obj(vec![(
+                        "physicalLocation",
+                        Json::obj(vec![
+                            (
+                                "artifactLocation",
+                                Json::obj(vec![(
+                                    "uri",
+                                    Json::str(format!("rust/src/{}", f.path)),
+                                )]),
+                            ),
+                            (
+                                "region",
+                                Json::obj(vec![("startLine", Json::num(f.line as f64))]),
+                            ),
+                        ]),
+                    )])]),
+                ),
+                (
+                    "fingerprints",
+                    Json::obj(vec![("hpGnnLint/v1", Json::str(&f.fingerprint))]),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("version", Json::str("2.1.0")),
+        ("$schema", Json::str(SCHEMA)),
+        (
+            "runs",
+            Json::arr(vec![Json::obj(vec![
+                (
+                    "tool",
+                    Json::obj(vec![(
+                        "driver",
+                        Json::obj(vec![
+                            ("name", Json::str("hp-gnn-lint")),
+                            ("rules", Json::Arr(rules)),
+                        ]),
+                    )]),
+                ),
+                ("results", Json::Arr(results)),
+            ])]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sarif_shape_is_parseable_and_complete() {
+        let f = Finding {
+            path: "serve/server.rs".into(),
+            line: 41,
+            rule: Some(RuleId::R3),
+            reason: "reachable panic".into(),
+            fingerprint: "deadbeefdeadbeef".into(),
+        };
+        let s = sarif(&[f]);
+        let round = Json::parse(&s.pretty()).unwrap();
+        assert_eq!(round.get("version").unwrap().as_str().unwrap(), "2.1.0");
+        let runs = round.get("runs").unwrap().as_arr().unwrap();
+        let results = runs[0].get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("ruleId").unwrap().as_str().unwrap(), "R3");
+        let loc = &results[0].get("locations").unwrap().as_arr().unwrap()[0];
+        let phys = loc.get("physicalLocation").unwrap();
+        assert_eq!(
+            phys.get("artifactLocation").unwrap().get("uri").unwrap().as_str().unwrap(),
+            "rust/src/serve/server.rs"
+        );
+        assert_eq!(phys.get("region").unwrap().get("startLine").unwrap().as_f64().unwrap(), 41.0);
+        let drv = runs[0].get("tool").unwrap().get("driver").unwrap();
+        assert_eq!(drv.get("rules").unwrap().as_arr().unwrap().len(), RuleId::ALL.len());
+    }
+}

@@ -1,0 +1,162 @@
+//! Tokenizer over scrubbed source — the substrate of the whole-program
+//! lint passes.
+//!
+//! [`tokenize`] turns the scrubbed per-line code produced by
+//! [`super::source::SourceFile`] into a flat token stream: identifiers,
+//! number literals, and punctuation (with `::` merged into one token,
+//! since path parsing is what the item parser and call-graph builder do
+//! all day).  Comments and literals were already blanked by the scrubber,
+//! so a token can never come from prose.
+//!
+//! Deliberately *not* a full Rust lexer: lifetimes are dropped (after the
+//! scrubber, a lone `'` can only start a lifetime), float/integer suffix
+//! distinctions are irrelevant, and multi-char operators other than `::`
+//! stay as single-char puncts — the downstream passes only ever look at
+//! `. ( ) { } < > ! ; , = & #` and `::`.
+
+/// Token classes the item parser and call-graph builder distinguish.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `foo`, `Server`).
+    Ident,
+    /// Number literal (`0`, `0.5f32`, `0x1f`).
+    Num,
+    /// Single punctuation char, or the merged `::`.
+    Punct,
+}
+
+/// One token with its source position.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    /// Token text (`"fn"`, `"::"`, `"{"`).
+    pub text: String,
+    /// 1-based source line.
+    pub line: usize,
+    /// 0-based byte column of the first char on that line.
+    pub col: usize,
+}
+
+impl Tok {
+    pub fn is(&self, text: &str) -> bool {
+        self.text == text
+    }
+
+    pub fn is_ident(&self) -> bool {
+        self.kind == TokKind::Ident
+    }
+}
+
+/// Tokenize scrubbed code lines (1-based line numbers follow the slice
+/// order).  Lifetime quotes are skipped entirely.
+pub fn tokenize(lines: &[String]) -> Vec<Tok> {
+    let mut out = Vec::new();
+    for (li, code) in lines.iter().enumerate() {
+        let line = li + 1;
+        let b: Vec<char> = code.chars().collect();
+        let mut i = 0usize;
+        while i < b.len() {
+            let c = b[i];
+            if c.is_whitespace() {
+                i += 1;
+                continue;
+            }
+            if c.is_alphabetic() || c == '_' {
+                let start = i;
+                while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                out.push(Tok {
+                    kind: TokKind::Ident,
+                    text: b[start..i].iter().collect(),
+                    line,
+                    col: start,
+                });
+                continue;
+            }
+            if c.is_ascii_digit() {
+                let start = i;
+                while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                // Fractional part — but `0..n` is a range, not a float.
+                if i + 1 < b.len() && b[i] == '.' && b[i + 1].is_ascii_digit() {
+                    i += 1;
+                    while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                        i += 1;
+                    }
+                }
+                out.push(Tok {
+                    kind: TokKind::Num,
+                    text: b[start..i].iter().collect(),
+                    line,
+                    col: start,
+                });
+                continue;
+            }
+            if c == '\'' {
+                // Post-scrub, a quote can only introduce a lifetime
+                // (`&'a str`): skip the quote and let the ident lex.
+                i += 1;
+                continue;
+            }
+            if c == ':' && b.get(i + 1) == Some(&':') {
+                out.push(Tok { kind: TokKind::Punct, text: "::".to_string(), line, col: i });
+                i += 2;
+                continue;
+            }
+            out.push(Tok { kind: TokKind::Punct, text: c.to_string(), line, col: i });
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        let f = super::super::source::SourceFile::parse("t.rs", src);
+        f.lines.iter().map(|l| l.code.clone()).collect()
+    }
+
+    #[test]
+    fn idents_numbers_and_paths() {
+        let toks = tokenize(&texts("let x = util::json::parse(0.5f32);\n"));
+        let flat: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(
+            flat,
+            vec!["let", "x", "=", "util", "::", "json", "::", "parse", "(", "0.5f32", ")", ";"]
+        );
+        assert_eq!(toks[9].kind, TokKind::Num);
+        assert!(toks.iter().all(|t| t.line == 1));
+    }
+
+    #[test]
+    fn ranges_do_not_lex_as_floats() {
+        let toks = tokenize(&texts("for i in 0..n {}\n"));
+        let flat: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(flat, vec!["for", "i", "in", "0", ".", ".", "n", "{", "}"]);
+    }
+
+    #[test]
+    fn lifetimes_are_dropped_and_strings_already_blank() {
+        let toks = tokenize(&texts("fn f<'a>(s: &'a str) { g(\"x.y(\"); }\n"));
+        let flat: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert!(flat.contains(&"a"), "{flat:?}");
+        assert!(!flat.iter().any(|t| t.contains('"')), "{flat:?}");
+        // The call inside the string literal is gone; `g(` survives.
+        assert!(flat.windows(2).any(|w| w == ["g", "("]), "{flat:?}");
+        assert!(!flat.contains(&"y"), "{flat:?}");
+    }
+
+    #[test]
+    fn columns_are_byte_accurate() {
+        let toks = tokenize(&texts("  ab.cd();\n"));
+        assert_eq!(toks[0].text, "ab");
+        assert_eq!(toks[0].col, 2);
+        assert_eq!(toks[2].text, "cd");
+        assert_eq!(toks[2].col, 5);
+    }
+}

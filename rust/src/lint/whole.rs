@@ -1,0 +1,563 @@
+//! Whole-program rules: R3 panic-reachability, C1 lock-order, A1
+//! hot-path allocation.
+//!
+//! These consume the crate-wide call graph ([`super::callgraph`]) and the
+//! per-file item attributions ([`super::items`]) rather than single
+//! lines, so a panic three calls away from a request handler is flagged
+//! at its definition site with the full call chain printed.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use super::callgraph::CrateGraph;
+use super::items::FileItems;
+use super::rules::PANIC_PATTERNS;
+use super::source::SourceFile;
+use super::{contracts_for, Finding, RuleId};
+
+/// The serving/training entrypoints R3 walks from.  Exact qualified
+/// paths; every non-test fn of a root *module* is a root too (HTTP
+/// handlers in `net::routes` are dispatched reflectively through the
+/// router table, so no static call edge reaches them).
+pub const R3_ROOT_QPATHS: &[&str] = &[
+    // Request entrypoints (CONTRACTS: one bad request must not take
+    // down the pool).
+    "serve::server::Server::classify",
+    "serve::server::Server::try_classify",
+    // Detached thread bodies — a panic here kills a worker silently.
+    "serve::server::run_worker",
+    "serve::batcher::run_batcher",
+    "net::server::serve_pool",
+    "net::server::accept_loop",
+    // The long-running training loop: hours of progress lost per panic.
+    "coordinator::session::TrainingSession::step",
+];
+
+/// Modules whose every non-test fn is an R3 root.
+pub const R3_ROOT_MODULES: &[&str] = &["net::routes"];
+
+/// Human-readable fn label for call chains: `Server::classify`, `decode`.
+fn short(g: &CrateGraph, f: usize) -> String {
+    match &g.fns[f].impl_type {
+        Some(t) => format!("{t}::{}", g.fns[f].name),
+        None => g.fns[f].name.clone(),
+    }
+}
+
+/// R3 — no panic reachable from a serving/training entrypoint.
+///
+/// BFS over resolved call edges from every root; scan each reachable
+/// non-test fn body for the panic patterns, printing the (shortest)
+/// root → … → fn chain.  `.expect(` sites that resolved to an in-crate
+/// method (the JSON parser's `Parser::expect`) are exempt.
+pub fn r3_panic_reachability(files: &[(SourceFile, FileItems)], g: &CrateGraph) -> Vec<Finding> {
+    let mut roots: Vec<usize> = Vec::new();
+    for (gi, f) in g.fns.iter().enumerate() {
+        if f.is_test {
+            continue;
+        }
+        if R3_ROOT_QPATHS.contains(&f.qpath.as_str())
+            || R3_ROOT_MODULES.contains(&f.module.as_str())
+        {
+            roots.push(gi);
+        }
+    }
+
+    // BFS, remembering the parent that discovered each fn (shortest
+    // chain back to some root).
+    let mut parent: BTreeMap<usize, Option<usize>> = BTreeMap::new();
+    let mut queue: VecDeque<usize> = VecDeque::new();
+    for &r in &roots {
+        parent.entry(r).or_insert(None);
+        queue.push_back(r);
+    }
+    while let Some(f) = queue.pop_front() {
+        if let Some(callees) = g.edges.get(&f) {
+            for &(to, _) in callees {
+                if !parent.contains_key(&to) && !g.fns[to].is_test {
+                    parent.insert(to, Some(f));
+                    queue.push_back(to);
+                }
+            }
+        }
+    }
+
+    let file_of: BTreeMap<&str, usize> = files
+        .iter()
+        .enumerate()
+        .map(|(i, (src, _))| (src.rel_path.as_str(), i))
+        .collect();
+
+    let mut out = Vec::new();
+    for (&f, _) in &parent {
+        let item = &g.fns[f];
+        let Some(&fi) = file_of.get(item.file.as_str()) else { continue };
+        let src = &files[fi].0;
+        let chain = {
+            let mut names = vec![short(g, f)];
+            let mut cur = f;
+            while let Some(Some(p)) = parent.get(&cur) {
+                names.push(short(g, *p));
+                cur = *p;
+            }
+            names.reverse();
+            names.join(" → ")
+        };
+        for li in (item.start - 1)..item.end.min(src.lines.len()) {
+            let line = &src.lines[li];
+            if line.is_test {
+                continue;
+            }
+            for (pat, fix) in PANIC_PATTERNS {
+                if !line.code.contains(pat) {
+                    continue;
+                }
+                if *pat == ".expect("
+                    && g.in_crate_methods.contains(&(
+                        item.file.clone(),
+                        li + 1,
+                        "expect".to_string(),
+                    ))
+                {
+                    continue; // resolved to an in-crate method, not Option/Result::expect
+                }
+                out.push(Finding {
+                    path: item.file.clone(),
+                    line: li + 1,
+                    rule: Some(RuleId::R3),
+                    fingerprint: String::new(),
+                    reason: format!(
+                        "`{}` can panic and is reachable from a serving/training entrypoint \
+                         via {chain} — {fix}",
+                        pat.trim_end_matches('('),
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Lock-acquisition patterns and how to pull the lock's identity out of
+/// the surrounding text.
+const GUARD_FNS: &[&str] = &["lock_unpoisoned(", "read_unpoisoned(", "write_unpoisoned("];
+const GUARD_METHODS: &[&str] = &[".lock()", ".read()", ".write()"];
+/// Calls that block while a guard is live (condvar waits are excluded:
+/// they release the mutex while parked).
+const BLOCKING: &[&str] = &[".send(", ".recv()", ".recv_timeout(", ".join()"];
+
+/// One lock acquisition found on a line: `(key, column)`.
+fn acquisitions(code: &str) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for pat in GUARD_METHODS {
+        let mut from = 0;
+        while let Some(p) = code[from..].find(pat) {
+            let at = from + p;
+            if let Some(key) = chain_tail_before(code, at) {
+                out.push((key, at));
+            }
+            from = at + pat.len();
+        }
+    }
+    for pat in GUARD_FNS {
+        let mut from = 0;
+        while let Some(p) = code[from..].find(pat) {
+            let at = from + p;
+            // Skip the helper's own `fn lock_unpoisoned(…)` definition.
+            let lead = code[..at].trim_end();
+            if !lead.ends_with("fn") {
+                if let Some(key) = arg_tail_inside(code, at + pat.len()) {
+                    out.push((key, at));
+                }
+            }
+            from = at + pat.len();
+        }
+    }
+    out.sort_by_key(|&(_, c)| c);
+    out
+}
+
+/// Last identifier of the receiver chain ending at byte `at`
+/// (`self.window.consumed.lock()` → `consumed`).
+fn chain_tail_before(code: &str, at: usize) -> Option<String> {
+    let b = code.as_bytes();
+    let mut end = at;
+    let mut start = end;
+    while start > 0 {
+        let c = b[start - 1];
+        if c.is_ascii_alphanumeric() || c == b'_' {
+            start -= 1;
+        } else {
+            break;
+        }
+    }
+    if start == end {
+        return None;
+    }
+    Some(code[start..at].to_string())
+}
+
+/// Last identifier of the first argument after byte `at`
+/// (`lock_unpoisoned(&self.window.consumed)` → `consumed`).
+fn arg_tail_inside(code: &str, at: usize) -> Option<String> {
+    let rest = &code[at..];
+    let stop = rest.find([')', ','])?;
+    let arg = rest[..stop].trim().trim_start_matches('&').trim_start_matches("mut ");
+    let tail = arg
+        .rsplit(|c: char| !(c.is_ascii_alphanumeric() || c == '_'))
+        .find(|s| !s.is_empty())?;
+    // The tail may be an index (`jobs[i]` → `i`); prefer the first
+    // ident of the last dot segment in that case.
+    let last_seg = arg.rsplit('.').next().unwrap_or(arg);
+    let first_ident: String = last_seg
+        .chars()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+        .collect();
+    if first_ident.is_empty() {
+        Some(tail.to_string())
+    } else {
+        Some(first_ident)
+    }
+}
+
+/// C1 — consistent lock order, and no blocking call under a guard.
+///
+/// Tracks `let`-bound guards per function (a guard dies when its block
+/// closes or it is `drop`ped), records an order edge `held → acquired`
+/// for every acquisition under a held guard, flags blocking calls made
+/// while holding, and reports every strongly-connected component of the
+/// global order graph as a cycle.
+pub fn c1_lock_order(files: &[(SourceFile, FileItems)]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    // (from, to) → first site.
+    let mut order: BTreeMap<(String, String), (String, usize)> = BTreeMap::new();
+
+    for (src, items) in files {
+        // Brace depth at the start of each line, from the token stream.
+        let mut depth_start = vec![0i64; src.lines.len()];
+        {
+            let mut d = 0i64;
+            let mut li = 0usize;
+            for t in &items.toks {
+                while li < t.line - 1 {
+                    li += 1;
+                    if li < depth_start.len() {
+                        depth_start[li] = d;
+                    }
+                }
+                match t.text.as_str() {
+                    "{" => d += 1,
+                    "}" => d -= 1,
+                    _ => {}
+                }
+            }
+            for slot in depth_start.iter_mut().skip(li + 1) {
+                *slot = d;
+            }
+        }
+
+        // guards: (name, key, bind depth), innermost last, per fn.
+        let mut guards: Vec<(String, String, i64)> = Vec::new();
+        let mut cur_fn: Option<usize> = None;
+        for (li, line) in src.lines.iter().enumerate() {
+            // Comment-only and blank lines carry no tokens, so their
+            // `fn_of_line` is None — that is not a function change, and
+            // clearing on it would let any interleaved comment hide a
+            // held guard from the blocking check.
+            let this_fn = items.fn_of_line[li];
+            if this_fn.is_some() && this_fn != cur_fn {
+                guards.clear(); // entered a different fn
+                cur_fn = this_fn;
+            }
+            let in_fn = match this_fn {
+                Some(f) if !items.fns[f].is_test => true,
+                _ => false,
+            };
+            if !in_fn || line.is_test {
+                continue;
+            }
+            let d = depth_start[li];
+            guards.retain(|&(_, _, bind)| bind <= d);
+
+            let code = line.code.as_str();
+            // Explicit early release.
+            if let Some(p) = super::source::find_word(code, "drop", 0) {
+                if code[p + 4..].trim_start().starts_with('(') {
+                    guards.retain(|(name, _, _)| !super::source::has_word(code, name));
+                }
+            }
+
+            // Blocking call while holding any guard?
+            for pat in BLOCKING {
+                if code.contains(pat) {
+                    if let Some((name, key, _)) = guards.last() {
+                        out.push(Finding {
+                            path: src.rel_path.clone(),
+                            line: li + 1,
+                            rule: Some(RuleId::C1),
+                            fingerprint: String::new(),
+                            reason: format!(
+                                "`{}` blocks while guard `{name}` holds lock `{key}` — \
+                                 release the lock before blocking (scope the guard or \
+                                 `drop` it)",
+                                pat.trim_end_matches('('),
+                            ),
+                        });
+                    }
+                }
+            }
+
+            let acqs = acquisitions(code);
+            for (key, _) in &acqs {
+                for (_, held, _) in &guards {
+                    if held != key {
+                        order
+                            .entry((held.clone(), key.clone()))
+                            .or_insert((src.rel_path.clone(), li + 1));
+                    }
+                }
+            }
+            // A `let` binding persists the first acquisition as a guard.
+            if let Some((key, _)) = acqs.first() {
+                let trimmed = code.trim_start();
+                let is_let = trimmed.starts_with("let ")
+                    || trimmed.starts_with("while let ")
+                    || trimmed.starts_with("if let ");
+                if is_let {
+                    if let Some(name) = let_binding_name(trimmed) {
+                        guards.push((name, key.clone(), d));
+                    }
+                }
+            }
+        }
+    }
+
+    // Cycles: strongly-connected components of the order graph.
+    let mut nodes: BTreeSet<&String> = BTreeSet::new();
+    for (from, to) in order.keys() {
+        nodes.insert(from);
+        nodes.insert(to);
+    }
+    let reach = |a: &String, b: &String| -> bool {
+        let mut seen = BTreeSet::new();
+        let mut stack = vec![a];
+        while let Some(n) = stack.pop() {
+            if !seen.insert(n.clone()) {
+                continue;
+            }
+            for ((f, t), _) in &order {
+                if f == n {
+                    if t == b {
+                        return true;
+                    }
+                    stack.push(t);
+                }
+            }
+        }
+        false
+    };
+    // Merge mutually-reachable pairs into components.
+    let mut components: Vec<BTreeSet<String>> = Vec::new();
+    for a in &nodes {
+        for b in &nodes {
+            if a < b && reach(a, b) && reach(b, a) {
+                let pair: BTreeSet<String> = [(*a).clone(), (*b).clone()].into_iter().collect();
+                if let Some(c) = components.iter_mut().find(|c| !c.is_disjoint(&pair)) {
+                    c.extend(pair);
+                } else {
+                    components.push(pair);
+                }
+            }
+        }
+    }
+    for members in components {
+        let edges: Vec<(&(String, String), &(String, usize))> = order
+            .iter()
+            .filter(|((f, t), _)| members.contains(f) && members.contains(t))
+            .collect();
+        let Some((_, site)) = edges.first() else { continue };
+        let listing = edges
+            .iter()
+            .map(|((f, t), (p, l))| format!("{f} → {t} ({p}:{l})"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        out.push(Finding {
+            path: site.0.clone(),
+            line: site.1,
+            rule: Some(RuleId::C1),
+            fingerprint: String::new(),
+            reason: format!(
+                "lock-order cycle among {{{}}}: {listing} — pick one global order and \
+                 acquire in it everywhere",
+                members.iter().cloned().collect::<Vec<_>>().join(", "),
+            ),
+        });
+    }
+    out.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
+    out
+}
+
+fn let_binding_name(trimmed: &str) -> Option<String> {
+    let after = trimmed
+        .trim_start_matches("while ")
+        .trim_start_matches("if ")
+        .trim_start_matches("let ");
+    // Pattern bindings (`let (a, b) = …`, `let Some(g) = …`) take the
+    // first lowercase-starting ident of the pattern (left of the `=`).
+    let pat_part = after.split('=').next().unwrap_or(after);
+    pat_part
+        .split(|c: char| !(c.is_ascii_alphanumeric() || c == '_'))
+        .find(|w| {
+            !w.is_empty()
+                && *w != "_"
+                && *w != "mut"
+                && *w != "ref"
+                && w.chars().next().map(|c| c.is_ascii_lowercase() || c == '_').unwrap_or(false)
+        })
+        .map(str::to_string)
+}
+
+/// Allocation patterns A1 bans inside loop bodies of hot-path files.
+/// `with_capacity` in a prologue is the blessed alternative, so it is
+/// deliberately absent.
+const ALLOC_PATTERNS: &[&str] = &[
+    "Vec::new(",
+    "vec![",
+    ".to_vec()",
+    "String::new(",
+    ".to_string()",
+    "format!(",
+    "Box::new(",
+    ".push(",
+];
+
+/// A1 — no allocation inside loop bodies of files contracted to it
+/// (`runtime/kernels/`, `serve/infer.rs`): allocate in the prologue
+/// (`with_capacity`) and reuse across iterations.
+pub fn a1_hot_path_alloc(files: &[(SourceFile, FileItems)]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (src, items) in files {
+        let bound = contracts_for(&src.rel_path).iter().any(|(r, _)| *r == RuleId::A1);
+        if !bound {
+            continue;
+        }
+        for (li, line) in src.lines.iter().enumerate() {
+            if line.is_test || items.loop_depth[li] == 0 {
+                continue;
+            }
+            let in_prod_fn = items.fn_of_line[li]
+                .map(|f| !items.fns[f].is_test)
+                .unwrap_or(false);
+            if !in_prod_fn {
+                continue;
+            }
+            for pat in ALLOC_PATTERNS {
+                if line.code.contains(pat) {
+                    out.push(Finding {
+                        path: src.rel_path.clone(),
+                        line: li + 1,
+                        rule: Some(RuleId::A1),
+                        fingerprint: String::new(),
+                        reason: format!(
+                            "`{}` allocates inside a loop body on the hot path — hoist \
+                             to a `with_capacity` prologue or reuse a scratch buffer",
+                            pat.trim_end_matches('('),
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::{callgraph, items};
+
+    fn parsed(files: &[(&str, &str)]) -> Vec<(SourceFile, FileItems)> {
+        files
+            .iter()
+            .map(|(rel, text)| {
+                let src = SourceFile::parse(rel, text);
+                let it = items::parse(&src);
+                (src, it)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn r3_prints_the_call_chain() {
+        let files = parsed(&[(
+            "serve/server.rs",
+            "impl Server {\n    pub fn classify(&self, v: u32) -> u32 {\n        self.lookup(v)\n    }\n    fn lookup(&self, v: u32) -> u32 {\n        decode(v)\n    }\n}\n\nfn decode(v: u32) -> u32 {\n    table(v).unwrap()\n}\n\nfn table(v: u32) -> Option<u32> {\n    Some(v)\n}\n",
+        )]);
+        let g = callgraph::build(&files);
+        let f = r3_panic_reachability(&files, &g);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, Some(RuleId::R3));
+        assert_eq!(f[0].line, 11);
+        assert!(
+            f[0].reason.contains("Server::classify → Server::lookup → decode"),
+            "{}",
+            f[0].reason
+        );
+    }
+
+    #[test]
+    fn r3_ignores_unreachable_panics_and_in_crate_expect() {
+        let files = parsed(&[
+            ("net/routes.rs", "fn healthz(p: &mut Parser) -> u32 {\n    p.object()\n}\n"),
+            (
+                "util/json.rs",
+                "impl Parser {\n    fn object(&mut self) -> u32 {\n        self.expect(1)\n    }\n    fn expect(&mut self, b: u8) -> u32 {\n        b as u32\n    }\n}\n\nfn orphan() -> u32 {\n    None.unwrap()\n}\n",
+            ),
+        ]);
+        let g = callgraph::build(&files);
+        let f = r3_panic_reachability(&files, &g);
+        // `orphan` is not called from any root; the `.expect(` inside
+        // `object` resolved to the in-crate `Parser::expect` — both silent.
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn c1_finds_a_two_lock_cycle_once() {
+        let files = parsed(&[(
+            "coordinator/locks.rs",
+            "fn drain(s: &S) {\n    let q = s.queue.lock();\n    let st = s.stats.lock();\n    use2(q, st);\n}\n\nfn report(s: &S) {\n    let st = s.stats.lock();\n    let q = s.queue.lock();\n    use2(q, st);\n}\n\nfn use2(a: G, b: G) {}\n",
+        )]);
+        let f = c1_lock_order(&files);
+        let cycles: Vec<&Finding> =
+            f.iter().filter(|f| f.reason.contains("lock-order cycle")).collect();
+        assert_eq!(cycles.len(), 1, "{f:?}");
+        assert!(cycles[0].reason.contains("queue → stats"), "{}", cycles[0].reason);
+        assert!(cycles[0].reason.contains("stats → queue"), "{}", cycles[0].reason);
+    }
+
+    #[test]
+    fn c1_flags_blocking_under_guard_but_not_after_scope_close() {
+        let files = parsed(&[(
+            "serve/x.rs",
+            "fn ok(s: &S) {\n    let tx = {\n        let g = lock_unpoisoned(&s.job_tx);\n        g.clone()\n    };\n    tx.send(1);\n}\n\nfn bad(s: &S) {\n    let g = lock_unpoisoned(&s.work_rx);\n    g.recv();\n}\n",
+        )]);
+        let f = c1_lock_order(&files);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 11);
+        assert!(f[0].reason.contains("work_rx"), "{}", f[0].reason);
+    }
+
+    #[test]
+    fn a1_flags_loop_allocs_only_in_contracted_files() {
+        let kernel = "pub fn gather(n: usize) -> Vec<u32> {\n    let mut out = Vec::with_capacity(n);\n    for i in 0..n {\n        let row = base(i).to_vec();\n        out.push(row[0]);\n    }\n    out\n}\n";
+        let files = parsed(&[
+            ("runtime/kernels/gather.rs", kernel),
+            ("coordinator/free.rs", kernel),
+        ]);
+        let f = a1_hot_path_alloc(&files);
+        assert!(f.iter().all(|x| x.path == "runtime/kernels/gather.rs"), "{f:?}");
+        let lines: Vec<usize> = f.iter().map(|x| x.line).collect();
+        assert_eq!(lines, vec![4, 5], "{f:?}");
+        assert!(f[0].reason.contains(".to_vec"), "{}", f[0].reason);
+    }
+}

@@ -577,37 +577,109 @@ fn cmd_dse(argv: Vec<String>) -> anyhow::Result<()> {
 fn cmd_lint(argv: Vec<String>) -> anyhow::Result<()> {
     let args = Args::new(
         "hp-gnn lint",
-        "statically check the determinism (D1-D3) and serving-robustness (R1-R2) \
-         contracts over rust/src (rules + contract table: README \"Static analysis\")",
+        "statically check the determinism (D1-D3), serving-robustness (R1-R3), \
+         lock-order (C1), and hot-path allocation (A1) contracts over rust/src \
+         (rules + contract table: README \"Static analysis\")",
     )
     .flag("root", ".", "repository root (the directory containing rust/src)")
-    .switch("json", "emit the machine-readable report instead of diagnostics")
+    .flag("format", "text", "output format: text | json | sarif")
+    .flag(
+        "baseline",
+        "",
+        "ratchet file (e.g. lint_baseline.json): fail only on findings not in it, \
+         and on stale entries (regenerate via `make lint-baseline`)",
+    )
+    .switch("update-baseline", "rewrite the --baseline file from the current findings")
+    .switch("json", "shorthand for --format json")
     .parse_from(argv)?;
 
     let report = hp_gnn::lint::lint_tree(Path::new(args.get("root")))?;
-    if args.on("json") {
-        println!("{}", report.to_json().pretty());
-    } else if report.is_clean() {
+    let format = if args.on("json") { "json" } else { args.get("format") };
+
+    // Ratchet: with a baseline, only the delta decides pass/fail and the
+    // non-text formats show only unbaselined findings.
+    let baseline_path = args.get("baseline").to_string();
+    let (shown, delta) = if baseline_path.is_empty() {
+        (report.findings.clone(), None)
+    } else if args.on("update-baseline") {
+        let base = hp_gnn::lint::baseline::Baseline::from_findings(&report.findings);
+        std::fs::write(&baseline_path, base.to_json().pretty() + "\n")?;
         println!(
-            "lint: {} files clean ({} contract bindings across rules D1 D2 D3 R1 R2)",
-            report.files_scanned,
-            hp_gnn::lint::CONTRACTS.len(),
+            "lint: wrote {} accepted finding{} to {baseline_path}",
+            base.entries.len(),
+            if base.entries.len() == 1 { "" } else { "s" },
         );
+        return Ok(());
     } else {
-        // Same one-line-per-problem diagnostic rendering as `hp-gnn
-        // validate`: every finding in one pass, path:line anchored.
-        let diags = report.into_diagnostics();
-        println!(
-            "lint: {} problem{} in rust/src ({} files scanned)",
-            diags.len(),
-            if diags.len() == 1 { "" } else { "s" },
-            report.files_scanned,
-        );
-        for d in diags.iter() {
-            println!("  - {d}");
+        let text = std::fs::read_to_string(&baseline_path)
+            .map_err(|e| anyhow::anyhow!("lint: cannot read baseline {baseline_path}: {e}"))?;
+        let base = hp_gnn::lint::baseline::Baseline::parse(&text)
+            .map_err(|e| anyhow::anyhow!("lint: {e}"))?;
+        let delta = hp_gnn::lint::baseline::diff(&report.findings, &base);
+        let shown: Vec<_> =
+            delta.fresh.iter().map(|&i| report.findings[i].clone()).collect();
+        (shown, Some(delta))
+    };
+
+    let failed = match &delta {
+        Some(d) => !d.is_clean(),
+        None => !report.is_clean(),
+    };
+
+    match format {
+        "json" => println!("{}", report.to_json().pretty()),
+        "sarif" => println!("{}", hp_gnn::lint::sarif::sarif(&shown).pretty()),
+        "text" => {
+            if !shown.is_empty() {
+                let partial = hp_gnn::lint::Report {
+                    findings: shown.clone(),
+                    ..Default::default()
+                };
+                let diags = partial.into_diagnostics();
+                println!(
+                    "lint: {} problem{} in rust/src ({} files scanned{})",
+                    diags.len(),
+                    if diags.len() == 1 { "" } else { "s" },
+                    report.files_scanned,
+                    if delta.is_some() { ", baseline applied" } else { "" },
+                );
+                for d in diags.iter() {
+                    println!("  - {d}");
+                }
+            }
+            if let Some(d) = &delta {
+                for e in &d.stale {
+                    println!(
+                        "  - {}: baseline entry {} ({}) no longer found — the debt \
+                         shrank; run `make lint-baseline` to lock it in",
+                        e.path, e.fingerprint, e.rule,
+                    );
+                }
+            }
+            if !failed {
+                println!(
+                    "lint: {} files clean ({} contract bindings; callgraph {} fns, \
+                     {} edges, {:.1}% of {} calls resolved{})",
+                    report.files_scanned,
+                    hp_gnn::lint::CONTRACTS.len(),
+                    report.stats.functions,
+                    report.edge_count,
+                    report.stats.resolution_pct(),
+                    report.stats.calls,
+                    match &delta {
+                        Some(_) => format!(
+                            "; {} accepted baseline finding{}",
+                            report.findings.len(),
+                            if report.findings.len() == 1 { "" } else { "s" },
+                        ),
+                        None => String::new(),
+                    },
+                );
+            }
         }
+        other => anyhow::bail!("lint: unknown --format {other:?} (text | json | sarif)"),
     }
-    if !report.is_clean() {
+    if failed {
         std::process::exit(1);
     }
     Ok(())

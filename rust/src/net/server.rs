@@ -24,6 +24,7 @@ use std::time::Duration;
 use super::http::{read_request, HttpError, Limits, Response};
 use super::router::Router;
 use crate::util::stats::Timer;
+use crate::util::sync::lock_unpoisoned;
 use crate::util::threadpool::run_jobs;
 
 /// How often blocked reads wake up to check the stop flag.
@@ -121,10 +122,8 @@ fn serve_pool(listener: TcpListener, router: Arc<Router>, opts: HttpOptions, sto
         let opts = opts.clone();
         jobs.push(Box::new(move || loop {
             let conn = {
-                let guard = match rx.lock() {
-                    Ok(g) => g,
-                    Err(p) => p.into_inner(),
-                };
+                let guard = lock_unpoisoned(&rx);
+                // lint:allow(C1): workers share one receiver; the lock serializes only this wait
                 guard.recv()
             };
             match conn {

@@ -40,31 +40,14 @@ pub mod server;
 pub use metrics::{MetricsSnapshot, ServeMetrics};
 pub use server::{ServeConfig, Server};
 
-use std::sync::{Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
-
 use crate::graph::Vid;
 use crate::util::rng::{Pcg64, SplitMix64};
 
-/// Acquire a mutex, recovering from poisoning (the R1
-/// no-panic-in-serving-path contract, `hp-gnn lint`).  A panicked thread
-/// poisons the lock, but every mutex in this subsystem guards data that
-/// stays structurally valid mid-update (cache map + ring, metrics sample
-/// windows, an `Option<Sender>`), so the right response is to keep
-/// serving with the last written state — not to cascade the panic
-/// through every worker and client thread.
-pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(PoisonError::into_inner)
-}
-
-/// [`lock_unpoisoned`], read half of an `RwLock` (same rationale).
-pub(crate) fn read_unpoisoned<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
-    l.read().unwrap_or_else(PoisonError::into_inner)
-}
-
-/// [`lock_unpoisoned`], write half of an `RwLock` (same rationale).
-pub(crate) fn write_unpoisoned<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
-    l.write().unwrap_or_else(PoisonError::into_inner)
-}
+// The poison-recovering lock helpers used to live here; the training
+// coordinator needs them too, so they moved to [`crate::util::sync`]
+// (rationale in that module's docs).  Re-exported so the serving
+// subsystem keeps its historical import path.
+pub(crate) use crate::util::sync::{lock_unpoisoned, read_unpoisoned, write_unpoisoned};
 
 /// The answer to one "classify vertex v" request.
 #[derive(Debug, Clone, PartialEq)]
@@ -90,31 +73,8 @@ pub fn vertex_rng(seed: u64, v: Vid) -> Pcg64 {
 mod tests {
     use super::*;
 
-    #[test]
-    fn lock_helpers_recover_from_poisoning() {
-        use std::sync::Arc;
-        let m = Arc::new(Mutex::new(5u32));
-        let m2 = Arc::clone(&m);
-        let _ = std::thread::spawn(move || {
-            let _g = m2.lock().unwrap();
-            panic!("poison the mutex");
-        })
-        .join();
-        assert!(m.lock().is_err(), "mutex must actually be poisoned");
-        assert_eq!(*lock_unpoisoned(&m), 5, "last written state survives");
-
-        let l = Arc::new(RwLock::new(7u32));
-        let l2 = Arc::clone(&l);
-        let _ = std::thread::spawn(move || {
-            let _g = l2.write().unwrap();
-            panic!("poison the rwlock");
-        })
-        .join();
-        assert!(l.read().is_err(), "rwlock must actually be poisoned");
-        assert_eq!(*read_unpoisoned(&l), 7);
-        *write_unpoisoned(&l) = 8;
-        assert_eq!(*read_unpoisoned(&l), 8);
-    }
+    // The poisoning-recovery behavior itself is covered where the helpers
+    // now live: `util::sync::tests::lock_helpers_recover_from_poisoning`.
 
     #[test]
     fn vertex_rng_is_pure_and_vertex_distinct() {

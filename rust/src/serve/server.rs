@@ -584,6 +584,7 @@ fn run_worker(ctx: WorkerCtx) {
         // serialized — execution below runs with the lock released.
         let batch = {
             let guard = lock_unpoisoned(&ctx.work_rx);
+            // lint:allow(C1): the shared-receiver lock exists to serialize exactly this wait
             match guard.recv() {
                 Ok(b) => b,
                 Err(_) => return, // batcher gone: shutdown

@@ -416,6 +416,7 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
+        // lint:allow(R3): the scanned slice holds only ASCII digits/signs, so from_utf8 cannot fail
         let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
         text.parse::<f64>()
             .map(Json::Num)

@@ -14,6 +14,7 @@
 //! * [`stats`] — timers, running stats, percentiles for the metrics path.
 //! * [`bench`] — the measurement harness used by `cargo bench` targets.
 //! * [`prop`] — a miniature property-testing harness (proptest analog).
+//! * [`sync`] — poison-recovering lock helpers (serving + training).
 
 pub mod bench;
 pub mod cli;
@@ -21,6 +22,7 @@ pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod threadpool;
 
 /// Round `x` up to the next multiple of `m` (minimum one block).

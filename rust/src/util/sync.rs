@@ -1,0 +1,58 @@
+//! Poison-recovering lock helpers shared by serving and training.
+//!
+//! A panicked thread poisons the lock it held, but every mutex these
+//! helpers guard in this codebase protects data that stays structurally
+//! valid mid-update (cache map + ring, metrics sample windows, an
+//! `Option<Sender>`, the producer claim window's consumed counter), so
+//! the right response is to keep going with the last written state — not
+//! to cascade the panic through every worker, producer, and client
+//! thread.  This is the blessed alternative the R3
+//! no-panic-reachable-from-serving contract points at (`hp-gnn lint`).
+
+use std::sync::{Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Acquire a mutex, recovering from poisoning.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`lock_unpoisoned`], read half of an `RwLock` (same rationale).
+pub fn read_unpoisoned<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`lock_unpoisoned`], write half of an `RwLock` (same rationale).
+pub fn write_unpoisoned<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex, RwLock};
+
+    #[test]
+    fn lock_helpers_recover_from_poisoning() {
+        let m = Arc::new(Mutex::new(5u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the mutex");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex must actually be poisoned");
+        assert_eq!(*lock_unpoisoned(&m), 5, "last written state survives");
+
+        let l = Arc::new(RwLock::new(7u32));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison the rwlock");
+        })
+        .join();
+        assert!(l.read().is_err(), "rwlock must actually be poisoned");
+        assert_eq!(*read_unpoisoned(&l), 7);
+        *write_unpoisoned(&l) = 8;
+        assert_eq!(*read_unpoisoned(&l), 8);
+    }
+}

@@ -6,7 +6,9 @@
 //! reference stack data of the caller.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, PoisonError};
+
+use crate::util::sync::lock_unpoisoned;
 
 /// Run `jobs` closures on up to `threads` workers; returns results in job
 /// order.  Panics in jobs propagate to the caller (fail fast, like rayon).
@@ -30,16 +32,18 @@ where
                 if i >= n {
                     break;
                 }
-                let job = jobs[i].lock().unwrap().take().expect("job taken twice");
+                // lint:allow(R3): fetch_add hands each index to exactly one worker, so the slot is Some
+                let job = lock_unpoisoned(&jobs[i]).take().expect("job taken twice");
                 let out = job();
-                *results[i].lock().unwrap() = Some(out);
+                *lock_unpoisoned(&results[i]) = Some(out);
             });
         }
     });
 
     results
         .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker dropped a result"))
+        // lint:allow(R3): scope() already propagated any worker panic, so every slot was written
+        .map(|m| m.into_inner().unwrap_or_else(PoisonError::into_inner).expect("worker dropped a result"))
         .collect()
 }
 

@@ -1,0 +1,12 @@
+//! Seeded A1 violation: an allocation inside a kernel loop body.  The
+//! `with_capacity` prologue above the loop is the blessed idiom and
+//! must stay unflagged.
+
+pub fn gather_rows(src: &[f32], idx: &[usize], width: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(idx.len() * width);
+    for &i in idx {
+        let row = src[i * width..(i + 1) * width].to_vec();
+        out.extend_from_slice(&row);
+    }
+    out
+}

@@ -1,0 +1,21 @@
+//! Seeded C1 violation: two locks acquired in both orders across
+//! functions — the classic AB/BA deadlock shape.
+
+use std::sync::Mutex;
+
+pub struct Shared {
+    pub queue: Mutex<Vec<u32>>,
+    pub stats: Mutex<u64>,
+}
+
+pub fn drain(s: &Shared) -> usize {
+    let q = s.queue.lock().unwrap();
+    let st = s.stats.lock().unwrap();
+    q.len() + *st as usize
+}
+
+pub fn report(s: &Shared) -> usize {
+    let st = s.stats.lock().unwrap();
+    let q = s.queue.lock().unwrap();
+    *st as usize + q.len()
+}

@@ -1,5 +1,5 @@
-//! Seeded R1 violation: a panicking unwrap on a serving request path.
+//! Seeded R1 violation: a panicking unwrap inside the training driver.
 
-pub fn first_logit(logits: &[f32]) -> f32 {
+pub fn drive(logits: &[f32]) -> f32 {
     *logits.first().unwrap()
 }

@@ -1,0 +1,20 @@
+//! Seeded R3 violation: a panic two hops below the serving entrypoint.
+//! `classify` is an R3 root; the reachable `.unwrap()` lives in a free
+//! helper the textual R1 rule could never have connected to it.
+
+pub struct Server;
+
+impl Server {
+    pub fn classify(&self, raw: &[u8]) -> Vec<f32> {
+        self.lookup(raw)
+    }
+
+    fn lookup(&self, raw: &[u8]) -> Vec<f32> {
+        decode(raw)
+    }
+}
+
+fn decode(raw: &[u8]) -> Vec<f32> {
+    let head = raw.first().unwrap();
+    vec![*head as f32]
+}

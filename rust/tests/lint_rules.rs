@@ -3,12 +3,14 @@
 //! Each fixture under `lint_fixtures/` seeds exactly one violation (or
 //! exercises the pragma machinery); the tests pin rule id, path, and
 //! line, so the scanner cannot silently stop seeing a pattern.  The
-//! final test lints the real `rust/src` tree — the repo itself must stay
-//! clean, which is exactly what `make lint` / CI enforce.
+//! final tests lint the real `rust/src` tree — the repo must stay
+//! delta-clean against the committed `lint_baseline.json`, which is
+//! exactly what `make lint` / CI enforce.
 //!
 //! Fixture files live in a subdirectory so cargo does not compile them
 //! as test targets (several would not build — that is the point).
 
+use hp_gnn::lint::baseline::{diff, Baseline};
 use hp_gnn::lint::{lint_source, lint_tree, Finding, RuleId};
 
 /// Run `lint_source` and insist the fixture seeds exactly one finding.
@@ -53,8 +55,13 @@ fn d3_fixture_flags_adhoc_float_sum() {
 }
 
 #[test]
-fn r1_fixture_flags_unwrap_in_serving_path() {
-    let f = only_finding("serve/r1_panic.rs", include_str!("lint_fixtures/r1_panic.rs"));
+fn r1_fixture_flags_unwrap_in_contracted_function() {
+    // R1 is now function-scoped to the training driver; the old serve/
+    // binding was replaced by the transitive R3.
+    let f = only_finding(
+        "coordinator/session.rs",
+        include_str!("lint_fixtures/r1_panic.rs"),
+    );
     assert_eq!(f.rule, Some(RuleId::R1));
     assert_eq!(f.line, 4, "the `.unwrap()` line: {}", f.reason);
     assert!(f.reason.contains(".unwrap"), "{}", f.reason);
@@ -66,6 +73,45 @@ fn r2_fixture_flags_unchecked_loader_multiply() {
     assert_eq!(f.rule, Some(RuleId::R2));
     assert_eq!(f.line, 4, "the `n_rows * row_bytes` line: {}", f.reason);
     assert!(f.reason.contains("checked_mul"), "{}", f.reason);
+}
+
+#[test]
+fn r3_fixture_flags_reachable_panic_with_call_chain() {
+    let f = only_finding("serve/server.rs", include_str!("lint_fixtures/r3_chain.rs"));
+    assert_eq!(f.rule, Some(RuleId::R3));
+    assert_eq!(f.line, 18, "the `.unwrap()` line in `decode`: {}", f.reason);
+    assert!(
+        f.reason.contains("Server::classify → Server::lookup → decode"),
+        "the shortest root-to-panic chain must be printed: {}",
+        f.reason
+    );
+}
+
+#[test]
+fn c1_fixture_flags_the_ab_ba_lock_cycle_once() {
+    let f = only_finding(
+        "coordinator/locks.rs",
+        include_str!("lint_fixtures/c1_lock_cycle.rs"),
+    );
+    assert_eq!(f.rule, Some(RuleId::C1));
+    assert_eq!(f.line, 13, "anchored at the first cycle edge: {}", f.reason);
+    assert!(f.reason.contains("cycle"), "{}", f.reason);
+    assert!(
+        f.reason.contains("queue") && f.reason.contains("stats"),
+        "both locks of the cycle must be named: {}",
+        f.reason
+    );
+}
+
+#[test]
+fn a1_fixture_flags_loop_alloc_but_not_the_prologue() {
+    let f = only_finding(
+        "runtime/kernels/a1_alloc.rs",
+        include_str!("lint_fixtures/a1_alloc_in_loop.rs"),
+    );
+    assert_eq!(f.rule, Some(RuleId::A1));
+    assert_eq!(f.line, 8, "the `.to_vec()` line inside the loop: {}", f.reason);
+    assert!(f.reason.contains(".to_vec()"), "{}", f.reason);
 }
 
 #[test]
@@ -96,19 +142,66 @@ fn unused_pragma_is_itself_a_finding() {
 
 #[test]
 fn fixtures_cover_every_contract_rule() {
-    // The five seeded fixtures above demonstrate D1, D2, D3, R1, R2 —
-    // keep this inventory in sync so adding a rule forces a fixture.
-    assert_eq!(RuleId::ALL.len(), 5);
+    // The eight seeded fixtures above demonstrate D1, D2, D3, R1, R2,
+    // R3, C1, A1 — keep this inventory in sync so adding a rule forces
+    // a fixture.
+    assert_eq!(RuleId::ALL.len(), 8);
 }
 
 #[test]
-fn the_repo_tree_is_lint_clean() {
+fn fingerprints_are_stable_and_baselines_round_trip() {
+    let findings = lint_source("serve/server.rs", include_str!("lint_fixtures/r3_chain.rs"));
+    assert_eq!(findings.len(), 1);
+    assert_eq!(findings[0].fingerprint.len(), 16, "{:?}", findings[0].fingerprint);
+
+    let base = Baseline::from_findings(&findings);
+    let round = Baseline::parse(&base.to_json().pretty()).expect("baseline JSON round-trips");
+    assert_eq!(round.entries, base.entries);
+    assert!(diff(&findings, &round).is_clean(), "a finding is clean against its own baseline");
+
+    // The ratchet's two failure modes: a fresh finding, and a stale entry.
+    let empty = Baseline { entries: Vec::new() };
+    let d = diff(&findings, &empty);
+    assert_eq!(d.fresh.len(), 1, "unbaselined findings are fresh");
+    let d = diff(&[], &base);
+    assert_eq!(d.stale.len(), 1, "fixed findings leave stale entries behind");
+}
+
+#[test]
+fn the_repo_tree_is_delta_clean_against_the_committed_baseline() {
     let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
     let report = lint_tree(&root).expect("lint_tree over the real repo");
     assert!(report.files_scanned > 30, "only scanned {} files", report.files_scanned);
+
+    let text = std::fs::read_to_string(root.join("lint_baseline.json"))
+        .expect("committed lint_baseline.json");
+    let base = Baseline::parse(&text).expect("parse committed baseline");
+    let d = diff(&report.findings, &base);
     assert!(
-        report.is_clean(),
-        "rust/src must stay lint-clean (fix or lint:allow with a reason):\n{}",
+        d.is_clean(),
+        "rust/src must stay delta-clean against lint_baseline.json \
+         (fix, lint:allow with a reason, or `make lint-baseline`): \
+         fresh={:?} stale={:?}\n{}",
+        d.fresh,
+        d.stale,
         report.into_diagnostics()
+    );
+}
+
+#[test]
+fn the_real_callgraph_is_substantial_and_mostly_resolved() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    let report = lint_tree(&root).expect("lint_tree over the real repo");
+    assert!(report.stats.functions > 100, "functions: {}", report.stats.functions);
+    assert!(report.edge_count > 100, "edges: {}", report.edge_count);
+    assert!(
+        report.stats.resolution_pct() >= 80.0,
+        "call resolution fell below the 80% floor: {:.1}% of {} calls \
+         (resolved {} / external {} / ambiguous {})",
+        report.stats.resolution_pct(),
+        report.stats.calls,
+        report.stats.resolved,
+        report.stats.external,
+        report.stats.ambiguous
     );
 }
