@@ -188,6 +188,32 @@ fn train_step_bench(profile: &str, out_path: &str) {
         .collect();
     set.persist();
 
+    // Per-stage breakdown: trace one step at the widest thread count and
+    // aggregate span totals (kernel flop/byte counts ride along).  Traced
+    // and untraced runs are bit-identical — tracing only observes time —
+    // so this does not perturb the timed measurements above.
+    hp_gnn::obs::trace::enable();
+    let traced = ReferenceBackend::with_threads(*thread_counts.last().unwrap())
+        .compile(&manifest, &spec)
+        .expect("compile traced");
+    black_box(traced.run(&lits).unwrap());
+    let trace = hp_gnn::obs::trace::disable();
+    let stage_json = |t: &hp_gnn::obs::trace::StageTotal| {
+        Json::obj(vec![
+            ("calls", Json::num(t.calls as f64)),
+            ("total_s", Json::num(t.total_s)),
+            ("flops", Json::num(t.flops)),
+            ("bytes", Json::num(t.bytes)),
+        ])
+    };
+    let stages = Json::Obj(
+        trace
+            .stage_totals()
+            .iter()
+            .map(|((cat, name), t)| (format!("{cat}/{name}"), stage_json(t)))
+            .collect(),
+    );
+
     // --- BENCH_hotpath.json: the perf-trajectory anchor. ---
     let samples = geom.b[geom.layers()] as f64; // target vertices per step
     let run_json = |r: &StepRun| {
@@ -202,7 +228,7 @@ fn train_step_bench(profile: &str, out_path: &str) {
     };
     let doc = Json::obj(vec![
         ("bench", Json::str("hotpath-train-step")),
-        ("schema_version", Json::num(1.0)),
+        ("schema_version", Json::num(2.0)),
         ("profile", Json::str(profile)),
         ("model", Json::str("gcn")),
         ("optimizer", Json::str("adam")),
@@ -218,13 +244,14 @@ fn train_step_bench(profile: &str, out_path: &str) {
         ),
         ("baseline", run_json(&baseline)),
         ("runs", Json::arr(runs.iter().map(run_json).collect())),
+        ("stages", stages),
     ]);
     std::fs::write(out_path, doc.pretty()).expect("write BENCH_hotpath.json");
 
     // Self-validate the written file so the harness can't silently rot.
     let text = std::fs::read_to_string(out_path).expect("read back");
     let parsed = Json::parse(&text).expect("BENCH_hotpath.json must parse");
-    for key in ["bench", "profile", "geometry", "host_parallelism", "baseline", "runs"] {
+    for key in ["bench", "profile", "geometry", "host_parallelism", "baseline", "runs", "stages"] {
         parsed.get(key).unwrap_or_else(|e| panic!("missing {key}: {e:?}"));
     }
     let runs_arr = parsed.get("runs").unwrap().as_arr().expect("runs array");
@@ -235,6 +262,19 @@ fn train_step_bench(profile: &str, out_path: &str) {
         assert!(r.get("samples_per_s").unwrap().as_f64().unwrap() > 0.0);
     }
     assert!(parsed.get("baseline").unwrap().get("step_s").unwrap().as_f64().unwrap() > 0.0);
+    let Json::Obj(stage_map) = parsed.get("stages").unwrap() else {
+        panic!("stages must be an object");
+    };
+    assert!(
+        stage_map.keys().any(|k| k.starts_with("kernel/")),
+        "traced step must record kernel stages"
+    );
+    for (k, v) in stage_map {
+        assert!(v.get("calls").unwrap().as_f64().unwrap() >= 1.0, "{k}: calls");
+        assert!(v.get("total_s").unwrap().as_f64().unwrap() >= 0.0, "{k}: total_s");
+        v.get("flops").unwrap_or_else(|e| panic!("{k} missing flops: {e:?}"));
+        v.get("bytes").unwrap_or_else(|e| panic!("{k} missing bytes: {e:?}"));
+    }
     println!("\nwrote {out_path} (validated, {} runs)", runs_arr.len());
 
     if let Some(best) = runs

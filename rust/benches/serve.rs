@@ -60,6 +60,29 @@ struct LoadResult {
     batches: u64,
     mean_batch_occupancy: Option<f64>,
     cache_hits: u64,
+    queue_wait: StageDist,
+    coalesce: StageDist,
+    infer: StageDist,
+}
+
+/// Per-stage serving-time distribution, pulled from the metrics
+/// histograms after a load run (queue wait, coalesce window, inference).
+struct StageDist {
+    count: u64,
+    total_s: f64,
+    mean_s: Option<f64>,
+    p95_s: Option<f64>,
+}
+
+impl StageDist {
+    fn from_snapshot(h: &hp_gnn::obs::HistogramSnapshot) -> StageDist {
+        StageDist {
+            count: h.count(),
+            total_s: h.sum,
+            mean_s: (h.count() > 0).then(|| h.mean()),
+            p95_s: h.percentile(95.0),
+        }
+    }
 }
 
 fn main() {
@@ -467,6 +490,9 @@ fn finish(
         batches: m.batches,
         mean_batch_occupancy: m.mean_occupancy(),
         cache_hits: m.cache_hits,
+        queue_wait: StageDist::from_snapshot(&m.queue_wait),
+        coalesce: StageDist::from_snapshot(&m.coalesce),
+        infer: StageDist::from_snapshot(&m.exec),
     };
     Arc::into_inner(srv).expect("all clients joined").shutdown();
     result
@@ -526,6 +552,15 @@ fn opt_num(x: Option<f64>) -> Json {
     x.map(Json::num).unwrap_or(Json::Null)
 }
 
+fn stage_json(s: &StageDist) -> Json {
+    Json::obj(vec![
+        ("count", Json::num(s.count as f64)),
+        ("total_s", Json::num(s.total_s)),
+        ("mean_s", opt_num(s.mean_s)),
+        ("p95_s", opt_num(s.p95_s)),
+    ])
+}
+
 fn write_json(
     out_path: &str,
     profile: &str,
@@ -557,11 +592,19 @@ fn write_json(
             ("batches", Json::num(r.batches as f64)),
             ("mean_batch_occupancy", opt_num(r.mean_batch_occupancy)),
             ("cache_hits", Json::num(r.cache_hits as f64)),
+            (
+                "stages",
+                Json::obj(vec![
+                    ("queue_wait_s", stage_json(&r.queue_wait)),
+                    ("coalesce_s", stage_json(&r.coalesce)),
+                    ("infer_s", stage_json(&r.infer)),
+                ]),
+            ),
         ])
     };
     let doc = Json::obj(vec![
         ("bench", Json::str("serve-loadgen")),
-        ("schema_version", Json::num(1.0)),
+        ("schema_version", Json::num(2.0)),
         ("profile", Json::str(profile)),
         ("model", Json::str("gcn")),
         ("geometry", Json::str("tiny")),
@@ -642,7 +685,19 @@ fn write_json(
     for r in runs_arr {
         assert!(r.get("throughput_rps").unwrap().as_f64().unwrap() > 0.0);
         assert!(r.get("elapsed_s").unwrap().as_f64().unwrap() > 0.0);
+        let st = r.get("stages").unwrap_or_else(|e| panic!("run missing stages: {e:?}"));
+        for stage in ["queue_wait_s", "coalesce_s", "infer_s"] {
+            let d = st.get(stage).unwrap_or_else(|e| panic!("missing stage {stage}: {e:?}"));
+            assert!(d.get("count").unwrap().as_f64().unwrap() >= 0.0, "{stage}: count");
+            assert!(d.get("total_s").unwrap().as_f64().unwrap() >= 0.0, "{stage}: total_s");
+        }
     }
+    // The batched acceptance run must have actually timed inference.
+    let batched_stages = find(4.0, 64.0).get("stages").unwrap();
+    assert!(
+        batched_stages.get("infer_s").unwrap().get("count").unwrap().as_f64().unwrap() > 0.0,
+        "batched run recorded no inference stage"
+    );
     assert_eq!(parsed.get("determinism").unwrap().as_str().unwrap(), "bit-identical");
 
     // The persisted SLO trajectory must carry the admission-control

@@ -14,5 +14,5 @@ pub mod session;
 pub mod trainer;
 
 pub use eval::{evaluate, evaluate_with, EvalReport};
-pub use session::{EvalEvent, StepReport, TrainingSession};
+pub use session::{EvalEvent, StepReport, StepStages, TrainingSession};
 pub use trainer::{train, TrainConfig, TrainReport};

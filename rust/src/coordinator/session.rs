@@ -70,8 +70,27 @@ pub struct StepReport {
     pub prep_s: f64,
     /// Backend execution time (seconds).
     pub exec_s: f64,
+    /// Per-stage breakdown of `prep_s`.
+    pub stages: StepStages,
     /// Simulated accelerator t_GNN, when `cfg.simulate` is set.
     pub t_gnn_sim: Option<f64>,
+}
+
+/// Producer-side per-stage timings of one prepared batch (seconds).
+/// Timings are observational only — nothing downstream branches on them
+/// (the traced-vs-untraced bit-identity contract).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepStages {
+    /// Sampler draw (`Sampler::sample`).
+    pub sample_s: f64,
+    /// Edge-value attachment (GCN norms / SAGE / GIN / custom UDF).
+    pub values_s: f64,
+    /// Positional layout (`index_batch`, RMT/RRA).
+    pub layout_s: f64,
+    /// Padding to the artifact geometry.
+    pub pad_s: f64,
+    /// Feature/label synthesis + feature padding.
+    pub features_s: f64,
 }
 
 /// Payload of the `on_eval` hook.
@@ -89,6 +108,7 @@ struct Prepared {
     features: Vec<f32>,
     indexed: IndexedBatch,
     prep_s: f64,
+    stages: StepStages,
 }
 
 /// Producer throttle: step claims may run at most [`CLAIM_WINDOW`] ×
@@ -403,11 +423,12 @@ impl<'rt> TrainingSession<'rt> {
                     num_classes,
                     &mut rng,
                 )
-                .map(|(padded, features, indexed)| Prepared {
+                .map(|(padded, features, indexed, stages)| Prepared {
                     padded,
                     features,
                     indexed,
                     prep_s: t.secs(),
+                    stages,
                 });
                 if tx.send((k, item)).is_err() {
                     break; // session finished or dropped
@@ -522,7 +543,14 @@ impl<'rt> TrainingSession<'rt> {
         *lock_unpoisoned(&self.window.consumed) = self.step;
         self.window.advanced.notify_all();
 
-        let report = StepReport { step: k, loss, prep_s: prepared.prep_s, exec_s, t_gnn_sim };
+        let report = StepReport {
+            step: k,
+            loss,
+            prep_s: prepared.prep_s,
+            exec_s,
+            stages: prepared.stages,
+            t_gnn_sim,
+        };
         let mut hooks = std::mem::take(&mut self.step_hooks);
         for hook in &mut hooks {
             hook(&report);
@@ -727,24 +755,35 @@ fn prepare_batch(
     feat_dim: usize,
     num_classes: usize,
     rng: &mut Pcg64,
-) -> anyhow::Result<(PaddedBatch, Vec<f32>, IndexedBatch)> {
+) -> anyhow::Result<(PaddedBatch, Vec<f32>, IndexedBatch, StepStages)> {
+    let mut stages = StepStages::default();
+    let t = Timer::start();
     let mb = sampler.sample(graph, rng);
+    stages.sample_s = t.secs();
+    let t = Timer::start();
     let values = match &cfg.value_fn {
         Some(f) => f(graph, &mb),
         None => attach_values(graph, &mb, cfg.model),
     };
+    stages.values_s = t.secs();
+    let t = Timer::start();
     let indexed = index_batch(&mb, &values, cfg.layout);
+    stages.layout_s = t.secs();
     let ll = mb.num_layers();
     let target_labels =
         datasets::synth_labels(&mb.layers[ll], num_classes, cfg.seed, graph.num_vertices());
+    let t = Timer::start();
     let padded = pad(&indexed, &target_labels, geom, cfg.overflow)?;
+    stages.pad_s = t.secs();
     // Feature rows for B^0, labels drawn from the same per-vertex stream
     // so the task is learnable.
+    let t = Timer::start();
     let l0_labels =
         datasets::synth_labels(&mb.layers[0], num_classes, cfg.seed, graph.num_vertices());
     let real = datasets::synth_features(&mb.layers[0], &l0_labels, feat_dim, num_classes, cfg.seed);
     let features = inputs::pad_features(&real, mb.layers[0].len(), geom.b[0], feat_dim);
-    Ok((padded, features, indexed))
+    stages.features_s = t.secs();
+    Ok((padded, features, indexed, stages))
 }
 
 #[cfg(test)]

@@ -127,6 +127,7 @@ pub fn index_batch(
     values: &EdgeValues,
     opts: LayoutOptions,
 ) -> IndexedBatch {
+    let _sp = crate::obs::span("pipeline", "layout");
     let ll = batch.num_layers();
     assert_eq!(values.len(), ll, "values per layer");
 

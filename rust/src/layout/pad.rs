@@ -91,6 +91,7 @@ pub fn pad(
     geom: &Geometry,
     overflow: EdgeOverflow,
 ) -> anyhow::Result<PaddedBatch> {
+    let _sp = crate::obs::span("pipeline", "pad");
     geom.validate()?;
     let ll = batch.num_layers();
     anyhow::ensure!(

@@ -30,6 +30,7 @@ pub mod graph;
 pub mod layout;
 pub mod lint;
 pub mod net;
+pub mod obs;
 pub mod perf;
 pub mod repro;
 pub mod runtime;

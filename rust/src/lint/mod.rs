@@ -214,8 +214,24 @@ pub const CONTRACTS: &[Contract] = &[
         prefix: "net/",
         rule: RuleId::D2,
         scope: Scope::File,
-        why: "latency and socket deadlines go through util::stats::Timer; raw \
-              wall-clock reads need a reasoned allow (the request-log timestamp)",
+        why: "latency and socket deadlines go through util::stats::Timer; the \
+              request-log wall-clock read lives in obs::events now, so net/ \
+              itself carries no allow",
+    },
+    Contract {
+        prefix: "obs/",
+        rule: RuleId::D1,
+        scope: Scope::File,
+        why: "telemetry must render deterministically (BTreeMap-ordered \
+              registry/exposition) — observation cannot reintroduce map-order \
+              nondeterminism",
+    },
+    Contract {
+        prefix: "obs/",
+        rule: RuleId::D2,
+        scope: Scope::File,
+        why: "the tracer clocks through a Timer epoch; the single reasoned \
+              wall-clock read in the tree is obs/events.rs's event timestamp",
     },
     Contract {
         prefix: "serve/infer.rs",
@@ -566,6 +582,9 @@ mod tests {
         assert!(net.iter().any(|(r, _)| *r == RuleId::D2), "net/ owes Timer-only time");
         let infer = contracts_for("serve/infer.rs");
         assert!(infer.iter().any(|(r, _)| *r == RuleId::A1), "infer owes hot-path alloc");
+        let obs = contracts_for("obs/trace.rs");
+        assert!(obs.iter().any(|(r, _)| *r == RuleId::D1), "obs/ owes deterministic render");
+        assert!(obs.iter().any(|(r, _)| *r == RuleId::D2), "obs/ owes Timer-only clocks");
         assert!(contracts_for("util/json.rs").is_empty(), "uncontracted module");
     }
 

@@ -220,6 +220,12 @@ fn cmd_train(argv: Vec<String>) -> anyhow::Result<()> {
             .flag("optimizer", "sgd", "sgd | adam")
             .flag("save", "", "Save_model(): final weights path (empty = no save)")
             .flag("eval-batches", "", "held-out eval batches (also run once after training)")
+            .flag(
+                "trace",
+                "",
+                "write a Chrome trace_event JSON profile to this path \
+                 (load in chrome://tracing or Perfetto)",
+            )
             .switch("simulate", "attach accelerator-simulator timing")
             .switch("no-rmt", "disable the RMT layout optimization")
             .switch("no-rra", "disable the RRA layout optimization"),
@@ -239,6 +245,11 @@ fn cmd_train(argv: Vec<String>) -> anyhow::Result<()> {
         other => anyhow::bail!("unknown sampler {other:?} (ns|ss)"),
     };
     let layout = LayoutOptions { rmt: !args.on("no-rmt"), rra: !args.on("no-rra") };
+    let trace_path =
+        (!args.get("trace").is_empty()).then(|| PathBuf::from(args.get("trace")));
+    if trace_path.is_some() {
+        hp_gnn::obs::trace::enable();
+    }
     let steps = args.usize("steps");
     let seed = args.usize("seed") as u64;
     let spec = HpGnn::init()
@@ -318,6 +329,15 @@ fn cmd_train(argv: Vec<String>) -> anyhow::Result<()> {
         report.final_weights.save(&path)?;
         println!("Save_model(): wrote weights to {path:?}");
     }
+    if let Some(path) = &trace_path {
+        let trace = hp_gnn::obs::trace::disable();
+        trace.write(path)?;
+        println!(
+            "trace: wrote {} events to {path:?} ({} spans dropped at the buffer cap)",
+            trace.events.len(),
+            trace.dropped
+        );
+    }
     Ok(())
 }
 
@@ -352,9 +372,20 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
             "serve the HTTP API on host:port (0 port = ephemeral) and block; \
              overrides the program's serving.listen",
         )
+        .flag(
+            "trace",
+            "",
+            "write a Chrome trace_event JSON profile to this path \
+             (demo/vertex modes; written after the server drains)",
+        )
         .switch("cache", "enable the versioned logits cache for repeat vertices"),
     )
     .parse_from(argv)?;
+    let trace_path =
+        (!args.get("trace").is_empty()).then(|| PathBuf::from(args.get("trace")));
+    if trace_path.is_some() {
+        hp_gnn::obs::trace::enable();
+    }
 
     let spec = if let Some(path) = args.positional.first() {
         program::parse_program(&std::fs::read_to_string(path)?)?
@@ -469,6 +500,15 @@ fn cmd_serve(argv: Vec<String>) -> anyhow::Result<()> {
     }
     println!("serving metrics:\n{}", server.metrics().to_json().pretty());
     server.shutdown();
+    if let Some(path) = &trace_path {
+        let trace = hp_gnn::obs::trace::disable();
+        trace.write(path)?;
+        println!(
+            "trace: wrote {} events to {path:?} ({} spans dropped at the buffer cap)",
+            trace.events.len(),
+            trace.dropped
+        );
+    }
     Ok(())
 }
 

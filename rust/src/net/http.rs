@@ -331,6 +331,17 @@ impl Response {
         }
     }
 
+    /// Plain-text response with an explicit `Content-Type` (Prometheus
+    /// exposition on `GET /metrics` is the caller).
+    pub fn text(status: u16, content_type: &str, body: String) -> Response {
+        Response {
+            status,
+            headers: vec![("Content-Type".to_string(), content_type.to_string())],
+            body: body.into_bytes(),
+            batch: 0,
+        }
+    }
+
     pub fn with_header(mut self, name: &str, value: &str) -> Response {
         self.headers.push((name.to_string(), value.to_string()));
         self
@@ -494,6 +505,17 @@ mod tests {
         assert!(!req.keep_alive());
         let req = parse("GET /x HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").unwrap().unwrap();
         assert!(req.keep_alive());
+    }
+
+    #[test]
+    fn text_responses_carry_the_given_content_type() {
+        let resp =
+            Response::text(200, "text/plain; version=0.0.4", "metric_total 1\n".to_string());
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire, true).unwrap();
+        let text = String::from_utf8(wire).unwrap();
+        assert!(text.contains("Content-Type: text/plain; version=0.0.4\r\n"), "{text}");
+        assert!(text.ends_with("metric_total 1\n"), "{text}");
     }
 
     #[test]

@@ -1,10 +1,11 @@
-//! The serving API: four routes over one [`serve::Server`].
+//! The serving API: five routes over one [`serve::Server`].
 //!
 //! | Route               | Body                                   | Answer |
 //! |---------------------|----------------------------------------|--------|
 //! | `POST /v1/classify` | `{"vertex": v}` or `{"vertices": [v…]}`| `{"predictions":[{vertex,label,logits}…],"weight_version":n}` |
 //! | `GET /healthz`      | —                                      | geometry, pool size, weight version, cache entries |
-//! | `GET /metrics`      | —                                      | `serve::metrics` snapshot (counters, queue depth, latency percentiles, sheds) |
+//! | `GET /metrics`      | —                                      | Prometheus text exposition (JSON with `Accept: application/json`) |
+//! | `GET /metrics.json` | —                                      | `serve::metrics` snapshot (counters, queue depth, latency percentiles, sheds) |
 //! | `POST /v1/reload`   | `{"checkpoint": "path"}`               | `{"reloaded":true,"weight_version":n}` |
 //!
 //! Classify goes through [`Server::try_classify`]: when the bounded
@@ -17,8 +18,9 @@
 use std::path::Path;
 use std::sync::Arc;
 
-use super::http::{error_response, Response};
+use super::http::{error_response, Request, Response};
 use super::router::Router;
+use crate::obs;
 use crate::graph::Vid;
 use crate::serve::{Prediction, Server};
 use crate::util::json::Json;
@@ -174,7 +176,23 @@ fn healthz(server: &Server) -> Response {
     )
 }
 
-fn metrics(server: &Server) -> Response {
+/// `GET /metrics`: Prometheus text exposition by default; the JSON
+/// snapshot when the client asks for `application/json` (content
+/// negotiation keeps pre-Prometheus scripts working with one header).
+fn metrics(server: &Server, req: &Request) -> Response {
+    let wants_json = req
+        .header("accept")
+        .map(|a| a.contains("application/json"))
+        .unwrap_or(false);
+    if wants_json {
+        metrics_json(server)
+    } else {
+        Response::text(200, obs::prometheus::CONTENT_TYPE, server.metrics_prometheus())
+    }
+}
+
+/// `GET /metrics.json`: the stable JSON snapshot, unconditionally.
+fn metrics_json(server: &Server) -> Response {
     Response::json(200, &server.metrics().to_json())
 }
 
@@ -217,10 +235,12 @@ pub fn api_router(server: Arc<Server>) -> Router {
     let s_classify = Arc::clone(&server);
     let s_healthz = Arc::clone(&server);
     let s_metrics = Arc::clone(&server);
+    let s_metrics_json = Arc::clone(&server);
     let s_reload = server;
     Router::new()
         .route("POST", "/v1/classify", move |req| classify(&s_classify, &req.body))
         .route("GET", "/healthz", move |_| healthz(&s_healthz))
-        .route("GET", "/metrics", move |_| metrics(&s_metrics))
+        .route("GET", "/metrics", move |req| metrics(&s_metrics, req))
+        .route("GET", "/metrics.json", move |_| metrics_json(&s_metrics_json))
         .route("POST", "/v1/reload", move |req| reload(&s_reload, &req.body))
 }

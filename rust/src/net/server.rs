@@ -208,16 +208,10 @@ fn handle_connection(stream: TcpStream, router: &Router, opts: &HttpOptions, sto
     }
 }
 
-/// The one structured log line per request.
+/// The one structured log line per request, emitted through the
+/// [`crate::obs::events`] sink (which owns the reasoned wall-clock read).
 fn log_request(method: &str, path: &str, resp: &Response, latency_s: f64) {
-    // lint:allow(D2): observability only — the log line stamps wall-clock arrival time; it never feeds computation or control flow
-    let ts = std::time::SystemTime::now().duration_since(std::time::UNIX_EPOCH).map(|d| d.as_secs()).unwrap_or(0);
-    println!(
-        "http ts={ts} method={method} route={path} status={} latency_us={:.0} batch={}",
-        resp.status,
-        latency_s * 1e6,
-        resp.batch,
-    );
+    crate::obs::events::http_request(method, path, resp.status, latency_s, resp.batch);
 }
 
 #[cfg(test)]

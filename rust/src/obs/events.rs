@@ -1,0 +1,59 @@
+//! Structured event sink: one `name key=value ...` line per event on
+//! stdout, wall-clock-stamped.
+//!
+//! This module owns the repository's **single** reasoned wall-clock read
+//! ([`unix_secs`]).  Everything else in the tree times durations through
+//! [`crate::util::stats::Timer`] (monotonic), which lint rule D2 blesses;
+//! a wall-clock timestamp is only ever attached to log output here, where
+//! it can't feed computation or control flow.
+
+/// Seconds since the Unix epoch, for stamping emitted events.
+pub fn unix_secs() -> u64 {
+    // lint:allow(D2): observability only — the one wall-clock read in the tree; it stamps log events and never feeds computation or control flow
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// Emit one structured event line: `name ts=<unix> k=v ...`.
+fn emit(name: &str, fields: &[(&str, String)]) {
+    let mut line = format!("{name} ts={}", unix_secs());
+    for (k, v) in fields {
+        line.push(' ');
+        line.push_str(k);
+        line.push('=');
+        line.push_str(v);
+    }
+    println!("{line}");
+}
+
+/// The per-request HTTP log event (`net::server` calls this for every
+/// answered request when request logging is on).  Format, stable since
+/// the frontend landed:
+/// `http ts=<unix> method=<m> route=<path> status=<s> latency_us=<n> batch=<b>`.
+pub fn http_request(method: &str, path: &str, status: u16, latency_s: f64, batch: usize) {
+    emit(
+        "http",
+        &[
+            ("method", method.to_string()),
+            ("route", path.to_string()),
+            ("status", status.to_string()),
+            ("latency_us", format!("{:.0}", latency_s * 1e6)),
+            ("batch", batch.to_string()),
+        ],
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unix_secs_is_a_plausible_wall_clock() {
+        // 2020-01-01 .. 2100-01-01: catches a zeroed or garbage clock
+        // without pinning the test to a date.
+        let t = unix_secs();
+        assert!(t > 1_577_836_800 && t < 4_102_444_800, "unix_secs() = {t}");
+    }
+}

@@ -1,0 +1,31 @@
+//! Unified observability: a typed metrics registry, span-based stage
+//! tracing, Prometheus text exposition, and Chrome-trace profiles — all
+//! dependency-free.
+//!
+//! * [`registry`] — [`Counter`]/[`Gauge`]/[`Histogram`] instruments with
+//!   bounded memory and deterministic power-of-two bucket edges, grouped
+//!   under a [`Registry`] for exposition.  `serve::metrics` is built on
+//!   these.
+//! * [`trace`] — [`span`]/[`span_with`] RAII guards around pipeline
+//!   stages (sampler draw, layout/pad, per-op kernels with flop/byte
+//!   counts, optimizer, serve coalesce/infer).  Zero overhead while
+//!   disabled; `hp-gnn train/serve --trace out.json` writes the buffer
+//!   as Chrome `trace_event` JSON.
+//! * [`prometheus`] — text exposition format 0.0.4 renderer behind
+//!   `GET /metrics`.
+//! * [`events`] — structured stdout event sink; owns the single reasoned
+//!   wall-clock read (`lint:allow(D2)`).
+//!
+//! The contract threaded through every instrumented layer: telemetry
+//! **observes** timing, it never branches on it.  Traced and untraced
+//! runs produce bit-identical losses and logits (`tests/obs.rs`), and
+//! `obs/` itself sits under the D1/D2 lint contracts like the code it
+//! measures.
+
+pub mod events;
+pub mod prometheus;
+pub mod registry;
+pub mod trace;
+
+pub use registry::{Counter, Gauge, Histogram, HistogramSnapshot, Registry};
+pub use trace::{span, span_with, Span, Trace};

@@ -1,0 +1,197 @@
+//! Prometheus text exposition format 0.0.4.
+//!
+//! Renders a [`Registry`](super::registry::Registry) as the plain-text
+//! scrape format: one `# HELP` and `# TYPE` line per metric family,
+//! followed by the samples.  Histograms expand to the conventional
+//! `_bucket{le="..."}` cumulative series plus `_sum` and `_count`.
+//!
+//! Serve it with `Content-Type: text/plain; version=0.0.4`
+//! ([`CONTENT_TYPE`]) — `net::routes` does, on `GET /metrics`.
+//!
+//! The output is deterministic: families render in name order (the
+//! registry map is a `BTreeMap`) and bucket edges are fixed powers of
+//! two, so two scrapes differ only in the sample values.
+
+use super::registry::{Entry, Metric, Registry};
+
+/// The `Content-Type` of text exposition format 0.0.4.
+pub const CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
+/// Escape a HELP line: `\` and newline.
+fn escape_help(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+/// Escape a label value: `\`, `"`, and newline (exposition-format rules).
+pub fn escape_label_value(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Render constant labels as `{k="v",...}`, empty string when none.
+fn label_block(labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label_value(v)))
+        .collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+/// `le` label joined onto existing constant labels.
+fn le_block(labels: &[(String, String)], le: &str) -> String {
+    let mut inner: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label_value(v)))
+        .collect();
+    inner.push(format!("le=\"{le}\""));
+    format!("{{{}}}", inner.join(","))
+}
+
+/// Format a float sample value the way Prometheus expects (shortest
+/// round-trip; integral values without an exponent).
+fn fmt_value(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn render_entry(out: &mut String, name: &str, entry: &Entry) {
+    let kind = match entry.metric {
+        Metric::Counter(_) => "counter",
+        Metric::Gauge(_) => "gauge",
+        Metric::Histogram(_) => "histogram",
+    };
+    out.push_str(&format!("# HELP {name} {}\n", escape_help(&entry.help)));
+    out.push_str(&format!("# TYPE {name} {kind}\n"));
+    match &entry.metric {
+        Metric::Counter(c) => {
+            out.push_str(&format!("{name}{} {}\n", label_block(&entry.labels), c.get()));
+        }
+        Metric::Gauge(g) => {
+            out.push_str(&format!("{name}{} {}\n", label_block(&entry.labels), g.get()));
+        }
+        Metric::Histogram(h) => {
+            let snap = h.snapshot();
+            let mut cum = 0u64;
+            for (i, &edge) in snap.edges.iter().enumerate() {
+                cum += snap.counts[i];
+                out.push_str(&format!(
+                    "{name}_bucket{} {cum}\n",
+                    le_block(&entry.labels, &fmt_value(edge)),
+                ));
+            }
+            cum += snap.counts.last().copied().unwrap_or(0);
+            out.push_str(&format!(
+                "{name}_bucket{} {cum}\n",
+                le_block(&entry.labels, "+Inf"),
+            ));
+            out.push_str(&format!(
+                "{name}_sum{} {}\n",
+                label_block(&entry.labels),
+                fmt_value(snap.sum),
+            ));
+            out.push_str(&format!("{name}_count{} {}\n", label_block(&entry.labels), cum));
+        }
+    }
+}
+
+/// Render every metric in `registry`, name-ordered.
+pub fn render(registry: &Registry) -> String {
+    let mut out = String::new();
+    for (name, entry) in registry.entries() {
+        render_entry(&mut out, &name, &entry);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_render_with_help_and_type_lines() {
+        let reg = Registry::new();
+        let c = reg.counter("hpgnn_test_requests_total", "Requests accepted.");
+        let g = reg.gauge("hpgnn_test_depth", "Queue depth.");
+        c.add(3);
+        g.add(2);
+        let text = render(&reg);
+        assert!(text.contains("# HELP hpgnn_test_requests_total Requests accepted.\n"));
+        assert!(text.contains("# TYPE hpgnn_test_requests_total counter\n"));
+        assert!(text.contains("\nhpgnn_test_requests_total 3\n"));
+        assert!(text.contains("# TYPE hpgnn_test_depth gauge\n"));
+        assert!(text.contains("\nhpgnn_test_depth 2\n"));
+        // Every non-comment line is `name[{labels}] value`.
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.rsplitn(2, ' ');
+            let value = parts.next().unwrap();
+            assert!(value.parse::<f64>().is_ok(), "unparsable sample: {line}");
+            assert!(parts.next().is_some(), "no metric name: {line}");
+        }
+    }
+
+    #[test]
+    fn histograms_expand_to_cumulative_buckets_sum_and_count() {
+        let reg = Registry::new();
+        let h = reg.histogram("hpgnn_test_latency_seconds", "Latency.", -2, 1);
+        h.observe(0.2); // -> le=0.25
+        h.observe(0.2); // -> le=0.25
+        h.observe(0.6); // -> le=1
+        h.observe(9.0); // -> overflow
+        let text = render(&reg);
+        assert!(text.contains("# TYPE hpgnn_test_latency_seconds histogram\n"));
+        assert!(text.contains("hpgnn_test_latency_seconds_bucket{le=\"0.25\"} 2\n"));
+        assert!(text.contains("hpgnn_test_latency_seconds_bucket{le=\"0.5\"} 2\n"));
+        assert!(text.contains("hpgnn_test_latency_seconds_bucket{le=\"1\"} 3\n"));
+        assert!(text.contains("hpgnn_test_latency_seconds_bucket{le=\"2\"} 3\n"));
+        assert!(text.contains("hpgnn_test_latency_seconds_bucket{le=\"+Inf\"} 4\n"));
+        assert!(text.contains("hpgnn_test_latency_seconds_count 4\n"));
+        assert!(text.contains("hpgnn_test_latency_seconds_sum 10"));
+    }
+
+    #[test]
+    fn label_values_escape_backslash_quote_and_newline() {
+        assert_eq!(escape_label_value(r"a\b"), r"a\\b");
+        assert_eq!(escape_label_value("say \"hi\""), "say \\\"hi\\\"");
+        assert_eq!(escape_label_value("two\nlines"), "two\\nlines");
+        let reg = Registry::new();
+        reg.counter_with_labels(
+            "hpgnn_test_labeled_total",
+            "Labeled.",
+            vec![("path".to_string(), "C:\\x \"q\"\nend".to_string())],
+        );
+        let text = render(&reg);
+        assert!(
+            text.contains("hpgnn_test_labeled_total{path=\"C:\\\\x \\\"q\\\"\\nend\"} 0\n"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn counters_are_monotone_across_scrapes() {
+        let reg = Registry::new();
+        let c = reg.counter("hpgnn_test_scrapes_total", "Scrape counter.");
+        let value_of = |text: &str| -> u64 {
+            text.lines()
+                .find(|l| l.starts_with("hpgnn_test_scrapes_total "))
+                .and_then(|l| l.rsplit(' ').next())
+                .and_then(|v| v.parse().ok())
+                .expect("sample line")
+        };
+        let mut last = value_of(&render(&reg));
+        for i in 0..5 {
+            c.add(i);
+            let now = value_of(&render(&reg));
+            assert!(now >= last, "counter went backwards: {last} -> {now}");
+            last = now;
+        }
+        assert_eq!(last, 10);
+    }
+}

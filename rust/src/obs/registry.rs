@@ -1,0 +1,359 @@
+//! Typed metrics: monotonic counters, gauges, and fixed log-scale-bucket
+//! histograms, grouped under a [`Registry`] for Prometheus exposition.
+//!
+//! Design constraints (the determinism + serving-robustness contracts):
+//!
+//! * **Bounded memory** — a [`Histogram`] is a fixed array of power-of-two
+//!   buckets sized at construction; recording never allocates, so metrics
+//!   can sit on the serving hot path.
+//! * **Deterministic bucket edges** — edges are exactly `2^i` computed
+//!   with [`f64::powi`], identical on every platform; two machines
+//!   observing the same samples report the same buckets.
+//! * **Lock-free recording** — counters, gauges, and histogram buckets are
+//!   atomics; the registry's map lock is taken only at registration and
+//!   render time, never while recording.
+//!
+//! Recorded values are *observed, never branched on*: nothing in the
+//! training or serving pipeline reads a metric back to make a decision,
+//! which is what keeps telemetry off the bit-identity surface.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::sync::lock_unpoisoned;
+
+/// Monotonic event counter (Prometheus `counter`).
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous level (Prometheus `gauge`) — e.g. queue depth.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicI64,
+}
+
+impl Gauge {
+    pub fn add(&self, n: i64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, n: i64) {
+        self.value.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, n: i64) {
+        self.value.store(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed log-scale-bucket histogram: finite buckets with upper edges
+/// `2^min_exp, 2^(min_exp+1), ..., 2^max_exp`, plus one overflow (`+Inf`)
+/// bucket.  Values at or below `2^min_exp` land in the first bucket.
+#[derive(Debug)]
+pub struct Histogram {
+    min_exp: i32,
+    /// One slot per finite bucket plus the overflow bucket.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Σ observed values, stored as f64 bits (CAS-updated).
+    sum_bits: AtomicU64,
+}
+
+impl Histogram {
+    /// Buckets with upper edges `2^min_exp ..= 2^max_exp` (plus `+Inf`).
+    pub fn new(min_exp: i32, max_exp: i32) -> Histogram {
+        assert!(min_exp < max_exp, "need at least two finite buckets");
+        let finite = (max_exp - min_exp + 1) as usize;
+        Histogram {
+            min_exp,
+            buckets: (0..finite + 1).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    /// Upper edge of finite bucket `i` — exactly `2^(min_exp + i)`.
+    fn edge(&self, i: usize) -> f64 {
+        2f64.powi(self.min_exp + i as i32)
+    }
+
+    pub fn observe(&self, v: f64) {
+        let finite = self.buckets.len() - 1;
+        let mut idx = finite; // overflow unless a finite edge holds it
+        for i in 0..finite {
+            if v <= self.edge(i) {
+                idx = i;
+                break;
+            }
+        }
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Consistent-enough point-in-time copy (buckets are read one by one;
+    /// concurrent observes may straddle the read, which telemetry
+    /// tolerates).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let finite = self.buckets.len() - 1;
+        HistogramSnapshot {
+            edges: (0..finite).map(|i| self.edge(i)).collect(),
+            counts: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: f64::from_bits(self.sum_bits.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// Point-in-time histogram contents; percentiles are interpolated within
+/// the covering bucket (deterministic given the same counts).
+#[derive(Debug, Clone)]
+pub struct HistogramSnapshot {
+    /// Upper edges of the finite buckets, ascending.
+    pub edges: Vec<f64>,
+    /// Per-bucket (non-cumulative) counts; `counts.len() == edges.len()+1`
+    /// — the last slot is the overflow bucket.
+    pub counts: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+impl HistogramSnapshot {
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean of all observed values (exact, from the running sum).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Estimated p-th percentile (`p` in 0..=100): linear interpolation
+    /// within the bucket covering the rank.  `None` when empty.  Overflow
+    /// samples clamp to the top finite edge — the histogram's range is
+    /// sized so that regime means "off the scale", not "precision".
+    pub fn percentile(&self, p: f64) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let rank = (p / 100.0).clamp(0.0, 1.0) * self.count as f64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = cum + c;
+            if next as f64 >= rank {
+                if i >= self.edges.len() {
+                    return self.edges.last().copied();
+                }
+                let lo = if i == 0 { 0.0 } else { self.edges[i - 1] };
+                let hi = self.edges[i];
+                let frac = ((rank - cum as f64) / c as f64).clamp(0.0, 1.0);
+                return Some(lo + frac * (hi - lo));
+            }
+            cum = next;
+        }
+        self.edges.last().copied()
+    }
+}
+
+/// What a registry entry is, for the `# TYPE` line and the render shape.
+#[derive(Debug, Clone)]
+pub(crate) enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// One registered metric: help text, constant labels, and the instrument.
+#[derive(Debug, Clone)]
+pub(crate) struct Entry {
+    pub help: String,
+    pub labels: Vec<(String, String)>,
+    pub metric: Metric,
+}
+
+/// Named metrics for exposition.  Registration order is irrelevant — the
+/// map is a `BTreeMap`, so the rendered exposition is deterministic.
+#[derive(Debug, Default)]
+pub struct Registry {
+    entries: Mutex<BTreeMap<String, Entry>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn register(&self, name: &str, help: &str, labels: Vec<(String, String)>, metric: Metric) {
+        let mut entries = lock_unpoisoned(&self.entries);
+        let prior = entries.insert(
+            name.to_string(),
+            Entry { help: help.to_string(), labels, metric },
+        );
+        debug_assert!(prior.is_none(), "metric {name} registered twice");
+    }
+
+    pub fn counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        let c = Arc::new(Counter::default());
+        self.register(name, help, Vec::new(), Metric::Counter(Arc::clone(&c)));
+        c
+    }
+
+    pub fn gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        let g = Arc::new(Gauge::default());
+        self.register(name, help, Vec::new(), Metric::Gauge(Arc::clone(&g)));
+        g
+    }
+
+    pub fn histogram(&self, name: &str, help: &str, min_exp: i32, max_exp: i32) -> Arc<Histogram> {
+        let h = Arc::new(Histogram::new(min_exp, max_exp));
+        self.register(name, help, Vec::new(), Metric::Histogram(Arc::clone(&h)));
+        h
+    }
+
+    /// Counter with constant labels (rendered inside `{...}`).
+    pub fn counter_with_labels(
+        &self,
+        name: &str,
+        help: &str,
+        labels: Vec<(String, String)>,
+    ) -> Arc<Counter> {
+        let c = Arc::new(Counter::default());
+        self.register(name, help, labels, Metric::Counter(Arc::clone(&c)));
+        c
+    }
+
+    /// Copy of the entry table for rendering.
+    pub(crate) fn entries(&self) -> BTreeMap<String, Entry> {
+        lock_unpoisoned(&self.entries).clone()
+    }
+
+    /// Prometheus text exposition format 0.0.4 (see [`super::prometheus`]).
+    pub fn render_prometheus(&self) -> String {
+        super::prometheus::render(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_are_monotonic_and_gauges_balance() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::default();
+        g.add(3);
+        g.sub(2);
+        assert_eq!(g.get(), 1);
+        g.set(0);
+        assert_eq!(g.get(), 0);
+    }
+
+    #[test]
+    fn histogram_bucket_edges_are_exact_powers_of_two() {
+        let h = Histogram::new(-3, 2);
+        let snap = h.snapshot();
+        assert_eq!(snap.edges, vec![0.125, 0.25, 0.5, 1.0, 2.0, 4.0]);
+        // powi must give the same bits as the literals on every platform.
+        for (i, &e) in snap.edges.iter().enumerate() {
+            assert_eq!(e.to_bits(), 2f64.powi(-3 + i as i32).to_bits());
+        }
+        assert_eq!(snap.counts.len(), snap.edges.len() + 1);
+    }
+
+    #[test]
+    fn observations_land_in_deterministic_buckets() {
+        let h = Histogram::new(-3, 2);
+        // Exactly on an edge goes to that edge's bucket (le semantics).
+        h.observe(0.25);
+        // Below the bottom edge clamps into the first bucket.
+        h.observe(0.001);
+        // Above the top edge goes to overflow.
+        h.observe(100.0);
+        let snap = h.snapshot();
+        assert_eq!(snap.counts, vec![1, 1, 0, 0, 0, 0, 1]);
+        assert_eq!(snap.count, 3);
+        assert!((snap.sum - 100.251).abs() < 1e-12);
+    }
+
+    #[test]
+    fn memory_is_bounded_but_count_and_sum_are_all_time() {
+        let h = Histogram::new(-10, 0);
+        let width = h.snapshot().counts.len();
+        for i in 0..100_000u64 {
+            h.observe((i % 1000) as f64 * 1e-3);
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.counts.len(), width, "bucket storage must not grow");
+        assert_eq!(snap.count, 100_000, "count is all-time");
+        assert_eq!(snap.counts.iter().sum::<u64>(), 100_000);
+    }
+
+    #[test]
+    fn percentiles_interpolate_within_the_covering_bucket() {
+        let h = Histogram::new(-10, -4);
+        for i in 1..=10 {
+            h.observe(i as f64 * 1e-3); // 1ms ..= 10ms
+        }
+        let snap = h.snapshot();
+        let p50 = snap.percentile(50.0).unwrap();
+        assert!(p50 > 0.004 && p50 < 0.007, "p50 {p50}");
+        let p99 = snap.percentile(99.0).unwrap();
+        assert!(p99 > 0.008 && p99 <= 0.015625, "p99 {p99}");
+        assert!((snap.mean() - 0.0055).abs() < 1e-12);
+        assert_eq!(Histogram::new(-10, -4).snapshot().percentile(50.0), None);
+    }
+
+    #[test]
+    fn registry_renders_deterministically_regardless_of_insertion_order() {
+        let a = Registry::new();
+        a.counter("zz_total", "z");
+        a.gauge("aa_depth", "a");
+        let b = Registry::new();
+        b.gauge("aa_depth", "a");
+        b.counter("zz_total", "z");
+        assert_eq!(a.render_prometheus(), b.render_prometheus());
+    }
+}

@@ -1,0 +1,387 @@
+//! Span-based stage tracing with Chrome `trace_event` export.
+//!
+//! Instrumented code opens a [`span`] (or [`span_with`] to attach numeric
+//! args such as flop/byte counts) around a pipeline stage; the guard
+//! records a `B` event on construction and an `E` event on drop.  The
+//! resulting [`Trace`] serializes to the Chrome `trace_event` JSON array
+//! format, loadable in `chrome://tracing` or Perfetto.
+//!
+//! Contracts:
+//!
+//! * **Zero overhead disabled** — the disabled path is a single relaxed
+//!   atomic load; the args closure is never evaluated.  Tracing is off
+//!   unless [`enable`] ran.
+//! * **Bit-identity** — spans observe timing, they never feed it back:
+//!   no instrumented function branches on a clock value, so a traced run
+//!   produces bit-identical results to an untraced one (asserted in
+//!   `tests/obs.rs`).  The trace clock itself is a
+//!   [`crate::util::stats::Timer`] epoch — monotonic, and already blessed
+//!   by lint rule D2.
+//! * **Bounded memory, matched pairs** — the event buffer has a fixed
+//!   cap.  At the cap a new `B` is refused (counted in
+//!   [`Trace::dropped`]) so its span records nothing; an `E` is always
+//!   appended for every recorded `B`, so written traces have matched
+//!   B/E pairs.  A generation counter keeps spans that outlive a
+//!   [`disable`]/[`enable`] cycle from writing an unmatched `E` into the
+//!   next session.
+//!
+//! Timestamps are read under the buffer lock, so the event stream is
+//! globally ordered: `ts` is non-decreasing per thread (and overall).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::stats::Timer;
+use crate::util::sync::lock_unpoisoned;
+
+/// Event-buffer cap: ~1M events (tens of MB serialized) bounds a traced
+/// run that forgets to stop.
+const EVENT_CAP: usize = 1 << 20;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static STATE: Mutex<Option<TraceState>> = Mutex::new(None);
+/// Monotonic across enable() calls — never reset, so a stale [`Span`]
+/// can't emit into a later session.
+static GENERATION: AtomicU64 = AtomicU64::new(0);
+
+/// Stable small thread ids for the `tid` field (allocation order).
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+fn current_tid() -> u64 {
+    TID.with(|t| *t)
+}
+
+struct TraceState {
+    events: Vec<TraceEvent>,
+    /// Monotonic epoch: event `ts` is microseconds since [`enable`].
+    epoch: Timer,
+    generation: u64,
+    dropped: u64,
+}
+
+/// B/E phase of a `trace_event` duration event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    B,
+    E,
+}
+
+/// One recorded event.  `name`/`cat` are `&'static str` so recording
+/// never allocates for the common no-args case.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    pub cat: &'static str,
+    pub ph: Phase,
+    /// Microseconds since [`enable`].
+    pub ts_us: f64,
+    pub tid: u64,
+    /// Numeric args (`flops`, `bytes`, `batch`, ...); only on `B` events.
+    pub args: Vec<(&'static str, f64)>,
+}
+
+/// Whether tracing is currently recording.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Start recording.  Resets the buffer and the epoch; a previous
+/// unfinished session's events are discarded.
+pub fn enable() {
+    let generation = GENERATION.fetch_add(1, Ordering::Relaxed) + 1;
+    let mut guard = lock_unpoisoned(&STATE);
+    *guard = Some(TraceState {
+        events: Vec::new(),
+        epoch: Timer::start(),
+        generation,
+        dropped: 0,
+    });
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Stop recording and take the buffered trace.  Spans still open keep
+/// their guards but record nothing further (their `E` is suppressed by
+/// the generation check, keeping the returned trace's pairs matched).
+pub fn disable() -> Trace {
+    ENABLED.store(false, Ordering::Relaxed);
+    let mut guard = lock_unpoisoned(&STATE);
+    match guard.take() {
+        Some(s) => Trace { events: s.events, dropped: s.dropped },
+        None => Trace { events: Vec::new(), dropped: 0 },
+    }
+}
+
+/// RAII stage guard: `B` on open, `E` on drop.  Inert when tracing is
+/// disabled or the buffer is full.
+#[must_use = "a span records its duration when dropped"]
+pub struct Span {
+    /// `(cat, name, generation)` of the recorded `B`, if one was written.
+    token: Option<(&'static str, &'static str, u64)>,
+}
+
+/// Open a span with no args.
+pub fn span(cat: &'static str, name: &'static str) -> Span {
+    span_with(cat, name, Vec::new)
+}
+
+/// Open a span with numeric args (e.g. flop/byte counts).  `args` is
+/// evaluated only when tracing is enabled — keep the disabled path free.
+pub fn span_with<F>(cat: &'static str, name: &'static str, args: F) -> Span
+where
+    F: FnOnce() -> Vec<(&'static str, f64)>,
+{
+    if !ENABLED.load(Ordering::Relaxed) {
+        return Span { token: None };
+    }
+    let mut guard = lock_unpoisoned(&STATE);
+    let Some(state) = guard.as_mut() else {
+        return Span { token: None };
+    };
+    if state.events.len() >= EVENT_CAP {
+        state.dropped += 1;
+        return Span { token: None };
+    }
+    let ts_us = state.epoch.secs() * 1e6;
+    state.events.push(TraceEvent {
+        name,
+        cat,
+        ph: Phase::B,
+        ts_us,
+        tid: current_tid(),
+        args: args(),
+    });
+    Span { token: Some((cat, name, state.generation)) }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some((cat, name, generation)) = self.token.take() else {
+            return;
+        };
+        let mut guard = lock_unpoisoned(&STATE);
+        let Some(state) = guard.as_mut() else {
+            return;
+        };
+        if state.generation != generation {
+            return; // the session that recorded our B is gone
+        }
+        let ts_us = state.epoch.secs() * 1e6;
+        state.events.push(TraceEvent {
+            name,
+            cat,
+            ph: Phase::E,
+            ts_us,
+            tid: current_tid(),
+            args: Vec::new(),
+        });
+    }
+}
+
+/// Per-(cat, name) aggregate over matched B/E pairs — what the bench
+/// writers persist as the per-stage breakdown.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageTotal {
+    pub calls: u64,
+    pub total_s: f64,
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+/// A finished recording session.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+    /// Spans refused because the buffer hit [`EVENT_CAP`].
+    pub dropped: u64,
+}
+
+impl Trace {
+    /// Chrome `trace_event` JSON (object form: `{"traceEvents": [...]}`),
+    /// loadable in `chrome://tracing` and Perfetto.
+    pub fn to_chrome_json(&self) -> Json {
+        let events = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut fields = vec![
+                    ("name".to_string(), Json::str(e.name)),
+                    ("cat".to_string(), Json::str(e.cat)),
+                    (
+                        "ph".to_string(),
+                        Json::str(match e.ph {
+                            Phase::B => "B",
+                            Phase::E => "E",
+                        }),
+                    ),
+                    ("ts".to_string(), Json::num(e.ts_us)),
+                    ("pid".to_string(), Json::num(1.0)),
+                    ("tid".to_string(), Json::num(e.tid as f64)),
+                ];
+                if !e.args.is_empty() {
+                    let args: BTreeMap<String, Json> = e
+                        .args
+                        .iter()
+                        .map(|&(k, v)| (k.to_string(), Json::num(v)))
+                        .collect();
+                    fields.push(("args".to_string(), Json::Obj(args)));
+                }
+                Json::Obj(fields.into_iter().collect())
+            })
+            .collect();
+        Json::obj(vec![
+            ("traceEvents", Json::arr(events)),
+            ("displayTimeUnit", Json::str("ms")),
+        ])
+    }
+
+    /// Write the Chrome-trace JSON to `path`.
+    pub fn write(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_chrome_json().pretty() + "\n")
+            .map_err(|e| anyhow::anyhow!("trace: cannot write {path:?}: {e}"))
+    }
+
+    /// Aggregate matched B/E pairs into per-stage totals, keyed
+    /// `(cat, name)`.  `flops`/`bytes` args on the `B` event accumulate
+    /// into the stage's totals.  Unmatched events (cap truncation at the
+    /// very end of a session) are skipped.
+    pub fn stage_totals(&self) -> BTreeMap<(String, String), StageTotal> {
+        let mut stacks: BTreeMap<u64, Vec<&TraceEvent>> = BTreeMap::new();
+        let mut totals: BTreeMap<(String, String), StageTotal> = BTreeMap::new();
+        for e in &self.events {
+            match e.ph {
+                Phase::B => stacks.entry(e.tid).or_default().push(e),
+                Phase::E => {
+                    let Some(b) = stacks.get_mut(&e.tid).and_then(|s| s.pop()) else {
+                        continue;
+                    };
+                    let t = totals
+                        .entry((b.cat.to_string(), b.name.to_string()))
+                        .or_default();
+                    t.calls += 1;
+                    t.total_s += (e.ts_us - b.ts_us) / 1e6;
+                    for &(k, v) in &b.args {
+                        match k {
+                            "flops" => t.flops += v,
+                            "bytes" => t.bytes += v,
+                            _ => {}
+                        }
+                    }
+                }
+            }
+        }
+        totals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The tracer is process-global; serialize the tests that toggle it.
+    static TRACE_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    /// Other unit tests in this binary may run traced code concurrently;
+    /// filter the buffer down to this module's unique categories.
+    fn own(events: &[TraceEvent], cat: &str) -> Vec<TraceEvent> {
+        events.iter().filter(|e| e.cat == cat).cloned().collect()
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing_and_skip_the_args_closure() {
+        let _guard = lock_unpoisoned(&TRACE_TEST_LOCK);
+        assert!(!enabled());
+        let evaluated = std::cell::Cell::new(false);
+        {
+            let _sp = span_with("obs-unit-disabled", "noop", || {
+                evaluated.set(true);
+                vec![("x", 1.0)]
+            });
+        }
+        assert!(!evaluated.get(), "args must not be evaluated while disabled");
+        // No session was open, so there is nothing to drain.
+        assert!(own(&disable().events, "obs-unit-disabled").is_empty());
+    }
+
+    #[test]
+    fn spans_nest_into_matched_pairs_with_monotone_timestamps() {
+        let _guard = lock_unpoisoned(&TRACE_TEST_LOCK);
+        enable();
+        {
+            let _outer = span("obs-unit-nest", "outer");
+            {
+                let _inner = span_with("obs-unit-nest", "inner", || {
+                    vec![("flops", 8.0), ("bytes", 32.0)]
+                });
+            }
+        }
+        let trace = disable();
+        let events = own(&trace.events, "obs-unit-nest");
+        assert_eq!(events.len(), 4);
+        let names: Vec<(&str, Phase)> = events.iter().map(|e| (e.name, e.ph)).collect();
+        assert_eq!(
+            names,
+            vec![
+                ("outer", Phase::B),
+                ("inner", Phase::B),
+                ("inner", Phase::E),
+                ("outer", Phase::E),
+            ]
+        );
+        for w in events.windows(2) {
+            assert!(w[1].ts_us >= w[0].ts_us, "ts must be non-decreasing");
+        }
+        let totals = Trace { events, dropped: 0 }.stage_totals();
+        let inner = totals[&("obs-unit-nest".to_string(), "inner".to_string())];
+        assert_eq!(inner.calls, 1);
+        assert_eq!(inner.flops, 8.0);
+        assert_eq!(inner.bytes, 32.0);
+        assert!(inner.total_s >= 0.0);
+    }
+
+    #[test]
+    fn a_span_crossing_disable_does_not_leak_an_unmatched_end_event() {
+        let _guard = lock_unpoisoned(&TRACE_TEST_LOCK);
+        enable();
+        let sp = span("obs-unit-gen", "straddle");
+        let first = disable();
+        assert_eq!(own(&first.events, "obs-unit-gen").len(), 1, "only the B");
+        enable();
+        drop(sp); // generation mismatch: must not write into the new session
+        let second = disable();
+        assert!(own(&second.events, "obs-unit-gen").is_empty());
+    }
+
+    #[test]
+    fn chrome_json_has_the_trace_event_shape() {
+        let _guard = lock_unpoisoned(&TRACE_TEST_LOCK);
+        enable();
+        {
+            let _sp = span_with("obs-unit-json", "op", || vec![("flops", 2.0)]);
+        }
+        let trace = disable();
+        let doc = trace.to_chrome_json();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let ours: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("cat").ok().and_then(|c| c.as_str().ok()) == Some("obs-unit-json"))
+            .collect();
+        assert_eq!(ours.len(), 2);
+        for e in &ours {
+            for key in ["name", "cat", "ph", "ts", "pid", "tid"] {
+                e.get(key).unwrap_or_else(|err| panic!("missing {key}: {err:?}"));
+            }
+        }
+        assert_eq!(ours[0].get("ph").unwrap().as_str().unwrap(), "B");
+        assert_eq!(
+            ours[0].get("args").unwrap().get("flops").unwrap().as_f64().unwrap(),
+            2.0
+        );
+        assert_eq!(ours[1].get("ph").unwrap().as_str().unwrap(), "E");
+    }
+}

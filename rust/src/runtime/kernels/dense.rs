@@ -29,6 +29,13 @@ pub fn matmul_bias(
     n: usize,
     kp: &Kernels,
 ) -> Vec<f32> {
+    let _sp = crate::obs::span_with("kernel", "matmul_bias", || {
+        let (mf, kf, nf) = (m as f64, k as f64, n as f64);
+        vec![
+            ("flops", 2.0 * mf * kf * nf),
+            ("bytes", 4.0 * (mf * kf + kf * nf + nf + mf * nf)),
+        ]
+    });
     if kp.naive {
         return naive_matmul_bias(a, w, bias, m, k, n);
     }
@@ -97,6 +104,12 @@ pub fn naive_matmul_bias(
 /// The reduction runs over the `m` batch rows in ascending order; threads
 /// partition the `k` output rows.  Zero entries of `A` are skipped.
 pub fn matmul_at_b(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, kp: &Kernels) -> Vec<f32> {
+    let _sp = crate::obs::span_with("kernel", "matmul_at_b", || {
+        vec![
+            ("flops", 2.0 * m as f64 * k as f64 * n as f64),
+            ("bytes", 4.0 * (m as f64 * k as f64 + m as f64 * n as f64 + k as f64 * n as f64)),
+        ]
+    });
     if kp.naive {
         return naive_matmul_at_b(a, b, m, k, n);
     }
@@ -148,6 +161,12 @@ pub fn naive_matmul_at_b(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> 
 /// exact same multiply/add sequence preserves oracle bit-identity even
 /// for non-finite operands (`0 · ∞ = NaN` must surface identically).
 pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, kp: &Kernels) -> Vec<f32> {
+    let _sp = crate::obs::span_with("kernel", "matmul_a_bt", || {
+        vec![
+            ("flops", 2.0 * m as f64 * k as f64 * n as f64),
+            ("bytes", 4.0 * (m as f64 * n as f64 + k as f64 * n as f64 + m as f64 * k as f64)),
+        ]
+    });
     if kp.naive {
         return naive_matmul_a_bt(a, b, m, n, k);
     }
@@ -196,6 +215,12 @@ pub fn naive_matmul_a_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> 
 /// `s[n] = Σ_i A[i][·]` — the bias gradient `db` (column sums, reduction
 /// over rows ascending; threads partition columns).
 pub fn col_sums(a: &[f32], m: usize, n: usize, kp: &Kernels) -> Vec<f32> {
+    let _sp = crate::obs::span_with("kernel", "col_sums", || {
+        vec![
+            ("flops", m as f64 * n as f64),
+            ("bytes", 4.0 * (m as f64 * n as f64 + n as f64)),
+        ]
+    });
     if kp.naive {
         return naive_col_sums(a, m, n);
     }

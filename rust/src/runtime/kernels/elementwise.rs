@@ -12,6 +12,9 @@ use crate::util::threadpool::par_map;
 
 /// `max(x, 0)` — hidden-layer activation.
 pub fn relu(z: &[f32], kp: &Kernels) -> Vec<f32> {
+    let _sp = crate::obs::span_with("kernel", "relu", || {
+        vec![("flops", z.len() as f64), ("bytes", 4.0 * 2.0 * z.len() as f64)]
+    });
     let threads = if kp.naive { 1 } else { kp.threads };
     let mut out = vec![0.0f32; z.len()];
     par_row_tiles(threads, z.len(), 1, z.len(), &mut out, |r0, r1, tile| {
@@ -24,6 +27,9 @@ pub fn relu(z: &[f32], kp: &Kernels) -> Vec<f32> {
 
 /// ReLU backward: zero `dz` wherever the cached pre-activation `z <= 0`.
 pub fn relu_mask_inplace(dz: &mut [f32], z: &[f32], kp: &Kernels) {
+    let _sp = crate::obs::span_with("kernel", "relu_mask", || {
+        vec![("flops", z.len() as f64), ("bytes", 4.0 * 2.0 * z.len() as f64)]
+    });
     debug_assert_eq!(dz.len(), z.len());
     let threads = if kp.naive { 1 } else { kp.threads };
     let n = dz.len();
@@ -48,6 +54,12 @@ pub fn masked_xent(
     kp: &Kernels,
 ) -> (f32, Vec<f32>) {
     let rows = labels.len();
+    let _sp = crate::obs::span_with("kernel", "masked_xent", || {
+        vec![
+            ("flops", 6.0 * rows as f64 * classes as f64),
+            ("bytes", 4.0 * 2.0 * rows as f64 * classes as f64),
+        ]
+    });
     let denom: f32 = mask.iter().sum::<f32>().max(1.0);
 
     if kp.naive {
@@ -118,6 +130,9 @@ fn xent_row(row: &[f32], label: i32, mask: f32, denom: f32, drow: &mut [f32]) ->
 
 /// SGD: `p' = p - lr · g`.
 pub fn sgd_update(p: &[f32], g: &[f32], lr: f32, kp: &Kernels) -> Vec<f32> {
+    let _sp = crate::obs::span_with("optimizer", "sgd_update", || {
+        vec![("flops", 2.0 * p.len() as f64), ("bytes", 4.0 * 3.0 * p.len() as f64)]
+    });
     debug_assert_eq!(p.len(), g.len());
     let threads = if kp.naive { 1 } else { kp.threads };
     let mut out = vec![0.0f32; p.len()];
@@ -152,6 +167,9 @@ pub fn adam_update(
     kp: &Kernels,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
     let n = p.len();
+    let _sp = crate::obs::span_with("optimizer", "adam_update", || {
+        vec![("flops", 10.0 * n as f64), ("bytes", 4.0 * 7.0 * n as f64)]
+    });
     debug_assert!(g.len() == n && m0.len() == n && v0.len() == n);
     let mut np = vec![0.0f32; n];
     let mut nm = vec![0.0f32; n];

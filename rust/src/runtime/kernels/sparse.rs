@@ -62,6 +62,12 @@ pub fn aggregate(
     x_off: usize,
     kp: &Kernels,
 ) -> Vec<f32> {
+    let _sp = crate::obs::span_with("kernel", "aggregate", || {
+        vec![
+            ("flops", 2.0 * group.len() as f64 * f as f64),
+            ("bytes", 4.0 * (2.0 * group.len() as f64 * f as f64 + rows as f64 * f as f64)),
+        ]
+    });
     let work = group.len() * f + rows; // one axpy per edge
     if kp.naive || runs_sequential(kp.threads, rows, work) {
         // The scalar COO loop is bit-identical (module invariant) and
@@ -131,6 +137,12 @@ pub fn scatter_add_rows(
     x_stride: usize,
     kp: &Kernels,
 ) {
+    let _sp = crate::obs::span_with("kernel", "scatter_add_rows", || {
+        vec![
+            ("flops", idx.len() as f64 * f as f64),
+            ("bytes", 4.0 * 2.0 * idx.len() as f64 * f as f64),
+        ]
+    });
     let work = idx.len() * f + rows;
     if kp.naive || runs_sequential(kp.threads, rows, work) {
         for (i, &s) in idx.iter().enumerate() {
@@ -166,6 +178,9 @@ pub fn gather_concat(
     rows: usize,
     kp: &Kernels,
 ) -> Vec<f32> {
+    let _sp = crate::obs::span_with("kernel", "gather_concat", || {
+        vec![("flops", 0.0), ("bytes", 4.0 * 4.0 * rows as f64 * f_in as f64)]
+    });
     let mut cat = vec![0.0f32; rows * 2 * f_in];
     let threads = if kp.naive { 1 } else { kp.threads };
     par_row_tiles(threads, rows, 2 * f_in, rows * 2 * f_in, &mut cat, |r0, r1, tile| {

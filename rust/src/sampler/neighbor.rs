@@ -38,6 +38,9 @@ impl NeighborSampler {
     /// body shared by random training draws ([`Sampler::sample`]) and
     /// target-directed inference draws ([`Sampler::sample_targets`]).
     fn expand(&self, g: &Graph, targets: Vec<Vid>, rng: &mut Pcg64) -> MiniBatch {
+        let _sp = crate::obs::span_with("pipeline", "sample", || {
+            vec![("targets", targets.len() as f64)]
+        });
         let ll = self.num_layers();
         let mut layers = vec![Vec::new(); ll + 1];
         let mut edges = vec![Vec::new(); ll];

@@ -66,6 +66,7 @@ pub type EdgeValues = Vec<Vec<f32>>;
 
 /// Compute edge values for `batch` under `model`.
 pub fn attach_values(g: &Graph, batch: &MiniBatch, model: GnnModel) -> EdgeValues {
+    let _sp = crate::obs::span("pipeline", "values");
     match model {
         GnnModel::Gcn => gcn_values(g, batch),
         GnnModel::Sage => sage_values(batch),

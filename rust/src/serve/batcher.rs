@@ -15,10 +15,13 @@
 //! generator's unbatched baseline).
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::graph::Vid;
+use crate::util::stats::Timer;
 
+use super::metrics::ServeMetrics;
 use super::Prediction;
 
 /// Reply channel of one request: `(slot index, prediction or error)`.
@@ -30,6 +33,9 @@ pub(crate) struct WorkItem {
     pub vertex: Vid,
     pub idx: usize,
     pub reply: ReplySender,
+    /// Started at enqueue; the worker reads it at pickup to record the
+    /// queue-wait distribution.
+    pub enqueued: Timer,
 }
 
 /// Batcher thread body: runs until every request sender is gone, then
@@ -40,6 +46,7 @@ pub(crate) fn run_batcher(
     tx: mpsc::SyncSender<Vec<WorkItem>>,
     max_batch: usize,
     max_wait: Duration,
+    metrics: Arc<ServeMetrics>,
 ) {
     let max_batch = max_batch.max(1);
     loop {
@@ -49,6 +56,8 @@ pub(crate) fn run_batcher(
             Ok(item) => item,
             Err(_) => return,
         };
+        let sp = crate::obs::span("serve", "coalesce");
+        let window = Timer::start();
         let mut batch = vec![first];
         let deadline = Instant::now() + max_wait;
         let mut disconnected = false;
@@ -66,6 +75,8 @@ pub(crate) fn run_batcher(
                 }
             }
         }
+        metrics.record_coalesce(window.secs());
+        drop(sp);
         if tx.send(batch).is_err() {
             return; // workers are gone; nothing left to serve
         }
@@ -85,7 +96,12 @@ mod tests {
     ) -> (Vec<WorkItem>, mpsc::Receiver<(usize, anyhow::Result<Arc<Prediction>>)>) {
         let (reply, reply_rx) = mpsc::channel();
         let v = (0..n)
-            .map(|i| WorkItem { vertex: i as Vid, idx: i, reply: reply.clone() })
+            .map(|i| WorkItem {
+                vertex: i as Vid,
+                idx: i,
+                reply: reply.clone(),
+                enqueued: Timer::start(),
+            })
             .collect();
         (v, reply_rx)
     }
@@ -100,7 +116,7 @@ mod tests {
         }
         drop(tx);
         let (btx, brx) = mpsc::sync_channel(n.max(1));
-        run_batcher(rx, btx, max_batch, max_wait);
+        run_batcher(rx, btx, max_batch, max_wait, Arc::new(ServeMetrics::default()));
         brx.into_iter().map(|b| b.len()).collect()
     }
 
@@ -131,7 +147,7 @@ mod tests {
         }
         let (btx, brx) = mpsc::sync_channel(4);
         let h = std::thread::spawn(move || {
-            run_batcher(rx, btx, 64, Duration::from_millis(10));
+            run_batcher(rx, btx, 64, Duration::from_millis(10), Arc::new(ServeMetrics::default()));
         });
         let t = Instant::now();
         let batch = brx.recv().expect("batch before shutdown");

@@ -1,135 +1,179 @@
-//! Per-request serving metrics: throughput counters plus latency
-//! percentiles on [`Summary`].
+//! Serving telemetry on the [`crate::obs`] registry: all-time atomic
+//! counters, a queue-depth gauge, and fixed-bucket histograms for the
+//! latency/occupancy/timing distributions.
 //!
-//! Distribution metrics (latency, occupancy, execution time) are kept in
-//! a bounded ring of the most recent [`SAMPLE_WINDOW`] samples: a server
-//! that runs for weeks must not grow its metrics memory with every
-//! request, and percentile snapshots must not sort an ever-growing
-//! vector.  Counters are all-time.
-//!
-//! An idle metrics window has no samples; percentiles come back as
-//! `None` (and JSON `null`) rather than crashing the server — the reason
-//! `Summary::percentile` returns `Option`.
+//! Everything records lock-free on the hot path with bounded memory (the
+//! histograms are fixed power-of-two bucket arrays — see
+//! [`crate::obs::registry::Histogram`]); the registry renders the whole
+//! set as Prometheus text exposition for `GET /metrics`, while
+//! [`MetricsSnapshot::to_json`] keeps the original JSON field names for
+//! `/metrics.json` and the CLI report.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::Arc;
 
-use super::lock_unpoisoned;
+use crate::obs::{Counter, Gauge, Histogram, HistogramSnapshot, Registry};
 use crate::util::json::Json;
-use crate::util::stats::Summary;
 
-/// Retained samples per distribution metric (ring buffer bound).
-pub const SAMPLE_WINDOW: usize = 4096;
+/// Histogram ranges: timings in seconds from ~1us (`2^-20`) to 64s
+/// (`2^6`); batch occupancy from 1 (`2^0`) to 4096 (`2^12`).
+const TIME_MIN_EXP: i32 = -20;
+const TIME_MAX_EXP: i32 = 6;
+const OCC_MIN_EXP: i32 = 0;
+const OCC_MAX_EXP: i32 = 12;
 
-/// Bounded sample ring: the last [`SAMPLE_WINDOW`] observations.
-#[derive(Default)]
-struct SampleWindow {
-    buf: Vec<f64>,
-    next: usize,
-}
-
-impl SampleWindow {
-    fn add(&mut self, x: f64) {
-        if self.buf.len() < SAMPLE_WINDOW {
-            self.buf.push(x);
-        } else {
-            self.buf[self.next] = x;
-            self.next = (self.next + 1) % SAMPLE_WINDOW;
-        }
-    }
-
-    /// The window's contents as a [`Summary`] (order is irrelevant to
-    /// mean/percentiles).
-    fn summary(&self) -> Summary {
-        let mut s = Summary::new();
-        for &x in &self.buf {
-            s.add(x);
-        }
-        s
-    }
-}
-
-/// Shared mutable metrics the server and its workers update.
-#[derive(Default)]
+/// Live serving metrics; one instance per [`super::Server`], shared with
+/// the batcher and the worker pool.
+#[derive(Debug)]
 pub struct ServeMetrics {
-    requests: AtomicU64,
-    vertices: AtomicU64,
-    cache_hits: AtomicU64,
-    cache_misses: AtomicU64,
-    /// Executed forward micro-batches (kernel invocations).
-    batches: AtomicU64,
-    /// Requests rejected at admission because the bounded work queue was
-    /// full (answered `429 Too Many Requests` over HTTP).
-    shed: AtomicU64,
-    /// Work items currently in flight: enqueued on the bounded queue or
-    /// executing, reply not yet collected.  A gauge, not a counter.
-    depth: AtomicU64,
-    /// Per-request wall latency, seconds (enqueue → last reply).
-    latency: Mutex<SampleWindow>,
-    /// Real target vertices per executed micro-batch.
-    occupancy: Mutex<SampleWindow>,
-    /// Forward execution time per micro-batch, seconds.
-    exec: Mutex<SampleWindow>,
+    registry: Registry,
+    requests: Arc<Counter>,
+    vertices: Arc<Counter>,
+    cache_hits: Arc<Counter>,
+    cache_misses: Arc<Counter>,
+    batches: Arc<Counter>,
+    shed: Arc<Counter>,
+    depth: Arc<Gauge>,
+    latency: Arc<Histogram>,
+    occupancy: Arc<Histogram>,
+    exec: Arc<Histogram>,
+    queue_wait: Arc<Histogram>,
+    coalesce: Arc<Histogram>,
 }
 
-impl ServeMetrics {
-    pub fn record_request(&self, vertices: usize, latency_s: f64) {
-        self.requests.fetch_add(1, Ordering::Relaxed);
-        self.vertices.fetch_add(vertices as u64, Ordering::Relaxed);
-        lock_unpoisoned(&self.latency).add(latency_s);
-    }
-
-    pub fn record_cache(&self, hits: usize, misses: usize) {
-        self.cache_hits.fetch_add(hits as u64, Ordering::Relaxed);
-        self.cache_misses.fetch_add(misses as u64, Ordering::Relaxed);
-    }
-
-    /// One request shed at admission (bounded queue full).
-    pub fn record_shed(&self) {
-        self.shed.fetch_add(1, Ordering::Relaxed);
-    }
-
-    /// `n` work items entered the pipeline (enqueued on the queue).
-    pub fn depth_add(&self, n: usize) {
-        self.depth.fetch_add(n as u64, Ordering::Relaxed);
-    }
-
-    /// `n` work items left the pipeline (replies collected).  Callers
-    /// keep add/sub balanced; the gauge never goes negative.
-    pub fn depth_sub(&self, n: usize) {
-        self.depth.fetch_sub(n as u64, Ordering::Relaxed);
-    }
-
-    pub fn record_batch(&self, occupancy: usize, exec_s: f64) {
-        self.batches.fetch_add(1, Ordering::Relaxed);
-        lock_unpoisoned(&self.occupancy).add(occupancy as f64);
-        lock_unpoisoned(&self.exec).add(exec_s);
-    }
-
-    /// Consistent point-in-time copy for reporting.  Counters are
-    /// all-time; the distribution summaries cover the most recent
-    /// [`SAMPLE_WINDOW`] samples of each metric.
-    pub fn snapshot(&self) -> MetricsSnapshot {
-        let latency = lock_unpoisoned(&self.latency).summary();
-        let occupancy = lock_unpoisoned(&self.occupancy).summary();
-        let exec = lock_unpoisoned(&self.exec).summary();
-        MetricsSnapshot {
-            requests: self.requests.load(Ordering::Relaxed),
-            vertices: self.vertices.load(Ordering::Relaxed),
-            cache_hits: self.cache_hits.load(Ordering::Relaxed),
-            cache_misses: self.cache_misses.load(Ordering::Relaxed),
-            batches: self.batches.load(Ordering::Relaxed),
-            shed_requests: self.shed.load(Ordering::Relaxed),
-            queue_depth: self.depth.load(Ordering::Relaxed),
+impl Default for ServeMetrics {
+    fn default() -> ServeMetrics {
+        let registry = Registry::new();
+        let requests =
+            registry.counter("hpgnn_serve_requests_total", "Classify requests answered.");
+        let vertices = registry.counter("hpgnn_serve_vertices_total", "Vertices classified.");
+        let cache_hits = registry.counter("hpgnn_serve_cache_hits_total", "Logits-cache hits.");
+        let cache_misses =
+            registry.counter("hpgnn_serve_cache_misses_total", "Logits-cache misses.");
+        let batches =
+            registry.counter("hpgnn_serve_batches_total", "Coalesced micro-batches executed.");
+        let shed = registry.counter(
+            "hpgnn_serve_shed_requests_total",
+            "Requests shed by admission control (queue full).",
+        );
+        let depth =
+            registry.gauge("hpgnn_serve_queue_depth", "Work items currently in flight.");
+        let latency = registry.histogram(
+            "hpgnn_serve_request_latency_seconds",
+            "End-to-end classify latency.",
+            TIME_MIN_EXP,
+            TIME_MAX_EXP,
+        );
+        let occupancy = registry.histogram(
+            "hpgnn_serve_batch_occupancy",
+            "Work items per executed micro-batch.",
+            OCC_MIN_EXP,
+            OCC_MAX_EXP,
+        );
+        let exec = registry.histogram(
+            "hpgnn_serve_batch_exec_seconds",
+            "Forward-kernel execution time per micro-batch.",
+            TIME_MIN_EXP,
+            TIME_MAX_EXP,
+        );
+        let queue_wait = registry.histogram(
+            "hpgnn_serve_queue_wait_seconds",
+            "Work-item wait from enqueue to worker pickup.",
+            TIME_MIN_EXP,
+            TIME_MAX_EXP,
+        );
+        let coalesce = registry.histogram(
+            "hpgnn_serve_coalesce_seconds",
+            "Batcher coalescing window per shipped batch.",
+            TIME_MIN_EXP,
+            TIME_MAX_EXP,
+        );
+        ServeMetrics {
+            registry,
+            requests,
+            vertices,
+            cache_hits,
+            cache_misses,
+            batches,
+            shed,
+            depth,
             latency,
             occupancy,
             exec,
+            queue_wait,
+            coalesce,
         }
     }
 }
 
-/// Frozen metrics view with derived percentiles.  The `Summary` fields
-/// cover the most recent [`SAMPLE_WINDOW`] samples of each metric.
+impl ServeMetrics {
+    /// One answered classify request covering `vertices` vertices.
+    pub fn record_request(&self, vertices: usize, latency_s: f64) {
+        self.requests.inc();
+        self.vertices.add(vertices as u64);
+        self.latency.observe(latency_s);
+    }
+
+    pub fn record_cache(&self, hits: usize, misses: usize) {
+        self.cache_hits.add(hits as u64);
+        self.cache_misses.add(misses as u64);
+    }
+
+    /// A request refused because the bounded queue was full.
+    pub fn record_shed(&self) {
+        self.shed.inc();
+    }
+
+    pub fn depth_add(&self, n: usize) {
+        self.depth.add(n as i64);
+    }
+
+    pub fn depth_sub(&self, n: usize) {
+        self.depth.sub(n as i64);
+    }
+
+    /// One executed micro-batch: `occupancy` work items, `exec_s` kernel
+    /// wall time.
+    pub fn record_batch(&self, occupancy: usize, exec_s: f64) {
+        self.batches.inc();
+        self.occupancy.observe(occupancy as f64);
+        self.exec.observe(exec_s);
+    }
+
+    /// Enqueue-to-pickup wait of one work item.
+    pub fn record_queue_wait(&self, wait_s: f64) {
+        self.queue_wait.observe(wait_s);
+    }
+
+    /// Coalescing window of one shipped batch (first recv to ship).
+    pub fn record_coalesce(&self, window_s: f64) {
+        self.coalesce.observe(window_s);
+    }
+
+    /// Prometheus text exposition of every serving metric.
+    pub fn prometheus(&self) -> String {
+        self.registry.render_prometheus()
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests.get(),
+            vertices: self.vertices.get(),
+            cache_hits: self.cache_hits.get(),
+            cache_misses: self.cache_misses.get(),
+            batches: self.batches.get(),
+            shed_requests: self.shed.get(),
+            queue_depth: self.depth.get().max(0) as u64,
+            latency: self.latency.snapshot(),
+            occupancy: self.occupancy.snapshot(),
+            exec: self.exec.snapshot(),
+            queue_wait: self.queue_wait.snapshot(),
+            coalesce: self.coalesce.snapshot(),
+        }
+    }
+}
+
+/// Point-in-time copy of the counters plus the full distribution
+/// snapshots.
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
     pub requests: u64,
@@ -137,17 +181,27 @@ pub struct MetricsSnapshot {
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub batches: u64,
-    /// Requests rejected at admission (all-time counter).
     pub shed_requests: u64,
-    /// In-flight work items at snapshot time (gauge).
     pub queue_depth: u64,
-    pub latency: Summary,
-    pub occupancy: Summary,
-    pub exec: Summary,
+    pub latency: HistogramSnapshot,
+    pub occupancy: HistogramSnapshot,
+    pub exec: HistogramSnapshot,
+    pub queue_wait: HistogramSnapshot,
+    pub coalesce: HistogramSnapshot,
 }
 
 fn opt_num(x: Option<f64>) -> Json {
     x.map(Json::num).unwrap_or(Json::Null)
+}
+
+fn dist_json(h: &HistogramSnapshot) -> Json {
+    Json::obj(vec![
+        ("count", Json::num(h.count() as f64)),
+        ("mean", opt_num((h.count() > 0).then(|| h.mean()))),
+        ("p50", opt_num(h.percentile(50.0))),
+        ("p95", opt_num(h.percentile(95.0))),
+        ("p99", opt_num(h.percentile(99.0))),
+    ])
 }
 
 impl MetricsSnapshot {
@@ -163,13 +217,13 @@ impl MetricsSnapshot {
         self.latency.percentile(99.0)
     }
 
-    /// Mean real targets per executed micro-batch (`None` when idle) —
-    /// how well the micro-batcher is coalescing.
     pub fn mean_occupancy(&self) -> Option<f64> {
         (self.occupancy.count() > 0).then(|| self.occupancy.mean())
     }
 
-    /// JSON dump (idle windows report `null` percentiles, never panic).
+    /// The `/metrics.json` document.  Field names are stable (clients and
+    /// CI parse them); the per-stage `queue_wait_s`/`coalesce_s`
+    /// distributions are additive.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("requests", Json::num(self.requests as f64)),
@@ -179,19 +233,9 @@ impl MetricsSnapshot {
             ("batches", Json::num(self.batches as f64)),
             ("shed_requests", Json::num(self.shed_requests as f64)),
             ("queue_depth", Json::num(self.queue_depth as f64)),
-            (
-                "latency_s",
-                Json::obj(vec![
-                    ("count", Json::num(self.latency.count() as f64)),
-                    (
-                        "mean",
-                        opt_num((self.latency.count() > 0).then(|| self.latency.mean())),
-                    ),
-                    ("p50", opt_num(self.latency_p50_s())),
-                    ("p95", opt_num(self.latency_p95_s())),
-                    ("p99", opt_num(self.latency_p99_s())),
-                ]),
-            ),
+            ("latency_s", dist_json(&self.latency)),
+            ("queue_wait_s", dist_json(&self.queue_wait)),
+            ("coalesce_s", dist_json(&self.coalesce)),
             ("mean_batch_occupancy", opt_num(self.mean_occupancy())),
             (
                 "exec_mean_s",
@@ -208,69 +252,79 @@ mod tests {
     #[test]
     fn idle_snapshot_reports_null_percentiles_without_panicking() {
         let m = ServeMetrics::default();
-        let snap = m.snapshot();
-        assert_eq!(snap.requests, 0);
-        assert_eq!(snap.shed_requests, 0);
-        assert_eq!(snap.queue_depth, 0);
-        assert!(snap.latency_p50_s().is_none());
-        assert!(snap.latency_p99_s().is_none());
-        assert!(snap.mean_occupancy().is_none());
-        let json = snap.to_json();
-        assert!(matches!(json.get("latency_s").unwrap().get("p99").unwrap(), &Json::Null));
-        // Must serialize to valid JSON (no bare NaN/inf tokens).
-        Json::parse(&json.pretty()).unwrap();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.queue_depth, 0);
+        assert_eq!(s.latency_p50_s(), None);
+        assert_eq!(s.mean_occupancy(), None);
+        let j = s.to_json();
+        assert!(matches!(j.get("mean_batch_occupancy").unwrap(), Json::Null));
+        assert!(matches!(j.get("latency_s").unwrap().get("p99").unwrap(), Json::Null));
+        assert_eq!(j.get("latency_s").unwrap().get("count").unwrap().as_usize().unwrap(), 0);
     }
 
     #[test]
-    fn distribution_window_is_bounded_but_counters_are_all_time() {
+    fn histogram_storage_is_bounded_but_counters_are_all_time() {
         let m = ServeMetrics::default();
-        for i in 0..(SAMPLE_WINDOW + 100) {
-            m.record_request(1, i as f64);
+        let width = m.snapshot().latency.counts.len();
+        for i in 0..10_000 {
+            m.record_request(1, (i % 100) as f64 * 1e-4);
         }
         let s = m.snapshot();
-        assert_eq!(s.requests as usize, SAMPLE_WINDOW + 100);
-        assert_eq!(s.latency.count(), SAMPLE_WINDOW);
-        // The 100 oldest samples were evicted from the ring.
-        assert!(s.latency.percentile(0.0).unwrap() >= 100.0);
+        assert_eq!(s.requests, 10_000, "request counter is all-time");
+        assert_eq!(s.latency.count(), 10_000, "histogram count is all-time");
+        assert_eq!(s.latency.counts.len(), width, "bucket storage must not grow");
     }
 
     #[test]
     fn counters_and_percentiles_accumulate() {
         let m = ServeMetrics::default();
-        for i in 0..10 {
-            m.record_request(2, 0.001 * (i + 1) as f64);
+        for i in 1..=10 {
+            m.record_request(2, i as f64 * 1e-3);
         }
-        m.record_cache(3, 17);
-        m.record_batch(4, 0.01);
-        m.record_batch(2, 0.02);
+        m.record_batch(4, 0.002);
+        m.record_batch(6, 0.004);
+        m.record_queue_wait(0.001);
+        m.record_coalesce(0.0005);
         let s = m.snapshot();
         assert_eq!(s.requests, 10);
         assert_eq!(s.vertices, 20);
-        assert_eq!(s.cache_hits, 3);
-        assert_eq!(s.cache_misses, 17);
         assert_eq!(s.batches, 2);
-        assert_eq!(s.mean_occupancy(), Some(3.0));
         let p50 = s.latency_p50_s().unwrap();
-        assert!(p50 > 0.004 && p50 < 0.007, "{p50}");
-        assert!(s.latency_p99_s().unwrap() >= p50);
+        assert!(p50 > 0.004 && p50 < 0.007, "p50 {p50}");
+        assert_eq!(s.mean_occupancy(), Some(5.0));
+        assert_eq!(s.queue_wait.count(), 1);
+        assert_eq!(s.coalesce.count(), 1);
+        let j = s.to_json();
+        assert_eq!(j.get("queue_wait_s").unwrap().get("count").unwrap().as_usize().unwrap(), 1);
     }
 
     #[test]
     fn shed_counter_and_depth_gauge_track_admission() {
         let m = ServeMetrics::default();
-        m.depth_add(5);
+        m.depth_add(3);
+        assert_eq!(m.snapshot().queue_depth, 3);
         m.record_shed();
         m.record_shed();
+        m.depth_sub(3);
         let s = m.snapshot();
         assert_eq!(s.shed_requests, 2);
-        assert_eq!(s.queue_depth, 5);
-        m.depth_sub(3);
-        m.depth_sub(2);
-        let s = m.snapshot();
-        assert_eq!(s.queue_depth, 0, "balanced add/sub returns the gauge to zero");
-        assert_eq!(s.shed_requests, 2, "shed is an all-time counter");
-        let json = s.to_json();
-        assert_eq!(json.get("shed_requests").unwrap().as_usize().unwrap(), 2);
-        assert_eq!(json.get("queue_depth").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(s.queue_depth, 0);
+    }
+
+    #[test]
+    fn prometheus_exposition_covers_the_serving_families() {
+        let m = ServeMetrics::default();
+        m.record_request(3, 0.002);
+        m.record_batch(3, 0.0004);
+        let text = m.prometheus();
+        assert!(text.contains("# TYPE hpgnn_serve_requests_total counter\n"));
+        assert!(text.contains("hpgnn_serve_requests_total 1\n"));
+        assert!(text.contains("hpgnn_serve_vertices_total 3\n"));
+        assert!(text.contains("# TYPE hpgnn_serve_queue_depth gauge\n"));
+        assert!(text.contains("# TYPE hpgnn_serve_request_latency_seconds histogram\n"));
+        assert!(text.contains("hpgnn_serve_request_latency_seconds_count 1\n"));
+        assert!(text.contains("hpgnn_serve_batch_occupancy_sum 3\n"));
+        assert!(text.contains("hpgnn_serve_coalesce_seconds_count 0\n"));
     }
 }

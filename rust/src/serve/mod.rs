@@ -25,8 +25,10 @@
 //!   weight hot-swap, graceful shutdown.
 //! * [`cache`] — versioned per-vertex logits cache, invalidated on
 //!   weight reload.
-//! * [`metrics`] — request latency percentiles (p50/p95/p99) and
-//!   throughput counters on [`crate::util::stats::Summary`].
+//! * [`metrics`] — all-time counters, a queue-depth gauge, and bounded
+//!   fixed-bucket histograms (latency/occupancy/queue-wait/coalesce) on
+//!   the [`crate::obs`] registry; rendered as Prometheus text on
+//!   `GET /metrics` and as the stable JSON document on `/metrics.json`.
 //!
 //! Entry points: [`Server::start`] /
 //! [`crate::api::GeneratedDesign::server`] / the `hp-gnn serve` CLI.

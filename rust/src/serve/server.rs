@@ -272,9 +272,10 @@ impl Server {
         let (job_tx, job_rx) = mpsc::sync_channel::<WorkItem>(cfg.queue_depth.max(1));
         let (work_tx, work_rx) = mpsc::sync_channel::<Vec<WorkItem>>(num_workers);
         let max_wait = cfg.max_wait;
+        let batcher_metrics = Arc::clone(&metrics);
         let batcher = std::thread::Builder::new()
             .name("hp-gnn-serve-batcher".to_string())
-            .spawn(move || run_batcher(job_rx, work_tx, max_batch, max_wait))?;
+            .spawn(move || run_batcher(job_rx, work_tx, max_batch, max_wait, batcher_metrics))?;
 
         let opts = InferOptions {
             model: cfg.model,
@@ -340,6 +341,8 @@ impl Server {
     /// order.  Blocking; call from as many threads as you like.
     pub fn classify(&self, vertices: &[Vid]) -> anyhow::Result<Vec<Arc<Prediction>>> {
         anyhow::ensure!(!vertices.is_empty(), "classify: no vertices given");
+        let _sp =
+            crate::obs::span_with("serve", "request", || vec![("vertices", vertices.len() as f64)]);
         let t = Timer::start();
         let tx = {
             let guard = lock_unpoisoned(&self.job_tx);
@@ -357,7 +360,7 @@ impl Server {
                 results[idx] = Some(hit);
             } else {
                 pending += 1;
-                tx.send(WorkItem { vertex, idx, reply: reply_tx.clone() })
+                tx.send(WorkItem { vertex, idx, reply: reply_tx.clone(), enqueued: Timer::start() })
                     .map_err(|_| anyhow::anyhow!("server request queue closed"))?;
                 self.metrics.depth_add(1);
             }
@@ -403,6 +406,8 @@ impl Server {
     /// partial answer.
     pub fn try_classify(&self, vertices: &[Vid]) -> anyhow::Result<Option<Vec<Arc<Prediction>>>> {
         anyhow::ensure!(!vertices.is_empty(), "classify: no vertices given");
+        let _sp =
+            crate::obs::span_with("serve", "request", || vec![("vertices", vertices.len() as f64)]);
         let t = Timer::start();
         let tx = {
             let guard = lock_unpoisoned(&self.job_tx);
@@ -421,7 +426,8 @@ impl Server {
                 results[idx] = Some(hit);
                 continue;
             }
-            match tx.try_send(WorkItem { vertex, idx, reply: reply_tx.clone() }) {
+            let item = WorkItem { vertex, idx, reply: reply_tx.clone(), enqueued: Timer::start() };
+            match tx.try_send(item) {
                 Ok(()) => {
                     pending += 1;
                     self.metrics.depth_add(1);
@@ -484,6 +490,12 @@ impl Server {
     /// Point-in-time serving metrics.
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
+    }
+
+    /// Prometheus text exposition of the live serving metrics (what
+    /// `GET /metrics` returns).
+    pub fn metrics_prometheus(&self) -> String {
+        self.metrics.prometheus()
     }
 
     /// Version of the weights new requests are served under; bumps on
@@ -606,6 +618,7 @@ fn serve_batch(ctx: &WorkerCtx, batch: Vec<WorkItem>) {
     // RNG: results don't depend on batch composition).
     let mut pieces: Vec<(WorkItem, IndexedBatch)> = Vec::with_capacity(batch.len());
     for item in batch {
+        ctx.metrics.record_queue_wait(item.enqueued.secs());
         let mut rng = vertex_rng(ctx.infer_seed, item.vertex);
         match ctx
             .sampler
@@ -667,9 +680,11 @@ fn execute_group(
 ) {
     let parts: Vec<&IndexedBatch> = group.iter().map(|(_, ib)| ib).collect();
     let merged = infer::merge_indexed(&parts);
+    let sp = crate::obs::span_with("serve", "infer", || vec![("batch", group.len() as f64)]);
     let t = Timer::start();
     let result = infer::infer_indexed(&ctx.exe, &ctx.graph, &ctx.opts, weights, &merged);
     ctx.metrics.record_batch(group.len(), t.secs());
+    drop(sp);
     match result {
         Ok(inf) => {
             debug_assert_eq!(inf.real_targets, group.len());

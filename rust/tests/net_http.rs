@@ -132,11 +132,30 @@ fn served_logits_are_byte_identical_to_in_process_classify() {
         server.weight_version()
     );
 
-    let metrics = client.request("GET", "/metrics", None).unwrap().json().unwrap();
+    let metrics = client.request("GET", "/metrics.json", None).unwrap().json().unwrap();
     assert!(metrics.get("requests").unwrap().as_usize().unwrap() >= vertices.len());
     assert_eq!(metrics.get("shed_requests").unwrap().as_usize().unwrap(), 0);
     assert_eq!(metrics.get("queue_depth").unwrap().as_usize().unwrap(), 0);
     metrics.get("latency_s").unwrap().get("p99").unwrap();
+
+    // GET /metrics without an Accept preference serves the Prometheus
+    // text exposition for the same counters.
+    let prom = client.request("GET", "/metrics", None).unwrap();
+    assert_eq!(prom.status, 200);
+    assert!(
+        prom.header("content-type").unwrap().starts_with("text/plain; version=0.0.4"),
+        "exposition content type: {:?}",
+        prom.header("content-type")
+    );
+    let text = String::from_utf8(prom.body.clone()).unwrap();
+    assert!(text.contains("# TYPE hpgnn_serve_requests_total counter"), "{text}");
+    assert!(text.contains("# TYPE hpgnn_serve_request_latency_seconds histogram"), "{text}");
+    let sample = text
+        .lines()
+        .find(|l| l.starts_with("hpgnn_serve_requests_total "))
+        .expect("requests_total sample");
+    let served: f64 = sample.rsplit(' ').next().unwrap().parse().unwrap();
+    assert!(served >= vertices.len() as f64, "{sample}");
 
     drop(client);
     http.shutdown();
@@ -241,7 +260,7 @@ fn full_queue_sheds_with_429_and_retry_after() {
     // The shed counter agrees with what clients observed, and nothing
     // is left in flight.
     let mut client = HttpClient::connect(&addr).unwrap();
-    let metrics = client.request("GET", "/metrics", None).unwrap().json().unwrap();
+    let metrics = client.request("GET", "/metrics.json", None).unwrap().json().unwrap();
     assert_eq!(metrics.get("shed_requests").unwrap().as_usize().unwrap(), shed);
     assert_eq!(metrics.get("queue_depth").unwrap().as_usize().unwrap(), 0);
     assert_eq!(metrics.get("requests").unwrap().as_usize().unwrap(), served);
@@ -428,10 +447,15 @@ fn cli_serve_listen_serves_the_http_api_end_to_end() {
     assert_eq!(preds[0].get("vertex").unwrap().as_usize().unwrap(), 3);
     assert!(!preds[0].get("logits").unwrap().as_arr().unwrap().is_empty());
 
-    let metrics = client.request("GET", "/metrics", None).unwrap().json().unwrap();
+    let metrics = client.request("GET", "/metrics.json", None).unwrap().json().unwrap();
     assert!(metrics.get("requests").unwrap().as_usize().unwrap() >= 1);
     metrics.get("shed_requests").unwrap();
     metrics.get("queue_depth").unwrap();
+
+    let prom = client.request("GET", "/metrics", None).unwrap();
+    assert_eq!(prom.status, 200);
+    let text = String::from_utf8(prom.body.clone()).unwrap();
+    assert!(text.contains("# TYPE hpgnn_serve_requests_total counter"), "{text}");
 
     drop(client);
     // ChildGuard kills the serving process on drop.

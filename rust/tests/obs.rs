@@ -1,0 +1,175 @@
+//! Observability acceptance: tracing observes the pipeline, it never
+//! perturbs it.
+//!
+//! * A traced training run produces a bit-identical loss curve to an
+//!   untraced one, and a traced serving stack returns bit-identical
+//!   logits — the core contract that lets `--trace` ship on by default
+//!   in perf investigations.
+//! * The recorded trace is well-formed: matched B/E pairs per thread,
+//!   non-decreasing timestamps, flop/byte args on kernel spans, and a
+//!   Chrome `trace_event` JSON document that round-trips the parser.
+//!
+//! Tracing is process-global state, so every test here serializes on
+//! [`TRACE_LOCK`].
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use hp_gnn::coordinator::{TrainConfig, TrainingSession};
+use hp_gnn::graph::{generator, Graph};
+use hp_gnn::obs::trace::{self, Phase, Trace};
+use hp_gnn::runtime::{Kind, Runtime, WeightState};
+use hp_gnn::sampler::neighbor::NeighborSampler;
+use hp_gnn::sampler::values::GnnModel;
+use hp_gnn::sampler::Sampler;
+use hp_gnn::serve::{ServeConfig, Server};
+use hp_gnn::util::json::Json;
+
+/// Tracing enable/disable is process-global; tests take this first.
+static TRACE_LOCK: Mutex<()> = Mutex::new(());
+
+fn trace_lock() -> MutexGuard<'static, ()> {
+    TRACE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn world(seed: u64) -> (Arc<Graph>, Arc<dyn Sampler>, TrainConfig) {
+    let mut g = generator::with_min_degree(
+        generator::rmat(400, 3200, Default::default(), seed),
+        1,
+        seed ^ 1,
+    );
+    g.feat_dim = 16;
+    g.num_classes = 4;
+    let sampler: Arc<dyn Sampler> = Arc::new(NeighborSampler::new(4, vec![5, 3]));
+    (Arc::new(g), sampler, TrainConfig::quick(GnnModel::Gcn, "tiny", 0))
+}
+
+fn train_losses(steps: usize) -> Vec<f32> {
+    let rt = Runtime::reference();
+    let (graph, sampler, cfg) = world(55);
+    let mut s = TrainingSession::new(&rt, graph, sampler, cfg).unwrap();
+    s.run_for(steps).unwrap();
+    s.finish().metrics.losses
+}
+
+/// Matched B/E pairs per thread, non-decreasing `ts`, args only where
+/// they belong.  Returns the number of matched pairs.
+fn assert_well_formed(trace: &Trace) -> usize {
+    assert!(!trace.events.is_empty(), "trace recorded nothing");
+    assert_eq!(trace.dropped, 0, "tiny runs must not hit the buffer cap");
+    let mut stacks: std::collections::BTreeMap<u64, Vec<(&str, &str)>> = Default::default();
+    let mut last_ts: std::collections::BTreeMap<u64, f64> = Default::default();
+    let mut pairs = 0;
+    for e in &trace.events {
+        let prev = last_ts.entry(e.tid).or_insert(0.0);
+        assert!(e.ts_us >= *prev, "ts regressed on tid {}: {} < {prev}", e.tid, e.ts_us);
+        *prev = e.ts_us;
+        match e.ph {
+            Phase::B => stacks.entry(e.tid).or_default().push((e.cat, e.name)),
+            Phase::E => {
+                let top = stacks.get_mut(&e.tid).and_then(|s| s.pop());
+                assert_eq!(top, Some((e.cat, e.name)), "unmatched E on tid {}", e.tid);
+                pairs += 1;
+            }
+        }
+    }
+    for (tid, stack) in &stacks {
+        assert!(stack.is_empty(), "tid {tid} left open spans: {stack:?}");
+    }
+    pairs
+}
+
+#[test]
+fn traced_training_is_bit_identical_and_the_trace_is_well_formed() {
+    let _guard = trace_lock();
+    let want = train_losses(4);
+    assert_eq!(want.len(), 4);
+
+    trace::enable();
+    let got = train_losses(4);
+    let trace = trace::disable();
+
+    for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "loss {i} diverged under tracing");
+    }
+
+    let pairs = assert_well_formed(&trace);
+    assert!(pairs > 0);
+
+    // Kernel spans carry flop/byte counts; the pipeline stages show up.
+    let kernel_b = trace
+        .events
+        .iter()
+        .find(|e| e.cat == "kernel" && e.ph == Phase::B)
+        .expect("a traced step must record kernel spans");
+    for key in ["flops", "bytes"] {
+        assert!(
+            kernel_b.args.iter().any(|&(k, _)| k == key),
+            "kernel span {} missing {key} arg",
+            kernel_b.name
+        );
+    }
+    let totals = trace.stage_totals();
+    for stage in [("pipeline", "sample"), ("pipeline", "layout"), ("pipeline", "pad")] {
+        let key = (stage.0.to_string(), stage.1.to_string());
+        let t = totals.get(&key).unwrap_or_else(|| panic!("no {stage:?} stage"));
+        assert!(t.calls >= 1 && t.total_s >= 0.0);
+    }
+    assert!(
+        totals.keys().any(|(cat, _)| cat == "optimizer"),
+        "training must record optimizer spans"
+    );
+
+    // The Chrome export round-trips our own parser with one object per
+    // recorded event.
+    let doc = trace.to_chrome_json().pretty();
+    let parsed = Json::parse(&doc).expect("chrome trace must parse");
+    let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(events.len(), trace.events.len());
+    for e in events.iter().take(32) {
+        for key in ["name", "cat", "ph", "ts", "pid", "tid"] {
+            e.get(key).unwrap_or_else(|err| panic!("event missing {key}: {err:?}"));
+        }
+    }
+}
+
+#[test]
+fn traced_serving_returns_bit_identical_logits() {
+    let _guard = trace_lock();
+    let serve_logits = || -> Vec<Vec<f32>> {
+        let rt = Runtime::reference();
+        let cfg = ServeConfig::default();
+        let exe = rt.compile_role(cfg.model, &cfg.geometry, Kind::Forward).unwrap();
+        let weights = WeightState::init_glorot(&exe.spec.weight_shapes, 3);
+        let (graph, _, _) = world(55);
+        let sampler = Arc::new(NeighborSampler::new(4, vec![5, 3]));
+        let server = Server::start(&rt, graph, sampler, cfg, weights).unwrap();
+        let out = [2u32, 48, 77, 123, 199]
+            .iter()
+            .map(|&v| server.classify_one(v).unwrap().logits.clone())
+            .collect();
+        server.shutdown();
+        out
+    };
+
+    let want = serve_logits();
+    trace::enable();
+    let got = serve_logits();
+    let trace = trace::disable();
+
+    assert_eq!(want.len(), got.len());
+    for (v, (a, b)) in want.iter().zip(&got).enumerate() {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "vertex {v} logits diverged under tracing");
+        }
+    }
+
+    // The serving trace is well-formed and records the serve stages.
+    assert_well_formed(&trace);
+    for name in ["request", "infer", "coalesce"] {
+        assert!(
+            trace.events.iter().any(|e| e.cat == "serve" && e.name == name && e.ph == Phase::B),
+            "serving trace missing serve/{name}"
+        );
+    }
+}
