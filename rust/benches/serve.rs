@@ -34,6 +34,7 @@
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use hp_gnn::graph::store::DynamicGraph;
 use hp_gnn::graph::{generator, Graph};
 use hp_gnn::net::{api_router, HttpClient, HttpOptions, HttpServer};
 use hp_gnn::runtime::{Kind, Runtime, WeightState};
@@ -201,8 +202,14 @@ fn http_slo(
         ..ServeConfig::default()
     };
     let srv = Arc::new(
-        Server::start(rt, Arc::clone(graph), Arc::new(sampler.clone()), cfg, weights.clone())
-            .expect("server start"),
+        Server::start(
+            rt,
+            DynamicGraph::fixed(Arc::clone(graph)),
+            Arc::new(sampler.clone()),
+            cfg,
+            weights.clone(),
+        )
+        .expect("server start"),
     );
     let router = Arc::new(api_router(Arc::clone(&srv)));
     let http = HttpServer::bind(
@@ -379,8 +386,14 @@ fn server(
         cache,
         ..ServeConfig::default()
     };
-    Server::start(rt, Arc::clone(graph), Arc::new(sampler.clone()), cfg, weights.clone())
-        .expect("server start")
+    Server::start(
+        rt,
+        DynamicGraph::fixed(Arc::clone(graph)),
+        Arc::new(sampler.clone()),
+        cfg,
+        weights.clone(),
+    )
+    .expect("server start")
 }
 
 /// Deterministic request stream `i -> vertex` shared by every run, drawn

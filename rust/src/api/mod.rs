@@ -47,7 +47,8 @@ use crate::accel::device::FeaturePlacement;
 use crate::accel::platform::Platform;
 use crate::coordinator::{TrainConfig, TrainReport, TrainingSession};
 use crate::dse::{explore, DseProblem, DseResult};
-use crate::graph::{datasets, Graph};
+use crate::graph::store::DynamicGraph;
+use crate::graph::{datasets, Graph, GraphAccess};
 use crate::layout::pad::EdgeOverflow;
 use crate::layout::LayoutOptions;
 use crate::perf::{BatchGeometry, KappaEstimator, ModelShape, ResourceCoefficients};
@@ -95,7 +96,7 @@ impl SamplerSpec {
     }
 
     /// Table 2 batch shape for the DSE engine.
-    pub fn batch_geometry(&self, g: &Graph) -> BatchGeometry {
+    pub fn batch_geometry(&self, g: &dyn GraphAccess) -> BatchGeometry {
         self.batch_geometry_stats(g.num_vertices(), g.num_edges())
     }
 
@@ -332,8 +333,8 @@ impl ProgramSpec {
         let (graph, full_rows) = self.graph.materialize(self.structure_seed())?;
         let model = self.model.computation;
 
-        let feat = self.layer_dims(graph.feat_dim, graph.num_classes);
-        let batch = self.sampler.batch_geometry(&graph);
+        let feat = self.layer_dims(graph.feat_dim(), graph.num_classes());
+        let batch = self.sampler.batch_geometry(graph.as_ref());
         let abstraction =
             GnnAbstraction { model, feat: feat.clone(), sampler: self.sampler.clone(), batch };
 
@@ -355,7 +356,7 @@ impl ProgramSpec {
 
         // DistributeData(): features go to FPGA DDR when the *full-scale*
         // matrix fits (paper §3.1), else stay in host memory and stream.
-        let feature_bytes = full_rows * graph.feat_dim * 4;
+        let feature_bytes = full_rows * graph.feat_dim() * 4;
         let placement = self.placement.unwrap_or(if feature_bytes <= platform.ddr_bytes {
             FeaturePlacement::FpgaLocal
         } else {
@@ -368,7 +369,7 @@ impl ProgramSpec {
             geometry,
             layout: self.layout,
             placement,
-            graph,
+            graph: DynamicGraph::fixed(graph),
             abstraction,
             seed: self.resolved_seed(),
             spec: self.clone(),
@@ -404,7 +405,7 @@ impl ProgramSpec {
             }
             other => {
                 let (g, _) = other.materialize(self.structure_seed())?;
-                Ok((g.num_vertices(), g.num_edges(), g.feat_dim, g.num_classes))
+                Ok((g.num_vertices(), g.num_edges(), g.feat_dim(), g.num_classes()))
             }
         }
     }
@@ -509,9 +510,13 @@ fn select_geometry(
 /// Output of `GenerateDesign()`: everything needed to run training, plus
 /// the originating [`ProgramSpec`] so an emitted design is rerunnable.
 ///
-/// The graph is held in an `Arc` so each [`session`](Self::session) shares
-/// it with the producer threads instead of deep-copying it (the feature
-/// matrix alone can be hundreds of MB at full dataset scale).
+/// The graph is held as an `Arc<DynamicGraph>` so each
+/// [`session`](Self::session) shares it with the producer threads instead
+/// of deep-copying it (the feature matrix alone can be hundreds of MB at
+/// full dataset scale), and so a [`server`](Self::server) can accept
+/// edge-stream ingest: sessions and servers pin immutable
+/// [snapshots](crate::graph::store::GraphSnapshot) while the dynamic
+/// wrapper versions forward.
 #[derive(Debug)]
 pub struct GeneratedDesign {
     pub platform: Platform,
@@ -519,7 +524,7 @@ pub struct GeneratedDesign {
     pub geometry: String,
     pub layout: LayoutOptions,
     pub placement: FeaturePlacement,
-    pub graph: Arc<Graph>,
+    pub graph: Arc<DynamicGraph>,
     pub abstraction: GnnAbstraction,
     /// The resolved training/feature seed ([`ProgramSpec::resolved_seed`]).
     pub seed: u64,
@@ -574,7 +579,7 @@ impl GeneratedDesign {
     ) -> anyhow::Result<TrainingSession<'rt>> {
         TrainingSession::new(
             runtime,
-            Arc::clone(&self.graph),
+            self.graph.snapshot() as Arc<dyn GraphAccess>,
             Arc::from(self.abstraction.sampler.build()),
             self.train_config(0, lr, simulate),
         )
@@ -593,7 +598,7 @@ impl GeneratedDesign {
     ) -> anyhow::Result<TrainingSession<'rt>> {
         TrainingSession::resume(
             runtime,
-            Arc::clone(&self.graph),
+            self.graph.snapshot() as Arc<dyn GraphAccess>,
             Arc::from(self.abstraction.sampler.build()),
             self.train_config(0, lr, simulate),
             checkpoint,
@@ -667,9 +672,10 @@ impl GeneratedDesign {
             self.abstraction.feat
         ));
         out.push_str(&format!("sampler:         {}\n", self.abstraction.sampler.describe()));
+        let graph_name = self.graph.name();
         out.push_str(&format!(
             "graph:           {} ({} vertices, {} edges)\n",
-            if self.graph.name.is_empty() { "<unnamed>" } else { &self.graph.name },
+            if graph_name.is_empty() { "<unnamed>" } else { &graph_name },
             self.graph.num_vertices(),
             self.graph.num_edges()
         ));
@@ -838,7 +844,7 @@ impl Design {
     pub fn session_with_config(&self, cfg: TrainConfig) -> anyhow::Result<TrainingSession<'_>> {
         TrainingSession::new(
             &self.runtime,
-            Arc::clone(&self.inner.graph),
+            self.inner.graph.snapshot() as Arc<dyn GraphAccess>,
             Arc::from(self.inner.abstraction.sampler.build()),
             cfg,
         )
@@ -863,7 +869,7 @@ impl Design {
     ) -> anyhow::Result<TrainingSession<'_>> {
         TrainingSession::resume(
             &self.runtime,
-            Arc::clone(&self.inner.graph),
+            self.inner.graph.snapshot() as Arc<dyn GraphAccess>,
             Arc::from(self.inner.abstraction.sampler.build()),
             cfg,
             checkpoint,

@@ -59,6 +59,7 @@
 //! | | `edge_list` | string | path to an edge-list file (instead of `dataset`) |
 //! | | `feat_dim` | int | required with `edge_list` |
 //! | | `num_classes` | int | required with `edge_list` |
+//! | | `path` | string | packed `HPGNNG02` out-of-core store (instead of `dataset`/`edge_list`; write one with `hp-gnn graph pack`) — the store carries its own structure, dims and version, so `scale`/`feat_dim`/`num_classes`/`seed` are rejected next to it |
 //! | | `seed` | int | graph-*structure* seed (default: top-level `seed`, else 1) |
 //! | `layout` | `rmt` | bool | rank-minimizing transform (default true) |
 //! | | `rra` | bool | round-robin assignment (default true) |
@@ -293,6 +294,34 @@ mod tests {
         );
         let spec = parse_program(&prog).unwrap();
         assert_eq!(spec.training.steps, 5);
+    }
+
+    #[test]
+    fn graph_path_mounts_a_packed_store() {
+        let prog = PROGRAM.replace(
+            r#""graph": {"dataset": "FL", "scale": 0.005, "seed": 3},"#,
+            r#""graph": {"path": "graph.hpg"},"#,
+        );
+        let spec = parse_program(&prog).unwrap();
+        assert!(matches!(
+            spec.graph,
+            super::super::spec::GraphSpec::Store { .. }
+        ));
+        // A store carries its own structure/dims: keys that would restate
+        // them next to `path` are rejected, with the pack hint.
+        let bad = PROGRAM.replace(
+            r#""graph": {"dataset": "FL", "scale": 0.005, "seed": 3},"#,
+            r#""graph": {"path": "graph.hpg", "scale": 0.5},"#,
+        );
+        let err = parse_program(&bad).unwrap_err().to_string();
+        assert!(err.contains("graph.scale"), "{err}");
+        // Exactly one graph source: dataset + path is a diagnostic.
+        let bad = PROGRAM.replace(
+            r#""graph": {"dataset": "FL", "scale": 0.005, "seed": 3},"#,
+            r#""graph": {"dataset": "FL", "path": "graph.hpg"},"#,
+        );
+        let err = parse_program(&bad).unwrap_err().to_string();
+        assert!(err.contains("exactly one"), "{err}");
     }
 
     #[test]

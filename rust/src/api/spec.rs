@@ -47,7 +47,7 @@ use super::diag::Diagnostics;
 use super::SamplerSpec;
 use crate::accel::device::FeaturePlacement;
 use crate::accel::platform::{self, Platform};
-use crate::graph::{datasets, Graph};
+use crate::graph::{datasets, Graph, GraphAccess};
 use crate::layout::LayoutOptions;
 use crate::sampler::values::GnnModel;
 use crate::util::json::Json;
@@ -92,6 +92,10 @@ pub enum GraphSpec {
     Dataset { key: String, scale: f64, seed: Option<u64> },
     /// An edge-list file plus the dims the file does not carry.
     EdgeList { path: PathBuf, feat_dim: usize, num_classes: usize, seed: Option<u64> },
+    /// A packed out-of-core store (`HPGNNG02`, written by `hp-gnn graph
+    /// pack`) opened via mmap — the graph never loads into RAM, and it
+    /// carries its own dims, name and version.
+    Store { path: PathBuf },
     /// A materialized in-memory graph (builder-only; not serializable).
     Inline(Arc<Graph>),
 }
@@ -107,6 +111,7 @@ impl PartialEq for GraphSpec {
                 GraphSpec::EdgeList { path: a, feat_dim: b, num_classes: c, seed: d },
                 GraphSpec::EdgeList { path: w, feat_dim: x, num_classes: y, seed: z },
             ) => a == w && b == x && c == y && d == z,
+            (GraphSpec::Store { path: a }, GraphSpec::Store { path: b }) => a == b,
             // Inline graphs are equal only when they are the same graph.
             (GraphSpec::Inline(a), GraphSpec::Inline(b)) => Arc::ptr_eq(a, b),
             _ => false,
@@ -119,14 +124,20 @@ impl GraphSpec {
     pub fn seed(&self) -> Option<u64> {
         match self {
             GraphSpec::Dataset { seed, .. } | GraphSpec::EdgeList { seed, .. } => *seed,
-            GraphSpec::Inline(_) => None,
+            GraphSpec::Store { .. } | GraphSpec::Inline(_) => None,
         }
     }
 
     /// Materialize the graph, returning it plus the *full-scale* feature
     /// row count (`DistributeData()` decides placement against the real
-    /// matrix, not a scaled instance).
-    pub fn materialize(&self, structure_seed: u64) -> anyhow::Result<(Arc<Graph>, usize)> {
+    /// matrix, not a scaled instance).  Store graphs come back as an
+    /// mmap-backed [`GraphStore`](crate::graph::store::GraphStore) behind
+    /// the same access trait — the caller cannot tell (and must not care)
+    /// whether neighbors resolve from RAM or disk.
+    pub fn materialize(
+        &self,
+        structure_seed: u64,
+    ) -> anyhow::Result<(Arc<dyn GraphAccess>, usize)> {
         match self {
             GraphSpec::Dataset { key, scale, .. } => {
                 let spec = datasets::by_key(key)
@@ -140,7 +151,15 @@ impl GraphSpec {
                 let rows = g.num_vertices();
                 Ok((Arc::new(g), rows))
             }
-            GraphSpec::Inline(g) => Ok((Arc::clone(g), g.num_vertices())),
+            GraphSpec::Store { path } => {
+                let store = crate::graph::store::GraphStore::open(path)?;
+                let rows = store.num_vertices();
+                Ok((Arc::new(store), rows))
+            }
+            GraphSpec::Inline(g) => {
+                let rows = g.num_vertices();
+                Ok((Arc::clone(g) as Arc<dyn GraphAccess>, rows))
+            }
         }
     }
 }
@@ -334,6 +353,20 @@ impl ProgramSpec {
                     d.push("graph.num_classes", "must be at least 1");
                 }
             }
+            GraphSpec::Store { path } => {
+                // A store program names an on-disk artifact; `hp-gnn
+                // validate` is the preflight that catches a missing or
+                // malformed file before a long run starts, so probe the
+                // header here (cheap: 80 bytes + the file length).
+                match crate::graph::store::probe(path) {
+                    Ok(_) => {}
+                    Err(e) => d.push_hint(
+                        "graph.path",
+                        format!("{}: {e:#}", path.display()),
+                        "pack one with: hp-gnn graph pack --dataset <key> --out <path>",
+                    ),
+                }
+            }
             GraphSpec::Inline(g) => {
                 if g.feat_dim == 0 {
                     d.push("graph", "inline graph has no feature dimension");
@@ -511,6 +544,12 @@ impl ProgramSpec {
                     pairs.push(("seed", Json::num(*seed as f64)));
                 }
                 Json::obj(pairs)
+            }
+            GraphSpec::Store { path } => {
+                let path = path.to_str().ok_or_else(|| {
+                    anyhow::anyhow!("store path {path:?} is not valid UTF-8")
+                })?;
+                Json::obj(vec![("path", Json::str(path))])
             }
             GraphSpec::Inline(g) => anyhow::bail!(
                 "inline graph {:?} has no JSON form — load it from a dataset key or an \
@@ -879,15 +918,29 @@ fn parse_graph(doc: &Json, d: &mut Diagnostics) -> Option<GraphSpec> {
     check_keys(
         graph,
         "graph",
-        &["dataset", "scale", "edge_list", "feat_dim", "num_classes", "seed"],
+        &["dataset", "scale", "edge_list", "feat_dim", "num_classes", "seed", "path"],
         d,
     );
     let seed = opt_seed(graph, "graph", "seed", d);
     let has_dataset = graph.opt("dataset").is_some();
     let has_edge_list = graph.opt("edge_list").is_some();
-    if has_dataset && has_edge_list {
-        d.push("graph", "give either \"dataset\" or \"edge_list\", not both");
+    let has_store = graph.opt("path").is_some();
+    if usize::from(has_dataset) + usize::from(has_edge_list) + usize::from(has_store) > 1 {
+        d.push("graph", "give exactly one of \"dataset\", \"edge_list\" or \"path\"");
         return None;
+    }
+    if has_store {
+        for key in ["scale", "feat_dim", "num_classes", "seed"] {
+            if graph.opt(key).is_some() {
+                d.push_hint(
+                    at("graph", key),
+                    "not meaningful with \"path\"",
+                    "a packed store carries its own structure, dims and version",
+                );
+            }
+        }
+        let path = req_str(graph, "graph", "path", d).map(PathBuf::from)?;
+        return Some(GraphSpec::Store { path });
     }
     if has_dataset {
         for key in ["feat_dim", "num_classes"] {
@@ -920,7 +973,7 @@ fn parse_graph(doc: &Json, d: &mut Diagnostics) -> Option<GraphSpec> {
             seed,
         })
     } else {
-        d.push("graph", "needs either \"dataset\" or \"edge_list\"");
+        d.push("graph", "needs one of \"dataset\", \"edge_list\" or \"path\"");
         None
     }
 }

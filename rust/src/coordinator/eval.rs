@@ -9,7 +9,7 @@
 //! [`crate::serve::infer`], shared with the serving worker pool, so the
 //! evaluation and serving paths cannot drift.
 
-use crate::graph::Graph;
+use crate::graph::GraphAccess;
 use crate::runtime::{Executable, Kind, Runtime, WeightState};
 use crate::sampler::Sampler;
 use crate::serve::infer::{self, InferOptions};
@@ -37,7 +37,7 @@ impl EvalReport {
 /// once and use [`evaluate_with`].
 pub fn evaluate(
     runtime: &Runtime,
-    graph: &Graph,
+    graph: &dyn GraphAccess,
     sampler: &dyn Sampler,
     cfg: &TrainConfig,
     weights: &WeightState,
@@ -52,7 +52,7 @@ pub fn evaluate(
 /// [`evaluate`] against an already-compiled forward [`Executable`].
 pub fn evaluate_with(
     exe: &Executable,
-    graph: &Graph,
+    graph: &dyn GraphAccess,
     sampler: &dyn Sampler,
     cfg: &TrainConfig,
     weights: &WeightState,
@@ -88,7 +88,7 @@ pub fn evaluate_with(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::generator;
+    use crate::graph::{generator, Graph};
     use crate::sampler::neighbor::NeighborSampler;
     use crate::sampler::values::GnnModel;
 

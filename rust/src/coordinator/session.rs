@@ -35,7 +35,7 @@ use super::eval::{self, EvalReport};
 use super::metrics::Metrics;
 use super::trainer::{Optimizer, TrainConfig, TrainReport};
 use crate::accel::{self, SimOptions};
-use crate::graph::{datasets, Graph};
+use crate::graph::{datasets, GraphAccess};
 use crate::layout::pad::{pad, PaddedBatch};
 use crate::layout::{index_batch, Geometry, IndexedBatch};
 use crate::runtime::weights::AdamState;
@@ -133,10 +133,10 @@ const CLAIM_WINDOW: usize = 4;
 /// resume against a different graph fails instead of silently training
 /// checkpointed weights on a stream they never saw.  The serving
 /// subsystem reuses it to reject a snapshot served over the wrong graph.
-pub(crate) fn graph_fingerprint(g: &Graph) -> String {
+pub(crate) fn graph_fingerprint(g: &dyn GraphAccess) -> String {
     // Truncate by bytes (on a char boundary): the checkpoint string
     // encoding caps at 256 bytes and the counts need room too.
-    let mut name = g.name.clone();
+    let mut name = g.graph_name().to_string();
     if name.len() > 128 {
         let mut cut = 128;
         while !name.is_char_boundary(cut) {
@@ -144,7 +144,13 @@ pub(crate) fn graph_fingerprint(g: &Graph) -> String {
         }
         name.truncate(cut);
     }
-    format!("{name} |V|={} |E|={}", g.num_vertices(), g.num_edges())
+    let mut fp = format!("{name} |V|={} |E|={}", g.num_vertices(), g.num_edges());
+    // Version suffix only for evolved graphs, so checkpoints from static
+    // runs keep their pre-store fingerprints (backward compatible).
+    if g.version() > 0 {
+        fp.push_str(&format!(" v={}", g.version()));
+    }
+    fp
 }
 
 /// A live training run: owned producer threads, weights/optimizer state,
@@ -153,7 +159,7 @@ pub(crate) fn graph_fingerprint(g: &Graph) -> String {
 /// [`crate::api::GeneratedDesign::session`].
 pub struct TrainingSession<'rt> {
     runtime: &'rt Runtime,
-    graph: Arc<Graph>,
+    graph: Arc<dyn GraphAccess>,
     sampler: Arc<dyn Sampler>,
     cfg: TrainConfig,
     exe: Executable,
@@ -189,7 +195,7 @@ impl<'rt> TrainingSession<'rt> {
     /// first [`step`](Self::step).
     pub fn new(
         runtime: &'rt Runtime,
-        graph: Arc<Graph>,
+        graph: Arc<dyn GraphAccess>,
         sampler: Arc<dyn Sampler>,
         cfg: TrainConfig,
     ) -> anyhow::Result<TrainingSession<'rt>> {
@@ -203,7 +209,7 @@ impl<'rt> TrainingSession<'rt> {
     /// snapshotted run left off (reference backend).
     pub fn resume(
         runtime: &'rt Runtime,
-        graph: Arc<Graph>,
+        graph: Arc<dyn GraphAccess>,
         sampler: Arc<dyn Sampler>,
         cfg: TrainConfig,
         checkpoint: &Path,
@@ -214,7 +220,7 @@ impl<'rt> TrainingSession<'rt> {
 
     fn with_state(
         runtime: &'rt Runtime,
-        graph: Arc<Graph>,
+        graph: Arc<dyn GraphAccess>,
         sampler: Arc<dyn Sampler>,
         cfg: TrainConfig,
         snapshot: Option<Checkpoint>,
@@ -329,10 +335,10 @@ impl<'rt> TrainingSession<'rt> {
                     sampler.name()
                 );
                 anyhow::ensure!(
-                    snap.graph == graph_fingerprint(&graph),
+                    snap.graph == graph_fingerprint(graph.as_ref()),
                     "checkpoint graph {:?} does not match session graph {:?}",
                     snap.graph,
-                    graph_fingerprint(&graph)
+                    graph_fingerprint(graph.as_ref())
                 );
                 (snap.weights, snap.adam, snap.step as usize)
             }
@@ -415,7 +421,7 @@ impl<'rt> TrainingSession<'rt> {
                 let t = Timer::start();
                 let mut rng = batch_rng(cfg.seed, k as u64);
                 let item = prepare_batch(
-                    &graph,
+                    graph.as_ref(),
                     sampler.as_ref(),
                     &cfg,
                     &geom,
@@ -620,7 +626,7 @@ impl<'rt> TrainingSession<'rt> {
         }
         let report = eval::evaluate_with(
             self.forward.as_ref().expect("just compiled"),
-            &self.graph,
+            self.graph.as_ref(),
             self.sampler.as_ref(),
             &self.cfg,
             &self.weights,
@@ -646,7 +652,7 @@ impl<'rt> TrainingSession<'rt> {
             model: self.cfg.model.as_str().to_string(),
             geometry: self.geom.name.clone(),
             sampler: self.sampler.name(),
-            graph: graph_fingerprint(&self.graph),
+            graph: graph_fingerprint(self.graph.as_ref()),
             weights: self.weights.clone(),
             adam: self.adam.clone(),
         }
@@ -748,7 +754,7 @@ impl Drop for TrainingSession<'_> {
 /// Producer-side batch preparation (everything the paper's host program
 /// does between the sampler and the accelerator).
 fn prepare_batch(
-    graph: &Graph,
+    graph: &dyn GraphAccess,
     sampler: &dyn Sampler,
     cfg: &TrainConfig,
     geom: &Geometry,
@@ -789,7 +795,7 @@ fn prepare_batch(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::generator;
+    use crate::graph::{generator, Graph};
     use crate::sampler::neighbor::NeighborSampler;
 
     fn tiny_graph(seed: u64) -> Graph {

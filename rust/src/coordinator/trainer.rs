@@ -19,7 +19,7 @@ use std::sync::Arc;
 use super::metrics::Metrics;
 use super::session::TrainingSession;
 use crate::accel::{AccelConfig, Platform};
-use crate::graph::Graph;
+use crate::graph::{Graph, GraphAccess};
 use crate::layout::pad::EdgeOverflow;
 use crate::layout::LayoutOptions;
 use crate::runtime::{Runtime, WeightState};
@@ -31,7 +31,9 @@ use crate::sampler::Sampler;
 /// hardware template is value-agnostic (`msg.val = edge.val * feat[src]`),
 /// so custom layers run on the stock artifacts.
 pub type ValueFn = Arc<
-    dyn Fn(&Graph, &crate::sampler::MiniBatch) -> crate::sampler::values::EdgeValues + Send + Sync,
+    dyn Fn(&dyn GraphAccess, &crate::sampler::MiniBatch) -> crate::sampler::values::EdgeValues
+        + Send
+        + Sync,
 >;
 
 /// Weight-update rule (paper Algorithm 2's WeightUpdate stage).

@@ -9,12 +9,96 @@ pub mod datasets;
 pub mod generator;
 pub mod io;
 pub mod partition;
+pub mod store;
+
+use std::borrow::Cow;
 
 use crate::util::rng::Pcg64;
 
 /// Vertex id. 32 bits covers the paper's largest dataset (AmazonProducts,
 /// 1.6M vertices) with room to spare and halves sampler memory traffic.
 pub type Vid = u32;
+
+/// The neighbor-access surface samplers and inference consume — what both
+/// the in-RAM [`Graph`] and the out-of-core [`store::GraphStore`] (plus
+/// its [`store::GraphSnapshot`] overlay) provide.
+///
+/// The default-method formulas (`gcn_norm`, `avg_degree`) are verbatim
+/// copies of [`Graph`]'s inherent ones, so a batch sampled through a
+/// trait object is bit-identical to one sampled from the concrete graph:
+/// the determinism contract (loss curve as a pure function of `(seed,
+/// step)`) holds across backings.
+///
+/// `neighbors` returns [`Cow`] because the mmap-backed store can borrow
+/// straight from the mapping while the pread fallback and the snapshot
+/// overlay's merged adjacency must own their buffers.
+pub trait GraphAccess: Send + Sync + std::fmt::Debug {
+    fn num_vertices(&self) -> usize;
+    fn num_edges(&self) -> usize;
+    /// Input feature dimension (features are synthesized on demand).
+    fn feat_dim(&self) -> usize;
+    fn num_classes(&self) -> usize;
+    /// Human-readable graph name (checkpoint fingerprints embed it).
+    fn graph_name(&self) -> &str;
+    fn degree(&self, v: Vid) -> usize;
+    /// Sorted out-neighbors of `v` (ascending, duplicates kept) — the
+    /// same order [`Graph::from_edges`] produces.
+    fn neighbors(&self, v: Vid) -> Cow<'_, [Vid]>;
+
+    /// Monotone snapshot version: 0 for static graphs, bumped by every
+    /// edge-stream ingest on a dynamic graph.
+    fn version(&self) -> u64 {
+        0
+    }
+
+    /// Bytes of backing file currently mapped (out-of-core stores only).
+    fn bytes_mapped(&self) -> u64 {
+        0
+    }
+
+    /// Average degree (same formula as [`Graph::avg_degree`]).
+    fn avg_degree(&self) -> f64 {
+        self.num_edges() as f64 / self.num_vertices().max(1) as f64
+    }
+
+    /// GCN symmetric normalization (same formula as [`Graph::gcn_norm`];
+    /// bit-identical because both go through the `f64` sqrt).
+    fn gcn_norm(&self, u: Vid, v: Vid) -> f32 {
+        let du = (self.degree(u) + 1) as f64;
+        let dv = (self.degree(v) + 1) as f64;
+        (1.0 / (du * dv).sqrt()) as f32
+    }
+}
+
+impl GraphAccess for Graph {
+    fn num_vertices(&self) -> usize {
+        Graph::num_vertices(self)
+    }
+
+    fn num_edges(&self) -> usize {
+        Graph::num_edges(self)
+    }
+
+    fn feat_dim(&self) -> usize {
+        self.feat_dim
+    }
+
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    fn graph_name(&self) -> &str {
+        &self.name
+    }
+
+    fn degree(&self, v: Vid) -> usize {
+        Graph::degree(self, v)
+    }
+
+    fn neighbors(&self, v: Vid) -> Cow<'_, [Vid]> {
+        Cow::Borrowed(Graph::neighbors(self, v))
+    }
+}
 
 /// Compressed-sparse-row graph with out-neighbor adjacency.
 ///

@@ -1,0 +1,580 @@
+//! The `HPGNNG02` chunked on-disk CSR format.
+//!
+//! Layout (all integers little-endian u64 unless noted):
+//!
+//! ```text
+//! offset  field
+//! 0       magic  "HPGNNG02"
+//! 8       |V|
+//! 16      |E|
+//! 24      feat_dim
+//! 32      num_classes
+//! 40      graph_version      (snapshot version baked at pack time)
+//! 48      chunk_edges        (edges per chunk, >= 1)
+//! 56      num_chunks         (= ceil(|E| / chunk_edges))
+//! 64      flags              (bit 0: f32 value section present)
+//! 72      name_len           (<= 128 bytes of UTF-8)
+//! 80      name bytes, zero-padded to a multiple of 8
+//! .       chunk table: num_chunks x { file_offset u64, nbytes u64, edge_base u64 }
+//! .       degree section: |V| x u32
+//! .       neighbor section (4-byte aligned): |E| x u32, vertex-major, each
+//!         vertex's neighbors ascending (duplicates kept) — the exact order
+//!         `Graph::from_edges` produces, so sampling is bit-identical
+//! .       value section (iff flags bit 0): |E| x f32
+//! ```
+//!
+//! The chunk table is redundant with `(chunk_edges, |E|)` by construction;
+//! the loaders verify it **tiles the neighbor section exactly** and reject
+//! overlapping, out-of-bounds, or misplaced entries.  Every loader here
+//! uses checked arithmetic (lint rule R2 is bound over this module):
+//! adversarial headers must fail a length check, never wrap one.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::graph::{GraphAccess, Vid};
+
+/// Magic for the chunked store format.  `HPGNNG01` is the flat in-RAM
+/// binary format in [`crate::graph::io`]; the store is format 02.
+pub const STORE_MAGIC: &[u8; 8] = b"HPGNNG02";
+pub const HEADER_BYTES: usize = 80;
+pub const CHUNK_ENTRY_BYTES: usize = 24;
+pub const MAX_NAME_BYTES: usize = 128;
+/// Default edges per chunk for `hp-gnn graph pack` (64Ki edges = 256 KiB
+/// per chunk — large enough to amortize seeks, small enough to stream).
+pub const DEFAULT_CHUNK_EDGES: u64 = 64 * 1024;
+/// Flags bit 0: a per-edge f32 value section follows the neighbor section.
+pub const FLAG_VALUES: u64 = 1;
+
+/// Parsed, validated header plus the derived section offsets.
+#[derive(Debug, Clone)]
+pub struct StoreMeta {
+    pub num_vertices: usize,
+    pub num_edges: usize,
+    pub feat_dim: usize,
+    pub num_classes: usize,
+    pub graph_version: u64,
+    pub chunk_edges: u64,
+    pub num_chunks: usize,
+    pub flags: u64,
+    pub name: String,
+    /// Byte offset of the chunk table.
+    pub chunk_table_off: usize,
+    /// Byte offset of the degree section.
+    pub degree_off: usize,
+    /// Byte offset of the (4-byte aligned) neighbor section.
+    pub neigh_off: usize,
+    /// Byte offset of the value section, when `flags` bit 0 is set.
+    pub val_off: Option<usize>,
+    pub file_len: usize,
+}
+
+/// One chunk-table entry: `nbytes` of neighbor data at `file_offset`,
+/// covering edges `[edge_base, edge_base + nbytes/4)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkEntry {
+    pub file_offset: u64,
+    pub nbytes: u64,
+    pub edge_base: u64,
+}
+
+/// What [`pack`] wrote — surfaced by the CLI verb and CI smoke.
+#[derive(Debug, Clone, Copy)]
+pub struct PackStats {
+    pub num_vertices: usize,
+    pub num_edges: usize,
+    pub num_chunks: usize,
+    pub bytes_written: u64,
+}
+
+fn u64_at(bytes: &[u8], off: usize) -> Option<u64> {
+    let end = off.checked_add(8)?;
+    let win = bytes.get(off..end)?;
+    let mut b = [0u8; 8];
+    b.copy_from_slice(win);
+    Some(u64::from_le_bytes(b))
+}
+
+fn oversized(what: &str) -> anyhow::Error {
+    anyhow::anyhow!("graph store header rejected: {what} overflows size arithmetic")
+}
+
+/// Round `n` up to a multiple of 8 (checked).
+fn pad8(n: usize) -> Option<usize> {
+    n.checked_add(7).map(|x| x & !7)
+}
+
+/// Parse and validate the fixed header + name from the file prefix.
+/// `head` must contain at least the first `min(file_len, 80 + 136)` bytes;
+/// `file_len` is the true on-disk length, checked *exactly* against the
+/// section layout the header claims.
+pub fn read_header(head: &[u8], file_len: usize) -> anyhow::Result<StoreMeta> {
+    anyhow::ensure!(
+        file_len >= HEADER_BYTES && head.len() >= HEADER_BYTES,
+        "graph store rejected: {file_len} bytes is shorter than the {HEADER_BYTES}-byte header"
+    );
+    anyhow::ensure!(
+        &head[..8] == STORE_MAGIC,
+        "graph store rejected: bad magic {:?} (want {:?} — is this an \
+         HPGNNG01 flat binary or a different file?)",
+        &head[..8],
+        STORE_MAGIC
+    );
+    let v64 = u64_at(head, 8).ok_or_else(|| oversized("|V|"))?;
+    let e64 = u64_at(head, 16).ok_or_else(|| oversized("|E|"))?;
+    let feat64 = u64_at(head, 24).ok_or_else(|| oversized("feat_dim"))?;
+    let classes64 = u64_at(head, 32).ok_or_else(|| oversized("num_classes"))?;
+    let graph_version = u64_at(head, 40).ok_or_else(|| oversized("graph_version"))?;
+    let chunk_edges = u64_at(head, 48).ok_or_else(|| oversized("chunk_edges"))?;
+    let chunks64 = u64_at(head, 56).ok_or_else(|| oversized("num_chunks"))?;
+    let flags = u64_at(head, 64).ok_or_else(|| oversized("flags"))?;
+    let name64 = u64_at(head, 72).ok_or_else(|| oversized("name_len"))?;
+
+    let num_vertices = usize::try_from(v64).map_err(|_| oversized("|V|"))?;
+    let num_edges = usize::try_from(e64).map_err(|_| oversized("|E|"))?;
+    let feat_dim = usize::try_from(feat64).map_err(|_| oversized("feat_dim"))?;
+    let num_classes = usize::try_from(classes64).map_err(|_| oversized("num_classes"))?;
+    let num_chunks = usize::try_from(chunks64).map_err(|_| oversized("num_chunks"))?;
+    let name_len = usize::try_from(name64).map_err(|_| oversized("name_len"))?;
+
+    anyhow::ensure!(
+        name_len <= MAX_NAME_BYTES,
+        "graph store rejected: name_len {name_len} exceeds the {MAX_NAME_BYTES}-byte cap"
+    );
+    anyhow::ensure!(chunk_edges >= 1, "graph store rejected: chunk_edges must be >= 1");
+    anyhow::ensure!(
+        flags & !FLAG_VALUES == 0,
+        "graph store rejected: unknown flags {flags:#x} (this reader understands {FLAG_VALUES:#x})"
+    );
+    // The chunk count is determined by (|E|, chunk_edges); a mismatch means
+    // a corrupt or hostile header.
+    let want_chunks64 = if e64 == 0 {
+        0
+    } else {
+        e64.checked_sub(1)
+            .and_then(|x| x.checked_div(chunk_edges))
+            .and_then(|x| x.checked_add(1))
+            .ok_or_else(|| oversized("num_chunks"))?
+    };
+    anyhow::ensure!(
+        chunks64 == want_chunks64,
+        "graph store rejected: num_chunks {chunks64} inconsistent with \
+         |E|={e64} at {chunk_edges} edges/chunk (want {want_chunks64})"
+    );
+
+    // Section layout, every step checked: a hostile |V|/|E| must fail
+    // here, not wrap and alias a small valid-looking layout.
+    let name_padded = pad8(name_len).ok_or_else(|| oversized("name padding"))?;
+    let chunk_table_off =
+        HEADER_BYTES.checked_add(name_padded).ok_or_else(|| oversized("chunk table offset"))?;
+    let chunk_table_bytes =
+        num_chunks.checked_mul(CHUNK_ENTRY_BYTES).ok_or_else(|| oversized("chunk table"))?;
+    let degree_off =
+        chunk_table_off.checked_add(chunk_table_bytes).ok_or_else(|| oversized("degree offset"))?;
+    let degree_bytes = num_vertices.checked_mul(4).ok_or_else(|| oversized("degree section"))?;
+    let neigh_unaligned =
+        degree_off.checked_add(degree_bytes).ok_or_else(|| oversized("neighbor offset"))?;
+    let neigh_off = neigh_unaligned
+        .checked_add(3)
+        .map(|x| x & !3)
+        .ok_or_else(|| oversized("neighbor alignment"))?;
+    let neigh_bytes = num_edges.checked_mul(4).ok_or_else(|| oversized("neighbor section"))?;
+    let neigh_end = neigh_off.checked_add(neigh_bytes).ok_or_else(|| oversized("neighbor end"))?;
+    let (val_off, expected_len) = if flags & FLAG_VALUES != 0 {
+        let val_bytes = num_edges.checked_mul(4).ok_or_else(|| oversized("value section"))?;
+        let end = neigh_end.checked_add(val_bytes).ok_or_else(|| oversized("value end"))?;
+        (Some(neigh_end), end)
+    } else {
+        (None, neigh_end)
+    };
+    anyhow::ensure!(
+        file_len == expected_len,
+        "graph store rejected: file is {file_len} bytes but the header \
+         describes {expected_len} (truncated or trailing garbage)"
+    );
+
+    let name_end = HEADER_BYTES.checked_add(name_len).ok_or_else(|| oversized("name"))?;
+    let name_bytes = head
+        .get(HEADER_BYTES..name_end)
+        .ok_or_else(|| anyhow::anyhow!("graph store rejected: name truncated"))?;
+    let name = String::from_utf8(name_bytes.to_vec())
+        .map_err(|_| anyhow::anyhow!("graph store rejected: name is not UTF-8"))?;
+
+    Ok(StoreMeta {
+        num_vertices,
+        num_edges,
+        feat_dim,
+        num_classes,
+        graph_version,
+        chunk_edges,
+        num_chunks,
+        flags,
+        name,
+        chunk_table_off,
+        degree_off,
+        neigh_off,
+        val_off,
+        file_len,
+    })
+}
+
+/// Parse the chunk table and verify it tiles the neighbor section exactly
+/// — overlapping, out-of-bounds, or misplaced entries are rejected.
+pub fn read_chunk_table(table: &[u8], meta: &StoreMeta) -> anyhow::Result<Vec<ChunkEntry>> {
+    let want_bytes = meta
+        .num_chunks
+        .checked_mul(CHUNK_ENTRY_BYTES)
+        .ok_or_else(|| oversized("chunk table"))?;
+    anyhow::ensure!(
+        table.len() == want_bytes,
+        "graph store rejected: chunk table truncated ({} bytes, want {want_bytes})",
+        table.len()
+    );
+    let mut entries = Vec::with_capacity(meta.num_chunks);
+    let e64 = meta.num_edges as u64;
+    let neigh_off64 = meta.neigh_off as u64;
+    for i in 0..meta.num_chunks {
+        let base = i.checked_mul(CHUNK_ENTRY_BYTES).ok_or_else(|| oversized("chunk entry"))?;
+        let file_offset = u64_at(table, base).ok_or_else(|| oversized("chunk offset"))?;
+        let nbytes = u64_at(table, base.checked_add(8).ok_or_else(|| oversized("chunk entry"))?)
+            .ok_or_else(|| oversized("chunk nbytes"))?;
+        let edge_base = u64_at(table, base.checked_add(16).ok_or_else(|| oversized("chunk entry"))?)
+            .ok_or_else(|| oversized("chunk edge_base"))?;
+
+        let want_base =
+            (i as u64).checked_mul(meta.chunk_edges).ok_or_else(|| oversized("chunk edge_base"))?;
+        anyhow::ensure!(
+            edge_base == want_base,
+            "graph store rejected: chunk {i} edge_base {edge_base} does not \
+             tile the edge range (want {want_base})"
+        );
+        let span = meta.chunk_edges.min(e64.saturating_sub(want_base));
+        let want_nbytes = span.checked_mul(4).ok_or_else(|| oversized("chunk span"))?;
+        anyhow::ensure!(
+            nbytes == want_nbytes,
+            "graph store rejected: chunk {i} covers {nbytes} bytes, want \
+             {want_nbytes} — chunks must not overlap or leave gaps"
+        );
+        let want_off = want_base
+            .checked_mul(4)
+            .and_then(|x| x.checked_add(neigh_off64))
+            .ok_or_else(|| oversized("chunk offset"))?;
+        anyhow::ensure!(
+            file_offset == want_off,
+            "graph store rejected: chunk {i} at file offset {file_offset} \
+             overlaps or strays from the neighbor section (want {want_off})"
+        );
+        let end = file_offset.checked_add(nbytes).ok_or_else(|| oversized("chunk end"))?;
+        anyhow::ensure!(
+            end <= meta.file_len as u64,
+            "graph store rejected: chunk {i} ends at byte {end}, past the \
+             {}-byte file",
+            meta.file_len
+        );
+        entries.push(ChunkEntry { file_offset, nbytes, edge_base });
+    }
+    Ok(entries)
+}
+
+/// Decode the degree section into a row-pointer array (`|V| + 1` entries).
+/// The checked prefix sum must land exactly on `|E|`.
+pub fn read_row_ptr(degrees: &[u8], meta: &StoreMeta) -> anyhow::Result<Vec<u64>> {
+    let want_bytes = meta.num_vertices.checked_mul(4).ok_or_else(|| oversized("degree section"))?;
+    anyhow::ensure!(
+        degrees.len() == want_bytes,
+        "graph store rejected: degree section truncated ({} bytes, want {want_bytes})",
+        degrees.len()
+    );
+    let cap = meta.num_vertices.checked_add(1).ok_or_else(|| oversized("row_ptr"))?;
+    let mut row_ptr = Vec::with_capacity(cap);
+    row_ptr.push(0u64);
+    let mut total: u64 = 0;
+    for (v, win) in degrees.chunks_exact(4).enumerate() {
+        let deg = u32::from_le_bytes([win[0], win[1], win[2], win[3]]) as u64;
+        total = total.checked_add(deg).ok_or_else(|| {
+            anyhow::anyhow!("graph store rejected: degree sum overflows at vertex {v}")
+        })?;
+        row_ptr.push(total);
+    }
+    anyhow::ensure!(
+        total == meta.num_edges as u64,
+        "graph store rejected: degrees sum to {total} edges but the header \
+         claims {}",
+        meta.num_edges
+    );
+    Ok(row_ptr)
+}
+
+fn put_u64(w: &mut impl Write, x: u64) -> std::io::Result<()> {
+    w.write_all(&x.to_le_bytes())
+}
+
+/// Pack any [`GraphAccess`] into the `HPGNNG02` format at `path`.
+///
+/// Works off the trait surface so a [`super::GraphSnapshot`] (base store +
+/// ingest delta) compacts through the same writer as an in-RAM
+/// [`crate::graph::Graph`].  Neighbor lists are streamed vertex-major in
+/// the order `neighbors` reports them, so a pack → open round trip
+/// reproduces sampling bit-for-bit.
+pub fn pack(
+    g: &dyn GraphAccess,
+    path: &Path,
+    graph_version: u64,
+    chunk_edges: u64,
+) -> anyhow::Result<PackStats> {
+    anyhow::ensure!(chunk_edges >= 1, "chunk_edges must be >= 1");
+    let name = g.graph_name();
+    anyhow::ensure!(
+        name.len() <= MAX_NAME_BYTES,
+        "graph name is {} bytes; the store format caps names at {MAX_NAME_BYTES}",
+        name.len()
+    );
+    let num_vertices = g.num_vertices();
+    let num_edges = g.num_edges();
+    let e64 = num_edges as u64;
+    let num_chunks = if e64 == 0 { 0 } else { ((e64 - 1) / chunk_edges) + 1 };
+
+    let file = std::fs::File::create(path)
+        .map_err(|e| anyhow::anyhow!("cannot create graph store {}: {e}", path.display()))?;
+    let mut w = std::io::BufWriter::new(file);
+
+    w.write_all(STORE_MAGIC)?;
+    put_u64(&mut w, num_vertices as u64)?;
+    put_u64(&mut w, e64)?;
+    put_u64(&mut w, g.feat_dim() as u64)?;
+    put_u64(&mut w, g.num_classes() as u64)?;
+    put_u64(&mut w, graph_version)?;
+    put_u64(&mut w, chunk_edges)?;
+    put_u64(&mut w, num_chunks)?;
+    put_u64(&mut w, 0)?; // flags: no value section (reserved for packed edge values)
+    put_u64(&mut w, name.len() as u64)?;
+    w.write_all(name.as_bytes())?;
+    let name_padded = pad8(name.len()).ok_or_else(|| oversized("name padding"))?;
+    w.write_all(&vec![0u8; name_padded - name.len()])?;
+
+    // Section offsets mirror read_header's layout computation.
+    let chunk_table_bytes = (num_chunks as usize)
+        .checked_mul(CHUNK_ENTRY_BYTES)
+        .ok_or_else(|| oversized("chunk table"))?;
+    let degree_off = HEADER_BYTES
+        .checked_add(name_padded)
+        .and_then(|x| x.checked_add(chunk_table_bytes))
+        .ok_or_else(|| oversized("degree offset"))?;
+    let degree_bytes = num_vertices.checked_mul(4).ok_or_else(|| oversized("degree section"))?;
+    let neigh_unaligned =
+        degree_off.checked_add(degree_bytes).ok_or_else(|| oversized("neighbor offset"))?;
+    let neigh_off =
+        neigh_unaligned.checked_add(3).map(|x| x & !3).ok_or_else(|| oversized("alignment"))?;
+    let pad = neigh_off - neigh_unaligned;
+
+    for i in 0..num_chunks {
+        let edge_base = i
+            .checked_mul(chunk_edges)
+            .ok_or_else(|| oversized("chunk edge_base"))?;
+        let span = chunk_edges.min(e64 - edge_base);
+        let nbytes = span.checked_mul(4).ok_or_else(|| oversized("chunk span"))?;
+        let file_offset = edge_base
+            .checked_mul(4)
+            .and_then(|x| x.checked_add(neigh_off as u64))
+            .ok_or_else(|| oversized("chunk offset"))?;
+        put_u64(&mut w, file_offset)?;
+        put_u64(&mut w, nbytes)?;
+        put_u64(&mut w, edge_base)?;
+    }
+
+    for v in 0..num_vertices {
+        let deg = g.degree(v as Vid);
+        let deg32 = u32::try_from(deg).map_err(|_| {
+            anyhow::anyhow!("vertex {v} has degree {deg}, beyond the format's u32 cap")
+        })?;
+        w.write_all(&deg32.to_le_bytes())?;
+    }
+    w.write_all(&vec![0u8; pad])?;
+
+    let mut written_edges: u64 = 0;
+    for v in 0..num_vertices {
+        let neigh = g.neighbors(v as Vid);
+        for &u in neigh.iter() {
+            w.write_all(&u.to_le_bytes())?;
+        }
+        written_edges = written_edges
+            .checked_add(neigh.len() as u64)
+            .ok_or_else(|| oversized("edge count"))?;
+    }
+    anyhow::ensure!(
+        written_edges == e64,
+        "graph reported |E|={e64} but yielded {written_edges} neighbors"
+    );
+    w.flush()?;
+
+    let expected_len = (neigh_off as u64)
+        .checked_add(e64.checked_mul(4).ok_or_else(|| oversized("neighbor section"))?)
+        .ok_or_else(|| oversized("file length"))?;
+    Ok(PackStats {
+        num_vertices,
+        num_edges,
+        num_chunks: num_chunks as usize,
+        bytes_written: expected_len,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("hpgnn-format-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample_graph() -> Graph {
+        let mut g = Graph::from_edges(5, &[(0, 1), (0, 2), (1, 3), (2, 3), (3, 0), (4, 0)]);
+        g.feat_dim = 8;
+        g.num_classes = 3;
+        g.name = "fixture".into();
+        g
+    }
+
+    /// Pack the sample graph and return the raw bytes for mutation.
+    fn packed_bytes() -> Vec<u8> {
+        let path = tmp("mutate.g2");
+        pack(&sample_graph(), &path, 0, 4).unwrap();
+        std::fs::read(&path).unwrap()
+    }
+
+    fn header_of(bytes: &[u8]) -> anyhow::Result<StoreMeta> {
+        read_header(bytes, bytes.len())
+    }
+
+    #[test]
+    fn round_trip_header_and_sections() {
+        let bytes = packed_bytes();
+        let meta = header_of(&bytes).unwrap();
+        assert_eq!(meta.num_vertices, 5);
+        assert_eq!(meta.num_edges, 6);
+        assert_eq!(meta.feat_dim, 8);
+        assert_eq!(meta.num_classes, 3);
+        assert_eq!(meta.name, "fixture");
+        assert_eq!(meta.num_chunks, 2, "6 edges at 4/chunk");
+        assert_eq!(meta.neigh_off % 4, 0, "neighbor section must be aligned");
+
+        let table = &bytes[meta.chunk_table_off..meta.degree_off];
+        let chunks = read_chunk_table(table, &meta).unwrap();
+        assert_eq!(chunks.len(), 2);
+        assert_eq!(chunks[0].edge_base, 0);
+        assert_eq!(chunks[0].nbytes, 16);
+        assert_eq!(chunks[1].edge_base, 4);
+        assert_eq!(chunks[1].nbytes, 8);
+
+        let degrees = &bytes[meta.degree_off..meta.degree_off + 5 * 4];
+        let row_ptr = read_row_ptr(degrees, &meta).unwrap();
+        assert_eq!(row_ptr, vec![0, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let mut bytes = packed_bytes();
+        bytes[..8].copy_from_slice(b"HPGNNG01");
+        let err = header_of(&bytes).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let bytes = packed_bytes();
+        // Cut inside the chunk table.
+        let meta = header_of(&bytes).unwrap();
+        let cut = &bytes[..meta.chunk_table_off + 10];
+        let err = read_header(cut, cut.len()).unwrap_err().to_string();
+        assert!(err.contains("truncated") || err.contains("describes"), "{err}");
+        // And a file shorter than the header itself.
+        let err = read_header(&bytes[..40], 40).unwrap_err().to_string();
+        assert!(err.contains("shorter than"), "{err}");
+    }
+
+    #[test]
+    fn rejects_overflowing_header_counts() {
+        for (v, e) in [(u64::MAX, 0u64), (0, u64::MAX), (u64::MAX, u64::MAX), (u64::MAX / 2, 8)] {
+            let mut bytes = packed_bytes();
+            bytes[8..16].copy_from_slice(&v.to_le_bytes());
+            bytes[16..24].copy_from_slice(&e.to_le_bytes());
+            let err = header_of(&bytes).unwrap_err().to_string();
+            assert!(err.contains("rejected"), "V={v} E={e}: {err}");
+        }
+    }
+
+    #[test]
+    fn rejects_inconsistent_chunk_count() {
+        let mut bytes = packed_bytes();
+        bytes[56..64].copy_from_slice(&99u64.to_le_bytes());
+        let err = header_of(&bytes).unwrap_err().to_string();
+        assert!(err.contains("num_chunks"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_flags_and_oversized_name() {
+        let mut bytes = packed_bytes();
+        bytes[64..72].copy_from_slice(&0xff00u64.to_le_bytes());
+        assert!(header_of(&bytes).unwrap_err().to_string().contains("unknown flags"));
+
+        let mut bytes = packed_bytes();
+        bytes[72..80].copy_from_slice(&1000u64.to_le_bytes());
+        assert!(header_of(&bytes).unwrap_err().to_string().contains("name_len"));
+    }
+
+    #[test]
+    fn rejects_overlapping_chunk_offsets() {
+        let bytes = packed_bytes();
+        let meta = header_of(&bytes).unwrap();
+        // Point chunk 1 back at chunk 0's bytes (overlap).
+        let mut evil = bytes.clone();
+        let e1 = meta.chunk_table_off + CHUNK_ENTRY_BYTES;
+        let chunk0_off = u64_at(&bytes, meta.chunk_table_off).unwrap();
+        evil[e1..e1 + 8].copy_from_slice(&chunk0_off.to_le_bytes());
+        let table = &evil[meta.chunk_table_off..meta.degree_off];
+        let err = read_chunk_table(table, &meta).unwrap_err().to_string();
+        assert!(err.contains("overlaps") || err.contains("tile"), "{err}");
+    }
+
+    #[test]
+    fn rejects_out_of_bounds_chunk_offsets() {
+        let bytes = packed_bytes();
+        let meta = header_of(&bytes).unwrap();
+        let mut evil = bytes.clone();
+        let e0 = meta.chunk_table_off;
+        evil[e0..e0 + 8].copy_from_slice(&(meta.file_len as u64 + 4096).to_le_bytes());
+        let table = &evil[meta.chunk_table_off..meta.degree_off];
+        let err = read_chunk_table(table, &meta).unwrap_err().to_string();
+        assert!(err.contains("overlaps") || err.contains("past"), "{err}");
+    }
+
+    #[test]
+    fn rejects_degree_sum_mismatch() {
+        let bytes = packed_bytes();
+        let meta = header_of(&bytes).unwrap();
+        let mut evil = bytes.clone();
+        let d0 = meta.degree_off;
+        evil[d0..d0 + 4].copy_from_slice(&100u32.to_le_bytes());
+        let degrees = &evil[meta.degree_off..meta.degree_off + meta.num_vertices * 4];
+        let err = read_row_ptr(degrees, &meta).unwrap_err().to_string();
+        assert!(err.contains("sum to"), "{err}");
+    }
+
+    #[test]
+    fn empty_graph_packs_and_parses() {
+        let mut g = Graph::from_edges(3, &[]);
+        g.name = "empty".into();
+        let path = tmp("empty.g2");
+        let stats = pack(&g, &path, 7, DEFAULT_CHUNK_EDGES).unwrap();
+        assert_eq!(stats.num_chunks, 0);
+        let bytes = std::fs::read(&path).unwrap();
+        let meta = header_of(&bytes).unwrap();
+        assert_eq!(meta.num_edges, 0);
+        assert_eq!(meta.graph_version, 7);
+        let row_ptr =
+            read_row_ptr(&bytes[meta.degree_off..meta.degree_off + 12], &meta).unwrap();
+        assert_eq!(row_ptr, vec![0, 0, 0, 0]);
+    }
+}

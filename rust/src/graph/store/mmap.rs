@@ -1,0 +1,250 @@
+//! Read-only file backing for the out-of-core store: mmap when the
+//! platform has it, positional reads (`pread`) as the tested fallback,
+//! and a resident buffer for platforms with neither.
+//!
+//! Dependency-free by design: the mmap binding is a two-symbol
+//! `extern "C"` declaration against the libc that `std` already links on
+//! unix — no crate added, per the repo's no-new-dependencies rule.
+
+use std::borrow::Cow;
+use std::fs::File;
+use std::path::Path;
+
+/// Which backing [`open`] should produce.  `Auto` prefers the mmap path
+/// and degrades to `Pread` (unix) or `Resident` (elsewhere); the explicit
+/// modes exist so tests can pin the fallback paths and assert
+/// bit-identity across all of them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackingMode {
+    Auto,
+    Mmap,
+    Pread,
+    Resident,
+}
+
+/// A read-only window over the packed store file.
+#[derive(Debug)]
+pub enum Backing {
+    /// Kernel-mapped pages; slices borrow straight from the mapping.
+    Map(Mapping),
+    /// Positional reads against the open file (unix `pread` semantics via
+    /// `FileExt::read_exact_at`); every slice is an owned copy.
+    #[cfg(unix)]
+    Pread { file: File, len: u64 },
+    /// The whole file resident in memory (non-unix fallback).
+    Resident(Vec<u8>),
+}
+
+impl Backing {
+    /// Total backing length in bytes.
+    pub fn len(&self) -> usize {
+        match self {
+            Backing::Map(m) => m.len,
+            #[cfg(unix)]
+            Backing::Pread { len, .. } => *len as usize,
+            Backing::Resident(buf) => buf.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// How many bytes are memory-mapped (0 for the non-mmap backings).
+    pub fn bytes_mapped(&self) -> u64 {
+        match self {
+            Backing::Map(m) => m.len as u64,
+            #[cfg(unix)]
+            Backing::Pread { .. } => 0,
+            Backing::Resident(_) => 0,
+        }
+    }
+
+    /// `len` bytes at `off`.  Callers pass offsets already validated
+    /// against the checked header, so an out-of-range read here means the
+    /// file shrank underneath us: degrade to an empty slice (never panic —
+    /// this sits under the serving path).
+    pub fn slice(&self, off: usize, len: usize) -> Cow<'_, [u8]> {
+        let end = match off.checked_add(len) {
+            Some(end) if end <= self.len() => end,
+            _ => return Cow::Owned(Vec::new()),
+        };
+        match self {
+            Backing::Map(m) => Cow::Borrowed(&m.as_slice()[off..end]),
+            #[cfg(unix)]
+            Backing::Pread { file, .. } => {
+                use std::os::unix::fs::FileExt;
+                let mut buf = vec![0u8; len];
+                match file.read_exact_at(&mut buf, off as u64) {
+                    Ok(()) => Cow::Owned(buf),
+                    Err(_) => Cow::Owned(Vec::new()),
+                }
+            }
+            Backing::Resident(buf) => Cow::Borrowed(&buf[off..end]),
+        }
+    }
+}
+
+/// Open `path` read-only under `mode`.  Returns the backing plus the file
+/// length (validated elsewhere against the header's section layout).
+pub fn open(path: &Path, mode: BackingMode) -> anyhow::Result<Backing> {
+    let file = File::open(path)
+        .map_err(|e| anyhow::anyhow!("cannot open graph store {}: {e}", path.display()))?;
+    let len = file.metadata()?.len();
+    let len_usize = usize::try_from(len)
+        .map_err(|_| anyhow::anyhow!("graph store {} larger than address space", path.display()))?;
+    match mode {
+        BackingMode::Resident => {
+            let buf = std::fs::read(path)?;
+            Ok(Backing::Resident(buf))
+        }
+        #[cfg(unix)]
+        BackingMode::Pread => Ok(Backing::Pread { file, len }),
+        #[cfg(not(unix))]
+        BackingMode::Pread => {
+            let buf = std::fs::read(path)?;
+            Ok(Backing::Resident(buf))
+        }
+        BackingMode::Mmap | BackingMode::Auto => {
+            #[cfg(unix)]
+            {
+                match Mapping::map(&file, len_usize) {
+                    Ok(m) => Ok(Backing::Map(m)),
+                    // Auto degrades (e.g. an empty file, or a filesystem
+                    // without mmap); explicit Mmap reports why.
+                    Err(e) if mode == BackingMode::Mmap => Err(e),
+                    Err(_) => Ok(Backing::Pread { file, len }),
+                }
+            }
+            #[cfg(not(unix))]
+            {
+                let _ = len_usize;
+                let buf = std::fs::read(path)?;
+                Ok(Backing::Resident(buf))
+            }
+        }
+    }
+}
+
+/// An owned read-only `mmap` region, unmapped on drop.
+pub struct Mapping {
+    ptr: *const u8,
+    len: usize,
+}
+
+// The mapping is read-only (PROT_READ, MAP_PRIVATE) and the pointer never
+// escapes except through `as_slice`, so sharing across threads is sound.
+unsafe impl Send for Mapping {}
+unsafe impl Sync for Mapping {}
+
+impl std::fmt::Debug for Mapping {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mapping").field("len", &self.len).finish()
+    }
+}
+
+#[cfg(unix)]
+mod sys {
+    use std::ffi::c_void;
+
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+}
+
+impl Mapping {
+    #[cfg(unix)]
+    fn map(file: &File, len: usize) -> anyhow::Result<Mapping> {
+        use std::os::unix::io::AsRawFd;
+        anyhow::ensure!(len > 0, "cannot mmap an empty file");
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        anyhow::ensure!(
+            ptr as isize != -1 && !ptr.is_null(),
+            "mmap failed ({})",
+            std::io::Error::last_os_error()
+        );
+        Ok(Mapping { ptr: ptr as *const u8, len })
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        // Sound: the region is PROT_READ for self.len bytes and lives
+        // until drop unmaps it.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+impl Drop for Mapping {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        unsafe {
+            sys::munmap(self.ptr as *mut std::ffi::c_void, self.len);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("hpgnn-mmap-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        std::fs::write(&path, bytes).unwrap();
+        path
+    }
+
+    #[test]
+    fn every_backing_reads_the_same_bytes() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(4096 + 13).collect();
+        let path = tmpfile("cycle.bin", &data);
+        for mode in [BackingMode::Auto, BackingMode::Pread, BackingMode::Resident] {
+            let b = open(&path, mode).unwrap();
+            assert_eq!(b.len(), data.len(), "{mode:?}");
+            assert_eq!(&*b.slice(0, 16), &data[..16], "{mode:?}");
+            assert_eq!(&*b.slice(4000, 100), &data[4000..4100], "{mode:?}");
+            assert_eq!(&*b.slice(data.len() - 1, 1), &data[data.len() - 1..], "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn out_of_range_slices_degrade_to_empty() {
+        let path = tmpfile("short.bin", &[1, 2, 3, 4]);
+        for mode in [BackingMode::Auto, BackingMode::Pread, BackingMode::Resident] {
+            let b = open(&path, mode).unwrap();
+            assert!(b.slice(3, 2).is_empty(), "{mode:?}");
+            assert!(b.slice(usize::MAX, 1).is_empty(), "{mode:?}");
+            assert!(b.slice(0, usize::MAX).is_empty(), "{mode:?}");
+        }
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mmap_mode_maps_and_reports_bytes() {
+        let data = vec![7u8; 8192];
+        let path = tmpfile("mapped.bin", &data);
+        let b = open(&path, BackingMode::Mmap).unwrap();
+        assert_eq!(b.bytes_mapped(), 8192);
+        assert_eq!(&*b.slice(100, 8), &data[100..108]);
+    }
+}

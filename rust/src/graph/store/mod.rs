@@ -1,0 +1,319 @@
+//! Out-of-core graph store: mmap-backed CSR snapshots with versioned
+//! edge-stream ingest.
+//!
+//! The in-memory [`crate::graph::Graph`] caps experiments at what fits in
+//! RAM; real recommendation graphs (the paper's GraphSAGE setting) do not
+//! fit and do not hold still.  This subsystem supplies both missing
+//! halves:
+//!
+//! * **Out-of-core CSR** — [`pack`] writes the chunked `HPGNNG02` format
+//!   ([`format`]), and [`GraphStore`] opens it through an mmap (or
+//!   `pread` fallback — [`BackingMode`]) without materializing adjacency,
+//!   exposing the same [`GraphAccess`] surface samplers already consume.
+//!   Neighbor order is preserved bit-for-bit, so a training run from a
+//!   packed store reproduces the in-RAM loss curve exactly.
+//! * **Dynamic graphs** — [`DynamicGraph`] layers an in-memory edge-delta
+//!   over a base store and hands out immutable, versioned
+//!   [`GraphSnapshot`]s.  Samplers pin one snapshot per batch; ingest
+//!   bumps the version; [`DynamicGraph::compact_to`] folds the delta back
+//!   to disk through the same packer.
+
+pub mod format;
+mod mmap;
+mod snapshot;
+
+use std::borrow::Cow;
+use std::path::{Path, PathBuf};
+
+use crate::graph::{GraphAccess, Vid};
+
+pub use format::{pack, PackStats, StoreMeta, DEFAULT_CHUNK_EDGES, STORE_MAGIC};
+pub use mmap::BackingMode;
+pub use snapshot::{DynamicGraph, GraphSnapshot};
+
+/// A packed `HPGNNG02` graph opened for random access.
+///
+/// Degrees (the row-pointer array, `8(|V|+1)` bytes) live in RAM; the
+/// neighbor section stays on disk behind [`mmap::Backing`] and is touched
+/// only by [`GraphAccess::neighbors`] calls.  All reads are positional,
+/// so one store can serve many sampler threads without locking.
+#[derive(Debug)]
+pub struct GraphStore {
+    meta: StoreMeta,
+    row_ptr: Vec<u64>,
+    backing: mmap::Backing,
+    path: PathBuf,
+}
+
+impl GraphStore {
+    /// Open with the default backing (mmap where available).
+    pub fn open(path: &Path) -> anyhow::Result<GraphStore> {
+        GraphStore::open_with(path, BackingMode::Auto)
+    }
+
+    /// Open with an explicit backing mode (tests pin the fallback paths
+    /// to prove bit-identity across all of them).
+    pub fn open_with(path: &Path, mode: BackingMode) -> anyhow::Result<GraphStore> {
+        let backing = mmap::open(path, mode)?;
+        let file_len = backing.len();
+        let head_len = file_len.min(format::HEADER_BYTES + format::MAX_NAME_BYTES + 8);
+        let head = backing.slice(0, head_len);
+        let meta = format::read_header(&head, file_len)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+
+        let table_len = meta.degree_off - meta.chunk_table_off;
+        let table = backing.slice(meta.chunk_table_off, table_len);
+        let chunks = format::read_chunk_table(&table, &meta)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+
+        let degrees = backing.slice(meta.degree_off, meta.num_vertices * 4);
+        let row_ptr = format::read_row_ptr(&degrees, &meta)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+
+        // One sequential pass over the chunked neighbor section: every id
+        // must be < |V|.  This is the load-time analogue of
+        // `Graph::validate`, and it walks the chunk table so a table the
+        // header validated but the data contradicts still fails here.
+        let _sp = crate::obs::span_with("store", "open", || {
+            vec![("bytes", file_len as f64), ("chunks", chunks.len() as f64)]
+        });
+        for (i, c) in chunks.iter().enumerate() {
+            let bytes = backing.slice(c.file_offset as usize, c.nbytes as usize);
+            anyhow::ensure!(
+                bytes.len() == c.nbytes as usize,
+                "{}: chunk {i} unreadable (file shrank?)",
+                path.display()
+            );
+            for (j, win) in bytes.chunks_exact(4).enumerate() {
+                let id = u32::from_le_bytes([win[0], win[1], win[2], win[3]]);
+                anyhow::ensure!(
+                    (id as usize) < meta.num_vertices,
+                    "{}: neighbor id {id} at edge {} is out of range (|V|={})",
+                    path.display(),
+                    c.edge_base as usize + j,
+                    meta.num_vertices
+                );
+            }
+        }
+
+        Ok(GraphStore { meta, row_ptr, backing, path: path.to_path_buf() })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn meta(&self) -> &StoreMeta {
+        &self.meta
+    }
+}
+
+/// Cheap preflight: validate the header of a packed store without mapping
+/// or scanning it (80 bytes + the file length).  `hp-gnn validate` uses
+/// this to diagnose a missing or malformed `graph.path` before a run
+/// starts; a probe that passes can still fail the full neighbor-id scan
+/// at [`GraphStore::open`].
+pub fn probe(path: &Path) -> anyhow::Result<StoreMeta> {
+    use std::io::Read;
+    let mut f = std::fs::File::open(path)?;
+    let file_len = usize::try_from(f.metadata()?.len())
+        .map_err(|_| anyhow::anyhow!("file length does not fit usize"))?;
+    let mut head = vec![0u8; file_len.min(format::HEADER_BYTES + format::MAX_NAME_BYTES + 8)];
+    f.read_exact(&mut head)?;
+    format::read_header(&head, file_len)
+}
+
+/// Decode a little-endian u32 byte region into vertex ids, borrowing when
+/// the mmap hands back an aligned slice and copying otherwise.
+fn bytes_to_vids(bytes: Cow<'_, [u8]>) -> Cow<'_, [Vid]> {
+    match bytes {
+        #[cfg(target_endian = "little")]
+        Cow::Borrowed(b) => {
+            // Sound: u32 accepts any bit pattern; align_to only yields a
+            // non-empty middle when the pointer is 4-aligned.
+            let (pre, mid, suf) = unsafe { b.align_to::<u32>() };
+            if pre.is_empty() && suf.is_empty() {
+                Cow::Borrowed(mid)
+            } else {
+                Cow::Owned(decode_vids(b))
+            }
+        }
+        #[cfg(not(target_endian = "little"))]
+        Cow::Borrowed(b) => Cow::Owned(decode_vids(b)),
+        Cow::Owned(v) => Cow::Owned(decode_vids(&v)),
+    }
+}
+
+fn decode_vids(b: &[u8]) -> Vec<Vid> {
+    b.chunks_exact(4).map(|w| u32::from_le_bytes([w[0], w[1], w[2], w[3]])).collect()
+}
+
+impl GraphAccess for GraphStore {
+    fn num_vertices(&self) -> usize {
+        self.meta.num_vertices
+    }
+
+    fn num_edges(&self) -> usize {
+        self.meta.num_edges
+    }
+
+    fn feat_dim(&self) -> usize {
+        self.meta.feat_dim
+    }
+
+    fn num_classes(&self) -> usize {
+        self.meta.num_classes
+    }
+
+    fn graph_name(&self) -> &str {
+        &self.meta.name
+    }
+
+    fn degree(&self, v: Vid) -> usize {
+        let v = v as usize;
+        if v >= self.meta.num_vertices {
+            return 0;
+        }
+        (self.row_ptr[v + 1] - self.row_ptr[v]) as usize
+    }
+
+    /// Random access into the on-disk neighbor section.  Offsets were
+    /// validated at open, so arithmetic here cannot overflow; a read that
+    /// still fails (file truncated after open) degrades to an empty list
+    /// rather than panicking — this runs under the serving path.
+    fn neighbors(&self, v: Vid) -> Cow<'_, [Vid]> {
+        let v = v as usize;
+        if v >= self.meta.num_vertices {
+            return Cow::Owned(Vec::new());
+        }
+        let start = self.row_ptr[v];
+        let nedges = (self.row_ptr[v + 1] - start) as usize;
+        if nedges == 0 {
+            return Cow::Owned(Vec::new());
+        }
+        let Some(byte_off) = start
+            .checked_mul(4)
+            .and_then(|x| x.checked_add(self.meta.neigh_off as u64))
+            .and_then(|x| usize::try_from(x).ok())
+        else {
+            return Cow::Owned(Vec::new());
+        };
+        let Some(nbytes) = nedges.checked_mul(4) else {
+            return Cow::Owned(Vec::new());
+        };
+        let _sp = crate::obs::span_with("store", "read", || {
+            vec![("bytes", nbytes as f64), ("vertex", v as f64)]
+        });
+        bytes_to_vids(self.backing.slice(byte_off, nbytes))
+    }
+
+    fn version(&self) -> u64 {
+        self.meta.graph_version
+    }
+
+    fn bytes_mapped(&self) -> u64 {
+        self.backing.bytes_mapped()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use std::sync::Arc;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("hpgnn-store-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn fixture() -> Graph {
+        let mut g = Graph::from_edges(
+            6,
+            &[(0, 1), (0, 2), (0, 5), (1, 3), (2, 3), (3, 0), (3, 4), (5, 2)],
+        );
+        g.feat_dim = 16;
+        g.num_classes = 4;
+        g.name = "store-fixture".into();
+        g
+    }
+
+    #[test]
+    fn store_matches_graph_across_backings() {
+        let g = fixture();
+        let path = tmp("roundtrip.g2");
+        let stats = pack(&g, &path, 0, 3).unwrap();
+        assert_eq!(stats.num_edges, g.num_edges());
+        for mode in [BackingMode::Auto, BackingMode::Pread, BackingMode::Resident] {
+            let s = GraphStore::open_with(&path, mode).unwrap();
+            assert_eq!(s.num_vertices(), g.num_vertices(), "{mode:?}");
+            assert_eq!(GraphAccess::num_edges(&s), g.num_edges(), "{mode:?}");
+            assert_eq!(s.feat_dim(), g.feat_dim, "{mode:?}");
+            assert_eq!(s.num_classes(), g.num_classes, "{mode:?}");
+            assert_eq!(s.graph_name(), "store-fixture", "{mode:?}");
+            for v in 0..g.num_vertices() as Vid {
+                assert_eq!(GraphAccess::degree(&s, v), g.degree(v), "{mode:?} v={v}");
+                assert_eq!(&*s.neighbors(v), g.neighbors(v), "{mode:?} v={v}");
+                assert_eq!(
+                    GraphAccess::gcn_norm(&s, v, 0),
+                    g.gcn_norm(v, 0),
+                    "{mode:?} v={v}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mmap_backing_reports_mapped_bytes() {
+        let path = tmp("mapped.g2");
+        pack(&fixture(), &path, 0, DEFAULT_CHUNK_EDGES).unwrap();
+        if let Ok(s) = GraphStore::open_with(&path, BackingMode::Mmap) {
+            let len = std::fs::metadata(&path).unwrap().len();
+            assert_eq!(s.bytes_mapped(), len);
+        }
+    }
+
+    #[test]
+    fn out_of_range_vertex_degrades_not_panics() {
+        let path = tmp("oob.g2");
+        pack(&fixture(), &path, 0, 3).unwrap();
+        let s = GraphStore::open(&path).unwrap();
+        assert_eq!(GraphAccess::degree(&s, 999), 0);
+        assert!(s.neighbors(999).is_empty());
+    }
+
+    #[test]
+    fn rejects_out_of_range_neighbor_ids_at_open() {
+        let path = tmp("badid.g2");
+        pack(&fixture(), &path, 0, 3).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Stomp the last neighbor id with an out-of-range vertex.
+        let n = bytes.len();
+        bytes[n - 4..].copy_from_slice(&4_000_000u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = GraphStore::open(&path).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn probe_accepts_packed_stores_and_rejects_junk() {
+        let path = tmp("probe.g2");
+        pack(&fixture(), &path, 3, DEFAULT_CHUNK_EDGES).unwrap();
+        let meta = probe(&path).unwrap();
+        assert_eq!(meta.num_vertices, 6);
+        assert_eq!(meta.graph_version, 3);
+        assert!(probe(&tmp("missing.g2")).is_err());
+        let junk = tmp("junk.g2");
+        std::fs::write(&junk, b"not a graph store at all").unwrap();
+        assert!(probe(&junk).is_err());
+    }
+
+    #[test]
+    fn usable_as_trait_object() {
+        let path = tmp("dyn.g2");
+        pack(&fixture(), &path, 0, DEFAULT_CHUNK_EDGES).unwrap();
+        let s: Arc<dyn GraphAccess> = Arc::new(GraphStore::open(&path).unwrap());
+        assert_eq!(s.avg_degree(), fixture().avg_degree());
+    }
+}

@@ -1,0 +1,347 @@
+//! Versioned snapshots over a base graph: edge-stream ingest with an
+//! in-memory delta overlay, and compaction back to a packed store.
+//!
+//! Concurrency contract: a [`GraphSnapshot`] is immutable once handed
+//! out.  Samplers and the serving path pin one snapshot per batch, so an
+//! ingest that produces version `v+1` can never change the neighborhoods
+//! an in-flight batch at version `v` observes.  [`DynamicGraph`]
+//! deliberately does **not** implement [`GraphAccess`] — callers must go
+//! through [`DynamicGraph::snapshot`], which makes un-pinned access a
+//! compile error rather than a race.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::graph::{Graph, GraphAccess, Vid};
+use crate::util::sync::lock_unpoisoned;
+
+use super::format::{self, PackStats};
+use super::GraphStore;
+
+/// An immutable view of the graph at one version: a shared base plus a
+/// (possibly empty) sorted edge-delta overlay.
+///
+/// The delta maps source vertex → sorted insertion list; `neighbors`
+/// merges it with the base adjacency, preserving ascending order with
+/// duplicates kept — exactly what [`Graph::from_edges`] would produce had
+/// the edges been present at construction, so compaction and overlay
+/// reads agree bit-for-bit.
+#[derive(Debug)]
+pub struct GraphSnapshot {
+    base: Arc<dyn GraphAccess>,
+    delta: BTreeMap<Vid, Vec<Vid>>,
+    delta_edges: usize,
+    version: u64,
+}
+
+impl GraphSnapshot {
+    fn fixed(base: Arc<dyn GraphAccess>) -> GraphSnapshot {
+        let version = base.version();
+        GraphSnapshot { base, delta: BTreeMap::new(), delta_edges: 0, version }
+    }
+
+    /// Edges in the overlay (0 once compacted).
+    pub fn delta_edges(&self) -> usize {
+        self.delta_edges
+    }
+}
+
+/// Merge two ascending lists, keeping duplicates (multiset union).
+fn merge_sorted(a: &[Vid], b: &[Vid]) -> Vec<Vid> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        if a[i] <= b[j] {
+            out.push(a[i]);
+            i += 1;
+        } else {
+            out.push(b[j]);
+            j += 1;
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+    out.extend_from_slice(&b[j..]);
+    out
+}
+
+impl GraphAccess for GraphSnapshot {
+    fn num_vertices(&self) -> usize {
+        self.base.num_vertices()
+    }
+
+    fn num_edges(&self) -> usize {
+        self.base.num_edges() + self.delta_edges
+    }
+
+    fn feat_dim(&self) -> usize {
+        self.base.feat_dim()
+    }
+
+    fn num_classes(&self) -> usize {
+        self.base.num_classes()
+    }
+
+    fn graph_name(&self) -> &str {
+        self.base.graph_name()
+    }
+
+    fn degree(&self, v: Vid) -> usize {
+        let extra = self.delta.get(&v).map_or(0, Vec::len);
+        self.base.degree(v) + extra
+    }
+
+    fn neighbors(&self, v: Vid) -> std::borrow::Cow<'_, [Vid]> {
+        match self.delta.get(&v) {
+            None => self.base.neighbors(v),
+            Some(extra) => {
+                std::borrow::Cow::Owned(merge_sorted(&self.base.neighbors(v), extra))
+            }
+        }
+    }
+
+    fn version(&self) -> u64 {
+        self.version
+    }
+
+    fn bytes_mapped(&self) -> u64 {
+        self.base.bytes_mapped()
+    }
+}
+
+/// A mutable handle over an evolving graph: the current snapshot plus the
+/// ingest/compact operations that advance it.
+///
+/// Lock discipline: one leaf mutex guarding the current `Arc`; no other
+/// lock is ever taken while it is held and no blocking call runs under
+/// it, so it cannot participate in a lock-order cycle.
+#[derive(Debug)]
+pub struct DynamicGraph {
+    current: Mutex<Arc<GraphSnapshot>>,
+}
+
+impl DynamicGraph {
+    /// Wrap a static base (in-RAM graph or opened store) at its baked-in
+    /// version with an empty delta.
+    pub fn fixed(base: Arc<dyn GraphAccess>) -> Arc<DynamicGraph> {
+        Arc::new(DynamicGraph { current: Mutex::new(Arc::new(GraphSnapshot::fixed(base))) })
+    }
+
+    pub fn from_graph(g: Graph) -> Arc<DynamicGraph> {
+        DynamicGraph::fixed(Arc::new(g))
+    }
+
+    /// Pin the current snapshot.  Cheap (one Arc clone under a leaf
+    /// lock); hold the result for the whole batch.
+    pub fn snapshot(&self) -> Arc<GraphSnapshot> {
+        Arc::clone(&lock_unpoisoned(&self.current))
+    }
+
+    /// Insert directed edges, producing the next snapshot version.
+    /// Endpoints must name existing vertices (the store's feature space
+    /// is sized at pack time; growing |V| requires a repack).  Returns
+    /// the new version.  Rejected batches leave the graph untouched.
+    pub fn ingest(&self, edges: &[(Vid, Vid)]) -> anyhow::Result<u64> {
+        let mut guard = lock_unpoisoned(&self.current);
+        let cur = Arc::clone(&guard);
+        let n = cur.num_vertices();
+        for (i, &(u, v)) in edges.iter().enumerate() {
+            anyhow::ensure!(
+                (u as usize) < n && (v as usize) < n,
+                "ingest edge {i} = ({u}, {v}) is out of range (|V|={n}; \
+                 repack to grow the vertex set)"
+            );
+        }
+        let _sp = crate::obs::span_with("store", "ingest", || {
+            vec![("edges", edges.len() as f64)]
+        });
+        let mut delta = cur.delta.clone();
+        for &(u, v) in edges {
+            let list = delta.entry(u).or_default();
+            let pos = list.partition_point(|&x| x <= v);
+            list.insert(pos, v);
+        }
+        let next = GraphSnapshot {
+            base: Arc::clone(&cur.base),
+            delta,
+            delta_edges: cur.delta_edges + edges.len(),
+            version: cur.version + 1,
+        };
+        let version = next.version;
+        *guard = Arc::new(next);
+        Ok(version)
+    }
+
+    /// Fold the current snapshot (base + delta) into a packed store at
+    /// `path`, then swap the freshly opened store in as the new base —
+    /// unless an ingest raced past us, in which case the file is still
+    /// written but the in-memory graph keeps its newer state.  Returns
+    /// the pack stats and whether the swap happened.
+    pub fn compact_to(&self, path: &Path) -> anyhow::Result<(PackStats, bool)> {
+        let pinned = self.snapshot();
+        self.compact_snapshot_to(&pinned, path)
+    }
+
+    /// Compact a specific pinned snapshot.  The on-disk pack always
+    /// happens; the in-memory swap lands only if `pinned` is still the
+    /// current version once packing finishes (i.e. no ingest raced past).
+    pub fn compact_snapshot_to(
+        &self,
+        pinned: &Arc<GraphSnapshot>,
+        path: &Path,
+    ) -> anyhow::Result<(PackStats, bool)> {
+        // Pack outside the lock: compaction is long, ingest must not stall.
+        let stats =
+            format::pack(pinned.as_ref(), path, pinned.version, format::DEFAULT_CHUNK_EDGES)?;
+        let store: Arc<dyn GraphAccess> = Arc::new(GraphStore::open(path)?);
+        let compacted = Arc::new(GraphSnapshot::fixed(store));
+        let mut guard = lock_unpoisoned(&self.current);
+        let swapped = guard.version == pinned.version;
+        if swapped {
+            *guard = compacted;
+        }
+        Ok((stats, swapped))
+    }
+
+    // Delegating conveniences for call sites that only need scalars and
+    // would otherwise pin a snapshot per field read.
+
+    pub fn version(&self) -> u64 {
+        self.snapshot().version
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.snapshot().num_vertices()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.snapshot().num_edges()
+    }
+
+    pub fn feat_dim(&self) -> usize {
+        self.snapshot().feat_dim()
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.snapshot().num_classes()
+    }
+
+    pub fn name(&self) -> String {
+        self.snapshot().graph_name().to_string()
+    }
+
+    pub fn bytes_mapped(&self) -> u64 {
+        self.snapshot().bytes_mapped()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture() -> Graph {
+        let mut g = Graph::from_edges(5, &[(0, 1), (0, 3), (1, 2), (3, 4), (4, 0)]);
+        g.feat_dim = 4;
+        g.num_classes = 2;
+        g.name = "dyn-fixture".into();
+        g
+    }
+
+    #[test]
+    fn fixed_snapshot_is_version_zero_and_transparent() {
+        let dg = DynamicGraph::from_graph(fixture());
+        let snap = dg.snapshot();
+        assert_eq!(snap.version(), 0);
+        assert_eq!(snap.num_edges(), 5);
+        assert_eq!(&*snap.neighbors(0), &[1, 3]);
+        assert_eq!(snap.delta_edges(), 0);
+    }
+
+    #[test]
+    fn ingest_bumps_version_and_merges_sorted() {
+        let dg = DynamicGraph::from_graph(fixture());
+        let v1 = dg.ingest(&[(0, 2), (0, 1), (2, 4)]).unwrap();
+        assert_eq!(v1, 1);
+        let snap = dg.snapshot();
+        // Base [1, 3] + inserts [1, 2], duplicates kept, ascending.
+        assert_eq!(&*snap.neighbors(0), &[1, 1, 2, 3]);
+        assert_eq!(&*snap.neighbors(2), &[4]);
+        assert_eq!(snap.num_edges(), 8);
+        assert_eq!(snap.degree(0), 4);
+        // Matches what from_edges would have produced outright.
+        let rebuilt = Graph::from_edges(
+            5,
+            &[(0, 1), (0, 3), (1, 2), (3, 4), (4, 0), (0, 2), (0, 1), (2, 4)],
+        );
+        for v in 0..5 {
+            assert_eq!(&*snap.neighbors(v), rebuilt.neighbors(v), "v={v}");
+        }
+    }
+
+    #[test]
+    fn pinned_snapshot_is_isolated_from_later_ingest() {
+        let dg = DynamicGraph::from_graph(fixture());
+        let pinned = dg.snapshot();
+        dg.ingest(&[(1, 4)]).unwrap();
+        assert_eq!(pinned.version(), 0);
+        assert_eq!(&*pinned.neighbors(1), &[2], "pinned view must not move");
+        assert_eq!(&*dg.snapshot().neighbors(1), &[2, 4]);
+        assert_eq!(dg.version(), 1);
+    }
+
+    #[test]
+    fn ingest_rejects_out_of_range_endpoints() {
+        let dg = DynamicGraph::from_graph(fixture());
+        let err = dg.ingest(&[(0, 99)]).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        assert_eq!(dg.version(), 0, "failed ingest must not bump the version");
+    }
+
+    #[test]
+    fn compact_folds_delta_to_disk_and_keeps_version() {
+        let dir = std::env::temp_dir().join(format!("hpgnn-snap-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("compact.g2");
+
+        let dg = DynamicGraph::from_graph(fixture());
+        dg.ingest(&[(0, 2), (2, 3)]).unwrap();
+        let before = dg.snapshot();
+        let (stats, swapped) = dg.compact_to(&path).unwrap();
+        assert!(swapped);
+        assert_eq!(stats.num_edges, 7);
+
+        let after = dg.snapshot();
+        assert_eq!(after.version(), 1, "compaction preserves the version");
+        assert_eq!(after.delta_edges(), 0, "delta folded into the base");
+        for v in 0..5 {
+            assert_eq!(&*after.neighbors(v), &*before.neighbors(v), "v={v}");
+        }
+        assert_eq!(after.graph_name(), "dyn-fixture");
+        assert_eq!(after.feat_dim(), 4);
+    }
+
+    #[test]
+    fn compact_skips_swap_when_ingest_races() {
+        let dir = std::env::temp_dir().join(format!("hpgnn-snap-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("race.g2");
+
+        let dg = DynamicGraph::from_graph(fixture());
+        let pinned = dg.snapshot();
+        // The race: an ingest lands between pinning and compacting.  The
+        // pack still hits disk, but the in-memory swap must be refused —
+        // otherwise the newer edge would be silently dropped.
+        dg.ingest(&[(1, 0)]).unwrap();
+        let (stats, swapped) = dg.compact_snapshot_to(&pinned, &path).unwrap();
+        assert!(!swapped, "stale compaction must not clobber a newer version");
+        assert_eq!(stats.num_edges, 5, "the pack reflects the pinned (stale) view");
+        assert_eq!(dg.version(), 1);
+        assert_eq!(&*dg.snapshot().neighbors(1), &[0, 2], "ingested edge survives");
+
+        // A fresh compact_to (which pins the current version) does swap.
+        let (_stats, swapped) = dg.compact_to(&path).unwrap();
+        assert!(swapped);
+        assert_eq!(dg.version(), 1);
+        assert_eq!(dg.snapshot().delta_edges(), 0);
+    }
+}

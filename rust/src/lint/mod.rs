@@ -272,6 +272,20 @@ pub const CONTRACTS: &[Contract] = &[
         why: "adversarial headers must fail the length check, not wrap it",
     },
     Contract {
+        prefix: "graph/store/",
+        rule: RuleId::R2,
+        scope: Scope::File,
+        why: "HPGNNG02 headers and chunk tables are attacker-controlled bytes — \
+              offset/size arithmetic must fail the bounds check, not wrap it",
+    },
+    Contract {
+        prefix: "graph/store/",
+        rule: RuleId::D1,
+        scope: Scope::File,
+        why: "snapshot neighbor merges feed the samplers — map-order nondeterminism \
+              would un-pin the batch stream and the pack/open bit-identity",
+    },
+    Contract {
         prefix: "runtime/reference.rs",
         rule: RuleId::D3,
         scope: Scope::File,

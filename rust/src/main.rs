@@ -16,6 +16,8 @@
 //!   **every** diagnostic (no training).
 //! * `explain <program.json>` — print the generated-design report
 //!   (Listing 3): artifact geometry, DSE config, utilization, placement.
+//! * `graph pack` — pack a graph into an `HPGNNG02` out-of-core store
+//!   (`graph info` probes one); training/serving mount it via `graph.path`.
 //! * `dse` — run the design space exploration engine (Table 5 rows).
 //! * `lint` — statically check the determinism / serving-robustness
 //!   contracts over `rust/src` (rules D1–D3, R1–R2).
@@ -28,7 +30,7 @@
 use std::path::{Path, PathBuf};
 
 use hp_gnn::accel::{AccelConfig, SimOptions};
-use hp_gnn::api::{program, HpGnn, ProgramSpec, SamplerSpec, TrainingSpec, Workspace};
+use hp_gnn::api::{program, GraphSpec, HpGnn, ProgramSpec, SamplerSpec, TrainingSpec, Workspace};
 use hp_gnn::coordinator::{trainer::Optimizer, TrainingSession};
 use hp_gnn::dse::explore;
 use hp_gnn::graph::datasets;
@@ -45,6 +47,8 @@ const USAGE: &str = "hp-gnn — HP-GNN training framework (FPGA '22 reproduction
      serve [program.json] serve vertex-classification requests from a checkpoint\n  \
      validate <program.json>  parse + design-check a program, print every diagnostic\n  \
      explain <program.json>   print the generated-design report (Listing 3)\n  \
+     graph pack           pack a graph into an HPGNNG02 out-of-core store\n  \
+     graph info <store>   probe a packed store header\n  \
      dse                  design space exploration (Table 5)\n  \
      lint                 check the determinism/serving-robustness contracts\n  \
      simulate             accelerator simulation of one batch\n  \
@@ -61,6 +65,7 @@ fn main() {
         "serve" => cmd_serve(argv),
         "validate" => cmd_validate(argv),
         "explain" => cmd_explain(argv),
+        "graph" => cmd_graph(argv),
         "dse" => cmd_dse(argv),
         "lint" => cmd_lint(argv),
         "simulate" => cmd_simulate(argv),
@@ -569,6 +574,103 @@ fn cmd_explain(argv: Vec<String>) -> anyhow::Result<()> {
     let design = ws.design(&spec)?;
     println!("{}", design.explain());
     println!("\nas JSON (rerunnable program + design summary):\n{}", design.to_json().pretty());
+    Ok(())
+}
+
+fn cmd_graph(mut argv: Vec<String>) -> anyhow::Result<()> {
+    let verb = if argv.is_empty() { String::new() } else { argv.remove(0) };
+    match verb.as_str() {
+        "pack" => cmd_graph_pack(argv),
+        "info" => cmd_graph_info(argv),
+        "" => anyhow::bail!("usage: hp-gnn graph <pack | info> (see `hp-gnn graph pack --help`)"),
+        other => anyhow::bail!("unknown graph verb {other:?} (pack | info)"),
+    }
+}
+
+/// `hp-gnn graph pack` — materialize a graph and write it as an
+/// `HPGNNG02` out-of-core store.  Training and serving then mount it via
+/// `graph.path` without holding the topology in RAM; the pack → open
+/// round trip reproduces sampling bit-for-bit.
+fn cmd_graph_pack(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = Args::new(
+        "hp-gnn graph pack",
+        "pack a graph into an HPGNNG02 out-of-core store (mount with graph.path)",
+    )
+    .flag("dataset", "", "FL | RD | YP | AP (synthetic Table 4 graph)")
+    .flag("scale", "0.01", "dataset scale factor (0, 1]")
+    .flag("seed", "1", "graph-structure seed (must match the training program's)")
+    .flag("edge-list", "", "pack an edge-list file instead of a dataset")
+    .flag("feat-dim", "256", "feature dim an edge list does not carry")
+    .flag("num-classes", "8", "class count an edge list does not carry")
+    .flag("out", "", "store path to write (required)")
+    .flag("chunk-edges", "", "edges per on-disk chunk (default 65536)")
+    .flag("graph-version", "0", "version stamped into the store header")
+    .parse_from(argv)?;
+
+    let out = args.get("out");
+    anyhow::ensure!(!out.is_empty(), "--out <path> is required");
+    let seed = args.usize("seed") as u64;
+    let spec = match (args.get("dataset"), args.get("edge-list")) {
+        ("", "") => anyhow::bail!("give --dataset <key> or --edge-list <file>"),
+        (ds, "") => {
+            anyhow::ensure!(datasets::by_key(ds).is_some(), "unknown dataset {ds:?}");
+            GraphSpec::Dataset { key: ds.to_string(), scale: args.f64("scale"), seed: Some(seed) }
+        }
+        ("", el) => GraphSpec::EdgeList {
+            path: PathBuf::from(el),
+            feat_dim: args.usize("feat-dim"),
+            num_classes: args.usize("num-classes"),
+            seed: None,
+        },
+        _ => anyhow::bail!("give either --dataset or --edge-list, not both"),
+    };
+    let chunk_edges = match opt_usize_flag(&args, "chunk-edges")? {
+        Some(c) => c as u64,
+        None => hp_gnn::graph::store::DEFAULT_CHUNK_EDGES,
+    };
+    let (graph, _) = spec.materialize(seed)?;
+    let out = PathBuf::from(out);
+    let stats = hp_gnn::graph::store::pack(
+        graph.as_ref(),
+        &out,
+        args.usize("graph-version") as u64,
+        chunk_edges,
+    )?;
+    println!(
+        "packed {}: {} vertices, {} edges, {} chunks, {} bytes -> {}",
+        graph.graph_name(),
+        stats.num_vertices,
+        stats.num_edges,
+        stats.num_chunks,
+        stats.bytes_written,
+        out.display(),
+    );
+    Ok(())
+}
+
+/// `hp-gnn graph info <store>` — probe a packed store's header (no mmap,
+/// no neighbor scan) and print its identity.
+fn cmd_graph_info(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = Args::new("hp-gnn graph info", "probe a packed HPGNNG02 store header")
+        .parse_from(argv)?;
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: hp-gnn graph info <store>"))?;
+    let meta = hp_gnn::graph::store::probe(Path::new(path))?;
+    println!(
+        "{path}: {} |V|={} |E|={} f0={} classes={} version={} chunks={} ({} edges/chunk), \
+         {} bytes",
+        if meta.name.is_empty() { "<unnamed>" } else { &meta.name },
+        meta.num_vertices,
+        meta.num_edges,
+        meta.feat_dim,
+        meta.num_classes,
+        meta.graph_version,
+        meta.num_chunks,
+        meta.chunk_edges,
+        meta.file_len,
+    );
     Ok(())
 }
 

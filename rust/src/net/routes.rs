@@ -1,12 +1,13 @@
-//! The serving API: five routes over one [`serve::Server`].
+//! The serving API: six routes over one [`serve::Server`].
 //!
 //! | Route               | Body                                   | Answer |
 //! |---------------------|----------------------------------------|--------|
-//! | `POST /v1/classify` | `{"vertex": v}` or `{"vertices": [v…]}`| `{"predictions":[{vertex,label,logits}…],"weight_version":n}` |
-//! | `GET /healthz`      | —                                      | geometry, pool size, weight version, cache entries |
+//! | `POST /v1/classify` | `{"vertex": v}` or `{"vertices": [v…]}`| `{"predictions":[{vertex,label,logits}…],"weight_version":n,"graph_version":n}` |
+//! | `GET /healthz`      | —                                      | geometry, pool size, weight version, graph version, cache entries |
 //! | `GET /metrics`      | —                                      | Prometheus text exposition (JSON with `Accept: application/json`) |
 //! | `GET /metrics.json` | —                                      | `serve::metrics` snapshot (counters, queue depth, latency percentiles, sheds) |
 //! | `POST /v1/reload`   | `{"checkpoint": "path"}`               | `{"reloaded":true,"weight_version":n}` |
+//! | `POST /v1/ingest`   | `{"edges": [[u, v], …]}`               | `{"ingested":n,"graph_version":n}` |
 //!
 //! Classify goes through [`Server::try_classify`]: when the bounded
 //! request queue is full the route sheds with `429 Too Many Requests`
@@ -148,6 +149,7 @@ fn classify(server: &Server, body: &[u8]) -> Response {
                     Json::arr(preds.iter().map(|p| prediction_json(p)).collect()),
                 ),
                 ("weight_version", Json::num(server.weight_version() as f64)),
+                ("graph_version", Json::num(server.graph_version() as f64)),
             ]);
             Response::json(200, &out).with_batch(vertices.len())
         }
@@ -171,6 +173,7 @@ fn healthz(server: &Server) -> Response {
             ("workers", Json::num(server.num_workers() as f64)),
             ("max_batch", Json::num(server.max_batch() as f64)),
             ("weight_version", Json::num(server.weight_version() as f64)),
+            ("graph_version", Json::num(server.graph_version() as f64)),
             ("cache_entries", Json::num(server.cache_len() as f64)),
         ]),
     )
@@ -230,12 +233,112 @@ fn reload(server: &Server, body: &[u8]) -> Response {
     }
 }
 
+/// Pull the edge list out of an ingest body; any shape problem becomes a
+/// ready-made 400 response.
+fn parse_edges(body: &[u8]) -> Result<Vec<(Vid, Vid)>, Response> {
+    let hint = r#"send {"edges": [[src, dst], ...]}"#;
+    let json = match std::str::from_utf8(body).ok().and_then(|t| {
+        if t.trim().is_empty() { None } else { Json::parse(t).ok() }
+    }) {
+        Some(j) => j,
+        None => {
+            return Err(error_response(
+                400,
+                "body",
+                "request body is not a JSON object",
+                Some(hint),
+            ))
+        }
+    };
+    let obj = match json.as_obj() {
+        Ok(o) => o,
+        Err(_) => {
+            return Err(error_response(400, "body", "expected a JSON object", Some(hint)))
+        }
+    };
+    for key in obj.keys() {
+        if key != "edges" {
+            return Err(error_response(400, &format!("body.{key}"), "unknown key", Some(hint)));
+        }
+    }
+    let list = match json.opt("edges").map(|e| e.as_arr()) {
+        Some(Ok(list)) if !list.is_empty() => list,
+        Some(Ok(_)) => {
+            return Err(error_response(400, "body.edges", "edge list is empty", Some(hint)))
+        }
+        Some(Err(e)) => {
+            return Err(error_response(400, "body.edges", &e.to_string(), Some(hint)))
+        }
+        None => return Err(error_response(400, "body", "missing \"edges\"", Some(hint))),
+    };
+    let mut edges = Vec::with_capacity(list.len());
+    for (i, pair) in list.iter().enumerate() {
+        let path = format!("body.edges[{i}]");
+        let endpoints = match pair.usize_list() {
+            Ok(ids) if ids.len() == 2 => ids,
+            Ok(ids) => {
+                return Err(error_response(
+                    400,
+                    &path,
+                    &format!("an edge is a [src, dst] pair, got {} elements", ids.len()),
+                    Some(hint),
+                ))
+            }
+            Err(e) => return Err(error_response(400, &path, &e.to_string(), Some(hint))),
+        };
+        match (Vid::try_from(endpoints[0]), Vid::try_from(endpoints[1])) {
+            (Ok(u), Ok(v)) => edges.push((u, v)),
+            _ => {
+                return Err(error_response(
+                    400,
+                    &path,
+                    &format!(
+                        "edge ({}, {}) has an endpoint that does not fit u32",
+                        endpoints[0], endpoints[1]
+                    ),
+                    Some(hint),
+                ))
+            }
+        }
+    }
+    Ok(edges)
+}
+
+/// `POST /v1/ingest`: insert edges into the served graph.  Publishes a
+/// new snapshot version — in-flight micro-batches finish against the
+/// snapshot they pinned; subsequent requests sample the new topology and
+/// the logits cache stops answering from the old one.
+fn ingest(server: &Server, body: &[u8]) -> Response {
+    let edges = match parse_edges(body) {
+        Ok(e) => e,
+        Err(resp) => return resp,
+    };
+    match server.ingest(&edges) {
+        Ok(version) => Response::json(
+            200,
+            &Json::obj(vec![
+                ("ingested", Json::num(edges.len() as f64)),
+                ("graph_version", Json::num(version as f64)),
+            ]),
+        ),
+        // The graph is untouched on failure: out-of-range endpoints are a
+        // client-data conflict, not a server fault.
+        Err(e) => error_response(
+            409,
+            "body.edges",
+            &format!("ingest rejected: {e}"),
+            Some("edge endpoints must name vertices that exist in the served graph"),
+        ),
+    }
+}
+
 /// The route table for one server.
 pub fn api_router(server: Arc<Server>) -> Router {
     let s_classify = Arc::clone(&server);
     let s_healthz = Arc::clone(&server);
     let s_metrics = Arc::clone(&server);
     let s_metrics_json = Arc::clone(&server);
+    let s_ingest = Arc::clone(&server);
     let s_reload = server;
     Router::new()
         .route("POST", "/v1/classify", move |req| classify(&s_classify, &req.body))
@@ -243,4 +346,5 @@ pub fn api_router(server: Arc<Server>) -> Router {
         .route("GET", "/metrics", move |req| metrics(&s_metrics, req))
         .route("GET", "/metrics.json", move |_| metrics_json(&s_metrics_json))
         .route("POST", "/v1/reload", move |req| reload(&s_reload, &req.body))
+        .route("POST", "/v1/ingest", move |req| ingest(&s_ingest, &req.body))
 }

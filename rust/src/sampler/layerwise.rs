@@ -7,7 +7,7 @@
 //! the other samplers (the union keeps aggregation well-defined).
 
 use super::{dedup_preserve_order, Edge, MiniBatch, Sampler};
-use crate::graph::{Graph, Vid};
+use crate::graph::{GraphAccess, Vid};
 use crate::util::rng::Pcg64;
 
 #[derive(Debug, Clone)]
@@ -39,7 +39,7 @@ impl Sampler for LayerwiseSampler {
         format!("LW(t={}, sizes={:?})", self.num_targets, self.layer_sizes)
     }
 
-    fn sample(&self, g: &Graph, rng: &mut Pcg64) -> MiniBatch {
+    fn sample(&self, g: &dyn GraphAccess, rng: &mut Pcg64) -> MiniBatch {
         let ll = self.num_layers();
         let n = g.num_vertices();
         let mut layers: Vec<Vec<Vid>> = vec![Vec::new(); ll + 1];
@@ -79,7 +79,7 @@ impl Sampler for LayerwiseSampler {
             let mut edge_set = Vec::new();
             for &v in &layers[l] {
                 edge_set.push(Edge { src: v, dst: v });
-                for &u in g.neighbors(v) {
+                for &u in g.neighbors(v).iter() {
                     // Skip graph self-loops; the explicit one is enough.
                     if u != v && prev.contains(&u) {
                         edge_set.push(Edge { src: u, dst: v });
@@ -92,7 +92,7 @@ impl Sampler for LayerwiseSampler {
         MiniBatch { layers, edges }
     }
 
-    fn expected_layer_sizes(&self, g: &Graph) -> Vec<usize> {
+    fn expected_layer_sizes(&self, g: &dyn GraphAccess) -> Vec<usize> {
         let ll = self.num_layers();
         let mut sizes = vec![0usize; ll + 1];
         sizes[ll] = self.num_targets.min(g.num_vertices());
@@ -103,7 +103,7 @@ impl Sampler for LayerwiseSampler {
     }
 
     /// Paper Table 2: |E^l| = S^l * S^{l-1} * κ(S^l).
-    fn expected_edge_counts(&self, g: &Graph) -> Vec<usize> {
+    fn expected_edge_counts(&self, g: &dyn GraphAccess) -> Vec<usize> {
         let sizes = self.expected_layer_sizes(g);
         let n = g.num_vertices() as f64;
         (1..=self.num_layers())
@@ -118,7 +118,7 @@ impl Sampler for LayerwiseSampler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::generator;
+    use crate::graph::{generator, Graph};
 
     fn graph() -> Graph {
         generator::rmat(600, 6000, Default::default(), 20)

@@ -17,7 +17,7 @@ pub mod neighbor;
 pub mod subgraph;
 pub mod values;
 
-use crate::graph::{Graph, Vid};
+use crate::graph::{GraphAccess, Vid};
 use crate::util::rng::Pcg64;
 
 /// One inter-layer edge of the sampled adjacency `A_s^l`, in global vertex
@@ -56,7 +56,7 @@ impl MiniBatch {
     }
 
     /// Check the structural invariants every sampler must uphold.
-    pub fn validate(&self, g: &Graph) -> anyhow::Result<()> {
+    pub fn validate(&self, g: &dyn GraphAccess) -> anyhow::Result<()> {
         anyhow::ensure!(
             self.layers.len() == self.edges.len() + 1,
             "need L+1 vertex sets for L edge sets"
@@ -98,8 +98,12 @@ pub trait Sampler: Send + Sync {
     /// copy to hand over.
     fn clone_box(&self) -> Box<dyn Sampler>;
 
-    /// Draw a mini-batch from `g` with the caller's RNG.
-    fn sample(&self, g: &Graph, rng: &mut Pcg64) -> MiniBatch;
+    /// Draw a mini-batch from `g` with the caller's RNG.  `g` is the
+    /// trait surface, so the same sampler runs against an in-RAM
+    /// [`crate::graph::Graph`], an out-of-core
+    /// [`crate::graph::store::GraphStore`], or a pinned
+    /// [`crate::graph::store::GraphSnapshot`].
+    fn sample(&self, g: &dyn GraphAccess, rng: &mut Pcg64) -> MiniBatch;
 
     /// Target-directed sampling for inference: draw the L-layer
     /// neighborhood of the *given* target vertices instead of a random
@@ -108,7 +112,7 @@ pub trait Sampler: Send + Sync {
     /// sampling has no per-target expansion), so the default errors.
     fn sample_targets(
         &self,
-        g: &Graph,
+        g: &dyn GraphAccess,
         targets: &[Vid],
         rng: &mut Pcg64,
     ) -> anyhow::Result<MiniBatch> {
@@ -124,10 +128,10 @@ pub trait Sampler: Send + Sync {
 
     /// Expected |B^l| per layer (paper Table 2) — drives geometry choice
     /// and the analytic performance model.
-    fn expected_layer_sizes(&self, g: &Graph) -> Vec<usize>;
+    fn expected_layer_sizes(&self, g: &dyn GraphAccess) -> Vec<usize>;
 
     /// Expected |E^l| per layer (paper Table 2).
-    fn expected_edge_counts(&self, g: &Graph) -> Vec<usize>;
+    fn expected_edge_counts(&self, g: &dyn GraphAccess) -> Vec<usize>;
 }
 
 /// Dedup while preserving first-seen order (samplers use this to build

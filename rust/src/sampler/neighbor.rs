@@ -7,7 +7,7 @@
 //! `A_s^l` including self loops.
 
 use super::{dedup_preserve_order, Edge, MiniBatch, Sampler};
-use crate::graph::{Graph, Vid};
+use crate::graph::{GraphAccess, Vid};
 use crate::util::rng::Pcg64;
 
 /// Configuration mirroring the paper's
@@ -37,7 +37,7 @@ impl NeighborSampler {
     /// Recursive neighbor expansion of an already-chosen target set — the
     /// body shared by random training draws ([`Sampler::sample`]) and
     /// target-directed inference draws ([`Sampler::sample_targets`]).
-    fn expand(&self, g: &Graph, targets: Vec<Vid>, rng: &mut Pcg64) -> MiniBatch {
+    fn expand(&self, g: &dyn GraphAccess, targets: Vec<Vid>, rng: &mut Pcg64) -> MiniBatch {
         let _sp = crate::obs::span_with("pipeline", "sample", || {
             vec![("targets", targets.len() as f64)]
         });
@@ -61,7 +61,7 @@ impl NeighborSampler {
                     continue;
                 }
                 if neigh.len() <= budget {
-                    for &u in neigh {
+                    for &u in neigh.iter() {
                         // Graph self-loops would duplicate the explicit one.
                         if u != v {
                             frontier.push(u);
@@ -99,7 +99,7 @@ impl Sampler for NeighborSampler {
         format!("NS(t={}, budgets={:?})", self.num_targets, self.budgets)
     }
 
-    fn sample(&self, g: &Graph, rng: &mut Pcg64) -> MiniBatch {
+    fn sample(&self, g: &dyn GraphAccess, rng: &mut Pcg64) -> MiniBatch {
         let n = g.num_vertices();
         let targets: Vec<Vid> = rng
             .sample_distinct(n, self.num_targets.min(n))
@@ -113,7 +113,7 @@ impl Sampler for NeighborSampler {
     /// targets with the same recursion as [`sample`](Sampler::sample).
     fn sample_targets(
         &self,
-        g: &Graph,
+        g: &dyn GraphAccess,
         targets: &[Vid],
         rng: &mut Pcg64,
     ) -> anyhow::Result<MiniBatch> {
@@ -132,7 +132,7 @@ impl Sampler for NeighborSampler {
 
     /// Paper Table 2: |B^l| = |V^t| * Π_{i=l+1}^{L} NS^i  (plus the
     /// self-inclusion, which the paper folds into the budget).
-    fn expected_layer_sizes(&self, g: &Graph) -> Vec<usize> {
+    fn expected_layer_sizes(&self, g: &dyn GraphAccess) -> Vec<usize> {
         let ll = self.num_layers();
         let t = self.num_targets.min(g.num_vertices());
         let mut sizes = vec![0usize; ll + 1];
@@ -145,7 +145,7 @@ impl Sampler for NeighborSampler {
     }
 
     /// Paper Table 2: |E^l| = |V^t| * Π_{i=l}^{L} NS^i, with self loops.
-    fn expected_edge_counts(&self, g: &Graph) -> Vec<usize> {
+    fn expected_edge_counts(&self, g: &dyn GraphAccess) -> Vec<usize> {
         let sizes = self.expected_layer_sizes(g);
         (1..=self.num_layers())
             .map(|l| sizes[l] * (self.budgets[l - 1] + 1))
@@ -156,7 +156,7 @@ impl Sampler for NeighborSampler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::generator;
+    use crate::graph::{generator, Graph};
     use crate::util::prop::Runner;
 
     fn graph() -> Graph {

@@ -7,7 +7,7 @@
 //! mode is provided for ablations.
 
 use super::{Edge, MiniBatch, Sampler};
-use crate::graph::{Graph, Vid};
+use crate::graph::{GraphAccess, Vid};
 use crate::util::rng::Pcg64;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -41,7 +41,7 @@ impl SubgraphSampler {
         SubgraphSampler::new(2750, 2)
     }
 
-    fn draw_vertices(&self, g: &Graph, rng: &mut Pcg64) -> Vec<Vid> {
+    fn draw_vertices(&self, g: &dyn GraphAccess, rng: &mut Pcg64) -> Vec<Vid> {
         let n = g.num_vertices();
         let budget = self.budget.min(n);
         match self.probability {
@@ -115,7 +115,7 @@ impl Sampler for SubgraphSampler {
         format!("SS(budget={}, L={})", self.budget, self.num_layers)
     }
 
-    fn sample(&self, g: &Graph, rng: &mut Pcg64) -> MiniBatch {
+    fn sample(&self, g: &dyn GraphAccess, rng: &mut Pcg64) -> MiniBatch {
         let verts = self.draw_vertices(g, rng);
         let in_set: std::collections::HashSet<Vid> = verts.iter().copied().collect();
 
@@ -123,7 +123,7 @@ impl Sampler for SubgraphSampler {
         let mut induced: Vec<Edge> = Vec::new();
         for &v in &verts {
             induced.push(Edge { src: v, dst: v }); // self loop
-            for &u in g.neighbors(v) {
+            for &u in g.neighbors(v).iter() {
                 // Graph self-loops would duplicate the explicit self loop.
                 if u != v && in_set.contains(&u) {
                     // u -> v aggregation edge (u feeds v).
@@ -138,7 +138,7 @@ impl Sampler for SubgraphSampler {
         }
     }
 
-    fn expected_layer_sizes(&self, g: &Graph) -> Vec<usize> {
+    fn expected_layer_sizes(&self, g: &dyn GraphAccess) -> Vec<usize> {
         vec![self.budget.min(g.num_vertices()); self.num_layers + 1]
     }
 
@@ -146,7 +146,7 @@ impl Sampler for SubgraphSampler {
     /// density.  We estimate κ via the degree-weighted edge-survival
     /// probability (both endpoints sampled) — see `perf::batchgeom` for the
     /// fitted version used by the DSE engine.
-    fn expected_edge_counts(&self, g: &Graph) -> Vec<usize> {
+    fn expected_edge_counts(&self, g: &dyn GraphAccess) -> Vec<usize> {
         let n = g.num_vertices() as f64;
         let sb = self.budget.min(g.num_vertices()) as f64;
         // Uniform-sampling survival: P(edge kept) ≈ (SB/n)². Degree-weighted
@@ -165,7 +165,7 @@ impl Sampler for SubgraphSampler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::generator;
+    use crate::graph::{generator, Graph};
 
     fn graph() -> Graph {
         generator::rmat(800, 8000, Default::default(), 10)

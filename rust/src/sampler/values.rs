@@ -12,7 +12,7 @@
 //!   weights are supported end-to-end through the `edge_dot` VJP kernel).
 
 use super::MiniBatch;
-use crate::graph::Graph;
+use crate::graph::GraphAccess;
 
 /// Which GNN-layer operator the batch will feed (decides edge values).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -65,7 +65,7 @@ impl GnnModel {
 pub type EdgeValues = Vec<Vec<f32>>;
 
 /// Compute edge values for `batch` under `model`.
-pub fn attach_values(g: &Graph, batch: &MiniBatch, model: GnnModel) -> EdgeValues {
+pub fn attach_values(g: &dyn GraphAccess, batch: &MiniBatch, model: GnnModel) -> EdgeValues {
     let _sp = crate::obs::span("pipeline", "values");
     match model {
         GnnModel::Gcn => gcn_values(g, batch),
@@ -89,7 +89,7 @@ fn gin_values(batch: &MiniBatch) -> EdgeValues {
         .collect()
 }
 
-fn gcn_values(g: &Graph, batch: &MiniBatch) -> EdgeValues {
+fn gcn_values(g: &dyn GraphAccess, batch: &MiniBatch) -> EdgeValues {
     batch
         .edges
         .iter()
@@ -119,7 +119,7 @@ fn sage_values(batch: &MiniBatch) -> EdgeValues {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::generator;
+    use crate::graph::{generator, Graph};
     use crate::sampler::neighbor::NeighborSampler;
     use crate::sampler::Sampler;
     use crate::util::rng::Pcg64;

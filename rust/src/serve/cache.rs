@@ -1,11 +1,14 @@
 //! Versioned per-vertex logits cache.
 //!
 //! Repeat query vertices skip sampling + forward execution entirely.  The
-//! cache is *versioned* against the server's weight state: every entry is
-//! stamped with the weight version it was computed under, and a weight
-//! reload ([`LogitsCache::invalidate`]) bumps the version — stale entries
-//! miss (and are evicted lazily), so hot-swapping a newer checkpoint
-//! mid-serve can never answer from the old model.
+//! cache is *versioned* against the server's weight state **and** graph
+//! state: every entry is stamped with the `(weights_version,
+//! graph_version)` pair it was computed under.  A weight reload
+//! ([`LogitsCache::invalidate`]) bumps the weight version and an edge
+//! ingest ([`LogitsCache::set_graph_version`]) advances the graph
+//! version — stale entries miss (and are evicted lazily), so neither
+//! hot-swapping a newer checkpoint nor mutating the graph mid-serve can
+//! ever answer from the old model or the old topology.
 //!
 //! Eviction is **deterministic FIFO** over an insertion ring: at capacity
 //! the oldest *first-inserted* key still resident is evicted.  The
@@ -23,6 +26,7 @@ use crate::graph::Vid;
 
 struct Entry {
     version: u64,
+    graph_version: u64,
     pred: Arc<Prediction>,
 }
 
@@ -48,6 +52,7 @@ pub struct LogitsCache {
     enabled: bool,
     capacity: usize,
     version: AtomicU64,
+    graph_version: AtomicU64,
     inner: Mutex<Inner>,
 }
 
@@ -61,6 +66,7 @@ impl LogitsCache {
             enabled,
             capacity: capacity.max(1),
             version: AtomicU64::new(0),
+            graph_version: AtomicU64::new(0),
             inner: Mutex::new(Inner::default()),
         }
     }
@@ -74,16 +80,35 @@ impl LogitsCache {
         self.version.load(Ordering::Acquire)
     }
 
-    /// Current-version hit for `v`, if any.  Stale entries are evicted
-    /// (their ring slot becomes a ghost, skipped at eviction time).
+    /// The current graph version entries must match to hit.
+    pub fn graph_version(&self) -> u64 {
+        self.graph_version.load(Ordering::Acquire)
+    }
+
+    /// Record that the served graph advanced to `graph_version` (an edge
+    /// ingest published a new snapshot).  Entries computed against older
+    /// topology become stale and miss from then on; they are evicted
+    /// lazily on access, like weight-stale entries.
+    pub fn set_graph_version(&self, graph_version: u64) {
+        // Monotonic max: a racing older snapshot must not roll the cache
+        // back to accepting entries from a superseded topology.
+        self.graph_version.fetch_max(graph_version, Ordering::AcqRel);
+    }
+
+    /// Current-`(weights, graph)`-version hit for `v`, if any.  Stale
+    /// entries are evicted (their ring slot becomes a ghost, skipped at
+    /// eviction time).
     pub fn get(&self, v: Vid) -> Option<Arc<Prediction>> {
         if !self.enabled {
             return None;
         }
         let mut inner = lock_unpoisoned(&self.inner);
         let current = self.version.load(Ordering::Acquire);
+        let current_g = self.graph_version.load(Ordering::Acquire);
         let stale = match inner.entries.get(&v) {
-            Some(e) if e.version == current => return Some(Arc::clone(&e.pred)),
+            Some(e) if e.version == current && e.graph_version == current_g => {
+                return Some(Arc::clone(&e.pred));
+            }
             Some(_) => true,
             None => false,
         };
@@ -93,17 +118,21 @@ impl LogitsCache {
         None
     }
 
-    /// Insert a prediction computed under weight `version`.  Dropped when
-    /// the cache has moved on (a reload raced the computation) — a stale
-    /// result must never be readable at the current version.  At capacity
-    /// the ring's oldest resident key is evicted first: deterministic
-    /// FIFO, so identical request streams leave identical residents.
-    pub fn put(&self, version: u64, pred: Arc<Prediction>) {
+    /// Insert a prediction computed under weight `version` and graph
+    /// `graph_version`.  Dropped when the cache has moved on in either
+    /// dimension (a reload or ingest raced the computation) — a stale
+    /// result must never be readable at the current version pair.  At
+    /// capacity the ring's oldest resident key is evicted first:
+    /// deterministic FIFO, so identical request streams leave identical
+    /// residents.
+    pub fn put(&self, version: u64, graph_version: u64, pred: Arc<Prediction>) {
         if !self.enabled {
             return;
         }
         let mut inner = lock_unpoisoned(&self.inner);
-        if self.version.load(Ordering::Acquire) != version {
+        if self.version.load(Ordering::Acquire) != version
+            || self.graph_version.load(Ordering::Acquire) != graph_version
+        {
             return;
         }
         let fresh = !inner.entries.contains_key(&pred.vertex);
@@ -122,7 +151,7 @@ impl LogitsCache {
         }
         // Re-inserting a resident key refreshes the value in place and
         // keeps its original ring position (first-insertion FIFO).
-        inner.entries.insert(pred.vertex, Entry { version, pred });
+        inner.entries.insert(pred.vertex, Entry { version, graph_version, pred });
     }
 
     /// Bump the weight version and drop every entry (map and ring);
@@ -158,7 +187,7 @@ mod tests {
     fn hit_after_put_at_current_version() {
         let c = LogitsCache::new(true);
         assert!(c.get(3).is_none());
-        c.put(c.version(), pred(3));
+        c.put(c.version(), c.graph_version(), pred(3));
         assert_eq!(c.get(3).unwrap().vertex, 3);
         assert_eq!(c.len(), 1);
     }
@@ -167,31 +196,57 @@ mod tests {
     fn invalidate_evicts_and_rejects_stale_puts() {
         let c = LogitsCache::new(true);
         let v0 = c.version();
-        c.put(v0, pred(1));
+        let g0 = c.graph_version();
+        c.put(v0, g0, pred(1));
         let v1 = c.invalidate();
         assert_eq!(v1, v0 + 1);
         assert!(c.get(1).is_none(), "entry survived invalidation");
         // A computation that started before the reload finished cannot
         // publish under the new version.
-        c.put(v0, pred(2));
+        c.put(v0, g0, pred(2));
         assert!(c.get(2).is_none());
         // The new version works.
-        c.put(v1, pred(2));
+        c.put(v1, g0, pred(2));
         assert!(c.get(2).is_some());
+    }
+
+    #[test]
+    fn graph_version_advance_hides_stale_topology() {
+        let c = LogitsCache::new(true);
+        let v = c.version();
+        let g0 = c.graph_version();
+        c.put(v, g0, pred(5));
+        assert!(c.get(5).is_some());
+        // An edge ingest published snapshot g0+1: entries computed against
+        // the old topology must miss from then on.
+        c.set_graph_version(g0 + 1);
+        assert_eq!(c.graph_version(), g0 + 1);
+        assert!(c.get(5).is_none(), "stale-topology entry served");
+        // A computation that pinned the old snapshot cannot publish.
+        c.put(v, g0, pred(6));
+        assert!(c.get(6).is_none());
+        // Fresh-snapshot results work, and the version is monotonic: a
+        // racing older snapshot cannot roll it back.
+        c.put(v, g0 + 1, pred(6));
+        assert!(c.get(6).is_some());
+        c.set_graph_version(g0);
+        assert_eq!(c.graph_version(), g0 + 1);
+        assert!(c.get(6).is_some());
     }
 
     #[test]
     fn capacity_bounds_the_entry_count() {
         let c = LogitsCache::with_capacity(true, 4);
         let v = c.version();
+        let g = c.graph_version();
         for i in 0..20 {
-            c.put(v, pred(i));
+            c.put(v, g, pred(i));
         }
         assert_eq!(c.len(), 4, "cache must not grow past its capacity");
         // Re-inserting an existing key does not evict anything.
         let resident: Vec<Vid> = (0..20).filter(|&i| c.get(i).is_some()).collect();
         assert_eq!(resident.len(), 4);
-        c.put(v, pred(resident[0]));
+        c.put(v, g, pred(resident[0]));
         assert_eq!(c.len(), 4);
         assert!(c.get(resident[0]).is_some());
     }
@@ -200,20 +255,21 @@ mod tests {
     fn eviction_order_is_deterministic_fifo() {
         let c = LogitsCache::with_capacity(true, 3);
         let v = c.version();
+        let g = c.graph_version();
         for i in [10u32, 20, 30] {
-            c.put(v, pred(i));
+            c.put(v, g, pred(i));
         }
         // Re-inserting 10 keeps its original (oldest) ring position.
-        c.put(v, pred(10));
+        c.put(v, g, pred(10));
         // Fourth distinct key evicts the first-inserted key: 10.
-        c.put(v, pred(40));
+        c.put(v, g, pred(40));
         assert!(c.get(10).is_none(), "FIFO must evict the oldest insertion");
         assert!(c.get(20).is_some() && c.get(30).is_some() && c.get(40).is_some());
         // Next eviction is 20, then 30 — the full order is pinned.
-        c.put(v, pred(50));
+        c.put(v, g, pred(50));
         assert!(c.get(20).is_none());
         assert!(c.get(30).is_some() && c.get(40).is_some() && c.get(50).is_some());
-        c.put(v, pred(60));
+        c.put(v, g, pred(60));
         assert!(c.get(30).is_none());
         let resident: Vec<Vid> = [40u32, 50, 60]
             .iter()
@@ -226,7 +282,7 @@ mod tests {
     #[test]
     fn disabled_cache_never_stores() {
         let c = LogitsCache::new(false);
-        c.put(c.version(), pred(9));
+        c.put(c.version(), c.graph_version(), pred(9));
         assert!(c.get(9).is_none());
         assert!(c.is_empty());
     }

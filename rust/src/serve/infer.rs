@@ -19,7 +19,7 @@
 //! (tests: `serve_parity.rs`).
 
 use crate::coordinator::trainer::{TrainConfig, ValueFn};
-use crate::graph::{datasets, Graph};
+use crate::graph::{datasets, GraphAccess};
 use crate::layout::pad::{pad, EdgeOverflow};
 use crate::layout::{index_batch, IndexedBatch, IndexedLayer, LayoutOptions};
 use crate::runtime::{inputs, Executable, Kind, WeightState};
@@ -67,7 +67,7 @@ impl std::fmt::Debug for InferOptions {
 
 /// Attach edge values and run the layout engine — the positional form of
 /// a global-id mini-batch under `opts`.
-pub fn index_minibatch(graph: &Graph, mb: &MiniBatch, opts: &InferOptions) -> IndexedBatch {
+pub fn index_minibatch(graph: &dyn GraphAccess, mb: &MiniBatch, opts: &InferOptions) -> IndexedBatch {
     let values = match &opts.value_fn {
         Some(f) => f(graph, mb),
         None => attach_values(graph, mb, opts.model),
@@ -101,7 +101,7 @@ impl Inference {
 /// read the logits back.
 pub fn infer_indexed(
     exe: &Executable,
-    graph: &Graph,
+    graph: &dyn GraphAccess,
     opts: &InferOptions,
     weights: &WeightState,
     ib: &IndexedBatch,
@@ -195,7 +195,7 @@ pub fn merge_indexed<B: std::borrow::Borrow<IndexedBatch>>(parts: &[B]) -> Index
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::generator;
+    use crate::graph::{generator, Graph};
     use crate::runtime::Runtime;
     use crate::sampler::neighbor::NeighborSampler;
     use crate::sampler::Sampler;

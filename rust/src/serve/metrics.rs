@@ -32,7 +32,10 @@ pub struct ServeMetrics {
     cache_misses: Arc<Counter>,
     batches: Arc<Counter>,
     shed: Arc<Counter>,
+    ingest_edges: Arc<Counter>,
     depth: Arc<Gauge>,
+    graph_version: Arc<Gauge>,
+    graph_bytes_mapped: Arc<Gauge>,
     latency: Arc<Histogram>,
     occupancy: Arc<Histogram>,
     exec: Arc<Histogram>,
@@ -55,8 +58,20 @@ impl Default for ServeMetrics {
             "hpgnn_serve_shed_requests_total",
             "Requests shed by admission control (queue full).",
         );
+        let ingest_edges = registry.counter(
+            "hpgnn_graph_ingest_edges_total",
+            "Edges inserted into the served graph via ingest.",
+        );
         let depth =
             registry.gauge("hpgnn_serve_queue_depth", "Work items currently in flight.");
+        let graph_version = registry.gauge(
+            "hpgnn_graph_version",
+            "Snapshot version of the graph new requests are served against.",
+        );
+        let graph_bytes_mapped = registry.gauge(
+            "hpgnn_graph_bytes_mapped",
+            "Bytes of the on-disk graph store currently mapped/resident.",
+        );
         let latency = registry.histogram(
             "hpgnn_serve_request_latency_seconds",
             "End-to-end classify latency.",
@@ -95,7 +110,10 @@ impl Default for ServeMetrics {
             cache_misses,
             batches,
             shed,
+            ingest_edges,
             depth,
+            graph_version,
+            graph_bytes_mapped,
             latency,
             occupancy,
             exec,
@@ -149,6 +167,21 @@ impl ServeMetrics {
         self.coalesce.observe(window_s);
     }
 
+    /// Initialize the graph gauges from the snapshot the server booted
+    /// with (version is 0 for in-RAM graphs, the packed version for
+    /// stores).
+    pub fn set_graph(&self, version: u64, bytes_mapped: u64) {
+        self.graph_version.set(version.min(i64::MAX as u64) as i64);
+        self.graph_bytes_mapped.set(bytes_mapped.min(i64::MAX as u64) as i64);
+    }
+
+    /// One successful edge ingest: `edges` inserted, the graph advanced
+    /// to `version`.
+    pub fn record_ingest(&self, edges: u64, version: u64, bytes_mapped: u64) {
+        self.ingest_edges.add(edges);
+        self.set_graph(version, bytes_mapped);
+    }
+
     /// Prometheus text exposition of every serving metric.
     pub fn prometheus(&self) -> String {
         self.registry.render_prometheus()
@@ -162,7 +195,10 @@ impl ServeMetrics {
             cache_misses: self.cache_misses.get(),
             batches: self.batches.get(),
             shed_requests: self.shed.get(),
+            ingest_edges: self.ingest_edges.get(),
             queue_depth: self.depth.get().max(0) as u64,
+            graph_version: self.graph_version.get().max(0) as u64,
+            graph_bytes_mapped: self.graph_bytes_mapped.get().max(0) as u64,
             latency: self.latency.snapshot(),
             occupancy: self.occupancy.snapshot(),
             exec: self.exec.snapshot(),
@@ -182,7 +218,10 @@ pub struct MetricsSnapshot {
     pub cache_misses: u64,
     pub batches: u64,
     pub shed_requests: u64,
+    pub ingest_edges: u64,
     pub queue_depth: u64,
+    pub graph_version: u64,
+    pub graph_bytes_mapped: u64,
     pub latency: HistogramSnapshot,
     pub occupancy: HistogramSnapshot,
     pub exec: HistogramSnapshot,
@@ -232,7 +271,10 @@ impl MetricsSnapshot {
             ("cache_misses", Json::num(self.cache_misses as f64)),
             ("batches", Json::num(self.batches as f64)),
             ("shed_requests", Json::num(self.shed_requests as f64)),
+            ("ingest_edges", Json::num(self.ingest_edges as f64)),
             ("queue_depth", Json::num(self.queue_depth as f64)),
+            ("graph_version", Json::num(self.graph_version as f64)),
+            ("graph_bytes_mapped", Json::num(self.graph_bytes_mapped as f64)),
             ("latency_s", dist_json(&self.latency)),
             ("queue_wait_s", dist_json(&self.queue_wait)),
             ("coalesce_s", dist_json(&self.coalesce)),
@@ -310,6 +352,30 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.shed_requests, 2);
         assert_eq!(s.queue_depth, 0);
+    }
+
+    #[test]
+    fn graph_metrics_track_ingest_and_store_state() {
+        let m = ServeMetrics::default();
+        let s = m.snapshot();
+        assert_eq!((s.ingest_edges, s.graph_version, s.graph_bytes_mapped), (0, 0, 0));
+        m.set_graph(3, 4096);
+        m.record_ingest(7, 4, 4096);
+        m.record_ingest(2, 5, 4096);
+        let s = m.snapshot();
+        assert_eq!(s.ingest_edges, 9, "ingest counter is cumulative");
+        assert_eq!(s.graph_version, 5, "version gauge tracks the latest snapshot");
+        assert_eq!(s.graph_bytes_mapped, 4096);
+        let j = s.to_json();
+        assert_eq!(j.get("ingest_edges").unwrap().as_usize().unwrap(), 9);
+        assert_eq!(j.get("graph_version").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(j.get("graph_bytes_mapped").unwrap().as_usize().unwrap(), 4096);
+        let text = m.prometheus();
+        assert!(text.contains("# TYPE hpgnn_graph_ingest_edges_total counter\n"));
+        assert!(text.contains("hpgnn_graph_ingest_edges_total 9\n"));
+        assert!(text.contains("# TYPE hpgnn_graph_version gauge\n"));
+        assert!(text.contains("hpgnn_graph_version 5\n"));
+        assert!(text.contains("hpgnn_graph_bytes_mapped 4096\n"));
     }
 
     #[test]

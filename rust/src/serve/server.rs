@@ -9,6 +9,13 @@
 //! greedy packing into the artifact geometry → forward execution →
 //! logits/argmax.  See [`super::infer`] for why served logits are
 //! bit-identical across worker counts and batch coalescing patterns.
+//!
+//! The server holds a [`DynamicGraph`], not a frozen graph: admin edge
+//! ingest ([`Server::ingest`]) publishes a new snapshot version, workers
+//! pin exactly one snapshot per micro-batch (taken *before* the weights
+//! read lock), and the logits cache keys on the full `(weights_version,
+//! graph_version)` pair — so an ingest mid-serve can neither tear a batch
+//! across topologies nor let stale-topology logits answer a fresh query.
 
 use std::path::Path;
 use std::sync::{mpsc, Arc, Mutex, RwLock};
@@ -22,7 +29,8 @@ use super::metrics::{MetricsSnapshot, ServeMetrics};
 use super::{lock_unpoisoned, read_unpoisoned, vertex_rng, write_unpoisoned, Prediction};
 use crate::coordinator::session::graph_fingerprint;
 use crate::coordinator::trainer::{TrainConfig, ValueFn};
-use crate::graph::{Graph, Vid};
+use crate::graph::store::{DynamicGraph, GraphSnapshot};
+use crate::graph::{GraphAccess, Vid};
 use crate::layout::pad::EdgeOverflow;
 use crate::layout::{Geometry, IndexedBatch, LayoutOptions};
 use crate::runtime::weights::{checkpoint_magic, CheckpointKind};
@@ -149,7 +157,7 @@ struct SnapshotIdentity {
 }
 
 impl SnapshotIdentity {
-    fn new(cfg: &ServeConfig, graph: &Graph, sampler: &dyn Sampler) -> SnapshotIdentity {
+    fn new(cfg: &ServeConfig, graph: &dyn GraphAccess, sampler: &dyn Sampler) -> SnapshotIdentity {
         SnapshotIdentity {
             model: cfg.model.as_str().to_string(),
             geometry: cfg.geometry.clone(),
@@ -218,6 +226,7 @@ pub struct Server {
     identity: SnapshotIdentity,
     num_workers: usize,
     max_batch: usize,
+    graph: Arc<DynamicGraph>,
     weights: Arc<RwLock<VersionedWeights>>,
     cache: Arc<LogitsCache>,
     metrics: Arc<ServeMetrics>,
@@ -231,7 +240,7 @@ impl Server {
     /// artifact, and bring the pipeline up.
     pub fn start(
         runtime: &Runtime,
-        graph: Arc<Graph>,
+        graph: Arc<DynamicGraph>,
         sampler: Arc<dyn Sampler>,
         cfg: ServeConfig,
         weights: WeightState,
@@ -250,7 +259,8 @@ impl Server {
         let spec = &exes[0].spec;
         let geom = spec.geometry.clone();
         let weight_shapes = spec.weight_shapes.clone();
-        let identity = SnapshotIdentity::new(&cfg, &graph, sampler.as_ref());
+        let boot = graph.snapshot();
+        let identity = SnapshotIdentity::new(&cfg, boot.as_ref(), sampler.as_ref());
         validate_weight_shapes(&weight_shapes, &weights)?;
         anyhow::ensure!(
             geom.layers() == sampler.num_layers(),
@@ -263,7 +273,10 @@ impl Server {
         let capacity = geom.b[geom.layers()];
         let max_batch = if cfg.max_batch == 0 { capacity } else { cfg.max_batch };
         let cache = Arc::new(LogitsCache::new(cfg.cache));
+        cache.set_graph_version(boot.version());
         let metrics = Arc::new(ServeMetrics::default());
+        metrics.set_graph(boot.version(), boot.bytes_mapped());
+        drop(boot);
         let weights = Arc::new(RwLock::new(VersionedWeights {
             version: cache.version(),
             weights: Arc::new(weights),
@@ -311,6 +324,7 @@ impl Server {
             identity,
             num_workers,
             max_batch,
+            graph,
             weights,
             cache,
             metrics,
@@ -326,12 +340,13 @@ impl Server {
     /// serving configuration, or the load is rejected.
     pub fn from_checkpoint(
         runtime: &Runtime,
-        graph: Arc<Graph>,
+        graph: Arc<DynamicGraph>,
         sampler: Arc<dyn Sampler>,
         cfg: ServeConfig,
         checkpoint: &Path,
     ) -> anyhow::Result<Server> {
-        let identity = SnapshotIdentity::new(&cfg, &graph, sampler.as_ref());
+        let identity =
+            SnapshotIdentity::new(&cfg, graph.snapshot().as_ref(), sampler.as_ref());
         let weights = load_weights_validated(checkpoint, &identity)?;
         Server::start(runtime, graph, sampler, cfg, weights)
     }
@@ -504,6 +519,24 @@ impl Server {
         read_unpoisoned(&self.weights).version
     }
 
+    /// Version of the graph snapshot new requests are served against;
+    /// bumps on every successful [`ingest`](Self::ingest).
+    pub fn graph_version(&self) -> u64 {
+        self.graph.version()
+    }
+
+    /// Insert edges into the served graph (the `POST /v1/ingest` admin
+    /// operation).  Publishes a new snapshot version: in-flight batches
+    /// finish against the snapshot they pinned (and cannot pollute the
+    /// cache — their graph version is stale), new requests sample the
+    /// updated topology.  Returns the new graph version.
+    pub fn ingest(&self, edges: &[(Vid, Vid)]) -> anyhow::Result<u64> {
+        let version = self.graph.ingest(edges)?;
+        self.cache.set_graph_version(version);
+        self.metrics.record_ingest(edges.len() as u64, version, self.graph.bytes_mapped());
+        Ok(version)
+    }
+
     /// Live entries in the logits cache.
     pub fn cache_len(&self) -> usize {
         self.cache.len()
@@ -578,7 +611,7 @@ fn validate_weight_shapes(
 /// Everything one worker thread owns or shares.
 struct WorkerCtx {
     exe: Executable,
-    graph: Arc<Graph>,
+    graph: Arc<DynamicGraph>,
     sampler: Arc<dyn Sampler>,
     opts: InferOptions,
     infer_seed: u64,
@@ -607,6 +640,11 @@ fn run_worker(ctx: WorkerCtx) {
 }
 
 fn serve_batch(ctx: &WorkerCtx, batch: Vec<WorkItem>) {
+    // Pin one graph snapshot for the whole micro-batch *before* reading
+    // the weights: every vertex in the batch samples the same topology,
+    // and a concurrent ingest cannot tear the batch across versions.
+    let snapshot = ctx.graph.snapshot();
+    let graph_version = snapshot.version();
     // Weights and their cache version travel together so a concurrent
     // reload can't mix old logits with the new version stamp.
     let (version, weights) = {
@@ -622,8 +660,8 @@ fn serve_batch(ctx: &WorkerCtx, batch: Vec<WorkItem>) {
         let mut rng = vertex_rng(ctx.infer_seed, item.vertex);
         match ctx
             .sampler
-            .sample_targets(&ctx.graph, &[item.vertex], &mut rng)
-            .map(|mb| infer::index_minibatch(&ctx.graph, &mb, &ctx.opts))
+            .sample_targets(snapshot.as_ref(), &[item.vertex], &mut rng)
+            .map(|mb| infer::index_minibatch(snapshot.as_ref(), &mb, &ctx.opts))
         {
             Ok(ib) => pieces.push((item, ib)),
             Err(e) => {
@@ -650,7 +688,7 @@ fn serve_batch(ctx: &WorkerCtx, batch: Vec<WorkItem>) {
         if group.is_empty() {
             return;
         }
-        execute_group(ctx, version, &weights, std::mem::take(group));
+        execute_group(ctx, version, graph_version, snapshot.as_ref(), &weights, std::mem::take(group));
         used_b.iter_mut().for_each(|x| *x = 0);
         used_e.iter_mut().for_each(|x| *x = 0);
     };
@@ -671,10 +709,13 @@ fn serve_batch(ctx: &WorkerCtx, batch: Vec<WorkItem>) {
     flush(&mut group, &mut used_b, &mut used_e);
 }
 
-/// Execute one packed group as a single forward pass and reply per item.
+/// Execute one packed group as a single forward pass against the pinned
+/// graph snapshot and reply per item.
 fn execute_group(
     ctx: &WorkerCtx,
     version: u64,
+    graph_version: u64,
+    snapshot: &GraphSnapshot,
     weights: &WeightState,
     group: Vec<(WorkItem, IndexedBatch)>,
 ) {
@@ -682,7 +723,7 @@ fn execute_group(
     let merged = infer::merge_indexed(&parts);
     let sp = crate::obs::span_with("serve", "infer", || vec![("batch", group.len() as f64)]);
     let t = Timer::start();
-    let result = infer::infer_indexed(&ctx.exe, &ctx.graph, &ctx.opts, weights, &merged);
+    let result = infer::infer_indexed(&ctx.exe, snapshot, &ctx.opts, weights, &merged);
     ctx.metrics.record_batch(group.len(), t.secs());
     drop(sp);
     match result {
@@ -695,7 +736,7 @@ fn execute_group(
                     label: infer::argmax(row),
                     logits: row.to_vec(),
                 });
-                ctx.cache.put(version, Arc::clone(&pred));
+                ctx.cache.put(version, graph_version, Arc::clone(&pred));
                 let _ = item.reply.send((item.idx, Ok(pred)));
             }
         }
@@ -714,7 +755,7 @@ mod tests {
     use crate::graph::generator;
     use crate::sampler::neighbor::NeighborSampler;
 
-    fn tiny_graph() -> Arc<Graph> {
+    fn tiny_graph() -> Arc<DynamicGraph> {
         let mut g = generator::with_min_degree(
             generator::rmat(400, 3200, Default::default(), 31),
             1,
@@ -722,7 +763,7 @@ mod tests {
         );
         g.feat_dim = 16;
         g.num_classes = 4;
-        Arc::new(g)
+        DynamicGraph::from_graph(g)
     }
 
     fn start(cfg: ServeConfig) -> (Runtime, Server) {
@@ -799,6 +840,43 @@ mod tests {
     }
 
     #[test]
+    fn ingest_bumps_graph_version_and_invalidates_stale_logits() {
+        let mut cfg = ServeConfig { cache: true, ..ServeConfig::default() };
+        cfg.workers = 1;
+        let (_rt, server) = start(cfg);
+        let g0 = server.graph_version();
+        let before = server.classify_one(42).unwrap();
+        assert_eq!(server.cache_len(), 1);
+
+        // Publish new topology: version bumps, the cached entry for 42
+        // (computed against the old snapshot) must miss.
+        let g1 = server.ingest(&[(42, 7), (42, 9), (7, 42)]).unwrap();
+        assert_eq!(g1, g0 + 1);
+        assert_eq!(server.graph_version(), g1);
+        let m = server.metrics();
+        assert_eq!(m.ingest_edges, 3);
+        assert_eq!(m.graph_version, g1);
+        let misses = m.cache_misses;
+        let after = server.classify_one(42).unwrap();
+        assert_eq!(
+            server.metrics().cache_misses,
+            misses + 1,
+            "stale-topology entry must not answer after ingest"
+        );
+        // Vertex 42 gained neighbors, so its sampled subtree — and its
+        // logits — change; repeat queries at the new version hit again.
+        assert_ne!(before.logits, after.logits, "new topology must reach the logits");
+        let again = server.classify_one(42).unwrap();
+        assert_eq!(after.logits, again.logits);
+        assert!(server.metrics().cache_hits >= 1);
+
+        // Out-of-range endpoints are rejected without a version bump.
+        assert!(server.ingest(&[(0, 4000)]).is_err());
+        assert_eq!(server.graph_version(), g1);
+        server.shutdown();
+    }
+
+    #[test]
     fn concurrent_clients_each_get_their_own_vertices() {
         let (_rt, server) = start(ServeConfig {
             workers: 4,
@@ -856,7 +934,7 @@ mod tests {
             model: "gcn".into(),
             geometry: "tiny".into(),
             sampler: "NS(t=4, budgets=[9, 9])".into(),
-            graph: graph_fingerprint(&graph),
+            graph: graph_fingerprint(graph.snapshot().as_ref()),
             weights: WeightState::init_glorot(&exe.spec.weight_shapes, 3),
             adam: None,
         };
@@ -925,7 +1003,7 @@ mod tests {
         };
         let server = Server::start(
             &rt,
-            Arc::new(g),
+            DynamicGraph::from_graph(g),
             Arc::new(SubgraphSampler::new(64, 2)),
             cfg,
             weights,

@@ -141,6 +141,31 @@ fn unused_pragma_is_itself_a_finding() {
 }
 
 #[test]
+fn graph_store_is_bound_to_r2_and_d1() {
+    // The contract table binds the out-of-core store to the loader
+    // (R2) and determinism (D1) contracts...
+    let bound: Vec<_> = hp_gnn::lint::CONTRACTS
+        .iter()
+        .filter(|c| c.prefix == "graph/store/")
+        .map(|c| c.rule)
+        .collect();
+    assert!(bound.contains(&RuleId::R2), "graph/store/ must owe R2: {bound:?}");
+    assert!(bound.contains(&RuleId::D1), "graph/store/ must owe D1: {bound:?}");
+    // ...and the bindings actually fire: the same seeded violations the
+    // fixtures pin elsewhere are findings under graph/store/ too.
+    let f = only_finding(
+        "graph/store/format.rs",
+        include_str!("lint_fixtures/r2_overflow.rs"),
+    );
+    assert_eq!(f.rule, Some(RuleId::R2));
+    let f = only_finding(
+        "graph/store/snapshot.rs",
+        include_str!("lint_fixtures/d1_unordered.rs"),
+    );
+    assert_eq!(f.rule, Some(RuleId::D1));
+}
+
+#[test]
 fn fixtures_cover_every_contract_rule() {
     // The eight seeded fixtures above demonstrate D1, D2, D3, R1, R2,
     // R3, C1, A1 — keep this inventory in sync so adding a rule forces

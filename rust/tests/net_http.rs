@@ -12,7 +12,8 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use hp_gnn::graph::{generator, Graph, Vid};
+use hp_gnn::graph::store::DynamicGraph;
+use hp_gnn::graph::{generator, GraphAccess, Vid};
 use hp_gnn::net::{api_router, HttpClient, HttpOptions, HttpServer};
 use hp_gnn::runtime::{Kind, Runtime, WeightState};
 use hp_gnn::sampler::neighbor::NeighborSampler;
@@ -21,7 +22,7 @@ use hp_gnn::serve::{ServeConfig, Server};
 use hp_gnn::util::json::Json;
 use hp_gnn::util::rng::Pcg64;
 
-fn tiny_graph() -> Arc<Graph> {
+fn tiny_graph() -> Arc<DynamicGraph> {
     let mut g = generator::with_min_degree(
         generator::rmat(400, 3200, Default::default(), 31),
         1,
@@ -30,7 +31,7 @@ fn tiny_graph() -> Arc<Graph> {
     g.feat_dim = 16;
     g.num_classes = 4;
     g.name = "net-http".to_string();
-    Arc::new(g)
+    DynamicGraph::from_graph(g)
 }
 
 fn start_server(cfg: ServeConfig, weight_seed: u64) -> Arc<Server> {
@@ -173,12 +174,12 @@ impl Sampler for SlowSampler {
     fn clone_box(&self) -> Box<dyn Sampler> {
         Box::new(self.clone())
     }
-    fn sample(&self, g: &Graph, rng: &mut Pcg64) -> MiniBatch {
+    fn sample(&self, g: &dyn GraphAccess, rng: &mut Pcg64) -> MiniBatch {
         self.0.sample(g, rng)
     }
     fn sample_targets(
         &self,
-        g: &Graph,
+        g: &dyn GraphAccess,
         targets: &[Vid],
         rng: &mut Pcg64,
     ) -> anyhow::Result<MiniBatch> {
@@ -188,10 +189,10 @@ impl Sampler for SlowSampler {
     fn name(&self) -> String {
         self.0.name()
     }
-    fn expected_layer_sizes(&self, g: &Graph) -> Vec<usize> {
+    fn expected_layer_sizes(&self, g: &dyn GraphAccess) -> Vec<usize> {
         self.0.expected_layer_sizes(g)
     }
-    fn expected_edge_counts(&self, g: &Graph) -> Vec<usize> {
+    fn expected_edge_counts(&self, g: &dyn GraphAccess) -> Vec<usize> {
         self.0.expected_edge_counts(g)
     }
 }
@@ -326,6 +327,68 @@ fn reload_bumps_the_reported_weight_version_and_changes_logits() {
     assert_eq!(resp.status, 409);
     let h = client.request("GET", "/healthz", None).unwrap().json().unwrap();
     assert_eq!(h.get("weight_version").unwrap().as_usize().unwrap(), v1);
+
+    drop(client);
+    http.shutdown();
+}
+
+#[test]
+fn ingest_bumps_the_graph_version_over_http() {
+    let server =
+        start_server(ServeConfig { cache: true, workers: 1, ..ServeConfig::default() }, 3);
+    let http = bind(&server);
+    let mut client = HttpClient::connect(&http.addr().to_string()).unwrap();
+
+    let g0 = client
+        .request("GET", "/healthz", None)
+        .unwrap()
+        .json()
+        .unwrap()
+        .get("graph_version")
+        .unwrap()
+        .as_usize()
+        .unwrap();
+
+    // classify reports the graph version it answered under.
+    let resp = client
+        .request("POST", "/v1/classify", Some(&Json::obj(vec![("vertex", Json::num(42.0))])))
+        .unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(
+        resp.json().unwrap().get("graph_version").unwrap().as_usize().unwrap(),
+        g0
+    );
+
+    // Insert three edges: the version bumps and every surface agrees.
+    let edges = Json::parse(r#"{"edges": [[42, 7], [42, 9], [7, 42]]}"#).unwrap();
+    let resp = client.request("POST", "/v1/ingest", Some(&edges)).unwrap();
+    assert_eq!(resp.status, 200, "{:?}", resp.json());
+    let body = resp.json().unwrap();
+    assert_eq!(body.get("ingested").unwrap().as_usize().unwrap(), 3);
+    let g1 = body.get("graph_version").unwrap().as_usize().unwrap();
+    assert_eq!(g1, g0 + 1);
+    let h = client.request("GET", "/healthz", None).unwrap().json().unwrap();
+    assert_eq!(h.get("graph_version").unwrap().as_usize().unwrap(), g1);
+    let m = client.request("GET", "/metrics.json", None).unwrap().json().unwrap();
+    assert_eq!(m.get("graph_version").unwrap().as_usize().unwrap(), g1);
+    assert_eq!(m.get("ingest_edges").unwrap().as_usize().unwrap(), 3);
+
+    // A malformed edge is a Diagnostic-shaped 400 anchored at its index.
+    let resp = client
+        .request("POST", "/v1/ingest", Some(&Json::parse(r#"{"edges": [[1]]}"#).unwrap()))
+        .unwrap();
+    assert_eq!(resp.status, 400);
+    let err = resp.json().unwrap();
+    let errors = err.get("errors").unwrap().as_arr().unwrap();
+    assert_eq!(errors[0].get("path").unwrap().as_str().unwrap(), "body.edges[0]");
+
+    // An out-of-range endpoint is a 409 conflict; the version holds.
+    let resp = client
+        .request("POST", "/v1/ingest", Some(&Json::parse(r#"{"edges": [[0, 4000]]}"#).unwrap()))
+        .unwrap();
+    assert_eq!(resp.status, 409);
+    let h = client.request("GET", "/healthz", None).unwrap().json().unwrap();
+    assert_eq!(h.get("graph_version").unwrap().as_usize().unwrap(), g1);
 
     drop(client);
     http.shutdown();

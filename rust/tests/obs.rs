@@ -15,6 +15,7 @@
 use std::sync::{Arc, Mutex, MutexGuard};
 
 use hp_gnn::coordinator::{TrainConfig, TrainingSession};
+use hp_gnn::graph::store::DynamicGraph;
 use hp_gnn::graph::{generator, Graph};
 use hp_gnn::obs::trace::{self, Phase, Trace};
 use hp_gnn::runtime::{Kind, Runtime, WeightState};
@@ -142,7 +143,7 @@ fn traced_serving_returns_bit_identical_logits() {
         let weights = WeightState::init_glorot(&exe.spec.weight_shapes, 3);
         let (graph, _, _) = world(55);
         let sampler = Arc::new(NeighborSampler::new(4, vec![5, 3]));
-        let server = Server::start(&rt, graph, sampler, cfg, weights).unwrap();
+        let server = Server::start(&rt, DynamicGraph::fixed(graph), sampler, cfg, weights).unwrap();
         let out = [2u32, 48, 77, 123, 199]
             .iter()
             .map(|&v| server.classify_one(v).unwrap().logits.clone())

@@ -11,6 +11,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use hp_gnn::graph::store::DynamicGraph;
 use hp_gnn::graph::{generator, Graph};
 use hp_gnn::runtime::{Kind, Runtime, WeightState};
 use hp_gnn::sampler::neighbor::NeighborSampler;
@@ -86,7 +87,7 @@ fn served_logits_bit_identical_across_workers_cache_and_coalescing() {
             };
             let server = Server::start(
                 &rt,
-                Arc::clone(&graph),
+                DynamicGraph::fixed(Arc::clone(&graph)),
                 Arc::new(sampler.clone()),
                 cfg,
                 weights.clone(),
@@ -133,7 +134,7 @@ fn unbatched_and_zero_wait_configurations_agree_with_truth() {
         let cfg = ServeConfig { max_batch, max_wait, ..base.clone() };
         let server = Server::start(
             &rt,
-            Arc::clone(&graph),
+            DynamicGraph::fixed(Arc::clone(&graph)),
             Arc::new(sampler.clone()),
             cfg,
             weights.clone(),

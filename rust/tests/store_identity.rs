@@ -1,0 +1,212 @@
+//! Out-of-core store identity: training and serving mounted from a packed
+//! `HPGNNG02` store are bit-identical to the same run on the in-RAM graph,
+//! across every backing mode; edge-stream ingest is snapshot-isolated; and
+//! the `graph.path` program spec drives the same loss curve end to end.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use hp_gnn::api::{program, HpGnn, SamplerSpec, TrainingSpec, Workspace};
+use hp_gnn::coordinator::{TrainConfig, TrainingSession};
+use hp_gnn::graph::store::{pack, BackingMode, DynamicGraph, GraphStore};
+use hp_gnn::graph::{generator, Graph, GraphAccess};
+use hp_gnn::runtime::{Kind, Runtime, WeightState};
+use hp_gnn::sampler::neighbor::NeighborSampler;
+use hp_gnn::sampler::values::GnnModel;
+use hp_gnn::sampler::Sampler;
+use hp_gnn::serve::{ServeConfig, Server};
+
+fn tiny_graph() -> Graph {
+    let mut g = generator::with_min_degree(
+        generator::rmat(400, 3200, Default::default(), 31),
+        1,
+        30,
+    );
+    g.feat_dim = 16;
+    g.num_classes = 4;
+    g.name = "store-identity".to_string();
+    g
+}
+
+fn temp_store(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hpgnn-store-id-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{tag}.hpg"))
+}
+
+fn losses(rt: &Runtime, graph: Arc<dyn GraphAccess>, steps: usize) -> Vec<u32> {
+    let sampler: Arc<dyn Sampler> = Arc::new(NeighborSampler::new(4, vec![5, 3]));
+    let cfg = TrainConfig::quick(GnnModel::Gcn, "tiny", 0);
+    let mut s = TrainingSession::new(rt, graph, sampler, cfg).unwrap();
+    s.run_for(steps).unwrap();
+    s.finish().metrics.losses.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn training_from_the_store_matches_in_ram_bit_for_bit() {
+    let g = tiny_graph();
+    let path = temp_store("train");
+    // Tiny chunks force multi-chunk neighbor reads through every backing.
+    pack(&g, &path, 0, 512).unwrap();
+    let rt = Runtime::reference();
+    let want = losses(&rt, Arc::new(g), 6);
+    assert_eq!(want.len(), 6);
+    for mode in [
+        BackingMode::Auto,
+        BackingMode::Mmap,
+        BackingMode::Pread,
+        BackingMode::Resident,
+    ] {
+        let store = match GraphStore::open_with(&path, mode) {
+            Ok(s) => s,
+            // Mmap may be unavailable in a constrained sandbox; Auto
+            // already covered its fallback.
+            Err(_) if mode == BackingMode::Mmap => continue,
+            Err(e) => panic!("open {mode:?}: {e}"),
+        };
+        let got = losses(&rt, Arc::new(store), 6);
+        assert_eq!(want, got, "loss curve must be bit-identical under {mode:?}");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn served_logits_from_the_store_match_in_ram_bit_for_bit() {
+    let g = tiny_graph();
+    let path = temp_store("serve");
+    pack(&g, &path, 0, 512).unwrap();
+    let rt = Runtime::reference();
+    let cfg = ServeConfig::default();
+    let exe = rt.compile_role(cfg.model, &cfg.geometry, Kind::Forward).unwrap();
+    let weights = WeightState::init_glorot(&exe.spec.weight_shapes, 3);
+    let vertices = [2u32, 48, 77, 123, 199];
+
+    let ram = Server::start(
+        &rt,
+        DynamicGraph::from_graph(g),
+        Arc::new(NeighborSampler::new(4, vec![5, 3])),
+        cfg.clone(),
+        weights.clone(),
+    )
+    .unwrap();
+    let want: Vec<Vec<u32>> = vertices
+        .iter()
+        .map(|&v| {
+            ram.classify_one(v).unwrap().logits.iter().map(|x| x.to_bits()).collect()
+        })
+        .collect();
+    ram.shutdown();
+
+    let store = GraphStore::open(&path).unwrap();
+    let srv = Server::start(
+        &rt,
+        DynamicGraph::fixed(Arc::new(store)),
+        Arc::new(NeighborSampler::new(4, vec![5, 3])),
+        cfg,
+        weights,
+    )
+    .unwrap();
+    for (&v, want) in vertices.iter().zip(&want) {
+        let got: Vec<u32> =
+            srv.classify_one(v).unwrap().logits.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(want, &got, "served logits must be bit-identical for vertex {v}");
+    }
+    srv.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn ingest_over_a_store_is_snapshot_isolated_and_compacts() {
+    let g = tiny_graph();
+    let path = temp_store("ingest");
+    pack(&g, &path, 0, 512).unwrap();
+    let store = GraphStore::open(&path).unwrap();
+    let dg = DynamicGraph::fixed(Arc::new(store));
+
+    let s0 = dg.snapshot();
+    let before: Vec<u32> = s0.neighbors(7).iter().copied().collect();
+    let v1 = dg.ingest(&[(7, 9), (9, 7)]).unwrap();
+    assert_eq!(v1, 1);
+
+    // The pinned snapshot still answers from the topology it pinned...
+    assert_eq!(s0.neighbors(7).iter().copied().collect::<Vec<u32>>(), before);
+    assert_eq!(s0.version(), 0);
+    // ...while a fresh snapshot sees the merged neighbor list.
+    let s1 = dg.snapshot();
+    assert_eq!(s1.version(), 1);
+    assert_eq!(s1.degree(7), before.len() + 1);
+    assert!(s1.neighbors(7).iter().any(|&n| n == 9));
+
+    // Compaction folds the delta back to disk through the same packer;
+    // reopening reproduces the merged topology and keeps the version.
+    let path2 = temp_store("compacted");
+    let (stats, swapped) = dg.compact_to(&path2).unwrap();
+    assert!(swapped, "no racing ingest, so the base must swap");
+    assert_eq!(stats.num_edges, g.num_edges() + 2);
+    let re = GraphStore::open(&path2).unwrap();
+    assert_eq!(GraphAccess::version(&re), 1);
+    assert_eq!(
+        re.neighbors(7).iter().copied().collect::<Vec<u32>>(),
+        s1.neighbors(7).iter().copied().collect::<Vec<u32>>()
+    );
+
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&path2).ok();
+}
+
+#[test]
+fn program_with_graph_path_trains_identically_to_inline() {
+    let g = tiny_graph();
+    let path = temp_store("program");
+    pack(&g, &path, 0, 512).unwrap();
+    let ws = Workspace::reference();
+
+    // The same program twice: once over the in-RAM graph, once mounted
+    // from the packed store via graph.path.
+    let inline_spec = HpGnn::init()
+        .platform_board("xilinx-U250")
+        .unwrap()
+        .gnn_computation("gcn")
+        .unwrap()
+        .gnn_parameters(vec![8])
+        .sampler(SamplerSpec::Neighbor { targets: 4, budgets: vec![5, 3] })
+        .load_input_graph(g)
+        .training(TrainingSpec { steps: 4, lr: 0.1, ..Default::default() })
+        .spec()
+        .unwrap();
+    let store_spec = program::parse_program(&format!(
+        r#"{{
+          "platform": "xilinx-U250",
+          "model": {{"computation": "GCN", "hidden": [8]}},
+          "sampler": {{"type": "NeighborSampler", "budgets": [5, 3], "targets": 4}},
+          "graph": {{"path": {:?}}},
+          "training": {{"steps": 4, "lr": 0.1}}
+        }}"#,
+        path.to_str().unwrap()
+    ))
+    .unwrap();
+    assert!(store_spec.validate().is_empty(), "{}", store_spec.validate());
+
+    let mut curves = Vec::new();
+    for spec in [&inline_spec, &store_spec] {
+        let design = ws.design(spec).unwrap();
+        let mut session = design.session().unwrap();
+        session.run_for(4).unwrap();
+        let bits: Vec<u32> =
+            session.finish().metrics.losses.iter().map(|x| x.to_bits()).collect();
+        curves.push(bits);
+    }
+    assert_eq!(curves[0], curves[1], "graph.path must reproduce the in-RAM loss curve");
+
+    // validate() diagnoses a missing store with a path-anchored hint.
+    let missing = store_spec
+        .to_json()
+        .unwrap()
+        .pretty()
+        .replace(path.to_str().unwrap(), "/no/such/store.hpg");
+    let spec = program::parse_program(&missing).unwrap();
+    let d = spec.validate();
+    assert!(d.iter().any(|x| x.path == "graph.path"), "{d}");
+
+    std::fs::remove_file(&path).ok();
+}
